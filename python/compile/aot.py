@@ -1,0 +1,306 @@
+"""AOT driver: lower the Layer-2 model to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+never re-enters Python.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+binds) rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs
+-------
+``artifacts/<name>.hlo.txt``   one per artifact
+``artifacts/manifest.json``    shapes/dtypes/param-layout for every artifact
+``artifacts/golden.json``      deterministic tiny-model trajectories for the
+                               Rust integration tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# ---------------------------------------------------------------------------
+# Registered model configurations (mirrored by rust/src/config/presets).
+# ---------------------------------------------------------------------------
+
+MODEL_CONFIGS: Dict[str, M.ModelConfig] = {
+    # tiny: golden-vector tests + fast integration tests
+    "tiny": M.ModelConfig(batch=32, d_in=16, d_h=16, d_out=4, layers=2,
+                          dropout=0.5, edge_cap=512),
+    # stand-ins for the paper's accuracy datasets (§VI-C); generous edge
+    # capacity so GraphSAINT's degree-biased batches also fit
+    "products_sim": M.ModelConfig(batch=1024, d_in=128, d_h=128, d_out=48,
+                                  layers=3, dropout=0.5, edge_cap=16384),
+    "reddit_sim": M.ModelConfig(batch=1024, d_in=128, d_h=128, d_out=40,
+                                layers=3, dropout=0.5, edge_cap=16384),
+    # end-to-end driver model (larger d_h/L; examples/train_e2e.rs)
+    "e2e_big": M.ModelConfig(batch=1024, d_in=256, d_h=512, d_out=32,
+                             layers=4, dropout=0.3, edge_cap=8192),
+    # dense-adjacency variant of tiny: exercises the TPU/MXU dense-SpMM
+    # schedule end to end (kept for the pallas path + golden tests)
+    "tiny_dense": M.ModelConfig(batch=32, d_in=16, d_h=16, d_out=4, layers=2,
+                                dropout=0.5),
+}
+
+# Which artifact families to emit per config.
+FAMILIES: Dict[str, List[str]] = {
+    "tiny": ["train_step", "grad_step", "adam_apply", "eval_logits"],
+    "tiny_dense": ["train_step", "eval_logits"],
+    "products_sim": ["train_step", "grad_step", "adam_apply", "eval_logits"],
+    "reddit_sim": ["train_step", "eval_logits"],
+    "e2e_big": ["train_step", "eval_logits"],
+}
+
+# Rank-local GEMM primitives for the 3D-PMM engine's PJRT path
+# (m, k, n) — shard shapes used by pmm integration tests and benches.
+PMM_GEMMS: List[tuple] = [
+    (256, 256, 64),
+    (256, 64, 64),
+    (512, 128, 128),
+]
+# Standalone fused layer-tail primitives (b, d_h).
+PMM_FUSED: List[tuple] = [(256, 64), (1024, 128)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr) -> Dict[str, Any]:
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def _example_args(cfg: M.ModelConfig, family: str):
+    """Abstract example arguments (ShapeDtypeStruct) per artifact family."""
+    f32 = jnp.float32
+    B = cfg.batch
+    sd = jax.ShapeDtypeStruct
+    if cfg.edge_cap > 0:
+        e = cfg.edge_cap
+        adj = [sd((e,), jnp.int32), sd((e,), jnp.int32), sd((e,), f32)]
+    else:
+        adj = [sd((B, B), f32)]
+    x = sd((B, cfg.d_in), f32)
+    y = sd((B,), jnp.int32)
+    wm = sd((B,), f32)
+    key = sd((2,), jnp.uint32)
+    lr = sd((), f32)
+    t = sd((), f32)
+    params = [sd(s, f32) for s in cfg.param_shapes()]
+    if family == "train_step":
+        return [*adj, x, y, wm, key, lr, t, *params, *params, *params]
+    if family == "grad_step":
+        return [*adj, x, y, wm, key, *params]
+    if family == "adam_apply":
+        return [lr, t, *params, *params, *params, *params]
+    if family == "eval_logits":
+        return [*adj, x, *params]
+    raise ValueError(family)
+
+
+def _fn(cfg: M.ModelConfig, family: str, use_pallas: bool):
+    if family == "train_step":
+        return M.make_train_step(cfg, use_pallas)
+    if family == "grad_step":
+        return M.make_grad_step(cfg, use_pallas)
+    if family == "adam_apply":
+        return M.make_adam_apply(cfg)
+    if family == "eval_logits":
+        return M.make_eval_logits(cfg, use_pallas)
+    raise ValueError(family)
+
+
+def _donate(family: str, cfg: M.ModelConfig):
+    """Donated argnums: parameter/optimizer buffers are updated in place on
+    the PJRT side, halving peak memory of the step (DESIGN.md §7 L2)."""
+    n = cfg.n_params
+    adj_args = 3 if cfg.edge_cap > 0 else 1
+    if family == "train_step":
+        # donate params, m, v (after the batch/lr/t leading args)
+        lead = adj_args + 6
+        return tuple(range(lead, lead + 3 * n))
+    if family == "adam_apply":
+        # donate params, m, v (grads are consumed too but aliasing them to
+        # outputs is not needed); params at 2..2+n, m/v at 2+2n..2+4n
+        return tuple(range(2, 2 + n)) + tuple(range(2 + 2 * n, 2 + 4 * n))
+    return ()
+
+
+def lower_artifact(name: str, fn, example_args, out_dir: str, donate=()) -> Dict[str, Any]:
+    jitted = jax.jit(fn, donate_argnums=donate)
+    lowered = jitted.lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *example_args)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [_spec(a) for a in example_args],
+        "outputs": [_spec(o) for o in out_avals],
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "bytes": len(text),
+    }
+    print(f"  {name}: {len(text)} chars, {len(example_args)} in / {len(out_avals)} out")
+    return entry
+
+
+def emit_golden(out_dir: str, steps: int = 4) -> None:
+    """Deterministic tiny-model trajectory for Rust integration tests."""
+    cfg = MODEL_CONFIGS["tiny"]
+    rng = np.random.default_rng(12345)
+    B = cfg.batch
+    a = (rng.random((B, B)) * (rng.random((B, B)) < 0.25)).astype(np.float32)
+    x = rng.normal(size=(B, cfg.d_in)).astype(np.float32)
+    y = rng.integers(0, cfg.d_out, B).astype(np.int32)
+    wm = np.ones(B, np.float32)
+    params = M.init_params(cfg, 0)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    # padded edge list for the sparse (CPU) lowering
+    # h_agg[d] += a[d, s] * h[s]: row index is the destination
+    dst_e, src_e = np.nonzero(a)
+    val_e = a[dst_e, src_e].astype(np.float32)
+    e = cfg.edge_cap
+    assert len(val_e) <= e, "golden graph exceeds edge capacity"
+    pad = e - len(val_e)
+    src = np.concatenate([src_e.astype(np.int32), np.zeros(pad, np.int32)])
+    dst = np.concatenate([dst_e.astype(np.int32), np.zeros(pad, np.int32)])
+    val = np.concatenate([val_e, np.zeros(pad, np.float32)])
+
+    ts = jax.jit(M.make_train_step(cfg))
+    ev = jax.jit(M.make_eval_logits(cfg))
+    t = jnp.float32(0)
+    losses, accs = [], []
+    state = [*params, *m, *v]
+    keys = []
+    for i in range(steps):
+        key = jax.random.PRNGKey(1000 + i)
+        keys.append(np.asarray(key, np.uint32).tolist())
+        out = ts(jnp.array(src), jnp.array(dst), jnp.array(val),
+                 jnp.array(x), jnp.array(y), jnp.array(wm),
+                 key, jnp.float32(1e-2), t, *state)
+        losses.append(float(out[0]))
+        accs.append(float(out[1]))
+        t = out[2]
+        state = list(out[3:])
+    logits = ev(jnp.array(src), jnp.array(dst), jnp.array(val),
+                jnp.array(x), *state[: cfg.n_params])[0]
+    golden = {
+        "config": "tiny",
+        "lr": 1e-2,
+        "steps": steps,
+        "a": a.flatten().tolist(),
+        "src": src.tolist(),
+        "dst": dst.tolist(),
+        "val": val.tolist(),
+        "x": x.flatten().tolist(),
+        "y": y.tolist(),
+        "wmask": wm.tolist(),
+        "keys": keys,
+        "init_params": [np.asarray(p).flatten().tolist() for p in params],
+        "losses": losses,
+        "accs": accs,
+        "final_logits_row0": np.asarray(logits)[0].tolist(),
+        "final_param0_sum": float(np.asarray(state[0]).sum()),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"  golden.json: losses={['%.4f' % l for l in losses]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated config names")
+    ap.add_argument("--no-golden", action="store_true")
+    ap.add_argument("--ref", action="store_true",
+                    help="lower with the pure-jnp oracle instead of Pallas")
+    ap.add_argument("--tpu-blocks", action="store_true",
+                    help="keep 128x128 BlockSpec tiles (TPU schedule); the "
+                         "default lowers CPU artifacts with whole-matrix "
+                         "blocks because interpret-mode pallas serializes "
+                         "the grid (EXPERIMENTS.md §Perf L1)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    use_pallas = not args.ref
+    if not args.tpu_blocks:
+        from compile.kernels import gcn_kernels as _K
+
+        _K.BLOCK_TARGET = 1 << 16
+
+    manifest: Dict[str, Any] = {"artifacts": [], "models": {}}
+    names = args.only.split(",") if args.only else list(MODEL_CONFIGS)
+    for cname in names:
+        cfg = MODEL_CONFIGS[cname]
+        manifest["models"][cname] = {
+            **dataclasses.asdict(cfg),  # includes edge_cap
+            "param_shapes": [list(s) for s in cfg.param_shapes()],
+            "param_names": cfg.param_names(),
+        }
+        print(f"[{cname}] {cfg}")
+        for family in FAMILIES[cname]:
+            entry = lower_artifact(
+                f"{family}_{cname}",
+                _fn(cfg, family, use_pallas),
+                _example_args(cfg, family),
+                args.out,
+                donate=_donate(family, cfg),
+            )
+            entry["model"] = cname
+            entry["family"] = family
+            manifest["artifacts"].append(entry)
+
+    # PMM local primitives
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    for (m_, k_, n_) in PMM_GEMMS:
+        entry = lower_artifact(
+            f"local_gemm_{m_}x{k_}x{n_}",
+            M.make_local_gemm(m_, k_, n_),
+            [sd((m_, k_), f32), sd((k_, n_), f32)],
+            args.out,
+        )
+        entry["family"] = "local_gemm"
+        manifest["artifacts"].append(entry)
+    for (b_, dh_) in PMM_FUSED:
+        cfg = M.ModelConfig(batch=b_, d_in=dh_, d_h=dh_, d_out=dh_, layers=1)
+        entry = lower_artifact(
+            f"fused_update_{b_}x{dh_}",
+            M.make_fused_update(cfg),
+            [sd((b_, dh_), f32), sd((dh_, dh_), f32), sd((dh_,), f32),
+             sd((b_, dh_), f32), sd((b_, dh_), f32)],
+            args.out,
+        )
+        entry["family"] = "fused_update"
+        manifest["artifacts"].append(entry)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.no_golden:
+        emit_golden(args.out)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

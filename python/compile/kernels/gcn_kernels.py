@@ -1,0 +1,222 @@
+"""Layer-1 Pallas kernels for ScaleGNN.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO ops that
+the CPU PJRT client (xla_extension 0.5.1) can execute.  On a real TPU the
+same BlockSpecs express the HBM->VMEM tiling schedule; see DESIGN.md §8 for
+the VMEM-footprint / MXU-utilization estimates.
+
+Kernels
+-------
+``matmul``        blocked dense matmul (used for SpMM on the dense-ified
+                  induced mini-batch adjacency, and for the projections).
+``gcn_update``    fused GCN layer epilogue: ``H_agg @ W`` then RMSNorm with a
+                  learned scale, ReLU, dropout (precomputed mask) and the
+                  residual add — one VMEM residency, zero intermediate HBM
+                  round-trips (paper §V-C's kernel fusion, TPU-shaped).
+
+Both are wrapped in ``jax.custom_vjp`` so the Layer-2 model can be
+differentiated; the backward passes implement the paper's Eqs. 13-17 as
+matmuls (re-using the Pallas matmul where it is one) plus the element-wise
+mask/RMSNorm gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RMS_EPS = 1e-6
+
+# Preferred tile edge.  128 matches the TPU MXU/VMEM schedule documented in
+# DESIGN.md §8; the CPU artifacts are lowered with a large target (see
+# aot.py) because interpret-mode pallas serializes the grid into an XLA
+# while-loop — one big dot beats 512 tiny ones on the CPU backend
+# (EXPERIMENTS.md §Perf L1).
+BLOCK_TARGET = int(os.environ.get("SCALEGNN_BLOCK_TARGET", "128"))
+
+
+def _block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (block-shape picker)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Blocked matmul kernel
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid = (M/bm, N/bn, K/bk); the output block is revisited across the K
+    axis and accumulates partial products in place (VMEM-resident on TPU)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(x: jax.Array, y: jax.Array, bm=None, bn=None, bk=None):
+    """Blocked ``x @ y`` via Pallas; block shapes adapt to any input shape
+    via :func:`_block` so every grid step sees a full tile."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm = _block(m, bm or BLOCK_TARGET)
+    bn = _block(n, bn or BLOCK_TARGET)
+    bk = _block(k, bk or BLOCK_TARGET)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp matmul wrapper (a.k.a. SpMM on the dense-ified adjacency)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g   (Eqs. 13-17 GEMM/SpMM gradients)
+    return matmul_pallas(g, y.T), matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def spmm(a, x):
+    """Mini-batch aggregation H = Ã_S X  (Eq. 5) on the dense-ified induced
+    adjacency.  The adjacency is data (never differentiated); its cotangent
+    is dropped by the custom vjp below so XLA DCEs the dead matmul."""
+    return _spmm(a, x)
+
+
+@jax.custom_vjp
+def _spmm(a, x):
+    return matmul_pallas(a, x)
+
+
+def _spmm_fwd(a, x):
+    return matmul_pallas(a, x), (a,)
+
+
+def _spmm_bwd(res, g):
+    (a,) = res
+    # Backward aggregation uses A^T (Eq. 17); A itself gets a zero cotangent.
+    return jnp.zeros_like(a), matmul_pallas(a.T, g)
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused GCN update kernel: rmsnorm(h @ w) * g -> relu -> dropout -> +res
+# ---------------------------------------------------------------------------
+
+
+def _gcn_update_kernel(h_ref, w_ref, g_ref, res_ref, mask_ref, o_ref, *, nk):
+    """One (bm, d_h) row-block per program.  The whole W panel and the full
+    hidden dimension stay resident in VMEM so the RMSNorm row reduction and
+    the element-wise epilogue fuse with the matmul."""
+    acc = jnp.zeros((h_ref.shape[0], w_ref.shape[1]), jnp.float32)
+    # K is the full hidden dim (<= a few hundred): a single VMEM panel.
+    acc += jnp.dot(h_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    ms = jnp.mean(acc * acc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + RMS_EPS)
+    y = acc * inv * g_ref[...]
+    y = jnp.maximum(y, 0.0)
+    y = y * mask_ref[...]
+    o_ref[...] = y + res_ref[...]
+
+
+def gcn_update_pallas(h, w, g, res, mask, bm=None):
+    b, dh = h.shape
+    assert w.shape == (dh, dh) and res.shape == h.shape and mask.shape == h.shape
+    bm = _block(b, bm or BLOCK_TARGET)
+    return pl.pallas_call(
+        functools.partial(_gcn_update_kernel, nk=1),
+        grid=(b // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, dh), lambda i: (i, 0)),
+            pl.BlockSpec((dh, dh), lambda i: (0, 0)),
+            pl.BlockSpec((1, dh), lambda i: (0, 0)),
+            pl.BlockSpec((bm, dh), lambda i: (i, 0)),
+            pl.BlockSpec((bm, dh), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dh), jnp.float32),
+        interpret=True,
+    )(h, w, g.reshape(1, dh), res, mask)
+
+
+@jax.custom_vjp
+def gcn_update(h, w, g, res, mask):
+    """Fused GCN layer tail (Eqs. 6-10): ``relu(rmsnorm(h@w)*g)*mask + res``.
+
+    ``mask`` is the dropout keep-mask already scaled by ``1/(1-p)`` (ones at
+    eval time), so the kernel itself is deterministic."""
+    return gcn_update_pallas(h, w, g, res, mask)
+
+
+def _gcn_update_fwd(h, w, g, res, mask):
+    out = gcn_update_pallas(h, w, g, res, mask)
+    return out, (h, w, g, mask)
+
+
+def _gcn_update_bwd(saved, dout):
+    h, w, g, mask = saved
+    dh_dim = w.shape[0]
+    # Recompute the cheap intermediates (rematerialization beats storing
+    # three B x d_h tensors; see DESIGN.md §7 L2).
+    xc = matmul_pallas(h, w)
+    ms = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + RMS_EPS)
+    xn = xc * inv
+    y = jnp.maximum(xn * g, 0.0)
+    # residual path
+    dres = dout
+    # dropout + relu masks
+    dy = dout * mask
+    drelu = jnp.where(xn * g > 0.0, dy, 0.0)
+    # rmsnorm backward: y = xn * g, xn = xc * inv
+    dg = jnp.sum(drelu * xn, axis=0)
+    dxn = drelu * g
+    # d xc of xn = xc * (mean(xc^2)+eps)^-1/2
+    dot = jnp.mean(dxn * xc, axis=-1, keepdims=True)
+    dxc = inv * (dxn - xc * dot * inv * inv)
+    # GEMM backward (Eqs. 15-16)
+    dh = matmul_pallas(dxc, w.T)
+    dw = matmul_pallas(h.T, dxc)
+    del y, dh_dim
+    return dh, dw, dg, dres, jnp.zeros_like(mask)
+
+
+gcn_update.defvjp(_gcn_update_fwd, _gcn_update_bwd)

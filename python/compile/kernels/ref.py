@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in :mod:`gcn_kernels` has an exact counterpart here; pytest
+(``python/tests/test_kernel.py``) sweeps shapes with hypothesis and asserts
+``allclose``.  The Layer-2 model can also be built entirely from these
+oracles (``model.forward(..., use_pallas=False)``) which is how the fused
+artifacts are cross-checked.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RMS_EPS = 1e-6
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Dense matmul oracle."""
+    return jnp.matmul(x, y)
+
+
+def spmm(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Aggregation oracle: H = Ã_S X (Eq. 5) on the dense-ified adjacency."""
+    return jnp.matmul(a, x)
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm with learned scale (Eq. 7)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (ms + RMS_EPS) ** -0.5 * g
+
+
+def gcn_update(h, w, g, res, mask):
+    """Fused GCN layer tail oracle (Eqs. 6-10):
+    ``relu(rmsnorm(h @ w) * g) * mask + res``."""
+    xc = jnp.matmul(h, w)
+    xn = rmsnorm(xc, g)
+    y = jnp.maximum(xn, 0.0)
+    return y * mask + res

@@ -1,0 +1,282 @@
+"""Layer-2 JAX model for ScaleGNN: the paper's GCN (§III).
+
+Architecture (Fig. 2): input projection (GEMM) -> L x [GCN conv (SpMM +
+GEMM) -> RMSNorm -> ReLU -> dropout -> residual] -> output head (GEMM) ->
+masked cross-entropy.  The hot ops call the Layer-1 Pallas kernels
+(``kernels.gcn_kernels``); ``use_pallas=False`` swaps in the pure-jnp
+oracles (``kernels.ref``) for cross-checking.
+
+The whole training step (forward, backward via jax.grad through the
+kernels' custom VJPs, Adam update) is a single jittable function that
+``aot.py`` lowers to one HLO-text artifact per model configuration; the
+Rust coordinator executes it via PJRT with donated parameter buffers and
+never re-enters Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gcn_kernels as K
+from compile.kernels import ref as R
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyperparameter bundle baked into one artifact."""
+
+    batch: int  # B: mini-batch vertex count (rows of the induced subgraph)
+    d_in: int  # raw feature dim
+    d_h: int  # hidden dim (uniform across layers, enables residuals)
+    d_out: int  # number of classes
+    layers: int = 3  # L
+    dropout: float = 0.5
+    weight_decay: float = 0.0
+    # >0: the adjacency arrives as a padded edge list of this capacity and
+    # aggregation is a gather + segment-sum (the CPU-efficient lowering:
+    # the induced mini-batch subgraph is extremely sparse, §III-D).
+    # 0: dense B x B adjacency through the Pallas matmul (the TPU/MXU
+    # schedule, DESIGN.md §Hardware-Adaptation).
+    edge_cap: int = 0
+
+    @property
+    def n_params(self) -> int:
+        # W_in, (W_l, g_l) per layer, W_out
+        return 2 + 2 * self.layers
+
+    def param_shapes(self) -> List[Tuple[int, ...]]:
+        shapes: List[Tuple[int, ...]] = [(self.d_in, self.d_h)]
+        for _ in range(self.layers):
+            shapes.append((self.d_h, self.d_h))
+            shapes.append((self.d_h,))
+        shapes.append((self.d_h, self.d_out))
+        return shapes
+
+    def param_names(self) -> List[str]:
+        names = ["w_in"]
+        for l in range(self.layers):
+            names += [f"w_{l}", f"g_{l}"]
+        names.append("w_out")
+        return names
+
+
+def init_params(cfg: ModelConfig, seed: int) -> List[jnp.ndarray]:
+    """Glorot-uniform weights, unit RMSNorm scales (deterministic in seed)."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jnp.ndarray] = []
+    for shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in, fan_out = shape
+            lim = (6.0 / (fan_in + fan_out)) ** 0.5
+            params.append(
+                jax.random.uniform(sub, shape, jnp.float32, -lim, lim)
+            )
+    return params
+
+
+def spmm_edges(src, dst, val, h, batch):
+    """Sparse aggregation over a padded edge list (Eq. 5): padding entries
+    carry val=0 so they contribute nothing.  Differentiates natively
+    (gather/scatter-add have built-in JVP/VJP rules); the backward pass is
+    the transposed scatter, exactly Eq. 17."""
+    gathered = h[src] * val[:, None]
+    return jax.ops.segment_sum(gathered, dst, num_segments=batch)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Sequence[jnp.ndarray],
+    a,
+    x: jnp.ndarray,
+    key: jnp.ndarray,
+    train: bool,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Logits for the mini-batch (Eqs. 4-11).  ``a`` is the dense B x B
+    adjacency, or a ``(src, dst, val)`` padded edge-list triple when
+    ``cfg.edge_cap > 0``."""
+    mm = K.matmul if use_pallas else R.matmul
+    sp = K.spmm if use_pallas else R.spmm
+    upd = K.gcn_update if use_pallas else R.gcn_update
+
+    h = mm(x, params[0])  # input projection (Eq. 4)
+    for l in range(cfg.layers):
+        w, g = params[1 + 2 * l], params[2 + 2 * l]
+        if cfg.edge_cap > 0:
+            src, dst, val = a
+            h_agg = spmm_edges(src, dst, val, h, cfg.batch)  # Eq. 5
+        else:
+            h_agg = sp(a, h)  # Eq. 5
+        if train and cfg.dropout > 0.0:
+            key, sub = jax.random.split(key)
+            keep = 1.0 - cfg.dropout
+            mask = (
+                jax.random.bernoulli(sub, keep, (cfg.batch, cfg.d_h)).astype(
+                    jnp.float32
+                )
+                / keep
+            )
+        else:
+            mask = jnp.ones((cfg.batch, cfg.d_h), jnp.float32)
+        h = upd(h_agg, w, g, h, mask)  # Eqs. 6-10 fused
+    return mm(h, params[-1])  # output head (Eq. 11)
+
+
+def masked_loss_acc(
+    logits: jnp.ndarray, y: jnp.ndarray, wmask: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy + accuracy over the masked (training-split) vertices.
+
+    ``wmask`` is 1.0 for vertices that contribute to the loss: the sampled
+    train vertices for ScaleGNN/GraphSAINT, only the target vertices for the
+    GraphSAGE baseline (whose batch also contains support vertices)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(wmask), 1.0)
+    loss = jnp.sum(nll * wmask) / denom
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    acc = jnp.sum(correct * wmask) / denom
+    return loss, acc
+
+
+def loss_fn(cfg, params, a, x, y, wmask, key, use_pallas=True):
+    logits = forward(cfg, params, a, x, key, train=True, use_pallas=use_pallas)
+    loss, acc = masked_loss_acc(logits, y, wmask)
+    return loss, acc
+
+
+def adam_update(cfg, params, grads, m, v, t, lr):
+    """Bias-corrected Adam with decoupled weight decay (Eqs. 13-19 feed the
+    grads; the update itself is standard)."""
+    t1 = t + 1.0
+    b1t = 1.0 - ADAM_B1**t1
+    b2t = 1.0 - ADAM_B2**t1
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        step = lr * (mi / b1t) / (jnp.sqrt(vi / b2t) + ADAM_EPS)
+        if cfg.weight_decay > 0.0:
+            step = step + lr * cfg.weight_decay * p
+        new_p.append(p - step)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, t1
+
+
+def make_train_step(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns the per-step artifact function
+    ``f(<adj>, x, y, wmask, key, lr, t, *params, *m, *v)`` ->
+    ``(loss, acc, t', *params', *m', *v')`` where ``<adj>`` is the dense
+    B x B matrix, or ``src, dst, val`` when ``cfg.edge_cap > 0``."""
+    n = cfg.n_params
+
+    def body(a, x, y, wmask, key, lr, t, state):
+        params = list(state[:n])
+        m = list(state[n : 2 * n])
+        v = list(state[2 * n : 3 * n])
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, a, x, y, wmask, key, use_pallas),
+            has_aux=True,
+        )(params)
+        new_p, new_m, new_v, t1 = adam_update(cfg, params, grads, m, v, t, lr)
+        return (loss, acc, t1, *new_p, *new_m, *new_v)
+
+    if cfg.edge_cap > 0:
+        def train_step(src, dst, val, x, y, wmask, key, lr, t, *state):
+            return body((src, dst, val), x, y, wmask, key, lr, t, state)
+    else:
+        def train_step(a, x, y, wmask, key, lr, t, *state):
+            return body(a, x, y, wmask, key, lr, t, state)
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns ``f(a, x, y, wmask, key, *params)`` -> ``(loss, acc, *grads)``.
+
+    Used by the data-parallel trainer variant that all-reduces raw gradients
+    across DP groups *before* the (rank-local, replicated) Adam update."""
+    n = cfg.n_params
+    del n
+
+    def body(a, x, y, wmask, key, params):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, list(p), a, x, y, wmask, key, use_pallas),
+            has_aux=True,
+        )(list(params))
+        return (loss, acc, *grads)
+
+    if cfg.edge_cap > 0:
+        def grad_step(src, dst, val, x, y, wmask, key, *params):
+            return body((src, dst, val), x, y, wmask, key, params)
+    else:
+        def grad_step(a, x, y, wmask, key, *params):
+            return body(a, x, y, wmask, key, params)
+    return grad_step
+
+
+def make_adam_apply(cfg: ModelConfig):
+    """Returns ``f(lr, t, *params, *grads, *m, *v)`` ->
+    ``(t', *params', *m', *v')`` — applied after the DP gradient
+    all-reduce."""
+    n = cfg.n_params
+
+    def adam_apply(lr, t, *state):
+        params = list(state[:n])
+        grads = list(state[n : 2 * n])
+        m = list(state[2 * n : 3 * n])
+        v = list(state[3 * n : 4 * n])
+        new_p, new_m, new_v, t1 = adam_update(cfg, params, grads, m, v, t, lr)
+        return (t1, *new_p, *new_m, *new_v)
+
+    return adam_apply
+
+
+def make_eval_logits(cfg: ModelConfig, use_pallas: bool = True):
+    """Returns ``f(<adj>, x, *params) -> (logits,)`` (dropout off)."""
+
+    def body(a, x, params):
+        key = jax.random.PRNGKey(0)
+        return (
+            forward(
+                cfg, list(params), a, x, key, train=False, use_pallas=use_pallas
+            ),
+        )
+
+    if cfg.edge_cap > 0:
+        def eval_logits(src, dst, val, x, *params):
+            return body((src, dst, val), x, params)
+    else:
+        def eval_logits(a, x, *params):
+            return body(a, x, params)
+    return eval_logits
+
+
+def make_local_gemm(m: int, k: int, n: int):
+    """Rank-local GEMM primitive for the 3D-PMM engine's PJRT path."""
+
+    def local_gemm(x, y):
+        return (K.matmul(x, y),)
+
+    del m, k, n
+    return local_gemm
+
+
+def make_fused_update(cfg: ModelConfig):
+    """Standalone fused layer-tail primitive (PMM engine PJRT path)."""
+
+    def fused(h, w, g, res, mask):
+        return (K.gcn_update(h, w, g, res, mask),)
+
+    return fused

@@ -1,0 +1,208 @@
+"""Layer-2 correctness: model shapes, Pallas-vs-oracle equality on the full
+train step, optimizer semantics, and the grad_step+adam_apply decomposition
+used by the data-parallel trainer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(batch=24, d_in=12, d_h=16, d_out=5, layers=2, dropout=0.5)
+
+
+def _inputs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    B = cfg.batch
+    a = jnp.asarray(
+        (rng.random((B, B)) * (rng.random((B, B)) < 0.3)).astype(np.float32)
+    )
+    x = jnp.asarray(rng.normal(size=(B, cfg.d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, cfg.d_out, B).astype(np.int32))
+    wm = jnp.asarray((rng.random(B) < 0.8).astype(np.float32))
+    return a, x, y, wm
+
+
+def test_param_shapes_and_names_align():
+    shapes, names = CFG.param_shapes(), CFG.param_names()
+    assert len(shapes) == len(names) == CFG.n_params
+    assert shapes[0] == (CFG.d_in, CFG.d_h)
+    assert shapes[-1] == (CFG.d_h, CFG.d_out)
+    for l in range(CFG.layers):
+        assert shapes[1 + 2 * l] == (CFG.d_h, CFG.d_h)
+        assert shapes[2 + 2 * l] == (CFG.d_h,)
+
+
+def test_init_params_deterministic():
+    p1, p2 = M.init_params(CFG, 7), M.init_params(CFG, 7)
+    p3 = M.init_params(CFG, 8)
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    assert any(not np.array_equal(a, b) for a, b in zip(p1, p3))
+
+
+def test_forward_logits_shape_and_finite():
+    a, x, _, _ = _inputs(CFG)
+    params = M.init_params(CFG, 0)
+    logits = M.forward(CFG, params, a, x, jax.random.PRNGKey(0), train=False)
+    assert logits.shape == (CFG.batch, CFG.d_out)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_pallas_matches_ref():
+    a, x, _, _ = _inputs(CFG)
+    params = M.init_params(CFG, 0)
+    k = jax.random.PRNGKey(3)
+    lp = M.forward(CFG, params, a, x, k, train=True, use_pallas=True)
+    lr_ = M.forward(CFG, params, a, x, k, train=True, use_pallas=False)
+    np.testing.assert_allclose(lp, lr_, rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_pallas_matches_ref_over_steps():
+    a, x, y, wm = _inputs(CFG)
+    params = M.init_params(CFG, 0)
+    zeros = [jnp.zeros_like(p) for p in params]
+    sp = M.make_train_step(CFG, use_pallas=True)
+    sr = M.make_train_step(CFG, use_pallas=False)
+    st_p = [*params, *zeros, *zeros]
+    st_r = [*params, *zeros, *zeros]
+    t = jnp.float32(0)
+    for i in range(3):
+        k = jax.random.PRNGKey(i)
+        op = sp(a, x, y, wm, k, jnp.float32(1e-2), t, *st_p)
+        orf = sr(a, x, y, wm, k, jnp.float32(1e-2), t, *st_r)
+        np.testing.assert_allclose(op[0], orf[0], rtol=1e-4, atol=1e-5)
+        t = op[2]
+        st_p, st_r = list(op[3:]), list(orf[3:])
+    for pa, pb in zip(st_p, st_r):
+        np.testing.assert_allclose(pa, pb, rtol=1e-3, atol=1e-4)
+
+
+def test_loss_decreases_on_fixed_batch():
+    a, x, y, wm = _inputs(CFG, seed=5)
+    params = M.init_params(CFG, 1)
+    zeros = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(M.make_train_step(CFG))
+    state = [*params, *zeros, *zeros]
+    t = jnp.float32(0)
+    losses = []
+    for i in range(20):
+        out = step(a, x, y, wm, jax.random.PRNGKey(i), jnp.float32(5e-3), t, *state)
+        losses.append(float(out[0]))
+        t, state = out[2], list(out[3:])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8
+
+
+def test_grad_step_plus_adam_apply_equals_train_step():
+    a, x, y, wm = _inputs(CFG, seed=9)
+    params = M.init_params(CFG, 2)
+    zeros = [jnp.zeros_like(p) for p in params]
+    k = jax.random.PRNGKey(11)
+    lr, t = jnp.float32(1e-2), jnp.float32(0)
+    fused = M.make_train_step(CFG)(a, x, y, wm, k, lr, t, *params, *zeros, *zeros)
+    gout = M.make_grad_step(CFG)(a, x, y, wm, k, *params)
+    np.testing.assert_allclose(gout[0], fused[0], rtol=1e-5)
+    grads = list(gout[2:])
+    aout = M.make_adam_apply(CFG)(lr, t, *params, *grads, *zeros, *zeros)
+    n = CFG.n_params
+    for pa, pb in zip(aout[1 : 1 + n], fused[3 : 3 + n]):
+        np.testing.assert_allclose(pa, pb, rtol=1e-4, atol=1e-6)
+
+
+def test_masked_loss_ignores_unmasked_vertices():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, 8).astype(np.int32))
+    wm = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], jnp.float32)
+    l1, _ = M.masked_loss_acc(logits, y, wm)
+    y2 = y.at[4].set((int(y[4]) + 1) % 3)  # change only a masked-out label
+    l2, _ = M.masked_loss_acc(logits, y2, wm)
+    np.testing.assert_allclose(l1, l2)
+
+
+def test_dropout_keys_change_loss_but_eval_is_deterministic():
+    a, x, y, wm = _inputs(CFG)
+    params = M.init_params(CFG, 0)
+    l1, _ = M.loss_fn(CFG, params, a, x, y, wm, jax.random.PRNGKey(0))
+    l2, _ = M.loss_fn(CFG, params, a, x, y, wm, jax.random.PRNGKey(1))
+    assert not np.isclose(float(l1), float(l2))
+    ev = M.make_eval_logits(CFG)
+    np.testing.assert_array_equal(ev(a, x, *params)[0], ev(a, x, *params)[0])
+
+
+def test_adam_update_moves_against_gradient():
+    params = [jnp.ones((4, 4), jnp.float32)]
+    grads = [jnp.ones((4, 4), jnp.float32)]
+    zeros = [jnp.zeros((4, 4), jnp.float32)]
+    cfg = M.ModelConfig(batch=1, d_in=1, d_h=1, d_out=1, layers=0)
+    new_p, _, _, t1 = M.adam_update(cfg, params, grads, zeros, zeros, jnp.float32(0), 0.1)
+    assert float(t1) == 1.0
+    assert bool(jnp.all(new_p[0] < params[0]))
+
+
+@pytest.mark.parametrize("family", ["train_step", "grad_step", "eval_logits"])
+def test_aot_example_args_match_eval_shape(family):
+    from compile import aot
+
+    fn = aot._fn(CFG, family, use_pallas=False)
+    args = aot._example_args(CFG, family)
+    out = jax.eval_shape(fn, *args)
+    assert len(out) >= 1
+
+
+SPARSE_CFG = M.ModelConfig(
+    batch=24, d_in=12, d_h=16, d_out=5, layers=2, dropout=0.5, edge_cap=256
+)
+
+
+def _edges_of(a, cap):
+    dst, src = np.nonzero(np.asarray(a))
+    val = np.asarray(a)[dst, src].astype(np.float32)
+    pad = cap - len(val)
+    assert pad >= 0
+    return (
+        jnp.asarray(np.concatenate([src.astype(np.int32), np.zeros(pad, np.int32)])),
+        jnp.asarray(np.concatenate([dst.astype(np.int32), np.zeros(pad, np.int32)])),
+        jnp.asarray(np.concatenate([val, np.zeros(pad, np.float32)])),
+    )
+
+
+def test_spmm_edges_matches_dense():
+    a, x, _, _ = _inputs(CFG)
+    src, dst, val = _edges_of(a, 256)
+    h = jnp.asarray(np.random.default_rng(0).normal(size=(24, 7)).astype(np.float32))
+    got = M.spmm_edges(src, dst, val, h, 24)
+    want = jnp.matmul(a, h)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_train_step_matches_dense_train_step():
+    a, x, y, wm = _inputs(CFG)
+    src, dst, val = _edges_of(a, SPARSE_CFG.edge_cap)
+    params = M.init_params(CFG, 3)
+    zeros = [jnp.zeros_like(p) for p in params]
+    k = jax.random.PRNGKey(5)
+    lr, t = jnp.float32(1e-2), jnp.float32(0)
+    dense = M.make_train_step(CFG)(a, x, y, wm, k, lr, t, *params, *zeros, *zeros)
+    sparse = M.make_train_step(SPARSE_CFG)(
+        src, dst, val, x, y, wm, k, lr, t, *params, *zeros, *zeros
+    )
+    np.testing.assert_allclose(sparse[0], dense[0], rtol=1e-5, atol=1e-6)
+    n = CFG.n_params
+    for pa, pb in zip(sparse[3 : 3 + n], dense[3 : 3 + n]):
+        np.testing.assert_allclose(pa, pb, rtol=1e-4, atol=1e-6)
+
+
+def test_sparse_padding_is_inert():
+    a, x, y, wm = _inputs(CFG)
+    src, dst, val = _edges_of(a, SPARSE_CFG.edge_cap)
+    params = M.init_params(CFG, 3)
+    k = jax.random.PRNGKey(5)
+    l1 = M.loss_fn(SPARSE_CFG, params, (src, dst, val), x, y, wm, k)[0]
+    # scramble the padded tail's indices (values stay 0)
+    nz = int(jnp.count_nonzero(val))
+    src2 = src.at[nz:].set(7)
+    dst2 = dst.at[nz:].set(13)
+    l2 = M.loss_fn(SPARSE_CFG, params, (src2, dst2, val), x, y, wm, k)[0]
+    np.testing.assert_allclose(l1, l2)

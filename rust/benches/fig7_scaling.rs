@@ -1,0 +1,81 @@
+//! Fig. 7: strong scaling of ScaleGNN on Perlmutter, Frontier and
+//! Tuolumne for all scaling datasets.  Each curve starts at the smallest
+//! 3D-PMM configuration (Gd=1) and scales out by growing Gd with the 3D
+//! grid fixed — exactly the paper's methodology (§VII-C).
+//!
+//! Paper anchors: papers100M on Perlmutter 64->2048 = 21.7x (4095->189 ms);
+//! Products-14M on Frontier 32->1024 GCDs = 22.4x (8809->394 ms);
+//! Tuolumne Products-14M 32->1024 = 17.2x (9710->566 ms); Frontier slower
+//! than Perlmutter at equal counts (RCCL, [60]).
+
+use scalegnn::graph::datasets;
+use scalegnn::grid::Grid4D;
+use scalegnn::sim;
+
+const DATASETS: [&str; 5] = [
+    "products_sim",
+    "reddit_sim",
+    "isolate_sim",
+    "products14m_sim",
+    "papers100m_sim",
+];
+
+fn main() {
+    println!("=== Fig. 7: strong scaling (epoch time, ms) ===");
+    let mut frontier_slower = true;
+    for m in [sim::PERLMUTTER, sim::FRONTIER, sim::TUOLUMNE] {
+        println!("\n-- {} --", m.name);
+        println!(
+            "{:<18} {:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+            "dataset", "base", "Gd=1", "Gd=2", "Gd=4", "Gd=8", "Gd=16", "Gd=32", "speedup"
+        );
+        for ds in DATASETS {
+            let spec = datasets::spec(ds).unwrap();
+            let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+            let (x, y, z) = sim::base_grid_for(ds);
+            let base = x * y * z;
+            print!("{:<18} {:>7}", ds, base);
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for gd in [1usize, 2, 4, 8, 16, 32] {
+                if base * gd > 2048 {
+                    print!(" {:>9}", "-");
+                    continue;
+                }
+                let t = sim::scalegnn_epoch(&w, &m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL)
+                    .total();
+                if gd == 1 {
+                    first = t;
+                }
+                last = t;
+                print!(" {:>9.1}", t * 1e3);
+            }
+            println!(" {:>9.1}x", first / last);
+        }
+        // Frontier-vs-Perlmutter check at equal counts
+        if m.name == "Frontier" {
+            let w = sim::Workload::from_spec(
+                &datasets::spec("products14m_sim").unwrap(),
+                128.0,
+                3.0,
+            );
+            let (x, y, z) = sim::base_grid_for("products14m_sim");
+            let tf = sim::scalegnn_epoch(&w, &m, Grid4D::new(4, x, y, z), sim::OptFlags::ALL)
+                .total();
+            let tp = sim::scalegnn_epoch(
+                &w,
+                &sim::PERLMUTTER,
+                Grid4D::new(4, x, y, z),
+                sim::OptFlags::ALL,
+            )
+            .total();
+            frontier_slower = tf > tp;
+        }
+    }
+    println!("\npaper anchors: papers100M Perlmutter 64->2048 21.7x; Products-14M");
+    println!("Frontier 32->1024 22.4x; Tuolumne 32->1024 17.2x");
+    println!(
+        "shape check (Frontier slower than Perlmutter at equal device counts): {}",
+        if frontier_slower { "PASS" } else { "FAIL" }
+    );
+}

@@ -1,0 +1,188 @@
+//! Microbenchmarks of the Layer-3 hot paths (perf-pass instrumentation,
+//! EXPERIMENTS.md §Perf): Algorithm 2 sampling, dense-ification, literal
+//! packing, the PJRT train step, shared-memory collectives, and the local
+//! GEMM kernels.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::graph::{datasets, partition_2d};
+use scalegnn::grid::{Axis, Grid4D};
+use scalegnn::runtime::{lit_f32, Runtime};
+use scalegnn::sampling::{densify_into, DistributedSubgraphBuilder, UniformVertexSampler};
+use scalegnn::tensor::Mat;
+use scalegnn::trainer::batch::BatchMaker;
+use scalegnn::util::rng::Rng;
+use scalegnn::util::stats::bench;
+
+fn main() {
+    println!("=== Layer-3 microbenchmarks ===\n");
+    let data = Arc::new(datasets::load("products_sim").unwrap());
+    let spec = datasets::spec("products_sim").unwrap();
+    let b = spec.batch;
+
+    // --- Algorithm 2 (single shard = whole graph) ---
+    let sampler = UniformVertexSampler::new(data.n, b, 42);
+    let shard = partition_2d(&data.adj, 1, 1).remove(0);
+    let mut builder = DistributedSubgraphBuilder::new(sampler.clone(), shard);
+    let mut step = 0u64;
+    println!(
+        "{}",
+        bench("alg2 subgraph build (131k graph, B=1024)", 3, 30, || {
+            let out = builder.build(step);
+            step += 1;
+            std::hint::black_box(out.adj.nnz());
+        })
+        .report()
+    );
+
+    // 2x2 sharded build (per-rank work)
+    let shards = partition_2d(&data.adj, 2, 2);
+    let mut builders: Vec<_> = shards
+        .into_iter()
+        .map(|s| DistributedSubgraphBuilder::new(sampler.clone(), s))
+        .collect();
+    let mut step = 0u64;
+    println!(
+        "{}",
+        bench("alg2 per-rank build (2x2 shard grid)", 3, 30, || {
+            for bu in builders.iter_mut() {
+                std::hint::black_box(bu.build(step).adj.nnz());
+            }
+            step += 1;
+        })
+        .report()
+    );
+
+    // --- raw uniform sample ---
+    let mut step = 0u64;
+    println!(
+        "{}",
+        bench("uniform sample B=1024 of N=131k (sorted)", 3, 100, || {
+            std::hint::black_box(sampler.sample(step));
+            step += 1;
+        })
+        .report()
+    );
+
+    // --- batch assembly (sampling + densify + gather) ---
+    let mut maker = BatchMaker::new(
+        data.clone(),
+        scalegnn::sampling::SamplerKind::ScaleGnnUniform,
+        b,
+        16384,
+        3,
+        7,
+    );
+    let mut step = 0u64;
+    println!(
+        "{}",
+        bench("full batch assembly (edges+features+labels)", 3, 20, || {
+            std::hint::black_box(maker.make(step).val[0]);
+            step += 1;
+        })
+        .report()
+    );
+
+    // --- densify ---
+    let mb = scalegnn::sampling::induce_rescaled(&data.adj, &sampler.sample(0), sampler.inclusion_prob());
+    let mut buf = vec![0.0f32; b * b];
+    println!(
+        "{}",
+        bench("densify 1024x1024 adjacency", 3, 50, || {
+            densify_into(&mb.adj, &mut buf);
+            std::hint::black_box(buf[0]);
+        })
+        .report()
+    );
+
+    // --- collectives ---
+    for (elems, label) in [(65536usize, "256 KB"), (1 << 20, "4 MB")] {
+        let grid = Grid4D::new(1, 8, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let world2 = world.clone();
+        let r = bench(&format!("8-thread all-reduce {label}"), 2, 20, move || {
+            let world = world2.clone();
+            let mut hs = vec![];
+            for rank in 0..8 {
+                let w = world.clone();
+                hs.push(std::thread::spawn(move || {
+                    let mut v = vec![rank as f32; elems];
+                    w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+                    std::hint::black_box(v[0]);
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        println!("{}", r.report());
+    }
+
+    // --- local GEMM (rust) vs PJRT pallas kernel ---
+    let mut rng = Rng::new(1);
+    let a = Mat::randn(512, 128, &mut rng, 1.0);
+    let bm = Mat::randn(128, 128, &mut rng, 1.0);
+    println!(
+        "{}",
+        bench("rust gemm 512x128x128", 3, 50, || {
+            std::hint::black_box(a.matmul(&bm).data[0]);
+        })
+        .report()
+    );
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(rt) = Runtime::open(&dir) {
+        let exe = rt.load("local_gemm_512x128x128").unwrap();
+        let la = lit_f32(&a.data, &[512, 128]).unwrap();
+        let lb = lit_f32(&bm.data, &[128, 128]).unwrap();
+        println!(
+            "{}",
+            bench("pjrt pallas gemm 512x128x128", 3, 50, || {
+                std::hint::black_box(exe.run(&[la.clone(), lb.clone()]).unwrap().len());
+            })
+            .report()
+        );
+
+        // --- PJRT fused train step (products_sim shape) ---
+        let meta = rt.model("products_sim").unwrap().clone();
+        let step_exe = rt.load("train_step_products_sim").unwrap();
+        let mut maker = BatchMaker::new(
+            data.clone(),
+            scalegnn::sampling::SamplerKind::ScaleGnnUniform,
+            b,
+            meta.edge_cap,
+            3,
+            7,
+        );
+        let bd = maker.make(0);
+        let dims = scalegnn::trainer::meta_to_dims(&meta);
+        let params = scalegnn::model::init_params(&dims, 0);
+        let e = meta.edge_cap;
+        let mut inputs = vec![
+            scalegnn::runtime::lit_i32(&bd.src, &[e]).unwrap(),
+            scalegnn::runtime::lit_i32(&bd.dst, &[e]).unwrap(),
+            lit_f32(&bd.val, &[e]).unwrap(),
+            lit_f32(&bd.x, &[b, meta.d_in]).unwrap(),
+            scalegnn::runtime::lit_i32(&bd.y, &[b]).unwrap(),
+            lit_f32(&bd.wmask, &[b]).unwrap(),
+            scalegnn::runtime::lit_u32(&[1, 2], &[2]).unwrap(),
+            xla::Literal::scalar(1e-2f32),
+            xla::Literal::scalar(0.0f32),
+        ];
+        for _ in 0..3 {
+            for (p, s) in params.iter().zip(&meta.param_shapes) {
+                inputs.push(lit_f32(&p.data, s).unwrap());
+            }
+        }
+        println!(
+            "{}",
+            bench("pjrt fused train step (B=1024, d_h=128, L=3, sparse)", 2, 10, || {
+                std::hint::black_box(step_exe.run(&inputs).unwrap().len());
+            })
+            .report()
+        );
+    } else {
+        println!("(artifacts not built; skipping PJRT benches)");
+    }
+}

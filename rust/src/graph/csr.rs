@@ -1,0 +1,268 @@
+//! Compressed sparse row graphs with the normalizations GCN training needs.
+
+/// CSR sparse matrix / graph adjacency.  `indptr.len() == rows + 1`,
+/// column indices are global vertex ids, values are edge weights.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn empty(rows: usize, cols: usize) -> Csr {
+        Csr { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Build from (row, col, val) triples (unsorted ok; duplicates summed).
+    pub fn from_triples(rows: usize, cols: usize, mut t: Vec<(u32, u32, f32)>) -> Csr {
+        t.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut values: Vec<f32> = Vec::with_capacity(t.len());
+        let mut last: Option<(u32, u32)> = None;
+        for (r, c, v) in t {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r as usize + 1] += 1;
+                indices.push(c);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Transpose (CSC view materialized as CSR).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.rows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let slot = cursor[c as usize];
+                indices[slot] = r as u32;
+                values[slot] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// y = self @ x  (SpMM into a dense matrix).
+    pub fn spmm(&self, x: &crate::tensor::Mat) -> crate::tensor::Mat {
+        assert_eq!(self.cols, x.rows, "spmm shape");
+        let mut y = crate::tensor::Mat::zeros(self.rows, x.cols);
+        let d = x.cols;
+        for r in 0..self.rows {
+            let (cs, vs) = self.row(r);
+            let yrow = &mut y.data[r * d..(r + 1) * d];
+            for (&c, &v) in cs.iter().zip(vs) {
+                let xrow = &x.data[c as usize * d..(c as usize + 1) * d];
+                for j in 0..d {
+                    yrow[j] += v * xrow[j];
+                }
+            }
+        }
+        y
+    }
+
+    /// Dense-ify into a Mat (only for small matrices / tests).
+    pub fn to_dense(&self) -> crate::tensor::Mat {
+        let mut m = crate::tensor::Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                m.data[r * self.cols + c as usize] += v;
+            }
+        }
+        m
+    }
+
+    /// Out-degrees including weights = row sums.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).1.iter().sum::<f32>())
+            .collect()
+    }
+
+    /// Structural degree (nnz per row).
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.rows).map(|r| self.row_nnz(r)).collect()
+    }
+
+    /// Whether (r, c) is present (binary search within the row).
+    pub fn has_edge(&self, r: usize, c: u32) -> bool {
+        self.row(r).0.binary_search(&c).is_ok()
+    }
+
+    /// GCN normalization with self-loops (Eq. 3):
+    /// `Â = A + I`, `D̂ = deg(Â)`, returns `D̂^-1/2 Â D̂^-1/2`.
+    pub fn gcn_normalize(&self) -> Csr {
+        assert_eq!(self.rows, self.cols, "adjacency must be square");
+        let n = self.rows;
+        // structural degree of A + I (values treated as existence)
+        let mut deg = vec![1.0f32; n]; // self loop
+        for r in 0..n {
+            let (cs, _) = self.row(r);
+            for &c in cs {
+                if c as usize != r {
+                    deg[r] += 1.0;
+                }
+            }
+        }
+        let dinv: Vec<f32> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let mut triples = Vec::with_capacity(self.nnz() + n);
+        for r in 0..n {
+            let (cs, _) = self.row(r);
+            for &c in cs {
+                if c as usize != r {
+                    triples.push((r as u32, c, dinv[r] * dinv[c as usize]));
+                }
+            }
+            triples.push((r as u32, r as u32, dinv[r] * dinv[r]));
+        }
+        Csr::from_triples(n, n, triples)
+    }
+
+    /// Make structurally symmetric (max of both directions), no values dup.
+    pub fn symmetrize(&self) -> Csr {
+        assert_eq!(self.rows, self.cols);
+        let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(self.nnz() * 2);
+        for r in 0..self.rows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                triples.push((r as u32, c, v));
+                triples.push((c, r as u32, v));
+            }
+        }
+        // dedupe by keeping max
+        triples.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        triples.dedup_by(|a, b| {
+            if a.0 == b.0 && a.1 == b.1 {
+                b.2 = b.2.max(a.2);
+                true
+            } else {
+                false
+            }
+        });
+        Csr::from_triples(self.rows, self.cols, triples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut t = vec![];
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.f64() < density {
+                    t.push((r as u32, c as u32, rng.f32() + 0.1));
+                }
+            }
+        }
+        Csr::from_triples(rows, cols, t)
+    }
+
+    #[test]
+    fn from_triples_sorts_and_sums_duplicates() {
+        let c = Csr::from_triples(
+            2,
+            3,
+            vec![(1, 2, 1.0), (0, 1, 2.0), (1, 2, 3.0), (0, 0, 1.0)],
+        );
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.row(0).0, &[0, 1]);
+        assert_eq!(c.row(1), (&[2u32][..], &[4.0f32][..]));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = random_csr(13, 7, 0.3, 1);
+        let tt = a.transpose().transpose();
+        assert_eq!(a.indptr, tt.indptr);
+        assert_eq!(a.indices, tt.indices);
+        assert_eq!(a.values, tt.values);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let a = random_csr(9, 5, 0.4, 2);
+        assert!(a.transpose().to_dense().allclose(&a.to_dense().transpose(), 1e-6, 0.0));
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let a = random_csr(11, 8, 0.35, 3);
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(8, 6, &mut rng, 1.0);
+        assert!(a.spmm(&x).allclose(&a.to_dense().matmul(&x), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn gcn_normalize_rows_bounded_and_symmetric() {
+        let a = random_csr(20, 20, 0.15, 5).symmetrize();
+        let n = a.gcn_normalize();
+        // normalized matrix of a symmetric graph is symmetric
+        assert!(n.to_dense().allclose(&n.to_dense().transpose(), 1e-5, 0.0));
+        // self loops present with positive weight
+        for r in 0..20 {
+            assert!(n.has_edge(r, r as u32));
+        }
+        // spectral-ish sanity: all values in (0, 1]
+        assert!(n.values.iter().all(|&v| v > 0.0 && v <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let a = random_csr(15, 15, 0.1, 6);
+        let s = a.symmetrize();
+        for r in 0..15 {
+            let (cs, _) = s.row(r);
+            for &c in cs {
+                assert!(s.has_edge(c as usize, r as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_and_row_sums() {
+        let c = Csr::from_triples(3, 3, vec![(0, 1, 2.0), (0, 2, 3.0), (2, 0, 1.0)]);
+        assert_eq!(c.degrees(), vec![2, 0, 1]);
+        assert_eq!(c.row_sums(), vec![5.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Dataset registry: named synthetic stand-ins for the paper's five graphs
+//! (§VI-C), scaled so they run on one machine.  Shapes mirror the model
+//! configurations baked into the AOT artifacts (`python/compile/aot.py`).
+//!
+//! | name            | paper dataset    | paper N / this N | d_in | classes |
+//! |-----------------|------------------|------------------|------|---------|
+//! | tiny            | (tests)          | — / 512          | 16   | 4       |
+//! | reddit_sim      | Reddit           | 233 k / 65 k     | 128  | 40      |
+//! | products_sim    | ogbn-products    | 2.4 M / 131 k    | 128  | 48      |
+//! | isolate_sim     | Isolate-3-8M     | 3.8 M / 262 k    | 128  | 32      |
+//! | products14m_sim | Products-14M     | 14 M / 524 k     | 128  | 32      |
+//! | papers100m_sim  | ogbn-papers100M  | 111 M / 1.05 M   | 64   | 32      |
+//!
+//! The three scaling datasets are used for epoch-time / scaling experiments
+//! only (as in the paper, which gives them random features + synthetic
+//! degree-proportional classes); the accuracy datasets carry a planted
+//! community structure so test accuracy is meaningful.
+
+use super::generate::{planted_partition, Dataset, PlantedConfig};
+
+/// Paper-scale metadata used by the analytical simulator (`sim::`): the
+/// *real* dataset sizes, so projected epoch times use the paper's workload
+/// volumes, not the scaled-down local stand-ins.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperScale {
+    pub n: f64,
+    pub edges: f64,
+    pub d_in: f64,
+    pub classes: f64,
+    pub batch: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub model_config: &'static str, // artifact family suffix
+    pub planted: PlantedConfig,
+    pub batch: usize,
+    pub paper: PaperScale,
+}
+
+pub fn registry() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "tiny",
+            model_config: "tiny",
+            planted: PlantedConfig {
+                n: 512,
+                classes: 4,
+                avg_degree: 12,
+                d_in: 16,
+                intra_frac: 0.85,
+                feature_noise: 0.4,
+                label_noise: 0.0,
+                seed: 0xC0FFEE,
+            },
+            batch: 32,
+            paper: PaperScale { n: 512.0, edges: 6e3, d_in: 16.0, classes: 4.0, batch: 32.0 },
+        },
+        DatasetSpec {
+            name: "reddit_sim",
+            model_config: "reddit_sim",
+            planted: PlantedConfig {
+                n: 65_536,
+                classes: 40,
+                avg_degree: 32,
+                d_in: 128,
+                intra_frac: 0.82,
+                feature_noise: 0.55,
+                label_noise: 0.02,
+                seed: 0x5EDD17,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 232_965.0,
+                edges: 114.6e6,
+                d_in: 602.0,
+                classes: 41.0,
+                batch: 8192.0,
+            },
+        },
+        DatasetSpec {
+            name: "products_sim",
+            model_config: "products_sim",
+            planted: PlantedConfig {
+                n: 131_072,
+                classes: 48,
+                avg_degree: 16,
+                d_in: 128,
+                intra_frac: 0.80,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0x9A0D,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 2_449_029.0,
+                edges: 61.9e6,
+                d_in: 100.0,
+                classes: 47.0,
+                batch: 32768.0,
+            },
+        },
+        DatasetSpec {
+            name: "isolate_sim",
+            model_config: "products_sim", // shares the artifact shape family
+            planted: PlantedConfig {
+                n: 262_144,
+                classes: 32,
+                avg_degree: 16,
+                d_in: 128,
+                intra_frac: 0.8,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0x150,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 3.8e6,
+                edges: 68.0e6,
+                d_in: 128.0,
+                classes: 32.0,
+                batch: 32768.0,
+            },
+        },
+        DatasetSpec {
+            name: "products14m_sim",
+            model_config: "products_sim",
+            planted: PlantedConfig {
+                n: 524_288,
+                classes: 32,
+                avg_degree: 16,
+                d_in: 128,
+                intra_frac: 0.8,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0x14D,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 14.0e6,
+                edges: 115.0e6,
+                d_in: 128.0,
+                classes: 32.0,
+                batch: 32768.0,
+            },
+        },
+        DatasetSpec {
+            // end-to-end driver workload (examples/train_e2e.rs): larger
+            // model (d_h=512, L=4) on a mid-size graph
+            name: "e2e_big",
+            model_config: "e2e_big",
+            planted: PlantedConfig {
+                n: 65_536,
+                classes: 32,
+                avg_degree: 16,
+                d_in: 256,
+                intra_frac: 0.8,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0xE2E,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 65_536.0,
+                edges: 1.0e6,
+                d_in: 256.0,
+                classes: 32.0,
+                batch: 1024.0,
+            },
+        },
+        DatasetSpec {
+            name: "papers100m_sim",
+            model_config: "products_sim",
+            planted: PlantedConfig {
+                n: 1_048_576,
+                classes: 32,
+                avg_degree: 8,
+                d_in: 128,
+                intra_frac: 0.8,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0x100A11,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 111.0e6,
+                edges: 1.6e9,
+                d_in: 128.0,
+                classes: 172.0,
+                batch: 32768.0,
+            },
+        },
+    ]
+}
+
+pub fn spec(name: &str) -> Option<DatasetSpec> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+/// Generate (deterministically) the named dataset.
+pub fn load(name: &str) -> Option<Dataset> {
+    let s = spec(name)?;
+    let mut d = planted_partition(&s.planted);
+    d.name = s.name.to_string();
+    Some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let r = registry();
+        for s in &r {
+            assert!(spec(s.name).is_some());
+        }
+        let mut names: Vec<_> = r.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), r.len());
+    }
+
+    #[test]
+    fn tiny_loads_and_matches_spec() {
+        let d = load("tiny").unwrap();
+        assert_eq!(d.n, 512);
+        assert_eq!(d.classes, 4);
+        assert_eq!(d.features.cols, 16);
+    }
+
+    #[test]
+    fn unknown_dataset_is_none() {
+        assert!(load("nope").is_none());
+    }
+}

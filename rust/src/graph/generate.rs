@@ -1,0 +1,282 @@
+//! Synthetic graph generators standing in for the paper's datasets.
+//!
+//! The paper itself uses random features + degree-proportional synthetic
+//! classes for its two scaling datasets (§VI-C); we extend the same recipe
+//! with a planted community structure so *accuracy* experiments (Table I,
+//! Fig. 6) remain meaningful: labels are communities, features are noisy
+//! community indicators, and edges prefer intra-community endpoints — a
+//! stochastic block model with a power-law-ish degree profile.
+
+use super::csr::Csr;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// A generated dataset: normalized adjacency + features + labels + splits.
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub adj: Csr,      // GCN-normalized, symmetric, self-loops
+    pub raw_adj: Csr,  // unnormalized symmetric structure (baseline samplers)
+    pub features: Mat, // n x d_in
+    pub labels: Vec<u32>,
+    pub classes: usize,
+    /// 0 = train, 1 = val, 2 = test per vertex
+    pub split: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn train_mask_f32(&self) -> Vec<f32> {
+        self.split.iter().map(|&s| if s == 0 { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn count_split(&self, which: u8) -> usize {
+        self.split.iter().filter(|&&s| s == which).count()
+    }
+}
+
+/// Parameters for the planted-partition generator.
+#[derive(Clone, Debug)]
+pub struct PlantedConfig {
+    pub n: usize,
+    pub classes: usize,
+    pub avg_degree: usize,
+    pub d_in: usize,
+    /// fraction of a vertex's edges that stay inside its community
+    pub intra_frac: f64,
+    /// feature noise stddev relative to the unit community centroid
+    pub feature_noise: f32,
+    /// fraction of labels flipped to a random class (caps attainable acc)
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+/// Generate a planted-partition graph with community-correlated features.
+pub fn planted_partition(cfg: &PlantedConfig) -> Dataset {
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.n;
+    let k = cfg.classes;
+
+    // community assignment (round-robin-ish sizes, shuffled membership)
+    let mut comm: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    rng.shuffle(&mut comm);
+
+    // community member lists for intra-edge sampling
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &c) in comm.iter().enumerate() {
+        members[c as usize].push(v as u32);
+    }
+
+    // degree profile: lognormal-ish around avg_degree (heavy-ish tail)
+    let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(n * cfg.avg_degree);
+    for v in 0..n {
+        let mult = (rng.normal() * 0.6).exp(); // lognormal(0, 0.6)
+        let deg = ((cfg.avg_degree as f32 * mult).round() as usize).clamp(1, 16 * cfg.avg_degree);
+        let c = comm[v] as usize;
+        for _ in 0..deg {
+            let u = if rng.f64() < cfg.intra_frac {
+                let m = &members[c];
+                m[rng.below(m.len() as u64) as usize]
+            } else {
+                rng.below(n as u64) as u32
+            };
+            if u as usize != v {
+                triples.push((v as u32, u, 1.0));
+            }
+        }
+    }
+    let raw = Csr::from_triples(n, n, triples).symmetrize();
+    let adj = raw.gcn_normalize();
+
+    // features: unit-norm community centroid + iid noise
+    let mut centroids = Mat::zeros(k, cfg.d_in);
+    for c in 0..k {
+        let mut norm = 0.0f32;
+        for j in 0..cfg.d_in {
+            let v = rng.normal();
+            centroids.data[c * cfg.d_in + j] = v;
+            norm += v * v;
+        }
+        let inv = 1.0 / norm.sqrt().max(1e-6);
+        for j in 0..cfg.d_in {
+            centroids.data[c * cfg.d_in + j] *= inv;
+        }
+    }
+    let mut features = Mat::zeros(n, cfg.d_in);
+    for v in 0..n {
+        let c = comm[v] as usize;
+        for j in 0..cfg.d_in {
+            features.data[v * cfg.d_in + j] =
+                centroids.data[c * cfg.d_in + j] + rng.normal() * cfg.feature_noise;
+        }
+    }
+
+    // labels = community, with optional flip noise
+    let mut labels = comm.clone();
+    for l in labels.iter_mut() {
+        if rng.f64() < cfg.label_noise {
+            *l = rng.below(k as u64) as u32;
+        }
+    }
+
+    // split 80/10/10 by per-vertex hash
+    let split: Vec<u8> = (0..n)
+        .map(|v| {
+            let h = crate::util::rng::splitmix64(cfg.seed ^ (v as u64).wrapping_mul(0x9E3779B1));
+            match h % 10 {
+                0 => 1,      // val
+                1 => 2,      // test
+                _ => 0,      // train
+            }
+        })
+        .collect();
+
+    Dataset {
+        name: String::new(),
+        n,
+        adj,
+        raw_adj: raw,
+        features,
+        labels,
+        classes: k,
+        split,
+    }
+}
+
+/// R-MAT generator (Graph500 style) for structure-only scaling datasets.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut rng = Rng::new(seed);
+    let mut triples = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut r, mut cidx) = (0usize, 0usize);
+        for lvl in (0..scale).rev() {
+            let p = rng.f64();
+            let (ri, ci) = if p < a {
+                (0, 0)
+            } else if p < a + b {
+                (0, 1)
+            } else if p < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            r |= ri << lvl;
+            cidx |= ci << lvl;
+        }
+        if r != cidx {
+            triples.push((r as u32, cidx as u32, 1.0));
+        }
+    }
+    Csr::from_triples(n, n, triples).symmetrize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> PlantedConfig {
+        PlantedConfig {
+            n: 400,
+            classes: 4,
+            avg_degree: 10,
+            d_in: 16,
+            intra_frac: 0.8,
+            feature_noise: 0.3,
+            label_noise: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn planted_partition_basic_shape() {
+        let d = planted_partition(&small_cfg());
+        assert_eq!(d.n, 400);
+        assert_eq!(d.adj.rows, 400);
+        assert_eq!(d.features.rows, 400);
+        assert_eq!(d.features.cols, 16);
+        assert_eq!(d.labels.len(), 400);
+        assert!(d.labels.iter().all(|&l| l < 4));
+        // splits roughly 80/10/10
+        assert!(d.count_split(0) > 280);
+        assert!(d.count_split(1) > 10);
+        assert!(d.count_split(2) > 10);
+        assert_eq!(d.count_split(0) + d.count_split(1) + d.count_split(2), 400);
+    }
+
+    #[test]
+    fn planted_partition_is_deterministic() {
+        let a = planted_partition(&small_cfg());
+        let b = planted_partition(&small_cfg());
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.adj.indices, b.adj.indices);
+        assert_eq!(a.features.data, b.features.data);
+    }
+
+    #[test]
+    fn planted_partition_is_assortative() {
+        // most edges should connect same-community endpoints
+        let d = planted_partition(&small_cfg());
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for r in 0..d.n {
+            let (cs, _) = d.raw_adj.row(r);
+            for &c in cs {
+                total += 1;
+                if d.labels[r] == d.labels[c as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra as f64 / total as f64 > 0.6, "{intra}/{total}");
+    }
+
+    #[test]
+    fn planted_adj_is_gcn_normalized() {
+        let d = planted_partition(&small_cfg());
+        for r in 0..d.n {
+            assert!(d.adj.has_edge(r, r as u32), "self loop at {r}");
+        }
+        assert!(d.adj.values.iter().all(|&v| v > 0.0 && v <= 1.0));
+    }
+
+    #[test]
+    fn features_correlate_with_community() {
+        let d = planted_partition(&small_cfg());
+        // same-community feature dot products should exceed cross-community
+        let dot = |a: usize, b: usize| -> f32 {
+            d.features.row(a).iter().zip(d.features.row(b)).map(|(x, y)| x * y).sum()
+        };
+        let mut same = 0.0f32;
+        let mut cross = 0.0f32;
+        let mut ns = 0;
+        let mut nc = 0;
+        for v in 0..200 {
+            for u in 200..400 {
+                if d.labels[v] == d.labels[u] {
+                    same += dot(v, u);
+                    ns += 1;
+                } else {
+                    cross += dot(v, u);
+                    nc += 1;
+                }
+            }
+        }
+        assert!(same / ns as f32 > cross / nc as f32 + 0.3);
+    }
+
+    #[test]
+    fn rmat_generates_connected_ish_graph() {
+        let g = rmat(8, 8, 3);
+        assert_eq!(g.rows, 256);
+        assert!(g.nnz() > 256 * 4);
+        // symmetric
+        for r in 0..g.rows {
+            let (cs, _) = g.row(r);
+            for &c in cs {
+                assert!(g.has_edge(c as usize, r as u32));
+            }
+        }
+    }
+}

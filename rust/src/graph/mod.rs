@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, synthetic dataset generators, and the 2D
+//! block partitioner that feeds the distributed sampler (Algorithm 2).
+
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod partition;
+
+pub use csr::Csr;
+pub use datasets::{load, registry, spec, DatasetSpec};
+pub use generate::{planted_partition, rmat, Dataset, PlantedConfig};
+pub use partition::{block_bounds, partition_2d, CsrShard};

@@ -1,0 +1,166 @@
+//! 2D block partitioning of the adjacency matrix across a process grid.
+//!
+//! Within one data-parallel group each rank owns a contiguous row range
+//! `[R0, R1)` and column range `[C0, C1)` of the global N x N adjacency
+//! (paper §IV-B): the CSR shard keeps *local* row indexing and *global*
+//! column ids, exactly what Algorithm 2 consumes.
+
+use super::csr::Csr;
+
+/// Split `n` into `parts` contiguous ranges, remainder spread over the
+/// leading parts. Returns the boundaries (len = parts + 1).
+pub fn block_bounds(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut b = Vec::with_capacity(parts + 1);
+    let mut acc = 0;
+    b.push(0);
+    for i in 0..parts {
+        acc += base + usize::from(i < rem);
+        b.push(acc);
+    }
+    b
+}
+
+/// One rank's shard of the adjacency.
+#[derive(Clone, Debug)]
+pub struct CsrShard {
+    /// global row range [r0, r1)
+    pub r0: usize,
+    pub r1: usize,
+    /// global column range [c0, c1)
+    pub c0: usize,
+    pub c1: usize,
+    /// rows indexed locally (0..r1-r0), columns remain GLOBAL ids
+    pub csr: Csr,
+}
+
+impl CsrShard {
+    pub fn local_rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+}
+
+/// Extract a single shard (rows [r0,r1), cols [c0,c1)) without building the
+/// full partition — used by PMM ranks, which each need only their own block.
+pub fn extract_shard(a: &Csr, r0: usize, r1: usize, c0: usize, c1: usize) -> CsrShard {
+    let mut indptr = Vec::with_capacity(r1 - r0 + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(0);
+    for r in r0..r1 {
+        let (cs, vs) = a.row(r);
+        let lo = cs.partition_point(|&c| (c as usize) < c0);
+        let hi = cs.partition_point(|&c| (c as usize) < c1);
+        indices.extend_from_slice(&cs[lo..hi]);
+        values.extend_from_slice(&vs[lo..hi]);
+        indptr.push(indices.len());
+    }
+    CsrShard {
+        r0,
+        r1,
+        c0,
+        c1,
+        csr: Csr { rows: r1 - r0, cols: a.cols, indptr, indices, values },
+    }
+}
+
+/// Partition `a` into an `pr x pc` grid of shards (row-major order).
+pub fn partition_2d(a: &Csr, pr: usize, pc: usize) -> Vec<CsrShard> {
+    assert_eq!(a.rows, a.cols);
+    let rb = block_bounds(a.rows, pr);
+    let cb = block_bounds(a.cols, pc);
+    let mut shards = Vec::with_capacity(pr * pc);
+    for i in 0..pr {
+        for j in 0..pc {
+            let (r0, r1) = (rb[i], rb[i + 1]);
+            let (c0, c1) = (cb[j], cb[j + 1]);
+            let mut indptr = Vec::with_capacity(r1 - r0 + 1);
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            indptr.push(0);
+            for r in r0..r1 {
+                let (cs, vs) = a.row(r);
+                // columns are sorted: binary search the [c0, c1) window
+                let lo = cs.partition_point(|&c| (c as usize) < c0);
+                let hi = cs.partition_point(|&c| (c as usize) < c1);
+                indices.extend_from_slice(&cs[lo..hi]);
+                values.extend_from_slice(&vs[lo..hi]);
+                indptr.push(indices.len());
+            }
+            shards.push(CsrShard {
+                r0,
+                r1,
+                c0,
+                c1,
+                csr: Csr { rows: r1 - r0, cols: a.cols, indptr, indices, values },
+            });
+        }
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::rmat;
+
+    #[test]
+    fn block_bounds_cover_exactly() {
+        for &(n, p) in &[(10usize, 3usize), (7, 7), (100, 8), (5, 1), (3, 5)] {
+            let b = block_bounds(n, p);
+            assert_eq!(b.len(), p + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), n);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+                assert!(w[1] - w[0] <= n / p + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_preserves_all_edges() {
+        let g = rmat(7, 6, 1).gcn_normalize();
+        for &(pr, pc) in &[(1usize, 1usize), (2, 2), (3, 2), (4, 4)] {
+            let shards = partition_2d(&g, pr, pc);
+            assert_eq!(shards.len(), pr * pc);
+            let total: usize = shards.iter().map(|s| s.csr.nnz()).sum();
+            assert_eq!(total, g.nnz(), "grid {pr}x{pc}");
+            // every edge in its shard is within the shard's ranges
+            for s in &shards {
+                for lr in 0..s.csr.rows {
+                    let (cs, _) = s.csr.row(lr);
+                    for &c in cs {
+                        assert!((c as usize) >= s.c0 && (c as usize) < s.c1);
+                        assert!(g.has_edge(s.r0 + lr, c));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_values_match_source() {
+        let g = rmat(6, 4, 2).gcn_normalize();
+        let shards = partition_2d(&g, 2, 3);
+        let dense = g.to_dense();
+        for s in &shards {
+            for lr in 0..s.csr.rows {
+                let (cs, vs) = s.csr.row(lr);
+                for (&c, &v) in cs.iter().zip(vs) {
+                    assert_eq!(dense.at(s.r0 + lr, c as usize), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_partition_is_identity() {
+        let g = rmat(6, 4, 3).gcn_normalize();
+        let s = &partition_2d(&g, 1, 1)[0];
+        assert_eq!(s.csr.indptr, g.indptr);
+        assert_eq!(s.csr.indices, g.indices);
+    }
+}

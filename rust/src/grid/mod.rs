@@ -1,0 +1,232 @@
+//! The 4D virtual process grid `Gd x Gx x Gy x Gz` (paper §IV).
+//!
+//! Data parallelism across `Gd` groups; within a group, 3D PMM across
+//! `Gx x Gy x Gz`.  Ranks are numbered so that a DP group is a contiguous
+//! block (`d` is the slowest-varying coordinate), matching how launchers
+//! place replicas on adjacent nodes.
+
+/// 4D grid shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid4D {
+    pub gd: usize,
+    pub gx: usize,
+    pub gy: usize,
+    pub gz: usize,
+}
+
+/// Coordinates of one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub d: usize,
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+/// The communication axes used by the 3D PMM algorithm and DP sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    X,
+    Y,
+    Z,
+    /// data-parallel gradient all-reduce group (across `d`, fixed x/y/z)
+    Dp,
+}
+
+impl Grid4D {
+    pub fn new(gd: usize, gx: usize, gy: usize, gz: usize) -> Grid4D {
+        assert!(gd > 0 && gx > 0 && gy > 0 && gz > 0);
+        Grid4D { gd, gx, gy, gz }
+    }
+
+    /// Parse "dxXxYxZ" (e.g. "2x2x2x1") or "XxYxZ" (gd=1).
+    pub fn parse(s: &str) -> Option<Grid4D> {
+        let parts: Vec<usize> = s.split('x').map(|p| p.parse().ok()).collect::<Option<_>>()?;
+        match parts[..] {
+            [gx, gy, gz] => Some(Grid4D::new(1, gx, gy, gz)),
+            [gd, gx, gy, gz] => Some(Grid4D::new(gd, gx, gy, gz)),
+            _ => None,
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.gd * self.gx * self.gy * self.gz
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.gx * self.gy * self.gz
+    }
+
+    /// rank -> (d, x, y, z); x fastest-varying within a group.
+    pub fn coord(&self, rank: usize) -> Coord {
+        assert!(rank < self.world_size());
+        let group = self.group_size();
+        let d = rank / group;
+        let r = rank % group;
+        let z = r / (self.gx * self.gy);
+        let rem = r % (self.gx * self.gy);
+        let y = rem / self.gx;
+        let x = rem % self.gx;
+        Coord { d, x, y, z }
+    }
+
+    pub fn rank(&self, c: Coord) -> usize {
+        debug_assert!(c.d < self.gd && c.x < self.gx && c.y < self.gy && c.z < self.gz);
+        ((c.d * self.gz + c.z) * self.gy + c.y) * self.gx + c.x
+    }
+
+    /// Size of the process group along `axis`.
+    pub fn axis_size(&self, axis: Axis) -> usize {
+        match axis {
+            Axis::X => self.gx,
+            Axis::Y => self.gy,
+            Axis::Z => self.gz,
+            Axis::Dp => self.gd,
+        }
+    }
+
+    /// The ranks of `rank`'s process group along `axis` (including itself),
+    /// ordered by the axis coordinate.
+    pub fn group_ranks(&self, rank: usize, axis: Axis) -> Vec<usize> {
+        let c = self.coord(rank);
+        (0..self.axis_size(axis))
+            .map(|i| {
+                let mut cc = c;
+                match axis {
+                    Axis::X => cc.x = i,
+                    Axis::Y => cc.y = i,
+                    Axis::Z => cc.z = i,
+                    Axis::Dp => cc.d = i,
+                }
+                self.rank(cc)
+            })
+            .collect()
+    }
+
+    /// Stable id of `rank`'s group along `axis` (ranks in the same group
+    /// share the id; ids are dense per axis starting at 0).
+    pub fn group_id(&self, rank: usize, axis: Axis) -> usize {
+        let c = self.coord(rank);
+        match axis {
+            Axis::X => (c.d * self.gz + c.z) * self.gy + c.y,
+            Axis::Y => (c.d * self.gz + c.z) * self.gx + c.x,
+            Axis::Z => (c.d * self.gy + c.y) * self.gx + c.x,
+            Axis::Dp => (c.z * self.gy + c.y) * self.gx + c.x,
+        }
+    }
+
+    /// Number of distinct groups along `axis`.
+    pub fn num_groups(&self, axis: Axis) -> usize {
+        self.world_size() / self.axis_size(axis)
+    }
+
+    /// Index of `rank` within its `axis` group.
+    pub fn index_in_group(&self, rank: usize, axis: Axis) -> usize {
+        let c = self.coord(rank);
+        match axis {
+            Axis::X => c.x,
+            Axis::Y => c.y,
+            Axis::Z => c.z,
+            Axis::Dp => c.d,
+        }
+    }
+}
+
+/// Pick a near-cubic (gx, gy, gz) for `g` ranks per group, as the paper does
+/// for its scaling experiments ("as close to a cube as possible", §VII-C).
+pub fn near_cubic(g: usize) -> (usize, usize, usize) {
+    let mut best = (g, 1, 1);
+    let mut best_score = usize::MAX;
+    for x in 1..=g {
+        if g % x != 0 {
+            continue;
+        }
+        let rem = g / x;
+        for y in 1..=rem {
+            if rem % y != 0 {
+                continue;
+            }
+            let z = rem / y;
+            let (mx, mn) = (x.max(y).max(z), x.min(y).min(z));
+            let score = mx - mn;
+            if score < best_score {
+                best_score = score;
+                best = (x, y, z);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coord_bijective() {
+        let g = Grid4D::new(3, 2, 4, 2);
+        for r in 0..g.world_size() {
+            assert_eq!(g.rank(g.coord(r)), r);
+        }
+    }
+
+    #[test]
+    fn dp_groups_are_contiguous() {
+        let g = Grid4D::new(2, 2, 2, 2);
+        for r in 0..8 {
+            assert_eq!(g.coord(r).d, 0);
+        }
+        for r in 8..16 {
+            assert_eq!(g.coord(r).d, 1);
+        }
+    }
+
+    #[test]
+    fn group_ranks_share_group_id_and_partition_world() {
+        let g = Grid4D::new(2, 2, 3, 2);
+        for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+            let mut seen = vec![0usize; g.world_size()];
+            for r in 0..g.world_size() {
+                let members = g.group_ranks(r, axis);
+                assert_eq!(members.len(), g.axis_size(axis));
+                assert!(members.contains(&r));
+                let id = g.group_id(r, axis);
+                assert!(id < g.num_groups(axis));
+                for &m in &members {
+                    assert_eq!(g.group_id(m, axis), id, "axis {axis:?}");
+                }
+                seen[r] += 1;
+            }
+            assert!(seen.iter().all(|&s| s == 1));
+        }
+    }
+
+    #[test]
+    fn index_in_group_is_position_in_member_list() {
+        let g = Grid4D::new(2, 3, 2, 2);
+        for r in 0..g.world_size() {
+            for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+                let members = g.group_ranks(r, axis);
+                assert_eq!(members[g.index_in_group(r, axis)], r);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_formats() {
+        assert_eq!(Grid4D::parse("2x2x2"), Some(Grid4D::new(1, 2, 2, 2)));
+        assert_eq!(Grid4D::parse("4x2x2x1"), Some(Grid4D::new(4, 2, 2, 1)));
+        assert_eq!(Grid4D::parse("2x2"), None);
+        assert_eq!(Grid4D::parse("axb"), None);
+    }
+
+    #[test]
+    fn near_cubic_prefers_cubes() {
+        assert_eq!(near_cubic(8), (2, 2, 2));
+        assert_eq!(near_cubic(27), (3, 3, 3));
+        let (x, y, z) = near_cubic(16);
+        assert_eq!(x * y * z, 16);
+        assert!(x.max(y).max(z) <= 4);
+        assert_eq!(near_cubic(1), (1, 1, 1));
+    }
+}

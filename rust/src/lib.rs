@@ -1,0 +1,21 @@
+//! ScaleGNN: communication-free sampling and 4D hybrid parallelism for
+//! scalable mini-batch GNN training.
+//!
+//! Reproduction of the ScaleGNN paper as a three-layer Rust + JAX + Pallas
+//! stack: Pallas kernels (L1) inside a JAX GCN model (L2) are AOT-lowered to
+//! HLO text at build time; the Rust coordinator (L3) loads the artifacts via
+//! PJRT and owns sampling, the 4D process grid, collectives, the training
+//! loop and all experiment harnesses.  See DESIGN.md for the system
+//! inventory and the per-experiment index.
+
+pub mod comm;
+pub mod model;
+pub mod pmm;
+pub mod runtime;
+pub mod graph;
+pub mod grid;
+pub mod sampling;
+pub mod sim;
+pub mod trainer;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,404 @@
+//! ScaleGNN launcher: the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! scalegnn info
+//! scalegnn train      --dataset products_sim [--sampler scalegnn|sage|saint]
+//!                     [--dp N] [--epochs E | --steps S] [--target-acc A]
+//!                     [--lr F] [--no-prefetch] [--verbose]
+//! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S] [--bf16]
+//! scalegnn eval       --dataset tiny --grid 2x2x2
+//! scalegnn sample     --dataset products_sim [--grid 2x2] [--steps S]
+//! scalegnn scaling    --dataset papers100m_sim --machine perlmutter
+//! scalegnn breakdown  --dataset products14m_sim [--machine M]
+//! scalegnn e2e        --dataset products_sim --machine perlmutter
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::graph::{datasets, partition_2d};
+use scalegnn::grid::Grid4D;
+use scalegnn::pmm::{PmmCtx, PmmGcn};
+use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
+use scalegnn::sim;
+use scalegnn::trainer::{self, TrainConfig};
+use scalegnn::util::cli::Args;
+use scalegnn::util::stats::fmt_time;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let r = match sub.as_str() {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "pmm-train" => cmd_pmm_train(&args),
+        "eval" => cmd_eval(&args),
+        "sample" => cmd_sample(&args),
+        "scaling" => cmd_scaling(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "e2e" => cmd_e2e(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+ScaleGNN: communication-free sampling + 4D hybrid parallel GNN training
+
+USAGE: scalegnn <command> [options]
+
+COMMANDS:
+  info        show artifacts, models and datasets
+  train       mini-batch training via the PJRT artifacts (fused or DP)
+  pmm-train   4D training on the rank-thread 3D PMM engine
+  eval        distributed full-graph evaluation (Table II mechanism)
+  sample      communication-free distributed sampling microbench
+  scaling     projected strong scaling at paper scale (Fig. 7)
+  breakdown   projected epoch-time breakdown (Figs. 5/8)
+  e2e         projected end-to-end time-to-accuracy vs baselines (Fig. 6)
+
+Run `cargo bench` to regenerate every paper table/figure.
+";
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Model dims for a dataset (mirrors the artifact configurations).
+fn dims_for(dataset: &str, dropout: f32) -> scalegnn::model::GcnDims {
+    let spec = datasets::spec(dataset).expect("known dataset");
+    let (d_h, layers) = match dataset {
+        "tiny" => (16, 2),
+        "e2e_big" => (512, 4),
+        _ => (128, 3),
+    };
+    scalegnn::model::GcnDims {
+        d_in: spec.planted.d_in,
+        d_h,
+        d_out: spec.planted.classes,
+        layers,
+        dropout,
+        weight_decay: 0.0,
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("== datasets ==");
+    for s in datasets::registry() {
+        println!(
+            "  {:<16} n={:<9} classes={:<3} d_in={:<4} batch={:<5} (paper N={:.1e})",
+            s.name, s.planted.n, s.planted.classes, s.planted.d_in, s.batch, s.paper.n
+        );
+    }
+    match scalegnn::runtime::Runtime::open(&artifacts_dir(args)) {
+        Ok(rt) => {
+            println!("== artifacts ({}) ==", rt.platform());
+            let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+            names.sort();
+            for n in names {
+                let a = &rt.manifest.artifacts[n];
+                println!("  {:<28} {} in / {} out", n, a.inputs.len(), a.outputs.len());
+            }
+        }
+        Err(e) => println!("(artifacts not built: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "products_sim");
+    let sampler = SamplerKind::parse(&args.str_or("sampler", "scalegnn"))
+        .ok_or_else(|| anyhow!("unknown sampler"))?;
+    let mut cfg = TrainConfig::quick(&dataset, sampler);
+    cfg.artifacts = artifacts_dir(args);
+    cfg.dp = args.get_or("dp", 1).map_err(|e| anyhow!(e))?;
+    cfg.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
+    cfg.max_steps = args.get_or("steps", 0).map_err(|e| anyhow!(e))?;
+    cfg.max_epochs = args.get_or("epochs", 20).map_err(|e| anyhow!(e))?;
+    cfg.prefetch = !args.flag("no-prefetch");
+    cfg.verbose = args.flag("verbose") || args.flag("v");
+    if let Some(t) = args.get::<f32>("target-acc").map_err(|e| anyhow!(e))? {
+        cfg.target_acc = Some(t);
+    }
+    println!(
+        "training {dataset} with {} sampling, dp={}, prefetch={}",
+        sampler.name(),
+        cfg.dp,
+        cfg.prefetch
+    );
+    let r = trainer::train(&cfg)?;
+    println!(
+        "steps={} epochs={} train={} eval={} loss={:.4} best_val={:.4} best_test={:.4}",
+        r.steps,
+        r.epochs,
+        fmt_time(r.train_time_s),
+        fmt_time(r.eval_time_s),
+        r.final_loss,
+        r.best_val_acc,
+        r.best_test_acc
+    );
+    if let Some(t) = r.time_to_target_s {
+        println!("time-to-target: {}", fmt_time(t));
+    }
+    println!(
+        "per-step: sample-wait {} pack {} exec {} dp {}",
+        fmt_time(r.breakdown.sample_wait_s),
+        fmt_time(r.breakdown.pack_s),
+        fmt_time(r.breakdown.exec_s),
+        fmt_time(r.breakdown.dp_comm_s)
+    );
+    Ok(())
+}
+
+fn cmd_pmm_train(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let grid = Grid4D::parse(&args.str_or("grid", "1x2x2x2"))
+        .ok_or_else(|| anyhow!("bad --grid"))?;
+    let steps: u64 = args.get_or("steps", 20).map_err(|e| anyhow!(e))?;
+    let lr: f32 = args.get_or("lr", 5e-3).map_err(|e| anyhow!(e))?;
+    let prec = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
+    let data = Arc::new(datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?);
+    let spec = datasets::spec(&dataset).unwrap();
+    let dims = dims_for(&dataset, 0.5);
+    let batch = spec.batch;
+    println!(
+        "4D PMM training {dataset} on grid {}x{}x{}x{} ({} rank threads), {prec:?}",
+        grid.gd,
+        grid.gx,
+        grid.gy,
+        grid.gz,
+        grid.world_size()
+    );
+    let world = Arc::new(CommWorld::new(grid));
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for r in 0..grid.world_size() {
+        let w = world.clone();
+        let d = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let ctx = PmmCtx::new(grid, r, &w, prec);
+            let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+            let mut out = (0.0, 0.0);
+            for s in 0..steps {
+                let o = eng.train_step(s, lr);
+                out = (o.loss, o.acc);
+            }
+            (out, eng.timers)
+        }));
+    }
+    let mut timers = scalegnn::pmm::PmmTimers::default();
+    let mut last = (0.0, 0.0);
+    for h in handles {
+        let ((l, a), t) = h.join().unwrap();
+        timers.add(&t);
+        last = (l, a);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let n = grid.world_size() as f64;
+    println!(
+        "final loss {:.4} acc {:.4}  ({} steps in {})",
+        last.0,
+        last.1,
+        steps,
+        fmt_time(wall)
+    );
+    println!(
+        "per-rank mean: sampling {} spmm {} gemm {} elementwise {} tp_comm {} dp_comm {} reshard {}",
+        fmt_time(timers.sampling / n),
+        fmt_time(timers.spmm / n),
+        fmt_time(timers.gemm / n),
+        fmt_time(timers.elementwise / n),
+        fmt_time(timers.tp_comm / n),
+        fmt_time(timers.dp_comm / n),
+        fmt_time(timers.reshard / n),
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let grid =
+        Grid4D::parse(&args.str_or("grid", "2x2x2")).ok_or_else(|| anyhow!("bad --grid"))?;
+    let data = Arc::new(datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?);
+    let spec = datasets::spec(&dataset).unwrap();
+    let dims = dims_for(&dataset, 0.0);
+    let world = Arc::new(CommWorld::new(grid));
+    let t0 = std::time::Instant::now();
+    let mut handles = vec![];
+    for r in 0..grid.world_size() {
+        let w = world.clone();
+        let d = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+            let mut eng = PmmGcn::new(ctx, dims, spec.batch, d, 42);
+            eng.eval_full_graph()
+        }));
+    }
+    let mut accs = (0.0, 0.0);
+    for h in handles {
+        accs = h.join().unwrap();
+    }
+    println!(
+        "distributed full-graph eval on {} ranks: val {:.4} test {:.4} in {}",
+        grid.world_size(),
+        accs.0,
+        accs.1,
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "products_sim");
+    let steps: u64 = args.get_or("steps", 50).map_err(|e| anyhow!(e))?;
+    let gridspec = args.str_or("grid", "2x2");
+    let parts: Vec<usize> = gridspec.split('x').filter_map(|p| p.parse().ok()).collect();
+    if parts.len() != 2 {
+        bail!("--grid must be RxC, e.g. 2x2");
+    }
+    let data = datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let spec = datasets::spec(&dataset).unwrap();
+    let sampler = UniformVertexSampler::new(data.n, spec.batch, 42);
+    let shards = partition_2d(&data.adj, parts[0], parts[1]);
+    println!(
+        "Algorithm 2 on {}: n={} batch={} shard grid {}x{}",
+        dataset, data.n, spec.batch, parts[0], parts[1]
+    );
+    let mut builders: Vec<_> = shards
+        .into_iter()
+        .map(|sh| DistributedSubgraphBuilder::new(sampler.clone(), sh))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut nnz = 0usize;
+    for step in 0..steps {
+        for b in builders.iter_mut() {
+            nnz += b.build(step).adj.nnz();
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} steps x {} ranks: {} per rank-step, induced nnz/step {:.0} (p={:.2e})",
+        steps,
+        builders.len(),
+        fmt_time(dt / (steps as f64 * builders.len() as f64)),
+        nnz as f64 / steps as f64,
+        sampler.inclusion_prob(),
+    );
+    Ok(())
+}
+
+fn machine_of(args: &Args) -> Result<sim::Machine> {
+    sim::by_name(&args.str_or("machine", "perlmutter"))
+        .ok_or_else(|| anyhow!("unknown machine"))
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "papers100m_sim");
+    let m = machine_of(args)?;
+    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    let (x, y, z) = sim::base_grid_for(&dataset);
+    let base = x * y * z;
+    println!(
+        "strong scaling: {dataset} on {} (3D grid {x}x{y}x{z}, growing Gd)",
+        m.name
+    );
+    println!("{:>8} {:>6} {:>14} {:>9}", "devices", "Gd", "epoch (ms)", "speedup");
+    let mut first = None;
+    for gd in [1usize, 2, 4, 8, 16, 32, 64] {
+        let gpus = base * gd;
+        if gpus > 2048 {
+            break;
+        }
+        let t =
+            sim::scalegnn_epoch(&w, &m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL).total();
+        let f = *first.get_or_insert(t);
+        println!("{:>8} {:>6} {:>14.1} {:>8.1}x", gpus, gd, t * 1e3, f / t);
+    }
+    Ok(())
+}
+
+fn cmd_breakdown(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "products14m_sim");
+    let m = machine_of(args)?;
+    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    let (x, y, z) = sim::base_grid_for(&dataset);
+    println!("epoch breakdown: {dataset} on {} ({x}x{y}x{z} per group)", m.name);
+    println!(
+        "{:>4} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "Gd", "total ms", "sampling", "spmm+gemm", "elemwise", "tp_comm", "dp_comm", "other"
+    );
+    for gd in [1usize, 2, 4, 8, 16, 32] {
+        let b = sim::scalegnn_epoch(&w, &m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL);
+        println!(
+            "{:>4} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+            gd,
+            b.total() * 1e3,
+            b.sampling * 1e3,
+            (b.spmm + b.gemm) * 1e3,
+            b.elementwise * 1e3,
+            b.tp_comm * 1e3,
+            b.dp_comm * 1e3,
+            b.other * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "products_sim");
+    let m = machine_of(args)?;
+    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    println!(
+        "end-to-end time-to-accuracy: {dataset} on {} (log-scale in the paper)",
+        m.name
+    );
+    print!("{:>8}", "devices");
+    for fw in sim::Framework::all() {
+        print!(" {:>12}", fw.name());
+    }
+    println!();
+    for gpus in [4usize, 8, 16, 32, 64] {
+        print!("{:>8}", gpus);
+        for fw in sim::Framework::all() {
+            let t = if fw == sim::Framework::ScaleGnn {
+                match sim::grid_for(&dataset, gpus) {
+                    Some(g) => {
+                        sim::scalegnn_epoch(&w, &m, g, sim::OptFlags::ALL).total()
+                            * sim::epochs_to_target(fw, &dataset, gpus)
+                    }
+                    None => f64::NAN,
+                }
+            } else if m.name != "Perlmutter" && !fw.supports_rocm() {
+                f64::NAN
+            } else {
+                sim::baseline_epoch(fw, &w, &m, gpus) * sim::epochs_to_target(fw, &dataset, gpus)
+            };
+            if t.is_nan() {
+                print!(" {:>12}", "-");
+            } else {
+                print!(" {:>11.2}s", t);
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

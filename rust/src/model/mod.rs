@@ -1,0 +1,430 @@
+//! Pure-Rust reference GCN mirroring `python/compile/model.py`.
+//!
+//! Three roles:
+//! 1. cross-validation oracle for the PJRT artifacts (golden tests),
+//! 2. the rank-local compute kernel inside the 3D-PMM engine
+//!    (which decomposes exactly these operators across the grid), and
+//! 3. the full-graph distributed evaluation path (Table II), where the
+//!    sparse N x N adjacency cannot be dense-ified for the artifacts.
+//!
+//! Forward: Eqs. 4-12; backward: Eqs. 13-19; Adam matches
+//! `model.adam_update` bit-for-bit in structure (f32 arithmetic).
+
+use crate::graph::Csr;
+use crate::tensor::{log_softmax, rmsnorm, Mat};
+use crate::util::rng::Rng;
+
+pub const RMS_EPS: f32 = 1e-6;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Model dimensions (mirrors `ModelConfig` minus the fixed batch).
+#[derive(Clone, Copy, Debug)]
+pub struct GcnDims {
+    pub d_in: usize,
+    pub d_h: usize,
+    pub d_out: usize,
+    pub layers: usize,
+    pub dropout: f32,
+    pub weight_decay: f32,
+}
+
+impl GcnDims {
+    pub fn n_params(&self) -> usize {
+        2 + 2 * self.layers
+    }
+
+    /// Parameter shapes in artifact order: w_in, (w_l, g_l)*, w_out.
+    /// RMSNorm scales are carried as 1 x d_h matrices.
+    pub fn param_shapes(&self) -> Vec<(usize, usize)> {
+        let mut s = vec![(self.d_in, self.d_h)];
+        for _ in 0..self.layers {
+            s.push((self.d_h, self.d_h));
+            s.push((1, self.d_h));
+        }
+        s.push((self.d_h, self.d_out));
+        s
+    }
+}
+
+/// Flat parameter vector in artifact order.
+pub type Params = Vec<Mat>;
+
+/// Glorot weights, unit scales (same scheme as python init, independent
+/// stream).
+pub fn init_params(dims: &GcnDims, seed: u64) -> Params {
+    let mut rng = Rng::new(seed ^ 0x9A7A);
+    dims.param_shapes()
+        .into_iter()
+        .map(|(r, c)| {
+            if r == 1 && c == dims.d_h {
+                Mat::filled(r, c, 1.0)
+            } else {
+                Mat::glorot(r, c, &mut rng)
+            }
+        })
+        .collect()
+}
+
+/// Per-layer forward cache for the backward pass.
+pub struct LayerCache {
+    pub h_in: Mat,
+    pub h_agg: Mat,
+    pub xc: Mat,
+    pub inv_rms: Vec<f32>,
+    pub mask: Mat,
+}
+
+pub struct ForwardCache {
+    pub x: Mat,
+    pub h0: Mat,
+    pub layers: Vec<LayerCache>,
+    pub h_last: Mat,
+}
+
+/// Dropout keep-masks scaled by 1/(1-p); `None` at eval time.
+pub fn dropout_masks(dims: &GcnDims, rows: usize, rng: &mut Rng) -> Vec<Mat> {
+    let keep = 1.0 - dims.dropout;
+    (0..dims.layers)
+        .map(|_| {
+            let mut m = Mat::zeros(rows, dims.d_h);
+            for v in m.data.iter_mut() {
+                if rng.f32() < keep {
+                    *v = 1.0 / keep;
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Forward pass over an arbitrary (sparse) adjacency; `masks` omitted means
+/// eval mode (dropout off).
+pub fn forward(
+    dims: &GcnDims,
+    params: &Params,
+    adj: &Csr,
+    x: &Mat,
+    masks: Option<&[Mat]>,
+) -> (Mat, ForwardCache) {
+    let rows = x.rows;
+    let h0 = x.matmul(&params[0]); // Eq. 4
+    let mut h = h0.clone();
+    let mut layer_caches = Vec::with_capacity(dims.layers);
+    for l in 0..dims.layers {
+        let w = &params[1 + 2 * l];
+        let g = &params[2 + 2 * l];
+        let h_agg = adj.spmm(&h); // Eq. 5
+        let xc = h_agg.matmul(w); // Eq. 6
+        let (xn_scaled, inv_rms) = rmsnorm(&xc, g.row(0), RMS_EPS); // Eq. 7
+        let y = xn_scaled.relu(); // Eq. 8
+        let mask = match masks {
+            Some(ms) => ms[l].clone(),
+            None => Mat::filled(rows, dims.d_h, 1.0),
+        };
+        let yd = y.hadamard(&mask); // Eq. 9
+        let h_next = yd.add(&h); // Eq. 10
+        layer_caches.push(LayerCache { h_in: h, h_agg, xc, inv_rms, mask });
+        h = h_next;
+    }
+    let logits = h.matmul(&params[dims.n_params() - 1]); // Eq. 11
+    (
+        logits,
+        ForwardCache { x: x.clone(), h0, layers: layer_caches, h_last: h },
+    )
+}
+
+/// Weighted cross-entropy + accuracy + logits gradient (Eq. 12 and the
+/// start of the backward pass).
+pub fn loss_and_grad(logits: &Mat, y: &[u32], w: &[f32]) -> (f32, f32, Mat) {
+    let rows = logits.rows;
+    assert_eq!(y.len(), rows);
+    assert_eq!(w.len(), rows);
+    let logp = log_softmax(logits);
+    let denom: f32 = w.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut correct = 0.0f32;
+    let mut dlogits = Mat::zeros(rows, logits.cols);
+    for i in 0..rows {
+        let wi = w[i];
+        let yi = y[i] as usize;
+        let row = logp.row(i);
+        if wi != 0.0 {
+            loss += -row[yi] * wi;
+            let arg = (0..logits.cols)
+                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap();
+            if arg == yi {
+                correct += wi;
+            }
+        }
+        let drow = &mut dlogits.data[i * logits.cols..(i + 1) * logits.cols];
+        for j in 0..logits.cols {
+            let softmax = row[j].exp();
+            let onehot = if j == yi { 1.0 } else { 0.0 };
+            drow[j] = wi * (softmax - onehot) / denom;
+        }
+    }
+    (loss / denom, correct / denom, dlogits)
+}
+
+/// Backward pass (Eqs. 13-19); `adj_t` is the transposed adjacency.
+pub fn backward(
+    dims: &GcnDims,
+    params: &Params,
+    cache: &ForwardCache,
+    adj_t: &Csr,
+    dlogits: &Mat,
+) -> Params {
+    let np = dims.n_params();
+    let mut grads: Params = dims
+        .param_shapes()
+        .into_iter()
+        .map(|(r, c)| Mat::zeros(r, c))
+        .collect();
+
+    // output head (Eqs. 13-14)
+    grads[np - 1] = cache.h_last.t_matmul(dlogits);
+    let mut dh = dlogits.matmul_t(&params[np - 1]);
+
+    for l in (0..dims.layers).rev() {
+        let w = &params[1 + 2 * l];
+        let g = &params[2 + 2 * l];
+        let lc = &cache.layers[l];
+        let rows = dh.rows;
+        let dcols = dims.d_h;
+
+        // element-wise backward: residual skip + dropout + relu + rmsnorm
+        let mut dxc = Mat::zeros(rows, dcols);
+        let mut dg = vec![0.0f32; dcols];
+        for i in 0..rows {
+            let inv = lc.inv_rms[i];
+            let xc_row = lc.xc.row(i);
+            let m_row = lc.mask.row(i);
+            let dh_row = dh.row(i);
+            // dy0 = dh * mask * relu'(xn*g); xn = xc*inv
+            // then dxn = dy0 * g; dg += dy0 * xn
+            let mut dot = 0.0f32; // mean(dxn * xc)
+            let mut dxn_row = vec![0.0f32; dcols];
+            for j in 0..dcols {
+                let xn = xc_row[j] * inv;
+                let y0 = xn * g.row(0)[j];
+                let dy0 = if y0 > 0.0 { dh_row[j] * m_row[j] } else { 0.0 };
+                dg[j] += dy0 * xn;
+                let dxn = dy0 * g.row(0)[j];
+                dxn_row[j] = dxn;
+                dot += dxn * xc_row[j];
+            }
+            dot /= dcols as f32;
+            let dxc_row = &mut dxc.data[i * dcols..(i + 1) * dcols];
+            for j in 0..dcols {
+                dxc_row[j] = inv * (dxn_row[j] - xc_row[j] * dot * inv * inv);
+            }
+        }
+        grads[2 + 2 * l] = Mat::from_vec(1, dcols, dg);
+
+        // GEMM backward (Eqs. 15-16)
+        grads[1 + 2 * l] = lc.h_agg.t_matmul(&dxc);
+        let dh_agg = dxc.matmul_t(w);
+
+        // SpMM backward (Eq. 17) + residual merge
+        let dh_conv = adj_t.spmm(&dh_agg);
+        dh = dh_conv.add(&dh); // skip path carries dh unchanged
+    }
+
+    // input projection (Eqs. 18-19)
+    grads[0] = cache.x.t_matmul(&dh);
+    grads
+}
+
+/// Adam optimizer state.
+#[derive(Clone)]
+pub struct AdamState {
+    pub m: Params,
+    pub v: Params,
+    pub t: f32,
+}
+
+impl AdamState {
+    pub fn new(dims: &GcnDims) -> AdamState {
+        let zeros: Params = dims
+            .param_shapes()
+            .into_iter()
+            .map(|(r, c)| Mat::zeros(r, c))
+            .collect();
+        AdamState { m: zeros.clone(), v: zeros, t: 0.0 }
+    }
+
+    /// Bias-corrected Adam + decoupled weight decay, matching
+    /// `model.adam_update`.
+    pub fn update(&mut self, dims: &GcnDims, params: &mut Params, grads: &Params, lr: f32) {
+        self.t += 1.0;
+        let b1t = 1.0 - ADAM_B1.powf(self.t);
+        let b2t = 1.0 - ADAM_B2.powf(self.t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for k in 0..p.data.len() {
+                m.data[k] = ADAM_B1 * m.data[k] + (1.0 - ADAM_B1) * g.data[k];
+                v.data[k] = ADAM_B2 * v.data[k] + (1.0 - ADAM_B2) * g.data[k] * g.data[k];
+                let mut step = lr * (m.data[k] / b1t) / ((v.data[k] / b2t).sqrt() + ADAM_EPS);
+                if dims.weight_decay > 0.0 {
+                    step += lr * dims.weight_decay * p.data[k];
+                }
+                p.data[k] -= step;
+            }
+        }
+    }
+}
+
+/// One full reference training step (sample-side inputs already prepared).
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    dims: &GcnDims,
+    params: &mut Params,
+    opt: &mut AdamState,
+    adj: &Csr,
+    adj_t: &Csr,
+    x: &Mat,
+    y: &[u32],
+    w: &[f32],
+    masks: &[Mat],
+    lr: f32,
+) -> (f32, f32) {
+    let (logits, cache) = forward(dims, params, adj, x, Some(masks));
+    let (loss, acc, dlogits) = loss_and_grad(&logits, y, w);
+    let grads = backward(dims, params, &cache, adj_t, &dlogits);
+    opt.update(dims, params, &grads, lr);
+    (loss, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::rmat;
+
+    fn dims() -> GcnDims {
+        GcnDims { d_in: 6, d_h: 8, d_out: 3, layers: 2, dropout: 0.0, weight_decay: 0.0 }
+    }
+
+    fn setup(b: usize) -> (Csr, Csr, Mat, Vec<u32>, Vec<f32>) {
+        let g = rmat(5, 4, 7).gcn_normalize();
+        let s: Vec<u32> = (0..b as u32).collect();
+        let mb = crate::sampling::induce_rescaled(&g, &s, 0.5);
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(b, 6, &mut rng, 1.0);
+        let y: Vec<u32> = (0..b).map(|i| (i % 3) as u32).collect();
+        let w = vec![1.0f32; b];
+        (mb.adj, mb.adj_t, x, y, w)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let d = dims();
+        let p = init_params(&d, 0);
+        let (adj, _, x, _, _) = setup(16);
+        let (logits, cache) = forward(&d, &p, &adj, &x, None);
+        assert_eq!((logits.rows, logits.cols), (16, 3));
+        assert_eq!(cache.layers.len(), 2);
+    }
+
+    #[test]
+    fn loss_grad_is_softmax_minus_onehot() {
+        let logits = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let (loss, acc, d) = loss_and_grad(&logits, &[2], &[1.0]);
+        assert!(loss > 0.0);
+        assert_eq!(acc, 1.0);
+        let sum: f32 = d.data.iter().sum();
+        assert!(sum.abs() < 1e-6, "gradient rows sum to 0");
+        assert!(d.data[2] < 0.0 && d.data[0] > 0.0);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let d = dims();
+        let mut params = init_params(&d, 1);
+        let (adj, adj_t, x, y, w) = setup(12);
+        let (logits, cache) = forward(&d, &params, &adj, &x, None);
+        let (_, _, dlogits) = loss_and_grad(&logits, &y, &w);
+        let grads = backward(&d, &params, &cache, &adj_t, &dlogits);
+
+        let loss_of = |params: &Params| -> f64 {
+            let (lg, _) = forward(&d, params, &adj, &x, None);
+            let (l, _, _) = loss_and_grad(&lg, &y, &w);
+            l as f64
+        };
+
+        let eps = 1e-3f32;
+        // probe a handful of coordinates in every parameter tensor
+        for (pi, g) in grads.iter().enumerate() {
+            let probes = [0usize, g.data.len() / 2, g.data.len() - 1];
+            for &k in &probes {
+                let orig = params[pi].data[k];
+                params[pi].data[k] = orig + eps;
+                let lp = loss_of(&params);
+                params[pi].data[k] = orig - eps;
+                let lm = loss_of(&params);
+                params[pi].data[k] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = g.data[k];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "param {pi} elem {k}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let d = dims();
+        let mut params = init_params(&d, 2);
+        let mut opt = AdamState::new(&d);
+        let (adj, adj_t, x, y, w) = setup(16);
+        let masks = vec![Mat::filled(16, 8, 1.0); 2];
+        let mut losses = vec![];
+        for _ in 0..30 {
+            let (l, _) =
+                train_step(&d, &mut params, &mut opt, &adj, &adj_t, &x, &y, &w, &masks, 5e-3);
+            losses.push(l);
+        }
+        assert!(losses[29] < losses[0] * 0.6, "{:?}", &losses[..5]);
+    }
+
+    #[test]
+    fn dropout_masks_have_expected_density() {
+        let d = GcnDims { dropout: 0.5, ..dims() };
+        let mut rng = Rng::new(5);
+        let ms = dropout_masks(&d, 100, &mut rng);
+        assert_eq!(ms.len(), 2);
+        let nz = ms[0].data.iter().filter(|&&v| v > 0.0).count();
+        let frac = nz as f64 / ms[0].data.len() as f64;
+        assert!((frac - 0.5).abs() < 0.08, "{frac}");
+        // kept entries are scaled by 1/keep
+        assert!(ms[0].data.iter().all(|&v| v == 0.0 || (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        let d = GcnDims { layers: 0, d_in: 1, d_h: 1, d_out: 1, dropout: 0.0, weight_decay: 0.0 };
+        let mut params = vec![Mat::filled(1, 1, 1.0), Mat::filled(1, 1, 1.0)];
+        let grads = vec![Mat::filled(1, 1, 0.5), Mat::filled(1, 1, 0.5)];
+        let mut opt = AdamState::new(&d);
+        opt.update(&d, &mut params, &grads, 0.1);
+        // bias-corrected first step is ~lr * sign(g)
+        assert!((params[0].data[0] - (1.0 - 0.1)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn eval_is_deterministic_without_masks() {
+        let d = dims();
+        let p = init_params(&d, 3);
+        let (adj, _, x, _, _) = setup(10);
+        let (l1, _) = forward(&d, &p, &adj, &x, None);
+        let (l2, _) = forward(&d, &p, &adj, &x, None);
+        assert_eq!(l1.data, l2.data);
+    }
+}

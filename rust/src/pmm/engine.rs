@@ -1,0 +1,898 @@
+//! The full GCN training/eval engine over the 3D PMM primitives — the
+//! per-rank body executed by every thread of a data-parallel group.
+//!
+//! Forward follows §IV-C (Fig. 4): parallel input projection, per layer a
+//! parallel SpMM (Eq. 27) + GEMM (Eq. 28) + parallel RMSNorm (Eq. 29) +
+//! ReLU/dropout (local) + resharded residual; parallel masked cross-entropy
+//! over the class-sharded logits.  Backward mirrors it with the transposed
+//! primitives (Eqs. 13-19).  Weight shards are updated by a rank-local Adam
+//! (replicas stay in sync because their gradients are identical after the
+//! contraction + DP all-reduces).
+
+use std::sync::Arc;
+
+use super::{feature_layouts, shard_dropout_mask, Layout, PmmCtx, PmmMat};
+use crate::comm::Precision;
+use crate::graph::{block_bounds, partition::extract_shard, Dataset};
+use crate::grid::Axis;
+use crate::model::GcnDims;
+use crate::model::{ADAM_B1, ADAM_B2, ADAM_EPS};
+use crate::sampling::{DistributedSubgraphBuilder, LocalSubgraph, UniformVertexSampler};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Per-phase wall-clock accumulators (seconds) — feeds the Fig. 5 / Fig. 8
+/// breakdowns measured at real (small) scale.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PmmTimers {
+    pub sampling: f64,
+    pub spmm: f64,
+    pub gemm: f64,
+    pub elementwise: f64,
+    pub tp_comm: f64,
+    pub dp_comm: f64,
+    pub reshard: f64,
+    pub other: f64,
+}
+
+impl PmmTimers {
+    pub fn total(&self) -> f64 {
+        self.sampling
+            + self.spmm
+            + self.gemm
+            + self.elementwise
+            + self.tp_comm
+            + self.dp_comm
+            + self.reshard
+            + self.other
+    }
+
+    pub fn add(&mut self, o: &PmmTimers) {
+        self.sampling += o.sampling;
+        self.spmm += o.spmm;
+        self.gemm += o.gemm;
+        self.elementwise += o.elementwise;
+        self.tp_comm += o.tp_comm;
+        self.dp_comm += o.dp_comm;
+        self.reshard += o.reshard;
+        self.other += o.other;
+    }
+}
+
+pub struct PmmStepOutput {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Compact row bounds over [0,B) induced by intersecting the sorted sample
+/// with the static vertex ranges of `axis_size` blocks (identical on every
+/// rank — no communication).
+fn compact_bounds(sample: &[u32], n: usize, axis_size: usize) -> Vec<usize> {
+    let vb = block_bounds(n, axis_size);
+    vb.iter()
+        .map(|&v| sample.partition_point(|&s| (s as usize) < v))
+        .collect()
+}
+
+struct LayerCacheP {
+    f_in: PmmMat,
+    h_agg: PmmMat,
+    xc: PmmMat,
+    inv: Vec<f32>,
+    mask: Mat,
+    adj: LocalSubgraph,
+}
+
+/// One rank's engine state.
+pub struct PmmGcn<'a> {
+    pub ctx: PmmCtx<'a>,
+    pub dims: GcnDims,
+    pub batch: usize,
+    pub data: Arc<Dataset>,
+    pub seed: u64,
+    f_layouts: Vec<Layout>,
+    // parameters (sharded); g is a replicated local slice over the layer's
+    // feature column axis
+    w_in: PmmMat,
+    w: Vec<PmmMat>,
+    g: Vec<Vec<f32>>,
+    w_out: PmmMat,
+    // adam moments per local shard, ordered [w_in, (w_l, g_l)*, w_out]
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    t: f32,
+    builders: Vec<DistributedSubgraphBuilder>,
+    pub timers: PmmTimers,
+}
+
+macro_rules! timed {
+    ($self:ident . $field:ident, $e:expr) => {{
+        let __t = std::time::Instant::now();
+        let __r = $e;
+        $self.timers.$field += __t.elapsed().as_secs_f64();
+        __r
+    }};
+}
+
+impl<'a> PmmGcn<'a> {
+    pub fn new(
+        ctx: PmmCtx<'a>,
+        dims: GcnDims,
+        batch: usize,
+        data: Arc<Dataset>,
+        seed: u64,
+    ) -> PmmGcn<'a> {
+        let f_layouts = feature_layouts(dims.layers);
+        // full parameters from a shared seed, then slice local shards
+        let mut rng = Rng::new(seed ^ 0x9A7A);
+        let shapes = dims.param_shapes();
+        let full: Vec<Mat> = shapes
+            .iter()
+            .map(|&(r, c)| {
+                if r == 1 && c == dims.d_h {
+                    Mat::filled(r, c, 1.0)
+                } else {
+                    Mat::glorot(r, c, &mut rng)
+                }
+            })
+            .collect();
+        let w_in = ctx.shard_from_global(&full[0], Layout::new(Axis::Z, Axis::Y));
+        let mut w = Vec::new();
+        let mut g = Vec::new();
+        for l in 0..dims.layers {
+            let fl = f_layouts[l];
+            // W_l on (C_l, R_l); g_l sliced over R_l (the post-GEMM col axis)
+            w.push(ctx.shard_from_global(
+                &full[1 + 2 * l],
+                Layout::new(fl.col_axis, fl.row_axis),
+            ));
+            let gb = block_bounds(dims.d_h, ctx.axis_size(fl.row_axis));
+            let gi = ctx.axis_coord(fl.row_axis);
+            g.push(full[2 + 2 * l].data[gb[gi]..gb[gi + 1]].to_vec());
+        }
+        let fl_last = f_layouts[dims.layers];
+        let w_out = ctx.shard_from_global(
+            &full[shapes.len() - 1],
+            Layout::new(fl_last.col_axis, fl_last.third()),
+        );
+
+        // adam moments sized per local shard
+        let mut locals: Vec<usize> = vec![w_in.local.data.len()];
+        for l in 0..dims.layers {
+            locals.push(w[l].local.data.len());
+            locals.push(g[l].len());
+        }
+        locals.push(w_out.local.data.len());
+        let adam_m: Vec<Vec<f32>> = locals.iter().map(|&n| vec![0.0; n]).collect();
+        let adam_v = adam_m.clone();
+
+        // per-layer adjacency builders: A^(l) on (third_l rows, R_l cols).
+        // Each DP group draws an independent mini-batch stream (§IV-A), so
+        // the sampler seed is keyed on the group's d coordinate; ranks
+        // within a group share it (the communication-free contract).
+        let group_seed = crate::util::rng::splitmix64(seed ^ (0xD0 + ctx.coord.d as u64));
+        let sampler = UniformVertexSampler::new(data.n, batch, group_seed);
+        let n = data.n;
+        let builders = (0..dims.layers)
+            .map(|l| {
+                let fl = f_layouts[l];
+                let (t_ax, r_ax) = (fl.third(), fl.row_axis);
+                let rb = block_bounds(n, ctx.axis_size(t_ax));
+                let cb = block_bounds(n, ctx.axis_size(r_ax));
+                let (r0, r1) = (rb[ctx.axis_coord(t_ax)], rb[ctx.axis_coord(t_ax) + 1]);
+                let (c0, c1) = (cb[ctx.axis_coord(r_ax)], cb[ctx.axis_coord(r_ax) + 1]);
+                DistributedSubgraphBuilder::new(
+                    sampler.clone(),
+                    extract_shard(&data.adj, r0, r1, c0, c1),
+                )
+            })
+            .collect();
+
+        PmmGcn {
+            ctx,
+            dims,
+            batch,
+            data,
+            seed,
+            f_layouts,
+            w_in,
+            w,
+            g,
+            w_out,
+            adam_m,
+            adam_v,
+            t: 0.0,
+            builders,
+            timers: PmmTimers::default(),
+        }
+    }
+
+    /// Gather the full parameter tensors (validation/debug).
+    pub fn gather_params(&self) -> Vec<Mat> {
+        let mut out = vec![self.ctx.gather_global(&self.w_in)];
+        for l in 0..self.dims.layers {
+            out.push(self.ctx.gather_global(&self.w[l]));
+            // g: slice over R_l, replicated elsewhere — gather along R_l
+            let fl = self.f_layouts[l];
+            let parts = self
+                .ctx
+                .world
+                .all_gather(self.ctx.rank, fl.row_axis, &self.g[l]);
+            out.push(Mat::from_vec(
+                1,
+                self.dims.d_h,
+                parts.into_iter().flatten().collect(),
+            ));
+        }
+        out.push(self.ctx.gather_global(&self.w_out));
+        out
+    }
+
+    /// Input features shard for sampled rows (layout (X, Z)).
+    fn input_shard(&self, sample: &[u32], cbx: &Arc<Vec<usize>>) -> PmmMat {
+        let d_in = self.dims.d_in;
+        let col_b = self.ctx.static_bounds(d_in, Axis::Z);
+        let (r0, r1) = self.ctx.my_block(cbx, Axis::X);
+        let (c0, c1) = self.ctx.my_block(&col_b, Axis::Z);
+        let mut local = Mat::zeros(r1 - r0, c1 - c0);
+        for (k, &v) in sample[r0..r1].iter().enumerate() {
+            let src = &self.data.features.data[v as usize * d_in + c0..v as usize * d_in + c1];
+            local.data[k * (c1 - c0)..(k + 1) * (c1 - c0)].copy_from_slice(src);
+        }
+        PmmMat {
+            layout: Layout::new(Axis::X, Axis::Z),
+            row_bounds: cbx.clone(),
+            col_bounds: col_b,
+            local,
+        }
+    }
+
+    /// Full forward for rows described by per-axis bounds; used by both
+    /// train (sampled, step-dependent bounds) and eval (static bounds).
+    #[allow(clippy::type_complexity)]
+    fn forward_sampled(
+        &mut self,
+        step: u64,
+        train: bool,
+    ) -> (PmmMat, Vec<LayerCacheP>, Vec<u32>, PmmMat) {
+        let dims = self.dims;
+        // Algorithm 2 on every layer's builder (communication-free)
+        let subs: Vec<LocalSubgraph> = timed!(
+            self.sampling,
+            (0..dims.layers).map(|l| self.builders[l].build(step)).collect()
+        );
+        let sample = subs[0].sample.clone();
+        let n = self.data.n;
+        let cb = |ax: Axis| -> Arc<Vec<usize>> {
+            Arc::new(compact_bounds(&sample, n, self.ctx.axis_size(ax)))
+        };
+        let (cbx, cby, cbz) = (cb(Axis::X), cb(Axis::Y), cb(Axis::Z));
+        let cb_of = |ax: Axis| match ax {
+            Axis::X => cbx.clone(),
+            Axis::Y => cby.clone(),
+            Axis::Z => cbz.clone(),
+            Axis::Dp => unreachable!(),
+        };
+
+        // input projection (Fig. 4 left)
+        let x_in = timed!(self.other, self.input_shard(&sample, &cbx));
+        let mut f = self.ctx.mm(&x_in, &self.w_in);
+
+        let mut caches = Vec::with_capacity(dims.layers);
+        for (l, sub) in subs.into_iter().enumerate() {
+            let fl = self.f_layouts[l];
+            let (t_ax, r_ax) = (fl.third(), fl.row_axis);
+            // SpMM aggregation (Eq. 27)
+            let h_agg = self.ctx.spmm(&sub.adj, &cb_of(t_ax), t_ax, r_ax, &f);
+            // GEMM combination (Eq. 28)
+            let xc = self.ctx.mm(&h_agg, &self.w[l]);
+            // RMSNorm (Eq. 29) + ReLU + dropout (local)
+            let (xn, inv) = self.ctx.rmsnorm_slice(&xc, &self.g[l]);
+            let row_off = xc.row_bounds[self.ctx.axis_coord(xc.layout.row_axis)];
+            let col_off = xc.col_bounds[self.ctx.axis_coord(xc.layout.col_axis)];
+            let mask = if train && dims.dropout > 0.0 {
+                shard_dropout_mask(
+                    self.seed,
+                    step,
+                    l,
+                    xn.local.rows,
+                    xn.local.cols,
+                    row_off,
+                    col_off,
+                    dims.d_h,
+                    dims.dropout,
+                )
+            } else {
+                Mat::filled(xn.local.rows, xn.local.cols, 1.0)
+            };
+            let mut fd = xn.clone();
+            timed!(self.elementwise, {
+                for (o, &m) in fd.local.data.iter_mut().zip(&mask.data) {
+                    *o = o.max(0.0) * m;
+                }
+            });
+            // resharded residual (§IV-C4)
+            let res = self.ctx.reshard(
+                &f,
+                fd.layout,
+                cb_of(fd.layout.row_axis),
+                self.ctx.static_bounds(dims.d_h, fd.layout.col_axis),
+            );
+            timed!(self.elementwise, fd.local.add_assign(&res.local));
+            caches.push(LayerCacheP { f_in: f, h_agg, xc, inv, mask, adj: sub });
+            f = fd;
+        }
+
+        // output head
+        let logits = self.ctx.mm(&f, &self.w_out);
+        (logits, caches, sample, f)
+    }
+
+    /// Parallel masked cross-entropy: returns (loss, acc, dlogits).
+    fn parallel_loss(
+        &mut self,
+        logits: &PmmMat,
+        y_of: impl Fn(usize) -> u32,
+        w_of: impl Fn(usize) -> f32,
+    ) -> (f32, f32, PmmMat) {
+        let rows = logits.local.rows;
+        let cols = logits.local.cols;
+        let class_axis = logits.layout.col_axis;
+        let row_axis = logits.layout.row_axis;
+        let c0 = logits.col_bounds[self.ctx.axis_coord(class_axis)];
+        let r0 = logits.row_bounds[self.ctx.axis_coord(row_axis)];
+
+        // row maxima across the class shards
+        let local_max: Vec<f32> = (0..rows)
+            .map(|r| logits.local.row(r).iter().cloned().fold(f32::NEG_INFINITY, f32::max))
+            .collect();
+        let maxes = self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_max);
+        let gmax: Vec<f32> = (0..rows)
+            .map(|r| maxes.iter().map(|p| p[r]).fold(f32::NEG_INFINITY, f32::max))
+            .collect();
+        // log-sum-exp
+        let mut local_sum: Vec<f32> = (0..rows)
+            .map(|r| logits.local.row(r).iter().map(|&v| (v - gmax[r]).exp()).sum())
+            .collect();
+        self.ctx
+            .world
+            .all_reduce(self.ctx.rank, class_axis, &mut local_sum, Precision::Fp32);
+        let lse: Vec<f32> = (0..rows).map(|r| local_sum[r].ln() + gmax[r]).collect();
+
+        // local argmax with global class ids (for accuracy)
+        let local_arg: Vec<f32> = (0..rows)
+            .flat_map(|r| {
+                let row = logits.local.row(r);
+                let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+                for (j, &v) in row.iter().enumerate() {
+                    if v > bv {
+                        bv = v;
+                        bi = j;
+                    }
+                }
+                [(c0 + bi) as f32, bv]
+            })
+            .collect();
+        let args = self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_arg);
+
+        // loss/acc partial sums + dlogits
+        let mut dlogits = logits.clone();
+        let mut sums = vec![0.0f32; 3]; // [loss, correct, denom]
+        for r in 0..rows {
+            let y = y_of(r0 + r);
+            let w = w_of(r0 + r);
+            sums[2] += w;
+            // global argmax
+            let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+            for p in &args {
+                if p[2 * r + 1] > bv {
+                    bv = p[2 * r + 1];
+                    bi = p[2 * r] as usize;
+                }
+            }
+            if w != 0.0 {
+                if bi == y as usize {
+                    sums[1] += w;
+                }
+                if (y as usize) >= c0 && (y as usize) < c0 + cols {
+                    sums[0] += -(logits.local.at(r, y as usize - c0) - lse[r]) * w;
+                }
+            }
+            let drow = &mut dlogits.local.data[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                let sm = (logits.local.at(r, j) - lse[r]).exp();
+                let onehot = if c0 + j == y as usize { 1.0 } else { 0.0 };
+                drow[j] = w * (sm - onehot);
+            }
+        }
+        // loss terms live on one class-shard only -> AR over classes, then
+        // over row blocks; denominators likewise
+        self.ctx
+            .world
+            .all_reduce(self.ctx.rank, class_axis, &mut sums[..1], Precision::Fp32);
+        let mut row_sums = [sums[0], sums[1], sums[2]];
+        self.ctx
+            .world
+            .all_reduce(self.ctx.rank, row_axis, &mut row_sums, Precision::Fp32);
+        let denom = row_sums[2].max(1.0);
+        for d in dlogits.local.data.iter_mut() {
+            *d /= denom;
+        }
+        (row_sums[0] / denom, row_sums[1] / denom, dlogits)
+    }
+
+    /// One 4D training step: Algorithm 1/2 sampling, 3D PMM forward +
+    /// backward, DP gradient all-reduce, rank-local Adam.
+    pub fn train_step(&mut self, step: u64, lr: f32) -> PmmStepOutput {
+        let dims = self.dims;
+        let (logits, caches, sample, f_last) = self.forward_sampled(step, true);
+
+        let data = self.data.clone();
+        let sample_arc = sample.clone();
+        let (loss, acc, dlogits) = self.parallel_loss(
+            &logits,
+            |i| data.labels[sample_arc[i] as usize],
+            |i| if data.split[sample_arc[i] as usize] == 0 { 1.0 } else { 0.0 },
+        );
+
+        // ---- backward ----
+        let n = self.data.n;
+        let cb = |ax: Axis, s: &[u32]| -> Arc<Vec<usize>> {
+            Arc::new(compact_bounds(s, n, self.ctx.axis_size(ax)))
+        };
+
+        // output head (Eqs. 13-14)
+        let d_wout = self.ctx.mm_ta(&f_last, &dlogits);
+        let mut df = self.ctx.mm_tb(&dlogits, &self.w_out);
+
+        let mut d_w: Vec<PmmMat> = Vec::with_capacity(dims.layers);
+        let mut d_g: Vec<Vec<f32>> = Vec::with_capacity(dims.layers);
+        for l in (0..dims.layers).rev() {
+            let lc = &caches[l];
+            let fl = self.f_layouts[l];
+            let (t_ax, r_ax) = (fl.third(), fl.row_axis);
+
+            // element-wise backward (dropout, relu, rmsnorm w/ AR'd dot)
+            let rows = df.local.rows;
+            let cols = df.local.cols;
+            let gslice = &self.g[l];
+            let mut dxc = df.clone();
+            let mut dg = vec![0.0f32; cols];
+            let mut dots = vec![0.0f32; rows];
+            let mut dxn_all = vec![0.0f32; rows * cols];
+            timed!(self.elementwise, {
+                for r in 0..rows {
+                    let inv = lc.inv[r];
+                    for j in 0..cols {
+                        let xc = lc.xc.local.at(r, j);
+                        let xn = xc * inv;
+                        let y0 = xn * gslice[j];
+                        let dy0 = if y0 > 0.0 {
+                            df.local.at(r, j) * lc.mask.at(r, j)
+                        } else {
+                            0.0
+                        };
+                        dg[j] += dy0 * xn;
+                        let dxn = dy0 * gslice[j];
+                        dxn_all[r * cols + j] = dxn;
+                        dots[r] += dxn * xc;
+                    }
+                }
+            });
+            // the RMSNorm dot is a full-row reduction: AR over cols (FP32)
+            let t_ar = std::time::Instant::now();
+            self.ctx.world.all_reduce(
+                self.ctx.rank,
+                df.layout.col_axis,
+                &mut dots,
+                Precision::Fp32,
+            );
+            // dg is replicated over C_l; sum over row blocks (T_l)
+            self.ctx
+                .world
+                .all_reduce(self.ctx.rank, df.layout.row_axis, &mut dg, Precision::Fp32);
+            self.timers.tp_comm += t_ar.elapsed().as_secs_f64();
+            timed!(self.elementwise, {
+                for r in 0..rows {
+                    let inv = lc.inv[r];
+                    let dot = dots[r] / dims.d_h as f32;
+                    for j in 0..cols {
+                        let xc = lc.xc.local.at(r, j);
+                        dxc.local.data[r * cols + j] =
+                            inv * (dxn_all[r * cols + j] - xc * dot * inv * inv);
+                    }
+                }
+            });
+
+            // GEMM backward (Eqs. 15-16)
+            let dwl = self.ctx.mm_ta(&lc.h_agg, &dxc);
+            let dh_agg = self.ctx.mm_tb(&dxc, &self.w[l]);
+
+            // SpMM backward (Eq. 17)
+            let df_conv =
+                self.ctx.spmm_ta(&lc.adj.adj, &cb(r_ax, &sample), r_ax, t_ax, &dh_agg);
+
+            // residual skip: df resharded back to the layer-input layout
+            let df_skip = self.ctx.reshard(
+                &df,
+                lc.f_in.layout,
+                cb(lc.f_in.layout.row_axis, &sample),
+                self.ctx.static_bounds(dims.d_h, lc.f_in.layout.col_axis),
+            );
+            df = df_conv;
+            timed!(self.elementwise, df.local.add_assign(&df_skip.local));
+
+            d_w.push(dwl);
+            d_g.push(dg);
+        }
+        d_w.reverse();
+        d_g.reverse();
+
+        // input projection backward (Eq. 18)
+        let x_in = timed!(self.other, self.input_shard(&sample, &cb(Axis::X, &sample)));
+        let d_win = self.ctx.mm_ta(&x_in, &df);
+
+        // ---- DP gradient all-reduce + mean ----
+        let gd = self.ctx.grid.gd as f32;
+        let mut flat: Vec<&mut Vec<f32>> = Vec::new();
+        let mut d_win_data = d_win.local.data;
+        let mut d_wout_data = d_wout.local.data;
+        flat.push(&mut d_win_data);
+        let mut d_w_data: Vec<Vec<f32>> = d_w.into_iter().map(|m| m.local.data).collect();
+        for dwd in d_w_data.iter_mut() {
+            flat.push(dwd);
+        }
+        let mut d_g_data = d_g;
+        for dgd in d_g_data.iter_mut() {
+            flat.push(dgd);
+        }
+        flat.push(&mut d_wout_data);
+        if gd > 1.0 {
+            let t0 = std::time::Instant::now();
+            for buf in flat.iter_mut() {
+                self.ctx
+                    .world
+                    .all_reduce(self.ctx.rank, Axis::Dp, buf, Precision::Fp32);
+                for v in buf.iter_mut() {
+                    *v /= gd;
+                }
+            }
+            self.timers.dp_comm += t0.elapsed().as_secs_f64();
+        }
+
+        // ---- Adam (rank-local, shards stay in sync) ----
+        timed!(self.other, {
+            self.t += 1.0;
+            let t = self.t;
+            let mut idx = 0;
+            let apply = |p: &mut [f32], g: &[f32], m: &mut Vec<f32>, v: &mut Vec<f32>| {
+                let b1t = 1.0 - ADAM_B1.powf(t);
+                let b2t = 1.0 - ADAM_B2.powf(t);
+                for k in 0..p.len() {
+                    m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g[k];
+                    v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g[k] * g[k];
+                    p[k] -= lr * (m[k] / b1t) / ((v[k] / b2t).sqrt() + ADAM_EPS);
+                }
+            };
+            let (m, v) = (&mut self.adam_m, &mut self.adam_v);
+            apply(&mut self.w_in.local.data, &d_win_data, &mut m[idx], &mut v[idx]);
+            idx += 1;
+            for l in 0..dims.layers {
+                apply(&mut self.w[l].local.data, &d_w_data[l], &mut m[idx], &mut v[idx]);
+                idx += 1;
+                apply(&mut self.g[l], &d_g_data[l], &mut m[idx], &mut v[idx]);
+                idx += 1;
+            }
+            apply(&mut self.w_out.local.data, &d_wout_data, &mut m[idx], &mut v[idx]);
+        });
+
+        // fold the context's per-op timings into the step accumulators
+        let ct = self.ctx.drain_timers();
+        self.timers.add(&ct);
+
+        PmmStepOutput { loss, acc }
+    }
+
+    /// Distributed full-graph evaluation (Table II): a single 3D-PMM
+    /// forward over the *entire* (sparse) graph, dropout off.
+    /// Returns (val_acc, test_acc).
+    pub fn eval_full_graph(&mut self) -> (f32, f32) {
+        let dims = self.dims;
+        let n = self.data.n;
+        let ctx = &self.ctx;
+        let cb = |ax: Axis| -> Arc<Vec<usize>> { ctx.static_bounds(n, ax) };
+
+        // features on (X, Z)
+        let cbx = cb(Axis::X);
+        let all: Vec<u32> = {
+            let (r0, r1) = ctx.my_block(&cbx, Axis::X);
+            (r0 as u32..r1 as u32).collect()
+        };
+        let d_in = dims.d_in;
+        let col_b = ctx.static_bounds(d_in, Axis::Z);
+        let (c0, c1) = ctx.my_block(&col_b, Axis::Z);
+        let mut local = Mat::zeros(all.len(), c1 - c0);
+        for (k, &v) in all.iter().enumerate() {
+            local.data[k * (c1 - c0)..(k + 1) * (c1 - c0)].copy_from_slice(
+                &self.data.features.data[v as usize * d_in + c0..v as usize * d_in + c1],
+            );
+        }
+        let x_in = PmmMat {
+            layout: Layout::new(Axis::X, Axis::Z),
+            row_bounds: cbx,
+            col_bounds: col_b,
+            local,
+        };
+        let mut f = ctx.mm(&x_in, &self.w_in);
+
+        for l in 0..dims.layers {
+            let fl = self.f_layouts[l];
+            let (t_ax, r_ax) = (fl.third(), fl.row_axis);
+            let rb = block_bounds(n, ctx.axis_size(t_ax));
+            let cbv = block_bounds(n, ctx.axis_size(r_ax));
+            let (r0, r1) = (rb[ctx.axis_coord(t_ax)], rb[ctx.axis_coord(t_ax) + 1]);
+            let (cc0, cc1) = (cbv[ctx.axis_coord(r_ax)], cbv[ctx.axis_coord(r_ax) + 1]);
+            let shard = extract_shard(&self.data.adj, r0, r1, cc0, cc1);
+            let h_agg = ctx.spmm(&shard.csr, &cb(t_ax), t_ax, r_ax, &f);
+            let xc = ctx.mm(&h_agg, &self.w[l]);
+            let (mut xn, _) = ctx.rmsnorm_slice(&xc, &self.g[l]);
+            for v in xn.local.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let res = ctx.reshard(
+                &f,
+                xn.layout,
+                cb(xn.layout.row_axis),
+                ctx.static_bounds(dims.d_h, xn.layout.col_axis),
+            );
+            xn.local.add_assign(&res.local);
+            f = xn;
+        }
+        let logits = ctx.mm(&f, &self.w_out);
+
+        // accuracy over val/test splits via the parallel loss machinery
+        let data = self.data.clone();
+        let (_l1, val_acc, _d1) =
+            self.parallel_loss(&logits, |i| data.labels[i], |i| {
+                if data.split[i] == 1 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+        let (_l2, test_acc, _d2) =
+            self.parallel_loss(&logits, |i| data.labels[i], |i| {
+                if data.split[i] == 2 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+        (val_acc, test_acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommWorld;
+    use crate::graph::datasets;
+    use crate::grid::Grid4D;
+    use crate::model;
+    use crate::sampling::induce_rescaled;
+
+    fn tiny_dims() -> GcnDims {
+        GcnDims { d_in: 16, d_h: 16, d_out: 4, layers: 2, dropout: 0.0, weight_decay: 0.0 }
+    }
+
+    /// Run k engine steps on every rank of `grid`; returns per-rank
+    /// (losses, accs, gathered params).
+    fn run_engine(
+        grid: Grid4D,
+        dims: GcnDims,
+        batch: usize,
+        steps: u64,
+        lr: f32,
+        prec: Precision,
+    ) -> Vec<(Vec<f32>, Vec<f32>, Vec<Mat>)> {
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        let world = Arc::new(CommWorld::new(grid));
+        let mut hs = vec![];
+        for r in 0..grid.world_size() {
+            let w = world.clone();
+            let d = data.clone();
+            hs.push(std::thread::spawn(move || {
+                let ctx = super::super::PmmCtx::new(grid, r, &w, prec);
+                let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+                let mut losses = vec![];
+                let mut accs = vec![];
+                for s in 0..steps {
+                    let out = eng.train_step(s, lr);
+                    losses.push(out.loss);
+                    accs.push(out.acc);
+                }
+                let params = eng.gather_params();
+                (losses, accs, params)
+            }));
+        }
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Reference single-process trajectory with the same sampling stream.
+    fn run_reference(dims: GcnDims, batch: usize, steps: u64, lr: f32) -> (Vec<f32>, Vec<Mat>) {
+        let data = datasets::load("tiny").unwrap();
+        let group_seed = crate::util::rng::splitmix64(42 ^ 0xD0);
+        let sampler = UniformVertexSampler::new(data.n, batch, group_seed);
+        let mut params = model::init_params(&dims, 42);
+        let mut opt = model::AdamState::new(&dims);
+        let mut losses = vec![];
+        for s in 0..steps {
+            let sample = sampler.sample(s);
+            let mb = induce_rescaled(&data.adj, &sample, sampler.inclusion_prob());
+            let mut x = Mat::zeros(batch, dims.d_in);
+            for (i, &v) in sample.iter().enumerate() {
+                x.data[i * dims.d_in..(i + 1) * dims.d_in].copy_from_slice(
+                    &data.features.data[v as usize * dims.d_in..(v as usize + 1) * dims.d_in],
+                );
+            }
+            let y: Vec<u32> = sample.iter().map(|&v| data.labels[v as usize]).collect();
+            let w: Vec<f32> = sample
+                .iter()
+                .map(|&v| if data.split[v as usize] == 0 { 1.0 } else { 0.0 })
+                .collect();
+            let masks = vec![Mat::filled(batch, dims.d_h, 1.0); dims.layers];
+            let (l, _a) = model::train_step(
+                &dims, &mut params, &mut opt, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, lr,
+            );
+            losses.push(l);
+        }
+        (losses, params)
+    }
+
+    fn assert_params_close(got: &[Mat], want: &[Mat], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let d = g.max_abs_diff(w);
+            assert!(d < tol, "param {i} max diff {d}");
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_on_1x1x1() {
+        let dims = tiny_dims();
+        let outs = run_engine(Grid4D::new(1, 1, 1, 1), dims, 64, 4, 5e-3, Precision::Fp32);
+        let (ref_losses, ref_params) = run_reference(dims, 64, 4, 5e-3);
+        for (l_got, l_want) in outs[0].0.iter().zip(&ref_losses) {
+            assert!((l_got - l_want).abs() < 1e-4, "{l_got} vs {l_want}");
+        }
+        assert_params_close(&outs[0].2, &ref_params, 1e-4);
+    }
+
+    #[test]
+    fn engine_matches_reference_on_2x2x2() {
+        let dims = tiny_dims();
+        let outs = run_engine(Grid4D::new(1, 2, 2, 2), dims, 64, 3, 5e-3, Precision::Fp32);
+        let (ref_losses, ref_params) = run_reference(dims, 64, 3, 5e-3);
+        for out in &outs {
+            for (l_got, l_want) in out.0.iter().zip(&ref_losses) {
+                assert!((l_got - l_want).abs() < 5e-4, "{l_got} vs {l_want}");
+            }
+            assert_params_close(&out.2, &ref_params, 5e-4);
+        }
+    }
+
+    #[test]
+    fn engine_matches_reference_on_skewed_grids() {
+        let dims = tiny_dims();
+        for grid in [Grid4D::new(1, 4, 1, 1), Grid4D::new(1, 1, 2, 2), Grid4D::new(1, 2, 1, 2)] {
+            let outs = run_engine(grid, dims, 48, 2, 5e-3, Precision::Fp32);
+            let (ref_losses, _) = run_reference(dims, 48, 2, 5e-3);
+            for out in &outs {
+                for (l_got, l_want) in out.0.iter().zip(&ref_losses) {
+                    assert!(
+                        (l_got - l_want).abs() < 5e-4,
+                        "grid {grid:?}: {l_got} vs {l_want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_groups_draw_distinct_batches_and_stay_in_sync() {
+        let dims = tiny_dims();
+        let outs = run_engine(Grid4D::new(2, 1, 1, 1), dims, 48, 3, 5e-3, Precision::Fp32);
+        // different groups see different batches -> different losses
+        assert_ne!(outs[0].0, outs[1].0);
+        // but DP-synchronized params must be identical
+        for (g0, g1) in outs[0].2.iter().zip(&outs[1].2) {
+            assert!(g0.max_abs_diff(g1) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bf16_collectives_stay_close_to_fp32() {
+        let dims = tiny_dims();
+        let f32_out = run_engine(Grid4D::new(1, 2, 1, 1), dims, 48, 3, 5e-3, Precision::Fp32);
+        let bf_out = run_engine(Grid4D::new(1, 2, 1, 1), dims, 48, 3, 5e-3, Precision::Bf16);
+        for (a, b) in f32_out[0].0.iter().zip(&bf_out[0].0) {
+            assert!((a - b).abs() < 0.05, "bf16 loss {b} vs fp32 {a}");
+        }
+    }
+
+    #[test]
+    fn dropout_training_still_converges() {
+        let dims = GcnDims { dropout: 0.3, ..tiny_dims() };
+        let outs = run_engine(Grid4D::new(1, 2, 2, 1), dims, 64, 12, 5e-3, Precision::Fp32);
+        let losses = &outs[0].0;
+        assert!(
+            losses[9..].iter().sum::<f32>() / 3.0 < losses[..3].iter().sum::<f32>() / 3.0,
+            "{losses:?}"
+        );
+    }
+
+    #[test]
+    fn eval_full_graph_matches_reference_eval() {
+        let dims = tiny_dims();
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        // reference eval accuracy with the same (seed 42) init params
+        let params = model::init_params(&dims, 42);
+        let (logits, _) = model::forward(&dims, &params, &data.adj, &data.features, None);
+        let y: Vec<u32> = data.labels.clone();
+        let wtest: Vec<f32> = data
+            .split
+            .iter()
+            .map(|&s| if s == 2 { 1.0 } else { 0.0 })
+            .collect();
+        let (_, want_acc, _) = model::loss_and_grad(&logits, &y, &wtest);
+
+        for grid in [Grid4D::new(1, 1, 1, 1), Grid4D::new(1, 2, 2, 2)] {
+            let world = Arc::new(CommWorld::new(grid));
+            let mut hs = vec![];
+            for r in 0..grid.world_size() {
+                let w = world.clone();
+                let d = data.clone();
+                hs.push(std::thread::spawn(move || {
+                    let ctx = super::super::PmmCtx::new(grid, r, &w, Precision::Fp32);
+                    let mut eng = PmmGcn::new(ctx, dims, 64, d, 42);
+                    eng.eval_full_graph()
+                }));
+            }
+            for h in hs {
+                let (_val, test) = h.join().unwrap();
+                assert!(
+                    (test - want_acc).abs() < 1e-4,
+                    "grid {grid:?}: {test} vs {want_acc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn timers_accumulate_all_phases() {
+        let dims = tiny_dims();
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let mut hs = vec![];
+        for r in 0..2 {
+            let w = world.clone();
+            let d = data.clone();
+            hs.push(std::thread::spawn(move || {
+                let ctx = super::super::PmmCtx::new(grid, r, &w, Precision::Fp32);
+                let mut eng = PmmGcn::new(ctx, dims, 48, d, 7);
+                eng.train_step(0, 1e-3);
+                eng.timers
+            }));
+        }
+        for h in hs {
+            let t = h.join().unwrap();
+            assert!(t.sampling > 0.0);
+            assert!(t.gemm > 0.0);
+            assert!(t.spmm > 0.0);
+            assert!(t.elementwise > 0.0);
+            assert!(t.tp_comm > 0.0);
+            assert!(t.total() > 0.0);
+        }
+    }
+}

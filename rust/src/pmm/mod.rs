@@ -1,0 +1,597 @@
+//! 3D parallel matrix multiplication engine (paper §IV-C).
+//!
+//! Within one data-parallel group the `Gx x Gy x Gz` ranks hold 2D shards of
+//! every matrix, identified by a `Layout` = (row axis, column axis); the
+//! third axis is the replication/contraction axis.  One PMM matmul computes
+//! the local partial product and all-reduces it over the contraction axis:
+//!
+//! ```text
+//!   mm   : A(r,k) @ B(k,c) -> C(r,c)   all-reduce over k       (Eqs. 27-28)
+//!   mm_ta: A(k,r)^T @ B(k,c) -> C(r,c) all-reduce over k       (Eqs. 13,15,17,18)
+//!   mm_tb: A(r,k) @ B(c,k)^T -> C(r,c) all-reduce over k       (Eqs. 14,16,19)
+//! ```
+//!
+//! **Layer rotation** (§IV-C3): features rotate (X,Y) -> (Z,X) -> (Y,Z) with
+//! period 3; layer `l`'s adjacency shard lives on `(third_l, row_l)` and its
+//! weight shard on `(col_l, row_l)`, so every local multiplication is
+//! layout-aligned with zero extra communication.  Residual adds reshard the
+//! skip tensor (two line all-gathers + slice), as in §IV-C4.
+//!
+//! Row blocks over the compact mini-batch `[0,B)` are *step-dependent*: they
+//! are induced by intersecting the sorted sample S with the static vertex
+//! ranges (Fig. 3), so every rank derives identical bounds with no
+//! communication.  RMSNorm's sum-of-squares is all-reduced over the column
+//! axis (Eq. 29) in FP32 even when BF16 collectives are enabled (§V-B).
+
+use std::sync::Arc;
+
+use crate::comm::{CommWorld, Precision};
+use crate::graph::{block_bounds, Csr};
+use crate::grid::{Axis, Coord, Grid4D};
+use crate::model::RMS_EPS;
+use crate::tensor::Mat;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Shard layout: rows split across `row_axis`, cols across `col_axis`,
+/// replicated along the remaining axis (also the matmul contraction axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub row_axis: Axis,
+    pub col_axis: Axis,
+}
+
+impl Layout {
+    pub fn new(row_axis: Axis, col_axis: Axis) -> Layout {
+        assert_ne!(row_axis, col_axis);
+        Layout { row_axis, col_axis }
+    }
+
+    /// The replication / contraction axis.
+    pub fn third(&self) -> Axis {
+        third(self.row_axis, self.col_axis)
+    }
+}
+
+pub fn third(a: Axis, b: Axis) -> Axis {
+    match (a, b) {
+        (Axis::X, Axis::Y) | (Axis::Y, Axis::X) => Axis::Z,
+        (Axis::X, Axis::Z) | (Axis::Z, Axis::X) => Axis::Y,
+        (Axis::Y, Axis::Z) | (Axis::Z, Axis::Y) => Axis::X,
+        _ => panic!("third() of {a:?},{b:?}"),
+    }
+}
+
+/// Feature layouts per position: F0 = (X,Y), F_{l+1} = (third_l, R_l).
+pub fn feature_layouts(layers: usize) -> Vec<Layout> {
+    let mut v = vec![Layout::new(Axis::X, Axis::Y)];
+    for _ in 0..layers {
+        let prev = *v.last().unwrap();
+        v.push(Layout::new(prev.third(), prev.row_axis));
+    }
+    v
+}
+
+/// A sharded dense matrix: this rank's local block plus the global block
+/// boundaries along both axes.
+#[derive(Clone, Debug)]
+pub struct PmmMat {
+    pub layout: Layout,
+    pub row_bounds: Arc<Vec<usize>>,
+    pub col_bounds: Arc<Vec<usize>>,
+    pub local: Mat,
+}
+
+impl PmmMat {
+    pub fn global_rows(&self) -> usize {
+        *self.row_bounds.last().unwrap()
+    }
+
+    pub fn global_cols(&self) -> usize {
+        *self.col_bounds.last().unwrap()
+    }
+}
+
+/// Per-rank execution context.
+pub struct PmmCtx<'a> {
+    pub grid: Grid4D,
+    pub rank: usize,
+    pub coord: Coord,
+    pub world: &'a CommWorld,
+    /// precision for the PMM matmul all-reduces (§V-B: BF16 optional)
+    pub tp_precision: Precision,
+    /// per-phase wall-clock accumulators; drained by the engine per step
+    pub timers: std::cell::RefCell<PmmTimers>,
+}
+
+impl<'a> PmmCtx<'a> {
+    pub fn new(grid: Grid4D, rank: usize, world: &'a CommWorld, tp: Precision) -> Self {
+        PmmCtx {
+            grid,
+            rank,
+            coord: grid.coord(rank),
+            world,
+            tp_precision: tp,
+            timers: std::cell::RefCell::new(PmmTimers::default()),
+        }
+    }
+
+    /// Take and reset the accumulated phase timers.
+    pub fn drain_timers(&self) -> PmmTimers {
+        std::mem::take(&mut self.timers.borrow_mut())
+    }
+
+    fn time<T>(&self, f: impl FnOnce() -> T, pick: impl FnOnce(&mut PmmTimers) -> &mut f64) -> T {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        *pick(&mut self.timers.borrow_mut()) += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    pub fn axis_coord(&self, a: Axis) -> usize {
+        match a {
+            Axis::X => self.coord.x,
+            Axis::Y => self.coord.y,
+            Axis::Z => self.coord.z,
+            Axis::Dp => self.coord.d,
+        }
+    }
+
+    pub fn axis_size(&self, a: Axis) -> usize {
+        self.grid.axis_size(a)
+    }
+
+    /// This rank's block range along `axis` given the bounds vector.
+    pub fn my_block<'b>(&self, bounds: &'b [usize], axis: Axis) -> (usize, usize) {
+        let i = self.axis_coord(axis);
+        (bounds[i], bounds[i + 1])
+    }
+
+    /// Equal-split bounds of a static dimension along `axis`.
+    pub fn static_bounds(&self, n: usize, axis: Axis) -> Arc<Vec<usize>> {
+        Arc::new(block_bounds(n, self.axis_size(axis)))
+    }
+
+    /// Shard a replicated global matrix into this rank's block.
+    pub fn shard_from_global(&self, global: &Mat, layout: Layout) -> PmmMat {
+        let rb = self.static_bounds(global.rows, layout.row_axis);
+        let cb = self.static_bounds(global.cols, layout.col_axis);
+        let (r0, r1) = self.my_block(&rb, layout.row_axis);
+        let (c0, c1) = self.my_block(&cb, layout.col_axis);
+        PmmMat { layout, row_bounds: rb, col_bounds: cb, local: global.slice(r0, r1, c0, c1) }
+    }
+
+    fn all_reduce(&self, axis: Axis, data: &mut [f32], prec: Precision) {
+        let dp = axis == Axis::Dp;
+        self.time(
+            || self.world.all_reduce(self.rank, axis, data, prec),
+            |t| if dp { &mut t.dp_comm } else { &mut t.tp_comm },
+        );
+    }
+
+    /// mm: A(r,k) @ B(k,c) -> C(r,c), all-reduce over k.
+    pub fn mm(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
+        let k_axis = a.layout.col_axis;
+        assert_eq!(k_axis, b.layout.row_axis, "contraction axes must match");
+        let out_layout = Layout::new(a.layout.row_axis, b.layout.col_axis);
+        debug_assert_eq!(a.col_bounds.as_slice(), b.row_bounds.as_slice());
+        let mut c = self.time(|| a.local.matmul(&b.local), |t| &mut t.gemm);
+        self.all_reduce(k_axis, &mut c.data, self.tp_precision);
+        PmmMat {
+            layout: out_layout,
+            row_bounds: a.row_bounds.clone(),
+            col_bounds: b.col_bounds.clone(),
+            local: c,
+        }
+    }
+
+    /// mm_ta: A(k,r)^T @ B(k,c) -> C(r,c), all-reduce over k.
+    pub fn mm_ta(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
+        let k_axis = a.layout.row_axis;
+        assert_eq!(k_axis, b.layout.row_axis);
+        let out_layout = Layout::new(a.layout.col_axis, b.layout.col_axis);
+        debug_assert_eq!(a.row_bounds.as_slice(), b.row_bounds.as_slice());
+        let mut c = self.time(|| a.local.t_matmul(&b.local), |t| &mut t.gemm);
+        self.all_reduce(k_axis, &mut c.data, self.tp_precision);
+        PmmMat {
+            layout: out_layout,
+            row_bounds: a.col_bounds.clone(),
+            col_bounds: b.col_bounds.clone(),
+            local: c,
+        }
+    }
+
+    /// mm_tb: A(r,k) @ B(c,k)^T -> C(r,c), all-reduce over k.
+    pub fn mm_tb(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
+        let k_axis = a.layout.col_axis;
+        assert_eq!(k_axis, b.layout.col_axis);
+        let out_layout = Layout::new(a.layout.row_axis, b.layout.row_axis);
+        debug_assert_eq!(a.col_bounds.as_slice(), b.col_bounds.as_slice());
+        let mut c = self.time(|| a.local.matmul_t(&b.local), |t| &mut t.gemm);
+        self.all_reduce(k_axis, &mut c.data, self.tp_precision);
+        PmmMat {
+            layout: out_layout,
+            row_bounds: a.row_bounds.clone(),
+            col_bounds: b.row_bounds.clone(),
+            local: c,
+        }
+    }
+
+    /// Sparse mm: A_csr(r,k) @ B(k,c) with A a local CSR block whose column
+    /// ids are GLOBAL over the k dimension (Eq. 27).
+    pub fn spmm(
+        &self,
+        a_local: &Csr,
+        a_row_bounds: &Arc<Vec<usize>>,
+        row_axis: Axis,
+        k_axis: Axis,
+        b: &PmmMat,
+    ) -> PmmMat {
+        assert_eq!(k_axis, b.layout.row_axis);
+        let (k0, _k1) = self.my_block(&b.row_bounds, k_axis);
+        let d = b.local.cols;
+        let mut out = Mat::zeros(a_local.rows, d);
+        self.time(
+            || {
+                for r in 0..a_local.rows {
+                    let (cs, vs) = a_local.row(r);
+                    let orow = &mut out.data[r * d..(r + 1) * d];
+                    for (&c, &v) in cs.iter().zip(vs) {
+                        let br = c as usize - k0;
+                        let brow = &b.local.data[br * d..(br + 1) * d];
+                        for j in 0..d {
+                            orow[j] += v * brow[j];
+                        }
+                    }
+                }
+            },
+            |t| &mut t.spmm,
+        );
+        self.all_reduce(k_axis, &mut out.data, self.tp_precision);
+        PmmMat {
+            layout: Layout::new(row_axis, b.layout.col_axis),
+            row_bounds: a_row_bounds.clone(),
+            col_bounds: b.col_bounds.clone(),
+            local: out,
+        }
+    }
+
+    /// Transposed sparse mm: A_csr(k,r)^T @ B(k,c) (Eq. 17): scatter rows of
+    /// B through the transposed edges.  The output row space is A's column
+    /// (global) dimension restricted to this rank's `r_axis` block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_ta(
+        &self,
+        a_local: &Csr,
+        out_row_bounds: &Arc<Vec<usize>>,
+        out_row_axis: Axis,
+        k_axis: Axis,
+        b: &PmmMat,
+    ) -> PmmMat {
+        assert_eq!(k_axis, b.layout.row_axis);
+        let (o0, o1) = self.my_block(&out_row_bounds, out_row_axis);
+        let d = b.local.cols;
+        let mut out = Mat::zeros(o1 - o0, d);
+        debug_assert_eq!(a_local.rows, b.local.rows);
+        self.time(
+            || {
+                for r in 0..a_local.rows {
+                    let (cs, vs) = a_local.row(r);
+                    let brow = &b.local.data[r * d..(r + 1) * d];
+                    for (&c, &v) in cs.iter().zip(vs) {
+                        let or = c as usize - o0;
+                        let orow = &mut out.data[or * d..(or + 1) * d];
+                        for j in 0..d {
+                            orow[j] += v * brow[j];
+                        }
+                    }
+                }
+            },
+            |t| &mut t.spmm,
+        );
+        self.all_reduce(k_axis, &mut out.data, self.tp_precision);
+        PmmMat {
+            layout: Layout::new(out_row_axis, b.layout.col_axis),
+            row_bounds: out_row_bounds.clone(),
+            col_bounds: b.col_bounds.clone(),
+            local: out,
+        }
+    }
+
+    /// Parallel RMSNorm with learned scale (Eq. 29): the sum of squares is
+    /// all-reduced across the column axis in FP32.  Returns (out, inv_rms).
+    /// `g` is this rank's slice of the scale vector over the column axis.
+    pub fn rmsnorm_slice(&self, x: &PmmMat, g: &[f32]) -> (PmmMat, Vec<f32>) {
+        assert_eq!(g.len(), x.local.cols);
+        let dh = x.global_cols();
+        let rows = x.local.rows;
+        let mut sumsq: Vec<f32> = self.time(
+            || {
+                (0..rows)
+                    .map(|r| x.local.row(r).iter().map(|v| v * v).sum())
+                    .collect()
+            },
+            |t| &mut t.elementwise,
+        );
+        // numerically sensitive: always FP32 (§V-B)
+        self.all_reduce(x.layout.col_axis, &mut sumsq, Precision::Fp32);
+        let inv: Vec<f32> = sumsq.iter().map(|&s| 1.0 / (s / dh as f32 + RMS_EPS).sqrt()).collect();
+        let mut out = x.clone();
+        self.time(
+            || {
+                for r in 0..rows {
+                    let orow = &mut out.local.data[r * x.local.cols..(r + 1) * x.local.cols];
+                    for j in 0..x.local.cols {
+                        orow[j] *= inv[r] * g[j];
+                    }
+                }
+            },
+            |t| &mut t.elementwise,
+        );
+        (out, inv)
+    }
+
+    /// As `rmsnorm_slice` but with the scale carried as a sharded matrix.
+    pub fn rmsnorm(&self, x: &PmmMat, g: &PmmMat) -> (PmmMat, Vec<f32>) {
+        self.rmsnorm_slice(x, &g.local.data.clone())
+    }
+
+    /// Reshard `m` to `new_layout` (row/col bounds given) by two line
+    /// all-gathers + slice (§IV-C4 residual resharding).
+    pub fn reshard(
+        &self,
+        m: &PmmMat,
+        new_layout: Layout,
+        new_rb: Arc<Vec<usize>>,
+        new_cb: Arc<Vec<usize>>,
+    ) -> PmmMat {
+        // gather along current row axis -> full rows of my column strip
+        let row_parts = self.time(
+            || self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data),
+            |t| &mut t.reshard,
+        );
+        let cols_local = m.local.cols;
+        let mut strip = Mat::zeros(m.global_rows(), cols_local);
+        for (i, part) in row_parts.iter().enumerate() {
+            let (r0, r1) = (m.row_bounds[i], m.row_bounds[i + 1]);
+            debug_assert_eq!(part.len(), (r1 - r0) * cols_local);
+            strip.data[r0 * cols_local..r1 * cols_local].copy_from_slice(part);
+        }
+        // gather strips along current col axis -> full matrix
+        let col_parts = self.time(
+            || self.world.all_gather(self.rank, m.layout.col_axis, &strip.data),
+            |t| &mut t.reshard,
+        );
+        let mut full = Mat::zeros(m.global_rows(), m.global_cols());
+        for (i, part) in col_parts.iter().enumerate() {
+            let (c0, c1) = (m.col_bounds[i], m.col_bounds[i + 1]);
+            let w = c1 - c0;
+            for r in 0..full.rows {
+                full.data[r * full.cols + c0..r * full.cols + c1]
+                    .copy_from_slice(&part[r * w..(r + 1) * w]);
+            }
+        }
+        // slice my new block
+        let (r0, r1) = self.my_block(&new_rb, new_layout.row_axis);
+        let (c0, c1) = self.my_block(&new_cb, new_layout.col_axis);
+        PmmMat {
+            layout: new_layout,
+            row_bounds: new_rb,
+            col_bounds: new_cb,
+            local: full.slice(r0, r1, c0, c1),
+        }
+    }
+
+    /// Gather a sharded matrix into the full global matrix (tests/eval).
+    pub fn gather_global(&self, m: &PmmMat) -> Mat {
+        let row_parts = self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data);
+        let cols_local = m.local.cols;
+        let mut strip = Mat::zeros(m.global_rows(), cols_local);
+        for (i, part) in row_parts.iter().enumerate() {
+            let (r0, r1) = (m.row_bounds[i], m.row_bounds[i + 1]);
+            strip.data[r0 * cols_local..r1 * cols_local].copy_from_slice(part);
+        }
+        let col_parts = self.world.all_gather(self.rank, m.layout.col_axis, &strip.data);
+        let mut full = Mat::zeros(m.global_rows(), m.global_cols());
+        for (i, part) in col_parts.iter().enumerate() {
+            let (c0, c1) = (m.col_bounds[i], m.col_bounds[i + 1]);
+            let w = c1 - c0;
+            for r in 0..full.rows {
+                full.data[r * full.cols + c0..r * full.cols + c1]
+                    .copy_from_slice(&part[r * w..(r + 1) * w]);
+            }
+        }
+        full
+    }
+}
+
+/// Deterministic dropout mask for a shard: every replica (and every rank
+/// holding the same block) derives identical values because the stream is
+/// keyed on (seed, step, layer, block coordinates) only.
+pub fn shard_dropout_mask(
+    seed: u64,
+    step: u64,
+    layer: usize,
+    rows: usize,
+    cols: usize,
+    row_off: usize,
+    col_off: usize,
+    global_cols: usize,
+    dropout: f32,
+) -> Mat {
+    let keep = 1.0 - dropout;
+    let mut m = Mat::zeros(rows, cols);
+    for r in 0..rows {
+        // one RNG per global row so any row partition sees the same stream
+        let key = splitmix64(seed ^ step.wrapping_mul(0x9E37_79B9))
+            ^ ((layer as u64) << 48)
+            ^ ((row_off + r) as u64).wrapping_mul(0xD129_42FD);
+        let mut rng = Rng::new(key);
+        // advance to the column offset (cheap: one draw per column)
+        for _ in 0..col_off {
+            rng.f32();
+        }
+        let mrow = &mut m.data[r * cols..(r + 1) * cols];
+        for v in mrow.iter_mut() {
+            if rng.f32() < keep {
+                *v = 1.0 / keep;
+            }
+        }
+    }
+    let _ = global_cols;
+    m
+}
+
+// Re-export the submodule with the full GCN engine.
+mod engine;
+pub use engine::{PmmGcn, PmmStepOutput, PmmTimers};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommWorld;
+    use crate::grid::Grid4D;
+
+    /// Run the same closure on every rank thread of a 3D grid.
+    fn run_grid<F, T>(grid: Grid4D, f: F) -> Vec<T>
+    where
+        F: Fn(PmmCtx) -> T + Send + Sync + 'static,
+        T: Send + 'static,
+    {
+        let world = Arc::new(CommWorld::new(grid));
+        let f = Arc::new(f);
+        let mut hs = vec![];
+        for r in 0..grid.world_size() {
+            let w = world.clone();
+            let f = f.clone();
+            hs.push(std::thread::spawn(move || {
+                f(PmmCtx::new(grid, r, &w, Precision::Fp32))
+            }));
+        }
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn global_mats(seed: u64, m: usize, k: usize, n: usize) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::randn(m, k, &mut rng, 1.0), Mat::randn(k, n, &mut rng, 1.0))
+    }
+
+    #[test]
+    fn feature_layouts_have_period_three() {
+        let ls = feature_layouts(6);
+        assert_eq!(ls[0], Layout::new(Axis::X, Axis::Y));
+        assert_eq!(ls[1], Layout::new(Axis::Z, Axis::X));
+        assert_eq!(ls[2], Layout::new(Axis::Y, Axis::Z));
+        assert_eq!(ls[3], ls[0]);
+        assert_eq!(ls[4], ls[1]);
+    }
+
+    #[test]
+    fn mm_matches_serial_on_2x2x2() {
+        let grid = Grid4D::new(1, 2, 2, 2);
+        let (a, b) = global_mats(1, 12, 10, 8);
+        let want = a.matmul(&b);
+        let aa = a.clone();
+        let bb = b.clone();
+        let outs = run_grid(grid, move |ctx| {
+            let pa = ctx.shard_from_global(&aa, Layout::new(Axis::X, Axis::Y));
+            let pb = ctx.shard_from_global(&bb, Layout::new(Axis::Y, Axis::Z));
+            let c = ctx.mm(&pa, &pb);
+            assert_eq!(c.layout, Layout::new(Axis::X, Axis::Z));
+            ctx.gather_global(&c)
+        });
+        for o in outs {
+            assert!(o.allclose(&want, 1e-3, 1e-3), "diff {}", o.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn mm_ta_and_tb_match_serial() {
+        let grid = Grid4D::new(1, 2, 1, 2);
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(10, 6, &mut rng, 1.0);
+        let b = Mat::randn(10, 8, &mut rng, 1.0);
+        let want_ta = a.t_matmul(&b);
+        let aa = a.clone();
+        let bb = b.clone();
+        let outs = run_grid(grid, move |ctx| {
+            let pa = ctx.shard_from_global(&aa, Layout::new(Axis::X, Axis::Z));
+            let pb = ctx.shard_from_global(&bb, Layout::new(Axis::X, Axis::Y));
+            let c = ctx.mm_ta(&pa, &pb);
+            assert_eq!(c.layout, Layout::new(Axis::Z, Axis::Y));
+            ctx.gather_global(&c)
+        });
+        for o in outs {
+            assert!(o.allclose(&want_ta, 1e-3, 1e-3));
+        }
+
+        let (a2, b2t) = global_mats(3, 9, 7, 5); // a2: 9x7 ; b2t: 7x5 -> b2: 5x7
+        let b2 = b2t.transpose();
+        let want_tb = a2.matmul_t(&b2);
+        let outs = run_grid(Grid4D::new(1, 2, 2, 1), move |ctx| {
+            let pa = ctx.shard_from_global(&a2, Layout::new(Axis::X, Axis::Y));
+            let pb = ctx.shard_from_global(&b2, Layout::new(Axis::Z, Axis::Y));
+            let c = ctx.mm_tb(&pa, &pb);
+            assert_eq!(c.layout, Layout::new(Axis::X, Axis::Z));
+            ctx.gather_global(&c)
+        });
+        for o in outs {
+            assert!(o.allclose(&want_tb, 1e-3, 1e-3));
+        }
+    }
+
+    #[test]
+    fn rmsnorm_matches_serial() {
+        let grid = Grid4D::new(1, 2, 2, 1);
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(8, 12, &mut rng, 1.5);
+        let g = Mat::randn(1, 12, &mut rng, 0.5);
+        let (want, _) = crate::tensor::rmsnorm(&x, g.row(0), RMS_EPS);
+        let xx = x.clone();
+        let gg = g.clone();
+        let outs = run_grid(grid, move |ctx| {
+            let px = ctx.shard_from_global(&xx, Layout::new(Axis::X, Axis::Y));
+            let pg = ctx.shard_from_global(&gg, Layout::new(Axis::Z, Axis::Y));
+            let (out, _) = ctx.rmsnorm(&px, &pg);
+            ctx.gather_global(&out)
+        });
+        for o in outs {
+            assert!(o.allclose(&want, 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn reshard_preserves_content() {
+        let grid = Grid4D::new(1, 2, 2, 2);
+        let mut rng = Rng::new(5);
+        let x = Mat::randn(10, 6, &mut rng, 1.0);
+        let xx = x.clone();
+        let outs = run_grid(grid, move |ctx| {
+            let px = ctx.shard_from_global(&xx, Layout::new(Axis::X, Axis::Y));
+            let new_layout = Layout::new(Axis::Z, Axis::X);
+            let rb = ctx.static_bounds(10, Axis::Z);
+            let cb = ctx.static_bounds(6, Axis::X);
+            let moved = ctx.reshard(&px, new_layout, rb, cb);
+            ctx.gather_global(&moved)
+        });
+        for o in outs {
+            assert!(o.allclose(&x, 1e-6, 0.0));
+        }
+    }
+
+    #[test]
+    fn shard_dropout_mask_is_partition_invariant() {
+        // mask generated over a whole block equals the concatenation of the
+        // masks of its sub-blocks (row and column splits)
+        let full = shard_dropout_mask(9, 3, 1, 8, 10, 0, 0, 10, 0.5);
+        let top = shard_dropout_mask(9, 3, 1, 4, 10, 0, 0, 10, 0.5);
+        let bottom = shard_dropout_mask(9, 3, 1, 4, 10, 4, 0, 10, 0.5);
+        assert_eq!(&full.data[..40], &top.data[..]);
+        assert_eq!(&full.data[40..], &bottom.data[..]);
+        let left = shard_dropout_mask(9, 3, 1, 8, 4, 0, 0, 10, 0.5);
+        let right = shard_dropout_mask(9, 3, 1, 8, 6, 0, 4, 10, 0.5);
+        for r in 0..8 {
+            assert_eq!(&full.data[r * 10..r * 10 + 4], left.row(r));
+            assert_eq!(&full.data[r * 10 + 4..r * 10 + 10], right.row(r));
+        }
+    }
+}

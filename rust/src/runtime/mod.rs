@@ -1,0 +1,380 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`).  The
+//! manifest written by `python/compile/aot.py` provides shapes/dtypes and
+//! the model parameter layout, so the coordinator can pack inputs and
+//! unpack the returned tuple without any Python at run time.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): every worker thread constructs
+//! its own `Runtime`.  The CPU PJRT backend itself is thread-safe; the
+//! per-thread wrapper only costs one client handle and one compile per
+//! artifact per thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "uint32" => Ok(DType::U32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub model: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model metadata mirrored from `python/compile/model.py::ModelConfig`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub batch: usize,
+    pub d_in: usize,
+    pub d_h: usize,
+    pub d_out: usize,
+    pub layers: usize,
+    pub dropout: f32,
+    /// padded edge-list capacity of the sparse-SpMM artifacts (0 = dense)
+    pub edge_cap: usize,
+    pub n_params: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_names: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn param_elems(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub models: HashMap<String, ModelMeta>,
+}
+
+fn spec_from_json(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        shape: j
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        dtype: DType::parse(j.get("dtype").and_then(|d| d.as_str()).unwrap_or("?"))?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut m = Manifest::default();
+        for a in j.get("artifacts").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
+                .iter()
+                .map(spec_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name}: no outputs"))?
+                .iter()
+                .map(spec_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            m.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .unwrap_or(&format!("{name}.hlo.txt"))
+                        .to_string(),
+                    family: a.get("family").and_then(|f| f.as_str()).unwrap_or("").to_string(),
+                    model: a.get("model").and_then(|f| f.as_str()).map(str::to_string),
+                    name,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        if let Some(models) = j.get("models").and_then(|m| m.as_obj()) {
+            for (name, mj) in models {
+                let get = |k: &str| -> usize {
+                    mj.get(k).and_then(|v| v.as_usize()).unwrap_or(0)
+                };
+                let param_shapes: Vec<Vec<usize>> = mj
+                    .get("param_shapes")
+                    .and_then(|s| s.as_arr())
+                    .map(|arr| arr.iter().filter_map(|x| x.as_usize_vec()).collect())
+                    .unwrap_or_default();
+                let param_names: Vec<String> = mj
+                    .get("param_names")
+                    .and_then(|s| s.as_arr())
+                    .map(|arr| {
+                        arr.iter().filter_map(|x| x.as_str().map(str::to_string)).collect()
+                    })
+                    .unwrap_or_default();
+                m.models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        name: name.clone(),
+                        batch: get("batch"),
+                        d_in: get("d_in"),
+                        d_h: get("d_h"),
+                        d_out: get("d_out"),
+                        layers: get("layers"),
+                        edge_cap: get("edge_cap"),
+                        dropout: mj
+                            .get("dropout")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(0.0) as f32,
+                        n_params: param_shapes.len(),
+                        param_shapes,
+                        param_names,
+                    },
+                );
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with packed literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        // artifacts are lowered with return_tuple=True
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Per-thread PJRT runtime with an executable cache.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (default `artifacts/`), parse the manifest, create the
+    /// CPU PJRT client.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { dir: dir.to_path_buf(), manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal pack/unpack helpers
+// ---------------------------------------------------------------------------
+
+/// f32 tensor literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_u32(data: &[u32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 tensor.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract the scalar f32 value of a rank-0 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the workspace root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses_and_has_models() {
+        let m = Manifest::load(&artifacts_dir()).expect("make artifacts first");
+        assert!(m.artifacts.contains_key("train_step_tiny"));
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.batch, 32);
+        assert_eq!(tiny.n_params, 2 + 2 * tiny.layers);
+        assert_eq!(tiny.param_shapes[0], vec![tiny.d_in, tiny.d_h]);
+        assert_eq!(tiny.param_names[0], "w_in");
+    }
+
+    #[test]
+    fn train_step_spec_shapes_are_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = &m.artifacts["train_step_tiny"];
+        let mm = &m.models["tiny"];
+        // src, dst, val, x, y, wmask, key, lr, t + 3 x n_params state
+        assert_eq!(a.inputs.len(), 9 + 3 * mm.n_params);
+        assert!(mm.edge_cap > 0);
+        assert_eq!(a.inputs[0].shape, vec![mm.edge_cap]);
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(a.inputs[2].dtype, DType::F32);
+        assert_eq!(a.inputs[3].shape, vec![mm.batch, mm.d_in]);
+        assert_eq!(a.inputs[6].dtype, DType::U32);
+        // loss, acc, t, then params/m/v
+        assert_eq!(a.outputs.len(), 3 + 3 * mm.n_params);
+        // the dense variant keeps the B x B adjacency (TPU schedule)
+        let ad = &m.artifacts["train_step_tiny_dense"];
+        let md = &m.models["tiny_dense"];
+        assert_eq!(ad.inputs[0].shape, vec![md.batch, md.batch]);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        assert!(rt.load("nope").is_err());
+    }
+
+    #[test]
+    fn local_gemm_executes_correctly() {
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let exe = rt.load("local_gemm_256x64x64").unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = crate::tensor::Mat::randn(256, 64, &mut rng, 1.0);
+        let b = crate::tensor::Mat::randn(64, 64, &mut rng, 1.0);
+        let out = exe
+            .run(&[
+                lit_f32(&a.data, &[256, 64]).unwrap(),
+                lit_f32(&b.data, &[64, 64]).unwrap(),
+            ])
+            .unwrap();
+        let got = crate::tensor::Mat::from_vec(256, 64, to_f32(&out[0]).unwrap());
+        let want = a.matmul(&b);
+        assert!(got.allclose(&want, 1e-3, 1e-3), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn executable_cache_returns_same_instance() {
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let a = rt.load("local_gemm_256x64x64").unwrap();
+        let b = rt.load("local_gemm_256x64x64").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let exe = rt.load("local_gemm_256x64x64").unwrap();
+        assert!(exe.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,406 @@
+//! Baseline sampling algorithms for the Table I accuracy comparison:
+//! GraphSAGE-style node-wise neighbor sampling [8] and GraphSAINT node
+//! sampling [12].
+//!
+//! Both are adapted to the shared fixed-shape execution engine (a `B x B`
+//! adjacency + per-vertex loss weights), which is how they differ
+//! *algorithmically* from ScaleGNN's uniform vertex sampling while sharing
+//! the model, optimizer, and artifacts:
+//!
+//! * **GraphSAGE** samples target vertices plus up to `fanout` neighbors per
+//!   layer; the union (truncated/padded to `B`) forms the batch, aggregation
+//!   uses only sampled edges (mean-normalized), and ONLY targets carry loss.
+//!   Neighbor truncation at fixed `B` is exactly the neighborhood-explosion
+//!   pathology the paper describes (§II-B).
+//! * **GraphSAINT (node variant)** samples vertices with probability
+//!   proportional to degree, keeps the induced subgraph, and corrects bias
+//!   through edge normalization `a_uv / (q_u B)` and loss normalization
+//!   `1 / (q_v B)` as in the GraphSAINT estimators.
+//!
+//! ScaleGNN's sampler is in `uniform.rs`/`distributed.rs`; all three emit
+//! the same `SampledBatch` consumed by the trainer.
+
+use crate::graph::{Csr, Dataset};
+use crate::util::rng::Rng;
+
+/// A mini-batch in the execution engine's fixed shape.
+pub struct SampledBatch {
+    /// exactly B vertex ids (padding repeats an arbitrary vertex with zero
+    /// loss weight and no edges)
+    pub vertices: Vec<u32>,
+    /// B x B adjacency in the compact namespace
+    pub adj: Csr,
+    /// per-slot loss weight (0 for padding / non-targets; GraphSAINT uses
+    /// continuous importance weights)
+    pub loss_weight: Vec<f32>,
+}
+
+/// Strategy selector shared by the trainer and the benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    ScaleGnnUniform,
+    GraphSage,
+    GraphSaintNode,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "scalegnn" | "uniform" => Some(SamplerKind::ScaleGnnUniform),
+            "graphsage" | "sage" => Some(SamplerKind::GraphSage),
+            "graphsaint" | "saint" => Some(SamplerKind::GraphSaintNode),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::ScaleGnnUniform => "ScaleGNN",
+            SamplerKind::GraphSage => "GraphSAGE",
+            SamplerKind::GraphSaintNode => "GraphSAINT (node)",
+        }
+    }
+}
+
+/// GraphSAGE node-wise neighbor sampling.
+pub struct GraphSageSampler {
+    pub batch: usize,
+    pub targets_per_batch: usize,
+    pub fanout: usize,
+    pub layers: usize,
+    pub seed: u64,
+}
+
+impl GraphSageSampler {
+    pub fn new(batch: usize, layers: usize, seed: u64) -> Self {
+        // pick targets/fanout so the expected L-hop union roughly fills B
+        let fanout = 5usize;
+        let mut expansion = 1usize;
+        let mut per_target = 1usize;
+        for _ in 0..layers {
+            expansion *= fanout;
+            per_target += expansion;
+        }
+        GraphSageSampler {
+            batch,
+            targets_per_batch: (batch / per_target).max(1),
+            fanout,
+            layers,
+            seed,
+        }
+    }
+
+    pub fn sample(&self, data: &Dataset, step: u64, train_only: bool) -> SampledBatch {
+        let mut rng = Rng::for_step(self.seed ^ 0x5A6E, step);
+        let n = data.n;
+        let b = self.batch;
+
+        // frontier-wise expansion: targets, then sampled neighbors per layer
+        let mut chosen: Vec<u32> = Vec::with_capacity(b);
+        let mut in_batch = std::collections::HashMap::<u32, u32>::new();
+        let push = |v: u32, chosen: &mut Vec<u32>, in_batch: &mut std::collections::HashMap<u32, u32>| -> Option<u32> {
+            if let Some(&i) = in_batch.get(&v) {
+                return Some(i);
+            }
+            if chosen.len() >= b {
+                return None; // truncation: neighborhood explosion hits the cap
+            }
+            let idx = chosen.len() as u32;
+            chosen.push(v);
+            in_batch.insert(v, idx);
+            Some(idx)
+        };
+
+        let mut targets = Vec::with_capacity(self.targets_per_batch);
+        let mut guard = 0;
+        while targets.len() < self.targets_per_batch && guard < 50 * self.targets_per_batch {
+            guard += 1;
+            let v = rng.below(n as u64) as u32;
+            if train_only && data.split[v as usize] != 0 {
+                continue;
+            }
+            if push(v, &mut chosen, &mut in_batch).is_some() {
+                targets.push(v);
+            }
+        }
+        let n_targets = targets.len();
+
+        // sampled edges (directed v <- u aggregation)
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let mut frontier: Vec<u32> = targets.clone();
+        for _ in 0..self.layers {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                let (nbrs, _) = data.raw_adj.row(v as usize);
+                if nbrs.is_empty() {
+                    continue;
+                }
+                for _ in 0..self.fanout.min(nbrs.len()) {
+                    let u = nbrs[rng.below(nbrs.len() as u64) as usize];
+                    let vi = in_batch[&v];
+                    if let Some(ui) = push(u, &mut chosen, &mut in_batch) {
+                        edges.push((vi, ui));
+                        next.push(u);
+                    }
+                }
+            }
+            frontier = next;
+            if frontier.is_empty() {
+                break;
+            }
+        }
+
+        // pad to exactly B with loss-less, edge-less slots
+        let pad_v = chosen.first().copied().unwrap_or(0);
+        while chosen.len() < b {
+            chosen.push(pad_v);
+        }
+
+        // mean-normalized sampled adjacency + self loops
+        edges.sort_unstable();
+        edges.dedup();
+        let mut deg = vec![0usize; b];
+        for &(v, _) in &edges {
+            deg[v as usize] += 1;
+        }
+        let mut triples: Vec<(u32, u32, f32)> = Vec::with_capacity(edges.len() + b);
+        for &(v, u) in &edges {
+            triples.push((v, u, 1.0 / (deg[v as usize] + 1) as f32));
+        }
+        for v in 0..b as u32 {
+            triples.push((v, v, 1.0 / (deg[v as usize] + 1) as f32));
+        }
+
+        let mut loss_weight = vec![0.0f32; b];
+        for t in 0..n_targets {
+            loss_weight[t] = 1.0; // targets were pushed first
+        }
+
+        SampledBatch {
+            vertices: chosen,
+            adj: Csr::from_triples(b, b, triples),
+            loss_weight,
+        }
+    }
+}
+
+/// GraphSAINT node sampling with the standard bias-correcting estimators.
+pub struct GraphSaintNodeSampler {
+    pub batch: usize,
+    pub seed: u64,
+    /// per-vertex sampling probability q_v (prop. to degree), precomputed
+    q: Vec<f32>,
+    /// alias-free cumulative distribution for O(log n) draws
+    cdf: Vec<f64>,
+}
+
+impl GraphSaintNodeSampler {
+    pub fn new(data: &Dataset, batch: usize, seed: u64) -> Self {
+        let deg: Vec<f64> = data.raw_adj.degrees().iter().map(|&d| (d + 1) as f64).collect();
+        let total: f64 = deg.iter().sum();
+        let mut cdf = Vec::with_capacity(deg.len());
+        let mut acc = 0.0;
+        for &d in &deg {
+            acc += d;
+            cdf.push(acc / total);
+        }
+        // q_v = P[v in batch] ~= 1 - (1 - d_v/total)^B ~ B d_v / total (small)
+        let q: Vec<f32> = deg
+            .iter()
+            .map(|&d| {
+                let per_draw = d / total;
+                (1.0 - (1.0 - per_draw).powi(batch as i32)).max(1e-9) as f32
+            })
+            .collect();
+        GraphSaintNodeSampler { batch, seed, q, cdf }
+    }
+
+    pub fn sample(&self, data: &Dataset, step: u64) -> SampledBatch {
+        let mut rng = Rng::for_step(self.seed ^ 0x5417, step);
+        let b = self.batch;
+        // B draws with replacement, prob ~ degree; dedupe
+        let mut s: Vec<u32> = (0..b)
+            .map(|_| {
+                let u = rng.f64();
+                self.cdf.partition_point(|&c| c < u) as u32
+            })
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+
+        // induced subgraph with GraphSAINT normalizations
+        let mut triples = Vec::new();
+        for (si, &v) in s.iter().enumerate() {
+            let (cs, vs) = data.adj.row(v as usize);
+            let mut ci = 0usize;
+            for (&c, &w) in cs.iter().zip(vs) {
+                while ci < s.len() && s[ci] < c {
+                    ci += 1;
+                }
+                if ci < s.len() && s[ci] == c {
+                    // edge estimator: divide by the neighbor's inclusion prob
+                    let corr = if c == v { 1.0 } else { self.q[c as usize] };
+                    triples.push((si as u32, ci as u32, w / corr));
+                }
+            }
+        }
+
+        // loss normalization 1/q_v (then mean-normalized by the trainer's
+        // weighted loss denominator)
+        let mut loss_weight = vec![0.0f32; b];
+        for (si, &v) in s.iter().enumerate() {
+            loss_weight[si] = 1.0 / self.q[v as usize];
+        }
+        // normalize weights to mean ~1 over real slots for stable LR
+        let mean: f32 = loss_weight.iter().sum::<f32>() / s.len() as f32;
+        for w in loss_weight.iter_mut() {
+            *w /= mean;
+        }
+
+        let pad_v = s.first().copied().unwrap_or(0);
+        let mut vertices = s.clone();
+        while vertices.len() < b {
+            vertices.push(pad_v);
+        }
+
+        SampledBatch {
+            vertices,
+            adj: Csr::from_triples(b, b, triples),
+            loss_weight,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn tiny() -> Dataset {
+        datasets::load("tiny").unwrap()
+    }
+
+    #[test]
+    fn sage_batch_has_fixed_shape_and_targets_first() {
+        let d = tiny();
+        let s = GraphSageSampler::new(32, 2, 1);
+        let mb = s.sample(&d, 0, false);
+        assert_eq!(mb.vertices.len(), 32);
+        assert_eq!(mb.adj.rows, 32);
+        let targets: usize = mb.loss_weight.iter().filter(|&&w| w > 0.0).count();
+        assert!(targets >= 1 && targets <= s.targets_per_batch);
+        // targets occupy the leading slots
+        for i in 0..targets {
+            assert!(mb.loss_weight[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn sage_edges_connect_true_neighbors() {
+        let d = tiny();
+        let s = GraphSageSampler::new(32, 2, 2);
+        let mb = s.sample(&d, 1, false);
+        for r in 0..32 {
+            let (cs, _) = mb.adj.row(r);
+            for &c in cs {
+                if c as usize == r {
+                    continue; // self loop
+                }
+                let (v, u) = (mb.vertices[r], mb.vertices[c as usize]);
+                assert!(
+                    d.raw_adj.has_edge(v as usize, u),
+                    "sampled edge {v}->{u} not in graph"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sage_rows_are_mean_normalized() {
+        let d = tiny();
+        let s = GraphSageSampler::new(32, 2, 3);
+        let mb = s.sample(&d, 2, false);
+        for r in 0..32 {
+            let sum: f32 = mb.adj.row(r).1.iter().sum();
+            if mb.adj.row_nnz(r) > 0 {
+                assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn sage_train_only_targets_are_train_split() {
+        let d = tiny();
+        let s = GraphSageSampler::new(32, 2, 4);
+        let mb = s.sample(&d, 3, true);
+        for (i, &w) in mb.loss_weight.iter().enumerate() {
+            if w > 0.0 {
+                assert_eq!(d.split[mb.vertices[i] as usize], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn saint_prefers_high_degree_vertices() {
+        let d = tiny();
+        let s = GraphSaintNodeSampler::new(&d, 64, 5);
+        let deg = d.raw_adj.degrees();
+        let mut sampled_deg = 0.0f64;
+        let mut count = 0usize;
+        for step in 0..50 {
+            let mb = s.sample(&d, step);
+            for (i, &w) in mb.loss_weight.iter().enumerate() {
+                if w > 0.0 {
+                    sampled_deg += deg[mb.vertices[i] as usize] as f64;
+                    count += 1;
+                }
+            }
+        }
+        let avg_all: f64 = deg.iter().sum::<usize>() as f64 / d.n as f64;
+        assert!(sampled_deg / count as f64 > avg_all, "degree-biased sampling");
+    }
+
+    #[test]
+    fn saint_loss_weights_mean_one() {
+        let d = tiny();
+        let s = GraphSaintNodeSampler::new(&d, 64, 6);
+        let mb = s.sample(&d, 0);
+        let real: Vec<f32> = mb.loss_weight.iter().copied().filter(|&w| w > 0.0).collect();
+        let mean: f32 = real.iter().sum::<f32>() / real.len() as f32;
+        assert!((mean - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn saint_edges_are_induced_and_corrected() {
+        let d = tiny();
+        let s = GraphSaintNodeSampler::new(&d, 64, 7);
+        let mb = s.sample(&d, 1);
+        let dense = d.adj.to_dense();
+        for r in 0..mb.adj.rows {
+            let (cs, vs) = mb.adj.row(r);
+            for (&c, &w) in cs.iter().zip(vs) {
+                let (v, u) = (mb.vertices[r] as usize, mb.vertices[c as usize] as usize);
+                let orig = dense.at(v, u);
+                assert!(orig > 0.0, "induced edge must exist");
+                assert!(w >= orig, "correction only scales up: {w} vs {orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn samplers_are_deterministic_per_step() {
+        let d = tiny();
+        let s = GraphSageSampler::new(32, 2, 8);
+        assert_eq!(s.sample(&d, 4, false).vertices, s.sample(&d, 4, false).vertices);
+        let gs = GraphSaintNodeSampler::new(&d, 64, 9);
+        assert_eq!(gs.sample(&d, 4).vertices, gs.sample(&d, 4).vertices);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(SamplerKind::parse("scalegnn"), Some(SamplerKind::ScaleGnnUniform));
+        assert_eq!(SamplerKind::parse("sage"), Some(SamplerKind::GraphSage));
+        assert_eq!(SamplerKind::parse("saint"), Some(SamplerKind::GraphSaintNode));
+        assert_eq!(SamplerKind::parse("x"), None);
+    }
+}

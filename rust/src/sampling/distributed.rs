@@ -1,0 +1,279 @@
+//! Algorithm 2: distributed subgraph construction, per rank, with zero
+//! inter-rank communication.
+//!
+//! Each rank owns a 2D CSR shard (rows `[R0,R1)`, cols `[C0,C1)` of the
+//! global adjacency).  At every step it independently
+//!   1. derives the shared sorted sample `S` from `(seed, step)` and locates
+//!      its local row/column sub-ranges by binary search,
+//!   2. extracts the sampled CSR rows through a prefix-sum flat-index gather,
+//!   3. filters columns by membership and remaps survivors to the compact
+//!      `[0,B)` namespace via a **step-tagged persistent map** (O(B) updates
+//!      per step instead of an O(N) clear),
+//!   4. rescales off-diagonal weights by `1/p` (Eq. 24) and assembles the
+//!      local CSR block (and, on request, its transpose for Eq. 17).
+
+use crate::graph::{Csr, CsrShard};
+use crate::sampling::uniform::UniformVertexSampler;
+
+/// Per-rank output of Algorithm 2: a block of the compact `B x B`
+/// mini-batch adjacency.
+#[derive(Debug)]
+pub struct LocalSubgraph {
+    /// the full sorted sample (identical on every rank)
+    pub sample: Vec<u32>,
+    /// compact row range [row_lo, row_hi): rows of the B x B matrix owned
+    /// by this rank (S[row_lo..row_hi] fall in the shard's [R0,R1))
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// compact column range [col_lo, col_hi)
+    pub col_lo: usize,
+    pub col_hi: usize,
+    /// local rows (row_hi-row_lo) x B CSR with compact column ids in
+    /// [col_lo, col_hi)
+    pub adj: Csr,
+    /// inclusion probability used for rescaling
+    pub p: f32,
+}
+
+impl LocalSubgraph {
+    pub fn local_rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    /// Transpose of the local block: (B x local_rows) CSR whose rows are
+    /// compact column ids — the backward-SpMM operand (Eq. 17).
+    pub fn transpose(&self) -> Csr {
+        self.adj.transpose()
+    }
+}
+
+/// Persistent step-tagged remap (Algorithm 2, line 14).
+struct TagMap {
+    tag: Vec<u64>,
+    compact: Vec<u32>,
+    cur: u64,
+}
+
+impl TagMap {
+    fn new(n: usize) -> TagMap {
+        TagMap { tag: vec![0; n], compact: vec![0; n], cur: 0 }
+    }
+
+    /// Start a new step: O(|ids|) updates, no O(N) clear.
+    fn set_epoch(&mut self, ids: &[u32], compact_base: usize) {
+        self.cur += 1;
+        for (k, &v) in ids.iter().enumerate() {
+            self.tag[v as usize] = self.cur;
+            self.compact[v as usize] = (compact_base + k) as u32;
+        }
+    }
+
+    #[inline]
+    fn lookup(&self, v: u32) -> Option<u32> {
+        if self.tag[v as usize] == self.cur {
+            Some(self.compact[v as usize])
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-rank builder. Owns scratch buffers so the steady-state hot path does
+/// not allocate.
+pub struct DistributedSubgraphBuilder {
+    pub sampler: UniformVertexSampler,
+    pub shard: CsrShard,
+    tags: TagMap,
+    // scratch reused across steps
+    row_nnz: Vec<usize>,
+    prefix: Vec<usize>,
+}
+
+impl DistributedSubgraphBuilder {
+    pub fn new(sampler: UniformVertexSampler, shard: CsrShard) -> Self {
+        let n = sampler.n;
+        DistributedSubgraphBuilder {
+            sampler,
+            shard,
+            tags: TagMap::new(n),
+            row_nnz: Vec::new(),
+            prefix: Vec::new(),
+        }
+    }
+
+    /// Run Algorithm 2 for `step`.
+    pub fn build(&mut self, step: u64) -> LocalSubgraph {
+        let b = self.sampler.batch;
+        let p = self.sampler.inclusion_prob();
+        // Line 1: shared sample (communication-free)
+        let sample = self.sampler.sample(step);
+
+        // Phase 1: binary-search local ranges (lines 3-5)
+        let row_lo = sample.partition_point(|&v| (v as usize) < self.shard.r0);
+        let row_hi = sample.partition_point(|&v| (v as usize) < self.shard.r1);
+        let col_lo = sample.partition_point(|&v| (v as usize) < self.shard.c0);
+        let col_hi = sample.partition_point(|&v| (v as usize) < self.shard.c1);
+        let s_r = &sample[row_lo..row_hi];
+        let s_c = &sample[col_lo..col_hi];
+
+        // Phase 3 prep: tag the sampled columns (O(B) map update, line 14)
+        self.tags.set_epoch(s_c, col_lo);
+
+        // Phase 2: vectorized CSR row extraction (lines 6-10):
+        // nnz per sampled row -> prefix sum -> flat gather
+        self.row_nnz.clear();
+        self.row_nnz.extend(
+            s_r.iter()
+                .map(|&v| self.shard.csr.row_nnz(v as usize - self.shard.r0)),
+        );
+        self.prefix.clear();
+        self.prefix.push(0);
+        for &c in &self.row_nnz {
+            self.prefix.push(self.prefix.last().unwrap() + c);
+        }
+        let total = *self.prefix.last().unwrap();
+
+        // Phases 3+4 fused with assembly: columns within each CSR row are
+        // sorted and the compact map is monotonic, so the output CSR can be
+        // built directly without a sort.
+        let mut indptr = Vec::with_capacity(s_r.len() + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(total / 4 + 1);
+        let mut values: Vec<f32> = Vec::with_capacity(total / 4 + 1);
+        indptr.push(0);
+        for (k, &v) in s_r.iter().enumerate() {
+            let lr = v as usize - self.shard.r0;
+            let (cs, vs) = self.shard.csr.row(lr);
+            let gi = (row_lo + k) as u32; // compact row id (global namespace)
+            for (&c, &w) in cs.iter().zip(vs) {
+                if let Some(j) = self.tags.lookup(c) {
+                    // Phase 4: unbiased rescale (Eq. 24) — self loops kept
+                    let w = if j == gi { w } else { w / p };
+                    indices.push(j);
+                    values.push(w);
+                }
+            }
+            indptr.push(indices.len());
+        }
+
+        let local_rows = s_r.len();
+        LocalSubgraph {
+            sample,
+            row_lo,
+            row_hi,
+            col_lo,
+            col_hi,
+            adj: Csr { rows: local_rows, cols: b, indptr, indices, values },
+            p,
+        }
+    }
+}
+
+/// Assemble the global compact B x B matrix from a full grid of local
+/// blocks (test/eval helper — production ranks never do this).
+pub fn assemble_global(blocks: &[LocalSubgraph], b: usize) -> Csr {
+    let mut triples = Vec::new();
+    for blk in blocks {
+        for lr in 0..blk.adj.rows {
+            let (cs, vs) = blk.adj.row(lr);
+            for (&c, &v) in cs.iter().zip(vs) {
+                triples.push(((blk.row_lo + lr) as u32, c, v));
+            }
+        }
+    }
+    Csr::from_triples(b, b, triples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::rmat;
+    use crate::graph::partition_2d;
+    use crate::sampling::uniform::induce_rescaled;
+
+    fn setup(pr: usize, pc: usize) -> (Csr, Vec<DistributedSubgraphBuilder>, UniformVertexSampler) {
+        let g = rmat(8, 8, 11).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 48, 99);
+        let builders = partition_2d(&g, pr, pc)
+            .into_iter()
+            .map(|sh| DistributedSubgraphBuilder::new(sampler.clone(), sh))
+            .collect();
+        (g, builders, sampler)
+    }
+
+    #[test]
+    fn all_ranks_derive_identical_sample() {
+        let (_, mut builders, _) = setup(2, 3);
+        let outs: Vec<_> = builders.iter_mut().map(|b| b.build(5)).collect();
+        for o in &outs[1..] {
+            assert_eq!(o.sample, outs[0].sample);
+        }
+    }
+
+    #[test]
+    fn distributed_blocks_reassemble_to_oracle() {
+        for &(pr, pc) in &[(1usize, 1usize), (2, 2), (3, 2), (4, 1), (1, 4)] {
+            let (g, mut builders, sampler) = setup(pr, pc);
+            for step in [0u64, 3, 17] {
+                let blocks: Vec<_> = builders.iter_mut().map(|b| b.build(step)).collect();
+                let got = assemble_global(&blocks, sampler.batch);
+                let want =
+                    induce_rescaled(&g, &sampler.sample(step), sampler.inclusion_prob());
+                assert!(
+                    got.to_dense().allclose(&want.adj.to_dense(), 1e-6, 0.0),
+                    "grid {pr}x{pc} step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_partition_the_sample() {
+        let (_, mut builders, sampler) = setup(2, 2);
+        let blocks: Vec<_> = builders.iter_mut().map(|b| b.build(1)).collect();
+        // row ranges of the first column of ranks tile [0, B)
+        let mut row_cover = vec![0u8; sampler.batch];
+        for blk in blocks.iter().filter(|b| b.col_lo == 0) {
+            for i in blk.row_lo..blk.row_hi {
+                row_cover[i] += 1;
+            }
+        }
+        assert!(row_cover.iter().all(|&c| c == 1), "{row_cover:?}");
+    }
+
+    #[test]
+    fn tag_map_reuse_matches_fresh_builder() {
+        let (g, _, sampler) = setup(1, 1);
+        let shard = partition_2d(&g, 1, 1).remove(0);
+        let mut reused = DistributedSubgraphBuilder::new(sampler.clone(), shard.clone());
+        for step in 0..6u64 {
+            let got = reused.build(step);
+            let mut fresh = DistributedSubgraphBuilder::new(sampler.clone(), shard.clone());
+            let want = fresh.build(step);
+            assert_eq!(got.adj.indptr, want.adj.indptr, "step {step}");
+            assert_eq!(got.adj.indices, want.adj.indices);
+            assert_eq!(got.adj.values, want.adj.values);
+        }
+    }
+
+    #[test]
+    fn column_filter_keeps_only_local_columns() {
+        let (_, mut builders, _) = setup(2, 2);
+        for b in builders.iter_mut() {
+            let o = b.build(2);
+            for lr in 0..o.adj.rows {
+                let (cs, _) = o.adj.row(lr);
+                for &c in cs {
+                    assert!((c as usize) >= o.col_lo && (c as usize) < o.col_hi);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_transpose_matches_block_transpose() {
+        let (_, mut builders, _) = setup(2, 2);
+        let o = builders[0].build(3);
+        let t = o.transpose();
+        assert!(t.to_dense().allclose(&o.adj.to_dense().transpose(), 1e-6, 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Sampling: ScaleGNN's communication-free uniform vertex sampling
+//! (Algorithm 1), its distributed per-rank subgraph construction
+//! (Algorithm 2), and the baseline samplers used in Table I.
+
+pub mod baselines;
+pub mod distributed;
+pub mod uniform;
+
+pub use baselines::{GraphSageSampler, GraphSaintNodeSampler, SampledBatch, SamplerKind};
+pub use distributed::{assemble_global, DistributedSubgraphBuilder, LocalSubgraph};
+pub use uniform::{densify_into, induce_rescaled, MiniBatch, UniformVertexSampler};

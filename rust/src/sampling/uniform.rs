@@ -1,0 +1,219 @@
+//! Communication-free uniform vertex sampling (paper §III-D, Algorithm 1).
+//!
+//! Every rank derives the *same* sorted sample `S` from the shared
+//! `(seed, step)` pair — no inter-rank communication — then extracts its
+//! local portion of the induced subgraph (Algorithm 2, `distributed.rs`).
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+/// Sampler state shared (by value — it is tiny) by every rank of a DP group.
+#[derive(Clone, Debug)]
+pub struct UniformVertexSampler {
+    pub n: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl UniformVertexSampler {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch <= n, "batch {batch} > n {n}");
+        UniformVertexSampler { n, batch, seed }
+    }
+
+    /// Eq. 20: `S ~ Uniform(C(V, B))`, sorted.  Deterministic in
+    /// `(seed, step)` — the communication-free contract.
+    pub fn sample(&self, step: u64) -> Vec<u32> {
+        let mut rng = Rng::for_step(self.seed, step);
+        rng.sample_k_of_n_sorted(self.batch, self.n)
+    }
+
+    /// Eq. 23: conditional inclusion probability of a *neighbor* given the
+    /// target is in the sample.
+    pub fn inclusion_prob(&self) -> f32 {
+        (self.batch as f32 - 1.0) / (self.n as f32 - 1.0)
+    }
+}
+
+/// A fully assembled mini-batch (single-rank / per-DP-group view).
+pub struct MiniBatch {
+    /// sorted sampled vertex ids (global)
+    pub vertices: Vec<u32>,
+    /// induced, rescaled adjacency in the compact [0,B) namespace
+    pub adj: Csr,
+    /// its transpose (for backward SpMM, Eq. 17)
+    pub adj_t: Csr,
+}
+
+/// Induce the subgraph on sorted `s` and rescale off-diagonal entries by
+/// `1/p` (Eq. 24).  Single-rank reference used by the per-group trainer and
+/// as the oracle the distributed builder is tested against.
+pub fn induce_rescaled(a: &Csr, s: &[u32], p: f32) -> MiniBatch {
+    let b = s.len();
+    let mut triples = Vec::new();
+    for (si, &v) in s.iter().enumerate() {
+        let (cs, vs) = a.row(v as usize);
+        // intersect the row's (sorted) columns with the (sorted) sample
+        let mut ci = 0usize;
+        for (&c, &w) in cs.iter().zip(vs) {
+            // advance ci while s[ci] < c
+            while ci < b && s[ci] < c {
+                ci += 1;
+            }
+            if ci < b && s[ci] == c {
+                let w = if c == v { w } else { w / p };
+                triples.push((si as u32, ci as u32, w));
+            }
+        }
+    }
+    let adj = Csr::from_triples(b, b, triples);
+    let adj_t = adj.transpose();
+    MiniBatch { vertices: s.to_vec(), adj, adj_t }
+}
+
+/// Dense-ified `B x B` adjacency (row-major) for the PJRT train-step
+/// artifact, written into a caller-provided buffer (zero-alloc hot path).
+pub fn densify_into(adj: &Csr, out: &mut [f32]) {
+    let b = adj.rows;
+    assert_eq!(out.len(), b * b);
+    out.fill(0.0);
+    for r in 0..b {
+        let (cs, vs) = adj.row(r);
+        let row = &mut out[r * b..(r + 1) * b];
+        for (&c, &v) in cs.iter().zip(vs) {
+            row[c as usize] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::rmat;
+
+    #[test]
+    fn sample_is_deterministic_and_sorted() {
+        let s = UniformVertexSampler::new(1000, 64, 42);
+        let a = s.sample(7);
+        let b = s.sample(7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert_ne!(s.sample(8), a);
+    }
+
+    #[test]
+    fn inclusion_prob_matches_eq23() {
+        let s = UniformVertexSampler::new(101, 11, 0);
+        assert!((s.inclusion_prob() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn induced_subgraph_contains_exactly_the_sampled_edges() {
+        let g = rmat(7, 8, 5).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 40, 1);
+        let s = sampler.sample(0);
+        let mb = induce_rescaled(&g, &s, sampler.inclusion_prob());
+        assert_eq!(mb.adj.rows, 40);
+        // every kept edge exists in g between the mapped endpoints
+        for r in 0..40 {
+            let (cs, _) = mb.adj.row(r);
+            for &c in cs {
+                assert!(g.has_edge(s[r] as usize, s[c as usize]));
+            }
+        }
+        // and every g-edge with both endpoints sampled is kept
+        let mut count = 0;
+        for (i, &v) in s.iter().enumerate() {
+            let (cs, _) = g.row(v as usize);
+            for &c in cs {
+                if s.binary_search(&c).is_ok() {
+                    count += 1;
+                    let j = s.binary_search(&c).unwrap();
+                    assert!(mb.adj.has_edge(i, j as u32));
+                }
+            }
+        }
+        assert_eq!(count, mb.adj.nnz());
+    }
+
+    #[test]
+    fn rescaling_leaves_self_loops_untouched() {
+        let g = rmat(6, 6, 2).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 24, 3);
+        let s = sampler.sample(1);
+        let p = sampler.inclusion_prob();
+        let mb = induce_rescaled(&g, &s, p);
+        for (i, &v) in s.iter().enumerate() {
+            let gd = g.to_dense();
+            let (cs, vs) = mb.adj.row(i);
+            for (&c, &w) in cs.iter().zip(vs) {
+                let orig = gd.at(v as usize, s[c as usize] as usize);
+                if c as usize == i {
+                    assert!((w - orig).abs() < 1e-6, "self loop rescaled");
+                } else {
+                    assert!((w - orig / p).abs() < 1e-5, "off-diagonal not 1/p");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rescaled_aggregation_is_unbiased() {
+        // Eq. 25: E_S[sum_{u in N(v) cap S} a~_{vu} x_u | v in S] = h_v.
+        // Monte-Carlo over many samples, scalar features x_u = u + 1.
+        let g = rmat(6, 8, 9).gcn_normalize();
+        let n = g.rows;
+        let bsize = 24;
+        let sampler = UniformVertexSampler::new(n, bsize, 77);
+        let p = sampler.inclusion_prob();
+        let x: Vec<f64> = (0..n).map(|u| (u + 1) as f64).collect();
+
+        // pick a target vertex with decent degree
+        let v = (0..n).max_by_key(|&r| g.row_nnz(r)).unwrap();
+        let full: f64 = {
+            let (cs, vs) = g.row(v);
+            cs.iter().zip(vs).map(|(&c, &w)| w as f64 * x[c as usize]).sum()
+        };
+
+        let trials = 4000u64;
+        let mut acc = 0.0f64;
+        let mut hits = 0u64;
+        for t in 0..trials {
+            let s = sampler.sample(t);
+            if let Ok(i) = s.binary_search(&(v as u32)) {
+                hits += 1;
+                let mb = induce_rescaled(&g, &s, p);
+                let (cs, vs) = mb.adj.row(i);
+                acc += cs
+                    .iter()
+                    .zip(vs)
+                    .map(|(&c, &w)| w as f64 * x[s[c as usize] as usize])
+                    .sum::<f64>();
+            }
+        }
+        let est = acc / hits as f64;
+        let rel = (est - full).abs() / full.abs();
+        assert!(rel < 0.05, "estimator {est} vs full {full} (rel {rel})");
+    }
+
+    #[test]
+    fn densify_matches_to_dense() {
+        let g = rmat(5, 4, 2).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 16, 5);
+        let mb = induce_rescaled(&g, &sampler.sample(0), sampler.inclusion_prob());
+        let mut buf = vec![0.0f32; 16 * 16];
+        densify_into(&mb.adj, &mut buf);
+        assert_eq!(buf, mb.adj.to_dense().data);
+    }
+
+    #[test]
+    fn transpose_is_consistent() {
+        let g = rmat(6, 4, 8).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 32, 9);
+        let mb = induce_rescaled(&g, &sampler.sample(4), sampler.inclusion_prob());
+        assert!(mb
+            .adj_t
+            .to_dense()
+            .allclose(&mb.adj.to_dense().transpose(), 1e-6, 0.0));
+    }
+}

@@ -1,0 +1,159 @@
+//! Machine profiles for the analytical performance model (§VI-A).
+//!
+//! Numbers are from public spec sheets; per-term efficiency factors are
+//! calibrated once against the paper's reference breakdown (Fig. 5:
+//! ogbn-products on eight A100s, 2x2x2 grid) and then held fixed for every
+//! projection.  RCCL's lower collective throughput on Frontier (§VII-C,
+//! [60]) enters as `collective_efficiency`.
+
+/// One GPU/GCD/APU model + its node-level fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    /// sustained f32 matmul throughput per device (FLOP/s)
+    pub flops: f64,
+    /// HBM bandwidth per device (B/s)
+    pub hbm_bw: f64,
+    /// intra-node link bandwidth per device (B/s) — NVLink / xGMI
+    pub intra_bw: f64,
+    /// inter-node injection bandwidth per device (B/s) — Slingshot-11,
+    /// 100 GB/s per node / 4 devices
+    pub inter_bw: f64,
+    /// per-message latency (s) intra / inter node
+    pub alpha_intra: f64,
+    pub alpha_inter: f64,
+    /// devices per node (GCDs on Frontier)
+    pub devices_per_node: usize,
+    /// NCCL=1.0; RCCL lower at scale [60]
+    pub collective_efficiency: f64,
+}
+
+/// NERSC Perlmutter: 4x NVIDIA A100 40GB per node, Slingshot-11.
+pub const PERLMUTTER: Machine = Machine {
+    name: "Perlmutter",
+    flops: 15.0e12, // sustained TF32/FP32 tensor GEMM
+    hbm_bw: 1.4e12,
+    intra_bw: 200.0e9, // NVLink3 per-direction share
+    inter_bw: 25.0e9,  // 100 GB/s node injection / 4
+    alpha_intra: 6.0e-6,
+    alpha_inter: 12.0e-6,
+    devices_per_node: 4,
+    collective_efficiency: 1.0,
+};
+
+/// OLCF Frontier: 4x MI250X per node = 8 GCDs, Slingshot-11.
+pub const FRONTIER: Machine = Machine {
+    name: "Frontier",
+    flops: 14.0e12, // per GCD, sustained
+    hbm_bw: 1.3e12,
+    intra_bw: 150.0e9, // Infinity Fabric share per GCD
+    inter_bw: 12.5e9,  // 100 GB/s node injection / 8 GCDs
+    alpha_intra: 7.0e-6,
+    alpha_inter: 14.0e-6,
+    devices_per_node: 8,
+    collective_efficiency: 0.55, // RCCL vs NCCL at scale [60]
+};
+
+/// LLNL Tuolumne: 4x MI300A APU per node, Slingshot-11.
+pub const TUOLUMNE: Machine = Machine {
+    name: "Tuolumne",
+    flops: 30.0e12, // MI300A sustained f32 matrix
+    hbm_bw: 3.0e12,
+    intra_bw: 180.0e9,
+    inter_bw: 25.0e9,
+    alpha_intra: 6.0e-6,
+    alpha_inter: 12.0e-6,
+    devices_per_node: 4,
+    collective_efficiency: 0.7,
+};
+
+pub fn by_name(name: &str) -> Option<Machine> {
+    match name.to_ascii_lowercase().as_str() {
+        "perlmutter" => Some(PERLMUTTER),
+        "frontier" => Some(FRONTIER),
+        "tuolumne" => Some(TUOLUMNE),
+        _ => None,
+    }
+}
+
+impl Machine {
+    /// Ring all-reduce time for `bytes` payload across a group of `p`
+    /// devices; `spans_nodes` decides which link/latency applies.
+    pub fn all_reduce_time(&self, bytes: f64, p: usize, spans_nodes: bool) -> f64 {
+        if p <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let (bw, alpha) = if spans_nodes {
+            (self.inter_bw, self.alpha_inter)
+        } else {
+            (self.intra_bw, self.alpha_intra)
+        };
+        let eff = self.collective_efficiency;
+        let pf = p as f64;
+        2.0 * (pf - 1.0) / pf * bytes / (bw * eff) + 2.0 * (pf - 1.0) * alpha
+    }
+
+    /// All-gather time for `bytes` contributed per member.
+    pub fn all_gather_time(&self, bytes: f64, p: usize, spans_nodes: bool) -> f64 {
+        if p <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let (bw, alpha) = if spans_nodes {
+            (self.inter_bw, self.alpha_inter)
+        } else {
+            (self.intra_bw, self.alpha_intra)
+        };
+        let pf = p as f64;
+        (pf - 1.0) * bytes / (bw * self.collective_efficiency) + (pf - 1.0) * alpha
+    }
+
+    /// Whether a process group of `p` consecutive devices crosses nodes,
+    /// given `group_stride` devices between members.
+    pub fn spans_nodes(&self, p: usize, group_stride: usize) -> bool {
+        p * group_stride > self.devices_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve_by_name() {
+        for n in ["perlmutter", "Frontier", "TUOLUMNE"] {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("summit").is_none());
+    }
+
+    #[test]
+    fn all_reduce_scales_with_payload_and_group() {
+        let m = PERLMUTTER;
+        let t1 = m.all_reduce_time(1e6, 4, false);
+        let t2 = m.all_reduce_time(2e6, 4, false);
+        assert!(t2 > t1);
+        // bandwidth term roughly doubles
+        assert!(t2 < 2.2 * t1);
+        // inter-node slower than intra
+        assert!(m.all_reduce_time(1e6, 4, true) > t1);
+        // single member is free
+        assert_eq!(m.all_reduce_time(1e6, 1, false), 0.0);
+    }
+
+    #[test]
+    fn frontier_collectives_slower_than_perlmutter() {
+        let b = 8e6;
+        assert!(
+            FRONTIER.all_reduce_time(b, 8, true) > PERLMUTTER.all_reduce_time(b, 8, true),
+            "RCCL efficiency factor"
+        );
+    }
+
+    #[test]
+    fn spans_nodes_logic() {
+        assert!(!PERLMUTTER.spans_nodes(4, 1));
+        assert!(PERLMUTTER.spans_nodes(8, 1));
+        assert!(PERLMUTTER.spans_nodes(4, 2));
+        assert!(!FRONTIER.spans_nodes(8, 1));
+    }
+}

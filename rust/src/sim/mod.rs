@@ -1,0 +1,56 @@
+//! Analytical performance simulator: projects ScaleGNN (and the baseline
+//! frameworks) to the paper's machine scale (Perlmutter / Frontier /
+//! Tuolumne, up to 2048 devices) from first-principles cost models
+//! calibrated at the paper's reference points.  See DESIGN.md §2
+//! (substitutions) — the rank-thread runtime executes the algorithms for
+//! real at <= 64 ranks; this module supplies the wall-clock projections the
+//! figures need.
+
+pub mod baselines;
+pub mod machines;
+pub mod model;
+
+pub use baselines::{baseline_epoch, baseline_eval_round, epochs_to_target, Framework};
+pub use machines::{by_name, Machine, FRONTIER, PERLMUTTER, TUOLUMNE};
+pub use model::{scalegnn_epoch, scalegnn_eval_round, EpochBreakdown, OptFlags, Workload};
+
+use crate::grid::{near_cubic, Grid4D};
+
+/// The paper's per-dataset base 3D PMM grid (leftmost scaling point,
+/// §VII-C: "as close to a cube as possible").
+pub fn base_grid_for(dataset: &str) -> (usize, usize, usize) {
+    match dataset {
+        "products_sim" => (2, 2, 2),       // starts at 8 GPUs
+        "reddit_sim" => (2, 2, 1),         // starts at 4
+        "isolate_sim" => (4, 2, 2),        // starts at 16
+        "products14m_sim" => (4, 4, 2),    // starts at 32
+        "papers100m_sim" => (4, 4, 4),     // starts at 64
+        _ => near_cubic(4),
+    }
+}
+
+/// Build the 4D grid for `gpus` total devices with the dataset's fixed 3D
+/// base (scaling = growing `Gd`, exactly the paper's methodology).
+pub fn grid_for(dataset: &str, gpus: usize) -> Option<Grid4D> {
+    let (x, y, z) = base_grid_for(dataset);
+    let g3 = x * y * z;
+    if gpus % g3 != 0 || gpus < g3 {
+        return None;
+    }
+    Some(Grid4D::new(gpus / g3, x, y, z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_for_respects_base_and_scale() {
+        let g = grid_for("papers100m_sim", 2048).unwrap();
+        assert_eq!((g.gx, g.gy, g.gz), (4, 4, 4));
+        assert_eq!(g.gd, 32);
+        assert!(grid_for("papers100m_sim", 96).is_none());
+        let g8 = grid_for("products_sim", 8).unwrap();
+        assert_eq!(g8.gd, 1);
+    }
+}

@@ -1,0 +1,382 @@
+//! Dense row-major f32 matrices with the BLAS-ish kernels the coordinator
+//! needs: blocked GEMM (plain / transposed operands), element-wise ops and
+//! reductions.  This backs the in-Rust reference model (`model::`), the
+//! rank-local compute of the 3D-PMM engine, and test oracles.
+//!
+//! The hot GEMM uses i-k-j loop order with an 8-wide j unroll so LLVM
+//! auto-vectorizes; see EXPERIMENTS.md §Perf for measured numbers.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng, scale: f32) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal() * scale).collect(),
+        }
+    }
+
+    /// Glorot-uniform init (matches `model.init_params` in python).
+    pub fn glorot(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Mat {
+        let lim = (6.0 / (rows + cols) as f32).sqrt();
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.uniform(-lim, lim)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// C = A @ B (blocked i-k-j).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut c, false);
+        c
+    }
+
+    /// C = A^T @ B without materializing A^T.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "t_matmul");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        // c[i,j] = sum_k a[k,i] * b[k,j]  -> k-i-j order, rows of b stream
+        for kk in 0..k {
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A @ B^T without materializing B^T.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                crow[j] = acc;
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn add(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (o, &x) in out.data.iter_mut().zip(&b.data) {
+            *o += x;
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (o, &x) in self.data.iter_mut().zip(&b.data) {
+            *o += x;
+        }
+    }
+
+    pub fn sub(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (o, &x) in out.data.iter_mut().zip(&b.data) {
+            *o -= x;
+        }
+        out
+    }
+
+    pub fn hadamard(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        let mut out = self.clone();
+        for (o, &x) in out.data.iter_mut().zip(&b.data) {
+            *o *= x;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o *= s;
+        }
+        out
+    }
+
+    pub fn relu(&self) -> Mat {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o = o.max(0.0);
+        }
+        out
+    }
+
+    /// Submatrix copy: rows [r0,r1), cols [c0,c1).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for r in r0..r1 {
+            out.data[(r - r0) * (c1 - c0)..(r - r0 + 1) * (c1 - c0)]
+                .copy_from_slice(&self.data[r * self.cols + c0..r * self.cols + c1]);
+        }
+        out
+    }
+
+    /// Write `src` into this matrix at offset (r0, c0).
+    pub fn set_slice(&mut self, r0: usize, c0: usize, src: &Mat) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for r in 0..src.rows {
+            let dst = (r0 + r) * self.cols + c0;
+            self.data[dst..dst + src.cols]
+                .copy_from_slice(&src.data[r * src.cols..(r + 1) * src.cols]);
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, b: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, b: &Mat, atol: f32, rtol: f32) -> bool {
+        if (self.rows, self.cols) != (b.rows, b.cols) {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&b.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// `c += a @ b` (or `c = a @ b` if `accumulate` is false over a zeroed c).
+/// i-k-j ordering: the inner loop streams rows of `b` and `c`.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    if !accumulate {
+        c.data.fill(0.0);
+    }
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = &a.data[i * a.cols..(i + 1) * a.cols];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // pays off on dense-ified sparse adjacencies
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// RMSNorm over rows with learned scale g (Eq. 7); returns (out, inv_rms).
+pub fn rmsnorm(x: &Mat, g: &[f32], eps: f32) -> (Mat, Vec<f32>) {
+    assert_eq!(g.len(), x.cols);
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let mut inv = vec![0.0f32; x.rows];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let iv = 1.0 / (ms + eps).sqrt();
+        inv[r] = iv;
+        let orow = &mut out.data[r * x.cols..(r + 1) * x.cols];
+        for j in 0..x.cols {
+            orow[j] = row[j] * iv * g[j];
+        }
+    }
+    (out, inv)
+}
+
+/// Row-wise log-softmax.
+pub fn log_softmax(x: &Mat) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        let orow = &mut out.data[r * x.cols..(r + 1) * x.cols];
+        for j in 0..x.cols {
+            orow[j] = row[j] - lse;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        let mut r = Rng::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (16, 16, 16), (33, 17, 9)] {
+            let a = Mat::randn(m, k, &mut r, 1.0);
+            let b = Mat::randn(k, n, &mut r, 1.0);
+            assert!(a.matmul(&b).allclose(&naive_matmul(&a, &b), 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        let mut r = Rng::new(3);
+        let a = Mat::randn(9, 13, &mut r, 1.0);
+        let b = Mat::randn(9, 7, &mut r, 1.0);
+        assert!(a.t_matmul(&b).allclose(&a.transpose().matmul(&b), 1e-4, 1e-4));
+        let c = Mat::randn(5, 13, &mut r, 1.0);
+        assert!(a.matmul_t(&c).allclose(&a.matmul(&c.transpose()), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut r = Rng::new(4);
+        let a = Mat::randn(6, 6, &mut r, 1.0);
+        assert!(a.matmul(&Mat::eye(6)).allclose(&a, 1e-6, 0.0));
+        assert!(Mat::eye(6).matmul(&a).allclose(&a, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn slice_set_slice_roundtrip() {
+        let mut r = Rng::new(5);
+        let a = Mat::randn(8, 10, &mut r, 1.0);
+        let s = a.slice(2, 6, 3, 9);
+        assert_eq!((s.rows, s.cols), (4, 6));
+        assert_eq!(s.at(0, 0), a.at(2, 3));
+        let mut b = Mat::zeros(8, 10);
+        b.set_slice(2, 3, &s);
+        assert_eq!(b.at(5, 8), a.at(5, 8));
+        assert_eq!(b.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Mat::from_vec(2, 4, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+        let g = vec![1.0; 4];
+        let (out, _) = rmsnorm(&x, &g, 0.0);
+        for v in &out.data {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_softmax_rows_sum_to_one() {
+        let mut r = Rng::new(6);
+        let x = Mat::randn(4, 9, &mut r, 3.0);
+        let ls = log_softmax(&x);
+        for i in 0..4 {
+            let s: f32 = ls.row(i).iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Mat::from_vec(1, 3, vec![1.0, -2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![2.0, 2.0, 2.0]);
+        assert_eq!(a.add(&b).data, vec![3.0, 0.0, 5.0]);
+        assert_eq!(a.sub(&b).data, vec![-1.0, -4.0, 1.0]);
+        assert_eq!(a.hadamard(&b).data, vec![2.0, -4.0, 6.0]);
+        assert_eq!(a.relu().data, vec![1.0, 0.0, 3.0]);
+        assert_eq!(a.scale(2.0).data, vec![2.0, -4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

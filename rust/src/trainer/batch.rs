@@ -1,0 +1,175 @@
+//! Mini-batch assembly for the PJRT train-step artifacts: every sampler
+//! (ScaleGNN uniform, GraphSAGE, GraphSAINT) is reduced to the same
+//! fixed-shape payload `(src[E], dst[E], val[E], X[B,d_in], y[B],
+//! wmask[B])` — a padded edge list plus gathered features/labels.
+
+use std::sync::Arc;
+
+use crate::graph::Dataset;
+use crate::sampling::{
+    induce_rescaled, GraphSageSampler, GraphSaintNodeSampler, SamplerKind,
+    UniformVertexSampler,
+};
+
+/// One step's packed inputs (ready to become literals).  The adjacency is
+/// a padded edge list (`edge_cap` entries; padding has val = 0) — the
+/// CPU-efficient sparse-SpMM lowering (EXPERIMENTS.md §Perf L2).
+pub struct BatchData {
+    pub step: u64,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub val: Vec<f32>,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub wmask: Vec<f32>,
+    /// edges dropped because the batch exceeded edge_cap (0 in practice)
+    pub truncated: usize,
+}
+
+/// Stateful batch factory for one DP group.
+pub struct BatchMaker {
+    pub kind: SamplerKind,
+    pub batch: usize,
+    pub edge_cap: usize,
+    d_in: usize,
+    data: Arc<Dataset>,
+    uniform: UniformVertexSampler,
+    sage: GraphSageSampler,
+    saint: GraphSaintNodeSampler,
+}
+
+impl BatchMaker {
+    pub fn new(
+        data: Arc<Dataset>,
+        kind: SamplerKind,
+        batch: usize,
+        edge_cap: usize,
+        layers: usize,
+        group_seed: u64,
+    ) -> BatchMaker {
+        BatchMaker {
+            kind,
+            batch,
+            edge_cap,
+            d_in: data.features.cols,
+            uniform: UniformVertexSampler::new(data.n, batch, group_seed),
+            sage: GraphSageSampler::new(batch, layers, group_seed),
+            saint: GraphSaintNodeSampler::new(&data, batch, group_seed),
+            data,
+        }
+    }
+
+    /// Build the batch for `step` (Algorithm 1 for ScaleGNN; the baselines'
+    /// own pipelines otherwise).
+    pub fn make(&mut self, step: u64) -> BatchData {
+        let b = self.batch;
+        let d = &self.data;
+        let (vertices, adj, weights): (Vec<u32>, _, Vec<f32>) = match self.kind {
+            SamplerKind::ScaleGnnUniform => {
+                let s = self.uniform.sample(step);
+                let mb = induce_rescaled(&d.adj, &s, self.uniform.inclusion_prob());
+                // loss on sampled train-split vertices
+                let w = s
+                    .iter()
+                    .map(|&v| if d.split[v as usize] == 0 { 1.0 } else { 0.0 })
+                    .collect();
+                (s, mb.adj, w)
+            }
+            SamplerKind::GraphSage => {
+                let sb = self.sage.sample(d, step, true);
+                (sb.vertices, sb.adj, sb.loss_weight)
+            }
+            SamplerKind::GraphSaintNode => {
+                let sb = self.saint.sample(d, step);
+                let w = sb
+                    .vertices
+                    .iter()
+                    .zip(&sb.loss_weight)
+                    .map(|(&v, &lw)| if d.split[v as usize] == 0 { lw } else { 0.0 })
+                    .collect();
+                (sb.vertices, sb.adj, w)
+            }
+        };
+
+        // flatten the induced CSR into the padded edge list
+        let cap = self.edge_cap;
+        let mut src = vec![0i32; cap];
+        let mut dst = vec![0i32; cap];
+        let mut val = vec![0.0f32; cap];
+        let mut k = 0usize;
+        let mut truncated = 0usize;
+        for r in 0..adj.rows {
+            let (cs, vs) = adj.row(r);
+            for (&c, &w) in cs.iter().zip(vs) {
+                if k < cap {
+                    dst[k] = r as i32;
+                    src[k] = c as i32;
+                    val[k] = w;
+                    k += 1;
+                } else {
+                    truncated += 1;
+                }
+            }
+        }
+
+        let mut x = vec![0.0f32; b * self.d_in];
+        let mut y = vec![0i32; b];
+        for (i, &v) in vertices.iter().enumerate() {
+            x[i * self.d_in..(i + 1) * self.d_in].copy_from_slice(
+                &d.features.data[v as usize * self.d_in..(v as usize + 1) * self.d_in],
+            );
+            y[i] = d.labels[v as usize] as i32;
+        }
+        BatchData { step, src, dst, val, x, y, wmask: weights, truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn maker(kind: SamplerKind) -> BatchMaker {
+        let d = Arc::new(datasets::load("tiny").unwrap());
+        BatchMaker::new(d, kind, 32, 512, 2, 9)
+    }
+
+    #[test]
+    fn shapes_are_fixed_for_all_samplers() {
+        for kind in [
+            SamplerKind::ScaleGnnUniform,
+            SamplerKind::GraphSage,
+            SamplerKind::GraphSaintNode,
+        ] {
+            let mut m = maker(kind);
+            let b = m.make(0);
+            assert_eq!(b.src.len(), 512, "{kind:?}");
+            assert_eq!(b.val.len(), 512);
+            assert_eq!(b.truncated, 0, "{kind:?}");
+            assert!(b.val.iter().any(|&v| v != 0.0), "{kind:?} has edges");
+            assert_eq!(b.x.len(), 32 * 16);
+            assert_eq!(b.y.len(), 32);
+            assert_eq!(b.wmask.len(), 32);
+            assert!(b.wmask.iter().any(|&w| w > 0.0), "{kind:?} has loss rows");
+        }
+    }
+
+    #[test]
+    fn uniform_wmask_is_train_split() {
+        let mut m = maker(SamplerKind::ScaleGnnUniform);
+        let d = datasets::load("tiny").unwrap();
+        let s = m.uniform.sample(3);
+        let b = m.make(3);
+        for (i, &v) in s.iter().enumerate() {
+            assert_eq!(b.wmask[i] > 0.0, d.split[v as usize] == 0);
+        }
+    }
+
+    #[test]
+    fn batches_differ_across_steps() {
+        let mut m = maker(SamplerKind::ScaleGnnUniform);
+        let b0 = m.make(0);
+        let b1 = m.make(1);
+        assert_ne!(b0.y, b1.y);
+    }
+}

@@ -1,0 +1,251 @@
+//! Multi-threaded full-graph evaluation used by the time-to-accuracy runner.
+//!
+//! Row-chunked version of `model::forward` with a barrier between layers
+//! (each SpMM reads the full previous activation).  The Table II experiment
+//! uses the genuinely distributed `pmm::PmmGcn::eval_full_graph` path; this
+//! helper is the fast shared-memory equivalent for the training loop's
+//! periodic accuracy checks.
+//!
+//! Safety model: the two activation buffers are shared via raw pointers; in
+//! every phase each worker writes only its own row chunk and reads only the
+//! buffer written in the *previous* phase, with a barrier between phases.
+
+use std::sync::Barrier;
+
+use crate::graph::Dataset;
+use crate::model::{GcnDims, Params, RMS_EPS};
+#[cfg(test)]
+use crate::tensor::Mat;
+
+/// Raw shared f32 buffer (see module safety note).
+#[derive(Clone, Copy)]
+struct SharedBuf {
+    ptr: *mut f32,
+    len: usize,
+}
+unsafe impl Send for SharedBuf {}
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    unsafe fn all(&self) -> &[f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn rows_mut(&self, r0: usize, r1: usize, cols: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr.add(r0 * cols), (r1 - r0) * cols)
+    }
+}
+
+/// Full-graph (val_acc, test_acc) with `threads` row-chunk workers.
+pub fn full_graph_accuracy(
+    data: &Dataset,
+    dims: &GcnDims,
+    params: &Params,
+    threads: usize,
+) -> (f32, f32) {
+    let n = data.n;
+    let threads = threads.max(1).min(n);
+    let bounds = crate::graph::block_bounds(n, threads);
+    let barrier = Barrier::new(threads);
+    let dh = dims.d_h;
+
+    let mut h = vec![0.0f32; n * dh];
+    let mut h_next = vec![0.0f32; n * dh];
+    let buf_a = SharedBuf { ptr: h.as_mut_ptr(), len: h.len() };
+    let buf_b = SharedBuf { ptr: h_next.as_mut_ptr(), len: h_next.len() };
+
+    let counts: Vec<(u64, u64, u64, u64)> = std::thread::scope(|scope| {
+        let mut handles = vec![];
+        for t in 0..threads {
+            let (r0, r1) = (bounds[t], bounds[t + 1]);
+            let barrier = &barrier;
+            handles.push(scope.spawn(move || {
+                // input projection into my chunk of buf_a
+                {
+                    let dst = unsafe { buf_a.rows_mut(r0, r1, dh) };
+                    for (k, r) in (r0..r1).enumerate() {
+                        let xrow = &data.features.data[r * dims.d_in..(r + 1) * dims.d_in];
+                        let orow = &mut dst[k * dh..(k + 1) * dh];
+                        orow.fill(0.0);
+                        for (i, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &params[0].data[i * dh..(i + 1) * dh];
+                            for j in 0..dh {
+                                orow[j] += xv * wrow[j];
+                            }
+                        }
+                    }
+                }
+                barrier.wait();
+
+                let mut read_a = true;
+                let mut agg = vec![0.0f32; dh];
+                for l in 0..dims.layers {
+                    let w = &params[1 + 2 * l];
+                    let g = &params[2 + 2 * l];
+                    let (src, dst) = unsafe {
+                        if read_a {
+                            (buf_a.all(), buf_b.rows_mut(r0, r1, dh))
+                        } else {
+                            (buf_b.all(), buf_a.rows_mut(r0, r1, dh))
+                        }
+                    };
+                    for (k, r) in (r0..r1).enumerate() {
+                        agg.fill(0.0);
+                        let (cs, vs) = data.adj.row(r);
+                        for (&c, &v) in cs.iter().zip(vs) {
+                            let srow = &src[c as usize * dh..(c as usize + 1) * dh];
+                            for j in 0..dh {
+                                agg[j] += v * srow[j];
+                            }
+                        }
+                        let orow = &mut dst[k * dh..(k + 1) * dh];
+                        orow.fill(0.0);
+                        for (i, &av) in agg.iter().enumerate() {
+                            if av == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w.data[i * dh..(i + 1) * dh];
+                            for j in 0..dh {
+                                orow[j] += av * wrow[j];
+                            }
+                        }
+                        let ms: f32 = orow.iter().map(|v| v * v).sum::<f32>() / dh as f32;
+                        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+                        let srow = &src[r * dh..(r + 1) * dh];
+                        for j in 0..dh {
+                            let v = (orow[j] * inv * g.data[j]).max(0.0);
+                            orow[j] = v + srow[j];
+                        }
+                    }
+                    read_a = !read_a;
+                    barrier.wait();
+                }
+
+                // output head + accuracy for my rows
+                let src = unsafe { if read_a { buf_a.all() } else { buf_b.all() } };
+                let wout = &params[params.len() - 1];
+                let dout = dims.d_out;
+                let mut local = (0u64, 0u64, 0u64, 0u64);
+                let mut logits = vec![0.0f32; dout];
+                for r in r0..r1 {
+                    let split = data.split[r];
+                    if split == 0 {
+                        continue;
+                    }
+                    let srow = &src[r * dh..(r + 1) * dh];
+                    logits.fill(0.0);
+                    for (i, &hv) in srow.iter().enumerate() {
+                        if hv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wout.data[i * dout..(i + 1) * dout];
+                        for j in 0..dout {
+                            logits[j] += hv * wrow[j];
+                        }
+                    }
+                    let mut arg = 0usize;
+                    for j in 1..dout {
+                        if logits[j] > logits[arg] {
+                            arg = j;
+                        }
+                    }
+                    let ok = arg as u32 == data.labels[r];
+                    if split == 1 {
+                        local.1 += 1;
+                        local.0 += ok as u64;
+                    } else {
+                        local.3 += 1;
+                        local.2 += ok as u64;
+                    }
+                }
+                local
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let (mut vo, mut vn, mut to, mut tn) = (0u64, 0u64, 0u64, 0u64);
+    for &(a, b, c, d) in &counts {
+        vo += a;
+        vn += b;
+        to += c;
+        tn += d;
+    }
+    (vo as f32 / vn.max(1) as f32, to as f32 / tn.max(1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::model;
+
+    #[test]
+    fn parallel_eval_matches_reference() {
+        let data = datasets::load("tiny").unwrap();
+        let dims = GcnDims {
+            d_in: 16,
+            d_h: 16,
+            d_out: 4,
+            layers: 2,
+            dropout: 0.0,
+            weight_decay: 0.0,
+        };
+        let params = model::init_params(&dims, 5);
+        let (logits, _) = model::forward(&dims, &params, &data.adj, &data.features, None);
+        let wtest: Vec<f32> = data
+            .split
+            .iter()
+            .map(|&s| if s == 2 { 1.0 } else { 0.0 })
+            .collect();
+        let (_, want_test, _) = model::loss_and_grad(&logits, &data.labels, &wtest);
+        for threads in [1, 2, 4, 7] {
+            let (_val, test) = full_graph_accuracy(&data, &dims, &params, threads);
+            assert!(
+                (test - want_test).abs() < 1e-5,
+                "threads={threads}: {test} vs {want_test}"
+            );
+        }
+    }
+
+    #[test]
+    fn trained_model_beats_random_on_eval() {
+        let data = std::sync::Arc::new(datasets::load("tiny").unwrap());
+        let dims = GcnDims {
+            d_in: 16,
+            d_h: 16,
+            d_out: 4,
+            layers: 2,
+            dropout: 0.0,
+            weight_decay: 0.0,
+        };
+        let mut params = model::init_params(&dims, 1);
+        let mut opt = model::AdamState::new(&dims);
+        let sampler = crate::sampling::UniformVertexSampler::new(data.n, 128, 3);
+        let (_, acc0) = full_graph_accuracy(&data, &dims, &params, 4);
+        for step in 0..30 {
+            let s = sampler.sample(step);
+            let mb = crate::sampling::induce_rescaled(&data.adj, &s, sampler.inclusion_prob());
+            let mut x = Mat::zeros(128, 16);
+            for (i, &v) in s.iter().enumerate() {
+                x.data[i * 16..(i + 1) * 16]
+                    .copy_from_slice(&data.features.data[v as usize * 16..(v as usize + 1) * 16]);
+            }
+            let y: Vec<u32> = s.iter().map(|&v| data.labels[v as usize]).collect();
+            let w: Vec<f32> = s
+                .iter()
+                .map(|&v| if data.split[v as usize] == 0 { 1.0 } else { 0.0 })
+                .collect();
+            let masks = vec![Mat::filled(128, 16, 1.0); 2];
+            model::train_step(
+                &dims, &mut params, &mut opt, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, 5e-3,
+            );
+        }
+        let (_, acc1) = full_graph_accuracy(&data, &dims, &params, 4);
+        assert!(acc1 > acc0 + 0.1, "acc {acc0} -> {acc1}");
+    }
+}

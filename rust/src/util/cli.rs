@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Grammar: `scalegnn <subcommand> [--key value]... [--flag]...`.
+//! Values are parsed on demand with helpful error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value '{v}' for --{name}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parse("train --dataset products_sim --steps 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_opt("dataset"), Some("products_sim"));
+        assert_eq!(a.get_or::<usize>("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --grid=2x2x2 --lr=0.01");
+        assert_eq!(a.str_opt("grid"), Some("2x2x2"));
+        assert_eq!(a.get_or::<f64>("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn numeric_value_not_eaten_as_flag() {
+        let a = parse("run --count 5 --dry");
+        assert_eq!(a.get_or::<i32>("count", 0).unwrap(), 5);
+        assert!(a.flag("dry"));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

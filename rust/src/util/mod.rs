@@ -1,0 +1,64 @@
+//! Shared utilities: PRNG, JSON, CLI parsing, statistics/benching.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// bf16 round-to-nearest-even of an f32 (the paper's low-precision
+/// collective payload format, §V-B).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep NaN a NaN (bias rounding could carry into the exponent)
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round-to-nearest-even on the truncated 16 bits
+    let rounding_bias = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(rounding_bias)) >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round-trip an f32 through bf16 (what a bf16 all-reduce does to each
+/// rank's contribution).
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -2.0, 0.5, 256.0, -0.25] {
+            assert_eq!(bf16_round(v), v, "{v} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded() {
+        let mut r = rng::Rng::new(1);
+        for _ in 0..1000 {
+            let v = (r.f32() - 0.5) * 100.0;
+            if v.abs() < 1e-3 {
+                continue;
+            }
+            let e = (bf16_round(v) - v).abs() / v.abs();
+            assert!(e < 0.01, "relative error {e} too big for {v}");
+        }
+    }
+
+    #[test]
+    fn bf16_handles_specials() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,245 @@
+//! Deterministic PRNG utilities (no external `rand` in the offline build).
+//!
+//! `SplitMix64` seeds `Xoshiro256++`; both are well-studied, tiny, and —
+//! crucially for the paper's communication-free sampling contract — fully
+//! reproducible from a `(seed, step)` pair on every rank.
+
+/// SplitMix64: used to expand a user seed into generator state and to mix
+/// `(seed, step)` into an independent stream key.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded via four SplitMix64 expansions (never the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *v = splitmix64(x);
+        }
+        Rng { s }
+    }
+
+    /// Independent stream for a `(seed, step)` pair — the paper's shared
+    /// seed + step-index contract (§IV-B).
+    pub fn for_step(seed: u64, step: u64) -> Self {
+        Rng::new(splitmix64(seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F)))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (self.f64()).max(1e-300);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Sample `k` distinct values from `0..n` uniformly without replacement,
+    /// returned **sorted** — Eq. 20's `S ~ Uniform(C(V, B))`.
+    ///
+    /// Partial Fisher–Yates over a sparse (hash-map overlay) permutation:
+    /// `O(k)` time and space regardless of `n`.
+    pub fn sample_k_of_n_sorted(&mut self, k: usize, n: usize) -> Vec<u32> {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        let mut overlay: std::collections::HashMap<u64, u64> =
+            std::collections::HashMap::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k as u64 {
+            let j = i + self.below(n as u64 - i);
+            let vj = *overlay.get(&j).unwrap_or(&j);
+            let vi = *overlay.get(&i).unwrap_or(&i);
+            overlay.insert(j, vi);
+            out.push(vj as u32);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` draws from `0..n` *with* replacement.
+    pub fn sample_with_replacement(&mut self, k: usize, n: usize) -> Vec<u32> {
+        (0..k).map(|_| self.below(n as u64) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn for_step_streams_are_independent() {
+        let a: Vec<u64> = (0..8).map(|_| Rng::for_step(7, 0).next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| Rng::for_step(7, 1).next_u64()).collect();
+        assert_ne!(a, b);
+        // and reproducible
+        assert_eq!(Rng::for_step(7, 3).next_u64(), Rng::for_step(7, 3).next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_k_of_n_sorted_properties() {
+        let mut r = Rng::new(3);
+        for &(k, n) in &[(0usize, 5usize), (5, 5), (100, 1000), (1, 1)] {
+            let s = r.sample_k_of_n_sorted(k, n);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1], "sorted + distinct");
+            }
+            assert!(s.iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn sample_marginals_are_uniform() {
+        // property: P[v in S] = B/N for every vertex (Eq. 20)
+        let n = 200;
+        let k = 20;
+        let trials = 3000;
+        let mut counts = vec![0u32; n];
+        for t in 0..trials {
+            let mut r = Rng::for_step(99, t);
+            for v in r.sample_k_of_n_sorted(k, n) {
+                counts[v as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64; // = 300
+        for &c in &counts {
+            // ~5.5 sigma of binomial(3000, 0.1)
+            assert!(
+                (c as f64 - expect).abs() < 5.5 * (expect * (1.0 - 0.1)).sqrt(),
+                "count {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}
