@@ -1,23 +1,229 @@
 //! Microbenchmarks of the Layer-3 hot paths (perf-pass instrumentation,
-//! EXPERIMENTS.md §Perf): Algorithm 2 sampling, dense-ification, literal
-//! packing, the PJRT train step, shared-memory collectives, and the local
-//! GEMM kernels.
+//! EXPERIMENTS.md §Perf): the parallel tiled compute kernels (serial vs.
+//! multithreaded GEMM/SpMM/fused SpMM+GEMM), Algorithm 2 sampling,
+//! dense-ification, literal packing, the PJRT train step, shared-memory
+//! collectives, and the workspace train step.
+//!
+//! Kernel results are also written to `BENCH_kernels.json` as
+//! machine-readable records `(op, shape, threads, ns_per_iter, gflops)` so
+//! the perf trajectory can be tracked across PRs.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use scalegnn::comm::{CommWorld, Precision};
-use scalegnn::graph::{datasets, partition_2d};
+use scalegnn::graph::{datasets, generate, partition_2d};
 use scalegnn::grid::{Axis, Grid4D};
 use scalegnn::runtime::{lit_f32, Runtime};
 use scalegnn::sampling::{densify_into, DistributedSubgraphBuilder, UniformVertexSampler};
-use scalegnn::tensor::Mat;
+use scalegnn::tensor::{matmul_into_threads, pool, Mat};
 use scalegnn::trainer::batch::BatchMaker;
 use scalegnn::util::rng::Rng;
 use scalegnn::util::stats::bench;
 
+/// One machine-readable kernel measurement.
+struct KernelRecord {
+    op: &'static str,
+    shape: String,
+    threads: usize,
+    ns_per_iter: f64,
+    gflops: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_kernel_json(records: &[KernelRecord]) {
+    let mut out = String::from("{\n  \"kernels\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"threads\": {}, \
+             \"ns_per_iter\": {:.1}, \"gflops\": {:.3}}}{}\n",
+            json_escape(r.op),
+            json_escape(&r.shape),
+            r.threads,
+            r.ns_per_iter,
+            r.gflops,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_kernels.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_kernels.json ({} records)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
+}
+
+/// Benchmark `f` and record it: `flops` is the work per iteration.
+fn kbench<F: FnMut()>(
+    records: &mut Vec<KernelRecord>,
+    op: &'static str,
+    shape: String,
+    threads: usize,
+    flops: usize,
+    iters: usize,
+    f: F,
+) -> f64 {
+    let label = format!("{op} {shape} t={threads}");
+    let r = bench(&label, 2, iters, f);
+    println!("{}", r.report());
+    records.push(KernelRecord {
+        op,
+        shape,
+        threads,
+        ns_per_iter: r.mean_s * 1e9,
+        gflops: flops as f64 / r.mean_s / 1e9,
+    });
+    r.mean_s
+}
+
+fn thread_sweep() -> Vec<usize> {
+    let mut ts = vec![1usize, 2, 4];
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if !ts.contains(&avail) {
+        ts.push(avail);
+    }
+    ts.retain(|&t| t <= avail.max(4));
+    ts.dedup();
+    ts
+}
+
+fn kernel_section(records: &mut Vec<KernelRecord>) {
+    println!("--- parallel tiled kernels (serial baseline = t=1) ---");
+    let mut rng = Rng::new(1);
+
+    // GEMM at the realistic mini-batch shape: 8192 x 128 @ 128 x 128
+    let (m, k, n) = (8192usize, 128usize, 128usize);
+    let a = Mat::randn(m, k, &mut rng, 1.0);
+    let b = Mat::randn(k, n, &mut rng, 1.0);
+    let mut c = Mat::zeros(m, n);
+    let flops = 2 * m * k * n;
+    let mut serial = f64::NAN;
+    for t in thread_sweep() {
+        let dt = kbench(
+            records,
+            "matmul",
+            format!("{m}x{k}x{n}"),
+            t,
+            flops,
+            10,
+            || {
+                matmul_into_threads(&a, &b, &mut c, false, t);
+                std::hint::black_box(c.data[0]);
+            },
+        );
+        if t == 1 {
+            serial = dt;
+        } else {
+            println!("    -> speedup vs serial: {:.2}x", serial / dt);
+        }
+    }
+
+    // SpMM on an 8192-vertex rmat graph (~16 nnz/row), d = 128
+    let g = generate::rmat(13, 16, 7).gcn_normalize();
+    let x = Mat::randn(g.cols, 128, &mut rng, 1.0);
+    let mut y = Mat::zeros(g.rows, 128);
+    let spmm_flops = 2 * g.nnz() * 128;
+    let mut serial = f64::NAN;
+    for t in thread_sweep() {
+        let dt = kbench(
+            records,
+            "spmm",
+            format!("{}x{}nnz{}x128", g.rows, g.cols, g.nnz()),
+            t,
+            spmm_flops,
+            10,
+            || {
+                g.spmm_into_threads(&x, &mut y, t);
+                std::hint::black_box(y.data[0]);
+            },
+        );
+        if t == 1 {
+            serial = dt;
+        } else {
+            println!("    -> speedup vs serial: {:.2}x", serial / dt);
+        }
+    }
+
+    // fused SpMM+GEMM (aggregate + transform in one pass) vs unfused
+    let w = Mat::randn(128, 128, &mut rng, 1.0);
+    let mut agg = Mat::zeros(g.rows, 128);
+    let mut out = Mat::zeros(g.rows, 128);
+    let fused_flops = spmm_flops + 2 * g.rows * 128 * 128;
+    for t in thread_sweep() {
+        kbench(
+            records,
+            "spmm_matmul_fused",
+            format!("{}x128x128", g.rows),
+            t,
+            fused_flops,
+            10,
+            || {
+                g.spmm_matmul_into_threads(&x, &w, Some(&mut agg), &mut out, t);
+                std::hint::black_box(out.data[0]);
+            },
+        );
+    }
+    let t = pool::num_threads();
+    kbench(
+        records,
+        "spmm_then_matmul_unfused",
+        format!("{}x128x128", g.rows),
+        t,
+        fused_flops,
+        10,
+        || {
+            g.spmm_into_threads(&x, &mut agg, t);
+            matmul_into_threads(&agg, &w, &mut out, false, t);
+            std::hint::black_box(out.data[0]);
+        },
+    );
+
+    // workspace train step (zero-allocation serial hot loop)
+    let dims = scalegnn::model::GcnDims {
+        d_in: 128,
+        d_h: 128,
+        d_out: 32,
+        layers: 3,
+        dropout: 0.0,
+        weight_decay: 0.0,
+    };
+    let bsz = 1024usize;
+    let gb = generate::rmat(10, 16, 9).gcn_normalize();
+    let s: Vec<u32> = (0..bsz as u32).collect();
+    let mb = scalegnn::sampling::induce_rescaled(&gb, &s, 0.5);
+    let xb = Mat::randn(bsz, dims.d_in, &mut rng, 1.0);
+    let yb: Vec<u32> = (0..bsz).map(|i| (i % 32) as u32).collect();
+    let wb = vec![1.0f32; bsz];
+    let masks = vec![Mat::filled(bsz, dims.d_h, 1.0); dims.layers];
+    let mut params = scalegnn::model::init_params(&dims, 3);
+    let mut opt = scalegnn::model::AdamState::new(&dims);
+    let mut ws = scalegnn::model::StepWorkspace::new();
+    let step_flops = 3 * 2 * (2 * mb.adj.nnz() * 128 + 2 * bsz * 128 * 128);
+    kbench(
+        records,
+        "train_step_ws",
+        format!("B={bsz},d_h=128,L=3"),
+        pool::num_threads(),
+        step_flops,
+        10,
+        || {
+            let (l, _) = scalegnn::model::train_step_ws(
+                &dims, &mut params, &mut opt, &mb.adj, &mb.adj_t, &xb, &yb, &wb, &masks,
+                1e-3, &mut ws,
+            );
+            std::hint::black_box(l);
+        },
+    );
+    println!();
+}
+
 fn main() {
     println!("=== Layer-3 microbenchmarks ===\n");
+    let mut records: Vec<KernelRecord> = Vec::new();
+    kernel_section(&mut records);
+
     let data = Arc::new(datasets::load("products_sim").unwrap());
     let spec = datasets::spec("products_sim").unwrap();
     let b = spec.batch;
@@ -86,7 +292,11 @@ fn main() {
     );
 
     // --- densify ---
-    let mb = scalegnn::sampling::induce_rescaled(&data.adj, &sampler.sample(0), sampler.inclusion_prob());
+    let mb = scalegnn::sampling::induce_rescaled(
+        &data.adj,
+        &sampler.sample(0),
+        sampler.inclusion_prob(),
+    );
     let mut buf = vec![0.0f32; b * b];
     println!(
         "{}",
@@ -185,4 +395,6 @@ fn main() {
     } else {
         println!("(artifacts not built; skipping PJRT benches)");
     }
+
+    write_kernel_json(&records);
 }

@@ -80,20 +80,129 @@ impl Csr {
 
     /// y = self @ x  (SpMM into a dense matrix).
     pub fn spmm(&self, x: &crate::tensor::Mat) -> crate::tensor::Mat {
-        assert_eq!(self.cols, x.rows, "spmm shape");
         let mut y = crate::tensor::Mat::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut y);
+        y
+    }
+
+    /// Workspace SpMM: `y = self @ x` into a caller-provided `self.rows x
+    /// x.cols` buffer, row-block parallel.  Each worker owns a disjoint
+    /// block of output rows and runs the identical per-row accumulation, so
+    /// the result is bitwise identical for any thread count.
+    pub fn spmm_into(&self, x: &crate::tensor::Mat, y: &mut crate::tensor::Mat) {
+        self.spmm_into_threads(x, y, crate::tensor::pool::num_threads());
+    }
+
+    /// `spmm_into` with an explicit thread count (1 = serial reference).
+    pub fn spmm_into_threads(
+        &self,
+        x: &crate::tensor::Mat,
+        y: &mut crate::tensor::Mat,
+        threads: usize,
+    ) {
+        assert_eq!(self.cols, x.rows, "spmm shape");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        y.data.fill(0.0);
         let d = x.cols;
-        for r in 0..self.rows {
-            let (cs, vs) = self.row(r);
-            let yrow = &mut y.data[r * d..(r + 1) * d];
-            for (&c, &v) in cs.iter().zip(vs) {
-                let xrow = &x.data[c as usize * d..(c as usize + 1) * d];
-                for j in 0..d {
-                    yrow[j] += v * xrow[j];
+        // 2 flops per nnz per column, plus a row of x streamed per nnz
+        let work = 2 * self.nnz() * d;
+        let x_data = &x.data;
+        crate::tensor::pool::par_row_blocks(&mut y.data, self.rows, d, threads, work, |r0, yb| {
+            let rows = if d == 0 { 0 } else { yb.len() / d };
+            for i in 0..rows {
+                let (cs, vs) = self.row(r0 + i);
+                let yrow = &mut yb[i * d..(i + 1) * d];
+                for (&c, &v) in cs.iter().zip(vs) {
+                    let xrow = &x_data[c as usize * d..(c as usize + 1) * d];
+                    for j in 0..d {
+                        yrow[j] += v * xrow[j];
+                    }
                 }
             }
+        });
+    }
+
+    /// Fused aggregate + transform (the paper's kernel-fusion optimization):
+    /// `out = (self @ x) @ w` in a single pass over the rows, never
+    /// materializing the aggregated `self @ x`.  Optionally stores the
+    /// aggregation into `agg_out` (the backward pass needs it) at no extra
+    /// traversal cost.  Each output row is produced by the same per-row
+    /// aggregation followed by the same GEMM row kernel as the unfused
+    /// pair, so results are bitwise identical to `spmm` + `matmul`.
+    pub fn spmm_matmul_into(
+        &self,
+        x: &crate::tensor::Mat,
+        w: &crate::tensor::Mat,
+        mut agg_out: Option<&mut crate::tensor::Mat>,
+        out: &mut crate::tensor::Mat,
+    ) {
+        self.spmm_matmul_into_threads(x, w, agg_out.take(), out, crate::tensor::pool::num_threads())
+    }
+
+    /// `spmm_matmul_into` with an explicit thread count.
+    pub fn spmm_matmul_into_threads(
+        &self,
+        x: &crate::tensor::Mat,
+        w: &crate::tensor::Mat,
+        agg_out: Option<&mut crate::tensor::Mat>,
+        out: &mut crate::tensor::Mat,
+        threads: usize,
+    ) {
+        assert_eq!(self.cols, x.rows, "spmm_matmul shape (adj/x)");
+        assert_eq!(x.cols, w.rows, "spmm_matmul shape (x/w)");
+        assert_eq!((out.rows, out.cols), (self.rows, w.cols));
+        let d = x.cols;
+        let p = w.cols;
+        let agg = match agg_out {
+            Some(a) => {
+                assert_eq!((a.rows, a.cols), (self.rows, d));
+                a.data.fill(0.0);
+                Some(&mut a.data)
+            }
+            None => None,
+        };
+        out.data.fill(0.0);
+        let work = 2 * self.nnz() * d + 2 * self.rows * d * p;
+        let x_data = &x.data;
+        let w_data = &w.data;
+        match agg {
+            None => {
+                crate::tensor::pool::par_row_blocks(
+                    &mut out.data,
+                    self.rows,
+                    p,
+                    threads,
+                    work,
+                    |r0, ob| {
+                        let rows = if p == 0 { 0 } else { ob.len() / p };
+                        let mut aggrow = vec![0.0f32; d];
+                        for i in 0..rows {
+                            let (cs, vs) = self.row(r0 + i);
+                            aggrow.fill(0.0);
+                            for (&c, &v) in cs.iter().zip(vs) {
+                                let xrow = &x_data[c as usize * d..(c as usize + 1) * d];
+                                for j in 0..d {
+                                    aggrow[j] += v * xrow[j];
+                                }
+                            }
+                            gemm_row(&aggrow, w_data, p, &mut ob[i * p..(i + 1) * p]);
+                        }
+                    },
+                );
+            }
+            Some(agg_data) => {
+                crate::tensor::pool::par_row_blocks_pair(
+                    agg_data,
+                    d,
+                    &mut out.data,
+                    p,
+                    self.rows,
+                    threads,
+                    work,
+                    |r0, r1, ab, ob| fused_rows(self, r0, r1, x_data, w_data, d, p, ab, ob),
+                );
+            }
         }
-        y
     }
 
     /// Dense-ify into a Mat (only for small matrices / tests).
@@ -179,6 +288,41 @@ impl Csr {
     }
 }
 
+/// One GEMM output row: `crow += arow @ b` through the SAME inner kernel
+/// as `tensor::matmul_into` (a one-row block), so fused and unfused paths
+/// agree bitwise by construction rather than by parallel maintenance.
+#[inline]
+fn gemm_row(arow: &[f32], b: &[f32], n: usize, crow: &mut [f32]) {
+    crate::tensor::gemm_rows(arow, arow.len(), b, n, crow);
+}
+
+/// Fused aggregate+transform over rows [r0, r1): aggregation lands in
+/// `agg_block` (pre-zeroed), transformed rows in `out_block` (pre-zeroed).
+#[allow(clippy::too_many_arguments)]
+fn fused_rows(
+    a: &Csr,
+    r0: usize,
+    r1: usize,
+    x: &[f32],
+    w: &[f32],
+    d: usize,
+    p: usize,
+    agg_block: &mut [f32],
+    out_block: &mut [f32],
+) {
+    for (i, r) in (r0..r1).enumerate() {
+        let (cs, vs) = a.row(r);
+        let arow = &mut agg_block[i * d..(i + 1) * d];
+        for (&c, &v) in cs.iter().zip(vs) {
+            let xrow = &x[c as usize * d..(c as usize + 1) * d];
+            for j in 0..d {
+                arow[j] += v * xrow[j];
+            }
+        }
+        gemm_row(arow, w, p, &mut out_block[i * p..(i + 1) * p]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +375,54 @@ mod tests {
         let mut rng = Rng::new(4);
         let x = Mat::randn(8, 6, &mut rng, 1.0);
         assert!(a.spmm(&x).allclose(&a.to_dense().matmul(&x), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn parallel_spmm_bitwise_matches_serial() {
+        let a = random_csr(257, 120, 0.2, 8);
+        let mut rng = Rng::new(9);
+        let x = Mat::randn(120, 33, &mut rng, 1.0);
+        let mut serial = Mat::zeros(257, 33);
+        a.spmm_into_threads(&x, &mut serial, 1);
+        for threads in [2, 3, 4, 8] {
+            let mut par = Mat::zeros(257, 33);
+            a.spmm_into_threads(&x, &mut par, threads);
+            assert_eq!(serial.data, par.data, "spmm t={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_spmm_matmul_bitwise_matches_unfused() {
+        let a = random_csr(190, 90, 0.25, 10);
+        let mut rng = Rng::new(11);
+        let x = Mat::randn(90, 40, &mut rng, 1.0);
+        let w = Mat::randn(40, 24, &mut rng, 1.0);
+        let want_agg = a.spmm(&x);
+        let mut want = Mat::zeros(190, 24);
+        crate::tensor::matmul_into_threads(&want_agg, &w, &mut want, false, 1);
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = Mat::zeros(190, 24);
+            let mut agg = Mat::zeros(190, 40);
+            a.spmm_matmul_into_threads(&x, &w, Some(&mut agg), &mut out, threads);
+            assert_eq!(out.data, want.data, "fused (agg) t={threads}");
+            assert_eq!(agg.data, want_agg.data, "agg t={threads}");
+            let mut out2 = Mat::zeros(190, 24);
+            a.spmm_matmul_into_threads(&x, &w, None, &mut out2, threads);
+            assert_eq!(out2.data, want.data, "fused (no agg) t={threads}");
+        }
+    }
+
+    #[test]
+    fn spmm_handles_empty_rows_and_one_column() {
+        // rows 1 and 3 are empty; x has a single column
+        let a = Csr::from_triples(5, 4, vec![(0, 1, 2.0), (2, 0, 1.0), (2, 3, 0.5), (4, 2, 3.0)]);
+        let x = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = a.spmm(&x);
+        assert_eq!(y.data, vec![4.0, 0.0, 3.0, 0.0, 9.0]);
+        let mut fused = Mat::zeros(5, 1);
+        let w = Mat::eye(1);
+        a.spmm_matmul_into(&x, &w, None, &mut fused);
+        assert_eq!(fused.data, y.data);
     }
 
     #[test]

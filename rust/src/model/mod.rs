@@ -9,9 +9,17 @@
 //!
 //! Forward: Eqs. 4-12; backward: Eqs. 13-19; Adam matches
 //! `model.adam_update` bit-for-bit in structure (f32 arithmetic).
+//!
+//! The hot path is the workspace API (`StepWorkspace`, `train_step_ws`):
+//! forward/backward write into preallocated buffers, the per-layer
+//! aggregate+transform runs through the fused `Csr::spmm_matmul_into`
+//! kernel, and the input `x` and dropout masks are *borrowed*, never
+//! cloned — a steady-state training step performs no heap allocation on
+//! the serial path.  The original allocating `forward`/`backward`/
+//! `train_step` entry points are kept as thin wrappers.
 
 use crate::graph::Csr;
-use crate::tensor::{log_softmax, rmsnorm, Mat};
+use crate::tensor::{matmul_into, matmul_t_into, rmsnorm_into, t_matmul_into, Mat};
 use crate::util::rng::Rng;
 
 pub const RMS_EPS: f32 = 1e-6;
@@ -67,18 +75,18 @@ pub fn init_params(dims: &GcnDims, seed: u64) -> Params {
         .collect()
 }
 
-/// Per-layer forward cache for the backward pass.
+/// Per-layer forward cache for the backward pass.  Only what backward
+/// actually reads is kept; the layer input and dropout mask are *not*
+/// cloned here (the mask is an input and is passed to `backward` again).
+#[derive(Default)]
 pub struct LayerCache {
-    pub h_in: Mat,
     pub h_agg: Mat,
     pub xc: Mat,
     pub inv_rms: Vec<f32>,
-    pub mask: Mat,
 }
 
+#[derive(Default)]
 pub struct ForwardCache {
-    pub x: Mat,
-    pub h0: Mat,
     pub layers: Vec<LayerCache>,
     pub h_last: Mat,
 }
@@ -99,8 +107,102 @@ pub fn dropout_masks(dims: &GcnDims, rows: usize, rng: &mut Rng) -> Vec<Mat> {
         .collect()
 }
 
-/// Forward pass over an arbitrary (sparse) adjacency; `masks` omitted means
-/// eval mode (dropout off).
+/// Backward-pass scratch buffers, reused across steps.
+#[derive(Default)]
+struct BackwardScratch {
+    dh: Mat,
+    dxc: Mat,
+    dh_agg: Mat,
+    dh_conv: Mat,
+    dxn_row: Vec<f32>,
+}
+
+/// Preallocated forward/backward buffers for the zero-allocation training
+/// step.  Sized lazily on first use; reusable across steps and across
+/// mini-batches of the same shape (reshaping reuses the allocations).
+#[derive(Default)]
+pub struct StepWorkspace {
+    pub cache: ForwardCache,
+    pub logits: Mat,
+    pub dlogits: Mat,
+    pub grads: Params,
+    act: Mat,
+    bwd: BackwardScratch,
+}
+
+impl StepWorkspace {
+    pub fn new() -> StepWorkspace {
+        StepWorkspace::default()
+    }
+}
+
+/// Workspace forward pass over an arbitrary (sparse) adjacency; `masks`
+/// omitted means eval mode (dropout off).  Logits land in `ws.logits`,
+/// the backward inputs in `ws.cache`.  Per layer the aggregate (Eq. 5) and
+/// transform (Eq. 6) run through the fused SpMM+GEMM kernel.
+pub fn forward_ws(
+    dims: &GcnDims,
+    params: &Params,
+    adj: &Csr,
+    x: &Mat,
+    masks: Option<&[Mat]>,
+    ws: &mut StepWorkspace,
+) {
+    let rows = x.rows;
+    let dh = dims.d_h;
+    if let Some(ms) = masks {
+        assert_eq!(ms.len(), dims.layers, "one dropout mask per layer");
+    }
+    while ws.cache.layers.len() < dims.layers {
+        ws.cache.layers.push(LayerCache::default());
+    }
+    ws.cache.layers.truncate(dims.layers);
+
+    let StepWorkspace { cache, logits, act, .. } = ws;
+    let ForwardCache { layers, h_last } = cache;
+
+    // input projection (Eq. 4): h = x @ w_in
+    h_last.reset_for_overwrite(rows, dh);
+    matmul_into(x, &params[0], h_last, false);
+
+    for (l, lc) in layers.iter_mut().enumerate() {
+        let w = &params[1 + 2 * l];
+        let g = &params[2 + 2 * l];
+        lc.h_agg.reset_for_overwrite(rows, dh);
+        lc.xc.reset_for_overwrite(rows, dh);
+        // fused Eq. 5 + Eq. 6: xc = (adj @ h) @ w, keeping the aggregate
+        adj.spmm_matmul_into(h_last, w, Some(&mut lc.h_agg), &mut lc.xc);
+        // RMSNorm (Eq. 7)
+        lc.inv_rms.resize(rows, 0.0);
+        act.reset_for_overwrite(rows, dh);
+        rmsnorm_into(&lc.xc, g.row(0), RMS_EPS, act, &mut lc.inv_rms);
+        // ReLU (Eq. 8) + dropout (Eq. 9) + residual (Eq. 10), fused
+        // element-wise into the rolling h buffer
+        match masks {
+            Some(ms) => {
+                let m = &ms[l];
+                assert_eq!((m.rows, m.cols), (rows, dh), "mask shape");
+                for ((h, &a), &mv) in
+                    h_last.data.iter_mut().zip(&act.data).zip(&m.data)
+                {
+                    *h += a.max(0.0) * mv;
+                }
+            }
+            None => {
+                for (h, &a) in h_last.data.iter_mut().zip(&act.data) {
+                    *h += a.max(0.0);
+                }
+            }
+        }
+    }
+
+    // output head (Eq. 11)
+    logits.reset_for_overwrite(rows, dims.d_out);
+    matmul_into(h_last, &params[dims.n_params() - 1], logits, false);
+}
+
+/// Forward pass (allocating wrapper kept for oracles and tests); returns
+/// `(logits, cache)`.  The input `x` is only borrowed.
 pub fn forward(
     dims: &GcnDims,
     params: &Params,
@@ -108,134 +210,169 @@ pub fn forward(
     x: &Mat,
     masks: Option<&[Mat]>,
 ) -> (Mat, ForwardCache) {
-    let rows = x.rows;
-    let h0 = x.matmul(&params[0]); // Eq. 4
-    let mut h = h0.clone();
-    let mut layer_caches = Vec::with_capacity(dims.layers);
-    for l in 0..dims.layers {
-        let w = &params[1 + 2 * l];
-        let g = &params[2 + 2 * l];
-        let h_agg = adj.spmm(&h); // Eq. 5
-        let xc = h_agg.matmul(w); // Eq. 6
-        let (xn_scaled, inv_rms) = rmsnorm(&xc, g.row(0), RMS_EPS); // Eq. 7
-        let y = xn_scaled.relu(); // Eq. 8
-        let mask = match masks {
-            Some(ms) => ms[l].clone(),
-            None => Mat::filled(rows, dims.d_h, 1.0),
-        };
-        let yd = y.hadamard(&mask); // Eq. 9
-        let h_next = yd.add(&h); // Eq. 10
-        layer_caches.push(LayerCache { h_in: h, h_agg, xc, inv_rms, mask });
-        h = h_next;
-    }
-    let logits = h.matmul(&params[dims.n_params() - 1]); // Eq. 11
-    (
-        logits,
-        ForwardCache { x: x.clone(), h0, layers: layer_caches, h_last: h },
-    )
+    let mut ws = StepWorkspace::new();
+    forward_ws(dims, params, adj, x, masks, &mut ws);
+    (ws.logits, ws.cache)
 }
 
-/// Weighted cross-entropy + accuracy + logits gradient (Eq. 12 and the
-/// start of the backward pass).
-pub fn loss_and_grad(logits: &Mat, y: &[u32], w: &[f32]) -> (f32, f32, Mat) {
+/// Weighted cross-entropy + accuracy into a caller-provided gradient
+/// buffer (Eq. 12 and the start of the backward pass); no allocation.
+pub fn loss_and_grad_into(
+    logits: &Mat,
+    y: &[u32],
+    w: &[f32],
+    dlogits: &mut Mat,
+) -> (f32, f32) {
     let rows = logits.rows;
+    let cols = logits.cols;
     assert_eq!(y.len(), rows);
     assert_eq!(w.len(), rows);
-    let logp = log_softmax(logits);
+    dlogits.reset_for_overwrite(rows, cols);
     let denom: f32 = w.iter().sum::<f32>().max(1.0);
     let mut loss = 0.0f32;
     let mut correct = 0.0f32;
-    let mut dlogits = Mat::zeros(rows, logits.cols);
     for i in 0..rows {
         let wi = w[i];
         let yi = y[i] as usize;
-        let row = logp.row(i);
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|v| (v - mx).exp()).sum::<f32>().ln() + mx;
         if wi != 0.0 {
-            loss += -row[yi] * wi;
-            let arg = (0..logits.cols)
+            loss += -(row[yi] - lse) * wi;
+            let arg = (0..cols)
                 .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
                 .unwrap();
             if arg == yi {
                 correct += wi;
             }
         }
-        let drow = &mut dlogits.data[i * logits.cols..(i + 1) * logits.cols];
-        for j in 0..logits.cols {
-            let softmax = row[j].exp();
+        let drow = &mut dlogits.data[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            let softmax = (row[j] - lse).exp();
             let onehot = if j == yi { 1.0 } else { 0.0 };
             drow[j] = wi * (softmax - onehot) / denom;
         }
     }
-    (loss / denom, correct / denom, dlogits)
+    (loss / denom, correct / denom)
 }
 
-/// Backward pass (Eqs. 13-19); `adj_t` is the transposed adjacency.
-pub fn backward(
+/// Weighted cross-entropy + accuracy + logits gradient (allocating
+/// wrapper).
+pub fn loss_and_grad(logits: &Mat, y: &[u32], w: &[f32]) -> (f32, f32, Mat) {
+    let mut dlogits = Mat::zeros(logits.rows, logits.cols);
+    let (loss, acc) = loss_and_grad_into(logits, y, w, &mut dlogits);
+    (loss, acc, dlogits)
+}
+
+/// Workspace backward pass (Eqs. 13-19): gradients land in `ws.grads`.
+/// `adj_t` is the transposed adjacency; `x` and `masks` are the same
+/// borrowed inputs that were passed to `forward_ws` (the cache no longer
+/// stores copies of either).
+pub fn backward_ws(
     dims: &GcnDims,
     params: &Params,
-    cache: &ForwardCache,
     adj_t: &Csr,
-    dlogits: &Mat,
-) -> Params {
+    x: &Mat,
+    masks: Option<&[Mat]>,
+    ws: &mut StepWorkspace,
+) {
     let np = dims.n_params();
-    let mut grads: Params = dims
-        .param_shapes()
-        .into_iter()
-        .map(|(r, c)| Mat::zeros(r, c))
-        .collect();
+    assert_eq!(params.len(), np);
+    while ws.grads.len() < np {
+        ws.grads.push(Mat::default());
+    }
+    ws.grads.truncate(np);
+
+    let StepWorkspace { cache, dlogits, grads, bwd, .. } = ws;
+    // gradient shapes mirror the parameters; sizing from them keeps the
+    // steady-state step allocation-free (no shape-vector rebuild).  These
+    // use the zeroing reset: the RMSNorm scale gradients accumulate with
+    // `+=` and must start from zero.
+    for (g, p) in grads.iter_mut().zip(params.iter()) {
+        g.reset(p.rows, p.cols);
+    }
+
+    let rows = dlogits.rows;
+    let dcols = dims.d_h;
 
     // output head (Eqs. 13-14)
-    grads[np - 1] = cache.h_last.t_matmul(dlogits);
-    let mut dh = dlogits.matmul_t(&params[np - 1]);
+    t_matmul_into(&cache.h_last, dlogits, &mut grads[np - 1]);
+    bwd.dh.reset_for_overwrite(rows, dcols);
+    matmul_t_into(dlogits, &params[np - 1], &mut bwd.dh);
 
     for l in (0..dims.layers).rev() {
         let w = &params[1 + 2 * l];
         let g = &params[2 + 2 * l];
         let lc = &cache.layers[l];
-        let rows = dh.rows;
-        let dcols = dims.d_h;
 
         // element-wise backward: residual skip + dropout + relu + rmsnorm
-        let mut dxc = Mat::zeros(rows, dcols);
-        let mut dg = vec![0.0f32; dcols];
+        bwd.dxc.reset_for_overwrite(rows, dcols);
+        bwd.dxn_row.resize(dcols, 0.0);
+        let dg = &mut grads[2 + 2 * l];
         for i in 0..rows {
             let inv = lc.inv_rms[i];
             let xc_row = lc.xc.row(i);
-            let m_row = lc.mask.row(i);
-            let dh_row = dh.row(i);
+            let m_row = masks.map(|ms| ms[l].row(i));
+            let dh_row = bwd.dh.row(i);
             // dy0 = dh * mask * relu'(xn*g); xn = xc*inv
             // then dxn = dy0 * g; dg += dy0 * xn
             let mut dot = 0.0f32; // mean(dxn * xc)
-            let mut dxn_row = vec![0.0f32; dcols];
             for j in 0..dcols {
                 let xn = xc_row[j] * inv;
                 let y0 = xn * g.row(0)[j];
-                let dy0 = if y0 > 0.0 { dh_row[j] * m_row[j] } else { 0.0 };
-                dg[j] += dy0 * xn;
+                let dy0 = if y0 > 0.0 {
+                    match m_row {
+                        Some(m) => dh_row[j] * m[j],
+                        None => dh_row[j],
+                    }
+                } else {
+                    0.0
+                };
+                dg.data[j] += dy0 * xn;
                 let dxn = dy0 * g.row(0)[j];
-                dxn_row[j] = dxn;
+                bwd.dxn_row[j] = dxn;
                 dot += dxn * xc_row[j];
             }
             dot /= dcols as f32;
-            let dxc_row = &mut dxc.data[i * dcols..(i + 1) * dcols];
+            let dxc_row = &mut bwd.dxc.data[i * dcols..(i + 1) * dcols];
             for j in 0..dcols {
-                dxc_row[j] = inv * (dxn_row[j] - xc_row[j] * dot * inv * inv);
+                dxc_row[j] = inv * (bwd.dxn_row[j] - xc_row[j] * dot * inv * inv);
             }
         }
-        grads[2 + 2 * l] = Mat::from_vec(1, dcols, dg);
 
         // GEMM backward (Eqs. 15-16)
-        grads[1 + 2 * l] = lc.h_agg.t_matmul(&dxc);
-        let dh_agg = dxc.matmul_t(w);
+        t_matmul_into(&lc.h_agg, &bwd.dxc, &mut grads[1 + 2 * l]);
+        bwd.dh_agg.reset_for_overwrite(rows, dcols);
+        matmul_t_into(&bwd.dxc, w, &mut bwd.dh_agg);
 
-        // SpMM backward (Eq. 17) + residual merge
-        let dh_conv = adj_t.spmm(&dh_agg);
-        dh = dh_conv.add(&dh); // skip path carries dh unchanged
+        // SpMM backward (Eq. 17) + residual merge; skip path carries dh
+        bwd.dh_conv.reset_for_overwrite(rows, dcols);
+        adj_t.spmm_into(&bwd.dh_agg, &mut bwd.dh_conv);
+        bwd.dh.add_assign(&bwd.dh_conv);
     }
 
     // input projection (Eqs. 18-19)
-    grads[0] = cache.x.t_matmul(&dh);
-    grads
+    t_matmul_into(x, &bwd.dh, &mut grads[0]);
+}
+
+/// Backward pass (allocating wrapper).  `adj_t` is the transposed
+/// adjacency; `x`/`masks` are the forward inputs (borrowed, not cached).
+pub fn backward(
+    dims: &GcnDims,
+    params: &Params,
+    cache: ForwardCache,
+    adj_t: &Csr,
+    dlogits: &Mat,
+    x: &Mat,
+    masks: Option<&[Mat]>,
+) -> Params {
+    let mut ws = StepWorkspace {
+        cache,
+        dlogits: dlogits.clone(),
+        ..StepWorkspace::default()
+    };
+    backward_ws(dims, params, adj_t, x, masks, &mut ws);
+    ws.grads
 }
 
 /// Adam optimizer state.
@@ -280,7 +417,33 @@ impl AdamState {
     }
 }
 
-/// One full reference training step (sample-side inputs already prepared).
+/// One full reference training step through the preallocated workspace:
+/// fused forward, in-place loss gradient, workspace backward, Adam.  On
+/// the serial path a steady-state call performs no heap allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_ws(
+    dims: &GcnDims,
+    params: &mut Params,
+    opt: &mut AdamState,
+    adj: &Csr,
+    adj_t: &Csr,
+    x: &Mat,
+    y: &[u32],
+    w: &[f32],
+    masks: &[Mat],
+    lr: f32,
+    ws: &mut StepWorkspace,
+) -> (f32, f32) {
+    forward_ws(dims, params, adj, x, Some(masks), ws);
+    let StepWorkspace { logits, dlogits, .. } = ws;
+    let (loss, acc) = loss_and_grad_into(logits, y, w, dlogits);
+    backward_ws(dims, params, adj_t, x, Some(masks), ws);
+    opt.update(dims, params, &ws.grads, lr);
+    (loss, acc)
+}
+
+/// One full reference training step (allocating wrapper around
+/// `train_step_ws` with a throwaway workspace).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
     dims: &GcnDims,
@@ -294,11 +457,8 @@ pub fn train_step(
     masks: &[Mat],
     lr: f32,
 ) -> (f32, f32) {
-    let (logits, cache) = forward(dims, params, adj, x, Some(masks));
-    let (loss, acc, dlogits) = loss_and_grad(&logits, y, w);
-    let grads = backward(dims, params, &cache, adj_t, &dlogits);
-    opt.update(dims, params, &grads, lr);
-    (loss, acc)
+    let mut ws = StepWorkspace::new();
+    train_step_ws(dims, params, opt, adj, adj_t, x, y, w, masks, lr, &mut ws)
 }
 
 #[cfg(test)]
@@ -349,7 +509,7 @@ mod tests {
         let (adj, adj_t, x, y, w) = setup(12);
         let (logits, cache) = forward(&d, &params, &adj, &x, None);
         let (_, _, dlogits) = loss_and_grad(&logits, &y, &w);
-        let grads = backward(&d, &params, &cache, &adj_t, &dlogits);
+        let grads = backward(&d, &params, cache, &adj_t, &dlogits, &x, None);
 
         let loss_of = |params: &Params| -> f64 {
             let (lg, _) = forward(&d, params, &adj, &x, None);
@@ -392,6 +552,48 @@ mod tests {
             losses.push(l);
         }
         assert!(losses[29] < losses[0] * 0.6, "{:?}", &losses[..5]);
+    }
+
+    #[test]
+    fn workspace_step_matches_allocating_step_bitwise() {
+        let d = dims();
+        let (adj, adj_t, x, y, w) = setup(16);
+        let masks = vec![Mat::filled(16, 8, 1.0); 2];
+
+        let mut p1 = init_params(&d, 4);
+        let mut o1 = AdamState::new(&d);
+        let mut p2 = p1.clone();
+        let mut o2 = o1.clone();
+        let mut ws = StepWorkspace::new();
+        for _ in 0..5 {
+            let (l1, a1) =
+                train_step(&d, &mut p1, &mut o1, &adj, &adj_t, &x, &y, &w, &masks, 5e-3);
+            let (l2, a2) = train_step_ws(
+                &d, &mut p2, &mut o2, &adj, &adj_t, &x, &y, &w, &masks, 5e-3, &mut ws,
+            );
+            assert_eq!(l1, l2);
+            assert_eq!(a1, a2);
+        }
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.data, b.data, "params diverged");
+        }
+    }
+
+    #[test]
+    fn workspace_is_reusable_across_batch_shapes() {
+        let d = dims();
+        let mut ws = StepWorkspace::new();
+        for &b in &[16usize, 8, 24] {
+            let (adj, adj_t, x, y, w) = setup(b);
+            let mut params = init_params(&d, 5);
+            let mut opt = AdamState::new(&d);
+            let masks = vec![Mat::filled(b, 8, 1.0); 2];
+            let (l, _) = train_step_ws(
+                &d, &mut params, &mut opt, &adj, &adj_t, &x, &y, &w, &masks, 5e-3, &mut ws,
+            );
+            assert!(l.is_finite(), "b={b}");
+            assert_eq!(ws.logits.rows, b);
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! (replicas stay in sync because their gradients are identical after the
 //! contraction + DP all-reduces).
 
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use super::{feature_layouts, shard_dropout_mask, Layout, PmmCtx, PmmMat};
@@ -83,6 +84,91 @@ struct LayerCacheP {
     adj: LocalSubgraph,
 }
 
+/// §V-A sampling/compute overlap for the PMM engine: a dedicated thread
+/// owns the per-layer Algorithm-2 builders and constructs the subgraphs of
+/// step `t+1` while the rank computes step `t`.  Builders are deterministic
+/// per step, so speculative results are always valid; out-of-order step
+/// requests (rare, tests only) fall back to an on-demand build.
+struct SubgraphPrefetcher {
+    req_tx: Option<Sender<u64>>,
+    res_rx: Receiver<(u64, Vec<LocalSubgraph>)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// a finished speculative result not yet consumed
+    pending: Option<(u64, Vec<LocalSubgraph>)>,
+    /// the step of the newest request sent but not yet received
+    in_flight: Option<u64>,
+}
+
+impl SubgraphPrefetcher {
+    fn new(mut builders: Vec<DistributedSubgraphBuilder>) -> SubgraphPrefetcher {
+        let (req_tx, req_rx) = channel::<u64>();
+        let (res_tx, res_rx) = channel::<(u64, Vec<LocalSubgraph>)>();
+        let handle = std::thread::spawn(move || {
+            while let Ok(step) = req_rx.recv() {
+                let subs: Vec<LocalSubgraph> =
+                    builders.iter_mut().map(|b| b.build(step)).collect();
+                if res_tx.send((step, subs)).is_err() {
+                    break; // engine dropped
+                }
+            }
+        });
+        SubgraphPrefetcher {
+            req_tx: Some(req_tx),
+            res_rx,
+            handle: Some(handle),
+            pending: None,
+            in_flight: None,
+        }
+    }
+
+    /// Blocking fetch of step `step`'s subgraphs; afterwards requests
+    /// `step+1` speculatively so its construction overlaps this step's
+    /// compute.  The blocking time (what `timers.sampling` measures) is
+    /// ~zero once the pipeline is warm.
+    fn take(&mut self, step: u64) -> Vec<LocalSubgraph> {
+        let tx = self.req_tx.as_ref().expect("prefetcher closed");
+        // park a finished speculative result, if any
+        if self.pending.is_none() {
+            if let Ok(r) = self.res_rx.try_recv() {
+                if Some(r.0) == self.in_flight {
+                    self.in_flight = None;
+                }
+                self.pending = Some(r);
+            }
+        }
+        let hit = matches!(&self.pending, Some((s, _)) if *s == step);
+        let subs = if hit {
+            self.pending.take().expect("checked above").1
+        } else {
+            self.pending = None;
+            if self.in_flight != Some(step) {
+                tx.send(step).expect("subgraph prefetcher died");
+            }
+            self.in_flight = None;
+            loop {
+                match self.res_rx.recv() {
+                    Ok((s, subs)) if s == step => break subs,
+                    Ok(_) => continue, // stale speculative result
+                    Err(_) => panic!("subgraph prefetcher died"),
+                }
+            }
+        };
+        if tx.send(step + 1).is_ok() {
+            self.in_flight = Some(step + 1);
+        }
+        subs
+    }
+}
+
+impl Drop for SubgraphPrefetcher {
+    fn drop(&mut self) {
+        self.req_tx.take(); // closes the channel; worker drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One rank's engine state.
 pub struct PmmGcn<'a> {
     pub ctx: PmmCtx<'a>,
@@ -101,7 +187,10 @@ pub struct PmmGcn<'a> {
     adam_m: Vec<Vec<f32>>,
     adam_v: Vec<Vec<f32>>,
     t: f32,
-    builders: Vec<DistributedSubgraphBuilder>,
+    prefetcher: SubgraphPrefetcher,
+    // reduction scratch reused across layers and steps (RMSNorm backward)
+    scratch_dots: Vec<f32>,
+    scratch_dxn: Vec<f32>,
     pub timers: PmmTimers,
 }
 
@@ -202,7 +291,9 @@ impl<'a> PmmGcn<'a> {
             adam_m,
             adam_v,
             t: 0.0,
-            builders,
+            prefetcher: SubgraphPrefetcher::new(builders),
+            scratch_dots: Vec::new(),
+            scratch_dxn: Vec::new(),
             timers: PmmTimers::default(),
         }
     }
@@ -249,19 +340,21 @@ impl<'a> PmmGcn<'a> {
 
     /// Full forward for rows described by per-axis bounds; used by both
     /// train (sampled, step-dependent bounds) and eval (static bounds).
+    /// Returns the input-feature shard too so backward can reuse it.
     #[allow(clippy::type_complexity)]
     fn forward_sampled(
         &mut self,
         step: u64,
         train: bool,
-    ) -> (PmmMat, Vec<LayerCacheP>, Vec<u32>, PmmMat) {
+    ) -> (PmmMat, Vec<LayerCacheP>, Vec<u32>, PmmMat, PmmMat) {
         let dims = self.dims;
-        // Algorithm 2 on every layer's builder (communication-free)
-        let subs: Vec<LocalSubgraph> = timed!(
-            self.sampling,
-            (0..dims.layers).map(|l| self.builders[l].build(step)).collect()
-        );
-        let sample = subs[0].sample.clone();
+        // Algorithm 2 on every layer's builder runs on the prefetch thread;
+        // this measures only the blocking wait (§V-A overlap)
+        let mut subs: Vec<LocalSubgraph> =
+            timed!(self.sampling, self.prefetcher.take(step));
+        // every layer carries the identical sample; move it out instead of
+        // cloning (the cached LocalSubgraph only needs its adjacency)
+        let sample = std::mem::take(&mut subs[0].sample);
         let n = self.data.n;
         let cb = |ax: Axis| -> Arc<Vec<usize>> {
             Arc::new(compact_bounds(&sample, n, self.ctx.axis_size(ax)))
@@ -305,7 +398,7 @@ impl<'a> PmmGcn<'a> {
             } else {
                 Mat::filled(xn.local.rows, xn.local.cols, 1.0)
             };
-            let mut fd = xn.clone();
+            let mut fd = xn; // consume: xn is not needed past this point
             timed!(self.elementwise, {
                 for (o, &m) in fd.local.data.iter_mut().zip(&mask.data) {
                     *o = o.max(0.0) * m;
@@ -325,7 +418,7 @@ impl<'a> PmmGcn<'a> {
 
         // output head
         let logits = self.ctx.mm(&f, &self.w_out);
-        (logits, caches, sample, f)
+        (logits, caches, sample, f, x_in)
     }
 
     /// Parallel masked cross-entropy: returns (loss, acc, dlogits).
@@ -375,8 +468,14 @@ impl<'a> PmmGcn<'a> {
             .collect();
         let args = self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_arg);
 
-        // loss/acc partial sums + dlogits
-        let mut dlogits = logits.clone();
+        // loss/acc partial sums + dlogits (fresh buffer, fully overwritten
+        // below — no need to copy the logits data)
+        let mut dlogits = PmmMat {
+            layout: logits.layout,
+            row_bounds: logits.row_bounds.clone(),
+            col_bounds: logits.col_bounds.clone(),
+            local: Mat::zeros(rows, cols),
+        };
         let mut sums = vec![0.0f32; 3]; // [loss, correct, denom]
         for r in 0..rows {
             let y = y_of(r0 + r);
@@ -425,14 +524,13 @@ impl<'a> PmmGcn<'a> {
     /// backward, DP gradient all-reduce, rank-local Adam.
     pub fn train_step(&mut self, step: u64, lr: f32) -> PmmStepOutput {
         let dims = self.dims;
-        let (logits, caches, sample, f_last) = self.forward_sampled(step, true);
+        let (logits, caches, sample, f_last, x_in) = self.forward_sampled(step, true);
 
         let data = self.data.clone();
-        let sample_arc = sample.clone();
         let (loss, acc, dlogits) = self.parallel_loss(
             &logits,
-            |i| data.labels[sample_arc[i] as usize],
-            |i| if data.split[sample_arc[i] as usize] == 0 { 1.0 } else { 0.0 },
+            |i| data.labels[sample[i] as usize],
+            |i| if data.split[sample[i] as usize] == 0 { 1.0 } else { 0.0 },
         );
 
         // ---- backward ----
@@ -452,14 +550,25 @@ impl<'a> PmmGcn<'a> {
             let fl = self.f_layouts[l];
             let (t_ax, r_ax) = (fl.third(), fl.row_axis);
 
-            // element-wise backward (dropout, relu, rmsnorm w/ AR'd dot)
+            // element-wise backward (dropout, relu, rmsnorm w/ AR'd dot);
+            // dxc is fully overwritten below, and the reduction scratch
+            // (dots, dxn) is reused across layers and steps
             let rows = df.local.rows;
             let cols = df.local.cols;
             let gslice = &self.g[l];
-            let mut dxc = df.clone();
+            let mut dxc = PmmMat {
+                layout: df.layout,
+                row_bounds: df.row_bounds.clone(),
+                col_bounds: df.col_bounds.clone(),
+                local: Mat::zeros(rows, cols),
+            };
             let mut dg = vec![0.0f32; cols];
-            let mut dots = vec![0.0f32; rows];
-            let mut dxn_all = vec![0.0f32; rows * cols];
+            self.scratch_dots.clear();
+            self.scratch_dots.resize(rows, 0.0);
+            self.scratch_dxn.clear();
+            self.scratch_dxn.resize(rows * cols, 0.0);
+            let dots = &mut self.scratch_dots;
+            let dxn_all = &mut self.scratch_dxn;
             timed!(self.elementwise, {
                 for r in 0..rows {
                     let inv = lc.inv[r];
@@ -484,7 +593,7 @@ impl<'a> PmmGcn<'a> {
             self.ctx.world.all_reduce(
                 self.ctx.rank,
                 df.layout.col_axis,
-                &mut dots,
+                dots,
                 Precision::Fp32,
             );
             // dg is replicated over C_l; sum over row blocks (T_l)
@@ -528,8 +637,8 @@ impl<'a> PmmGcn<'a> {
         d_w.reverse();
         d_g.reverse();
 
-        // input projection backward (Eq. 18)
-        let x_in = timed!(self.other, self.input_shard(&sample, &cb(Axis::X, &sample)));
+        // input projection backward (Eq. 18); the feature shard gathered in
+        // the forward pass is reused instead of re-gathered
         let d_win = self.ctx.mm_ta(&x_in, &df);
 
         // ---- DP gradient all-reduce + mean ----

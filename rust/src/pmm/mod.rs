@@ -169,12 +169,26 @@ impl<'a> PmmCtx<'a> {
     }
 
     /// mm: A(r,k) @ B(k,c) -> C(r,c), all-reduce over k.
+    ///
+    /// Rank-local kernels run single-threaded on purpose: every grid rank
+    /// is already its own thread (it models one device), so nesting the
+    /// parallel kernels here would oversubscribe the host and charge spawn
+    /// overhead to the per-phase timers.
     pub fn mm(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
         let k_axis = a.layout.col_axis;
         assert_eq!(k_axis, b.layout.row_axis, "contraction axes must match");
         let out_layout = Layout::new(a.layout.row_axis, b.layout.col_axis);
         debug_assert_eq!(a.col_bounds.as_slice(), b.row_bounds.as_slice());
-        let mut c = self.time(|| a.local.matmul(&b.local), |t| &mut t.gemm);
+        let mut c = self.time(
+            || {
+                let mut c = Mat::zeros(a.local.rows, b.local.cols);
+                // accumulate over the zeroed buffer: identical result, one
+                // memset instead of two inside the timed section
+                crate::tensor::matmul_into_threads(&a.local, &b.local, &mut c, true, 1);
+                c
+            },
+            |t| &mut t.gemm,
+        );
         self.all_reduce(k_axis, &mut c.data, self.tp_precision);
         PmmMat {
             layout: out_layout,
@@ -190,7 +204,14 @@ impl<'a> PmmCtx<'a> {
         assert_eq!(k_axis, b.layout.row_axis);
         let out_layout = Layout::new(a.layout.col_axis, b.layout.col_axis);
         debug_assert_eq!(a.row_bounds.as_slice(), b.row_bounds.as_slice());
-        let mut c = self.time(|| a.local.t_matmul(&b.local), |t| &mut t.gemm);
+        let mut c = self.time(
+            || {
+                let mut c = Mat::zeros(a.local.cols, b.local.cols);
+                crate::tensor::t_matmul_into_threads(&a.local, &b.local, &mut c, 1);
+                c
+            },
+            |t| &mut t.gemm,
+        );
         self.all_reduce(k_axis, &mut c.data, self.tp_precision);
         PmmMat {
             layout: out_layout,
@@ -206,7 +227,14 @@ impl<'a> PmmCtx<'a> {
         assert_eq!(k_axis, b.layout.col_axis);
         let out_layout = Layout::new(a.layout.row_axis, b.layout.row_axis);
         debug_assert_eq!(a.col_bounds.as_slice(), b.col_bounds.as_slice());
-        let mut c = self.time(|| a.local.matmul_t(&b.local), |t| &mut t.gemm);
+        let mut c = self.time(
+            || {
+                let mut c = Mat::zeros(a.local.rows, b.local.rows);
+                crate::tensor::matmul_t_into_threads(&a.local, &b.local, &mut c, 1);
+                c
+            },
+            |t| &mut t.gemm,
+        );
         self.all_reduce(k_axis, &mut c.data, self.tp_precision);
         PmmMat {
             layout: out_layout,

@@ -3,14 +3,33 @@
 //! reductions.  This backs the in-Rust reference model (`model::`), the
 //! rank-local compute of the 3D-PMM engine, and test oracles.
 //!
-//! The hot GEMM uses i-k-j loop order with an 8-wide j unroll so LLVM
-//! auto-vectorizes; see EXPERIMENTS.md §Perf for measured numbers.
+//! The hot GEMMs are **row-block parallel** (see `tensor::pool`) and
+//! j/k-tiled so the streamed B panel stays cache-resident; every worker
+//! runs the identical serial inner kernel over a disjoint block of output
+//! rows, so results are bitwise identical for any thread count (the
+//! per-element accumulation order over k never changes).  Thread count
+//! comes from `PALLAS_THREADS` (1 = serial) or the machine's available
+//! parallelism; see EXPERIMENTS.md §Perf for measured numbers.
+
+pub mod pool;
+
+/// Column tile of the GEMM inner loops: the B panel touched by one tile is
+/// `k x JT` floats, sized to stay L2-resident across an entire row block.
+const GEMM_JT: usize = 256;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// The default matrix is the 0 x 0 placeholder used by workspaces before
+/// their first sizing (`Mat::reset` grows it in place).
+impl Default for Mat {
+    fn default() -> Mat {
+        Mat { rows: 0, cols: 0, data: Vec::new() }
+    }
 }
 
 impl Mat {
@@ -53,6 +72,25 @@ impl Mat {
         }
     }
 
+    /// Reshape in place to `rows x cols`, reusing the allocation when
+    /// capacity suffices; contents are reset to zero.  The workspace
+    /// primitive behind the zero-allocation training step.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// As `reset` but without zeroing surviving contents — for buffers the
+    /// next kernel fully overwrites (saves a memset per buffer per step).
+    /// Newly grown elements are still zeroed.
+    pub fn reset_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
@@ -67,54 +105,27 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// C = A @ B (blocked i-k-j).
+    /// C = A @ B (row-block parallel, j-tiled i-k-j).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
         let mut c = Mat::zeros(self.rows, b.cols);
-        matmul_into(self, b, &mut c, false);
+        // accumulate over the freshly zeroed buffer: bitwise identical to
+        // the non-accumulate path, minus its redundant second memset
+        matmul_into(self, b, &mut c, true);
         c
     }
 
     /// C = A^T @ B without materializing A^T.
     pub fn t_matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.rows, b.rows, "t_matmul");
-        let (k, m, n) = (self.rows, self.cols, b.cols);
-        let mut c = Mat::zeros(m, n);
-        // c[i,j] = sum_k a[k,i] * b[k,j]  -> k-i-j order, rows of b stream
-        for kk in 0..k {
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
-                }
-            }
-        }
+        let mut c = Mat::zeros(self.cols, b.cols);
+        t_matmul_into(self, b, &mut c);
         c
     }
 
     /// C = A @ B^T without materializing B^T.
     pub fn matmul_t(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.cols, "matmul_t");
-        let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut c = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
-                }
-                crow[j] = acc;
-            }
-        }
+        let mut c = Mat::zeros(self.rows, b.rows);
+        matmul_t_into(self, b, &mut c);
         c
     }
 
@@ -223,35 +234,137 @@ impl Mat {
     }
 }
 
-/// `c += a @ b` (or `c = a @ b` if `accumulate` is false over a zeroed c).
-/// i-k-j ordering: the inner loop streams rows of `b` and `c`.
-pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+/// Serial inner kernel shared by every `matmul` path: accumulate
+/// `c_block += a_block @ b` over one block of rows, i-k-j order with a
+/// zero-skip on A entries (pays off on dense-ified sparse adjacencies) and
+/// a j-tile so the touched B panel stays cache-resident.  For every output
+/// element the accumulation order over k is ascending — the invariant that
+/// makes serial and row-parallel execution bitwise identical.
+#[inline]
+pub(crate) fn gemm_rows(a_block: &[f32], k: usize, b: &[f32], n: usize, c_block: &mut [f32]) {
+    let rows = if n == 0 { 0 } else { c_block.len() / n };
+    let mut j0 = 0usize;
+    while j0 < n {
+        let j1 = (j0 + GEMM_JT).min(n);
+        for i in 0..rows {
+            let arow = &a_block[i * k..(i + 1) * k];
+            let crow = &mut c_block[i * n + j0..i * n + j1];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n + j0..kk * n + j1];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += av * bj;
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// `c += a @ b` (or `c = a @ b` if `accumulate` is false) with an explicit
+/// thread count (1 = serial reference path).
+pub fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool, threads: usize) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     if !accumulate {
         c.data.fill(0.0);
     }
-    let n = b.cols;
-    for i in 0..a.rows {
-        let arow = &a.data[i * a.cols..(i + 1) * a.cols];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // pays off on dense-ified sparse adjacencies
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+    let (k, n) = (a.cols, b.cols);
+    let work = 2 * a.rows * k * n;
+    let (a_data, b_data) = (&a.data, &b.data);
+    pool::par_row_blocks(&mut c.data, a.rows, n, threads, work, |r0, c_block| {
+        let rows = if n == 0 { 0 } else { c_block.len() / n };
+        gemm_rows(&a_data[r0 * k..(r0 + rows) * k], k, b_data, n, c_block);
+    });
+}
+
+/// `c += a @ b` (or `c = a @ b` if `accumulate` is false over a zeroed c),
+/// parallel over row blocks; bitwise identical to the serial path.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    matmul_into_threads(a, b, c, accumulate, pool::num_threads());
+}
+
+/// `c = a^T @ b` without materializing `a^T`, explicit thread count.
+/// Parallel over blocks of output rows (columns of `a`); within a block the
+/// k loop stays outermost so contiguous segments of `a`'s rows stream, and
+/// the per-element accumulation order over k is unchanged.
+pub fn t_matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.rows, b.rows, "t_matmul");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (m, n));
+    c.data.fill(0.0);
+    let work = 2 * k * m * n;
+    let (a_data, b_data) = (&a.data, &b.data);
+    pool::par_row_blocks(&mut c.data, m, n, threads, work, |i0, c_block| {
+        let rows = if n == 0 { 0 } else { c_block.len() / n };
+        for kk in 0..k {
+            let brow = &b_data[kk * n..(kk + 1) * n];
+            let aseg = &a_data[kk * m + i0..kk * m + i0 + rows];
+            for (ii, &av) in aseg.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c_block[ii * n..(ii + 1) * n];
+                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                    *cj += av * bj;
+                }
             }
         }
-    }
+    });
+}
+
+/// `c = a^T @ b` without materializing `a^T`.
+pub fn t_matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    t_matmul_into_threads(a, b, c, pool::num_threads());
+}
+
+/// `c = a @ b^T` without materializing `b^T`, explicit thread count.
+/// Row-parallel dot-product form; each output element is one dot product,
+/// so parallelism cannot change any accumulation order.
+pub fn matmul_t_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols, b.cols, "matmul_t");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (m, n));
+    let work = 2 * m * k * n;
+    let (a_data, b_data) = (&a.data, &b.data);
+    pool::par_row_blocks(&mut c.data, m, n, threads, work, |r0, c_block| {
+        let rows = if n == 0 { 0 } else { c_block.len() / n };
+        for ii in 0..rows {
+            let arow = &a_data[(r0 + ii) * k..(r0 + ii + 1) * k];
+            let crow = &mut c_block[ii * n..(ii + 1) * n];
+            for j in 0..n {
+                let brow = &b_data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                crow[j] = acc;
+            }
+        }
+    });
+}
+
+/// `c = a @ b^T` without materializing `b^T`.
+pub fn matmul_t_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_t_into_threads(a, b, c, pool::num_threads());
 }
 
 /// RMSNorm over rows with learned scale g (Eq. 7); returns (out, inv_rms).
 pub fn rmsnorm(x: &Mat, g: &[f32], eps: f32) -> (Mat, Vec<f32>) {
-    assert_eq!(g.len(), x.cols);
     let mut out = Mat::zeros(x.rows, x.cols);
     let mut inv = vec![0.0f32; x.rows];
+    rmsnorm_into(x, g, eps, &mut out, &mut inv);
+    (out, inv)
+}
+
+/// Workspace variant of `rmsnorm`: writes into caller-provided `out`
+/// (already `x.rows x x.cols`) and `inv` (len `x.rows`).
+pub fn rmsnorm_into(x: &Mat, g: &[f32], eps: f32, out: &mut Mat, inv: &mut [f32]) {
+    assert_eq!(g.len(), x.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols));
+    assert_eq!(inv.len(), x.rows);
     for r in 0..x.rows {
         let row = x.row(r);
         let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
@@ -262,7 +375,6 @@ pub fn rmsnorm(x: &Mat, g: &[f32], eps: f32) -> (Mat, Vec<f32>) {
             orow[j] = row[j] * iv * g[j];
         }
     }
-    (out, inv)
 }
 
 /// Row-wise log-softmax.
@@ -310,6 +422,24 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matmul_bitwise_matches_serial() {
+        let mut r = Rng::new(12);
+        for &(m, k, n) in &[(1, 9, 5), (7, 3, 1), (65, 33, 129), (300, 17, 260)] {
+            let a = Mat::randn(m, k, &mut r, 1.0);
+            let b = Mat::randn(k, n, &mut r, 1.0);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into_threads(&a, &b, &mut serial, false, 1);
+            for threads in [2, 3, 4, 8] {
+                let mut par = Mat::zeros(m, n);
+                // MIN_PARALLEL_WORK may route small shapes serially, which
+                // is trivially identical; larger ones genuinely fan out.
+                matmul_into_threads(&a, &b, &mut par, false, threads);
+                assert_eq!(serial.data, par.data, "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn transposed_variants_match() {
         let mut r = Rng::new(3);
         let a = Mat::randn(9, 13, &mut r, 1.0);
@@ -317,6 +447,51 @@ mod tests {
         assert!(a.t_matmul(&b).allclose(&a.transpose().matmul(&b), 1e-4, 1e-4));
         let c = Mat::randn(5, 13, &mut r, 1.0);
         assert!(a.matmul_t(&c).allclose(&a.matmul(&c.transpose()), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn transposed_variants_bitwise_match_serial() {
+        let mut r = Rng::new(13);
+        let a = Mat::randn(130, 70, &mut r, 1.0);
+        let b = Mat::randn(130, 90, &mut r, 1.0);
+        let mut serial = Mat::zeros(70, 90);
+        t_matmul_into_threads(&a, &b, &mut serial, 1);
+        for threads in [2, 5, 8] {
+            let mut par = Mat::zeros(70, 90);
+            t_matmul_into_threads(&a, &b, &mut par, threads);
+            assert_eq!(serial.data, par.data, "t_matmul t={threads}");
+        }
+        let c = Mat::randn(110, 70, &mut r, 1.0);
+        let mut serial_t = Mat::zeros(130, 110);
+        matmul_t_into_threads(&a, &c, &mut serial_t, 1);
+        for threads in [2, 5, 8] {
+            let mut par = Mat::zeros(130, 110);
+            matmul_t_into_threads(&a, &c, &mut par, threads);
+            assert_eq!(serial_t.data, par.data, "matmul_t t={threads}");
+        }
+    }
+
+    #[test]
+    fn accumulate_matmul_adds_on_top() {
+        let mut r = Rng::new(21);
+        let a = Mat::randn(6, 4, &mut r, 1.0);
+        let b = Mat::randn(4, 5, &mut r, 1.0);
+        let mut c = Mat::filled(6, 5, 1.0);
+        matmul_into(&a, &b, &mut c, true);
+        let want = naive_matmul(&a, &b).add(&Mat::filled(6, 5, 1.0));
+        assert!(c.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes() {
+        let mut m = Mat::filled(3, 4, 7.0);
+        let cap = m.data.capacity();
+        m.reset(2, 5);
+        assert_eq!((m.rows, m.cols), (2, 5));
+        assert!(m.data.iter().all(|&v| v == 0.0));
+        assert!(m.data.capacity() >= cap.min(10));
+        m.reset(3, 4);
+        assert_eq!(m.data.len(), 12);
     }
 
     #[test]

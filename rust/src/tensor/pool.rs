@@ -1,0 +1,196 @@
+//! Std-only scoped parallelism for the dense/sparse kernels.
+//!
+//! The hot kernels (`matmul*`, `spmm*`) are parallelized over disjoint
+//! *row blocks* of the output: each worker owns a contiguous `&mut` slice
+//! of the output buffer and runs the identical serial inner kernel over it,
+//! so the per-element accumulation order — and therefore the result — is
+//! bitwise identical to the single-thread path for any thread count.
+//!
+//! Thread count resolution, in priority order:
+//!   1. the explicit `threads` argument of the `*_threads` kernel variants
+//!      (what benches and bitwise-equality tests use),
+//!   2. the `PALLAS_THREADS` environment variable, resolved once per
+//!      process (`1` forces the serial path),
+//!   3. `std::thread::available_parallelism()`.
+//!
+//! Workers are `std::thread::scope` spawns per kernel call: spawn cost
+//! (~tens of microseconds) is negligible against the mini-batch-shaped
+//! kernels this backs (hundreds of microseconds to tens of milliseconds),
+//! and scoped borrows keep the API allocation-free for the caller.
+
+/// Work below this many flops (or bytes moved) is not worth a spawn.
+pub const MIN_PARALLEL_WORK: usize = 1 << 18;
+
+/// Resolve the effective thread count from `PALLAS_THREADS` or the
+/// machine's available parallelism.  Always at least 1.  The value is
+/// resolved once per process on first use (so the per-kernel hot path is
+/// allocation-free); set the variable before the first kernel call.
+pub fn num_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| match std::env::var("PALLAS_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => 1,
+        },
+        Err(_) => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+    })
+}
+
+/// Split `[0, rows)` into up to `threads` contiguous row blocks and run
+/// `f(row0, rows_mut_chunk)` on each, where `rows_mut_chunk` is the
+/// corresponding disjoint `&mut` window of `out` (`cols` f32 per row).
+///
+/// `work` is an estimate of total flops/bytes; small jobs and `threads <= 1`
+/// run inline on the caller thread with zero spawns (and zero allocations).
+pub fn par_row_blocks<F>(out: &mut [f32], rows: usize, cols: usize, threads: usize, work: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(out.len() >= rows * cols);
+    if rows == 0 {
+        return;
+    }
+    let t = threads.min(rows).max(1);
+    if t <= 1 || work < MIN_PARALLEL_WORK {
+        f(0, &mut out[..rows * cols]);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest: &mut [f32] = &mut out[..rows * cols];
+        // spawn workers for every block after the first; the caller thread
+        // takes block 0 so a 2-thread run spawns only once.
+        let first_take = per.min(rows);
+        let (first, tail) = std::mem::take(&mut rest).split_at_mut(first_take * cols);
+        rest = tail;
+        let mut r0 = first_take;
+        while r0 < rows {
+            let take = per.min(rows - r0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * cols);
+            rest = tail;
+            let start = r0;
+            s.spawn(move || fr(start, head));
+            r0 += take;
+        }
+        fr(0, first);
+    });
+}
+
+/// Two-buffer variant of `par_row_blocks`: split `a` (`acols` per row) and
+/// `b` (`bcols` per row) into the SAME contiguous row blocks and run
+/// `f(row0, row1, a_block, b_block)` on each.  Used by the fused SpMM+GEMM
+/// kernel, whose aggregate and output buffers have different widths.
+#[allow(clippy::too_many_arguments)]
+pub fn par_row_blocks_pair<F>(
+    a: &mut [f32],
+    acols: usize,
+    b: &mut [f32],
+    bcols: usize,
+    rows: usize,
+    threads: usize,
+    work: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert!(a.len() >= rows * acols && b.len() >= rows * bcols);
+    if rows == 0 {
+        return;
+    }
+    let t = threads.min(rows).max(1);
+    if t <= 1 || work < MIN_PARALLEL_WORK {
+        f(0, rows, &mut a[..rows * acols], &mut b[..rows * bcols]);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut arest: &mut [f32] = &mut a[..rows * acols];
+        let mut brest: &mut [f32] = &mut b[..rows * bcols];
+        let first_take = per.min(rows);
+        let (afirst, atail) = std::mem::take(&mut arest).split_at_mut(first_take * acols);
+        let (bfirst, btail) = std::mem::take(&mut brest).split_at_mut(first_take * bcols);
+        arest = atail;
+        brest = btail;
+        let mut r0 = first_take;
+        while r0 < rows {
+            let take = per.min(rows - r0);
+            let (ahead, atail) = std::mem::take(&mut arest).split_at_mut(take * acols);
+            let (bhead, btail) = std::mem::take(&mut brest).split_at_mut(take * bcols);
+            arest = atail;
+            brest = btail;
+            let start = r0;
+            s.spawn(move || fr(start, start + take, ahead, bhead));
+            r0 += take;
+        }
+        fr(0, first_take, afirst, bfirst);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn par_row_blocks_covers_all_rows_once() {
+        for &(rows, cols, threads) in
+            &[(1usize, 3usize, 4usize), (7, 2, 3), (16, 1, 16), (5, 4, 1), (100, 3, 7)]
+        {
+            let mut out = vec![0.0f32; rows * cols];
+            // force the parallel path with a huge work estimate
+            par_row_blocks(&mut out, rows, cols, threads, usize::MAX, |r0, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v += (r0 * cols + k) as f32 + 1.0;
+                }
+            });
+            for (k, v) in out.iter().enumerate() {
+                assert_eq!(*v, k as f32 + 1.0, "rows={rows} cols={cols} t={threads} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_work_runs_inline() {
+        let mut out = vec![0.0f32; 8];
+        par_row_blocks(&mut out, 8, 1, 8, 10, |r0, chunk| {
+            assert_eq!(r0, 0);
+            assert_eq!(chunk.len(), 8);
+        });
+    }
+
+    #[test]
+    fn pair_blocks_partition_both_buffers_consistently() {
+        let (rows, ac, bc) = (23usize, 3usize, 2usize);
+        let mut a = vec![0.0f32; rows * ac];
+        let mut b = vec![0.0f32; rows * bc];
+        par_row_blocks_pair(&mut a, ac, &mut b, bc, rows, 4, usize::MAX, |r0, r1, ab, bb| {
+            assert_eq!(ab.len(), (r1 - r0) * ac);
+            assert_eq!(bb.len(), (r1 - r0) * bc);
+            for v in ab.iter_mut() {
+                *v += 1.0;
+            }
+            for v in bb.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        assert!(a.iter().chain(b.iter()).all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let mut out: Vec<f32> = vec![];
+        par_row_blocks(&mut out, 0, 4, 8, usize::MAX, |_, _| panic!("no rows"));
+        let mut b: Vec<f32> = vec![];
+        par_row_blocks_pair(&mut out, 4, &mut b, 2, 0, 8, usize::MAX, |_, _, _, _| {
+            panic!("no rows")
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Integration: the workspace training step must allocate dramatically
+//! less than the allocating wrapper — the acceptance bar is ≥30% fewer
+//! heap allocations per step; the steady-state serial workspace step is in
+//! fact expected to allocate (near) zero.
+//!
+//! A counting global allocator measures exact allocation counts.  The test
+//! pins `PALLAS_THREADS=1` before any kernel runs so the serial fallback is
+//! exercised and thread-spawn allocations cannot pollute the counts (this
+//! file contains exactly one test, so there is no env-mutation race).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn workspace_step_allocates_at_least_30_percent_less() {
+    std::env::set_var("PALLAS_THREADS", "1");
+
+    use scalegnn::graph::generate::rmat;
+    use scalegnn::model::{
+        init_params, train_step, train_step_ws, AdamState, GcnDims, StepWorkspace,
+    };
+    use scalegnn::tensor::Mat;
+    use scalegnn::util::rng::Rng;
+
+    let dims = GcnDims {
+        d_in: 16,
+        d_h: 32,
+        d_out: 4,
+        layers: 2,
+        dropout: 0.0,
+        weight_decay: 0.0,
+    };
+    let b = 64usize;
+    let g = rmat(7, 8, 5).gcn_normalize();
+    let s: Vec<u32> = (0..b as u32).collect();
+    let mb = scalegnn::sampling::induce_rescaled(&g, &s, 0.5);
+    let mut rng = Rng::new(1);
+    let x = Mat::randn(b, dims.d_in, &mut rng, 1.0);
+    let y: Vec<u32> = (0..b).map(|i| (i % 4) as u32).collect();
+    let w = vec![1.0f32; b];
+    let masks = vec![Mat::filled(b, dims.d_h, 1.0); dims.layers];
+
+    // --- allocating wrapper baseline ---
+    let mut p1 = init_params(&dims, 7);
+    let mut o1 = AdamState::new(&dims);
+    // warm up once so lazy statics / dataset caches don't skew either side
+    train_step(&dims, &mut p1, &mut o1, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, 1e-3);
+    let before = allocs();
+    for _ in 0..5 {
+        train_step(&dims, &mut p1, &mut o1, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, 1e-3);
+    }
+    let naive = allocs() - before;
+
+    // --- workspace path ---
+    let mut p2 = init_params(&dims, 7);
+    let mut o2 = AdamState::new(&dims);
+    let mut ws = StepWorkspace::new();
+    // warm-up sizes the workspace buffers
+    train_step_ws(&dims, &mut p2, &mut o2, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, 1e-3, &mut ws);
+    let before = allocs();
+    for _ in 0..5 {
+        train_step_ws(
+            &dims, &mut p2, &mut o2, &mb.adj, &mb.adj_t, &x, &y, &w, &masks, 1e-3, &mut ws,
+        );
+    }
+    let ws_allocs = allocs() - before;
+
+    println!("allocations per 5 steps: allocating={naive} workspace={ws_allocs}");
+    assert!(naive > 0, "baseline should allocate");
+    // acceptance: >= 30% fewer allocations (in practice ~100%)
+    assert!(
+        (ws_allocs as f64) <= 0.7 * naive as f64,
+        "workspace step allocates too much: {ws_allocs} vs naive {naive}"
+    );
+    // the steady-state serial workspace step is designed to be allocation-
+    // free; allow a tiny slack for platform-dependent runtime internals
+    assert!(
+        ws_allocs <= 10,
+        "workspace step expected ~0 allocations, got {ws_allocs} over 5 steps"
+    );
+}

