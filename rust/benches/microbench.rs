@@ -291,6 +291,70 @@ fn main() {
         .report()
     );
 
+    // --- batch construction throughput: in-memory vs out-of-core ---
+    // same sampler seed on both makers; the store path re-reads graph +
+    // feature bytes through the bounded block cache (graph::store).  pack()
+    // is atomic (tmp + rename), so an existing file is always complete; a
+    // stale file from an older format version just gets repacked.
+    let store_path = std::env::temp_dir().join("pallas_bench_products_sim.pallas");
+    let reusable = scalegnn::graph::store::OocGraph::open(&store_path, 32 << 20)
+        .ok()
+        // a cached store from an earlier run must hold exactly this graph,
+        // or the mem-vs-ooc comparison silently diverges
+        .filter(|s| {
+            s.source_tag == scalegnn::graph::store::name_tag(&data.name)
+                && s.n == data.n
+                && s.d_in == data.features.cols
+                && s.nnz == data.adj.nnz()
+        });
+    let store = match reusable {
+        Some(s) => Arc::new(s),
+        None => {
+            scalegnn::graph::store::pack(&data, &store_path).expect("packing bench store");
+            Arc::new(
+                scalegnn::graph::store::OocGraph::open(&store_path, 32 << 20)
+                    .expect("opening bench store"),
+            )
+        }
+    };
+    let mut step = 0u64;
+    kbench(
+        &mut records,
+        "batch_assembly_mem",
+        format!("B={b},131k graph"),
+        1,
+        0,
+        20,
+        || {
+            // reuses the batch-assembly maker above (same config); steps
+            // restart at 0 so the ooc maker below samples the same batches
+            std::hint::black_box(maker.make(step).val[0]);
+            step += 1;
+        },
+    );
+    let mut ooc_maker = BatchMaker::from_store(store.clone(), b, 16384, 7);
+    let mut step = 0u64;
+    kbench(
+        &mut records,
+        "batch_assembly_ooc",
+        format!("B={b},131k store"),
+        1,
+        0,
+        20,
+        || {
+            std::hint::black_box(ooc_maker.make(step).val[0]);
+            step += 1;
+        },
+    );
+    let cs = store.cache_stats();
+    println!(
+        "    -> store {} MiB; cache resident {} KiB ({} hits / {} misses)\n",
+        store.store_bytes() >> 20,
+        cs.resident_bytes >> 10,
+        cs.hits,
+        cs.misses
+    );
+
     // --- densify ---
     let mb = scalegnn::sampling::induce_rescaled(
         &data.adj,

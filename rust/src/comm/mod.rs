@@ -21,11 +21,15 @@ use crate::util::bf16_round;
 /// Payload precision for collectives (§V-B low-precision communication).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Precision {
+    /// Full-precision f32 payloads.
     Fp32,
+    /// Contributions rounded to bf16 before the reduction (§V-B); results
+    /// stay f32, byte accounting halves the payload.
     Bf16,
 }
 
 impl Precision {
+    /// Payload bytes per element for the byte accounting.
     pub fn bytes_per_elem(&self) -> u64 {
         match self {
             Precision::Fp32 => 4,
@@ -50,14 +54,18 @@ struct Group {
 /// Per-axis traffic counters (feeds the epoch-time breakdown metrics).
 #[derive(Default)]
 pub struct AxisCounters {
+    /// Collective operations accounted on this axis.
     pub ops: AtomicU64,
+    /// Logical payload bytes moved on this axis.
     pub bytes: AtomicU64,
 }
 
 /// All process groups of a 4D grid.
 pub struct CommWorld {
+    /// The grid this world was built for.
     pub grid: Grid4D,
     groups: Vec<Vec<Group>>, // [axis][group_id]
+    /// Traffic counters indexed by axis (X, Y, Z, Dp).
     pub counters: [AxisCounters; 4],
 }
 
@@ -71,6 +79,13 @@ fn axis_idx(a: Axis) -> usize {
 }
 
 impl CommWorld {
+    /// Allocate the rendezvous slots of every process group of `grid`.
+    ///
+    /// Slot protocol (per group): contributors accumulate into the shared
+    /// buffer under the mutex, a barrier separates the write phase from the
+    /// read phase, and the last reader resets the slot for the next
+    /// collective — so back-to-back collectives on the same group never
+    /// alias.
     pub fn new(grid: Grid4D) -> CommWorld {
         let mk = |axis: Axis| -> Vec<Group> {
             (0..grid.num_groups(axis))
@@ -195,6 +210,7 @@ impl CommWorld {
         (c.ops.load(Ordering::Relaxed), c.bytes.load(Ordering::Relaxed))
     }
 
+    /// Zero all per-axis traffic counters.
     pub fn reset_stats(&self) {
         for c in &self.counters {
             c.ops.store(0, Ordering::Relaxed);

@@ -4,27 +4,36 @@
 /// column indices are global vertex ids, values are edge weights.
 #[derive(Clone, Debug)]
 pub struct Csr {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row offsets into `indices`/`values` (`rows + 1` entries).
     pub indptr: Vec<usize>,
+    /// Column ids per stored entry, sorted within each row.
     pub indices: Vec<u32>,
+    /// Edge weights per stored entry.
     pub values: Vec<f32>,
 }
 
 impl Csr {
+    /// Matrix with no stored entries.
     pub fn empty(rows: usize, cols: usize) -> Csr {
         Csr { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
     }
 
+    /// Number of stored entries.
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }
 
+    /// Row `r` as `(column ids, values)` slices.
     pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
         let (a, b) = (self.indptr[r], self.indptr[r + 1]);
         (&self.indices[a..b], &self.values[a..b])
     }
 
+    /// Number of stored entries in row `r`.
     pub fn row_nnz(&self, r: usize) -> usize {
         self.indptr[r + 1] - self.indptr[r]
     }

@@ -2,19 +2,30 @@
 //! (§VI-C), scaled so they run on one machine.  Shapes mirror the model
 //! configurations baked into the AOT artifacts (`python/compile/aot.py`).
 //!
-//! | name            | paper dataset    | paper N / this N | d_in | classes |
-//! |-----------------|------------------|------------------|------|---------|
-//! | tiny            | (tests)          | — / 512          | 16   | 4       |
-//! | reddit_sim      | Reddit           | 233 k / 65 k     | 128  | 40      |
-//! | products_sim    | ogbn-products    | 2.4 M / 131 k    | 128  | 48      |
-//! | isolate_sim     | Isolate-3-8M     | 3.8 M / 262 k    | 128  | 32      |
-//! | products14m_sim | Products-14M     | 14 M / 524 k     | 128  | 32      |
-//! | papers100m_sim  | ogbn-papers100M  | 111 M / 1.05 M   | 64   | 32      |
+//! The table below is RENDERED FROM CODE by [`doc_table`] and asserted
+//! against this comment by the `doc_table_matches_module_docs` test — edit
+//! `registry()` and paste the regenerated lines here, or the build's test
+//! suite will tell you the docs rotted:
+//!
+//! | name            | paper dataset         |     paper N |   local N | d_in | classes | batch |
+//! |-----------------|-----------------------|-------------|-----------|------|---------|-------|
+//! | tiny            | (tests)               |         512 |       512 |   16 |       4 |    32 |
+//! | reddit_sim      | Reddit                |     232,965 |    65,536 |  128 |      40 |  1024 |
+//! | products_sim    | ogbn-products         |   2,449,029 |   131,072 |  128 |      48 |  1024 |
+//! | isolate_sim     | Isolate-3-8M          |   3,800,000 |   262,144 |  128 |      32 |  1024 |
+//! | products14m_sim | Products-14M          |  14,000,000 |   524,288 |  128 |      32 |  1024 |
+//! | e2e_big         | (e2e driver)          |      65,536 |    65,536 |  256 |      32 |  1024 |
+//! | papers100m_sim  | ogbn-papers100M       | 111,000,000 | 1,048,576 |  128 |      32 |  1024 |
+//! | papers100m_ooc  | ogbn-papers100M (OOC) | 111,000,000 | 1,048,576 |  128 |      32 |  1024 |
 //!
 //! The three scaling datasets are used for epoch-time / scaling experiments
 //! only (as in the paper, which gives them random features + synthetic
 //! degree-proportional classes); the accuracy datasets carry a planted
-//! community structure so test accuracy is meaningful.
+//! community structure so test accuracy is meaningful.  `papers100m_ooc` is
+//! the same graph as `papers100m_sim` but is meant to be packed into a
+//! `.pallas` container once (`scalegnn pack`) and trained **out-of-core**
+//! (`scalegnn train --from-store`), reproducing the larger-than-RAM
+//! scenario of the paper's headline dataset; see `graph::store`.
 
 use super::generate::{planted_partition, Dataset, PlantedConfig};
 
@@ -23,26 +34,41 @@ use super::generate::{planted_partition, Dataset, PlantedConfig};
 /// volumes, not the scaled-down local stand-ins.
 #[derive(Clone, Copy, Debug)]
 pub struct PaperScale {
+    /// Vertices of the real dataset.
     pub n: f64,
+    /// Edges of the real dataset.
     pub edges: f64,
+    /// Input feature dimensionality of the real dataset.
     pub d_in: f64,
+    /// Label classes of the real dataset.
     pub classes: f64,
+    /// Per-group mini-batch size the paper trains with.
     pub batch: f64,
 }
 
+/// One registry entry: a named local stand-in plus its paper-scale shadow.
 #[derive(Clone, Debug)]
 pub struct DatasetSpec {
+    /// Registry name (what the CLI's `--dataset` accepts).
     pub name: &'static str,
-    pub model_config: &'static str, // artifact family suffix
+    /// Human-readable name of the paper dataset this stands in for.
+    pub paper_name: &'static str,
+    /// Artifact family suffix of the matching AOT model configuration.
+    pub model_config: &'static str,
+    /// Generator parameters of the local stand-in.
     pub planted: PlantedConfig,
+    /// Local mini-batch size.
     pub batch: usize,
+    /// Real-dataset sizes for the analytical projections.
     pub paper: PaperScale,
 }
 
+/// All registered datasets, in documentation order.
 pub fn registry() -> Vec<DatasetSpec> {
     vec![
         DatasetSpec {
             name: "tiny",
+            paper_name: "(tests)",
             model_config: "tiny",
             planted: PlantedConfig {
                 n: 512,
@@ -59,6 +85,7 @@ pub fn registry() -> Vec<DatasetSpec> {
         },
         DatasetSpec {
             name: "reddit_sim",
+            paper_name: "Reddit",
             model_config: "reddit_sim",
             planted: PlantedConfig {
                 n: 65_536,
@@ -81,6 +108,7 @@ pub fn registry() -> Vec<DatasetSpec> {
         },
         DatasetSpec {
             name: "products_sim",
+            paper_name: "ogbn-products",
             model_config: "products_sim",
             planted: PlantedConfig {
                 n: 131_072,
@@ -103,6 +131,7 @@ pub fn registry() -> Vec<DatasetSpec> {
         },
         DatasetSpec {
             name: "isolate_sim",
+            paper_name: "Isolate-3-8M",
             model_config: "products_sim", // shares the artifact shape family
             planted: PlantedConfig {
                 n: 262_144,
@@ -125,6 +154,7 @@ pub fn registry() -> Vec<DatasetSpec> {
         },
         DatasetSpec {
             name: "products14m_sim",
+            paper_name: "Products-14M",
             model_config: "products_sim",
             planted: PlantedConfig {
                 n: 524_288,
@@ -149,6 +179,7 @@ pub fn registry() -> Vec<DatasetSpec> {
             // end-to-end driver workload (examples/train_e2e.rs): larger
             // model (d_h=512, L=4) on a mid-size graph
             name: "e2e_big",
+            paper_name: "(e2e driver)",
             model_config: "e2e_big",
             planted: PlantedConfig {
                 n: 65_536,
@@ -171,6 +202,33 @@ pub fn registry() -> Vec<DatasetSpec> {
         },
         DatasetSpec {
             name: "papers100m_sim",
+            paper_name: "ogbn-papers100M",
+            model_config: "products_sim",
+            planted: PlantedConfig {
+                n: 1_048_576,
+                classes: 32,
+                avg_degree: 8,
+                d_in: 128,
+                intra_frac: 0.8,
+                feature_noise: 0.6,
+                label_noise: 0.05,
+                seed: 0x100A11,
+            },
+            batch: 1024,
+            paper: PaperScale {
+                n: 111.0e6,
+                edges: 1.6e9,
+                d_in: 128.0,
+                classes: 172.0,
+                batch: 32768.0,
+            },
+        },
+        DatasetSpec {
+            // identical graph to papers100m_sim (same generator seed) but
+            // registered as the out-of-core workload: pack once into a
+            // .pallas container, then train with a bounded cache budget
+            name: "papers100m_ooc",
+            paper_name: "ogbn-papers100M (OOC)",
             model_config: "products_sim",
             planted: PlantedConfig {
                 n: 1_048_576,
@@ -194,6 +252,7 @@ pub fn registry() -> Vec<DatasetSpec> {
     ]
 }
 
+/// Look up a dataset spec by registry name.
 pub fn spec(name: &str) -> Option<DatasetSpec> {
     registry().into_iter().find(|s| s.name == name)
 }
@@ -204,6 +263,55 @@ pub fn load(name: &str) -> Option<Dataset> {
     let mut d = planted_partition(&s.planted);
     d.name = s.name.to_string();
     Some(d)
+}
+
+/// `232965` -> `"232,965"`.
+fn group_digits(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// Render the module-doc dataset table from [`registry`] — header, separator
+/// and one row per dataset.  The `doc_table_matches_module_docs` test
+/// asserts these exact lines appear in this module's doc comment, so the
+/// hand-pasted table can never drift from the code.
+pub fn doc_table() -> Vec<String> {
+    let mut out = vec![
+        format!(
+            "| {:<15} | {:<21} | {:>11} | {:>9} | {:>4} | {:>7} | {:>5} |",
+            "name", "paper dataset", "paper N", "local N", "d_in", "classes", "batch"
+        ),
+        format!(
+            "|{}|{}|{}|{}|{}|{}|{}|",
+            "-".repeat(17),
+            "-".repeat(23),
+            "-".repeat(13),
+            "-".repeat(11),
+            "-".repeat(6),
+            "-".repeat(9),
+            "-".repeat(7)
+        ),
+    ];
+    for s in registry() {
+        out.push(format!(
+            "| {:<15} | {:<21} | {:>11} | {:>9} | {:>4} | {:>7} | {:>5} |",
+            s.name,
+            s.paper_name,
+            group_digits(s.paper.n as u64),
+            group_digits(s.planted.n as u64),
+            s.planted.d_in,
+            s.planted.classes,
+            s.batch
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -233,5 +341,41 @@ mod tests {
     #[test]
     fn unknown_dataset_is_none() {
         assert!(load("nope").is_none());
+    }
+
+    #[test]
+    fn papers100m_ooc_mirrors_papers100m_sim() {
+        let sim = spec("papers100m_sim").unwrap();
+        let ooc = spec("papers100m_ooc").unwrap();
+        // same generator config (seed included): identical graph bytes, so
+        // packing either name produces the same .pallas content
+        assert_eq!(format!("{:?}", sim.planted), format!("{:?}", ooc.planted));
+        assert_eq!(ooc.paper_name, "ogbn-papers100M (OOC)");
+    }
+
+    #[test]
+    fn group_digits_formats() {
+        assert_eq!(group_digits(0), "0");
+        assert_eq!(group_digits(512), "512");
+        assert_eq!(group_digits(65_536), "65,536");
+        assert_eq!(group_digits(111_000_000), "111,000,000");
+    }
+
+    #[test]
+    fn doc_table_matches_module_docs() {
+        let src = include_str!("datasets.rs");
+        let table = doc_table();
+        for line in &table {
+            assert!(
+                src.contains(&format!("//! {line}")),
+                "dataset doc table drifted from registry(); regenerate this line:\n{line}"
+            );
+        }
+        // and no stale rows: the doc comment has exactly the rendered lines
+        let doc_rows = src
+            .lines()
+            .filter(|l| l.trim_start().starts_with("//! |"))
+            .count();
+        assert_eq!(doc_rows, table.len(), "doc table has extra/stale rows");
     }
 }

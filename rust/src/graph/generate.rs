@@ -13,22 +13,31 @@ use crate::util::rng::Rng;
 
 /// A generated dataset: normalized adjacency + features + labels + splits.
 pub struct Dataset {
+    /// Registry name (filled in by `datasets::load`).
     pub name: String,
+    /// Number of vertices.
     pub n: usize,
-    pub adj: Csr,      // GCN-normalized, symmetric, self-loops
-    pub raw_adj: Csr,  // unnormalized symmetric structure (baseline samplers)
-    pub features: Mat, // n x d_in
+    /// GCN-normalized adjacency: symmetric, with self-loops.
+    pub adj: Csr,
+    /// Unnormalized symmetric structure (used by the baseline samplers).
+    pub raw_adj: Csr,
+    /// `n x d_in` vertex features.
+    pub features: Mat,
+    /// Class label per vertex.
     pub labels: Vec<u32>,
+    /// Number of label classes.
     pub classes: usize,
     /// 0 = train, 1 = val, 2 = test per vertex
     pub split: Vec<u8>,
 }
 
 impl Dataset {
+    /// 1.0 for train-split vertices, 0.0 otherwise (loss mask).
     pub fn train_mask_f32(&self) -> Vec<f32> {
         self.split.iter().map(|&s| if s == 0 { 1.0 } else { 0.0 }).collect()
     }
 
+    /// Number of vertices in split `which` (0 train / 1 val / 2 test).
     pub fn count_split(&self, which: u8) -> usize {
         self.split.iter().filter(|&&s| s == which).count()
     }
@@ -37,9 +46,13 @@ impl Dataset {
 /// Parameters for the planted-partition generator.
 #[derive(Clone, Debug)]
 pub struct PlantedConfig {
+    /// Number of vertices.
     pub n: usize,
+    /// Number of communities (= label classes).
     pub classes: usize,
+    /// Target mean degree of the lognormal degree profile.
     pub avg_degree: usize,
+    /// Feature dimensionality.
     pub d_in: usize,
     /// fraction of a vertex's edges that stay inside its community
     pub intra_frac: f64,
@@ -47,6 +60,7 @@ pub struct PlantedConfig {
     pub feature_noise: f32,
     /// fraction of labels flipped to a random class (caps attainable acc)
     pub label_noise: f64,
+    /// Generator seed (the whole dataset is a pure function of it).
     pub seed: u64,
 }
 

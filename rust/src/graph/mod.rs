@@ -1,12 +1,15 @@
-//! Graph substrate: CSR storage, synthetic dataset generators, and the 2D
-//! block partitioner that feeds the distributed sampler (Algorithm 2).
+//! Graph substrate: CSR storage, synthetic dataset generators, the 2D block
+//! partitioner that feeds the distributed sampler (Algorithm 2), and the
+//! out-of-core `.pallas` binary store for larger-than-RAM training.
 
 pub mod csr;
 pub mod datasets;
 pub mod generate;
 pub mod partition;
+pub mod store;
 
 pub use csr::Csr;
 pub use datasets::{load, registry, spec, DatasetSpec};
 pub use generate::{planted_partition, rmat, Dataset, PlantedConfig};
-pub use partition::{block_bounds, partition_2d, CsrShard};
+pub use partition::{block_bounds, extract_shard_from, partition_2d, CsrShard};
+pub use store::{open_or_pack, pack, GraphAccess, OocGraph, VertexData};

@@ -6,6 +6,7 @@
 //! column ids, exactly what Algorithm 2 consumes.
 
 use super::csr::Csr;
+use super::store::GraphAccess;
 
 /// Split `n` into `parts` contiguous ranges, remainder spread over the
 /// leading parts. Returns the boundaries (len = parts + 1).
@@ -26,17 +27,21 @@ pub fn block_bounds(n: usize, parts: usize) -> Vec<usize> {
 /// One rank's shard of the adjacency.
 #[derive(Clone, Debug)]
 pub struct CsrShard {
-    /// global row range [r0, r1)
+    /// Start of the global row range `[r0, r1)`.
     pub r0: usize,
+    /// End (exclusive) of the global row range.
     pub r1: usize,
-    /// global column range [c0, c1)
+    /// Start of the global column range `[c0, c1)`.
     pub c0: usize,
+    /// End (exclusive) of the global column range.
     pub c1: usize,
-    /// rows indexed locally (0..r1-r0), columns remain GLOBAL ids
+    /// Shard contents: rows indexed locally (`0..r1-r0`), columns remain
+    /// GLOBAL ids.
     pub csr: Csr,
 }
 
 impl CsrShard {
+    /// Number of rows owned by this shard.
     pub fn local_rows(&self) -> usize {
         self.r1 - self.r0
     }
@@ -44,6 +49,9 @@ impl CsrShard {
 
 /// Extract a single shard (rows [r0,r1), cols [c0,c1)) without building the
 /// full partition — used by PMM ranks, which each need only their own block.
+/// Rows are borrowed zero-copy (this runs per layer in the engine's
+/// full-graph eval); the out-of-core variant is [`extract_shard_from`], and
+/// `extract_shard_matches_direct_row_filter` pins both to the same oracle.
 pub fn extract_shard(a: &Csr, r0: usize, r1: usize, c0: usize, c1: usize) -> CsrShard {
     let mut indptr = Vec::with_capacity(r1 - r0 + 1);
     let mut indices = Vec::new();
@@ -63,6 +71,39 @@ pub fn extract_shard(a: &Csr, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr
         c0,
         c1,
         csr: Csr { rows: r1 - r0, cols: a.cols, indptr, indices, values },
+    }
+}
+
+/// As `extract_shard`, but generic over [`GraphAccess`] — so a PMM/sampler
+/// rank can materialize its own block of an out-of-core graph without the
+/// full adjacency ever residing in RAM.  For an in-memory `Csr` source the
+/// output is identical (bitwise) to `extract_shard`.
+pub fn extract_shard_from<G: GraphAccess + ?Sized>(
+    a: &G,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+) -> CsrShard {
+    let mut indptr = Vec::with_capacity(r1 - r0 + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    let (mut rbuf_c, mut rbuf_v) = (Vec::new(), Vec::new());
+    indptr.push(0);
+    for r in r0..r1 {
+        a.read_row(r, &mut rbuf_c, &mut rbuf_v);
+        let lo = rbuf_c.partition_point(|&c| (c as usize) < c0);
+        let hi = rbuf_c.partition_point(|&c| (c as usize) < c1);
+        indices.extend_from_slice(&rbuf_c[lo..hi]);
+        values.extend_from_slice(&rbuf_v[lo..hi]);
+        indptr.push(indices.len());
+    }
+    CsrShard {
+        r0,
+        r1,
+        c0,
+        c1,
+        csr: Csr { rows: r1 - r0, cols: a.cols(), indptr, indices, values },
     }
 }
 
@@ -152,6 +193,31 @@ mod tests {
                 for (&c, &v) in cs.iter().zip(vs) {
                     assert_eq!(dense.at(s.r0 + lr, c as usize), v);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn extract_shard_matches_direct_row_filter() {
+        // independent oracle: filter each source row by the column window;
+        // both the zero-copy and the GraphAccess-generic extractor must
+        // match it (and hence each other, bitwise)
+        let g = rmat(7, 6, 4).gcn_normalize();
+        for s in [extract_shard(&g, 10, 50, 20, 90), extract_shard_from(&g, 10, 50, 20, 90)] {
+            assert_eq!((s.r0, s.r1, s.c0, s.c1), (10, 50, 20, 90));
+            assert_eq!(s.csr.cols, g.cols);
+            assert_eq!(s.csr.rows, 40);
+            for lr in 0..s.csr.rows {
+                let (cs, vs) = s.csr.row(lr);
+                let (gcs, gvs) = g.row(10 + lr);
+                let want: Vec<(u32, f32)> = gcs
+                    .iter()
+                    .zip(gvs)
+                    .filter(|&(&c, _)| (20..90).contains(&(c as usize)))
+                    .map(|(&c, &v)| (c, v))
+                    .collect();
+                let got: Vec<(u32, f32)> = cs.iter().zip(vs).map(|(&c, &v)| (c, v)).collect();
+                assert_eq!(got, want, "row {lr}");
             }
         }
     }

@@ -1,0 +1,781 @@
+//! Out-of-core binary graph store: the `.pallas` on-disk container and its
+//! bounded-memory reader, which let the mini-batch pipeline train on graphs
+//! that never fully reside in RAM (the papers100M scenario of §VI-C).
+//!
+//! # Container format (version 1, little-endian)
+//!
+//! ```text
+//! header (64 B): magic "PALLASG1" | version u32 | flags u32
+//!                | n u64 | nnz u64 | d_in u64 | classes u64
+//!                | source-tag u64 (hash of the dataset name) | 8 B reserved
+//! sections:      indptr   (n+1) x u64     CSR row offsets (normalized adj)
+//!                indices  nnz x u32       column ids, sorted per row
+//!                values   nnz x f32       GCN-normalized edge weights
+//!                features n x d_in x f32  row-major vertex features
+//!                labels   n x u32
+//!                split    n x u8          0 = train, 1 = val, 2 = test
+//! ```
+//!
+//! Section offsets are a pure function of the header counts, so the expected
+//! file size is known up front: `OocGraph::open` validates magic, version,
+//! exact length AND the full indptr table (monotone from 0 to nnz) and
+//! returns a clean error — never a panic — on truncated or structurally
+//! corrupt files; every later row read is guaranteed in-bounds.  (Cell-level
+//! corruption of indices/values/features is not checksummed.)  `pack` writes
+//! through a `.tmp` sibling and renames into place, so an interrupted pack
+//! never leaves a half-written container at the target path.
+//!
+//! # Reader
+//!
+//! [`OocGraph`] serves CSR row slices and feature rows through
+//! `std::os::unix::fs::FileExt::read_at` (std-only, no mmap, no new
+//! dependencies) behind a small pinned-block LRU cache: every graph, feature,
+//! label and split byte is read through fixed-size cache blocks, so the
+//! resident footprint of the store is bounded by the configured cache budget
+//! regardless of graph size (asserted by `tests/ooc_store.rs`).  Only the
+//! 64-byte header is kept outside the cache.
+//!
+//! # Access traits
+//!
+//! [`GraphAccess`] abstracts a CSR adjacency that may live in RAM
+//! ([`Csr`]) or on disk ([`OocGraph`]); [`VertexData`] does the same for
+//! per-vertex features/labels/splits ([`Dataset`] or [`OocGraph`]).  The
+//! uniform sampler's induced-subgraph builder
+//! (`sampling::uniform::induce_rescaled_from`), the distributed shard
+//! extractor (`graph::partition::extract_shard_from`) and the trainer's
+//! `BatchMaker` are generic over them, which is what makes the in-memory and
+//! out-of-core mini-batch paths bitwise identical for the same seed.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::csr::Csr;
+use super::generate::Dataset;
+
+/// File magic: "PALLASG1" (pallas graph container, generation 1).
+pub const MAGIC: [u8; 8] = *b"PALLASG1";
+/// Current container format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes (magic + version + flags + 4 counts + pad).
+pub const HEADER_BYTES: u64 = 64;
+/// Cache block size: one `read_at` unit of the pinned-block LRU cache.
+pub const BLOCK_BYTES: usize = 64 * 1024;
+
+/// Uniform read access to a CSR adjacency that may live in RAM or on disk.
+///
+/// Implementors must return, for any row, exactly the bytes a [`Csr`] holding
+/// the same matrix would: sorted column ids and bit-identical f32 values.
+/// That contract is what keeps sampler outputs bitwise identical between the
+/// in-memory and out-of-core paths (see `tests/ooc_store.rs`).
+///
+/// Disk-backed implementations panic on I/O errors *after* a validated open
+/// (a mid-training read failure is unrecoverable); all validation errors are
+/// surfaced as clean `Result`s at open time.
+pub trait GraphAccess: Send + Sync {
+    /// Number of rows (vertices) of the adjacency.
+    fn rows(&self) -> usize;
+
+    /// Number of columns of the adjacency (equals `rows` for a square graph).
+    fn cols(&self) -> usize;
+
+    /// Number of stored entries in row `r`.
+    fn row_nnz(&self, r: usize) -> usize;
+
+    /// Copy row `r` into the buffers (cleared first): sorted column ids into
+    /// `cols`, matching edge weights into `vals`.
+    fn read_row(&self, r: usize, cols: &mut Vec<u32>, vals: &mut Vec<f32>);
+}
+
+impl GraphAccess for Csr {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn row_nnz(&self, r: usize) -> usize {
+        Csr::row_nnz(self, r)
+    }
+
+    fn read_row(&self, r: usize, cols: &mut Vec<u32>, vals: &mut Vec<f32>) {
+        let (cs, vs) = self.row(r);
+        cols.clear();
+        vals.clear();
+        cols.extend_from_slice(cs);
+        vals.extend_from_slice(vs);
+    }
+}
+
+/// Uniform read access to per-vertex training data (features, labels,
+/// train/val/test split) that may live in RAM or on disk.
+pub trait VertexData: Send + Sync {
+    /// Number of vertices.
+    fn num_vertices(&self) -> usize;
+
+    /// Feature dimensionality `d_in`.
+    fn feature_dim(&self) -> usize;
+
+    /// Number of label classes.
+    fn num_classes(&self) -> usize;
+
+    /// Copy vertex `v`'s feature row into `out` (`out.len() == d_in`).
+    fn read_features(&self, v: usize, out: &mut [f32]);
+
+    /// Class label of vertex `v`.
+    fn label_of(&self, v: usize) -> u32;
+
+    /// Split of vertex `v`: 0 = train, 1 = val, 2 = test.
+    fn split_of(&self, v: usize) -> u8;
+}
+
+impl VertexData for Dataset {
+    fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.features.cols
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn read_features(&self, v: usize, out: &mut [f32]) {
+        let d = self.features.cols;
+        out.copy_from_slice(&self.features.data[v * d..(v + 1) * d]);
+    }
+
+    fn label_of(&self, v: usize) -> u32 {
+        self.labels[v]
+    }
+
+    fn split_of(&self, v: usize) -> u8 {
+        self.split[v]
+    }
+}
+
+/// Byte offsets of every section, derived purely from the header counts.
+#[derive(Clone, Copy, Debug)]
+struct SectionLayout {
+    indptr: u64,
+    indices: u64,
+    values: u64,
+    features: u64,
+    labels: u64,
+    split: u64,
+    total: u64,
+}
+
+/// Section offsets for the given counts; `None` when the sizes overflow
+/// u64 (only reachable through a corrupt header — rejecting it here keeps
+/// `OocGraph::open`'s never-panic contract).
+fn layout(n: u64, nnz: u64, d_in: u64) -> Option<SectionLayout> {
+    let indptr = HEADER_BYTES;
+    let indices = indptr.checked_add(n.checked_add(1)?.checked_mul(8)?)?;
+    let values = indices.checked_add(nnz.checked_mul(4)?)?;
+    let features = values.checked_add(nnz.checked_mul(4)?)?;
+    let labels = features.checked_add(n.checked_mul(d_in)?.checked_mul(4)?)?;
+    let split = labels.checked_add(n.checked_mul(4)?)?;
+    let total = split.checked_add(n)?;
+    Some(SectionLayout { indptr, indices, values, features, labels, split, total })
+}
+
+/// Buffered little-endian serialization of a slice; `enc` encodes one
+/// element (the single writer all sections go through).
+fn write_le<W: Write, T: Copy, const N: usize>(
+    w: &mut W,
+    xs: &[T],
+    enc: impl Fn(T) -> [u8; N],
+) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(N * 8192);
+    for chunk in xs.chunks(8192) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&enc(x));
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Deterministic identity tag of a dataset name, stored in the container
+/// header so `open_or_pack` can refuse a store packed from a different
+/// dataset than the one requested.
+pub fn name_tag(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xA5A5_5A5A_0F0F_F0F0, |h, b| crate::util::rng::splitmix64(h ^ b as u64))
+}
+
+/// Summary of one `pack` run.
+#[derive(Clone, Copy, Debug)]
+pub struct PackStats {
+    /// Vertices written.
+    pub n: usize,
+    /// Stored adjacency entries written.
+    pub nnz: usize,
+    /// Total file size in bytes.
+    pub bytes: u64,
+}
+
+/// Serialize an in-memory [`Dataset`] into a `.pallas` container at `path`
+/// (overwriting any existing file).  The normalized adjacency (`data.adj`),
+/// features, labels and split are stored; see the module docs for the exact
+/// layout.  The bytes go to a `.tmp` sibling first and are renamed into
+/// place, so a crash mid-pack never leaves a truncated container at `path`.
+pub fn pack(data: &Dataset, path: &Path) -> Result<PackStats> {
+    let n = data.n;
+    if data.adj.rows != n || data.adj.cols != n {
+        bail!("pack: adjacency must be square n x n (got {}x{})", data.adj.rows, data.adj.cols);
+    }
+    if data.features.rows != n || data.labels.len() != n || data.split.len() != n {
+        bail!("pack: features/labels/split must all have n = {n} rows");
+    }
+    let nnz = data.adj.nnz();
+    let d_in = data.features.cols;
+    let lay = layout(n as u64, nnz as u64, d_in as u64)
+        .ok_or_else(|| anyhow!("pack: dataset sizes overflow the container format"))?;
+
+    // pid-unique tmp sibling: concurrent packs of the same destination each
+    // write their own file and atomically rename a complete container
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".tmp.{}", std::process::id()));
+        PathBuf::from(os)
+    };
+    {
+        let f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(&MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&0u32.to_le_bytes())?; // flags (reserved)
+        for v in [n as u64, nnz as u64, d_in as u64, data.classes as u64] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&name_tag(&data.name).to_le_bytes())?;
+        w.write_all(&[0u8; 8])?; // reserved padding up to HEADER_BYTES
+
+        write_le(&mut w, &data.adj.indptr, |p| (p as u64).to_le_bytes())?;
+        write_le(&mut w, &data.adj.indices, |x| x.to_le_bytes())?;
+        write_le(&mut w, &data.adj.values, |x| x.to_le_bytes())?;
+        write_le(&mut w, &data.features.data, |x| x.to_le_bytes())?;
+        write_le(&mut w, &data.labels, |x| x.to_le_bytes())?;
+        w.write_all(&data.split)?;
+        w.flush()?;
+        // data must be durable BEFORE the rename is journaled, or a crash
+        // could leave a correct-length file with zeroed sections in place
+        w.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    // best-effort: persist the directory entry too
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(PackStats { n, nnz, bytes: lay.total })
+}
+
+/// One resident cache block.
+struct Slot {
+    id: u64,
+    stamp: u64,
+    data: Vec<u8>,
+}
+
+/// Pinned-block LRU cache: at most `max_blocks` blocks of [`BLOCK_BYTES`]
+/// resident at once, evicting the least-recently-used block on overflow.
+struct BlockCache {
+    max_blocks: usize,
+    slots: Vec<Slot>,
+    map: HashMap<u64, usize>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl BlockCache {
+    fn new(budget_bytes: usize) -> BlockCache {
+        BlockCache {
+            max_blocks: (budget_bytes / BLOCK_BYTES).max(1),
+            slots: Vec::new(),
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Resolve block `id`, loading (and possibly evicting) on a miss.
+    fn block(&mut self, file: &File, file_len: u64, id: u64) -> &[u8] {
+        self.tick += 1;
+        if let Some(&slot) = self.map.get(&id) {
+            self.hits += 1;
+            self.slots[slot].stamp = self.tick;
+            return &self.slots[slot].data;
+        }
+        self.misses += 1;
+        let start = id * BLOCK_BYTES as u64;
+        let end = (start + BLOCK_BYTES as u64).min(file_len);
+        let mut data = vec![0u8; (end - start) as usize];
+        file.read_exact_at(&mut data, start)
+            .expect("pallas store: read failed after validated open");
+        let slot = if self.slots.len() < self.max_blocks {
+            self.slots.push(Slot { id, stamp: self.tick, data });
+            self.slots.len() - 1
+        } else {
+            let victim = (0..self.slots.len())
+                .min_by_key(|&i| self.slots[i].stamp)
+                .expect("cache has at least one slot");
+            self.map.remove(&self.slots[victim].id);
+            self.slots[victim] = Slot { id, stamp: self.tick, data };
+            victim
+        };
+        self.map.insert(id, slot);
+        &self.slots[slot].data
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.data.len()).sum()
+    }
+}
+
+/// Cache counters of an [`OocGraph`] (see [`OocGraph::cache_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Block lookups served from a resident block.
+    pub hits: u64,
+    /// Block lookups that required a disk read.
+    pub misses: u64,
+    /// Bytes currently resident in cache blocks.
+    pub resident_bytes: usize,
+    /// Upper bound on resident bytes (`max_blocks * BLOCK_BYTES`).
+    pub budget_bytes: usize,
+}
+
+/// Disk-backed graph: a validated `.pallas` container served through the
+/// pinned-block LRU cache.  Implements [`GraphAccess`] (adjacency rows) and
+/// [`VertexData`] (features/labels/split); see the module docs for the
+/// residency guarantee.
+pub struct OocGraph {
+    file: File,
+    file_len: u64,
+    lay: SectionLayout,
+    /// Number of vertices.
+    pub n: usize,
+    /// Stored adjacency entries.
+    pub nnz: usize,
+    /// Feature dimensionality.
+    pub d_in: usize,
+    /// Number of label classes.
+    pub classes: usize,
+    /// Identity tag written by `pack` ([`name_tag`] of the dataset name).
+    pub source_tag: u64,
+    cache: Mutex<BlockCache>,
+}
+
+impl OocGraph {
+    /// Open and validate a `.pallas` container, with at most `cache_bytes`
+    /// of file content resident at any time (rounded down to whole
+    /// [`BLOCK_BYTES`] blocks, minimum one block).
+    ///
+    /// Returns a clean error — never panics — on a missing file, bad magic,
+    /// unsupported version, a file whose length does not match the header's
+    /// section layout (truncation), or a structurally corrupt indptr table.
+    /// The indptr scan (sequential, not cached) is what guarantees every
+    /// later row read stays inside the indices/values sections.
+    pub fn open(path: &Path, cache_bytes: usize) -> Result<OocGraph> {
+        let file =
+            File::open(path).with_context(|| format!("opening pallas store {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        if file_len < HEADER_BYTES {
+            bail!(
+                "pallas store {}: truncated header ({file_len} bytes, need {HEADER_BYTES})",
+                path.display()
+            );
+        }
+        let mut hdr = [0u8; HEADER_BYTES as usize];
+        file.read_exact_at(&mut hdr, 0)?;
+        if hdr[..8] != MAGIC {
+            bail!("pallas store {}: bad magic (not a .pallas file)", path.display());
+        }
+        let version = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!(
+                "pallas store {}: unsupported version {version} (this build reads {VERSION})",
+                path.display()
+            );
+        }
+        let field = |o: usize| u64::from_le_bytes(hdr[o..o + 8].try_into().unwrap());
+        let (n, nnz, d_in, classes) = (field(16), field(24), field(32), field(40));
+        let source_tag = field(48);
+        let lay = layout(n, nnz, d_in).ok_or_else(|| {
+            anyhow!("pallas store {}: corrupt header counts (sizes overflow)", path.display())
+        })?;
+        if file_len != lay.total {
+            bail!(
+                "pallas store {}: truncated or corrupt ({file_len} bytes, header implies {})",
+                path.display(),
+                lay.total
+            );
+        }
+        // stream-validate the indptr table: starts at 0, monotone, ends at
+        // nnz — the invariant every row_range/read_row relies on
+        let mut prev = 0u64;
+        let mut seen_first = false;
+        let mut off = lay.indptr;
+        let mut buf = vec![0u8; 64 * 1024];
+        while off < lay.indices {
+            let take = ((lay.indices - off) as usize).min(buf.len());
+            file.read_exact_at(&mut buf[..take], off)?;
+            for ch in buf[..take].chunks_exact(8) {
+                let v = u64::from_le_bytes(ch.try_into().unwrap());
+                if !seen_first {
+                    if v != 0 {
+                        bail!(
+                            "pallas store {}: corrupt indptr (does not start at 0)",
+                            path.display()
+                        );
+                    }
+                    seen_first = true;
+                } else if v < prev {
+                    bail!("pallas store {}: corrupt indptr (not monotone)", path.display());
+                }
+                prev = v;
+            }
+            off += take as u64;
+        }
+        if prev != nnz {
+            bail!(
+                "pallas store {}: corrupt indptr (last offset {prev} != nnz {nnz})",
+                path.display()
+            );
+        }
+        Ok(OocGraph {
+            file,
+            file_len,
+            lay,
+            n: n as usize,
+            nnz: nnz as usize,
+            d_in: d_in as usize,
+            classes: classes as usize,
+            source_tag,
+            cache: Mutex::new(BlockCache::new(cache_bytes)),
+        })
+    }
+
+    /// Copy `out.len()` bytes starting at absolute file offset `off`,
+    /// through the block cache.
+    fn read_at_cached(&self, mut off: u64, out: &mut [u8]) {
+        debug_assert!(off + out.len() as u64 <= self.file_len);
+        let mut cache = self.cache.lock().unwrap();
+        let mut done = 0usize;
+        while done < out.len() {
+            let id = off / BLOCK_BYTES as u64;
+            let in_off = (off % BLOCK_BYTES as u64) as usize;
+            let blk = cache.block(&self.file, self.file_len, id);
+            let take = (out.len() - done).min(blk.len() - in_off);
+            out[done..done + take].copy_from_slice(&blk[in_off..in_off + take]);
+            done += take;
+            off += take as u64;
+        }
+    }
+
+    /// Walk `n_elems` 4-byte elements starting at 4-byte-aligned `off`,
+    /// handing `f` one contiguous little-endian byte run (a whole number of
+    /// elements) per block visit, straight out of the cache blocks.
+    /// Sections and blocks are both 4-byte aligned, so an element never
+    /// straddles a block boundary and the hot path performs no heap
+    /// allocation.  The single block-walk all typed readers go through;
+    /// callers bulk-decode each run, so the indirect call is per block, not
+    /// per element.
+    fn walk_runs_cached(&self, mut off: u64, n_elems: usize, f: &mut dyn FnMut(&[u8])) {
+        debug_assert_eq!(off % 4, 0);
+        let mut cache = self.cache.lock().unwrap();
+        let mut remaining = n_elems;
+        while remaining > 0 {
+            let id = off / BLOCK_BYTES as u64;
+            let in_off = (off % BLOCK_BYTES as u64) as usize;
+            let blk = cache.block(&self.file, self.file_len, id);
+            let take = remaining.min((blk.len() - in_off) / 4);
+            debug_assert!(take > 0);
+            f(&blk[in_off..in_off + 4 * take]);
+            remaining -= take;
+            off += 4 * take as u64;
+        }
+    }
+
+    /// Decode f32s from `off` into the fixed-size buffer `out`.
+    fn read_f32s_slice_cached(&self, off: u64, out: &mut [f32]) {
+        let n = out.len();
+        let mut done = 0usize;
+        self.walk_runs_cached(off, n, &mut |run| {
+            for ch in run.chunks_exact(4) {
+                out[done] = f32::from_le_bytes(ch.try_into().unwrap());
+                done += 1;
+            }
+        });
+    }
+
+    /// Decode `n_elems` f32s from `off`, appending to `out`.
+    fn read_f32s_vec_cached(&self, off: u64, n_elems: usize, out: &mut Vec<f32>) {
+        out.reserve(n_elems);
+        self.walk_runs_cached(off, n_elems, &mut |run| {
+            for ch in run.chunks_exact(4) {
+                out.push(f32::from_le_bytes(ch.try_into().unwrap()));
+            }
+        });
+    }
+
+    /// Decode `n_elems` u32s from `off`, appending to `out`.
+    fn read_u32s_vec_cached(&self, off: u64, n_elems: usize, out: &mut Vec<u32>) {
+        out.reserve(n_elems);
+        self.walk_runs_cached(off, n_elems, &mut |run| {
+            for ch in run.chunks_exact(4) {
+                out.push(u32::from_le_bytes(ch.try_into().unwrap()));
+            }
+        });
+    }
+
+    /// CSR range `(indptr[r], indptr[r+1])` of row `r`.
+    pub fn row_range(&self, r: usize) -> (usize, usize) {
+        assert!(r < self.n, "row {r} out of range (n = {})", self.n);
+        let mut b = [0u8; 16];
+        self.read_at_cached(self.lay.indptr + 8 * r as u64, &mut b);
+        let lo = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
+        let hi = u64::from_le_bytes(b[8..].try_into().unwrap()) as usize;
+        (lo, hi)
+    }
+
+    /// Snapshot of the cache counters and the residency bound.
+    pub fn cache_stats(&self) -> CacheStats {
+        let c = self.cache.lock().unwrap();
+        CacheStats {
+            hits: c.hits,
+            misses: c.misses,
+            resident_bytes: c.resident_bytes(),
+            budget_bytes: c.max_blocks * BLOCK_BYTES,
+        }
+    }
+
+    /// Total container size in bytes (header + all sections).
+    pub fn store_bytes(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Materialize the full adjacency as an in-memory [`Csr`]
+    /// (tests/tooling only — defeats the purpose on big graphs).
+    pub fn read_csr(&self) -> Csr {
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.nnz);
+        let mut values: Vec<f32> = Vec::with_capacity(self.nnz);
+        indptr.push(0usize);
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        for r in 0..self.n {
+            GraphAccess::read_row(self, r, &mut cols, &mut vals);
+            indices.extend_from_slice(&cols);
+            values.extend_from_slice(&vals);
+            indptr.push(indices.len());
+        }
+        Csr { rows: self.n, cols: self.n, indptr, indices, values }
+    }
+}
+
+impl std::fmt::Debug for OocGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OocGraph")
+            .field("n", &self.n)
+            .field("nnz", &self.nnz)
+            .field("d_in", &self.d_in)
+            .field("classes", &self.classes)
+            .field("file_len", &self.file_len)
+            .finish()
+    }
+}
+
+impl GraphAccess for OocGraph {
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn cols(&self) -> usize {
+        self.n
+    }
+
+    fn row_nnz(&self, r: usize) -> usize {
+        let (lo, hi) = self.row_range(r);
+        hi - lo
+    }
+
+    fn read_row(&self, r: usize, cols: &mut Vec<u32>, vals: &mut Vec<f32>) {
+        let (lo, hi) = self.row_range(r);
+        let k = hi - lo;
+        cols.clear();
+        vals.clear();
+        if k == 0 {
+            return;
+        }
+        self.read_u32s_vec_cached(self.lay.indices + 4 * lo as u64, k, cols);
+        self.read_f32s_vec_cached(self.lay.values + 4 * lo as u64, k, vals);
+    }
+}
+
+impl VertexData for OocGraph {
+    fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.d_in
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn read_features(&self, v: usize, out: &mut [f32]) {
+        assert!(v < self.n, "vertex {v} out of range (n = {})", self.n);
+        assert_eq!(out.len(), self.d_in, "feature buffer must be d_in long");
+        self.read_f32s_slice_cached(self.lay.features + 4 * (v as u64) * self.d_in as u64, out);
+    }
+
+    fn label_of(&self, v: usize) -> u32 {
+        assert!(v < self.n, "vertex {v} out of range (n = {})", self.n);
+        let mut b = [0u8; 4];
+        self.read_at_cached(self.lay.labels + 4 * v as u64, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    fn split_of(&self, v: usize) -> u8 {
+        assert!(v < self.n, "vertex {v} out of range (n = {})", self.n);
+        let mut b = [0u8; 1];
+        self.read_at_cached(self.lay.split + v as u64, &mut b);
+        b[0]
+    }
+}
+
+/// Open `path` as an [`OocGraph`], packing the named registry dataset into
+/// it first if the file does not exist yet — the "pack once, train
+/// out-of-core forever" flow used by `scalegnn train --from-store`.
+///
+/// An existing file must carry the [`name_tag`] of `dataset` in its header;
+/// a store packed from a different dataset is refused instead of silently
+/// training on the wrong graph.
+pub fn open_or_pack(dataset: &str, path: &Path, cache_bytes: usize) -> Result<OocGraph> {
+    if !path.exists() {
+        let d = super::datasets::load(dataset)
+            .ok_or_else(|| anyhow!("unknown dataset '{dataset}' (see `scalegnn info`)"))?;
+        pack(&d, path)?;
+    }
+    let g = OocGraph::open(path, cache_bytes)?;
+    if g.source_tag != name_tag(dataset) {
+        bail!(
+            "pallas store {} was packed from a different dataset than '{dataset}' \
+             (source tag mismatch); delete it or drop --dataset",
+            path.display()
+        );
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pallas_unit_{name}_{}.pallas", std::process::id()))
+    }
+
+    #[test]
+    fn layout_is_contiguous_and_sized() {
+        let l = layout(10, 33, 4).unwrap();
+        assert_eq!(l.indptr, HEADER_BYTES);
+        assert_eq!(l.indices, l.indptr + 8 * 11);
+        assert_eq!(l.values, l.indices + 4 * 33);
+        assert_eq!(l.features, l.values + 4 * 33);
+        assert_eq!(l.labels, l.features + 4 * 40);
+        assert_eq!(l.split, l.labels + 4 * 10);
+        assert_eq!(l.total, l.split + 10);
+    }
+
+    #[test]
+    fn overflowing_header_counts_are_rejected() {
+        assert!(layout(u64::MAX, 1, 1).is_none());
+        assert!(layout(1, u64::MAX, 1).is_none());
+        assert!(layout(1 << 40, 1, 1 << 40).is_none());
+    }
+
+    #[test]
+    fn source_tag_roundtrips_and_gates_open_or_pack() {
+        let d = datasets::load("tiny").unwrap();
+        let p = tmp("tag");
+        pack(&d, &p).unwrap();
+        let g = OocGraph::open(&p, 1 << 20).unwrap();
+        assert_eq!(g.source_tag, name_tag("tiny"));
+        assert_ne!(name_tag("tiny"), name_tag("papers100m_ooc"));
+        // same name -> accepted; different dataset -> refused (no repack)
+        assert!(open_or_pack("tiny", &p, 1 << 20).is_ok());
+        let e = open_or_pack("reddit_sim", &p, 1 << 20).unwrap_err();
+        assert!(format!("{e:#}").contains("different dataset"), "{e:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pack_reports_exact_file_size() {
+        let d = datasets::load("tiny").unwrap();
+        let p = tmp("size");
+        let stats = pack(&d, &p).unwrap();
+        assert_eq!(stats.bytes, std::fs::metadata(&p).unwrap().len());
+        assert_eq!(stats.n, d.n);
+        assert_eq!(stats.nnz, d.adj.nnz());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn graph_access_on_csr_matches_direct_rows() {
+        let d = datasets::load("tiny").unwrap();
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        for r in [0usize, 1, 100, d.n - 1] {
+            d.adj.read_row(r, &mut cols, &mut vals);
+            let (cs, vs) = d.adj.row(r);
+            assert_eq!(cols, cs);
+            assert_eq!(vals, vs);
+            assert_eq!(GraphAccess::row_nnz(&d.adj, r), cs.len());
+        }
+        assert_eq!(GraphAccess::rows(&d.adj), d.n);
+        assert_eq!(GraphAccess::cols(&d.adj), d.n);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_block() {
+        // one-block cache: touching the first and last block of the file
+        // must evict, and residency stays within the single-block budget
+        let d = datasets::load("tiny").unwrap();
+        let p = tmp("lru");
+        pack(&d, &p).unwrap();
+        let g = OocGraph::open(&p, BLOCK_BYTES).unwrap();
+        assert!(
+            g.store_bytes() > BLOCK_BYTES as u64,
+            "tiny store should span multiple blocks ({} bytes)",
+            g.store_bytes()
+        );
+        let _ = g.row_range(0); // first block (indptr starts at byte 64)
+        let _ = g.split_of(g.n - 1); // last byte of the file -> last block
+        let _ = g.row_range(0); // must re-read: the one slot was evicted
+        let s = g.cache_stats();
+        assert!(s.resident_bytes <= BLOCK_BYTES, "resident {}", s.resident_bytes);
+        assert_eq!(s.misses, 3, "hits {} misses {}", s.hits, s.misses);
+        std::fs::remove_file(&p).ok();
+    }
+}

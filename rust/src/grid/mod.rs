@@ -8,32 +8,44 @@
 /// 4D grid shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Grid4D {
+    /// Number of data-parallel groups.
     pub gd: usize,
+    /// 3D PMM extent along X (fastest-varying rank coordinate).
     pub gx: usize,
+    /// 3D PMM extent along Y.
     pub gy: usize,
+    /// 3D PMM extent along Z.
     pub gz: usize,
 }
 
 /// Coordinates of one rank.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Coord {
+    /// Data-parallel group index (slowest-varying).
     pub d: usize,
+    /// X coordinate within the group (fastest-varying).
     pub x: usize,
+    /// Y coordinate within the group.
     pub y: usize,
+    /// Z coordinate within the group.
     pub z: usize,
 }
 
 /// The communication axes used by the 3D PMM algorithm and DP sync.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Axis {
+    /// Tensor-parallel axis X (ranks varying in `x`, fixed d/y/z).
     X,
+    /// Tensor-parallel axis Y.
     Y,
+    /// Tensor-parallel axis Z.
     Z,
     /// data-parallel gradient all-reduce group (across `d`, fixed x/y/z)
     Dp,
 }
 
 impl Grid4D {
+    /// Grid of `gd` DP groups, each a `gx x gy x gz` PMM block (all > 0).
     pub fn new(gd: usize, gx: usize, gy: usize, gz: usize) -> Grid4D {
         assert!(gd > 0 && gx > 0 && gy > 0 && gz > 0);
         Grid4D { gd, gx, gy, gz }
@@ -49,10 +61,12 @@ impl Grid4D {
         }
     }
 
+    /// Total number of ranks (`gd * gx * gy * gz`).
     pub fn world_size(&self) -> usize {
         self.gd * self.gx * self.gy * self.gz
     }
 
+    /// Ranks per data-parallel group (`gx * gy * gz`).
     pub fn group_size(&self) -> usize {
         self.gx * self.gy * self.gz
     }
@@ -70,6 +84,7 @@ impl Grid4D {
         Coord { d, x, y, z }
     }
 
+    /// Inverse of `coord`: (d, x, y, z) -> rank.
     pub fn rank(&self, c: Coord) -> usize {
         debug_assert!(c.d < self.gd && c.x < self.gx && c.y < self.gy && c.z < self.gz);
         ((c.d * self.gz + c.z) * self.gy + c.y) * self.gx + c.x

@@ -5,8 +5,11 @@
 //! stack: Pallas kernels (L1) inside a JAX GCN model (L2) are AOT-lowered to
 //! HLO text at build time; the Rust coordinator (L3) loads the artifacts via
 //! PJRT and owns sampling, the 4D process grid, collectives, the training
-//! loop and all experiment harnesses.  See DESIGN.md for the system
-//! inventory and the per-experiment index.
+//! loop and all experiment harnesses.  See ARCHITECTURE.md for the
+//! paper-section ↔ module map and DESIGN.md for the system inventory and
+//! the per-experiment index.
+
+#![warn(missing_docs)]
 
 pub mod comm;
 pub mod model;

@@ -5,9 +5,13 @@
 //! scalegnn train      --dataset products_sim [--sampler scalegnn|sage|saint]
 //!                     [--dp N] [--epochs E | --steps S] [--target-acc A]
 //!                     [--lr F] [--no-prefetch] [--verbose]
+//! scalegnn train      --from-store graph.pallas [--dataset papers100m_ooc]
+//!                     [--cache-mb M] [--steps S] [--batch B] [--lr F]
+//! scalegnn pack       --dataset papers100m_ooc [--out graph.pallas]
 //! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S] [--bf16]
 //! scalegnn eval       --dataset tiny --grid 2x2x2
 //! scalegnn sample     --dataset products_sim [--grid 2x2] [--steps S]
+//!                     [--from-store graph.pallas] [--cache-mb M]
 //! scalegnn scaling    --dataset papers100m_sim --machine perlmutter
 //! scalegnn breakdown  --dataset products14m_sim [--machine M]
 //! scalegnn e2e        --dataset products_sim --machine perlmutter
@@ -40,6 +44,7 @@ fn main() {
     let r = match sub.as_str() {
         "info" => cmd_info(&args),
         "train" => cmd_train(&args),
+        "pack" => cmd_pack(&args),
         "pmm-train" => cmd_pmm_train(&args),
         "eval" => cmd_eval(&args),
         "sample" => cmd_sample(&args),
@@ -64,10 +69,13 @@ USAGE: scalegnn <command> [options]
 
 COMMANDS:
   info        show artifacts, models and datasets
-  train       mini-batch training via the PJRT artifacts (fused or DP)
+  train       mini-batch training via the PJRT artifacts (fused or DP);
+              with --from-store FILE.pallas: out-of-core pure-Rust training
+  pack        serialize a dataset into a .pallas out-of-core container
   pmm-train   4D training on the rank-thread 3D PMM engine
   eval        distributed full-graph evaluation (Table II mechanism)
   sample      communication-free distributed sampling microbench
+              (--from-store FILE.pallas extracts shards out-of-core)
   scaling     projected strong scaling at paper scale (Fig. 7)
   breakdown   projected epoch-time breakdown (Figs. 5/8)
   e2e         projected end-to-end time-to-accuracy vs baselines (Fig. 6)
@@ -120,7 +128,76 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_pack(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "papers100m_ooc");
+    let out = args
+        .path_opt("out")
+        .unwrap_or_else(|| PathBuf::from(format!("{dataset}.pallas")));
+    let t0 = std::time::Instant::now();
+    println!("generating {dataset}...");
+    let data = datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    println!("packing {} vertices / {} edges into {}", data.n, data.adj.nnz(), out.display());
+    let stats = scalegnn::graph::store::pack(&data, &out)?;
+    println!(
+        "wrote {} ({} bytes = {:.1} MiB) in {}",
+        out.display(),
+        stats.bytes,
+        stats.bytes as f64 / (1 << 20) as f64,
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+/// Out-of-core training (`train --from-store`): pure-Rust reference model
+/// fed by mini-batches read through the store's bounded block cache.
+fn cmd_train_ooc(args: &Args, store: PathBuf) -> Result<()> {
+    // the OOC path trains the pure-Rust reference GCN with uniform
+    // sampling only; reject PJRT-trainer options instead of ignoring them
+    for opt in ["sampler", "dp", "epochs", "target-acc", "eval-every-epochs"] {
+        if args.str_opt(opt).is_some() {
+            bail!("--{opt} is not supported with --from-store (see `scalegnn help`)");
+        }
+    }
+    if args.flag("bf16") {
+        bail!("--bf16 is not supported with --from-store");
+    }
+    let mut cfg = trainer::OocTrainConfig::quick(store);
+    cfg.dataset = args.str_opt("dataset").map(str::to_string);
+    cfg.cache_bytes = args.get_or("cache-mb", 64usize).map_err(|e| anyhow!(e))? << 20;
+    cfg.batch = args.get_or("batch", 1024).map_err(|e| anyhow!(e))?;
+    cfg.d_h = args.get_or("d-h", 128).map_err(|e| anyhow!(e))?;
+    cfg.layers = args.get_or("layers", 3).map_err(|e| anyhow!(e))?;
+    cfg.steps = args.get_or("steps", 50).map_err(|e| anyhow!(e))?;
+    cfg.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
+    cfg.prefetch = !args.flag("no-prefetch");
+    cfg.verbose = args.flag("verbose") || args.flag("v");
+    println!(
+        "out-of-core training from {} (cache budget {} MiB, prefetch={})",
+        cfg.store.display(),
+        cfg.cache_bytes >> 20,
+        cfg.prefetch
+    );
+    let r = trainer::train_from_store(&cfg)?;
+    println!(
+        "steps={} train={} loss={:.4} train-acc={:.4} sample-wait {}",
+        r.steps,
+        fmt_time(r.train_time_s),
+        r.final_loss,
+        r.final_train_acc,
+        fmt_time(r.sample_wait_s)
+    );
+    println!(
+        "store {} bytes; cache resident {} / budget {} bytes ({} hits / {} misses)",
+        r.store_bytes, r.cache_resident_bytes, r.cache_budget_bytes, r.cache_hits, r.cache_misses
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    if let Some(store) = args.path_opt("from-store") {
+        return cmd_train_ooc(args, store);
+    }
     let dataset = args.str_or("dataset", "products_sim");
     let sampler = SamplerKind::parse(&args.str_or("sampler", "scalegnn"))
         .ok_or_else(|| anyhow!("unknown sampler"))?;
@@ -272,13 +349,45 @@ fn cmd_sample(args: &Args) -> Result<()> {
     if parts.len() != 2 {
         bail!("--grid must be RxC, e.g. 2x2");
     }
-    let data = datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
-    let spec = datasets::spec(&dataset).unwrap();
-    let sampler = UniformVertexSampler::new(data.n, spec.batch, 42);
-    let shards = partition_2d(&data.adj, parts[0], parts[1]);
+    // From a .pallas store each shard is extracted independently through
+    // GraphAccess — a real rank would materialize only its own block.  This
+    // single-process demo hosts every rank, so all blocks coexist here.
+    let from_store = args.path_opt("from-store");
+    let source = match &from_store {
+        Some(p) => format!("store {}", p.display()),
+        None => dataset.clone(),
+    };
+    let (n, batch, shards) = if let Some(path) = from_store {
+        let cache = args.get_or("cache-mb", 64usize).map_err(|e| anyhow!(e))? << 20;
+        let store = scalegnn::graph::store::OocGraph::open(&path, cache)?;
+        let batch = args.get_or("batch", 1024).map_err(|e| anyhow!(e))?;
+        if batch > store.n {
+            bail!("--batch {} exceeds store vertex count {}", batch, store.n);
+        }
+        let rb = scalegnn::graph::block_bounds(store.n, parts[0]);
+        let cb = scalegnn::graph::block_bounds(store.n, parts[1]);
+        let mut shards = Vec::with_capacity(parts[0] * parts[1]);
+        for i in 0..parts[0] {
+            for j in 0..parts[1] {
+                shards.push(scalegnn::graph::extract_shard_from(
+                    &store,
+                    rb[i],
+                    rb[i + 1],
+                    cb[j],
+                    cb[j + 1],
+                ));
+            }
+        }
+        (store.n, batch, shards)
+    } else {
+        let data = datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
+        let spec = datasets::spec(&dataset).unwrap();
+        (data.n, spec.batch, partition_2d(&data.adj, parts[0], parts[1]))
+    };
+    let sampler = UniformVertexSampler::new(n, batch, 42);
     println!(
         "Algorithm 2 on {}: n={} batch={} shard grid {}x{}",
-        dataset, data.n, spec.batch, parts[0], parts[1]
+        source, n, batch, parts[0], parts[1]
     );
     let mut builders: Vec<_> = shards
         .into_iter()

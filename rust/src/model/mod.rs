@@ -22,23 +22,34 @@ use crate::graph::Csr;
 use crate::tensor::{matmul_into, matmul_t_into, rmsnorm_into, t_matmul_into, Mat};
 use crate::util::rng::Rng;
 
+/// RMSNorm variance epsilon (Eq. 7).
 pub const RMS_EPS: f32 = 1e-6;
+/// Adam first-moment decay β₁.
 pub const ADAM_B1: f32 = 0.9;
+/// Adam second-moment decay β₂.
 pub const ADAM_B2: f32 = 0.999;
+/// Adam denominator epsilon.
 pub const ADAM_EPS: f32 = 1e-8;
 
 /// Model dimensions (mirrors `ModelConfig` minus the fixed batch).
 #[derive(Clone, Copy, Debug)]
 pub struct GcnDims {
+    /// Input feature dimensionality.
     pub d_in: usize,
+    /// Hidden width.
     pub d_h: usize,
+    /// Output classes.
     pub d_out: usize,
+    /// Number of GCN layers.
     pub layers: usize,
+    /// Dropout probability (0 disables).
     pub dropout: f32,
+    /// Decoupled weight-decay coefficient (0 disables).
     pub weight_decay: f32,
 }
 
 impl GcnDims {
+    /// Number of parameter tensors: `w_in`, per-layer `(w_l, g_l)`, `w_out`.
     pub fn n_params(&self) -> usize {
         2 + 2 * self.layers
     }
@@ -80,14 +91,20 @@ pub fn init_params(dims: &GcnDims, seed: u64) -> Params {
 /// cloned here (the mask is an input and is passed to `backward` again).
 #[derive(Default)]
 pub struct LayerCache {
+    /// Aggregated features `adj @ h` (Eq. 5), kept for Eq. 15.
     pub h_agg: Mat,
+    /// Pre-norm combined features `h_agg @ w` (Eq. 6), kept for Eq. 13.
     pub xc: Mat,
+    /// Per-row inverse RMS of `xc` (RMSNorm backward).
     pub inv_rms: Vec<f32>,
 }
 
+/// Everything the backward pass reads from the forward pass.
 #[derive(Default)]
 pub struct ForwardCache {
+    /// Per-layer caches, input-to-output order.
     pub layers: Vec<LayerCache>,
+    /// Final hidden activation (the output head's input).
     pub h_last: Mat,
 }
 
@@ -122,15 +139,20 @@ struct BackwardScratch {
 /// mini-batches of the same shape (reshaping reuses the allocations).
 #[derive(Default)]
 pub struct StepWorkspace {
+    /// Forward-pass tensors the backward pass reads.
     pub cache: ForwardCache,
+    /// Output-head logits of the last `forward_ws` call.
     pub logits: Mat,
+    /// Loss gradient w.r.t. the logits.
     pub dlogits: Mat,
+    /// Parameter gradients of the last `backward_ws` call.
     pub grads: Params,
     act: Mat,
     bwd: BackwardScratch,
 }
 
 impl StepWorkspace {
+    /// Empty workspace; buffers are sized lazily on first use.
     pub fn new() -> StepWorkspace {
         StepWorkspace::default()
     }
@@ -378,12 +400,16 @@ pub fn backward(
 /// Adam optimizer state.
 #[derive(Clone)]
 pub struct AdamState {
+    /// First moments, one tensor per parameter.
     pub m: Params,
+    /// Second moments, one tensor per parameter.
     pub v: Params,
+    /// Step counter (f32 to mirror the artifact's scalar input).
     pub t: f32,
 }
 
 impl AdamState {
+    /// Zero moments shaped like `dims.param_shapes()`.
     pub fn new(dims: &GcnDims) -> AdamState {
         let zeros: Params = dims
             .param_shapes()

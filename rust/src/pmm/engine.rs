@@ -26,17 +26,26 @@ use crate::util::rng::Rng;
 /// breakdowns measured at real (small) scale.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PmmTimers {
+    /// Blocking wait on Algorithm-2 subgraph construction.
     pub sampling: f64,
+    /// Rank-local sparse aggregation kernels.
     pub spmm: f64,
+    /// Rank-local dense matmul kernels.
     pub gemm: f64,
+    /// RMSNorm / ReLU / dropout / residual element-wise work.
     pub elementwise: f64,
+    /// Tensor-parallel collectives (contraction/RMSNorm all-reduces).
     pub tp_comm: f64,
+    /// Data-parallel gradient all-reduce.
     pub dp_comm: f64,
+    /// Residual-resharding all-gathers (§IV-C4).
     pub reshard: f64,
+    /// Everything else (input shard gather, Adam, bookkeeping).
     pub other: f64,
 }
 
 impl PmmTimers {
+    /// Sum of all phases.
     pub fn total(&self) -> f64 {
         self.sampling
             + self.spmm
@@ -48,6 +57,7 @@ impl PmmTimers {
             + self.other
     }
 
+    /// Accumulate another rank's (or step's) timers into this one.
     pub fn add(&mut self, o: &PmmTimers) {
         self.sampling += o.sampling;
         self.spmm += o.spmm;
@@ -60,8 +70,12 @@ impl PmmTimers {
     }
 }
 
+/// Loss/accuracy of one engine training step (identical on every rank of a
+/// DP group after the loss all-reduces).
 pub struct PmmStepOutput {
+    /// Masked mean cross-entropy over the sampled train vertices.
     pub loss: f32,
+    /// Masked accuracy over the sampled train vertices.
     pub acc: f32,
 }
 
@@ -171,10 +185,15 @@ impl Drop for SubgraphPrefetcher {
 
 /// One rank's engine state.
 pub struct PmmGcn<'a> {
+    /// This rank's grid/communication context.
     pub ctx: PmmCtx<'a>,
+    /// Model dimensions.
     pub dims: GcnDims,
+    /// Mini-batch size `B`.
     pub batch: usize,
+    /// The (shared, in-memory) dataset.
     pub data: Arc<Dataset>,
+    /// Base seed for parameters, sampling and dropout streams.
     pub seed: u64,
     f_layouts: Vec<Layout>,
     // parameters (sharded); g is a replicated local slice over the layer's
@@ -191,6 +210,7 @@ pub struct PmmGcn<'a> {
     // reduction scratch reused across layers and steps (RMSNorm backward)
     scratch_dots: Vec<f32>,
     scratch_dxn: Vec<f32>,
+    /// Per-phase wall-clock accumulated over all steps run so far.
     pub timers: PmmTimers,
 }
 
@@ -204,6 +224,8 @@ macro_rules! timed {
 }
 
 impl<'a> PmmGcn<'a> {
+    /// Build one rank's engine: shard the (shared-seed) parameters, size
+    /// the Adam moments, and start the per-layer Algorithm-2 prefetcher.
     pub fn new(
         ctx: PmmCtx<'a>,
         dims: GcnDims,

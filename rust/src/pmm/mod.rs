@@ -36,11 +36,14 @@ use crate::util::rng::{splitmix64, Rng};
 /// replicated along the remaining axis (also the matmul contraction axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Layout {
+    /// Axis the rows are split across.
     pub row_axis: Axis,
+    /// Axis the columns are split across.
     pub col_axis: Axis,
 }
 
 impl Layout {
+    /// Layout with distinct row/column axes.
     pub fn new(row_axis: Axis, col_axis: Axis) -> Layout {
         assert_ne!(row_axis, col_axis);
         Layout { row_axis, col_axis }
@@ -52,6 +55,7 @@ impl Layout {
     }
 }
 
+/// The remaining tensor-parallel axis given two distinct ones.
 pub fn third(a: Axis, b: Axis) -> Axis {
     match (a, b) {
         (Axis::X, Axis::Y) | (Axis::Y, Axis::X) => Axis::Z,
@@ -75,17 +79,23 @@ pub fn feature_layouts(layers: usize) -> Vec<Layout> {
 /// boundaries along both axes.
 #[derive(Clone, Debug)]
 pub struct PmmMat {
+    /// Which axes the rows/columns are split across.
     pub layout: Layout,
+    /// Global row-block boundaries along `layout.row_axis`.
     pub row_bounds: Arc<Vec<usize>>,
+    /// Global column-block boundaries along `layout.col_axis`.
     pub col_bounds: Arc<Vec<usize>>,
+    /// This rank's local block.
     pub local: Mat,
 }
 
 impl PmmMat {
+    /// Global row count (last row boundary).
     pub fn global_rows(&self) -> usize {
         *self.row_bounds.last().unwrap()
     }
 
+    /// Global column count (last column boundary).
     pub fn global_cols(&self) -> usize {
         *self.col_bounds.last().unwrap()
     }
@@ -93,9 +103,13 @@ impl PmmMat {
 
 /// Per-rank execution context.
 pub struct PmmCtx<'a> {
+    /// The 4D grid this rank belongs to.
     pub grid: Grid4D,
+    /// This rank's id.
     pub rank: usize,
+    /// This rank's (d, x, y, z) coordinates.
     pub coord: Coord,
+    /// Shared-memory collectives of the grid.
     pub world: &'a CommWorld,
     /// precision for the PMM matmul all-reduces (§V-B: BF16 optional)
     pub tp_precision: Precision,
@@ -104,6 +118,8 @@ pub struct PmmCtx<'a> {
 }
 
 impl<'a> PmmCtx<'a> {
+    /// Context for `rank` of `grid`, with `tp` as the matmul all-reduce
+    /// precision (§V-B).
     pub fn new(grid: Grid4D, rank: usize, world: &'a CommWorld, tp: Precision) -> Self {
         PmmCtx {
             grid,
@@ -127,6 +143,7 @@ impl<'a> PmmCtx<'a> {
         r
     }
 
+    /// This rank's coordinate along `a`.
     pub fn axis_coord(&self, a: Axis) -> usize {
         match a {
             Axis::X => self.coord.x,
@@ -136,6 +153,7 @@ impl<'a> PmmCtx<'a> {
         }
     }
 
+    /// Extent of the grid along `a`.
     pub fn axis_size(&self, a: Axis) -> usize {
         self.grid.axis_size(a)
     }

@@ -23,8 +23,11 @@ use crate::util::json::Json;
 /// dtype of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
@@ -42,11 +45,14 @@ impl DType {
 /// Shape+dtype of one artifact input or output.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -55,32 +61,49 @@ impl TensorSpec {
 /// Manifest entry for one artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Manifest key / artifact name.
     pub name: String,
+    /// HLO text file relative to the artifacts dir.
     pub file: String,
+    /// Artifact family (e.g. `train_step`).
     pub family: String,
+    /// Model configuration this artifact was lowered for, if any.
     pub model: Option<String>,
+    /// Input tensor specs in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tuple specs in return order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// Model metadata mirrored from `python/compile/model.py::ModelConfig`.
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
+    /// Model configuration name.
     pub name: String,
+    /// Fixed mini-batch size the artifact was lowered with.
     pub batch: usize,
+    /// Input feature dimensionality.
     pub d_in: usize,
+    /// Hidden width.
     pub d_h: usize,
+    /// Output classes.
     pub d_out: usize,
+    /// Number of GCN layers.
     pub layers: usize,
+    /// Dropout probability baked into the training artifact.
     pub dropout: f32,
     /// padded edge-list capacity of the sparse-SpMM artifacts (0 = dense)
     pub edge_cap: usize,
+    /// Number of parameter tensors.
     pub n_params: usize,
+    /// Parameter shapes in artifact order.
     pub param_shapes: Vec<Vec<usize>>,
+    /// Parameter names in artifact order.
     pub param_names: Vec<String>,
 }
 
 impl ModelMeta {
+    /// Total trainable scalar count.
     pub fn param_elems(&self) -> usize {
         self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
     }
@@ -89,7 +112,9 @@ impl ModelMeta {
 /// Parsed artifacts/manifest.json.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifacts by name.
     pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Model configurations by name.
     pub models: HashMap<String, ModelMeta>,
 }
 
@@ -104,6 +129,7 @@ fn spec_from_json(j: &Json) -> Result<TensorSpec> {
 }
 
 impl Manifest {
+    /// Parse `dir/manifest.json` (written by `python/compile/aot.py`).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -190,6 +216,7 @@ impl Manifest {
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
+    /// The manifest entry this executable was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -214,7 +241,9 @@ impl Executable {
 
 /// Per-thread PJRT runtime with an executable cache.
 pub struct Runtime {
+    /// Artifacts directory this runtime reads from.
     pub dir: PathBuf,
+    /// Parsed manifest.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
@@ -229,6 +258,7 @@ impl Runtime {
         Ok(Runtime { dir: dir.to_path_buf(), manifest, client, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -255,6 +285,7 @@ impl Runtime {
         Ok(e)
     }
 
+    /// Model metadata by configuration name.
     pub fn model(&self, name: &str) -> Result<&ModelMeta> {
         self.manifest
             .models
@@ -282,16 +313,19 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// i32 tensor literal of the given shape.
 pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// u32 tensor literal of the given shape.
 pub fn lit_u32(data: &[u32], shape: &[usize]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// Rank-0 f32 literal.
 pub fn lit_scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }

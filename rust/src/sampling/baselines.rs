@@ -38,12 +38,17 @@ pub struct SampledBatch {
 /// Strategy selector shared by the trainer and the benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
+    /// ScaleGNN's communication-free uniform vertex sampling (Algorithm 1).
     ScaleGnnUniform,
+    /// GraphSAGE node-wise neighbor sampling (Table I baseline).
     GraphSage,
+    /// GraphSAINT node sampling (Table I baseline).
     GraphSaintNode,
 }
 
 impl SamplerKind {
+    /// Parse a CLI name (`scalegnn`/`uniform`, `graphsage`/`sage`,
+    /// `graphsaint`/`saint`).
     pub fn parse(s: &str) -> Option<SamplerKind> {
         match s {
             "scalegnn" | "uniform" => Some(SamplerKind::ScaleGnnUniform),
@@ -53,6 +58,7 @@ impl SamplerKind {
         }
     }
 
+    /// Human-readable name (Table I row label).
     pub fn name(&self) -> &'static str {
         match self {
             SamplerKind::ScaleGnnUniform => "ScaleGNN",
@@ -64,14 +70,21 @@ impl SamplerKind {
 
 /// GraphSAGE node-wise neighbor sampling.
 pub struct GraphSageSampler {
+    /// Fixed batch capacity `B` (union truncated/padded to this).
     pub batch: usize,
+    /// Loss-carrying target vertices drawn per batch.
     pub targets_per_batch: usize,
+    /// Neighbors sampled per vertex per layer.
     pub fanout: usize,
+    /// Hops of neighborhood expansion.
     pub layers: usize,
+    /// Sampling seed.
     pub seed: u64,
 }
 
 impl GraphSageSampler {
+    /// Pick `targets_per_batch`/`fanout` so the expected L-hop union
+    /// roughly fills `batch`.
     pub fn new(batch: usize, layers: usize, seed: u64) -> Self {
         // pick targets/fanout so the expected L-hop union roughly fills B
         let fanout = 5usize;
@@ -90,6 +103,9 @@ impl GraphSageSampler {
         }
     }
 
+    /// Draw the step's batch: targets, frontier-wise neighbor expansion,
+    /// mean-normalized sampled adjacency.  `train_only` restricts targets
+    /// to the train split.
     pub fn sample(&self, data: &Dataset, step: u64, train_only: bool) -> SampledBatch {
         let mut rng = Rng::for_step(self.seed ^ 0x5A6E, step);
         let n = data.n;
@@ -186,7 +202,9 @@ impl GraphSageSampler {
 
 /// GraphSAINT node sampling with the standard bias-correcting estimators.
 pub struct GraphSaintNodeSampler {
+    /// Fixed batch capacity `B` (draws with replacement, deduped, padded).
     pub batch: usize,
+    /// Sampling seed.
     pub seed: u64,
     /// per-vertex sampling probability q_v (prop. to degree), precomputed
     q: Vec<f32>,
@@ -195,6 +213,7 @@ pub struct GraphSaintNodeSampler {
 }
 
 impl GraphSaintNodeSampler {
+    /// Precompute the degree-proportional sampling distribution of `data`.
     pub fn new(data: &Dataset, batch: usize, seed: u64) -> Self {
         let deg: Vec<f64> = data.raw_adj.degrees().iter().map(|&d| (d + 1) as f64).collect();
         let total: f64 = deg.iter().sum();
@@ -215,6 +234,8 @@ impl GraphSaintNodeSampler {
         GraphSaintNodeSampler { batch, seed, q, cdf }
     }
 
+    /// Draw the step's batch: degree-biased vertices, induced subgraph with
+    /// the GraphSAINT edge/loss normalizations.
     pub fn sample(&self, data: &Dataset, step: u64) -> SampledBatch {
         let mut rng = Rng::for_step(self.seed ^ 0x5417, step);
         let b = self.batch;

@@ -24,9 +24,11 @@ pub struct LocalSubgraph {
     /// compact row range [row_lo, row_hi): rows of the B x B matrix owned
     /// by this rank (S[row_lo..row_hi] fall in the shard's [R0,R1))
     pub row_lo: usize,
+    /// End (exclusive) of the compact row range.
     pub row_hi: usize,
     /// compact column range [col_lo, col_hi)
     pub col_lo: usize,
+    /// End (exclusive) of the compact column range.
     pub col_hi: usize,
     /// local rows (row_hi-row_lo) x B CSR with compact column ids in
     /// [col_lo, col_hi)
@@ -36,6 +38,7 @@ pub struct LocalSubgraph {
 }
 
 impl LocalSubgraph {
+    /// Number of compact rows owned by this rank.
     pub fn local_rows(&self) -> usize {
         self.row_hi - self.row_lo
     }
@@ -81,7 +84,9 @@ impl TagMap {
 /// Per-rank builder. Owns scratch buffers so the steady-state hot path does
 /// not allocate.
 pub struct DistributedSubgraphBuilder {
+    /// The shared communication-free sampler (identical on every rank).
     pub sampler: UniformVertexSampler,
+    /// This rank's 2D adjacency shard.
     pub shard: CsrShard,
     tags: TagMap,
     // scratch reused across steps
@@ -90,6 +95,7 @@ pub struct DistributedSubgraphBuilder {
 }
 
 impl DistributedSubgraphBuilder {
+    /// Builder for one rank: the shared sampler plus the rank's shard.
     pub fn new(sampler: UniformVertexSampler, shard: CsrShard) -> Self {
         let n = sampler.n;
         DistributedSubgraphBuilder {

@@ -8,4 +8,6 @@ pub mod uniform;
 
 pub use baselines::{GraphSageSampler, GraphSaintNodeSampler, SampledBatch, SamplerKind};
 pub use distributed::{assemble_global, DistributedSubgraphBuilder, LocalSubgraph};
-pub use uniform::{densify_into, induce_rescaled, MiniBatch, UniformVertexSampler};
+pub use uniform::{
+    densify_into, induce_rescaled, induce_rescaled_from, MiniBatch, UniformVertexSampler,
+};

@@ -4,18 +4,22 @@
 //! `(seed, step)` pair — no inter-rank communication — then extracts its
 //! local portion of the induced subgraph (Algorithm 2, `distributed.rs`).
 
-use crate::graph::Csr;
+use crate::graph::{Csr, GraphAccess};
 use crate::util::rng::Rng;
 
 /// Sampler state shared (by value — it is tiny) by every rank of a DP group.
 #[derive(Clone, Debug)]
 pub struct UniformVertexSampler {
+    /// Number of vertices in the full graph.
     pub n: usize,
+    /// Mini-batch size `B`.
     pub batch: usize,
+    /// Shared sampling seed (identical across the ranks of a DP group).
     pub seed: u64,
 }
 
 impl UniformVertexSampler {
+    /// Build a sampler drawing `batch` of `n` vertices per step.
     pub fn new(n: usize, batch: usize, seed: u64) -> Self {
         assert!(batch <= n, "batch {batch} > n {n}");
         UniformVertexSampler { n, batch, seed }
@@ -45,30 +49,68 @@ pub struct MiniBatch {
     pub adj_t: Csr,
 }
 
-/// Induce the subgraph on sorted `s` and rescale off-diagonal entries by
-/// `1/p` (Eq. 24).  Single-rank reference used by the per-group trainer and
-/// as the oracle the distributed builder is tested against.
-pub fn induce_rescaled(a: &Csr, s: &[u32], p: f32) -> MiniBatch {
+/// Merge one sampled row into the induced triple list: intersect the row's
+/// (sorted) columns with the (sorted) sample and rescale off-diagonal
+/// weights by `1/p` (Eq. 24).  Shared by the zero-copy in-memory path and
+/// the scratch-buffer out-of-core path, so the two cannot drift.
+#[inline]
+fn induce_row(
+    s: &[u32],
+    si: usize,
+    v: u32,
+    cs: &[u32],
+    vs: &[f32],
+    p: f32,
+    triples: &mut Vec<(u32, u32, f32)>,
+) {
     let b = s.len();
-    let mut triples = Vec::new();
-    for (si, &v) in s.iter().enumerate() {
-        let (cs, vs) = a.row(v as usize);
-        // intersect the row's (sorted) columns with the (sorted) sample
-        let mut ci = 0usize;
-        for (&c, &w) in cs.iter().zip(vs) {
-            // advance ci while s[ci] < c
-            while ci < b && s[ci] < c {
-                ci += 1;
-            }
-            if ci < b && s[ci] == c {
-                let w = if c == v { w } else { w / p };
-                triples.push((si as u32, ci as u32, w));
-            }
+    let mut ci = 0usize;
+    for (&c, &w) in cs.iter().zip(vs) {
+        // advance ci while s[ci] < c
+        while ci < b && s[ci] < c {
+            ci += 1;
+        }
+        if ci < b && s[ci] == c {
+            let w = if c == v { w } else { w / p };
+            triples.push((si as u32, ci as u32, w));
         }
     }
+}
+
+fn assemble_minibatch(s: &[u32], triples: Vec<(u32, u32, f32)>) -> MiniBatch {
+    let b = s.len();
     let adj = Csr::from_triples(b, b, triples);
     let adj_t = adj.transpose();
     MiniBatch { vertices: s.to_vec(), adj, adj_t }
+}
+
+/// Induce the subgraph on sorted `s` and rescale off-diagonal entries by
+/// `1/p` (Eq. 24).  Single-rank reference used by the per-group trainer and
+/// as the oracle the distributed builder is tested against.  Rows are
+/// borrowed zero-copy; the out-of-core variant is [`induce_rescaled_from`].
+pub fn induce_rescaled(a: &Csr, s: &[u32], p: f32) -> MiniBatch {
+    let mut triples = Vec::new();
+    for (si, &v) in s.iter().enumerate() {
+        let (cs, vs) = a.row(v as usize);
+        induce_row(s, si, v, cs, vs, p, &mut triples);
+    }
+    assemble_minibatch(s, triples)
+}
+
+/// As [`induce_rescaled`], but generic over [`GraphAccess`] so the same
+/// mini-batch construction serves out-of-core graphs.  Rows are read into
+/// reused scratch buffers; the per-row merge (`induce_row`) is the very
+/// function the in-memory path runs, so for the same stored bytes, sample
+/// and probability the output is bitwise identical regardless of where the
+/// graph lives.
+pub fn induce_rescaled_from<G: GraphAccess + ?Sized>(a: &G, s: &[u32], p: f32) -> MiniBatch {
+    let mut triples = Vec::new();
+    let (mut rcols, mut rvals) = (Vec::new(), Vec::new());
+    for (si, &v) in s.iter().enumerate() {
+        a.read_row(v as usize, &mut rcols, &mut rvals);
+        induce_row(s, si, v, &rcols, &rvals, p, &mut triples);
+    }
+    assemble_minibatch(s, triples)
 }
 
 /// Dense-ified `B x B` adjacency (row-major) for the PJRT train-step

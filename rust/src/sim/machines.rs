@@ -9,6 +9,7 @@
 /// One GPU/GCD/APU model + its node-level fabric.
 #[derive(Clone, Copy, Debug)]
 pub struct Machine {
+    /// Machine name as it appears in the paper.
     pub name: &'static str,
     /// sustained f32 matmul throughput per device (FLOP/s)
     pub flops: f64,
@@ -21,6 +22,7 @@ pub struct Machine {
     pub inter_bw: f64,
     /// per-message latency (s) intra / inter node
     pub alpha_intra: f64,
+    /// Per-message latency (s) across nodes.
     pub alpha_inter: f64,
     /// devices per node (GCDs on Frontier)
     pub devices_per_node: usize,
@@ -67,6 +69,7 @@ pub const TUOLUMNE: Machine = Machine {
     collective_efficiency: 0.7,
 };
 
+/// Look up a machine profile by (case-insensitive) name.
 pub fn by_name(name: &str) -> Option<Machine> {
     match name.to_ascii_lowercase().as_str() {
         "perlmutter" => Some(PERLMUTTER),

@@ -20,16 +20,25 @@ fn passes_bytes(b: f64, dh: f64) -> f64 {
 /// Paper-scale workload description (real dataset sizes).
 #[derive(Clone, Copy, Debug)]
 pub struct Workload {
+    /// Vertices.
     pub n: f64,
+    /// Edges.
     pub edges: f64,
+    /// Input feature dimensionality.
     pub d_in: f64,
+    /// Hidden width.
     pub d_h: f64,
+    /// Output classes.
     pub d_out: f64,
+    /// GCN layers.
     pub layers: f64,
+    /// Per-group mini-batch size.
     pub batch: f64,
 }
 
 impl Workload {
+    /// Workload from a registry spec's paper-scale shadow, with the model
+    /// width/depth the projections assume.
     pub fn from_spec(spec: &crate::graph::DatasetSpec, d_h: f64, layers: f64) -> Workload {
         Workload {
             n: spec.paper.n,
@@ -70,8 +79,10 @@ pub struct OptFlags {
 }
 
 impl OptFlags {
+    /// Every §V optimization disabled (the Fig. 5 baseline).
     pub const NONE: OptFlags =
         OptFlags { prefetch: false, bf16: false, fusion: false, overlap: false };
+    /// Every §V optimization enabled.
     pub const ALL: OptFlags =
         OptFlags { prefetch: true, bf16: true, fusion: true, overlap: true };
 }
@@ -79,16 +90,24 @@ impl OptFlags {
 /// Per-epoch component times in seconds.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EpochBreakdown {
+    /// Algorithm-2 sampling (visible share after prefetch).
     pub sampling: f64,
+    /// Sparse aggregation kernels.
     pub spmm: f64,
+    /// Dense matmul kernels.
     pub gemm: f64,
+    /// Element-wise kernels (RMSNorm/ReLU/dropout/residual).
     pub elementwise: f64,
+    /// Tensor-parallel collectives.
     pub tp_comm: f64,
+    /// Data-parallel gradient all-reduce.
     pub dp_comm: f64,
+    /// Fixed per-step launch/bookkeeping overhead.
     pub other: f64,
 }
 
 impl EpochBreakdown {
+    /// Sum of all components.
     pub fn total(&self) -> f64 {
         self.sampling
             + self.spmm
@@ -99,6 +118,7 @@ impl EpochBreakdown {
             + self.other
     }
 
+    /// Every component multiplied by `f`.
     pub fn scale(&self, f: f64) -> EpochBreakdown {
         EpochBreakdown {
             sampling: self.sampling * f,

@@ -17,10 +17,14 @@ pub mod pool;
 /// `k x JT` floats, sized to stay L2-resident across an entire row block.
 const GEMM_JT: usize = 256;
 
+/// Dense row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major element storage (`rows * cols` values).
     pub data: Vec<f32>,
 }
 
@@ -33,19 +37,23 @@ impl Default for Mat {
 }
 
 impl Mat {
+    /// All-zero `rows x cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap a row-major buffer (must hold exactly `rows * cols` values).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Constant-filled `rows x cols` matrix.
     pub fn filled(rows: usize, cols: usize, v: f32) -> Mat {
         Mat { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// `n x n` identity matrix.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -54,6 +62,7 @@ impl Mat {
         m
     }
 
+    /// I.i.d. normal entries with standard deviation `scale`.
     pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng, scale: f32) -> Mat {
         Mat {
             rows,
@@ -91,16 +100,19 @@ impl Mat {
         self.data.resize(rows * cols, 0.0);
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Mutable element at `(r, c)`.
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
@@ -129,6 +141,7 @@ impl Mat {
         c
     }
 
+    /// Materialized transpose.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -139,6 +152,7 @@ impl Mat {
         t
     }
 
+    /// Element-wise sum `self + b`.
     pub fn add(&self, b: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         let mut out = self.clone();
@@ -148,6 +162,7 @@ impl Mat {
         out
     }
 
+    /// In-place element-wise sum `self += b`.
     pub fn add_assign(&mut self, b: &Mat) {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         for (o, &x) in self.data.iter_mut().zip(&b.data) {
@@ -155,6 +170,7 @@ impl Mat {
         }
     }
 
+    /// Element-wise difference `self - b`.
     pub fn sub(&self, b: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         let mut out = self.clone();
@@ -164,6 +180,7 @@ impl Mat {
         out
     }
 
+    /// Element-wise (Hadamard) product `self ⊙ b`.
     pub fn hadamard(&self, b: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         let mut out = self.clone();
@@ -173,6 +190,7 @@ impl Mat {
         out
     }
 
+    /// Scalar multiple `s * self`.
     pub fn scale(&self, s: f32) -> Mat {
         let mut out = self.clone();
         for o in out.data.iter_mut() {
@@ -181,6 +199,7 @@ impl Mat {
         out
     }
 
+    /// Element-wise `max(x, 0)`.
     pub fn relu(&self) -> Mat {
         let mut out = self.clone();
         for o in out.data.iter_mut() {
@@ -210,10 +229,12 @@ impl Mat {
         }
     }
 
+    /// Frobenius norm.
     pub fn frob_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
+    /// Largest absolute element-wise difference to `b` (same shape).
     pub fn max_abs_diff(&self, b: &Mat) -> f32 {
         assert_eq!((self.rows, self.cols), (b.rows, b.cols));
         self.data
@@ -223,6 +244,8 @@ impl Mat {
             .fold(0.0, f32::max)
     }
 
+    /// NumPy-style tolerance comparison: `|a - b| <= atol + rtol * |b|`
+    /// element-wise (false on any shape mismatch).
     pub fn allclose(&self, b: &Mat, atol: f32, rtol: f32) -> bool {
         if (self.rows, self.cols) != (b.rows, b.cols) {
             return false;

@@ -2,12 +2,20 @@
 //! (ScaleGNN uniform, GraphSAGE, GraphSAINT) is reduced to the same
 //! fixed-shape payload `(src[E], dst[E], val[E], X[B,d_in], y[B],
 //! wmask[B])` — a padded edge list plus gathered features/labels.
+//!
+//! The maker reads its graph through the `graph::store` access traits, so
+//! the ScaleGNN uniform path can be fed either by an in-memory [`Dataset`]
+//! ([`BatchMaker::new`]) or by an on-disk `.pallas` store
+//! ([`BatchMaker::from_store`]); same seed, same batch — bitwise — either
+//! way.  The baseline samplers need `raw_adj`/degree statistics and remain
+//! in-memory only.
 
 use std::sync::Arc;
 
+use crate::graph::store::{OocGraph, VertexData};
 use crate::graph::Dataset;
 use crate::sampling::{
-    induce_rescaled, GraphSageSampler, GraphSaintNodeSampler, SamplerKind,
+    induce_rescaled, induce_rescaled_from, GraphSageSampler, GraphSaintNodeSampler, SamplerKind,
     UniformVertexSampler,
 };
 
@@ -15,30 +23,53 @@ use crate::sampling::{
 /// a padded edge list (`edge_cap` entries; padding has val = 0) — the
 /// CPU-efficient sparse-SpMM lowering (EXPERIMENTS.md §Perf L2).
 pub struct BatchData {
+    /// Step index this batch was built for.
     pub step: u64,
+    /// Edge sources in the compact `[0, B)` namespace (padded).
     pub src: Vec<i32>,
+    /// Edge destinations in the compact namespace (padded).
     pub dst: Vec<i32>,
+    /// Edge weights (0 for padding slots).
     pub val: Vec<f32>,
+    /// Row-major `B x d_in` gathered features.
     pub x: Vec<f32>,
+    /// Labels per batch slot.
     pub y: Vec<i32>,
+    /// Per-slot loss weight (0 masks a slot out of the loss).
     pub wmask: Vec<f32>,
     /// edges dropped because the batch exceeded edge_cap (0 in practice)
     pub truncated: usize,
 }
 
+/// Where the maker reads graph + vertex data from.
+enum Source {
+    /// Fully in-memory generated dataset.
+    Mem(Arc<Dataset>),
+    /// Disk-backed `.pallas` store (ScaleGNN uniform sampling only).
+    Ooc(Arc<OocGraph>),
+}
+
 /// Stateful batch factory for one DP group.
 pub struct BatchMaker {
+    /// Sampling algorithm this maker runs.  Fixed at construction: only the
+    /// matching baseline sampler is built, so reassigning this afterwards
+    /// panics on the next `make`.
     pub kind: SamplerKind,
+    /// Mini-batch size `B`.
     pub batch: usize,
+    /// Padded edge-list capacity of the target artifact.
     pub edge_cap: usize,
     d_in: usize,
-    data: Arc<Dataset>,
+    source: Source,
     uniform: UniformVertexSampler,
-    sage: GraphSageSampler,
-    saint: GraphSaintNodeSampler,
+    sage: Option<GraphSageSampler>,
+    saint: Option<GraphSaintNodeSampler>,
 }
 
 impl BatchMaker {
+    /// Maker over an in-memory dataset (any [`SamplerKind`]).  Only the
+    /// sampler matching `kind` is constructed — GraphSAINT in particular
+    /// precomputes O(n) degree tables that would be dead weight otherwise.
     pub fn new(
         data: Arc<Dataset>,
         kind: SamplerKind,
@@ -53,9 +84,32 @@ impl BatchMaker {
             edge_cap,
             d_in: data.features.cols,
             uniform: UniformVertexSampler::new(data.n, batch, group_seed),
-            sage: GraphSageSampler::new(batch, layers, group_seed),
-            saint: GraphSaintNodeSampler::new(&data, batch, group_seed),
-            data,
+            sage: (kind == SamplerKind::GraphSage)
+                .then(|| GraphSageSampler::new(batch, layers, group_seed)),
+            saint: (kind == SamplerKind::GraphSaintNode)
+                .then(|| GraphSaintNodeSampler::new(&data, batch, group_seed)),
+            source: Source::Mem(data),
+        }
+    }
+
+    /// Maker over an out-of-core `.pallas` store.  Only ScaleGNN uniform
+    /// sampling is supported out-of-core (the baselines need the raw
+    /// adjacency and degree statistics, which the store does not carry).
+    pub fn from_store(
+        store: Arc<OocGraph>,
+        batch: usize,
+        edge_cap: usize,
+        group_seed: u64,
+    ) -> BatchMaker {
+        BatchMaker {
+            kind: SamplerKind::ScaleGnnUniform,
+            batch,
+            edge_cap,
+            d_in: store.d_in,
+            uniform: UniformVertexSampler::new(store.n, batch, group_seed),
+            sage: None,
+            saint: None,
+            source: Source::Ooc(store),
         }
     }
 
@@ -63,9 +117,8 @@ impl BatchMaker {
     /// own pipelines otherwise).
     pub fn make(&mut self, step: u64) -> BatchData {
         let b = self.batch;
-        let d = &self.data;
-        let (vertices, adj, weights): (Vec<u32>, _, Vec<f32>) = match self.kind {
-            SamplerKind::ScaleGnnUniform => {
+        let (vertices, adj, weights): (Vec<u32>, _, Vec<f32>) = match (&self.source, self.kind) {
+            (Source::Mem(d), SamplerKind::ScaleGnnUniform) => {
                 let s = self.uniform.sample(step);
                 let mb = induce_rescaled(&d.adj, &s, self.uniform.inclusion_prob());
                 // loss on sampled train-split vertices
@@ -75,12 +128,29 @@ impl BatchMaker {
                     .collect();
                 (s, mb.adj, w)
             }
-            SamplerKind::GraphSage => {
-                let sb = self.sage.sample(d, step, true);
+            (Source::Ooc(g), SamplerKind::ScaleGnnUniform) => {
+                let s = self.uniform.sample(step);
+                let mb = induce_rescaled_from(g.as_ref(), &s, self.uniform.inclusion_prob());
+                let w = s
+                    .iter()
+                    .map(|&v| if g.split_of(v as usize) == 0 { 1.0 } else { 0.0 })
+                    .collect();
+                (s, mb.adj, w)
+            }
+            (Source::Mem(d), SamplerKind::GraphSage) => {
+                let sb = self
+                    .sage
+                    .as_ref()
+                    .expect("in-memory maker carries the GraphSAGE sampler")
+                    .sample(d, step, true);
                 (sb.vertices, sb.adj, sb.loss_weight)
             }
-            SamplerKind::GraphSaintNode => {
-                let sb = self.saint.sample(d, step);
+            (Source::Mem(d), SamplerKind::GraphSaintNode) => {
+                let sb = self
+                    .saint
+                    .as_ref()
+                    .expect("in-memory maker carries the GraphSAINT sampler")
+                    .sample(d, step);
                 let w = sb
                     .vertices
                     .iter()
@@ -88,6 +158,9 @@ impl BatchMaker {
                     .map(|(&v, &lw)| if d.split[v as usize] == 0 { lw } else { 0.0 })
                     .collect();
                 (sb.vertices, sb.adj, w)
+            }
+            (Source::Ooc(_), kind) => {
+                panic!("sampler {kind:?} is not supported out-of-core (uniform only)")
             }
         };
 
@@ -114,11 +187,15 @@ impl BatchMaker {
 
         let mut x = vec![0.0f32; b * self.d_in];
         let mut y = vec![0i32; b];
-        for (i, &v) in vertices.iter().enumerate() {
-            x[i * self.d_in..(i + 1) * self.d_in].copy_from_slice(
-                &d.features.data[v as usize * self.d_in..(v as usize + 1) * self.d_in],
-            );
-            y[i] = d.labels[v as usize] as i32;
+        {
+            let vd: &dyn VertexData = match &self.source {
+                Source::Mem(d) => d.as_ref(),
+                Source::Ooc(g) => g.as_ref(),
+            };
+            for (i, &v) in vertices.iter().enumerate() {
+                vd.read_features(v as usize, &mut x[i * self.d_in..(i + 1) * self.d_in]);
+                y[i] = vd.label_of(v as usize) as i32;
+            }
         }
         BatchData { step, src, dst, val, x, y, wmask: weights, truncated }
     }

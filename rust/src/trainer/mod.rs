@@ -25,43 +25,54 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::{CommWorld, Precision};
+use crate::graph::store::OocGraph;
 use crate::graph::{datasets, Dataset};
 use crate::grid::{Axis, Grid4D};
 use crate::model::GcnDims;
 use crate::runtime::{lit_f32, lit_i32, lit_u32, scalar_f32, to_f32, ModelMeta, Runtime};
-use crate::sampling::SamplerKind;
+use crate::sampling::{induce_rescaled_from, SamplerKind, UniformVertexSampler};
+use crate::tensor::Mat;
 use crate::util::rng::splitmix64;
 use batch::{BatchData, BatchMaker};
 
 /// Training configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Registry dataset name.
     pub dataset: String,
+    /// Sampling algorithm (ScaleGNN uniform or a Table I baseline).
     pub sampler: SamplerKind,
     /// number of data-parallel groups (Gd)
     pub dp: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Sampling / parameter-init seed.
     pub seed: u64,
     /// overlap sampling with training (§V-A)
     pub prefetch: bool,
+    /// Directory of the AOT PJRT artifacts.
     pub artifacts: PathBuf,
     /// hard step cap (0 = until target/max_epochs)
     pub max_steps: u64,
+    /// Epoch cap when `max_steps` is 0.
     pub max_epochs: usize,
     /// stop once full-graph test accuracy reaches this (paper's E2E metric)
     pub target_acc: Option<f32>,
     /// evaluate every k epochs
     pub eval_every_epochs: usize,
+    /// Row-chunk workers of the shared-memory full-graph evaluation.
     pub eval_threads: usize,
+    /// Per-epoch stderr progress logging.
     pub verbose: bool,
     /// use BF16 payloads for the DP gradient all-reduce (§V-B)
     pub bf16_dp: bool,
 }
 
 impl TrainConfig {
+    /// Sensible defaults for a quick run on `dataset` with `sampler`.
     pub fn quick(dataset: &str, sampler: SamplerKind) -> TrainConfig {
         TrainConfig {
             dataset: dataset.to_string(),
@@ -100,22 +111,31 @@ pub struct StepBreakdown {
 /// Result of a training run.
 #[derive(Clone, Debug, Default)]
 pub struct TrainReport {
+    /// Steps executed.
     pub steps: u64,
+    /// Whole epochs completed.
     pub epochs: usize,
     /// training wall-clock, excluding evaluation (§VI-C methodology)
     pub train_time_s: f64,
+    /// Wall-clock spent in periodic full-graph evaluation.
     pub eval_time_s: f64,
+    /// Loss of the final step.
     pub final_loss: f32,
+    /// Best full-graph test accuracy seen at any evaluation.
     pub best_test_acc: f32,
+    /// Best full-graph validation accuracy seen at any evaluation.
     pub best_val_acc: f32,
     /// train time at which the target accuracy was first reached
     pub time_to_target_s: Option<f64>,
+    /// (step, loss) once per epoch (plus the final step).
     pub loss_curve: Vec<(u64, f32)>,
     /// (step, val_acc, test_acc) at each evaluation
     pub acc_curve: Vec<(u64, f32, f32)>,
+    /// Mean per-step timing breakdown.
     pub breakdown: StepBreakdown,
 }
 
+/// Convert artifact-manifest model metadata into reference-model dims.
 pub fn meta_to_dims(m: &ModelMeta) -> GcnDims {
     GcnDims {
         d_in: m.d_in,
@@ -423,6 +443,195 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         Ok(first.unwrap())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core training (`.pallas` store; see graph::store)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the out-of-core training path (`train --from-store`):
+/// mini-batches are constructed straight from a `.pallas` store through its
+/// bounded block cache and trained with the pure-Rust reference GCN — the
+/// graph and feature matrix never fully reside in RAM.
+#[derive(Clone, Debug)]
+pub struct OocTrainConfig {
+    /// Path of the `.pallas` container.
+    pub store: PathBuf,
+    /// When set and `store` does not exist, pack this registry dataset into
+    /// `store` first (the pack-once flow of `papers100m_ooc`).
+    pub dataset: Option<String>,
+    /// Cache budget in bytes for resident graph/feature blocks.
+    pub cache_bytes: usize,
+    /// Mini-batch size `B`.
+    pub batch: usize,
+    /// Hidden width of the reference GCN.
+    pub d_h: usize,
+    /// Number of GCN layers.
+    pub layers: usize,
+    /// Training steps to run.
+    pub steps: u64,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Sampling / parameter-init seed.
+    pub seed: u64,
+    /// Overlap disk-backed sampling with training (§V-A), as in the PJRT
+    /// path: batch `t+1` is read while step `t` computes.
+    pub prefetch: bool,
+    /// Per-step stderr logging.
+    pub verbose: bool,
+}
+
+impl OocTrainConfig {
+    /// Defaults mirroring `TrainConfig::quick` at reference-model scale.
+    pub fn quick(store: PathBuf) -> OocTrainConfig {
+        OocTrainConfig {
+            store,
+            dataset: None,
+            cache_bytes: 64 << 20,
+            batch: 1024,
+            d_h: 128,
+            layers: 3,
+            steps: 50,
+            lr: 1e-2,
+            seed: 42,
+            prefetch: true,
+            verbose: false,
+        }
+    }
+}
+
+/// Result of an out-of-core training run, including the cache telemetry the
+/// residency guarantee is asserted on (`tests/ooc_store.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct OocTrainReport {
+    /// Steps executed.
+    pub steps: u64,
+    /// (step, loss) at every step.
+    pub loss_curve: Vec<(u64, f32)>,
+    /// Loss of the final step.
+    pub final_loss: f32,
+    /// Sampled train-split accuracy of the final step.
+    pub final_train_acc: f32,
+    /// Training wall-clock.
+    pub train_time_s: f64,
+    /// Mean per-step wait on the (disk-backed) sampler; ≈0 with prefetch.
+    pub sample_wait_s: f64,
+    /// Store bytes resident in the block cache when the run finished.
+    pub cache_resident_bytes: usize,
+    /// Residency upper bound (`cache_bytes` rounded to whole blocks).
+    pub cache_budget_bytes: usize,
+    /// Block-cache hits over the whole run.
+    pub cache_hits: u64,
+    /// Block-cache misses over the whole run.
+    pub cache_misses: u64,
+    /// Total size of the `.pallas` container on disk.
+    pub store_bytes: u64,
+}
+
+/// One out-of-core mini-batch: induced adjacency + gathered vertex data.
+struct OocBatch {
+    mb: crate::sampling::MiniBatch,
+    x: Mat,
+    y: Vec<u32>,
+    w: Vec<f32>,
+}
+
+fn build_ooc_batch(store: &OocGraph, sampler: &UniformVertexSampler, step: u64) -> OocBatch {
+    use crate::graph::store::VertexData;
+    let s = sampler.sample(step);
+    let mb = induce_rescaled_from(store, &s, sampler.inclusion_prob());
+    let d_in = store.d_in;
+    let mut x = Mat::zeros(s.len(), d_in);
+    let mut y = Vec::with_capacity(s.len());
+    let mut w = Vec::with_capacity(s.len());
+    for (i, &v) in s.iter().enumerate() {
+        store.read_features(v as usize, &mut x.data[i * d_in..(i + 1) * d_in]);
+        y.push(store.label_of(v as usize));
+        w.push(if store.split_of(v as usize) == 0 { 1.0 } else { 0.0 });
+    }
+    OocBatch { mb, x, y, w }
+}
+
+/// Train the pure-Rust reference GCN from a `.pallas` store: Algorithm 1
+/// sampling, induced mini-batches read through the bounded block cache,
+/// `model::train_step_ws` for the update.  Packs `cfg.dataset` into the
+/// store file first when it is missing.  The full graph/feature matrix is
+/// never materialized in RAM — peak store residency is reported in
+/// `OocTrainReport::cache_resident_bytes` and bounded by the budget.
+pub fn train_from_store(cfg: &OocTrainConfig) -> Result<OocTrainReport> {
+    let store = Arc::new(match &cfg.dataset {
+        Some(name) => crate::graph::store::open_or_pack(name, &cfg.store, cfg.cache_bytes)?,
+        None => OocGraph::open(&cfg.store, cfg.cache_bytes)?,
+    });
+    if cfg.batch > store.n {
+        bail!("batch {} exceeds store vertex count {}", cfg.batch, store.n);
+    }
+    let dims = GcnDims {
+        d_in: store.d_in,
+        d_h: cfg.d_h,
+        d_out: store.classes,
+        layers: cfg.layers,
+        dropout: 0.0,
+        weight_decay: 0.0,
+    };
+    let group_seed = splitmix64(cfg.seed ^ 0xD0);
+    let sampler = UniformVertexSampler::new(store.n, cfg.batch, group_seed);
+
+    // §V-A overlap: batch t+1 is read from disk while step t computes
+    let rx = if cfg.prefetch {
+        let (tx, rx) = sync_channel::<OocBatch>(2);
+        let st = store.clone();
+        let sm = sampler.clone();
+        let steps = cfg.steps;
+        std::thread::spawn(move || {
+            for step in 0..steps {
+                if tx.send(build_ooc_batch(&st, &sm, step)).is_err() {
+                    break; // trainer finished / dropped
+                }
+            }
+        });
+        Some(rx)
+    } else {
+        None
+    };
+
+    let mut params = crate::model::init_params(&dims, cfg.seed);
+    let mut opt = crate::model::AdamState::new(&dims);
+    let mut ws = crate::model::StepWorkspace::new();
+    let masks = vec![Mat::filled(cfg.batch, dims.d_h, 1.0); dims.layers];
+    let mut report = OocTrainReport { store_bytes: store.store_bytes(), ..Default::default() };
+    let mut wait = 0.0f64;
+    let mut last = (f32::NAN, 0.0f32);
+    let t_train = Instant::now();
+    for step in 0..cfg.steps {
+        let t0 = Instant::now();
+        let b = match &rx {
+            Some(rx) => rx.recv().map_err(|_| anyhow!("ooc prefetcher died"))?,
+            None => build_ooc_batch(&store, &sampler, step),
+        };
+        wait += t0.elapsed().as_secs_f64();
+        let (loss, acc) = crate::model::train_step_ws(
+            &dims, &mut params, &mut opt, &b.mb.adj, &b.mb.adj_t, &b.x, &b.y, &b.w, &masks,
+            cfg.lr, &mut ws,
+        );
+        last = (loss, acc);
+        report.loss_curve.push((step, loss));
+        if cfg.verbose {
+            eprintln!("[ooc] step {step} loss {loss:.4} train-acc {acc:.4}");
+        }
+        report.steps = step + 1;
+    }
+    drop(rx);
+    report.train_time_s = t_train.elapsed().as_secs_f64();
+    report.sample_wait_s = wait / report.steps.max(1) as f64;
+    report.final_loss = last.0;
+    report.final_train_acc = last.1;
+    let cs = store.cache_stats();
+    report.cache_resident_bytes = cs.resident_bytes;
+    report.cache_budget_bytes = cs.budget_bytes;
+    report.cache_hits = cs.hits;
+    report.cache_misses = cs.misses;
+    Ok(report)
 }
 
 #[cfg(test)]

@@ -5,15 +5,20 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: one optional subcommand, `--key value` options and
+/// bare `--flag`s.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First positional argument, if any.
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options.
     pub opts: BTreeMap<String, String>,
+    /// Bare `--flag`s in order of appearance.
     pub flags: Vec<String>,
 }
 
 impl Args {
-    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// Parse from an iterator of raw arguments (excluding `argv[0]`).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -38,22 +43,33 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping `argv[0]`).
     pub fn from_env() -> Result<Args, String> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name`, if given.
     pub fn str_opt(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.str_opt(name).unwrap_or(default).to_string()
     }
 
+    /// Value of `--name` as a filesystem path, if given.
+    pub fn path_opt(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.str_opt(name).map(std::path::PathBuf::from)
+    }
+
+    /// Parsed value of `--name` (`Ok(None)` when absent, `Err` on a value
+    /// that does not parse as `T`).
     pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
         match self.opts.get(name) {
             None => Ok(None),
@@ -64,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Parsed value of `--name`, or `default` when absent.
     pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
         Ok(self.get(name)?.unwrap_or(default))
     }
@@ -105,6 +122,13 @@ mod tests {
         let a = parse("run --count 5 --dry");
         assert_eq!(a.get_or::<i32>("count", 0).unwrap(), 5);
         assert!(a.flag("dry"));
+    }
+
+    #[test]
+    fn path_opt_builds_pathbuf() {
+        let a = parse("train --from-store /tmp/g.pallas");
+        assert_eq!(a.path_opt("from-store"), Some(std::path::PathBuf::from("/tmp/g.pallas")));
+        assert_eq!(a.path_opt("missing"), None);
     }
 
     #[test]

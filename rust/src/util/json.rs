@@ -9,15 +9,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always carried as f64).
     Num(f64),
+    /// String value.
     Str(String),
+    /// Array value.
     Arr(Vec<Json>),
+    /// Object value (keys sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -29,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member by key (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -36,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Array element by index (`None` for non-arrays / out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -43,6 +52,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -50,10 +60,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// Elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -68,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Members, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -81,6 +95,7 @@ impl Json {
             .map(|v| v.iter().filter_map(|x| x.as_f64()).map(|f| f as f32).collect())
     }
 
+    /// Flatten a numeric array into `Vec<usize>`.
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(|x| x.as_f64()).map(|f| f as usize).collect())
@@ -173,6 +188,7 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Numeric array from a slice.
 pub fn arr_f64(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
 }

@@ -19,6 +19,7 @@ pub fn f32_to_bf16_bits(x: f32) -> u16 {
     ((bits.wrapping_add(rounding_bias)) >> 16) as u16
 }
 
+/// Widen bf16 bits back to the f32 they represent exactly.
 #[inline]
 pub fn bf16_bits_to_f32(b: u16) -> f32 {
     f32::from_bits((b as u32) << 16)

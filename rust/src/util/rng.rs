@@ -38,6 +38,7 @@ impl Rng {
         Rng::new(splitmix64(seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F)))
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -55,6 +56,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 random bits (the high half of `next_u64`).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -31,6 +31,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Median by nearest-rank.
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -39,15 +40,22 @@ pub fn median(xs: &[f64]) -> f64 {
 /// reporting mean/median/p95 in seconds.  Used by `rust/benches/*`
 /// (`harness = false`; the offline crate set has no criterion).
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Recorded iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Population standard deviation in seconds.
     pub stddev_s: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10.3} ms/iter (median {:.3}, p95 {:.3}, sd {:.3}, n={})",

@@ -1,0 +1,242 @@
+//! Integration tests of the out-of-core binary graph store (`graph::store`):
+//! pack→open bitwise round-trip, clean error paths on damaged containers,
+//! same-seed bitwise equivalence of in-memory vs out-of-core mini-batches,
+//! shard extraction through `GraphAccess`, and the end-to-end residency
+//! guarantee: training from a store keeps resident graph+feature bytes
+//! within the configured cache budget.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use scalegnn::graph::store::{pack, GraphAccess, OocGraph, VertexData, BLOCK_BYTES};
+use scalegnn::graph::{block_bounds, datasets, extract_shard_from, partition_2d};
+use scalegnn::sampling::{induce_rescaled, induce_rescaled_from, UniformVertexSampler};
+use scalegnn::trainer::batch::BatchMaker;
+use scalegnn::trainer::{train_from_store, OocTrainConfig};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pallas_it_{name}_{}.pallas", std::process::id()))
+}
+
+/// Removes the backing file when the test ends (pass or fail).
+struct TmpFile(PathBuf);
+
+impl Drop for TmpFile {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.0).ok();
+    }
+}
+
+#[test]
+fn pack_open_roundtrip_is_bitwise() {
+    let d = datasets::load("tiny").unwrap();
+    let p = tmp("roundtrip");
+    let _guard = TmpFile(p.clone());
+    pack(&d, &p).unwrap();
+    let g = OocGraph::open(&p, 4 << 20).unwrap();
+    assert_eq!(g.n, d.n);
+    assert_eq!(g.nnz, d.adj.nnz());
+    assert_eq!(g.d_in, d.features.cols);
+    assert_eq!(g.classes, d.classes);
+
+    // adjacency: bitwise identical CSR
+    assert_eq!(GraphAccess::rows(&g), d.n);
+    assert_eq!(GraphAccess::row_nnz(&g, 0), d.adj.row_nnz(0));
+    let csr = g.read_csr();
+    assert_eq!(csr.indptr, d.adj.indptr);
+    assert_eq!(csr.indices, d.adj.indices);
+    assert_eq!(csr.values.len(), d.adj.values.len());
+    for (a, b) in csr.values.iter().zip(&d.adj.values) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // features / labels / split, per vertex, through the cache
+    let mut feat = vec![0.0f32; g.d_in];
+    for v in 0..g.n {
+        g.read_features(v, &mut feat);
+        for (a, b) in feat.iter().zip(&d.features.data[v * g.d_in..(v + 1) * g.d_in]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "feature of vertex {v}");
+        }
+        assert_eq!(g.label_of(v), d.labels[v]);
+        assert_eq!(g.split_of(v), d.split[v]);
+    }
+}
+
+#[test]
+fn truncated_and_corrupt_files_error_cleanly() {
+    let d = datasets::load("tiny").unwrap();
+    let p = tmp("corrupt");
+    let _guard = TmpFile(p.clone());
+    pack(&d, &p).unwrap();
+    let full = std::fs::read(&p).unwrap();
+
+    // truncated mid-file: open must fail with a clean error, not panic
+    std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+    let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+    assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+
+    // shorter than the header
+    std::fs::write(&p, &full[..10]).unwrap();
+    assert!(OocGraph::open(&p, 1 << 20).is_err());
+
+    // bad magic
+    let mut bad = full.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&p, &bad).unwrap();
+    let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+    assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+    // unsupported format version
+    let mut bad = full.clone();
+    bad[8] = 99;
+    std::fs::write(&p, &bad).unwrap();
+    let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+    assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+    // structurally corrupt indptr (correct length, non-monotone table):
+    // open must reject it up front, not panic on a later row read
+    let mut bad = full.clone();
+    bad[64 + 15] = 0xFF; // high byte of indptr[1] -> indptr[2] < indptr[1]
+    std::fs::write(&p, &bad).unwrap();
+    let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+    assert!(format!("{e:#}").contains("indptr"), "{e:#}");
+
+    // missing file
+    assert!(OocGraph::open(&tmp("never_written"), 1 << 20).is_err());
+}
+
+#[test]
+fn pack_is_atomic_and_leaves_no_tmp() {
+    let d = datasets::load("tiny").unwrap();
+    let p = tmp("atomic");
+    let _guard = TmpFile(p.clone());
+    pack(&d, &p).unwrap();
+    let mut tmp_name = p.as_os_str().to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    assert!(!std::path::Path::new(&tmp_name).exists(), "tmp sibling left behind");
+    assert!(OocGraph::open(&p, 1 << 20).is_ok());
+}
+
+#[test]
+fn same_seed_minibatches_are_bitwise_identical() {
+    let d = Arc::new(datasets::load("tiny").unwrap());
+    let p = tmp("equiv");
+    let _guard = TmpFile(p.clone());
+    pack(&d, &p).unwrap();
+    let g = Arc::new(OocGraph::open(&p, 1 << 20).unwrap());
+
+    // induced subgraphs: Csr oracle vs GraphAccess-on-store
+    let sampler = UniformVertexSampler::new(d.n, 64, 7);
+    for step in [0u64, 1, 9, 33] {
+        let s = sampler.sample(step);
+        let a = induce_rescaled(&d.adj, &s, sampler.inclusion_prob());
+        let b = induce_rescaled_from(g.as_ref(), &s, sampler.inclusion_prob());
+        assert_eq!(a.vertices, b.vertices, "step {step}");
+        assert_eq!(a.adj.indptr, b.adj.indptr);
+        assert_eq!(a.adj.indices, b.adj.indices);
+        for (x, y) in a.adj.values.iter().zip(&b.adj.values) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    // full BatchMaker payloads (edges + features + labels + loss mask)
+    let mut mm = BatchMaker::new(
+        d.clone(),
+        scalegnn::sampling::SamplerKind::ScaleGnnUniform,
+        32,
+        512,
+        2,
+        9,
+    );
+    let mut om = BatchMaker::from_store(g.clone(), 32, 512, 9);
+    for step in 0..4u64 {
+        let x = mm.make(step);
+        let y = om.make(step);
+        assert_eq!(x.src, y.src, "step {step}");
+        assert_eq!(x.dst, y.dst);
+        for (a, b) in x.val.iter().zip(&y.val) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in x.x.iter().zip(&y.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(x.y, y.y);
+        assert_eq!(x.wmask, y.wmask);
+        assert_eq!(x.truncated, y.truncated);
+    }
+}
+
+#[test]
+fn store_shards_match_in_memory_partition() {
+    let d = datasets::load("tiny").unwrap();
+    let p = tmp("shards");
+    let _guard = TmpFile(p.clone());
+    pack(&d, &p).unwrap();
+    let g = OocGraph::open(&p, 1 << 20).unwrap();
+    let want = partition_2d(&d.adj, 2, 3);
+    let rb = block_bounds(d.n, 2);
+    let cb = block_bounds(d.n, 3);
+    let mut k = 0;
+    for i in 0..2 {
+        for j in 0..3 {
+            let got = extract_shard_from(&g, rb[i], rb[i + 1], cb[j], cb[j + 1]);
+            let w = &want[k];
+            k += 1;
+            assert_eq!((got.r0, got.r1, got.c0, got.c1), (w.r0, w.r1, w.c0, w.c1));
+            assert_eq!(got.csr.cols, w.csr.cols);
+            assert_eq!(got.csr.indptr, w.csr.indptr);
+            assert_eq!(got.csr.indices, w.csr.indices);
+            for (a, b) in got.csr.values.iter().zip(&w.csr.values) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn ooc_training_learns_within_cache_budget() {
+    let p = tmp("train");
+    let _guard = TmpFile(p.clone());
+    let mut cfg = OocTrainConfig::quick(p.clone());
+    cfg.dataset = Some("tiny".to_string()); // pack-once flow
+    cfg.cache_bytes = BLOCK_BYTES; // a single resident block
+    cfg.batch = 64;
+    cfg.d_h = 16;
+    cfg.layers = 2;
+    cfg.steps = 60;
+    cfg.lr = 5e-3;
+    let r = train_from_store(&cfg).unwrap();
+    assert_eq!(r.steps, 60);
+
+    // residency guarantee: resident graph+feature bytes never exceed the
+    // configured budget, and the store was never fully resident
+    assert!(
+        r.cache_resident_bytes <= r.cache_budget_bytes,
+        "resident {} > budget {}",
+        r.cache_resident_bytes,
+        r.cache_budget_bytes
+    );
+    assert_eq!(r.cache_budget_bytes, BLOCK_BYTES);
+    assert!(
+        (r.cache_resident_bytes as u64) < r.store_bytes,
+        "tiny store ({} B) should exceed one block",
+        r.store_bytes
+    );
+    assert!(r.cache_misses > 0, "training must have touched the disk");
+
+    // and it actually trains: loss falls over the run
+    let head: f32 = r.loss_curve[..5].iter().map(|x| x.1).sum::<f32>() / 5.0;
+    let tail: f32 =
+        r.loss_curve[r.loss_curve.len() - 5..].iter().map(|x| x.1).sum::<f32>() / 5.0;
+    assert!(r.final_loss.is_finite());
+    assert!(tail < head, "loss did not fall: {head} -> {tail}");
+
+    // prefetch off replays the identical deterministic trajectory
+    let mut cfg2 = cfg.clone();
+    cfg2.prefetch = false;
+    cfg2.steps = 5;
+    let r2 = train_from_store(&cfg2).unwrap();
+    for (a, b) in r.loss_curve[..5].iter().zip(&r2.loss_curve) {
+        assert_eq!(a.1, b.1, "prefetch changed the trajectory at step {}", a.0);
+    }
+}
