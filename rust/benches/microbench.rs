@@ -19,7 +19,7 @@ use scalegnn::sampling::{densify_into, DistributedSubgraphBuilder, UniformVertex
 use scalegnn::tensor::{matmul_into_threads, pool, Mat};
 use scalegnn::trainer::batch::BatchMaker;
 use scalegnn::util::rng::Rng;
-use scalegnn::util::stats::bench;
+use scalegnn::util::stats::{bench, fmt_time, median};
 
 /// One machine-readable kernel measurement.
 struct KernelRecord {
@@ -217,6 +217,137 @@ fn kernel_section(records: &mut Vec<KernelRecord>) {
         },
     );
     println!();
+}
+
+/// §V-D end-to-end ablation: run the 8-rank PMM engine with overlap on and
+/// off on the products_sim config and emit `BENCH_e2e.json` — the per-step
+/// epoch-time breakdown with the measured hidden-comm fraction per axis,
+/// so the perf trajectory has executed end-to-end numbers per PR.
+fn e2e_overlap_section() {
+    use scalegnn::model::GcnDims;
+    use scalegnn::pmm::{PmmCtx, PmmGcn, PmmTimers};
+    use scalegnn::util::json::{obj, Json};
+
+    let grid = Grid4D::new(2, 2, 2, 1); // 8 rank threads; Gd=2 exercises DP buckets
+    let data = Arc::new(datasets::load("products_sim").unwrap());
+    let spec = datasets::spec("products_sim").unwrap();
+    let dims = GcnDims {
+        d_in: spec.planted.d_in,
+        d_h: 128,
+        d_out: spec.planted.classes,
+        layers: 3,
+        dropout: 0.0,
+        weight_decay: 0.0,
+    };
+    let batch = spec.batch;
+    let steps: u64 = 16;
+    let warmup = 4usize;
+
+    let run = |overlap: bool| -> (f64, PmmTimers, [f64; 4], f64) {
+        let world = Arc::new(CommWorld::new(grid));
+        let mut hs = vec![];
+        for r in 0..grid.world_size() {
+            let w = world.clone();
+            let d = data.clone();
+            hs.push(std::thread::spawn(move || {
+                let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+                let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+                eng.set_overlap(overlap);
+                let mut per_step = Vec::with_capacity(steps as usize);
+                for s in 0..steps {
+                    let t0 = std::time::Instant::now();
+                    eng.train_step(s, 5e-3);
+                    per_step.push(t0.elapsed().as_secs_f64());
+                }
+                (per_step, eng.timers)
+            }));
+        }
+        let mut all_steps: Vec<Vec<f64>> = vec![];
+        let mut timers = PmmTimers::default();
+        for h in hs {
+            let (ps, t) = h.join().unwrap();
+            all_steps.push(ps);
+            timers.add(&t);
+        }
+        // per-step critical path = slowest rank; median over post-warmup steps
+        let per_step_max: Vec<f64> = (warmup..steps as usize)
+            .map(|s| all_steps.iter().map(|v| v[s]).fold(0.0f64, f64::max))
+            .collect();
+        let hidden = [
+            world.hidden_fraction(Axis::X),
+            world.hidden_fraction(Axis::Y),
+            world.hidden_fraction(Axis::Z),
+            world.hidden_fraction(Axis::Dp),
+        ];
+        (median(&per_step_max), timers, hidden, world.tp_hidden_fraction())
+    };
+
+    println!("--- §V-D end-to-end overlap ablation (8 rank threads, products_sim) ---");
+    let (on_s, on_t, on_hidden, on_tp) = run(true);
+    let (off_s, off_t, off_hidden, off_tp) = run(false);
+    println!(
+        "overlap on : median step {}  (tp hidden frac {:.3})",
+        fmt_time(on_s),
+        on_tp
+    );
+    println!(
+        "overlap off: median step {}  (tp hidden frac {:.3})  -> on/off speedup {:.2}x",
+        fmt_time(off_s),
+        off_tp,
+        off_s / on_s
+    );
+
+    let n = grid.world_size() as f64;
+    let side = |step_s: f64, t: &PmmTimers, hidden: &[f64; 4], tp: f64| -> Json {
+        obj(vec![
+            ("step_s_median", Json::from(step_s)),
+            (
+                "per_rank_mean_s",
+                obj(vec![
+                    ("sampling", Json::from(t.sampling / n)),
+                    ("spmm", Json::from(t.spmm / n)),
+                    ("gemm", Json::from(t.gemm / n)),
+                    ("elementwise", Json::from(t.elementwise / n)),
+                    ("tp_comm", Json::from(t.tp_comm / n)),
+                    ("dp_comm", Json::from(t.dp_comm / n)),
+                    ("reshard", Json::from(t.reshard / n)),
+                    ("other", Json::from(t.other / n)),
+                ]),
+            ),
+            (
+                "hidden_frac",
+                obj(vec![
+                    ("x", Json::from(hidden[0])),
+                    ("y", Json::from(hidden[1])),
+                    ("z", Json::from(hidden[2])),
+                    ("dp", Json::from(hidden[3])),
+                    ("tp_aggregate", Json::from(tp)),
+                ]),
+            ),
+        ])
+    };
+    let doc = obj(vec![
+        (
+            "config",
+            obj(vec![
+                ("dataset", Json::from("products_sim")),
+                ("grid", Json::from("2x2x2x1")),
+                ("ranks", Json::from(grid.world_size())),
+                ("batch", Json::from(batch)),
+                ("d_h", Json::from(128usize)),
+                ("layers", Json::from(3usize)),
+                ("steps", Json::from(steps as usize)),
+                ("warmup_steps", Json::from(warmup)),
+            ]),
+        ),
+        ("overlap_on", side(on_s, &on_t, &on_hidden, on_tp)),
+        ("overlap_off", side(off_s, &off_t, &off_hidden, off_tp)),
+        ("speedup_off_over_on", Json::from(off_s / on_s)),
+    ]);
+    match std::fs::write("BENCH_e2e.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_e2e.json\n"),
+        Err(e) => eprintln!("could not write BENCH_e2e.json: {e}\n"),
+    }
 }
 
 fn main() {
@@ -459,6 +590,8 @@ fn main() {
     } else {
         println!("(artifacts not built; skipping PJRT benches)");
     }
+
+    e2e_overlap_section();
 
     write_kernel_json(&records);
 }

@@ -1,19 +1,53 @@
-//! Shared-memory collectives over rank threads.
+//! Shared-memory collectives over rank threads — a nonblocking, chunked
+//! collective engine (§V-D).
 //!
 //! A "GPU" in this reproduction is an OS thread with private shard state;
-//! collectives move real data through per-group rendezvous slots, so the 3D
-//! PMM algebra and the DP gradient synchronization are *executed*, not
-//! mocked.  Wall-clock at paper scale is projected separately by
+//! collectives move real data through per-group, sequence-matched op slots,
+//! so the 3D PMM algebra and the DP gradient synchronization are *executed*,
+//! not mocked.  Wall-clock at paper scale is projected separately by
 //! `sim::` — these collectives are for correctness and for measuring the
 //! coordinator's real overheads at <= 64 ranks.
 //!
-//! BF16 mode reproduces §V-B numerically: each rank's contribution is
+//! **Nonblocking issue (§V-D).**  [`CommWorld::issue_all_reduce`] copies the
+//! caller's contribution into the op slot in fixed-size chunks and returns a
+//! [`PendingOp`] handle immediately; the ordered reduction of chunk *k*
+//! proceeds — driven by any member's [`CommWorld::progress`] call or by a
+//! waiter — while the caller computes, and [`PendingOp::wait_into`] blocks
+//! only at the true data dependency.  The blocking
+//! [`CommWorld::all_reduce`] / [`CommWorld::all_gather`] entry points are
+//! thin `issue(..).wait(..)` wrappers, so call sites opt into overlap
+//! mechanically.
+//!
+//! **Determinism.**  Reductions are order-deterministic: once every member
+//! has contributed, chunks are summed in group-index order, never in
+//! arrival order — so overlap-on and overlap-off schedules (and repeated
+//! runs) produce bitwise-identical results.
+//!
+//! **Mismatch safety.**  Collectives that disagree across members at the
+//! same sequence number (different kind, payload length or precision)
+//! poison the group and panic on *every* member with a descriptive message
+//! instead of deadlocking in the rendezvous slot.  The poison cascades
+//! through every group a dying rank belongs to, so bystanders waiting on
+//! the dead rank in *other* groups fail fast too.
+//!
+//! **BF16 mode** reproduces §V-B numerically: each rank's contribution is
 //! rounded to bf16 before the reduction (results stay f32), and the byte
 //! accounting halves the payload — exactly what casting before an NCCL
 //! all-reduce does.
+//!
+//! **Measured overlap.**  Per-axis counters record logical traffic (ops,
+//! bytes) plus per-op timings: issue→fully-reduced (`comm`) vs time spent
+//! blocked inside `wait` (`blocked`), counted only for collectives issued
+//! through the nonblocking API (blocking wrappers are true dependencies,
+//! not hideable even in principle).  Their ratio is the measured
+//! hidden-communication fraction ([`CommWorld::hidden_fraction`],
+//! [`CommWorld::tp_hidden_fraction`]) that calibrates the hideable share
+//! of the §V-D term in `sim::model` in place of a guessed constant.
 
-use std::sync::{Barrier, Mutex};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::grid::{Axis, Grid4D};
 use crate::util::bf16_round;
@@ -38,26 +72,70 @@ impl Precision {
     }
 }
 
-struct Slot {
-    buf: Vec<f32>,
-    gathered: Vec<Vec<f32>>,
-    contributed: usize,
+/// Default elements per chunk (16 KiB of f32 payload per chunk).
+pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
+
+/// Collective kind carried by an op slot (handshake-checked across members).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OpKind {
+    Reduce(Precision),
+    Gather,
+}
+
+/// One in-flight collective of a process group, matched across members by
+/// sequence number (every member issues its group's collectives in the same
+/// program order, so equal seq = same logical op).
+struct OpState {
+    seq: u64,
+    kind: OpKind,
+    /// Reduce: payload elements (identical on every member; handshaked).
+    len: usize,
+    /// Per-member contributions, group-index order (freed after reduction).
+    parts: Vec<Vec<f32>>,
+    contributed: Vec<bool>,
+    n_contributed: usize,
+    /// Reduce: ordered-sum result, valid below `chunks_done * chunk_elems`.
+    result: Vec<f32>,
+    chunks_done: usize,
+    total_chunks: usize,
+    /// Set when the payload is fully reduced (Reduce) / gathered (Gather).
+    completed_at: Option<Instant>,
     read: usize,
+}
+
+struct GroupState {
+    /// Per-member sequence number of its next issued collective.
+    next_seq: Vec<u64>,
+    /// In-flight ops, ascending `seq`.
+    ops: VecDeque<OpState>,
+    /// Set on a mismatched collective; every member panics with this.
+    poison: Option<String>,
 }
 
 struct Group {
     size: usize,
     barrier: Barrier,
-    slot: Mutex<Slot>,
+    state: Mutex<GroupState>,
+    cv: Condvar,
 }
 
-/// Per-axis traffic counters (feeds the epoch-time breakdown metrics).
+/// Per-axis traffic + overlap counters (feeds the epoch-time breakdown
+/// metrics and the measured §V-D hide fraction).
 #[derive(Default)]
 pub struct AxisCounters {
     /// Collective operations accounted on this axis.
     pub ops: AtomicU64,
     /// Logical payload bytes moved on this axis.
     pub bytes: AtomicU64,
+    /// Nanoseconds from a rank's issue until the op was fully reduced /
+    /// gathered, summed over ranks and ops — counted only for collectives
+    /// issued through the nonblocking API (`issue_*`); the blocking
+    /// wrappers are excluded so the ratio measures how much of the
+    /// *deferrable* communication was actually hidden.
+    pub comm_ns: AtomicU64,
+    /// Nanoseconds ranks spent blocked inside `wait` on nonblocking-issued
+    /// collectives; `1 - blocked/comm` is the hidden-comm fraction.
+    pub blocked_ns: AtomicU64,
 }
 
 /// All process groups of a 4D grid.
@@ -67,6 +145,8 @@ pub struct CommWorld {
     groups: Vec<Vec<Group>>, // [axis][group_id]
     /// Traffic counters indexed by axis (X, Y, Z, Dp).
     pub counters: [AxisCounters; 4],
+    /// Elements per reduction chunk.
+    chunk_elems: usize,
 }
 
 fn axis_idx(a: Axis) -> usize {
@@ -78,26 +158,89 @@ fn axis_idx(a: Axis) -> usize {
     }
 }
 
+/// Contribute `data` to the op slot at `seq`, creating the slot on first
+/// touch.  Returns a mismatch message (instead of contributing) when the
+/// slot disagrees on kind or payload length — the length handshake that
+/// turns a would-be deadlock into a clean error.
+fn contribute(
+    st: &mut GroupState,
+    size: usize,
+    chunk_elems: usize,
+    me: usize,
+    seq: u64,
+    kind: OpKind,
+    data: &[f32],
+) -> Option<String> {
+    if st.ops.iter().all(|o| o.seq != seq) {
+        st.ops.push_back(OpState {
+            seq,
+            kind,
+            len: data.len(),
+            parts: vec![Vec::new(); size],
+            contributed: vec![false; size],
+            n_contributed: 0,
+            result: match kind {
+                OpKind::Reduce(_) => vec![0.0; data.len()],
+                OpKind::Gather => Vec::new(),
+            },
+            chunks_done: 0,
+            total_chunks: match kind {
+                OpKind::Reduce(_) => data.len().div_ceil(chunk_elems).max(1),
+                OpKind::Gather => 0,
+            },
+            completed_at: None,
+            read: 0,
+        });
+    }
+    let op = st.ops.iter_mut().find(|o| o.seq == seq).expect("just ensured");
+    if op.kind != kind {
+        return Some(format!(
+            "collective kind mismatch at seq {seq}: slot holds {:?}, member {me} issued {:?}",
+            op.kind, kind
+        ));
+    }
+    if matches!(kind, OpKind::Reduce(_)) && op.len != data.len() {
+        return Some(format!(
+            "all_reduce length mismatch at seq {seq}: slot has {} elems, member {me} sent {}",
+            op.len,
+            data.len()
+        ));
+    }
+    assert!(!op.contributed[me], "member {me} double-contributed seq {seq}");
+    op.parts[me] = match kind {
+        OpKind::Reduce(Precision::Bf16) => data.iter().map(|&v| bf16_round(v)).collect(),
+        _ => data.to_vec(),
+    };
+    op.contributed[me] = true;
+    op.n_contributed += 1;
+    if op.n_contributed == size && matches!(kind, OpKind::Gather) {
+        op.completed_at = Some(Instant::now());
+    }
+    None
+}
+
 impl CommWorld {
-    /// Allocate the rendezvous slots of every process group of `grid`.
-    ///
-    /// Slot protocol (per group): contributors accumulate into the shared
-    /// buffer under the mutex, a barrier separates the write phase from the
-    /// read phase, and the last reader resets the slot for the next
-    /// collective — so back-to-back collectives on the same group never
-    /// alias.
+    /// Allocate the op slots of every process group of `grid` with the
+    /// default reduction chunk size.
     pub fn new(grid: Grid4D) -> CommWorld {
+        CommWorld::with_chunk_elems(grid, DEFAULT_CHUNK_ELEMS)
+    }
+
+    /// As [`CommWorld::new`] with an explicit reduction chunk size in
+    /// elements (tests use tiny chunks to exercise the chunk pipeline).
+    pub fn with_chunk_elems(grid: Grid4D, chunk_elems: usize) -> CommWorld {
+        assert!(chunk_elems > 0, "chunk_elems must be positive");
         let mk = |axis: Axis| -> Vec<Group> {
             (0..grid.num_groups(axis))
                 .map(|_| Group {
                     size: grid.axis_size(axis),
                     barrier: Barrier::new(grid.axis_size(axis)),
-                    slot: Mutex::new(Slot {
-                        buf: Vec::new(),
-                        gathered: vec![Vec::new(); grid.axis_size(axis)],
-                        contributed: 0,
-                        read: 0,
+                    state: Mutex::new(GroupState {
+                        next_seq: vec![0; grid.axis_size(axis)],
+                        ops: VecDeque::new(),
+                        poison: None,
                     }),
+                    cv: Condvar::new(),
                 })
                 .collect()
         };
@@ -105,6 +248,7 @@ impl CommWorld {
             grid,
             groups: vec![mk(Axis::X), mk(Axis::Y), mk(Axis::Z), mk(Axis::Dp)],
             counters: Default::default(),
+            chunk_elems,
         }
     }
 
@@ -123,77 +267,231 @@ impl CommWorld {
         c.bytes.fetch_add(elems * prec.bytes_per_elem(), Ordering::Relaxed);
     }
 
-    /// Sum-all-reduce `data` across the rank's `axis` group, in place.
-    pub fn all_reduce(&self, rank: usize, axis: Axis, data: &mut [f32], prec: Precision) {
-        let g = self.group(rank, axis);
-        if g.size == 1 {
-            return;
-        }
-        self.account(axis, data.len() as u64, prec, g.size);
-        {
-            let mut s = g.slot.lock().unwrap();
-            if s.contributed == 0 {
-                s.buf.clear();
-                s.buf.resize(data.len(), 0.0);
+    /// Advance ordered chunk reductions of every fully-contributed op of
+    /// the group; `budget` caps the chunks reduced per call so `progress`
+    /// stays cheap.  Returns whether any chunk was advanced.
+    fn reduce_ready_locked(&self, st: &mut GroupState, size: usize, mut budget: usize) -> bool {
+        let chunk = self.chunk_elems;
+        let mut did = false;
+        for op in st.ops.iter_mut() {
+            if budget == 0 {
+                break;
             }
-            debug_assert_eq!(s.buf.len(), data.len(), "mismatched all_reduce sizes");
-            match prec {
-                Precision::Fp32 => {
-                    for (b, &d) in s.buf.iter_mut().zip(data.iter()) {
-                        *b += d;
+            if !matches!(op.kind, OpKind::Reduce(_)) || op.n_contributed < size {
+                continue;
+            }
+            while op.chunks_done < op.total_chunks && budget > 0 {
+                let lo = (op.chunks_done * chunk).min(op.len);
+                let hi = ((op.chunks_done + 1) * chunk).min(op.len);
+                // ordered sum over members: deterministic regardless of
+                // arrival order or of which rank drives the reduction
+                let dst = &mut op.result[lo..hi];
+                dst.copy_from_slice(&op.parts[0][lo..hi]);
+                for p in op.parts.iter().skip(1) {
+                    for (d, &v) in dst.iter_mut().zip(&p[lo..hi]) {
+                        *d += v;
                     }
                 }
-                Precision::Bf16 => {
-                    for (b, &d) in s.buf.iter_mut().zip(data.iter()) {
-                        *b += bf16_round(d);
-                    }
+                op.chunks_done += 1;
+                budget -= 1;
+                did = true;
+            }
+            if op.chunks_done == op.total_chunks && op.completed_at.is_none() {
+                op.completed_at = Some(Instant::now());
+                // contributions are no longer needed; free them eagerly
+                for p in op.parts.iter_mut() {
+                    *p = Vec::new();
                 }
             }
-            s.contributed += 1;
         }
-        g.barrier.wait();
-        {
-            let mut s = g.slot.lock().unwrap();
-            data.copy_from_slice(&s.buf);
-            s.read += 1;
-            if s.read == g.size {
-                s.contributed = 0;
-                s.read = 0;
-            }
-        }
-        g.barrier.wait();
+        did
     }
 
-    /// Gather each member's payload; returns the payloads ordered by the
-    /// member's index within the group.  Payload lengths may differ.
-    pub fn all_gather(&self, rank: usize, axis: Axis, payload: &[f32]) -> Vec<Vec<f32>> {
+    /// Poison every group `rank` belongs to with `msg`, wake their
+    /// waiters, then panic.  A member that dies inside one collective must
+    /// not leave peers in its *other* groups waiting on a contribution
+    /// that will never come, so the poison cascades rank-by-rank through
+    /// shared groups (each awoken member panics and cascades in turn).
+    fn poison_and_panic(&self, rank: usize, msg: String) -> ! {
+        for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+            let g = self.group(rank, axis);
+            if g.size <= 1 {
+                continue;
+            }
+            let mut st = g.state.lock().unwrap();
+            if st.poison.is_none() {
+                st.poison = Some(msg.clone());
+            }
+            drop(st);
+            g.cv.notify_all();
+        }
+        panic!("comm: {msg}");
+    }
+
+    /// Issue a sum-all-reduce of `data` across the rank's `axis` group in
+    /// fixed-size chunks; returns a [`PendingOp`] handle.  The caller's
+    /// contribution is staged immediately (the borrow ends at return);
+    /// chunk reductions proceed while the caller computes, and
+    /// [`PendingOp::wait_into`] blocks only on the true dependency.
+    pub fn issue_all_reduce(
+        &self,
+        rank: usize,
+        axis: Axis,
+        data: &[f32],
+        prec: Precision,
+    ) -> PendingOp<'_> {
+        self.issue_reduce_inner(rank, axis, data, prec, true)
+    }
+
+    fn issue_reduce_inner(
+        &self,
+        rank: usize,
+        axis: Axis,
+        data: &[f32],
+        prec: Precision,
+        deferred: bool,
+    ) -> PendingOp<'_> {
+        let issued_at = Instant::now();
         let g = self.group(rank, axis);
         if g.size == 1 {
-            return vec![payload.to_vec()];
+            // a size-1 "reduction" is the identity; keep the payload so
+            // wait_into honors its write-into-`out` contract
+            return PendingOp {
+                world: self,
+                axis,
+                rank,
+                seq: 0,
+                len: data.len(),
+                trivial: Some(data.to_vec()),
+                deferred,
+                issued_at,
+            };
+        }
+        self.account(axis, data.len() as u64, prec, g.size);
+        let me = self.grid.index_in_group(rank, axis);
+        let mut st = g.state.lock().unwrap();
+        if let Some(m) = st.poison.clone() {
+            drop(st);
+            self.poison_and_panic(rank, m);
+        }
+        let seq = st.next_seq[me];
+        st.next_seq[me] += 1;
+        if let Some(msg) =
+            contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Reduce(prec), data)
+        {
+            drop(st);
+            self.poison_and_panic(rank, msg);
+        }
+        g.cv.notify_all();
+        drop(st);
+        PendingOp {
+            world: self,
+            axis,
+            rank,
+            seq,
+            len: data.len(),
+            trivial: None,
+            deferred,
+            issued_at,
+        }
+    }
+
+    /// Issue a gather of `payload` across the rank's `axis` group; returns
+    /// a [`PendingGather`] resolved by [`PendingGather::wait`].  Payload
+    /// lengths may differ across members.
+    pub fn issue_all_gather(
+        &self,
+        rank: usize,
+        axis: Axis,
+        payload: &[f32],
+    ) -> PendingGather<'_> {
+        self.issue_gather_inner(rank, axis, payload, true)
+    }
+
+    fn issue_gather_inner(
+        &self,
+        rank: usize,
+        axis: Axis,
+        payload: &[f32],
+        deferred: bool,
+    ) -> PendingGather<'_> {
+        let issued_at = Instant::now();
+        let g = self.group(rank, axis);
+        if g.size == 1 {
+            return PendingGather {
+                world: self,
+                axis,
+                rank,
+                seq: 0,
+                trivial: Some(payload.to_vec()),
+                deferred,
+                issued_at,
+            };
         }
         self.account(axis, payload.len() as u64, Precision::Fp32, g.size);
         let me = self.grid.index_in_group(rank, axis);
-        {
-            let mut s = g.slot.lock().unwrap();
-            s.gathered[me] = payload.to_vec();
-            s.contributed += 1;
+        let mut st = g.state.lock().unwrap();
+        if let Some(m) = st.poison.clone() {
+            drop(st);
+            self.poison_and_panic(rank, m);
         }
-        g.barrier.wait();
-        let out;
+        let seq = st.next_seq[me];
+        st.next_seq[me] += 1;
+        if let Some(msg) =
+            contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Gather, payload)
         {
-            let mut s = g.slot.lock().unwrap();
-            out = s.gathered.clone();
-            s.read += 1;
-            if s.read == g.size {
-                s.contributed = 0;
-                s.read = 0;
-                for v in s.gathered.iter_mut() {
-                    v.clear();
+            drop(st);
+            self.poison_and_panic(rank, msg);
+        }
+        g.cv.notify_all();
+        drop(st);
+        PendingGather { world: self, axis, rank, seq, trivial: None, deferred, issued_at }
+    }
+
+    /// Drive pending chunk reductions of this rank's groups without
+    /// blocking — the per-rank progress engine of the nonblocking API.
+    /// Cheap (bounded work, `try_lock` only); returns whether any chunk
+    /// was advanced.
+    pub fn progress(&self, rank: usize) -> bool {
+        let mut did = false;
+        for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+            let g = self.group(rank, axis);
+            if g.size <= 1 {
+                continue;
+            }
+            if let Ok(mut st) = g.state.try_lock() {
+                if st.poison.is_some() {
+                    continue; // surfaced by the owning wait
+                }
+                if self.reduce_ready_locked(&mut st, g.size, 8) {
+                    did = true;
+                    g.cv.notify_all();
                 }
             }
         }
-        g.barrier.wait();
-        out
+        did
+    }
+
+    /// Sum-all-reduce `data` across the rank's `axis` group, in place
+    /// (blocking wrapper over issue + wait; excluded from the hidden-comm
+    /// timing so the measured fraction covers only deferrable ops).
+    pub fn all_reduce(&self, rank: usize, axis: Axis, data: &mut [f32], prec: Precision) {
+        if self.group(rank, axis).size == 1 {
+            return; // identity in place, no payload copy
+        }
+        let op = self.issue_reduce_inner(rank, axis, data, prec, false);
+        op.wait_into(data);
+    }
+
+    /// Gather each member's payload; returns the payloads ordered by the
+    /// member's index within the group.  Payload lengths may differ
+    /// (blocking wrapper over issue + wait; excluded from the hidden-comm
+    /// timing).
+    pub fn all_gather(&self, rank: usize, axis: Axis, payload: &[f32]) -> Vec<Vec<f32>> {
+        if self.group(rank, axis).size == 1 {
+            return vec![payload.to_vec()];
+        }
+        self.issue_gather_inner(rank, axis, payload, false).wait()
     }
 
     /// Barrier across the rank's `axis` group.
@@ -210,12 +508,245 @@ impl CommWorld {
         (c.ops.load(Ordering::Relaxed), c.bytes.load(Ordering::Relaxed))
     }
 
-    /// Zero all per-axis traffic counters.
+    /// Snapshot (comm seconds, blocked seconds) measured on an axis: total
+    /// issue→completion time vs time ranks actually stalled in `wait`.
+    pub fn timing(&self, axis: Axis) -> (f64, f64) {
+        let c = &self.counters[axis_idx(axis)];
+        (
+            c.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            c.blocked_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+
+    /// Measured fraction of this axis's *deferrable* collective time
+    /// hidden behind compute: `1 - blocked/comm` over collectives issued
+    /// through the nonblocking API, clamped to `[0, 1]` (0 when none
+    /// ran).  Blocking-wrapper collectives (true data dependencies) are
+    /// excluded — they are not hideable even in principle, and counting
+    /// them would bias the §V-D calibration low.
+    pub fn hidden_fraction(&self, axis: Axis) -> f64 {
+        let c = &self.counters[axis_idx(axis)];
+        let comm = c.comm_ns.load(Ordering::Relaxed) as f64;
+        if comm <= 0.0 {
+            return 0.0;
+        }
+        let blocked = c.blocked_ns.load(Ordering::Relaxed) as f64;
+        (1.0 - blocked / comm).clamp(0.0, 1.0)
+    }
+
+    /// Aggregate hidden fraction over the tensor-parallel axes (X, Y, Z):
+    /// the executed counterpart of the §V-D hide fraction consumed by
+    /// `sim::model` in place of a guessed constant.
+    pub fn tp_hidden_fraction(&self) -> f64 {
+        let (mut comm, mut blocked) = (0u64, 0u64);
+        for axis in [Axis::X, Axis::Y, Axis::Z] {
+            let c = &self.counters[axis_idx(axis)];
+            comm += c.comm_ns.load(Ordering::Relaxed);
+            blocked += c.blocked_ns.load(Ordering::Relaxed);
+        }
+        if comm == 0 {
+            return 0.0;
+        }
+        (1.0 - blocked as f64 / comm as f64).clamp(0.0, 1.0)
+    }
+
+    /// Zero all per-axis traffic and timing counters.
     pub fn reset_stats(&self) {
         for c in &self.counters {
             c.ops.store(0, Ordering::Relaxed);
             c.bytes.store(0, Ordering::Relaxed);
+            c.comm_ns.store(0, Ordering::Relaxed);
+            c.blocked_ns.store(0, Ordering::Relaxed);
         }
+    }
+}
+
+/// Handle of an in-flight chunked all-reduce.  Resolve with
+/// [`PendingOp::wait_into`]; poll with [`PendingOp::try_ready`].  Dropping
+/// a handle without waiting leaks its op slot (the engine always waits).
+#[must_use = "a pending collective must be awaited (PendingOp::wait_into)"]
+pub struct PendingOp<'w> {
+    world: &'w CommWorld,
+    axis: Axis,
+    rank: usize,
+    seq: u64,
+    len: usize,
+    /// Size-1 groups complete at issue: the "reduction" is the identity,
+    /// kept here so `wait_into` still writes the promised result.
+    trivial: Option<Vec<f32>>,
+    /// Issued through the nonblocking API (counted in the overlap timing)
+    /// vs through a blocking wrapper (excluded).
+    deferred: bool,
+    issued_at: Instant,
+}
+
+impl PendingOp<'_> {
+    /// Payload length of the issued op.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the issued payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Nonblocking readiness check; opportunistically drives a bounded
+    /// number of chunk reductions while it holds the group lock (bounded
+    /// like `progress` so a poll never stalls peers queueing on the lock;
+    /// a subsequent blocking wait finishes any remainder).
+    pub fn try_ready(&self) -> bool {
+        if self.trivial.is_some() {
+            return true;
+        }
+        let g = self.world.group(self.rank, self.axis);
+        match g.state.try_lock() {
+            Ok(mut st) => {
+                if st.poison.is_some() {
+                    return true; // wait_into surfaces the error
+                }
+                if self.world.reduce_ready_locked(&mut st, g.size, 8) {
+                    g.cv.notify_all();
+                }
+                st.ops
+                    .iter()
+                    .find(|o| o.seq == self.seq)
+                    .map(|o| o.chunks_done == o.total_chunks)
+                    .unwrap_or(false)
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Block until every chunk is reduced and write the result into `out`
+    /// (same length as the issued payload).  Waiters drive the remaining
+    /// reductions themselves, so completion never depends on a third
+    /// party.  Panics with the handshake message if the group was poisoned
+    /// by a mismatched collective.
+    pub fn wait_into(self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "wait_into buffer length mismatch");
+        if let Some(p) = self.trivial {
+            out.copy_from_slice(&p);
+            return;
+        }
+        let w = self.world;
+        let g = w.group(self.rank, self.axis);
+        let t_wait = Instant::now();
+        let mut st = g.state.lock().unwrap();
+        let completed_at = loop {
+            if let Some(m) = st.poison.clone() {
+                drop(st);
+                w.poison_and_panic(self.rank, m);
+            }
+            if w.reduce_ready_locked(&mut st, g.size, usize::MAX) {
+                g.cv.notify_all();
+            }
+            let done = {
+                let op = st
+                    .ops
+                    .iter()
+                    .find(|o| o.seq == self.seq)
+                    .expect("pending op slot missing");
+                if op.chunks_done == op.total_chunks {
+                    op.completed_at
+                } else {
+                    None
+                }
+            };
+            if let Some(t) = done {
+                break t;
+            }
+            st = g.cv.wait(st).unwrap();
+        };
+        let retire = {
+            let op = st.ops.iter_mut().find(|o| o.seq == self.seq).unwrap();
+            out.copy_from_slice(&op.result);
+            op.read += 1;
+            op.read == g.size
+        };
+        if retire {
+            st.ops.retain(|o| o.seq != self.seq);
+        }
+        drop(st);
+        if self.deferred {
+            let blocked = t_wait.elapsed();
+            let total = completed_at.saturating_duration_since(self.issued_at);
+            let c = &w.counters[axis_idx(self.axis)];
+            c.comm_ns.fetch_add(total.as_nanos() as u64, Ordering::Relaxed);
+            c.blocked_ns
+                .fetch_add(blocked.min(total).as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Handle of an in-flight all-gather; resolve with [`PendingGather::wait`].
+#[must_use = "a pending collective must be awaited (PendingGather::wait)"]
+pub struct PendingGather<'w> {
+    world: &'w CommWorld,
+    axis: Axis,
+    rank: usize,
+    seq: u64,
+    /// Size-1 groups complete at issue with the caller's own payload.
+    trivial: Option<Vec<f32>>,
+    /// Issued through the nonblocking API (counted in the overlap timing)
+    /// vs through a blocking wrapper (excluded).
+    deferred: bool,
+    issued_at: Instant,
+}
+
+impl PendingGather<'_> {
+    /// Block until every member's payload arrived; returns the payloads in
+    /// group-index order.  Panics with the handshake message if the group
+    /// was poisoned by a mismatched collective.
+    pub fn wait(self) -> Vec<Vec<f32>> {
+        if let Some(p) = self.trivial {
+            return vec![p];
+        }
+        let w = self.world;
+        let g = w.group(self.rank, self.axis);
+        let t_wait = Instant::now();
+        let mut st = g.state.lock().unwrap();
+        let completed_at = loop {
+            if let Some(m) = st.poison.clone() {
+                drop(st);
+                w.poison_and_panic(self.rank, m);
+            }
+            let done = {
+                let op = st
+                    .ops
+                    .iter()
+                    .find(|o| o.seq == self.seq)
+                    .expect("pending gather slot missing");
+                if op.n_contributed == g.size {
+                    op.completed_at
+                } else {
+                    None
+                }
+            };
+            if let Some(t) = done {
+                break t;
+            }
+            st = g.cv.wait(st).unwrap();
+        };
+        let (out, retire) = {
+            let op = st.ops.iter_mut().find(|o| o.seq == self.seq).unwrap();
+            let out = op.parts.clone();
+            op.read += 1;
+            (out, op.read == g.size)
+        };
+        if retire {
+            st.ops.retain(|o| o.seq != self.seq);
+        }
+        drop(st);
+        if self.deferred {
+            let blocked = t_wait.elapsed();
+            let total = completed_at.saturating_duration_since(self.issued_at);
+            let c = &w.counters[axis_idx(self.axis)];
+            c.comm_ns.fetch_add(total.as_nanos() as u64, Ordering::Relaxed);
+            c.blocked_ns
+                .fetch_add(blocked.min(total).as_nanos() as u64, Ordering::Relaxed);
+        }
+        out
     }
 }
 
@@ -328,14 +859,6 @@ mod tests {
     #[test]
     fn byte_accounting_tracks_precision() {
         let grid = Grid4D::new(1, 2, 1, 1);
-        let outs = run_ranks(grid, |rank, w| {
-            let mut v = vec![1.0; 8];
-            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
-            w.all_reduce(rank, Axis::X, &mut v, Precision::Bf16);
-            vec![]
-        });
-        drop(outs);
-        // can't reach into the moved world; re-run with a shared one
         let world = Arc::new(CommWorld::new(grid));
         let w1 = world.clone();
         let w2 = world.clone();
@@ -354,5 +877,116 @@ mod tests {
         let (ops, bytes) = world.stats(Axis::X);
         assert_eq!(ops, 4); // 2 collectives x 2 ranks accounted
         assert_eq!(bytes, 2 * (8 * 4) + 2 * (8 * 2));
+    }
+
+    #[test]
+    fn nonblocking_issue_allows_out_of_order_waits() {
+        // two ops in flight per rank on the same group, waited in reverse
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let outs = run_ranks(grid, |rank, w| {
+            let a = vec![rank as f32 + 1.0; 5];
+            let b = vec![10.0 * (rank as f32 + 1.0); 7];
+            let pa = w.issue_all_reduce(rank, Axis::X, &a, Precision::Fp32);
+            let pb = w.issue_all_reduce(rank, Axis::X, &b, Precision::Fp32);
+            let mut rb = vec![0.0; 7];
+            pb.wait_into(&mut rb);
+            let mut ra = vec![0.0; 5];
+            pa.wait_into(&mut ra);
+            ra.extend_from_slice(&rb);
+            ra
+        });
+        for o in outs {
+            assert_eq!(&o[..5], &[3.0; 5]);
+            assert_eq!(&o[5..], &[30.0; 7]);
+        }
+    }
+
+    #[test]
+    fn chunked_reduction_matches_unchunked() {
+        // payload of 10 elems with 3-elem chunks: 4 chunks, same sums
+        let grid = Grid4D::new(1, 3, 1, 1);
+        let world = Arc::new(CommWorld::with_chunk_elems(grid, 3));
+        let mut hs = vec![];
+        for rank in 0..3 {
+            let w = world.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut v: Vec<f32> = (0..10).map(|i| (rank * 10 + i) as f32).collect();
+                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+                v
+            }));
+        }
+        for h in hs {
+            let v = h.join().unwrap();
+            for (i, &x) in v.iter().enumerate() {
+                // sum over ranks r of (10 r + i) = 30 + 3 i
+                assert_eq!(x, (30 + 3 * i) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn try_ready_becomes_true_after_peers_issue() {
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let w1 = world.clone();
+        let t = std::thread::spawn(move || {
+            let v = vec![2.0; 4];
+            let p = w1.issue_all_reduce(1, Axis::X, &v, Precision::Fp32);
+            let mut out = vec![0.0; 4];
+            p.wait_into(&mut out);
+            out
+        });
+        let v = vec![1.0; 4];
+        let p = world.issue_all_reduce(0, Axis::X, &v, Precision::Fp32);
+        // the peer will issue eventually; poll until ready
+        while !p.try_ready() {
+            std::thread::yield_now();
+        }
+        let mut out = vec![0.0; 4];
+        p.wait_into(&mut out);
+        assert_eq!(out, vec![3.0; 4]);
+        assert_eq!(t.join().unwrap(), vec![3.0; 4]);
+    }
+
+    #[test]
+    fn hidden_fraction_counts_deferred_ops_only() {
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        // blocking wrappers are excluded from the overlap timing ...
+        let mut hs = vec![];
+        for rank in 0..2 {
+            let w = world.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut v = vec![1.0; 1 << 18];
+                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(world.timing(Axis::X), (0.0, 0.0));
+        assert_eq!(world.hidden_fraction(Axis::X), 0.0);
+        // ... while nonblocking issues are measured
+        let mut hs = vec![];
+        for rank in 0..2 {
+            let w = world.clone();
+            hs.push(std::thread::spawn(move || {
+                let v = vec![1.0; 1 << 18];
+                let op = w.issue_all_reduce(rank, Axis::X, &v, Precision::Fp32);
+                let mut out = vec![0.0; 1 << 18];
+                op.wait_into(&mut out);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let f = world.hidden_fraction(Axis::X);
+        assert!((0.0..=1.0).contains(&f), "hidden fraction {f}");
+        let (comm_s, blocked_s) = world.timing(Axis::X);
+        assert!(comm_s > 0.0, "deferred ops must be timed");
+        assert!(blocked_s >= 0.0);
+        world.reset_stats();
+        assert_eq!(world.timing(Axis::X), (0.0, 0.0));
+        assert_eq!(world.hidden_fraction(Axis::X), 0.0);
     }
 }

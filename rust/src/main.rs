@@ -4,17 +4,21 @@
 //! scalegnn info
 //! scalegnn train      --dataset products_sim [--sampler scalegnn|sage|saint]
 //!                     [--dp N] [--epochs E | --steps S] [--target-acc A]
-//!                     [--lr F] [--no-prefetch] [--verbose]
+//!                     [--lr F] [--no-prefetch] [--overlap on|off] [--verbose]
 //! scalegnn train      --from-store graph.pallas [--dataset papers100m_ooc]
 //!                     [--cache-mb M] [--steps S] [--batch B] [--lr F]
 //! scalegnn pack       --dataset papers100m_ooc [--out graph.pallas]
 //! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S] [--bf16]
+//!                     [--overlap on|off] [--stats-json FILE]
 //! scalegnn eval       --dataset tiny --grid 2x2x2
 //! scalegnn sample     --dataset products_sim [--grid 2x2] [--steps S]
 //!                     [--from-store graph.pallas] [--cache-mb M]
 //! scalegnn scaling    --dataset papers100m_sim --machine perlmutter
+//!                     [--overlap on|off] [--hide-frac F | --calibrate-overlap]
 //! scalegnn breakdown  --dataset products14m_sim [--machine M]
+//!                     [--overlap on|off] [--hide-frac F | --calibrate-overlap]
 //! scalegnn e2e        --dataset products_sim --machine perlmutter
+//!                     [--overlap on|off] [--hide-frac F | --calibrate-overlap]
 //! ```
 
 use std::path::PathBuf;
@@ -24,12 +28,13 @@ use anyhow::{anyhow, bail, Result};
 
 use scalegnn::comm::{CommWorld, Precision};
 use scalegnn::graph::{datasets, partition_2d};
-use scalegnn::grid::Grid4D;
+use scalegnn::grid::{Axis, Grid4D};
 use scalegnn::pmm::{PmmCtx, PmmGcn};
 use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
 use scalegnn::sim;
 use scalegnn::trainer::{self, TrainConfig};
 use scalegnn::util::cli::Args;
+use scalegnn::util::json::{obj, Json};
 use scalegnn::util::stats::fmt_time;
 
 fn main() {
@@ -80,11 +85,74 @@ COMMANDS:
   breakdown   projected epoch-time breakdown (Figs. 5/8)
   e2e         projected end-to-end time-to-accuracy vs baselines (Fig. 6)
 
+§V-D overlap: train/pmm-train accept --overlap on|off (nonblocking chunked
+collectives; pmm-train reports the measured hidden-comm fraction per axis,
+--stats-json FILE writes it).  The sim commands accept --overlap on|off and
+--hide-frac F or --calibrate-overlap (measure the hide fraction on an
+executed 8-rank engine run instead of the default constant).
+
 Run `cargo bench` to regenerate every paper table/figure.
 ";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Parse `--overlap on|off` (§V-D communication/computation overlap;
+/// default on).
+fn overlap_of(args: &Args) -> Result<bool> {
+    match args.str_or("overlap", "on").as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => Err(anyhow!("--overlap must be on|off, got '{other}'")),
+    }
+}
+
+/// §V-D hide fraction for the sim commands: `--hide-frac F` overrides,
+/// `--calibrate-overlap` measures it by executing a short multi-rank run
+/// on the rank-thread engine, otherwise the calibration default is used.
+fn hide_frac_of(args: &Args) -> Result<f64> {
+    if let Some(f) = args.get::<f64>("hide-frac").map_err(|e| anyhow!(e))? {
+        if !(0.0..=1.0).contains(&f) {
+            bail!("--hide-frac must be in [0, 1], got {f}");
+        }
+        return Ok(f);
+    }
+    if args.flag("calibrate-overlap") {
+        let f = measure_overlap_hide_frac(8)?;
+        println!("calibrated §V-D hide fraction from an executed 8-rank engine run: {f:.3}");
+        return Ok(f);
+    }
+    Ok(sim::DEFAULT_OVERLAP_HIDE_FRAC)
+}
+
+/// Execute a short 8-rank PMM training run (tiny dataset, 1x2x2x2 grid)
+/// with overlap on and return the measured TP hidden-communication
+/// fraction — the executed calibration feeding `sim::scalegnn_epoch_with`
+/// in place of the guessed constant.
+fn measure_overlap_hide_frac(steps: u64) -> Result<f64> {
+    let grid = Grid4D::new(1, 2, 2, 2);
+    let data = Arc::new(datasets::load("tiny").ok_or_else(|| anyhow!("tiny dataset missing"))?);
+    let spec = datasets::spec("tiny").unwrap();
+    let batch = spec.batch;
+    let dims = dims_for("tiny", 0.0);
+    let world = Arc::new(CommWorld::new(grid));
+    let mut handles = vec![];
+    for r in 0..grid.world_size() {
+        let w = world.clone();
+        let d = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+            let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+            for s in 0..steps {
+                eng.train_step(s, 5e-3);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("calibration rank panicked"))?;
+    }
+    Ok(world.tp_hidden_fraction())
 }
 
 /// Model dims for a dataset (mirrors the artifact configurations).
@@ -209,6 +277,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.max_steps = args.get_or("steps", 0).map_err(|e| anyhow!(e))?;
     cfg.max_epochs = args.get_or("epochs", 20).map_err(|e| anyhow!(e))?;
     cfg.prefetch = !args.flag("no-prefetch");
+    cfg.overlap = overlap_of(args)?;
     cfg.verbose = args.flag("verbose") || args.flag("v");
     if let Some(t) = args.get::<f32>("target-acc").map_err(|e| anyhow!(e))? {
         cfg.target_acc = Some(t);
@@ -250,17 +319,19 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
     let steps: u64 = args.get_or("steps", 20).map_err(|e| anyhow!(e))?;
     let lr: f32 = args.get_or("lr", 5e-3).map_err(|e| anyhow!(e))?;
     let prec = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
+    let overlap = overlap_of(args)?;
     let data = Arc::new(datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?);
     let spec = datasets::spec(&dataset).unwrap();
     let dims = dims_for(&dataset, 0.5);
     let batch = spec.batch;
     println!(
-        "4D PMM training {dataset} on grid {}x{}x{}x{} ({} rank threads), {prec:?}",
+        "4D PMM training {dataset} on grid {}x{}x{}x{} ({} rank threads), {prec:?}, overlap={}",
         grid.gd,
         grid.gx,
         grid.gy,
         grid.gz,
-        grid.world_size()
+        grid.world_size(),
+        if overlap { "on" } else { "off" }
     );
     let world = Arc::new(CommWorld::new(grid));
     let t0 = std::time::Instant::now();
@@ -271,6 +342,7 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         handles.push(std::thread::spawn(move || {
             let ctx = PmmCtx::new(grid, r, &w, prec);
             let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+            eng.set_overlap(overlap);
             let mut out = (0.0, 0.0);
             for s in 0..steps {
                 let o = eng.train_step(s, lr);
@@ -305,6 +377,55 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         fmt_time(timers.dp_comm / n),
         fmt_time(timers.reshard / n),
     );
+    let axes = [(Axis::X, "x"), (Axis::Y, "y"), (Axis::Z, "z"), (Axis::Dp, "dp")];
+    print!("measured hidden-comm fraction (§V-D):");
+    for (ax, name) in axes {
+        print!(" {name}={:.2}", world.hidden_fraction(ax));
+    }
+    println!("  (tp aggregate {:.3})", world.tp_hidden_fraction());
+    if let Some(path) = args.path_opt("stats-json") {
+        let mut ax_objs = Vec::new();
+        for (ax, name) in axes {
+            let (ops, bytes) = world.stats(ax);
+            let (comm_s, blocked_s) = world.timing(ax);
+            ax_objs.push(obj(vec![
+                ("axis", Json::from(name)),
+                ("ops", Json::from(ops as usize)),
+                ("bytes", Json::from(bytes as usize)),
+                ("comm_s", Json::from(comm_s)),
+                ("blocked_s", Json::from(blocked_s)),
+                ("hidden_frac", Json::from(world.hidden_fraction(ax))),
+            ]));
+        }
+        let gridspec = format!("{}x{}x{}x{}", grid.gd, grid.gx, grid.gy, grid.gz);
+        let doc = obj(vec![
+            ("dataset", Json::from(dataset.as_str())),
+            ("grid", Json::from(gridspec.as_str())),
+            ("steps", Json::from(steps as usize)),
+            ("overlap", Json::Bool(overlap)),
+            ("precision", Json::from(if args.flag("bf16") { "bf16" } else { "fp32" })),
+            ("wall_s", Json::from(wall)),
+            ("final_loss", Json::from(last.0 as f64)),
+            ("final_acc", Json::from(last.1 as f64)),
+            ("tp_hidden_frac", Json::from(world.tp_hidden_fraction())),
+            ("axes", Json::Arr(ax_objs)),
+            (
+                "per_rank_mean_s",
+                obj(vec![
+                    ("sampling", Json::from(timers.sampling / n)),
+                    ("spmm", Json::from(timers.spmm / n)),
+                    ("gemm", Json::from(timers.gemm / n)),
+                    ("elementwise", Json::from(timers.elementwise / n)),
+                    ("tp_comm", Json::from(timers.tp_comm / n)),
+                    ("dp_comm", Json::from(timers.dp_comm / n)),
+                    ("reshard", Json::from(timers.reshard / n)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n")
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -422,11 +543,14 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     let m = machine_of(args)?;
     let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
     let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
+    let hide = hide_frac_of(args)?;
     let (x, y, z) = sim::base_grid_for(&dataset);
     let base = x * y * z;
     println!(
-        "strong scaling: {dataset} on {} (3D grid {x}x{y}x{z}, growing Gd)",
-        m.name
+        "strong scaling: {dataset} on {} (3D grid {x}x{y}x{z}, growing Gd, overlap={} hide={hide:.2})",
+        m.name,
+        if opts.overlap { "on" } else { "off" }
     );
     println!("{:>8} {:>6} {:>14} {:>9}", "devices", "Gd", "epoch (ms)", "speedup");
     let mut first = None;
@@ -435,8 +559,7 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         if gpus > 2048 {
             break;
         }
-        let t =
-            sim::scalegnn_epoch(&w, &m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL).total();
+        let t = sim::scalegnn_epoch_with(&w, &m, Grid4D::new(gd, x, y, z), opts, hide).total();
         let f = *first.get_or_insert(t);
         println!("{:>8} {:>6} {:>14.1} {:>8.1}x", gpus, gd, t * 1e3, f / t);
     }
@@ -448,14 +571,20 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
     let m = machine_of(args)?;
     let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
     let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
+    let hide = hide_frac_of(args)?;
     let (x, y, z) = sim::base_grid_for(&dataset);
-    println!("epoch breakdown: {dataset} on {} ({x}x{y}x{z} per group)", m.name);
+    println!(
+        "epoch breakdown: {dataset} on {} ({x}x{y}x{z} per group, overlap={} hide={hide:.2})",
+        m.name,
+        if opts.overlap { "on" } else { "off" }
+    );
     println!(
         "{:>4} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
         "Gd", "total ms", "sampling", "spmm+gemm", "elemwise", "tp_comm", "dp_comm", "other"
     );
     for gd in [1usize, 2, 4, 8, 16, 32] {
-        let b = sim::scalegnn_epoch(&w, &m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL);
+        let b = sim::scalegnn_epoch_with(&w, &m, Grid4D::new(gd, x, y, z), opts, hide);
         println!(
             "{:>4} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
             gd,
@@ -476,6 +605,8 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let m = machine_of(args)?;
     let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
     let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
+    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
+    let hide = hide_frac_of(args)?;
     println!(
         "end-to-end time-to-accuracy: {dataset} on {} (log-scale in the paper)",
         m.name
@@ -491,7 +622,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             let t = if fw == sim::Framework::ScaleGnn {
                 match sim::grid_for(&dataset, gpus) {
                     Some(g) => {
-                        sim::scalegnn_epoch(&w, &m, g, sim::OptFlags::ALL).total()
+                        sim::scalegnn_epoch_with(&w, &m, g, opts, hide).total()
                             * sim::epochs_to_target(fw, &dataset, gpus)
                     }
                     None => f64::NAN,

@@ -298,6 +298,28 @@ pub fn backward_ws(
     masks: Option<&[Mat]>,
     ws: &mut StepWorkspace,
 ) {
+    backward_ws_layered(dims, params, adj_t, x, masks, ws, |_, _| {});
+}
+
+/// As [`backward_ws`] but emitting each parameter gradient the moment it
+/// is final (§V-D): `on_grad(param_index, grad)` fires for `w_out` first,
+/// then per layer (output to input) `g_l` and `w_l`, and finally `w_in` —
+/// so a distributed caller can issue the gradient's all-reduce bucket
+/// while the remaining layers are still back-propagating.  Gradients also
+/// land in `ws.grads` as usual.  (The PJRT `dp > 1` trainer receives its
+/// gradients from the AOT artifact all at once and buckets at that
+/// boundary instead; this hook is the pure-Rust counterpart for callers
+/// that run `backward_ws` themselves, e.g. a future distributed
+/// out-of-core path — the emission order is pinned by a unit test.)
+pub fn backward_ws_layered(
+    dims: &GcnDims,
+    params: &Params,
+    adj_t: &Csr,
+    x: &Mat,
+    masks: Option<&[Mat]>,
+    ws: &mut StepWorkspace,
+    mut on_grad: impl FnMut(usize, &Mat),
+) {
     let np = dims.n_params();
     assert_eq!(params.len(), np);
     while ws.grads.len() < np {
@@ -319,6 +341,7 @@ pub fn backward_ws(
 
     // output head (Eqs. 13-14)
     t_matmul_into(&cache.h_last, dlogits, &mut grads[np - 1]);
+    on_grad(np - 1, &grads[np - 1]);
     bwd.dh.reset_for_overwrite(rows, dcols);
     matmul_t_into(dlogits, &params[np - 1], &mut bwd.dh);
 
@@ -362,8 +385,12 @@ pub fn backward_ws(
             }
         }
 
+        // the scale gradient is final once every row accumulated (§V-D)
+        on_grad(2 + 2 * l, &grads[2 + 2 * l]);
+
         // GEMM backward (Eqs. 15-16)
         t_matmul_into(&lc.h_agg, &bwd.dxc, &mut grads[1 + 2 * l]);
+        on_grad(1 + 2 * l, &grads[1 + 2 * l]);
         bwd.dh_agg.reset_for_overwrite(rows, dcols);
         matmul_t_into(&bwd.dxc, w, &mut bwd.dh_agg);
 
@@ -375,6 +402,7 @@ pub fn backward_ws(
 
     // input projection (Eqs. 18-19)
     t_matmul_into(x, &bwd.dh, &mut grads[0]);
+    on_grad(0, &grads[0]);
 }
 
 /// Backward pass (allocating wrapper).  `adj_t` is the transposed
@@ -619,6 +647,33 @@ mod tests {
             );
             assert!(l.is_finite(), "b={b}");
             assert_eq!(ws.logits.rows, b);
+        }
+    }
+
+    #[test]
+    fn layered_backward_emits_final_grads_in_overlap_order() {
+        let d = dims();
+        let params = init_params(&d, 7);
+        let (adj, adj_t, x, y, w) = setup(12);
+        let (logits, cache) = forward(&d, &params, &adj, &x, None);
+        let (_, _, dlogits) = loss_and_grad(&logits, &y, &w);
+        let mut ws = StepWorkspace { cache, dlogits, ..StepWorkspace::default() };
+        let mut order: Vec<(usize, Vec<f32>)> = vec![];
+        backward_ws_layered(&d, &params, &adj_t, &x, None, &mut ws, |i, g| {
+            order.push((i, g.data.clone()));
+        });
+        let np = d.n_params();
+        // w_out first, then per layer (g_l, w_l) from the top, then w_in
+        let mut want = vec![np - 1];
+        for l in (0..d.layers).rev() {
+            want.push(2 + 2 * l);
+            want.push(1 + 2 * l);
+        }
+        want.push(0);
+        assert_eq!(order.iter().map(|(i, _)| *i).collect::<Vec<_>>(), want);
+        // every emitted gradient is bitwise the final one
+        for (i, g) in &order {
+            assert_eq!(ws.grads[*i].data, *g, "param {i}");
         }
     }
 

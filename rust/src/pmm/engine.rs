@@ -8,11 +8,22 @@
 //! primitives (Eqs. 13-19).  Weight shards are updated by a rank-local Adam
 //! (replicas stay in sync because their gradients are identical after the
 //! contraction + DP all-reduces).
+//!
+//! Backward executes the §V-D communication/computation overlap: every
+//! parameter-gradient contraction all-reduce is *issued* into the
+//! nonblocking chunked collective engine the moment its local partial
+//! product exists, landed gradients immediately become per-layer DP
+//! buckets, and waits happen only at true data dependencies (the RMSNorm
+//! dot, dH, dF and the optimizer).  `set_overlap(false)` resolves each
+//! handle at its issue point instead — the blocking Fig. 5 baseline —
+//! with bitwise-identical results (the engine reduces in group-index
+//! order), so the measured step-time delta is pure overlap.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use super::{feature_layouts, shard_dropout_mask, Layout, PmmCtx, PmmMat};
+use super::{feature_layouts, shard_dropout_mask, Layout, PendingMat, PendingVec, PmmCtx, PmmMat};
 use crate::comm::Precision;
 use crate::graph::{block_bounds, partition::extract_shard, Dataset};
 use crate::grid::Axis;
@@ -183,6 +194,100 @@ impl Drop for SubgraphPrefetcher {
     }
 }
 
+/// A parameter-gradient all-reduce in flight on a tensor-parallel axis
+/// (§V-D): either a sharded matrix gradient or a flat scale-vector
+/// gradient.  Only the flat data reaches the optimizer.
+enum PendingTpGrad<'w> {
+    Mat(PendingMat<'w>),
+    Vec(PendingVec<'w>),
+}
+
+impl PendingTpGrad<'_> {
+    fn try_ready(&self) -> bool {
+        match self {
+            PendingTpGrad::Mat(p) => p.try_ready(),
+            PendingTpGrad::Vec(p) => p.try_ready(),
+        }
+    }
+
+    fn wait(self) -> Vec<f32> {
+        match self {
+            PendingTpGrad::Mat(p) => p.wait().local.data,
+            PendingTpGrad::Vec(p) => p.wait(),
+        }
+    }
+}
+
+/// Drain the head of the TP-pending gradient queue in its fixed issue
+/// order: every landed contraction all-reduce immediately becomes a
+/// per-layer data-parallel gradient bucket (`issue_dp`) or, with `Gd = 1`,
+/// a finished gradient.  With `block` the whole queue is resolved; with
+/// `dp_blocking` (the overlap-off baseline) each DP bucket is also waited
+/// at its issue point instead of being queued.  The fixed order keeps the
+/// DP issue sequence identical on every rank of a DP group (the collective
+/// engine matches collectives by sequence number, so issue order may never
+/// depend on completion timing).
+fn drain_tp_queue<'w>(
+    ctx: &PmmCtx<'w>,
+    tp_queue: &mut VecDeque<(usize, PendingTpGrad<'w>)>,
+    dp_queue: &mut VecDeque<(usize, PendingVec<'w>)>,
+    grads: &mut [Option<Vec<f32>>],
+    block: bool,
+    dp_blocking: bool,
+    timers: &mut PmmTimers,
+) {
+    let gd = ctx.grid.gd as f32;
+    loop {
+        let ready = match tp_queue.front() {
+            None => break,
+            Some((_, p)) => block || p.try_ready(),
+        };
+        if !ready {
+            break;
+        }
+        let (slot, p) = tp_queue.pop_front().expect("checked non-empty");
+        let t0 = std::time::Instant::now();
+        let data = p.wait();
+        timers.tp_comm += t0.elapsed().as_secs_f64();
+        if gd > 1.0 {
+            let t0 = std::time::Instant::now();
+            let pend = ctx.issue_dp(data);
+            if dp_blocking {
+                let mut data = pend.wait();
+                for v in data.iter_mut() {
+                    *v /= gd;
+                }
+                grads[slot] = Some(data);
+            } else {
+                dp_queue.push_back((slot, pend));
+            }
+            timers.dp_comm += t0.elapsed().as_secs_f64();
+        } else {
+            grads[slot] = Some(data);
+        }
+    }
+}
+
+/// Queue a just-issued parameter-gradient all-reduce; on the overlap-off
+/// baseline (`overlap == false`) resolve it — and its DP bucket — right
+/// here at the issue point, reproducing the fully blocking schedule.
+#[allow(clippy::too_many_arguments)]
+fn stage_tp_grad<'w>(
+    ctx: &PmmCtx<'w>,
+    overlap: bool,
+    slot: usize,
+    pending: PendingTpGrad<'w>,
+    tp_queue: &mut VecDeque<(usize, PendingTpGrad<'w>)>,
+    dp_queue: &mut VecDeque<(usize, PendingVec<'w>)>,
+    grads: &mut [Option<Vec<f32>>],
+    timers: &mut PmmTimers,
+) {
+    tp_queue.push_back((slot, pending));
+    if !overlap {
+        drain_tp_queue(ctx, tp_queue, dp_queue, grads, true, true, timers);
+    }
+}
+
 /// One rank's engine state.
 pub struct PmmGcn<'a> {
     /// This rank's grid/communication context.
@@ -210,6 +315,8 @@ pub struct PmmGcn<'a> {
     // reduction scratch reused across layers and steps (RMSNorm backward)
     scratch_dots: Vec<f32>,
     scratch_dxn: Vec<f32>,
+    /// §V-D backward communication/computation overlap (on by default).
+    overlap: bool,
     /// Per-phase wall-clock accumulated over all steps run so far.
     pub timers: PmmTimers,
 }
@@ -316,8 +423,18 @@ impl<'a> PmmGcn<'a> {
             prefetcher: SubgraphPrefetcher::new(builders),
             scratch_dots: Vec::new(),
             scratch_dxn: Vec::new(),
+            overlap: true,
             timers: PmmTimers::default(),
         }
+    }
+
+    /// Toggle the §V-D backward communication/computation overlap (on by
+    /// default).  Off resolves every gradient all-reduce at its issue
+    /// point — the blocking baseline of the Fig. 5 ablation.  Both
+    /// schedules are bitwise identical (the collective engine reduces in
+    /// group-index order); only the wait placement differs.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
     }
 
     /// Gather the full parameter tensors (validation/debug).
@@ -555,18 +672,41 @@ impl<'a> PmmGcn<'a> {
             |i| if data.split[sample[i] as usize] == 0 { 1.0 } else { 0.0 },
         );
 
-        // ---- backward ----
+        // ---- backward (§V-D overlapped schedule) ----
+        let overlap = self.overlap;
         let n = self.data.n;
         let cb = |ax: Axis, s: &[u32]| -> Arc<Vec<usize>> {
             Arc::new(compact_bounds(s, n, self.ctx.axis_size(ax)))
         };
 
-        // output head (Eqs. 13-14)
-        let d_wout = self.ctx.mm_ta(&f_last, &dlogits);
+        // Gradient pipeline: parameter-gradient contraction all-reduces
+        // are *issued* the moment the local partial product exists and
+        // drained in a fixed order (w_out, then per layer g_l, w_l,
+        // finally w_in); every landed bucket immediately becomes its
+        // per-layer DP all-reduce.  Slots are in optimizer order:
+        // 0 = w_in, 1+2l = w_l, 2+2l = g_l, last = w_out.  With overlap
+        // off, each handle is resolved at its issue point instead — the
+        // blocking baseline; both schedules are bitwise identical because
+        // the collective engine reduces in group-index order.
+        let n_slots = 2 * dims.layers + 2;
+        let mut grads: Vec<Option<Vec<f32>>> = (0..n_slots).map(|_| None).collect();
+        let mut tp_queue: VecDeque<(usize, PendingTpGrad)> = VecDeque::new();
+        let mut dp_queue: VecDeque<(usize, PendingVec)> = VecDeque::new();
+
+        // output head (Eqs. 13-14): d_wout is needed only by the optimizer,
+        // so its contraction all-reduce is issued, not awaited
+        stage_tp_grad(
+            &self.ctx,
+            overlap,
+            n_slots - 1,
+            PendingTpGrad::Mat(self.ctx.mm_ta_issue(&f_last, &dlogits)),
+            &mut tp_queue,
+            &mut dp_queue,
+            &mut grads,
+            &mut self.timers,
+        );
         let mut df = self.ctx.mm_tb(&dlogits, &self.w_out);
 
-        let mut d_w: Vec<PmmMat> = Vec::with_capacity(dims.layers);
-        let mut d_g: Vec<Vec<f32>> = Vec::with_capacity(dims.layers);
         for l in (0..dims.layers).rev() {
             let lc = &caches[l];
             let fl = self.f_layouts[l];
@@ -611,6 +751,7 @@ impl<'a> PmmGcn<'a> {
                 }
             });
             // the RMSNorm dot is a full-row reduction: AR over cols (FP32)
+            // — a true dependency of dxc, so it stays blocking
             let t_ar = std::time::Instant::now();
             self.ctx.world.all_reduce(
                 self.ctx.rank,
@@ -618,11 +759,19 @@ impl<'a> PmmGcn<'a> {
                 dots,
                 Precision::Fp32,
             );
-            // dg is replicated over C_l; sum over row blocks (T_l)
-            self.ctx
-                .world
-                .all_reduce(self.ctx.rank, df.layout.row_axis, &mut dg, Precision::Fp32);
             self.timers.tp_comm += t_ar.elapsed().as_secs_f64();
+            // dg is replicated over C_l and needed only by the optimizer:
+            // its row-block (T_l) sum is issued, not awaited (§V-D)
+            stage_tp_grad(
+                &self.ctx,
+                overlap,
+                2 + 2 * l,
+                PendingTpGrad::Vec(self.ctx.issue_vec(df.layout.row_axis, dg, Precision::Fp32)),
+                &mut tp_queue,
+                &mut dp_queue,
+                &mut grads,
+                &mut self.timers,
+            );
             timed!(self.elementwise, {
                 for r in 0..rows {
                     let inv = lc.inv[r];
@@ -635,8 +784,19 @@ impl<'a> PmmGcn<'a> {
                 }
             });
 
-            // GEMM backward (Eqs. 15-16)
-            let dwl = self.ctx.mm_ta(&lc.h_agg, &dxc);
+            // GEMM backward (Eqs. 15-16): dW_l is optimizer-only, so its
+            // contraction all-reduce is issued; dH is the next true
+            // dependency and stays blocking
+            stage_tp_grad(
+                &self.ctx,
+                overlap,
+                1 + 2 * l,
+                PendingTpGrad::Mat(self.ctx.mm_ta_issue(&lc.h_agg, &dxc)),
+                &mut tp_queue,
+                &mut dp_queue,
+                &mut grads,
+                &mut self.timers,
+            );
             let dh_agg = self.ctx.mm_tb(&dxc, &self.w[l]);
 
             // SpMM backward (Eq. 17)
@@ -653,40 +813,40 @@ impl<'a> PmmGcn<'a> {
             df = df_conv;
             timed!(self.elementwise, df.local.add_assign(&df_skip.local));
 
-            d_w.push(dwl);
-            d_g.push(dg);
+            if overlap {
+                // layer boundary: advance chunk reductions and turn landed
+                // contraction ARs into their per-layer DP buckets
+                self.ctx.progress();
+                drain_tp_queue(&self.ctx, &mut tp_queue, &mut dp_queue, &mut grads, false, false, &mut self.timers);
+            }
         }
-        d_w.reverse();
-        d_g.reverse();
 
         // input projection backward (Eq. 18); the feature shard gathered in
         // the forward pass is reused instead of re-gathered
-        let d_win = self.ctx.mm_ta(&x_in, &df);
+        stage_tp_grad(
+            &self.ctx,
+            overlap,
+            0,
+            PendingTpGrad::Mat(self.ctx.mm_ta_issue(&x_in, &df)),
+            &mut tp_queue,
+            &mut dp_queue,
+            &mut grads,
+            &mut self.timers,
+        );
 
-        // ---- DP gradient all-reduce + mean ----
-        let gd = self.ctx.grid.gd as f32;
-        let mut flat: Vec<&mut Vec<f32>> = Vec::new();
-        let mut d_win_data = d_win.local.data;
-        let mut d_wout_data = d_wout.local.data;
-        flat.push(&mut d_win_data);
-        let mut d_w_data: Vec<Vec<f32>> = d_w.into_iter().map(|m| m.local.data).collect();
-        for dwd in d_w_data.iter_mut() {
-            flat.push(dwd);
-        }
-        let mut d_g_data = d_g;
-        for dgd in d_g_data.iter_mut() {
-            flat.push(dgd);
-        }
-        flat.push(&mut d_wout_data);
-        if gd > 1.0 {
+        // resolve the remaining contraction ARs (fixed order) and wait out
+        // every DP gradient bucket; the division by Gd happens after the
+        // reduction exactly as on the blocking path
+        drain_tp_queue(&self.ctx, &mut tp_queue, &mut dp_queue, &mut grads, true, !overlap, &mut self.timers);
+        if self.ctx.grid.gd > 1 {
+            let gd = self.ctx.grid.gd as f32;
             let t0 = std::time::Instant::now();
-            for buf in flat.iter_mut() {
-                self.ctx
-                    .world
-                    .all_reduce(self.ctx.rank, Axis::Dp, buf, Precision::Fp32);
-                for v in buf.iter_mut() {
+            while let Some((slot, p)) = dp_queue.pop_front() {
+                let mut data = p.wait();
+                for v in data.iter_mut() {
                     *v /= gd;
                 }
+                grads[slot] = Some(data);
             }
             self.timers.dp_comm += t0.elapsed().as_secs_f64();
         }
@@ -706,15 +866,19 @@ impl<'a> PmmGcn<'a> {
                 }
             };
             let (m, v) = (&mut self.adam_m, &mut self.adam_v);
-            apply(&mut self.w_in.local.data, &d_win_data, &mut m[idx], &mut v[idx]);
+            let g0 = grads[0].take().expect("w_in gradient resolved");
+            apply(&mut self.w_in.local.data, &g0, &mut m[idx], &mut v[idx]);
             idx += 1;
             for l in 0..dims.layers {
-                apply(&mut self.w[l].local.data, &d_w_data[l], &mut m[idx], &mut v[idx]);
+                let gw = grads[1 + 2 * l].take().expect("w_l gradient resolved");
+                apply(&mut self.w[l].local.data, &gw, &mut m[idx], &mut v[idx]);
                 idx += 1;
-                apply(&mut self.g[l], &d_g_data[l], &mut m[idx], &mut v[idx]);
+                let gg = grads[2 + 2 * l].take().expect("g_l gradient resolved");
+                apply(&mut self.g[l], &gg, &mut m[idx], &mut v[idx]);
                 idx += 1;
             }
-            apply(&mut self.w_out.local.data, &d_wout_data, &mut m[idx], &mut v[idx]);
+            let gout = grads[n_slots - 1].take().expect("w_out gradient resolved");
+            apply(&mut self.w_out.local.data, &gout, &mut m[idx], &mut v[idx]);
         });
 
         // fold the context's per-op timings into the step accumulators

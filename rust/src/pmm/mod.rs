@@ -22,6 +22,12 @@
 //! ranges (Fig. 3), so every rank derives identical bounds with no
 //! communication.  RMSNorm's sum-of-squares is all-reduced over the column
 //! axis (Eq. 29) in FP32 even when BF16 collectives are enabled (§V-B).
+//!
+//! **§V-D overlap:** `mm_ta_issue` / `issue_vec` / `issue_dp` stage a
+//! contraction (or gradient-bucket) all-reduce into the nonblocking chunked
+//! collective engine and return a [`PendingMat`] / [`PendingVec`] handle;
+//! the engine's backward pass resolves them only at the optimizer, hiding
+//! the reductions behind the remaining backward kernels.
 
 use std::sync::Arc;
 
@@ -98,6 +104,52 @@ impl PmmMat {
     /// Global column count (last column boundary).
     pub fn global_cols(&self) -> usize {
         *self.col_bounds.last().unwrap()
+    }
+}
+
+/// A sharded matrix whose contraction all-reduce has been issued but not
+/// yet awaited (§V-D overlap): the local block holds the un-reduced
+/// partial product until [`PendingMat::wait`] resolves it in place.
+#[must_use = "a pending PMM result must be awaited"]
+pub struct PendingMat<'w> {
+    op: crate::comm::PendingOp<'w>,
+    mat: PmmMat,
+}
+
+impl PendingMat<'_> {
+    /// Nonblocking completion check (drives chunk reductions).
+    pub fn try_ready(&self) -> bool {
+        self.op.try_ready()
+    }
+
+    /// Block until the contraction all-reduce lands; returns the reduced
+    /// matrix.
+    pub fn wait(self) -> PmmMat {
+        let PendingMat { op, mut mat } = self;
+        op.wait_into(&mut mat.local.data);
+        mat
+    }
+}
+
+/// A flat vector whose all-reduce has been issued but not yet awaited
+/// (§V-D): used for RMSNorm-scale gradients and DP gradient buckets.
+#[must_use = "a pending vector reduction must be awaited"]
+pub struct PendingVec<'w> {
+    op: crate::comm::PendingOp<'w>,
+    data: Vec<f32>,
+}
+
+impl PendingVec<'_> {
+    /// Nonblocking completion check (drives chunk reductions).
+    pub fn try_ready(&self) -> bool {
+        self.op.try_ready()
+    }
+
+    /// Block until the reduction lands; returns the reduced vector.
+    pub fn wait(self) -> Vec<f32> {
+        let PendingVec { op, mut data } = self;
+        op.wait_into(&mut data);
+        data
     }
 }
 
@@ -216,13 +268,15 @@ impl<'a> PmmCtx<'a> {
         }
     }
 
-    /// mm_ta: A(k,r)^T @ B(k,c) -> C(r,c), all-reduce over k.
-    pub fn mm_ta(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
+    /// Local kernel of `mm_ta`: the un-reduced partial product plus the
+    /// contraction axis and output layout (shared by the blocking and the
+    /// nonblocking §V-D entry points).
+    fn mm_ta_local(&self, a: &PmmMat, b: &PmmMat) -> (Axis, Layout, Mat) {
         let k_axis = a.layout.row_axis;
         assert_eq!(k_axis, b.layout.row_axis);
         let out_layout = Layout::new(a.layout.col_axis, b.layout.col_axis);
         debug_assert_eq!(a.row_bounds.as_slice(), b.row_bounds.as_slice());
-        let mut c = self.time(
+        let c = self.time(
             || {
                 let mut c = Mat::zeros(a.local.cols, b.local.cols);
                 crate::tensor::t_matmul_into_threads(&a.local, &b.local, &mut c, 1);
@@ -230,6 +284,12 @@ impl<'a> PmmCtx<'a> {
             },
             |t| &mut t.gemm,
         );
+        (k_axis, out_layout, c)
+    }
+
+    /// mm_ta: A(k,r)^T @ B(k,c) -> C(r,c), all-reduce over k.
+    pub fn mm_ta(&self, a: &PmmMat, b: &PmmMat) -> PmmMat {
+        let (k_axis, out_layout, mut c) = self.mm_ta_local(a, b);
         self.all_reduce(k_axis, &mut c.data, self.tp_precision);
         PmmMat {
             layout: out_layout,
@@ -237,6 +297,43 @@ impl<'a> PmmCtx<'a> {
             col_bounds: b.col_bounds.clone(),
             local: c,
         }
+    }
+
+    /// As `mm_ta` but the contraction all-reduce is only *issued* (§V-D):
+    /// the local partial product is staged into the chunked collective
+    /// engine and the caller keeps computing until [`PendingMat::wait`].
+    pub fn mm_ta_issue(&self, a: &PmmMat, b: &PmmMat) -> PendingMat<'a> {
+        let (k_axis, out_layout, c) = self.mm_ta_local(a, b);
+        let world: &'a CommWorld = self.world;
+        let op = world.issue_all_reduce(self.rank, k_axis, &c.data, self.tp_precision);
+        PendingMat {
+            op,
+            mat: PmmMat {
+                layout: out_layout,
+                row_bounds: a.col_bounds.clone(),
+                col_bounds: b.col_bounds.clone(),
+                local: c,
+            },
+        }
+    }
+
+    /// Issue an all-reduce of an owned flat vector over `axis` (§V-D);
+    /// resolve via [`PendingVec::wait`].
+    pub fn issue_vec(&self, axis: Axis, data: Vec<f32>, prec: Precision) -> PendingVec<'a> {
+        let world: &'a CommWorld = self.world;
+        let op = world.issue_all_reduce(self.rank, axis, &data, prec);
+        PendingVec { op, data }
+    }
+
+    /// Issue a data-parallel gradient-bucket all-reduce (§V-D per-layer DP
+    /// buckets); FP32 like the blocking DP path.
+    pub fn issue_dp(&self, data: Vec<f32>) -> PendingVec<'a> {
+        self.issue_vec(Axis::Dp, data, Precision::Fp32)
+    }
+
+    /// Drive pending chunk reductions for this rank (cheap, nonblocking).
+    pub fn progress(&self) -> bool {
+        self.world.progress(self.rank)
     }
 
     /// mm_tb: A(r,k) @ B(c,k)^T -> C(r,c), all-reduce over k.

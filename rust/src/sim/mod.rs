@@ -12,7 +12,10 @@ pub mod model;
 
 pub use baselines::{baseline_epoch, baseline_eval_round, epochs_to_target, Framework};
 pub use machines::{by_name, Machine, FRONTIER, PERLMUTTER, TUOLUMNE};
-pub use model::{scalegnn_epoch, scalegnn_eval_round, EpochBreakdown, OptFlags, Workload};
+pub use model::{
+    scalegnn_epoch, scalegnn_epoch_with, scalegnn_eval_round, EpochBreakdown, OptFlags,
+    Workload, DEFAULT_OVERLAP_HIDE_FRAC,
+};
 
 use crate::grid::{near_cubic, Grid4D};
 

@@ -152,17 +152,39 @@ const EW_LAUNCH: f64 = 20e-6;
 const SPMM_BW_FRAC: f64 = 0.35;
 /// GEMM sustained efficiency on mini-batch-sized tiles.
 const GEMM_EFF: f64 = 0.55;
-/// Fraction of backward TP communication hidden by §V-D overlap.
-const OVERLAP_HIDE_FRAC: f64 = 0.15;
+/// Default fraction of backward TP communication hidden by §V-D overlap —
+/// used when no *measured* value is supplied.  The executed collective
+/// engine records the real per-op issue→completion vs blocked timings
+/// (`comm::CommWorld::tp_hidden_fraction`); feed that measurement through
+/// [`scalegnn_epoch_with`] (CLI: `scalegnn breakdown --calibrate-overlap`)
+/// to calibrate the 2048-GPU projections from the executed ≤64-rank runs.
+pub const DEFAULT_OVERLAP_HIDE_FRAC: f64 = 0.15;
 /// Fixed per-step launch/bookkeeping overhead (s) per device.
 const STEP_OVERHEAD: f64 = 400e-6;
 
-/// Epoch time for ScaleGNN on `machine` with the 4D `grid`.
+/// Epoch time for ScaleGNN on `machine` with the 4D `grid`, with the
+/// default §V-D hide fraction.
 pub fn scalegnn_epoch(
     w: &Workload,
     machine: &Machine,
     grid: Grid4D,
     opts: OptFlags,
+) -> EpochBreakdown {
+    scalegnn_epoch_with(w, machine, grid, opts, DEFAULT_OVERLAP_HIDE_FRAC)
+}
+
+/// Epoch time for ScaleGNN with an explicit §V-D hide fraction — pass the
+/// measured `comm::CommWorld::tp_hidden_fraction()` of an executed run to
+/// calibrate the projection (clamped to `[0, 1]`).  The fraction applies
+/// to the *hideable* share of backward TP communication (the
+/// parameter-gradient all-reduces), matching the population of
+/// nonblocking-issued collectives the engine actually measures.
+pub fn scalegnn_epoch_with(
+    w: &Workload,
+    machine: &Machine,
+    grid: Grid4D,
+    opts: OptFlags,
+    overlap_hide_frac: f64,
 ) -> EpochBreakdown {
     let g3 = grid.group_size() as f64;
     let gd = grid.gd as f64;
@@ -213,6 +235,13 @@ pub fn scalegnn_epoch(
     let sizes = [grid.gx, grid.gy, grid.gz];
     let mut tp_fwd = 0.0;
     let mut tp_bwd = 0.0;
+    // the §V-D-hideable share of tp_bwd: the parameter-gradient (dW)
+    // all-reduces, which have no downstream consumer until the optimizer
+    // — exactly the ops the executed engine issues nonblocking and whose
+    // measured hidden fraction calibrates `overlap_hide_frac`.  The
+    // activation gradients (dH, dF) and reshards are true dependencies
+    // and can never be hidden.
+    let mut tp_bwd_hideable = 0.0;
     for l in 0..(w.layers as usize) {
         // rotate which axis plays R/C/T per layer
         let r = l % 3;
@@ -230,7 +259,9 @@ pub fn scalegnn_epoch(
         tp_fwd += ag(tp_bytes4(pr as f64, pc as f64), pr, sr)
             + ag(tp_bytes4(1.0, pc as f64), pc, sc);
         // backward: dW (over T), dH (over R), dF (over T) + reshard
-        tp_bwd += ar(dh / pc as f64 * dh / pr as f64 * 4.0 * scale_bytes, pt, strides[t]);
+        let dw_ar = ar(dh / pc as f64 * dh / pr as f64 * 4.0 * scale_bytes, pt, strides[t]);
+        tp_bwd += dw_ar;
+        tp_bwd_hideable += dw_ar;
         tp_bwd += ar(tp_bytes4(pt as f64, pc as f64), pr, sr);
         tp_bwd += ar(tp_bytes4(pr as f64, pc as f64), pt, strides[t]);
         tp_bwd += ag(tp_bytes4(pt as f64, pr as f64), pr, sr)
@@ -238,9 +269,11 @@ pub fn scalegnn_epoch(
     }
     // projections: AR over Z fwd + bwd weight grads
     tp_fwd += ar(b / gx * dh / gy * 4.0, grid.gz, grid.gx * grid.gy);
-    tp_bwd += ar(w.d_in / gz * dh / gy * 4.0, grid.gx, 1)
-        + ar(b / gx * w.d_out / gy * 4.0, grid.gz, grid.gx * grid.gy);
-    let tp_bwd_hidden = if opts.overlap { tp_bwd * OVERLAP_HIDE_FRAC } else { 0.0 };
+    let dwin_ar = ar(w.d_in / gz * dh / gy * 4.0, grid.gx, 1);
+    tp_bwd += dwin_ar + ar(b / gx * w.d_out / gy * 4.0, grid.gz, grid.gx * grid.gy);
+    tp_bwd_hideable += dwin_ar;
+    let tp_bwd_hidden =
+        if opts.overlap { tp_bwd_hideable * overlap_hide_frac.clamp(0.0, 1.0) } else { 0.0 };
     let tp_t = tp_fwd + tp_bwd - tp_bwd_hidden;
 
     // ---- DP gradient all-reduce (per step) ----
@@ -390,6 +423,31 @@ mod tests {
         let tp_per_step_1 = b1.tp_comm / (w.n / (w.batch * 1.0));
         let tp_per_step_16 = b16.tp_comm / (w.n / (w.batch * 16.0));
         assert!((tp_per_step_1 - tp_per_step_16).abs() / tp_per_step_1 < 1e-6);
+    }
+
+    #[test]
+    fn measured_hide_fraction_calibrates_the_overlap_term() {
+        let w = products();
+        let g = Grid4D::new(4, 2, 2, 2);
+        let default = scalegnn_epoch(&w, &PERLMUTTER, g, OptFlags::ALL).total();
+        assert_eq!(
+            default,
+            scalegnn_epoch_with(&w, &PERLMUTTER, g, OptFlags::ALL, DEFAULT_OVERLAP_HIDE_FRAC)
+                .total()
+        );
+        // a larger measured hide fraction hides more backward TP time
+        let lo = scalegnn_epoch_with(&w, &PERLMUTTER, g, OptFlags::ALL, 0.05).total();
+        let hi = scalegnn_epoch_with(&w, &PERLMUTTER, g, OptFlags::ALL, 0.60).total();
+        assert!(hi < default && default < lo, "{hi} < {default} < {lo}");
+        // with overlap off, the hide fraction is irrelevant
+        let off = OptFlags { overlap: false, ..OptFlags::ALL };
+        assert_eq!(
+            scalegnn_epoch_with(&w, &PERLMUTTER, g, off, 0.9).total(),
+            scalegnn_epoch_with(&w, &PERLMUTTER, g, off, 0.0).total()
+        );
+        // out-of-range measurements are clamped, not amplified
+        let clamped = scalegnn_epoch_with(&w, &PERLMUTTER, g, OptFlags::ALL, 2.0);
+        assert!(clamped.total() > 0.0 && clamped.tp_comm >= 0.0);
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub struct TrainConfig {
     pub verbose: bool,
     /// use BF16 payloads for the DP gradient all-reduce (§V-B)
     pub bf16_dp: bool,
+    /// §V-D gradient bucketing: issue every per-tensor DP bucket through
+    /// the nonblocking collective engine before draining (default), vs
+    /// one blocking all-reduce per tensor
+    pub overlap: bool,
 }
 
 impl TrainConfig {
@@ -91,6 +95,7 @@ impl TrainConfig {
                 .unwrap_or(4),
             verbose: false,
             bf16_dp: false,
+            overlap: true,
         }
     }
 }
@@ -316,10 +321,28 @@ fn worker_loop(
             if let Some(w) = world {
                 let gd = cfg.dp as f32;
                 let prec = if cfg.bf16_dp { Precision::Bf16 } else { Precision::Fp32 };
-                for g in grads.iter_mut() {
-                    w.all_reduce(group, Axis::Dp, g, prec);
-                    for v in g.iter_mut() {
-                        *v /= gd;
+                if cfg.overlap {
+                    // §V-D gradient bucketing: stage every per-tensor
+                    // bucket into the nonblocking engine, then drain —
+                    // chunk reductions of bucket k proceed while buckets
+                    // k+1.. are still being issued, and no rank stalls at
+                    // a per-tensor rendezvous
+                    let pending: Vec<crate::comm::PendingOp<'_>> = grads
+                        .iter()
+                        .map(|g| w.issue_all_reduce(group, Axis::Dp, g, prec))
+                        .collect();
+                    for (op, g) in pending.into_iter().zip(grads.iter_mut()) {
+                        op.wait_into(g);
+                        for v in g.iter_mut() {
+                            *v /= gd;
+                        }
+                    }
+                } else {
+                    for g in grads.iter_mut() {
+                        w.all_reduce(group, Axis::Dp, g, prec);
+                        for v in g.iter_mut() {
+                            *v /= gd;
+                        }
                     }
                 }
                 let mut loss_buf = [last_loss];

@@ -52,6 +52,10 @@ pub struct BenchResult {
     pub p95_s: f64,
     /// Population standard deviation in seconds.
     pub stddev_s: f64,
+    /// Raw per-iteration samples in seconds, in measurement order — lets
+    /// callers compute their own robust statistics (e.g. the overlap
+    /// on/off medians of `BENCH_e2e.json`).
+    pub samples: Vec<f64>,
 }
 
 impl BenchResult {
@@ -87,6 +91,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         median_s: median(&samples),
         p95_s: percentile(&samples, 95.0),
         stddev_s: stddev(&samples),
+        samples,
     }
 }
 
@@ -122,6 +127,7 @@ mod tests {
         assert_eq!(n, 7);
         assert_eq!(r.iters, 5);
         assert!(r.mean_s >= 0.0);
+        assert_eq!(r.samples.len(), 5);
     }
 
     #[test]
