@@ -1,13 +1,14 @@
 //! Table I reproduction (example-sized): train the same GCN with the three
 //! sampling algorithms — ScaleGNN uniform vertex sampling, GraphSAINT node
-//! sampling, GraphSAGE neighbor sampling — and report the best test
-//! accuracy of each.  `cargo bench --bench table1_accuracy` runs the
-//! full-length version on both accuracy datasets.
+//! sampling, GraphSAGE neighbor sampling — through the session API's
+//! `reference` backend and report the best test accuracy of each.
+//! `cargo bench --bench table1_accuracy` runs the full-length version on
+//! both accuracy datasets.
 //!
 //! Run: `cargo run --release --example accuracy_comparison [epochs]`
 
 use scalegnn::sampling::SamplerKind;
-use scalegnn::trainer::{train, TrainConfig};
+use scalegnn::session::{self, BackendKind, RunSpec};
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::args()
@@ -24,11 +25,13 @@ fn main() -> anyhow::Result<()> {
         SamplerKind::GraphSage,
         SamplerKind::ScaleGnnUniform,
     ] {
-        let mut cfg = TrainConfig::quick(dataset, kind);
-        cfg.max_epochs = epochs;
-        cfg.lr = 1e-2;
+        let spec = RunSpec::new(BackendKind::Reference, dataset)
+            .sampler(kind)
+            .epochs(epochs)
+            .lr(1e-2);
         let t0 = std::time::Instant::now();
-        let r = train(&cfg)?;
+        let run = session::run_silent(&spec)?;
+        let r = run.trainer.as_ref().expect("reference backend returns a trainer report");
         println!(
             "  {:<18} best test acc {:.4} (val {:.4}) in {:.1}s",
             kind.name(),

@@ -1,78 +1,62 @@
 //! 4D-parallel training demo on the rank-thread 3D-PMM engine: 16 "GPUs"
 //! as 2 data-parallel groups x a 2x2x2 PMM grid, with communication-free
 //! per-rank sampling (Algorithm 2), real sharded matrices, real collectives
-//! and a distributed full-graph evaluation at the end.
+//! and a distributed full-graph evaluation at the end — all through the
+//! session API's `pmm` backend.
 //!
 //! Run: `cargo run --release --example distributed_4d`
 
-use std::sync::Arc;
-
-use scalegnn::comm::{CommWorld, Precision};
-use scalegnn::graph::datasets;
-use scalegnn::grid::Grid4D;
-use scalegnn::model::GcnDims;
-use scalegnn::pmm::{PmmCtx, PmmGcn, PmmTimers};
+use scalegnn::comm::Precision;
+use scalegnn::session::{self, BackendKind, LogObserver, RunSpec, StepObserver};
 
 fn main() -> anyhow::Result<()> {
-    let grid = Grid4D::new(2, 2, 2, 2); // Gd x Gx x Gy x Gz = 16 ranks
-    let steps = 30u64;
-    let data = Arc::new(datasets::load("tiny").unwrap());
-    let dims = GcnDims {
-        d_in: 16,
-        d_h: 16,
-        d_out: 4,
-        layers: 2,
-        dropout: 0.3,
-        weight_decay: 0.0,
-    };
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(2, 2, 2, 2) // Gd x Gx x Gy x Gz = 16 ranks
+        .model(16, 2, 0.3)
+        .batch(64)
+        .steps(30)
+        .lr(5e-3)
+        .seed(7)
+        .precision(Precision::Bf16)
+        .final_eval(true);
 
-    println!("== 4D hybrid parallel training: {} rank threads ==", grid.world_size());
-    println!("grid Gd={} x Gx={} x Gy={} x Gz={}, bf16 TP collectives\n", grid.gd, grid.gx, grid.gy, grid.gz);
+    println!("== 4D hybrid parallel training: {} rank threads ==", spec.grid.world_size());
+    println!(
+        "grid Gd={} x Gx={} x Gy={} x Gz={}, bf16 TP collectives\n",
+        spec.grid.gd, spec.grid.gx, spec.grid.gy, spec.grid.gz
+    );
 
-    let world = Arc::new(CommWorld::new(grid));
-    let mut handles = vec![];
-    for r in 0..grid.world_size() {
-        let w = world.clone();
-        let d = data.clone();
-        handles.push(std::thread::spawn(move || {
-            let ctx = PmmCtx::new(grid, r, &w, Precision::Bf16);
-            let mut eng = PmmGcn::new(ctx, dims, 64, d, 7);
-            let mut losses = vec![];
-            for s in 0..steps {
-                losses.push(eng.train_step(s, 5e-3).loss);
-            }
-            let accs = eng.eval_full_graph();
-            (r, losses, accs, eng.timers)
-        }));
+    let mut obs: Vec<Box<dyn StepObserver>> = vec![Box::new(LogObserver::every(10))];
+    let report = session::run(&spec, &mut obs)?;
+    let pmm = report.pmm.as_ref().expect("pmm backend returns a pmm report");
+
+    let first = report.loss_curve.first().map(|x| x.1).unwrap_or(f32::NAN);
+    let (val, test) = pmm.eval.expect("final_eval was requested");
+    println!(
+        "\nloss {first:.3} -> {:.3} over {} steps, full-graph val {val:.3} test {test:.3}",
+        report.final_loss, report.steps
+    );
+
+    let t = &pmm.timers_mean;
+    println!("\nmean per-rank phase times over {} steps:", report.steps);
+    println!("  sampling    {:>8.2} ms (Algorithm 2, zero communication)", t.sampling * 1e3);
+    println!("  spmm        {:>8.2} ms", t.spmm * 1e3);
+    println!("  gemm        {:>8.2} ms", t.gemm * 1e3);
+    println!("  elementwise {:>8.2} ms", t.elementwise * 1e3);
+    println!("  tp_comm     {:>8.2} ms (X/Y/Z all-reduces, bf16)", t.tp_comm * 1e3);
+    println!("  dp_comm     {:>8.2} ms (gradient sync across groups)", t.dp_comm * 1e3);
+    println!("  reshard     {:>8.2} ms (residual re-layout)", t.reshard * 1e3);
+
+    println!("\ncomm volume per axis (ops, bytes, hidden fraction):");
+    for ax in &pmm.axes {
+        println!(
+            "  {:<3} ops {:<6} bytes {:<12} hidden {:.2}",
+            ax.axis, ax.ops, ax.bytes, ax.hidden_frac
+        );
     }
+    println!("tp aggregate hidden fraction: {:.3}", pmm.tp_hidden_frac);
 
-    let mut total = PmmTimers::default();
-    for h in handles {
-        let (r, losses, (val, test), timers) = h.join().unwrap();
-        total.add(&timers);
-        if r == 0 || r == grid.group_size() {
-            println!(
-                "rank {r:>2} (group {}): loss {:.3} -> {:.3}, full-graph val {val:.3} test {test:.3}",
-                grid.coord(r).d,
-                losses[0],
-                losses[losses.len() - 1]
-            );
-        }
-    }
-    let n = grid.world_size() as f64;
-    println!("\nmean per-rank phase times over {steps} steps:");
-    println!("  sampling    {:>8.2} ms (Algorithm 2, zero communication)", total.sampling / n * 1e3);
-    println!("  spmm        {:>8.2} ms", total.spmm / n * 1e3);
-    println!("  gemm        {:>8.2} ms", total.gemm / n * 1e3);
-    println!("  elementwise {:>8.2} ms", total.elementwise / n * 1e3);
-    println!("  tp_comm     {:>8.2} ms (X/Y/Z all-reduces, bf16)", total.tp_comm / n * 1e3);
-    println!("  dp_comm     {:>8.2} ms (gradient sync across groups)", total.dp_comm / n * 1e3);
-    println!("  reshard     {:>8.2} ms (residual re-layout)", total.reshard / n * 1e3);
-    println!("\ncomm volume: X {:?} Y {:?} Z {:?} DP {:?} (ops, bytes)",
-        world.stats(scalegnn::grid::Axis::X),
-        world.stats(scalegnn::grid::Axis::Y),
-        world.stats(scalegnn::grid::Axis::Z),
-        world.stats(scalegnn::grid::Axis::Dp));
+    anyhow::ensure!(report.final_loss < first, "loss did not decrease");
     println!("OK");
     Ok(())
 }

@@ -1,34 +1,45 @@
 //! Quickstart: train a GCN on the tiny synthetic dataset with ScaleGNN's
-//! communication-free uniform vertex sampling, through the full three-layer
-//! stack (Rust coordinator -> PJRT -> AOT-compiled JAX/Pallas artifacts).
+//! communication-free uniform vertex sampling through the unified session
+//! API.  The pure-Rust rank-thread engine is the default path — no
+//! build-time artifacts are needed; the AOT-compiled JAX/Pallas PJRT
+//! artifacts are an optional acceleration used by the `reference` backend
+//! (see `examples/train_e2e.rs`, `make artifacts`).
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! The same run as a shareable spec: `scalegnn run --spec examples/specs/tiny.json`
 
-use scalegnn::sampling::SamplerKind;
-use scalegnn::trainer::{train, TrainConfig};
+use scalegnn::session::{self, BackendKind, LogObserver, RunSpec, StepObserver};
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = TrainConfig::quick("tiny", SamplerKind::ScaleGnnUniform);
-    cfg.max_steps = 200;
-    cfg.lr = 5e-3;
-    cfg.verbose = true;
+    // RunSpec::new already picks the dataset's default model dims
+    // (ModelSpec::for_dataset: 16x2 for tiny, dropout 0)
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 2, 2)
+        .steps(200)
+        .lr(5e-3)
+        .final_eval(true);
 
     println!("== ScaleGNN quickstart: tiny planted-partition graph ==");
-    let report = train(&cfg)?;
+    println!(
+        "pmm backend, grid {} ({} rank threads), {} steps\n",
+        spec.grid.to_string(),
+        spec.grid.world_size(),
+        spec.steps
+    );
+    let mut obs: Vec<Box<dyn StepObserver>> = vec![Box::new(LogObserver::every(50))];
+    let report = session::run(&spec, &mut obs)?;
 
-    println!("\nloss curve (every epoch):");
-    for (step, loss) in &report.loss_curve {
+    println!("\nloss curve (every 25 steps):");
+    for (step, loss) in report.loss_curve.iter().step_by(25) {
         println!("  step {step:>4}  loss {loss:.4}");
     }
-    println!("\naccuracy curve:");
-    for (step, val, test) in &report.acc_curve {
-        println!("  step {step:>4}  val {val:.4}  test {test:.4}");
-    }
+    let pmm = report.pmm.as_ref().expect("pmm backend returns a pmm report");
+    let (val, test) = pmm.eval.expect("final_eval was requested");
     println!(
-        "\ntrained {} steps in {:.2}s (train only; eval {:.2}s) -> best test acc {:.3}",
-        report.steps, report.train_time_s, report.eval_time_s, report.best_test_acc
+        "\ntrained {} steps in {:.2}s -> full-graph val {:.3} test {:.3}",
+        report.steps, report.wall_s, val, test
     );
-    anyhow::ensure!(report.best_test_acc > 0.5, "quickstart failed to learn");
+    anyhow::ensure!(test > 0.5, "quickstart failed to learn");
     println!("OK");
     Ok(())
 }

@@ -1,43 +1,44 @@
 //! Fig. 7 sweep (example-sized): projected strong scaling of ScaleGNN on
-//! all three machines and all five datasets, from the calibrated analytical
-//! model.  `cargo bench --bench fig7_scaling` prints the full figure data.
+//! all three machines and four datasets, each projection running through
+//! the session API's `sim` backend.  `cargo bench --bench fig7_scaling`
+//! prints the full figure data.
 //!
 //! Run: `cargo run --release --example scaling_sweep`
 
-use scalegnn::graph::datasets;
-use scalegnn::grid::Grid4D;
+use scalegnn::comm::Precision;
+use scalegnn::session::{self, BackendKind, GridSpec, RunSpec};
 use scalegnn::sim;
 
-fn main() {
-    let machines = [sim::PERLMUTTER, sim::FRONTIER, sim::TUOLUMNE];
+fn main() -> anyhow::Result<()> {
+    let machines = ["perlmutter", "frontier", "tuolumne"];
     let sets = [
         "products_sim",
         "isolate_sim",
         "products14m_sim",
         "papers100m_sim",
     ];
-    for m in &machines {
-        println!("== {} ==", m.name);
+    for machine in machines {
+        println!("== {machine} ==");
         for ds in sets {
-            let spec = datasets::spec(ds).unwrap();
-            let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
             let (x, y, z) = sim::base_grid_for(ds);
             let base = x * y * z;
+            let sweep: Vec<usize> =
+                [1usize, 2, 4, 8, 16, 32].into_iter().filter(|gd| base * gd <= 2048).collect();
+            let mut spec = RunSpec::new(BackendKind::Sim, ds).sim(machine, None, sweep);
+            spec.grid = GridSpec { gd: 1, gx: x, gy: y, gz: z };
+            spec.precision = Precision::Bf16; // §V-B on, as in the paper runs
+            let report = session::run_silent(&spec)?;
+            let points = report.sim.expect("sim backend returns a sim report").points;
             print!("  {ds:<16}");
-            let mut first = None;
-            for gd in [1usize, 2, 4, 8, 16, 32] {
-                let gpus = base * gd;
-                if gpus > 2048 {
-                    break;
-                }
-                let t = sim::scalegnn_epoch(&w, m, Grid4D::new(gd, x, y, z), sim::OptFlags::ALL)
-                    .total();
-                let f = *first.get_or_insert(t);
-                print!(" {:>6.0}ms({:>4.1}x)", t * 1e3, f / t);
+            let first = points.first().map(|p| p.breakdown.total()).unwrap_or(f64::NAN);
+            for p in &points {
+                let t = p.breakdown.total();
+                print!(" {:>6.0}ms({:>4.1}x)", t * 1e3, first / t);
             }
             println!();
         }
     }
     println!("\npaper anchors: papers100M on Perlmutter 64->2048 GPUs = 21.7x (4095->189 ms);");
     println!("Products-14M on Frontier 32->1024 GCDs = 22.4x; Tuolumne 32->1024 = 17.2x");
+    Ok(())
 }

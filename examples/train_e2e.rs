@@ -1,15 +1,15 @@
 //! End-to-end driver (deliverable (b)/EXPERIMENTS.md §E2E): train the large
 //! GCN variant (d_h=512, 4 layers, ~1.4 M parameters — GNN models are small;
 //! the graph is the scale axis) on the 65 k-vertex `e2e_big` planted
-//! community graph for a few hundred steps, logging the loss curve and
-//! periodic full-graph accuracy.  Exercises every layer of the stack on a
-//! real workload: Rust sampling/coordination -> PJRT -> AOT JAX+Pallas
-//! artifacts, with the §V-A prefetch pipeline on.
+//! community graph for a few hundred steps through the session API's
+//! `reference` backend, logging the loss curve and periodic full-graph
+//! accuracy.  Exercises every layer of the stack on a real workload: Rust
+//! sampling/coordination -> PJRT -> AOT JAX+Pallas artifacts, with the
+//! §V-A prefetch pipeline on.
 //!
 //! Run: `make artifacts && cargo run --release --example train_e2e`
 
-use scalegnn::sampling::SamplerKind;
-use scalegnn::trainer::{train, TrainConfig};
+use scalegnn::session::{self, BackendKind, LogObserver, RunSpec, StepObserver};
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args()
@@ -17,11 +17,10 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
 
-    let mut cfg = TrainConfig::quick("e2e_big", SamplerKind::ScaleGnnUniform);
-    cfg.max_steps = steps;
-    cfg.lr = 3e-3;
-    cfg.verbose = true;
-    cfg.eval_every_epochs = 2;
+    let spec = RunSpec::new(BackendKind::Reference, "e2e_big")
+        .steps(steps)
+        .lr(3e-3)
+        .eval_every(2);
 
     println!("== ScaleGNN end-to-end driver ==");
     println!("dataset e2e_big: 65536 vertices, ~1M edges, d_in=256, 32 classes");
@@ -29,8 +28,10 @@ fn main() -> anyhow::Result<()> {
     println!("running {steps} steps (batch 1024, prefetch on)\n");
 
     let t0 = std::time::Instant::now();
-    let report = train(&cfg)?;
+    let mut obs: Vec<Box<dyn StepObserver>> = vec![Box::new(LogObserver::every(0))];
+    let run = session::run(&spec, &mut obs)?;
     let wall = t0.elapsed().as_secs_f64();
+    let report = run.trainer.as_ref().expect("reference backend returns a trainer report");
 
     println!("\nloss curve:");
     for (step, loss) in &report.loss_curve {
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         wall,
         report.train_time_s,
         report.eval_time_s,
-        report.train_time_s / report.steps as f64 * 1e3,
+        report.train_time_s / report.steps.max(1) as f64 * 1e3,
     );
     println!(
         "per-step breakdown: sample-wait {:.2} ms, pack {:.2} ms, exec {:.2} ms",

@@ -592,6 +592,98 @@ fn main() {
     }
 
     e2e_overlap_section();
+    session_overhead_section();
 
     write_kernel_json(&records);
+}
+
+/// Session-API overhead: the same tiny PMM run through the legacy direct
+/// rank-thread loop and through `session::run`, emitting
+/// `BENCH_session.json`.  The session layer adds only spec validation at
+/// prepare time and one channel send per step, so the per-step medians
+/// must agree within noise (asserted loosely downstream, recorded here).
+fn session_overhead_section() {
+    use scalegnn::model::GcnDims;
+    use scalegnn::pmm::{PmmCtx, PmmGcn};
+    use scalegnn::session::{self, BackendKind, RunSpec};
+    use scalegnn::util::json::{arr_f64, obj, Json};
+
+    let grid = Grid4D::new(1, 2, 2, 2);
+    let steps = 30u64;
+    let reps = 5usize;
+
+    let legacy_run = || -> f64 {
+        // timer covers dataset load + world setup + run, matching what
+        // session::run's prepare() does on the other side
+        let t0 = std::time::Instant::now();
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        let ds = datasets::spec("tiny").unwrap();
+        let dims = GcnDims {
+            d_in: ds.planted.d_in,
+            d_h: 16,
+            d_out: ds.planted.classes,
+            layers: 2,
+            dropout: 0.0,
+            weight_decay: 0.0,
+        };
+        let batch = ds.batch;
+        let world = Arc::new(CommWorld::new(grid));
+        let mut handles = vec![];
+        for r in 0..grid.world_size() {
+            let w = world.clone();
+            let d = data.clone();
+            handles.push(std::thread::spawn(move || {
+                let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+                let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+                for s in 0..steps {
+                    std::hint::black_box(eng.train_step(s, 5e-3).loss);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed().as_secs_f64() / steps as f64
+    };
+    let session_run = || -> f64 {
+        let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 2, 2)
+            .model(16, 2, 0.0)
+            .steps(steps)
+            .lr(5e-3);
+        let t0 = std::time::Instant::now();
+        let report = session::run_silent(&spec).unwrap();
+        std::hint::black_box(report.final_loss);
+        t0.elapsed().as_secs_f64() / steps as f64
+    };
+
+    let mut legacy = Vec::with_capacity(reps);
+    let mut sess = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        legacy.push(legacy_run());
+        sess.push(session_run());
+    }
+    let lm = median(&legacy);
+    let sm = median(&sess);
+    println!(
+        "session entry overhead: legacy {} vs session {} per step ({:+.1}%)",
+        fmt_time(lm),
+        fmt_time(sm),
+        (sm - lm) / lm * 100.0
+    );
+    let doc = obj(vec![
+        (
+            "what",
+            Json::from("tiny PMM engine, 1x2x2x2 grid, 30 steps/run, 5 runs each entry"),
+        ),
+        ("legacy_step_s_median", Json::from(lm)),
+        ("session_step_s_median", Json::from(sm)),
+        ("overhead_frac", Json::from((sm - lm) / lm)),
+        ("legacy_step_s_samples", arr_f64(&legacy)),
+        ("session_step_s_samples", arr_f64(&sess)),
+    ]);
+    match std::fs::write("BENCH_session.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_session.json\n"),
+        Err(e) => eprintln!("could not write BENCH_session.json: {e}\n"),
+    }
 }

@@ -18,6 +18,7 @@ pub mod runtime;
 pub mod graph;
 pub mod grid;
 pub mod sampling;
+pub mod session;
 pub mod sim;
 pub mod trainer;
 pub mod tensor;

@@ -1,7 +1,13 @@
 //! ScaleGNN launcher: the Layer-3 leader entrypoint.
 //!
+//! Every subcommand is a thin flag-to-[`RunSpec`] mapping over the unified
+//! session API (`session::run`); `scalegnn run --spec FILE.json` is the
+//! canonical entry point.
+//!
 //! ```text
 //! scalegnn info
+//! scalegnn run        --spec FILE.json [--stats-json F] [--jsonl F]
+//!                     [--log-every N] [--quiet]
 //! scalegnn train      --dataset products_sim [--sampler scalegnn|sage|saint]
 //!                     [--dp N] [--epochs E | --steps S] [--target-acc A]
 //!                     [--lr F] [--no-prefetch] [--overlap on|off] [--verbose]
@@ -22,19 +28,18 @@
 //! ```
 
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::comm::Precision;
 use scalegnn::graph::{datasets, partition_2d};
-use scalegnn::grid::{Axis, Grid4D};
-use scalegnn::pmm::{PmmCtx, PmmGcn};
 use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
+use scalegnn::session::{
+    self, BackendKind, GridSpec, JsonlObserver, LogObserver, ModelSpec, RunReport, RunSpec,
+    StepObserver,
+};
 use scalegnn::sim;
-use scalegnn::trainer::{self, TrainConfig};
 use scalegnn::util::cli::Args;
-use scalegnn::util::json::{obj, Json};
 use scalegnn::util::stats::fmt_time;
 
 fn main() {
@@ -48,6 +53,7 @@ fn main() {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let r = match sub.as_str() {
         "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
         "train" => cmd_train(&args),
         "pack" => cmd_pack(&args),
         "pmm-train" => cmd_pmm_train(&args),
@@ -74,6 +80,8 @@ USAGE: scalegnn <command> [options]
 
 COMMANDS:
   info        show artifacts, models and datasets
+  run         execute a RunSpec JSON file through the unified session API
+              (the canonical entry point; see examples/specs/)
   train       mini-batch training via the PJRT artifacts (fused or DP);
               with --from-store FILE.pallas: out-of-core pure-Rust training
   pack        serialize a dataset into a .pallas out-of-core container
@@ -85,6 +93,12 @@ COMMANDS:
   breakdown   projected epoch-time breakdown (Figs. 5/8)
   e2e         projected end-to-end time-to-accuracy vs baselines (Fig. 6)
 
+Every command maps its flags onto a session::RunSpec and calls
+session::run.  `scalegnn run --spec FILE.json` executes a saved spec
+directly: --jsonl F streams one JSON object per step, --stats-json F
+writes {"spec", "report"} (self-identifying), --log-every N / --quiet
+control stderr logging.
+
 §V-D overlap: train/pmm-train accept --overlap on|off (nonblocking chunked
 collectives; pmm-train reports the measured hidden-comm fraction per axis,
 --stats-json FILE writes it).  The sim commands accept --overlap on|off and
@@ -94,86 +108,35 @@ executed 8-rank engine run instead of the default constant).
 Run `cargo bench` to regenerate every paper table/figure.
 ";
 
-fn artifacts_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.str_or("artifacts", "artifacts"))
-}
-
-/// Parse `--overlap on|off` (§V-D communication/computation overlap;
-/// default on).
-fn overlap_of(args: &Args) -> Result<bool> {
-    match args.str_or("overlap", "on").as_str() {
-        "on" | "true" | "1" => Ok(true),
-        "off" | "false" | "0" => Ok(false),
-        other => Err(anyhow!("--overlap must be on|off, got '{other}'")),
+/// Stderr observers for a subcommand: a `LogObserver` printing every
+/// `every`-th step (0 = eval/final only) when `--verbose` was given,
+/// nothing otherwise.
+fn flag_observers(args: &Args, every: u64) -> Vec<Box<dyn StepObserver>> {
+    if args.flag("verbose") || args.flag("v") {
+        vec![Box::new(LogObserver::every(every))]
+    } else {
+        Vec::new()
     }
 }
 
-/// §V-D hide fraction for the sim commands: `--hide-frac F` overrides,
-/// `--calibrate-overlap` measures it by executing a short multi-rank run
-/// on the rank-thread engine, otherwise the calibration default is used.
-fn hide_frac_of(args: &Args) -> Result<f64> {
-    if let Some(f) = args.get::<f64>("hide-frac").map_err(|e| anyhow!(e))? {
-        if !(0.0..=1.0).contains(&f) {
-            bail!("--hide-frac must be in [0, 1], got {f}");
-        }
-        return Ok(f);
+/// Write `{"spec": ..., "report": ...}` when `--stats-json FILE` was
+/// given — the spec makes the file self-identifying (dataset, grid,
+/// overlap, precision, ...).
+fn write_stats_json(args: &Args, spec: &RunSpec, report: &RunReport) -> Result<()> {
+    if let Some(path) = args.path_opt("stats-json") {
+        let doc = scalegnn::util::json::obj(vec![
+            ("spec", spec.to_json()),
+            ("report", report.to_json()),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n")
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {}", path.display());
     }
-    if args.flag("calibrate-overlap") {
-        let f = measure_overlap_hide_frac(8)?;
-        println!("calibrated §V-D hide fraction from an executed 8-rank engine run: {f:.3}");
-        return Ok(f);
-    }
-    Ok(sim::DEFAULT_OVERLAP_HIDE_FRAC)
-}
-
-/// Execute a short 8-rank PMM training run (tiny dataset, 1x2x2x2 grid)
-/// with overlap on and return the measured TP hidden-communication
-/// fraction — the executed calibration feeding `sim::scalegnn_epoch_with`
-/// in place of the guessed constant.
-fn measure_overlap_hide_frac(steps: u64) -> Result<f64> {
-    let grid = Grid4D::new(1, 2, 2, 2);
-    let data = Arc::new(datasets::load("tiny").ok_or_else(|| anyhow!("tiny dataset missing"))?);
-    let spec = datasets::spec("tiny").unwrap();
-    let batch = spec.batch;
-    let dims = dims_for("tiny", 0.0);
-    let world = Arc::new(CommWorld::new(grid));
-    let mut handles = vec![];
-    for r in 0..grid.world_size() {
-        let w = world.clone();
-        let d = data.clone();
-        handles.push(std::thread::spawn(move || {
-            let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
-            let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
-            for s in 0..steps {
-                eng.train_step(s, 5e-3);
-            }
-        }));
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow!("calibration rank panicked"))?;
-    }
-    Ok(world.tp_hidden_fraction())
-}
-
-/// Model dims for a dataset (mirrors the artifact configurations).
-fn dims_for(dataset: &str, dropout: f32) -> scalegnn::model::GcnDims {
-    let spec = datasets::spec(dataset).expect("known dataset");
-    let (d_h, layers) = match dataset {
-        "tiny" => (16, 2),
-        "e2e_big" => (512, 4),
-        _ => (128, 3),
-    };
-    scalegnn::model::GcnDims {
-        d_in: spec.planted.d_in,
-        d_h,
-        d_out: spec.planted.classes,
-        layers,
-        dropout,
-        weight_decay: 0.0,
-    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    args.check_known("info", &["artifacts"], &[]).map_err(|e| anyhow!(e))?;
     println!("== datasets ==");
     for s in datasets::registry() {
         println!(
@@ -181,7 +144,8 @@ fn cmd_info(args: &Args) -> Result<()> {
             s.name, s.planted.n, s.planted.classes, s.planted.d_in, s.batch, s.paper.n
         );
     }
-    match scalegnn::runtime::Runtime::open(&artifacts_dir(args)) {
+    match scalegnn::runtime::Runtime::open(&PathBuf::from(args.str_or("artifacts", "artifacts")))
+    {
         Ok(rt) => {
             println!("== artifacts ({}) ==", rt.platform());
             let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
@@ -196,7 +160,95 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `scalegnn run --spec FILE.json`: execute a saved spec.
+fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(
+        "run",
+        &["spec", "stats-json", "jsonl", "log-every"],
+        &["quiet"],
+    )
+    .map_err(|e| anyhow!(e))?;
+    let path = args
+        .path_opt("spec")
+        .ok_or_else(|| anyhow!("run requires --spec FILE.json (see examples/specs/)"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let spec = RunSpec::from_json_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut obs: Vec<Box<dyn StepObserver>> = Vec::new();
+    if !args.flag("quiet") {
+        let every = args.get_or("log-every", 1u64).map_err(|e| anyhow!(e))?;
+        obs.push(Box::new(LogObserver::every(every)));
+    }
+    if let Some(p) = args.path_opt("jsonl") {
+        obs.push(Box::new(
+            JsonlObserver::create(&p).map_err(|e| anyhow!("creating {}: {e}", p.display()))?,
+        ));
+    }
+    let report = session::run(&spec, &mut obs)?;
+    write_stats_json(args, &spec, &report)?;
+    print_summary(&report);
+    Ok(())
+}
+
+/// Human-readable end-of-run summary of any backend's report.
+fn print_summary(report: &RunReport) {
+    if let Some(t) = &report.trainer {
+        println!(
+            "steps={} epochs={} train={} eval={} loss={:.4} best_val={:.4} best_test={:.4}",
+            t.steps,
+            t.epochs,
+            fmt_time(t.train_time_s),
+            fmt_time(t.eval_time_s),
+            t.final_loss,
+            t.best_val_acc,
+            t.best_test_acc
+        );
+        if let Some(tt) = t.time_to_target_s {
+            println!("time-to-target: {}", fmt_time(tt));
+        }
+    }
+    if let Some(o) = &report.ooc {
+        println!(
+            "steps={} train={} loss={:.4} train-acc={:.4} sample-wait {}",
+            o.steps,
+            fmt_time(o.train_time_s),
+            o.final_loss,
+            o.final_train_acc,
+            fmt_time(o.sample_wait_s)
+        );
+    }
+    if let Some(p) = &report.pmm {
+        println!(
+            "final loss {:.4} acc {:.4}  ({} steps in {})",
+            report.final_loss,
+            p.final_acc,
+            report.steps,
+            fmt_time(report.wall_s)
+        );
+        if let Some((val, test)) = p.eval {
+            println!("full-graph eval: val {val:.4} test {test:.4}");
+        }
+    }
+    if let Some(s) = &report.sim {
+        println!(
+            "projected on {} (hide={:.2}): {} points",
+            s.machine,
+            s.hide_frac,
+            s.points.len()
+        );
+        for pt in &s.points {
+            println!(
+                "  Gd={:<3} devices={:<5} epoch {:.1} ms",
+                pt.gd,
+                pt.devices,
+                pt.breakdown.total() * 1e3
+            );
+        }
+    }
+}
+
 fn cmd_pack(args: &Args) -> Result<()> {
+    args.check_known("pack", &["dataset", "out"], &[]).map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "papers100m_ooc");
     let out = args
         .path_opt("out")
@@ -216,45 +268,58 @@ fn cmd_pack(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Out-of-core training (`train --from-store`): pure-Rust reference model
-/// fed by mini-batches read through the store's bounded block cache.
+/// Out-of-core training (`train --from-store`): OOC backend of the
+/// session API (pure-Rust reference model fed through the store's bounded
+/// block cache).
 fn cmd_train_ooc(args: &Args, store: PathBuf) -> Result<()> {
     // the OOC path trains the pure-Rust reference GCN with uniform
-    // sampling only; reject PJRT-trainer options instead of ignoring them
-    for opt in ["sampler", "dp", "epochs", "target-acc", "eval-every-epochs"] {
-        if args.str_opt(opt).is_some() {
-            bail!("--{opt} is not supported with --from-store (see `scalegnn help`)");
+    // sampling only; PJRT-trainer options are rejected by check_known
+    args.check_known(
+        "train --from-store",
+        &[
+            "from-store", "dataset", "cache-mb", "batch", "d-h", "layers", "steps", "lr", "seed",
+        ],
+        &["no-prefetch", "verbose", "v"],
+    )
+    .map_err(|e| anyhow!(e))?;
+    let dataset = match args.str_opt("dataset") {
+        Some(d) => d.to_string(),
+        None => {
+            // resolve the registry dataset from the store's source tag;
+            // this extra open is header-only cost (the block cache reads
+            // lazily), and the backend re-opens through open_or_pack
+            let g = scalegnn::graph::store::OocGraph::open(&store, 1 << 20)?;
+            datasets::registry()
+                .iter()
+                .find(|s| scalegnn::graph::store::name_tag(s.name) == g.source_tag)
+                .map(|s| s.name.to_string())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "store {} was not packed from a registry dataset; pass --dataset",
+                        store.display()
+                    )
+                })?
         }
-    }
-    if args.flag("bf16") {
-        bail!("--bf16 is not supported with --from-store");
-    }
-    let mut cfg = trainer::OocTrainConfig::quick(store);
-    cfg.dataset = args.str_opt("dataset").map(str::to_string);
-    cfg.cache_bytes = args.get_or("cache-mb", 64usize).map_err(|e| anyhow!(e))? << 20;
-    cfg.batch = args.get_or("batch", 1024).map_err(|e| anyhow!(e))?;
-    cfg.d_h = args.get_or("d-h", 128).map_err(|e| anyhow!(e))?;
-    cfg.layers = args.get_or("layers", 3).map_err(|e| anyhow!(e))?;
-    cfg.steps = args.get_or("steps", 50).map_err(|e| anyhow!(e))?;
-    cfg.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
-    cfg.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
-    cfg.prefetch = !args.flag("no-prefetch");
-    cfg.verbose = args.flag("verbose") || args.flag("v");
+    };
+    let store_display = store.display().to_string();
+    let mut spec = RunSpec::new(BackendKind::Ooc, &dataset).store(store);
+    spec.cache_mb = args.get_or("cache-mb", 64usize).map_err(|e| anyhow!(e))?;
+    spec.batch = Some(args.get_or("batch", 1024).map_err(|e| anyhow!(e))?);
+    spec.model.d_h = args.get_or("d-h", 128).map_err(|e| anyhow!(e))?;
+    spec.model.layers = args.get_or("layers", 3).map_err(|e| anyhow!(e))?;
+    spec.model.dropout = 0.0;
+    spec.steps = args.get_or("steps", 50).map_err(|e| anyhow!(e))?;
+    spec.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
+    spec.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
+    spec.prefetch = !args.flag("no-prefetch");
     println!(
-        "out-of-core training from {} (cache budget {} MiB, prefetch={})",
-        cfg.store.display(),
-        cfg.cache_bytes >> 20,
-        cfg.prefetch
+        "out-of-core training from {store_display} (cache budget {} MiB, prefetch={})",
+        spec.cache_mb, spec.prefetch
     );
-    let r = trainer::train_from_store(&cfg)?;
-    println!(
-        "steps={} train={} loss={:.4} train-acc={:.4} sample-wait {}",
-        r.steps,
-        fmt_time(r.train_time_s),
-        r.final_loss,
-        r.final_train_acc,
-        fmt_time(r.sample_wait_s)
-    );
+    let mut obs = flag_observers(args, 1); // OOC has no eval steps: log each step
+    let report = session::run(&spec, &mut obs)?;
+    print_summary(&report);
+    let r = report.ooc.as_ref().expect("ooc backend returns an ooc report");
     println!(
         "store {} bytes; cache resident {} / budget {} bytes ({} hits / {} misses)",
         r.store_bytes, r.cache_resident_bytes, r.cache_budget_bytes, r.cache_hits, r.cache_misses
@@ -266,42 +331,43 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(store) = args.path_opt("from-store") {
         return cmd_train_ooc(args, store);
     }
+    args.check_known(
+        "train",
+        &[
+            "dataset", "sampler", "dp", "epochs", "steps", "target-acc", "lr", "seed", "overlap",
+            "artifacts", "eval-every-epochs",
+        ],
+        &["no-prefetch", "verbose", "v"],
+    )
+    .map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "products_sim");
-    let sampler = SamplerKind::parse(&args.str_or("sampler", "scalegnn"))
-        .ok_or_else(|| anyhow!("unknown sampler"))?;
-    let mut cfg = TrainConfig::quick(&dataset, sampler);
-    cfg.artifacts = artifacts_dir(args);
-    cfg.dp = args.get_or("dp", 1).map_err(|e| anyhow!(e))?;
-    cfg.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
-    cfg.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
-    cfg.max_steps = args.get_or("steps", 0).map_err(|e| anyhow!(e))?;
-    cfg.max_epochs = args.get_or("epochs", 20).map_err(|e| anyhow!(e))?;
-    cfg.prefetch = !args.flag("no-prefetch");
-    cfg.overlap = overlap_of(args)?;
-    cfg.verbose = args.flag("verbose") || args.flag("v");
+    let sampler_name = args.str_or("sampler", "scalegnn");
+    let sampler = SamplerKind::parse(&sampler_name).ok_or_else(|| {
+        anyhow!("--sampler must be scalegnn|graphsage|graphsaint, got '{sampler_name}'")
+    })?;
+    let mut spec = RunSpec::new(BackendKind::Reference, &dataset).sampler(sampler);
+    spec.artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    spec.grid.gd = args.get_or("dp", 1).map_err(|e| anyhow!(e))?;
+    spec.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
+    spec.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
+    spec.steps = args.get_or("steps", 0).map_err(|e| anyhow!(e))?;
+    spec.epochs = args.get_or("epochs", 20).map_err(|e| anyhow!(e))?;
+    spec.prefetch = !args.flag("no-prefetch");
+    spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
+    spec.eval_every_epochs = args.get_or("eval-every-epochs", 1).map_err(|e| anyhow!(e))?;
     if let Some(t) = args.get::<f32>("target-acc").map_err(|e| anyhow!(e))? {
-        cfg.target_acc = Some(t);
+        spec.target_acc = Some(t);
     }
     println!(
         "training {dataset} with {} sampling, dp={}, prefetch={}",
         sampler.name(),
-        cfg.dp,
-        cfg.prefetch
+        spec.grid.gd,
+        spec.prefetch
     );
-    let r = trainer::train(&cfg)?;
-    println!(
-        "steps={} epochs={} train={} eval={} loss={:.4} best_val={:.4} best_test={:.4}",
-        r.steps,
-        r.epochs,
-        fmt_time(r.train_time_s),
-        fmt_time(r.eval_time_s),
-        r.final_loss,
-        r.best_val_acc,
-        r.best_test_acc
-    );
-    if let Some(t) = r.time_to_target_s {
-        println!("time-to-target: {}", fmt_time(t));
-    }
+    let mut obs = flag_observers(args, 0); // per-epoch eval lines, as before
+    let report = session::run(&spec, &mut obs)?;
+    print_summary(&report);
+    let r = report.trainer.as_ref().expect("reference backend returns a trainer report");
     println!(
         "per-step: sample-wait {} pack {} exec {} dp {}",
         fmt_time(r.breakdown.sample_wait_s),
@@ -313,162 +379,98 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_pmm_train(args: &Args) -> Result<()> {
+    args.check_known(
+        "pmm-train",
+        &[
+            "dataset", "grid", "steps", "lr", "seed", "batch", "d-h", "layers", "dropout",
+            "overlap", "stats-json",
+        ],
+        &["bf16", "verbose", "v"],
+    )
+    .map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "tiny");
-    let grid = Grid4D::parse(&args.str_or("grid", "1x2x2x2"))
-        .ok_or_else(|| anyhow!("bad --grid"))?;
-    let steps: u64 = args.get_or("steps", 20).map_err(|e| anyhow!(e))?;
-    let lr: f32 = args.get_or("lr", 5e-3).map_err(|e| anyhow!(e))?;
-    let prec = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
-    let overlap = overlap_of(args)?;
-    let data = Arc::new(datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?);
-    let spec = datasets::spec(&dataset).unwrap();
-    let dims = dims_for(&dataset, 0.5);
-    let batch = spec.batch;
-    println!(
-        "4D PMM training {dataset} on grid {}x{}x{}x{} ({} rank threads), {prec:?}, overlap={}",
-        grid.gd,
-        grid.gx,
-        grid.gy,
-        grid.gz,
-        grid.world_size(),
-        if overlap { "on" } else { "off" }
-    );
-    let world = Arc::new(CommWorld::new(grid));
-    let t0 = std::time::Instant::now();
-    let mut handles = vec![];
-    for r in 0..grid.world_size() {
-        let w = world.clone();
-        let d = data.clone();
-        handles.push(std::thread::spawn(move || {
-            let ctx = PmmCtx::new(grid, r, &w, prec);
-            let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
-            eng.set_overlap(overlap);
-            let mut out = (0.0, 0.0);
-            for s in 0..steps {
-                let o = eng.train_step(s, lr);
-                out = (o.loss, o.acc);
-            }
-            (out, eng.timers)
-        }));
+    let mut spec = RunSpec::new(BackendKind::Pmm, &dataset);
+    spec.grid = GridSpec::parse(&args.str_or("grid", "1x2x2x2")).map_err(|e| anyhow!(e))?;
+    spec.model = ModelSpec::for_dataset(&dataset, 0.5);
+    spec.model.d_h = args.get_or("d-h", spec.model.d_h).map_err(|e| anyhow!(e))?;
+    spec.model.layers = args.get_or("layers", spec.model.layers).map_err(|e| anyhow!(e))?;
+    spec.model.dropout = args.get_or("dropout", spec.model.dropout).map_err(|e| anyhow!(e))?;
+    spec.steps = args.get_or("steps", 20).map_err(|e| anyhow!(e))?;
+    spec.lr = args.get_or("lr", 5e-3).map_err(|e| anyhow!(e))?;
+    spec.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
+    if let Some(b) = args.get::<usize>("batch").map_err(|e| anyhow!(e))? {
+        spec.batch = Some(b);
     }
-    let mut timers = scalegnn::pmm::PmmTimers::default();
-    let mut last = (0.0, 0.0);
-    for h in handles {
-        let ((l, a), t) = h.join().unwrap();
-        timers.add(&t);
-        last = (l, a);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let n = grid.world_size() as f64;
+    spec.precision = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
+    spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
     println!(
-        "final loss {:.4} acc {:.4}  ({} steps in {})",
-        last.0,
-        last.1,
-        steps,
-        fmt_time(wall)
+        "4D PMM training {dataset} on grid {} ({} rank threads), {:?}, overlap={}",
+        spec.grid.to_string(),
+        spec.grid.world_size(),
+        spec.precision,
+        if spec.overlap { "on" } else { "off" }
     );
+    let mut obs = flag_observers(args, 1);
+    let report = session::run(&spec, &mut obs)?;
+    print_summary(&report);
+    let p = report.pmm.as_ref().expect("pmm backend returns a pmm report");
+    let t = &p.timers_mean;
     println!(
         "per-rank mean: sampling {} spmm {} gemm {} elementwise {} tp_comm {} dp_comm {} reshard {}",
-        fmt_time(timers.sampling / n),
-        fmt_time(timers.spmm / n),
-        fmt_time(timers.gemm / n),
-        fmt_time(timers.elementwise / n),
-        fmt_time(timers.tp_comm / n),
-        fmt_time(timers.dp_comm / n),
-        fmt_time(timers.reshard / n),
+        fmt_time(t.sampling),
+        fmt_time(t.spmm),
+        fmt_time(t.gemm),
+        fmt_time(t.elementwise),
+        fmt_time(t.tp_comm),
+        fmt_time(t.dp_comm),
+        fmt_time(t.reshard),
     );
-    let axes = [(Axis::X, "x"), (Axis::Y, "y"), (Axis::Z, "z"), (Axis::Dp, "dp")];
     print!("measured hidden-comm fraction (§V-D):");
-    for (ax, name) in axes {
-        print!(" {name}={:.2}", world.hidden_fraction(ax));
+    for ax in &p.axes {
+        print!(" {}={:.2}", ax.axis, ax.hidden_frac);
     }
-    println!("  (tp aggregate {:.3})", world.tp_hidden_fraction());
-    if let Some(path) = args.path_opt("stats-json") {
-        let mut ax_objs = Vec::new();
-        for (ax, name) in axes {
-            let (ops, bytes) = world.stats(ax);
-            let (comm_s, blocked_s) = world.timing(ax);
-            ax_objs.push(obj(vec![
-                ("axis", Json::from(name)),
-                ("ops", Json::from(ops as usize)),
-                ("bytes", Json::from(bytes as usize)),
-                ("comm_s", Json::from(comm_s)),
-                ("blocked_s", Json::from(blocked_s)),
-                ("hidden_frac", Json::from(world.hidden_fraction(ax))),
-            ]));
-        }
-        let gridspec = format!("{}x{}x{}x{}", grid.gd, grid.gx, grid.gy, grid.gz);
-        let doc = obj(vec![
-            ("dataset", Json::from(dataset.as_str())),
-            ("grid", Json::from(gridspec.as_str())),
-            ("steps", Json::from(steps as usize)),
-            ("overlap", Json::Bool(overlap)),
-            ("precision", Json::from(if args.flag("bf16") { "bf16" } else { "fp32" })),
-            ("wall_s", Json::from(wall)),
-            ("final_loss", Json::from(last.0 as f64)),
-            ("final_acc", Json::from(last.1 as f64)),
-            ("tp_hidden_frac", Json::from(world.tp_hidden_fraction())),
-            ("axes", Json::Arr(ax_objs)),
-            (
-                "per_rank_mean_s",
-                obj(vec![
-                    ("sampling", Json::from(timers.sampling / n)),
-                    ("spmm", Json::from(timers.spmm / n)),
-                    ("gemm", Json::from(timers.gemm / n)),
-                    ("elementwise", Json::from(timers.elementwise / n)),
-                    ("tp_comm", Json::from(timers.tp_comm / n)),
-                    ("dp_comm", Json::from(timers.dp_comm / n)),
-                    ("reshard", Json::from(timers.reshard / n)),
-                ]),
-            ),
-        ]);
-        std::fs::write(&path, doc.to_string() + "\n")
-            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
-        println!("wrote {}", path.display());
-    }
+    println!("  (tp aggregate {:.3})", p.tp_hidden_frac);
+    write_stats_json(args, &spec, &report)?;
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    args.check_known("eval", &["dataset", "grid"], &[]).map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "tiny");
-    let grid =
-        Grid4D::parse(&args.str_or("grid", "2x2x2")).ok_or_else(|| anyhow!("bad --grid"))?;
-    let data = Arc::new(datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?);
-    let spec = datasets::spec(&dataset).unwrap();
-    let dims = dims_for(&dataset, 0.0);
-    let world = Arc::new(CommWorld::new(grid));
-    let t0 = std::time::Instant::now();
-    let mut handles = vec![];
-    for r in 0..grid.world_size() {
-        let w = world.clone();
-        let d = data.clone();
-        handles.push(std::thread::spawn(move || {
-            let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
-            let mut eng = PmmGcn::new(ctx, dims, spec.batch, d, 42);
-            eng.eval_full_graph()
-        }));
-    }
-    let mut accs = (0.0, 0.0);
-    for h in handles {
-        accs = h.join().unwrap();
-    }
+    let mut spec = RunSpec::new(BackendKind::Pmm, &dataset);
+    spec.grid = GridSpec::parse(&args.str_or("grid", "2x2x2")).map_err(|e| anyhow!(e))?;
+    spec.model = ModelSpec::for_dataset(&dataset, 0.0);
+    spec.steps = 0;
+    spec.final_eval = true;
+    let report = session::run_silent(&spec)?;
+    let (val, test) = report
+        .pmm
+        .as_ref()
+        .and_then(|p| p.eval)
+        .ok_or_else(|| anyhow!("evaluation produced no result"))?;
     println!(
         "distributed full-graph eval on {} ranks: val {:.4} test {:.4} in {}",
-        grid.world_size(),
-        accs.0,
-        accs.1,
-        fmt_time(t0.elapsed().as_secs_f64())
+        spec.grid.world_size(),
+        val,
+        test,
+        fmt_time(report.wall_s)
     );
     Ok(())
 }
 
 fn cmd_sample(args: &Args) -> Result<()> {
+    args.check_known(
+        "sample",
+        &["dataset", "grid", "steps", "from-store", "cache-mb", "batch"],
+        &[],
+    )
+    .map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "products_sim");
     let steps: u64 = args.get_or("steps", 50).map_err(|e| anyhow!(e))?;
     let gridspec = args.str_or("grid", "2x2");
     let parts: Vec<usize> = gridspec.split('x').filter_map(|p| p.parse().ok()).collect();
     if parts.len() != 2 {
-        bail!("--grid must be RxC, e.g. 2x2");
+        bail!("--grid must be RxC, e.g. 2x2 (got '{gridspec}')");
     }
     // From a .pallas store each shard is extracted independently through
     // GraphAccess — a real rank would materialize only its own block.  This
@@ -533,61 +535,95 @@ fn cmd_sample(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn machine_of(args: &Args) -> Result<sim::Machine> {
-    sim::by_name(&args.str_or("machine", "perlmutter"))
-        .ok_or_else(|| anyhow!("unknown machine"))
+/// Measured §V-D hide fraction: execute a short 8-rank PMM run (tiny
+/// dataset, 1x2x2x2 grid, overlap on) through the session API and return
+/// the TP hidden-communication fraction — the executed calibration feeding
+/// the sim backend in place of the guessed constant.
+fn calibrated_hide_frac() -> Result<f64> {
+    let mut spec = RunSpec::new(BackendKind::Pmm, "tiny");
+    spec.grid = GridSpec { gd: 1, gx: 2, gy: 2, gz: 2 };
+    spec.model = ModelSpec::for_dataset("tiny", 0.0);
+    spec.steps = 8;
+    spec.lr = 5e-3;
+    let report = session::run_silent(&spec)?;
+    Ok(report.pmm.expect("pmm backend returns a pmm report").tp_hidden_frac)
 }
 
+/// Map the shared sim-command flags (`--machine`, `--overlap`,
+/// `--hide-frac` / `--calibrate-overlap`) onto a sim-backend spec over
+/// `gd_sweep`.
+fn sim_spec(args: &Args, dataset: &str, gd_sweep: Vec<usize>) -> Result<RunSpec> {
+    let machine = args.str_or("machine", "perlmutter");
+    let hide = match args.get::<f64>("hide-frac").map_err(|e| anyhow!(e))? {
+        Some(f) => Some(f),
+        None if args.flag("calibrate-overlap") => {
+            let f = calibrated_hide_frac()?;
+            println!(
+                "calibrated §V-D hide fraction from an executed 8-rank engine run: {f:.3}"
+            );
+            Some(f)
+        }
+        None => None,
+    };
+    let (x, y, z) = sim::base_grid_for(dataset);
+    let mut spec = RunSpec::new(BackendKind::Sim, dataset).sim(&machine, hide, gd_sweep);
+    spec.grid = GridSpec { gd: 1, gx: x, gy: y, gz: z };
+    spec.model = ModelSpec { d_h: 128, layers: 3, dropout: 0.0 };
+    spec.precision = Precision::Bf16; // §V-B is on in the paper projections
+    spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
+    Ok(spec)
+}
+
+const SIM_OPTS: [&str; 4] = ["dataset", "machine", "overlap", "hide-frac"];
+const SIM_FLAGS: [&str; 1] = ["calibrate-overlap"];
+
 fn cmd_scaling(args: &Args) -> Result<()> {
+    args.check_known("scaling", &SIM_OPTS, &SIM_FLAGS).map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "papers100m_sim");
-    let m = machine_of(args)?;
-    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
-    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
-    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
-    let hide = hide_frac_of(args)?;
     let (x, y, z) = sim::base_grid_for(&dataset);
     let base = x * y * z;
+    let sweep: Vec<usize> =
+        [1usize, 2, 4, 8, 16, 32, 64].into_iter().filter(|gd| base * gd <= 2048).collect();
+    let spec = sim_spec(args, &dataset, sweep)?;
+    let report = session::run_silent(&spec)?;
+    let s = report.sim.as_ref().expect("sim backend returns a sim report");
     println!(
-        "strong scaling: {dataset} on {} (3D grid {x}x{y}x{z}, growing Gd, overlap={} hide={hide:.2})",
-        m.name,
-        if opts.overlap { "on" } else { "off" }
+        "strong scaling: {dataset} on {} (3D grid {x}x{y}x{z}, growing Gd, overlap={} hide={:.2})",
+        s.machine,
+        if spec.overlap { "on" } else { "off" },
+        s.hide_frac
     );
     println!("{:>8} {:>6} {:>14} {:>9}", "devices", "Gd", "epoch (ms)", "speedup");
-    let mut first = None;
-    for gd in [1usize, 2, 4, 8, 16, 32, 64] {
-        let gpus = base * gd;
-        if gpus > 2048 {
-            break;
-        }
-        let t = sim::scalegnn_epoch_with(&w, &m, Grid4D::new(gd, x, y, z), opts, hide).total();
-        let f = *first.get_or_insert(t);
-        println!("{:>8} {:>6} {:>14.1} {:>8.1}x", gpus, gd, t * 1e3, f / t);
+    let first = s.points.first().map(|p| p.breakdown.total()).unwrap_or(f64::NAN);
+    for p in &s.points {
+        let t = p.breakdown.total();
+        println!("{:>8} {:>6} {:>14.1} {:>8.1}x", p.devices, p.gd, t * 1e3, first / t);
     }
     Ok(())
 }
 
 fn cmd_breakdown(args: &Args) -> Result<()> {
+    args.check_known("breakdown", &SIM_OPTS, &SIM_FLAGS).map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "products14m_sim");
-    let m = machine_of(args)?;
-    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
-    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
-    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
-    let hide = hide_frac_of(args)?;
     let (x, y, z) = sim::base_grid_for(&dataset);
+    let spec = sim_spec(args, &dataset, vec![1, 2, 4, 8, 16, 32])?;
+    let report = session::run_silent(&spec)?;
+    let s = report.sim.as_ref().expect("sim backend returns a sim report");
     println!(
-        "epoch breakdown: {dataset} on {} ({x}x{y}x{z} per group, overlap={} hide={hide:.2})",
-        m.name,
-        if opts.overlap { "on" } else { "off" }
+        "epoch breakdown: {dataset} on {} ({x}x{y}x{z} per group, overlap={} hide={:.2})",
+        s.machine,
+        if spec.overlap { "on" } else { "off" },
+        s.hide_frac
     );
     println!(
         "{:>4} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
         "Gd", "total ms", "sampling", "spmm+gemm", "elemwise", "tp_comm", "dp_comm", "other"
     );
-    for gd in [1usize, 2, 4, 8, 16, 32] {
-        let b = sim::scalegnn_epoch_with(&w, &m, Grid4D::new(gd, x, y, z), opts, hide);
+    for p in &s.points {
+        let b = &p.breakdown;
         println!(
             "{:>4} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
-            gd,
+            p.gd,
             b.total() * 1e3,
             b.sampling * 1e3,
             (b.spmm + b.gemm) * 1e3,
@@ -601,12 +637,30 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
+    args.check_known("e2e", &SIM_OPTS, &SIM_FLAGS).map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "products_sim");
-    let m = machine_of(args)?;
-    let spec = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset"))?;
-    let w = sim::Workload::from_spec(&spec, 128.0, 3.0);
-    let opts = sim::OptFlags { overlap: overlap_of(args)?, ..sim::OptFlags::ALL };
-    let hide = hide_frac_of(args)?;
+    let machine_name = args.str_or("machine", "perlmutter");
+    let m = sim::by_name(&machine_name).ok_or_else(|| {
+        anyhow!("unknown machine '{machine_name}' (accepted: perlmutter, frontier, tuolumne)")
+    })?;
+    let spec_ds = datasets::spec(&dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
+    let w = sim::Workload::from_spec(&spec_ds, 128.0, 3.0);
+    let gpus_list = [4usize, 8, 16, 32, 64];
+    // ScaleGNN's column comes from one sim-backend session over the
+    // device counts the dataset's fixed 3D base divides
+    let valid: Vec<(usize, usize)> = gpus_list
+        .iter()
+        .filter_map(|&g| sim::grid_for(&dataset, g).map(|gr| (g, gr.gd)))
+        .collect();
+    let mut scalegnn_s: std::collections::BTreeMap<usize, f64> = Default::default();
+    if !valid.is_empty() {
+        let spec = sim_spec(args, &dataset, valid.iter().map(|v| v.1).collect())?;
+        let report = session::run_silent(&spec)?;
+        let s = report.sim.as_ref().expect("sim backend returns a sim report");
+        for (&(gpus, _), p) in valid.iter().zip(&s.points) {
+            scalegnn_s.insert(gpus, p.breakdown.total());
+        }
+    }
     println!(
         "end-to-end time-to-accuracy: {dataset} on {} (log-scale in the paper)",
         m.name
@@ -616,15 +670,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         print!(" {:>12}", fw.name());
     }
     println!();
-    for gpus in [4usize, 8, 16, 32, 64] {
+    for gpus in gpus_list {
         print!("{:>8}", gpus);
         for fw in sim::Framework::all() {
             let t = if fw == sim::Framework::ScaleGnn {
-                match sim::grid_for(&dataset, gpus) {
-                    Some(g) => {
-                        sim::scalegnn_epoch_with(&w, &m, g, opts, hide).total()
-                            * sim::epochs_to_target(fw, &dataset, gpus)
-                    }
+                match scalegnn_s.get(&gpus) {
+                    Some(&epoch) => epoch * sim::epochs_to_target(fw, &dataset, gpus),
                     None => f64::NAN,
                 }
             } else if m.name != "Perlmutter" && !fw.supports_rocm() {

@@ -1,0 +1,490 @@
+//! The four [`Backend`] implementations wrapping the existing engines.
+//!
+//! Each backend turns a validated [`RunSpec`] into a [`Session`] that
+//! yields one [`StepReport`] per step.  The training backends run the
+//! legacy entry points (`trainer::train_with_progress`,
+//! `trainer::train_from_store_with_progress`, the rank-thread PMM loop)
+//! on worker threads and stream their [`trainer::StepEvent`]s — the
+//! engines themselves are untouched, so a session run is bitwise
+//! identical to the legacy entry point for the same spec
+//! (`tests/session.rs` asserts this).
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::CommWorld;
+use crate::graph::datasets;
+use crate::grid::{Axis, Grid4D};
+use crate::model::GcnDims;
+use crate::pmm::{PmmCtx, PmmGcn, PmmTimers};
+use crate::sim;
+use crate::trainer::{self, OocTrainConfig, OocTrainReport, StepEvent, TrainConfig, TrainReport};
+use crate::util::json::{obj, Json};
+
+use super::report::{
+    breakdown_json, AxisStats, PmmRunReport, RunReport, SimPoint, SimRunReport, StepReport,
+};
+use super::spec::{BackendKind, DataSource, RunSpec};
+
+/// A prepared, steppable run.
+pub trait Session {
+    /// Execute (or receive) the next step; `Ok(None)` when the session
+    /// has no steps to stream (e.g. an evaluation-only run).
+    fn step(&mut self) -> Result<Option<StepReport>>;
+    /// Drain the backend and assemble the final [`RunReport`]
+    /// (`wall_s` is stamped by [`super::run`]).
+    fn finish(self: Box<Self>) -> Result<RunReport>;
+}
+
+/// A spec-to-session factory; one implementation per [`BackendKind`].
+pub trait Backend {
+    /// The kind this backend executes.
+    fn kind(&self) -> BackendKind;
+    /// Validate-adjacent setup: build the engine(s) for `spec` and return
+    /// the steppable session.
+    fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>>;
+}
+
+/// The backend registered for `kind`.
+pub fn backend_for(kind: BackendKind) -> &'static dyn Backend {
+    match kind {
+        BackendKind::Reference => &ReferenceBackend,
+        BackendKind::Ooc => &OocBackend,
+        BackendKind::Pmm => &PmmBackend,
+        BackendKind::Sim => &SimBackend,
+    }
+}
+
+/// Translate a streamed [`StepEvent`] into the public [`StepReport`].
+fn event_report(ev: StepEvent) -> StepReport {
+    let detail = match ev.eval {
+        Some((val, test)) => obj(vec![
+            ("val", Json::from(val as f64)),
+            ("test", Json::from(test as f64)),
+        ]),
+        None => Json::Null,
+    };
+    StepReport {
+        step: ev.step,
+        loss: ev.loss,
+        acc: ev.acc,
+        wall_s: ev.wall_s,
+        done: ev.done,
+        detail,
+    }
+}
+
+/// Receive the next event from a worker thread, surfacing the worker's
+/// error (or panic) when the stream ends without a final event.
+fn recv_event<R>(
+    rx: &Receiver<StepEvent>,
+    handle: &mut Option<JoinHandle<Result<R>>>,
+    what: &str,
+) -> Result<StepReport> {
+    match rx.recv() {
+        Ok(ev) => Ok(event_report(ev)),
+        Err(_) => {
+            let h = handle
+                .take()
+                .ok_or_else(|| anyhow!("{what} worker already joined"))?;
+            match h.join() {
+                Ok(Ok(_)) => bail!("{what} worker ended without a final step event"),
+                Ok(Err(e)) => Err(e),
+                Err(_) => bail!("{what} worker thread panicked"),
+            }
+        }
+    }
+}
+
+fn join_worker<R>(handle: Option<JoinHandle<Result<R>>>, what: &str) -> Result<R> {
+    handle
+        .ok_or_else(|| anyhow!("{what} worker already joined"))?
+        .join()
+        .map_err(|_| anyhow!("{what} worker thread panicked"))?
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend (PJRT trainer)
+// ---------------------------------------------------------------------------
+
+/// `trainer::train` behind the session API.
+struct ReferenceBackend;
+
+struct ReferenceSession {
+    rx: Receiver<StepEvent>,
+    handle: Option<JoinHandle<Result<TrainReport>>>,
+}
+
+/// Build the legacy `TrainConfig` a spec maps onto (public-in-crate so the
+/// bitwise-identity tests compare against exactly this mapping).
+pub fn train_config(spec: &RunSpec) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(&spec.dataset, spec.sampler);
+    cfg.dp = spec.grid.gd;
+    cfg.lr = spec.lr;
+    cfg.seed = spec.seed;
+    cfg.prefetch = spec.prefetch;
+    cfg.artifacts = spec.artifacts.clone();
+    cfg.max_steps = spec.steps;
+    cfg.max_epochs = spec.epochs;
+    cfg.target_acc = spec.target_acc;
+    cfg.eval_every_epochs = spec.eval_every_epochs.max(1);
+    cfg.bf16_dp = spec.precision == crate::comm::Precision::Bf16;
+    cfg.overlap = spec.overlap;
+    cfg.verbose = false; // observers replace verbose printing
+    cfg
+}
+
+impl Backend for ReferenceBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Reference
+    }
+
+    fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
+        let cfg = train_config(spec);
+        let (tx, rx) = channel();
+        // PJRT clients are per-thread; the whole legacy entry point moves
+        // to a coordinator thread and streams its group-0 events back
+        let handle = std::thread::spawn(move || trainer::train_with_progress(&cfg, Some(tx)));
+        Ok(Box::new(ReferenceSession { rx, handle: Some(handle) }))
+    }
+}
+
+impl Session for ReferenceSession {
+    fn step(&mut self) -> Result<Option<StepReport>> {
+        recv_event(&self.rx, &mut self.handle, "reference").map(Some)
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<RunReport> {
+        let r = join_worker(self.handle.take(), "reference")?;
+        Ok(RunReport {
+            backend: Some(BackendKind::Reference),
+            steps: r.steps,
+            final_loss: r.final_loss,
+            loss_curve: r.loss_curve.clone(),
+            trainer: Some(r),
+            ..RunReport::default()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core backend
+// ---------------------------------------------------------------------------
+
+/// `trainer::train_from_store` behind the session API.
+struct OocBackend;
+
+struct OocSession {
+    rx: Receiver<StepEvent>,
+    handle: Option<JoinHandle<Result<OocTrainReport>>>,
+}
+
+/// Build the legacy `OocTrainConfig` a spec maps onto.
+pub fn ooc_config(spec: &RunSpec) -> OocTrainConfig {
+    let store = match &spec.source {
+        DataSource::Ooc { store } => store.clone(),
+        DataSource::Mem => unreachable!("validate() rejects a mem source on the ooc backend"),
+    };
+    let mut cfg = OocTrainConfig::quick(store);
+    cfg.dataset = Some(spec.dataset.clone());
+    cfg.cache_bytes = spec.cache_mb << 20;
+    cfg.batch = spec.batch.unwrap_or(cfg.batch);
+    cfg.d_h = spec.model.d_h;
+    cfg.layers = spec.model.layers;
+    cfg.steps = spec.steps;
+    cfg.lr = spec.lr;
+    cfg.seed = spec.seed;
+    cfg.prefetch = spec.prefetch;
+    cfg.verbose = false;
+    cfg
+}
+
+impl Backend for OocBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Ooc
+    }
+
+    fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
+        let cfg = ooc_config(spec);
+        let (tx, rx) = channel();
+        let handle =
+            std::thread::spawn(move || trainer::train_from_store_with_progress(&cfg, Some(tx)));
+        Ok(Box::new(OocSession { rx, handle: Some(handle) }))
+    }
+}
+
+impl Session for OocSession {
+    fn step(&mut self) -> Result<Option<StepReport>> {
+        recv_event(&self.rx, &mut self.handle, "ooc").map(Some)
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<RunReport> {
+        let r = join_worker(self.handle.take(), "ooc")?;
+        Ok(RunReport {
+            backend: Some(BackendKind::Ooc),
+            steps: r.steps,
+            final_loss: r.final_loss,
+            loss_curve: r.loss_curve.clone(),
+            ooc: Some(r),
+            ..RunReport::default()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PMM backend (rank-thread 4D engine)
+// ---------------------------------------------------------------------------
+
+/// The rank-thread 4D PMM engine behind the session API.
+struct PmmBackend;
+
+type PmmRankOut = (PmmTimers, (f32, f32), Option<(f32, f32)>);
+
+struct PmmSession {
+    rx: Receiver<StepEvent>,
+    handles: Vec<JoinHandle<PmmRankOut>>,
+    world: Arc<CommWorld>,
+    ranks: usize,
+    steps: u64,
+    loss_curve: Vec<(u64, f32)>,
+}
+
+/// The reference-model dims a spec maps onto for the PMM engine.
+pub fn pmm_dims(spec: &RunSpec) -> GcnDims {
+    let ds = datasets::spec(&spec.dataset).expect("validate() checked the dataset");
+    GcnDims {
+        d_in: ds.planted.d_in,
+        d_h: spec.model.d_h,
+        d_out: ds.planted.classes,
+        layers: spec.model.layers,
+        dropout: spec.model.dropout,
+        weight_decay: 0.0,
+    }
+}
+
+impl Backend for PmmBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pmm
+    }
+
+    fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
+        let grid = Grid4D::from(spec.grid);
+        let data = Arc::new(
+            datasets::load(&spec.dataset)
+                .ok_or_else(|| anyhow!("unknown dataset {}", spec.dataset))?,
+        );
+        let ds = datasets::spec(&spec.dataset).unwrap();
+        let dims = pmm_dims(spec);
+        let batch = spec.batch.unwrap_or(ds.batch);
+        let (steps, lr, seed) = (spec.steps, spec.lr, spec.seed);
+        let (prec, overlap, final_eval) = (spec.precision, spec.overlap, spec.final_eval);
+        let world = Arc::new(CommWorld::new(grid));
+        let (tx, rx) = channel();
+        let mut handles = Vec::with_capacity(grid.world_size());
+        for r in 0..grid.world_size() {
+            let w = world.clone();
+            let d = data.clone();
+            let tx = if r == 0 { Some(tx.clone()) } else { None };
+            handles.push(std::thread::spawn(move || -> PmmRankOut {
+                let ctx = PmmCtx::new(grid, r, &w, prec);
+                let mut eng = PmmGcn::new(ctx, dims, batch, d, seed);
+                eng.set_overlap(overlap);
+                let mut last = (0.0f32, 0.0f32);
+                for s in 0..steps {
+                    let t0 = Instant::now();
+                    let o = eng.train_step(s, lr);
+                    last = (o.loss, o.acc);
+                    if let Some(tx) = &tx {
+                        let _ = tx.send(StepEvent {
+                            step: s,
+                            loss: o.loss,
+                            acc: o.acc,
+                            wall_s: t0.elapsed().as_secs_f64(),
+                            eval: None,
+                            done: s + 1 == steps,
+                        });
+                    }
+                }
+                let eval = final_eval.then(|| eng.eval_full_graph());
+                (eng.timers, last, eval)
+            }));
+        }
+        Ok(Box::new(PmmSession {
+            rx,
+            handles,
+            world,
+            ranks: grid.world_size(),
+            steps,
+            loss_curve: Vec::new(),
+        }))
+    }
+}
+
+impl Session for PmmSession {
+    fn step(&mut self) -> Result<Option<StepReport>> {
+        if self.steps == 0 {
+            // evaluation-only session: no training steps to stream
+            return Ok(None);
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                self.loss_curve.push((ev.step, ev.loss));
+                Ok(Some(event_report(ev)))
+            }
+            Err(_) => bail!("a pmm rank thread panicked before finishing its steps"),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> Result<RunReport> {
+        let this = *self;
+        let mut timers = PmmTimers::default();
+        let mut last = None;
+        let mut eval = None;
+        for h in this.handles {
+            let (t, l, e) = h.join().map_err(|_| anyhow!("pmm rank thread panicked"))?;
+            timers.add(&t);
+            // rank 0 joins first; keep ITS values so final_loss/final_acc
+            // agree with the streamed loss_curve (DP groups draw distinct
+            // batches, so other ranks report different losses)
+            last.get_or_insert(l);
+            eval = eval.or(e);
+        }
+        let last = last.unwrap_or((f32::NAN, f32::NAN));
+        let n = this.ranks as f64;
+        let timers_mean = PmmTimers {
+            sampling: timers.sampling / n,
+            spmm: timers.spmm / n,
+            gemm: timers.gemm / n,
+            elementwise: timers.elementwise / n,
+            tp_comm: timers.tp_comm / n,
+            dp_comm: timers.dp_comm / n,
+            reshard: timers.reshard / n,
+            other: timers.other / n,
+        };
+        let axes = [(Axis::X, "x"), (Axis::Y, "y"), (Axis::Z, "z"), (Axis::Dp, "dp")]
+            .into_iter()
+            .map(|(ax, name)| {
+                let (ops, bytes) = this.world.stats(ax);
+                let (comm_s, blocked_s) = this.world.timing(ax);
+                AxisStats {
+                    axis: name,
+                    ops,
+                    bytes,
+                    comm_s,
+                    blocked_s,
+                    hidden_frac: this.world.hidden_fraction(ax),
+                }
+            })
+            .collect();
+        Ok(RunReport {
+            backend: Some(BackendKind::Pmm),
+            steps: this.loss_curve.len() as u64,
+            final_loss: last.0,
+            loss_curve: this.loss_curve,
+            pmm: Some(PmmRunReport {
+                final_acc: last.1,
+                timers_mean,
+                axes,
+                tp_hidden_frac: this.world.tp_hidden_fraction(),
+                eval,
+            }),
+            ..RunReport::default()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim backend (analytical projections)
+// ---------------------------------------------------------------------------
+
+/// `sim::scalegnn_epoch_with` behind the session API: one step per
+/// `gd_sweep` entry.
+struct SimBackend;
+
+struct SimSession {
+    w: sim::Workload,
+    machine: sim::Machine,
+    opts: sim::OptFlags,
+    hide_frac: f64,
+    base: (usize, usize, usize),
+    sweep: Vec<usize>,
+    i: usize,
+    points: Vec<SimPoint>,
+}
+
+impl Backend for SimBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
+        let s = spec.sim.as_ref().expect("validate() requires the sim section");
+        let ds = datasets::spec(&spec.dataset)
+            .ok_or_else(|| anyhow!("unknown dataset {}", spec.dataset))?;
+        let machine = sim::by_name(&s.machine)
+            .ok_or_else(|| anyhow!("unknown machine {}", s.machine))?;
+        Ok(Box::new(SimSession {
+            w: sim::Workload::from_spec(&ds, spec.model.d_h as f64, spec.model.layers as f64),
+            machine,
+            opts: sim::OptFlags {
+                prefetch: spec.prefetch,
+                bf16: spec.precision == crate::comm::Precision::Bf16,
+                fusion: true,
+                overlap: spec.overlap,
+            },
+            hide_frac: s.hide_frac.unwrap_or(sim::DEFAULT_OVERLAP_HIDE_FRAC),
+            base: (spec.grid.gx, spec.grid.gy, spec.grid.gz),
+            sweep: s.gd_sweep.clone(),
+            i: 0,
+            points: Vec::new(),
+        }))
+    }
+}
+
+impl Session for SimSession {
+    fn step(&mut self) -> Result<Option<StepReport>> {
+        if self.i >= self.sweep.len() {
+            return Ok(None);
+        }
+        let (x, y, z) = self.base;
+        let gd = self.sweep[self.i];
+        let grid = Grid4D::new(gd, x, y, z);
+        let b = sim::scalegnn_epoch_with(&self.w, &self.machine, grid, self.opts, self.hide_frac);
+        let point = SimPoint { gd, devices: grid.world_size(), breakdown: b };
+        let detail = obj(vec![
+            ("gd", Json::from(gd)),
+            ("devices", Json::from(point.devices)),
+            ("breakdown", breakdown_json(&b)),
+        ]);
+        self.points.push(point);
+        let report = StepReport {
+            step: self.i as u64,
+            loss: f32::NAN,
+            acc: f32::NAN,
+            wall_s: b.total(),
+            done: self.i + 1 == self.sweep.len(),
+            detail,
+        };
+        self.i += 1;
+        Ok(Some(report))
+    }
+
+    fn finish(self: Box<Self>) -> Result<RunReport> {
+        let this = *self;
+        Ok(RunReport {
+            backend: Some(BackendKind::Sim),
+            steps: this.points.len() as u64,
+            final_loss: f32::NAN,
+            sim: Some(SimRunReport {
+                machine: this.machine.name.to_string(),
+                hide_frac: this.hide_frac,
+                points: this.points,
+            }),
+            ..RunReport::default()
+        })
+    }
+}

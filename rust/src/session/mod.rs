@@ -1,0 +1,77 @@
+//! The unified session API: one [`RunSpec`], one [`run`] entry point,
+//! streaming [`StepObserver`]s across every engine.
+//!
+//! ```text
+//!   RunSpec ──validate()──► Backend::prepare() ──► Session
+//!      │                                             │ step()*
+//!      └──to_json/from_json (shareable artifact)     ▼
+//!                                        StepReport ──► StepObserver(s)
+//!                                                       (Log / Jsonl / Null)
+//!                                             │ finish()
+//!                                             ▼
+//!                                         RunReport
+//! ```
+//!
+//! The repo's four ways of training/projecting the §III–§V pipeline — the
+//! PJRT reference trainer, the out-of-core trainer, the rank-thread 4D
+//! PMM engine and the analytical simulator — sit behind one front door:
+//! build a [`RunSpec`] (or load one with [`RunSpec::from_json`]), pick
+//! observers, call [`run`].  The legacy entry points remain as thin
+//! internals and a session run is bitwise identical to them for the same
+//! spec (`tests/session.rs`).
+
+mod backends;
+pub mod observer;
+pub mod report;
+pub mod spec;
+
+pub use backends::{backend_for, ooc_config, pmm_dims, train_config, Backend, Session};
+pub use observer::{JsonlObserver, LogObserver, NullObserver, StepObserver};
+pub use report::{
+    AxisStats, PmmRunReport, RunReport, SimPoint, SimRunReport, StepReport,
+};
+pub use spec::{
+    sampler_tag, BackendKind, DataSource, GridSpec, ModelSpec, RunSpec, SimSpec, SpecError,
+    MAX_RANK_THREADS,
+};
+
+use anyhow::{bail, Result};
+
+/// Validate `spec`, prepare its backend, step it to completion streaming
+/// every [`StepReport`] through `observers`, and return the final
+/// [`RunReport`].  The canonical entry point behind `scalegnn run --spec`
+/// and all the subcommands/examples.
+pub fn run(spec: &RunSpec, observers: &mut [Box<dyn StepObserver>]) -> Result<RunReport> {
+    if let Err(errs) = spec.validate() {
+        let msgs: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        bail!("invalid spec: {}", msgs.join("; "));
+    }
+    let t0 = std::time::Instant::now();
+    let mut sess = backend_for(spec.backend).prepare(spec)?;
+    for o in observers.iter_mut() {
+        o.on_start(spec);
+    }
+    loop {
+        let Some(r) = sess.step()? else {
+            break; // nothing (left) to stream, e.g. an evaluation-only run
+        };
+        let done = r.done;
+        for o in observers.iter_mut() {
+            o.on_step(&r);
+        }
+        if done {
+            break;
+        }
+    }
+    let mut report = sess.finish()?;
+    report.wall_s = t0.elapsed().as_secs_f64();
+    for o in observers.iter_mut() {
+        o.on_finish(&report);
+    }
+    Ok(report)
+}
+
+/// [`run`] with no observers (tests / programmatic use).
+pub fn run_silent(spec: &RunSpec) -> Result<RunReport> {
+    run(spec, &mut [])
+}

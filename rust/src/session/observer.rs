@@ -1,0 +1,163 @@
+//! `StepObserver`: streaming run telemetry.
+//!
+//! Observers replace the scattered `verbose` printing and ad-hoc
+//! `--stats-json` plumbing the entry points used to carry: every backend
+//! emits one [`StepReport`] per step through [`super::run`], and the
+//! observers decide what to do with it — log it ([`LogObserver`]), append
+//! it to a JSONL file ([`JsonlObserver`]) or drop it ([`NullObserver`]).
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::report::{RunReport, StepReport};
+use super::spec::RunSpec;
+
+/// Streaming callbacks over one session run.  All methods default to
+/// no-ops so an observer implements only what it needs.
+pub trait StepObserver {
+    /// The spec was validated and the backend prepared.
+    fn on_start(&mut self, _spec: &RunSpec) {}
+    /// One step (or one projected point on the sim backend) finished.
+    fn on_step(&mut self, _report: &StepReport) {}
+    /// The session finished; `report` is the final aggregate.
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// Drops every event.
+pub struct NullObserver;
+
+impl StepObserver for NullObserver {}
+
+/// Human-readable stderr logging (the old `--verbose` behaviour).
+pub struct LogObserver {
+    /// Print one line every `every` steps.  Steps that evaluated and the
+    /// final step always print; `0` prints **only** those (plus
+    /// start/finish).
+    pub every: u64,
+}
+
+impl LogObserver {
+    /// Log every step.
+    pub fn every_step() -> LogObserver {
+        LogObserver { every: 1 }
+    }
+
+    /// Log every `every`-th step (eval and final steps always print;
+    /// 0 = only those).
+    pub fn every(every: u64) -> LogObserver {
+        LogObserver { every }
+    }
+}
+
+impl StepObserver for LogObserver {
+    fn on_start(&mut self, spec: &RunSpec) {
+        let work = if let Some(s) = &spec.sim {
+            format!("{} sweep points", s.gd_sweep.len())
+        } else if spec.steps > 0 {
+            format!("{} steps", spec.steps)
+        } else if spec.final_eval {
+            "evaluation only".to_string()
+        } else {
+            format!("{} epochs", spec.epochs)
+        };
+        eprintln!(
+            "[session] {} backend, dataset {}, grid {}, {work}",
+            spec.backend.tag(),
+            spec.dataset,
+            spec.grid.to_string(),
+        );
+    }
+
+    fn on_step(&mut self, r: &StepReport) {
+        let eval = r.detail.get("val").is_some();
+        let periodic = self.every > 0 && (r.step + 1) % self.every == 0;
+        if !(periodic || eval || r.done) {
+            return;
+        }
+        let mut line = format!("[session] step {:>6}", r.step + 1);
+        if r.loss.is_finite() {
+            line.push_str(&format!(" loss {:.4}", r.loss));
+        }
+        if r.acc.is_finite() {
+            line.push_str(&format!(" acc {:.4}", r.acc));
+        }
+        if let (Some(v), Some(t)) = (
+            r.detail.get("val").and_then(Json::as_f64),
+            r.detail.get("test").and_then(Json::as_f64),
+        ) {
+            line.push_str(&format!(" val {v:.4} test {t:.4}"));
+        }
+        line.push_str(&format!(" ({:.1} ms)", r.wall_s * 1e3));
+        eprintln!("{line}");
+    }
+
+    fn on_finish(&mut self, r: &RunReport) {
+        eprintln!(
+            "[session] finished: {} steps in {:.2}s, final loss {:.4}",
+            r.steps, r.wall_s, r.final_loss
+        );
+    }
+}
+
+/// Machine-readable JSONL stream: one `{"event": "start" | "step" |
+/// "finish", ...}` object per line (replaces the ad-hoc `--stats-json`
+/// plumbing; the `finish` line carries the whole [`RunReport`]).
+///
+/// Write failures (full disk, revoked path) do not abort the run — the
+/// first one is reported on stderr and the stream stops.
+pub struct JsonlObserver {
+    out: std::io::BufWriter<std::fs::File>,
+    path: std::path::PathBuf,
+    failed: bool,
+}
+
+impl JsonlObserver {
+    /// Create/truncate `path` and stream events into it.
+    pub fn create(path: &Path) -> std::io::Result<JsonlObserver> {
+        Ok(JsonlObserver {
+            out: std::io::BufWriter::new(std::fs::File::create(path)?),
+            path: path.to_path_buf(),
+            failed: false,
+        })
+    }
+
+    fn emit(&mut self, event: &str, mut fields: Vec<(&str, Json)>) {
+        if self.failed {
+            return;
+        }
+        let mut all = vec![("event", Json::from(event))];
+        all.append(&mut fields);
+        if let Err(e) = writeln!(self.out, "{}", crate::util::json::obj(all).to_string()) {
+            self.fail(&e);
+        }
+    }
+
+    fn fail(&mut self, e: &std::io::Error) {
+        self.failed = true;
+        eprintln!(
+            "warning: jsonl stream {} failed ({e}); the event log is incomplete",
+            self.path.display()
+        );
+    }
+}
+
+impl StepObserver for JsonlObserver {
+    fn on_start(&mut self, spec: &RunSpec) {
+        self.emit("start", vec![("spec", spec.to_json())]);
+    }
+
+    fn on_step(&mut self, r: &StepReport) {
+        self.emit("step", vec![("report", r.to_json())]);
+    }
+
+    fn on_finish(&mut self, r: &RunReport) {
+        self.emit("finish", vec![("report", r.to_json())]);
+        if !self.failed {
+            if let Err(e) = self.out.flush() {
+                self.fail(&e);
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Step and run reports shared by every backend.
+
+use crate::pmm::PmmTimers;
+use crate::sim::EpochBreakdown;
+use crate::trainer::{OocTrainReport, TrainReport};
+use crate::util::json::{arr_f64, obj, Json};
+
+use super::spec::BackendKind;
+
+/// One streamed step result (one projected grid point on the sim
+/// backend).
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// 0-based step index.
+    pub step: u64,
+    /// Training loss (NaN where not applicable, e.g. sim).
+    pub loss: f32,
+    /// Sampled train accuracy (NaN where the backend does not measure it).
+    pub acc: f32,
+    /// Measured wall-clock of this step — projected epoch seconds on the
+    /// sim backend.
+    pub wall_s: f64,
+    /// Whether this was the last step of the run.
+    pub done: bool,
+    /// Backend-specific extras (reference: `val`/`test` at evals; sim:
+    /// the per-component breakdown).
+    pub detail: Json,
+}
+
+impl StepReport {
+    /// JSON encoding (JSONL streaming / `--stats-json`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("step", Json::from(self.step as usize)),
+            ("wall_s", Json::from(self.wall_s)),
+            ("done", Json::Bool(self.done)),
+        ];
+        if self.loss.is_finite() {
+            fields.push(("loss", Json::from(self.loss as f64)));
+        }
+        if self.acc.is_finite() {
+            fields.push(("acc", Json::from(self.acc as f64)));
+        }
+        if self.detail != Json::Null {
+            fields.push(("detail", self.detail.clone()));
+        }
+        obj(fields)
+    }
+}
+
+/// Per-axis communication statistics of a PMM run (§V-D measurements).
+#[derive(Clone, Debug, Default)]
+pub struct AxisStats {
+    /// Axis name: `x`, `y`, `z` or `dp`.
+    pub axis: &'static str,
+    /// Collective operations issued on the axis.
+    pub ops: u64,
+    /// Payload bytes moved on the axis.
+    pub bytes: u64,
+    /// Issue→completion seconds over nonblocking-issued ops.
+    pub comm_s: f64,
+    /// Seconds a rank actually blocked waiting.
+    pub blocked_s: f64,
+    /// Measured hidden-communication fraction.
+    pub hidden_frac: f64,
+}
+
+/// Aggregate result of a PMM-backend run.
+#[derive(Clone, Debug, Default)]
+pub struct PmmRunReport {
+    /// Sampled train accuracy of the final step.
+    pub final_acc: f32,
+    /// Per-rank mean phase timers.
+    pub timers_mean: PmmTimers,
+    /// Per-axis comm statistics (order: x, y, z, dp).
+    pub axes: Vec<AxisStats>,
+    /// Aggregate TP hidden fraction (feeds `sim::scalegnn_epoch_with`).
+    pub tp_hidden_frac: f64,
+    /// Final distributed full-graph (val, test) accuracy, when requested.
+    pub eval: Option<(f32, f32)>,
+}
+
+/// One projected point of a sim-backend run.
+#[derive(Clone, Debug)]
+pub struct SimPoint {
+    /// Data-parallel groups at this point.
+    pub gd: usize,
+    /// Total devices (`gd * gx * gy * gz`).
+    pub devices: usize,
+    /// Projected per-epoch component times.
+    pub breakdown: EpochBreakdown,
+}
+
+/// Aggregate result of a sim-backend run.
+#[derive(Clone, Debug, Default)]
+pub struct SimRunReport {
+    /// Machine profile name.
+    pub machine: String,
+    /// §V-D hide fraction the projection used.
+    pub hide_frac: f64,
+    /// One point per sweep entry.
+    pub points: Vec<SimPoint>,
+}
+
+/// Final aggregate of a session run.  The typed per-backend sections are
+/// `Some` exactly for the backend that ran.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Backend that executed (`None` only for `Default`).
+    pub backend: Option<BackendKind>,
+    /// Steps executed.
+    pub steps: u64,
+    /// Total wall-clock of the run.
+    pub wall_s: f64,
+    /// Loss of the final step (NaN on sim).
+    pub final_loss: f32,
+    /// (step, loss) curve — per-epoch on the reference backend, per-step
+    /// on OOC/PMM, empty on sim.
+    pub loss_curve: Vec<(u64, f32)>,
+    /// Reference-backend report.
+    pub trainer: Option<TrainReport>,
+    /// OOC-backend report.
+    pub ooc: Option<OocTrainReport>,
+    /// PMM-backend report.
+    pub pmm: Option<PmmRunReport>,
+    /// Sim-backend report.
+    pub sim: Option<SimRunReport>,
+}
+
+/// JSON encoding of a breakdown (shared by sim step details and reports).
+pub fn breakdown_json(b: &EpochBreakdown) -> Json {
+    obj(vec![
+        ("total_s", Json::from(b.total())),
+        ("sampling_s", Json::from(b.sampling)),
+        ("spmm_s", Json::from(b.spmm)),
+        ("gemm_s", Json::from(b.gemm)),
+        ("elementwise_s", Json::from(b.elementwise)),
+        ("tp_comm_s", Json::from(b.tp_comm)),
+        ("dp_comm_s", Json::from(b.dp_comm)),
+        ("other_s", Json::from(b.other)),
+    ])
+}
+
+impl RunReport {
+    /// JSON encoding (the `finish` line of [`super::JsonlObserver`], the
+    /// `run --stats-json` payload).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            (
+                "backend",
+                self.backend.map(|b| Json::from(b.tag())).unwrap_or(Json::Null),
+            ),
+            ("steps", Json::from(self.steps as usize)),
+            ("wall_s", Json::from(self.wall_s)),
+        ];
+        if self.final_loss.is_finite() {
+            fields.push(("final_loss", Json::from(self.final_loss as f64)));
+        }
+        if !self.loss_curve.is_empty() {
+            fields.push((
+                "loss_curve",
+                Json::Arr(
+                    self.loss_curve
+                        .iter()
+                        .map(|&(s, l)| {
+                            Json::Arr(vec![Json::from(s as usize), Json::from(l as f64)])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(t) = &self.trainer {
+            fields.push((
+                "trainer",
+                obj(vec![
+                    ("epochs", Json::from(t.epochs)),
+                    ("train_time_s", Json::from(t.train_time_s)),
+                    ("eval_time_s", Json::from(t.eval_time_s)),
+                    ("best_val_acc", Json::from(t.best_val_acc as f64)),
+                    ("best_test_acc", Json::from(t.best_test_acc as f64)),
+                    (
+                        "time_to_target_s",
+                        t.time_to_target_s.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "per_step_s",
+                        arr_f64(&[
+                            t.breakdown.sample_wait_s,
+                            t.breakdown.pack_s,
+                            t.breakdown.exec_s,
+                            t.breakdown.dp_comm_s,
+                        ]),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(o) = &self.ooc {
+            fields.push((
+                "ooc",
+                obj(vec![
+                    ("final_train_acc", Json::from(o.final_train_acc as f64)),
+                    ("sample_wait_s", Json::from(o.sample_wait_s)),
+                    ("store_bytes", Json::from(o.store_bytes as usize)),
+                    ("cache_resident_bytes", Json::from(o.cache_resident_bytes)),
+                    ("cache_budget_bytes", Json::from(o.cache_budget_bytes)),
+                    ("cache_hits", Json::from(o.cache_hits as usize)),
+                    ("cache_misses", Json::from(o.cache_misses as usize)),
+                ]),
+            ));
+        }
+        if let Some(p) = &self.pmm {
+            let axes = p
+                .axes
+                .iter()
+                .map(|a| {
+                    obj(vec![
+                        ("axis", Json::from(a.axis)),
+                        ("ops", Json::from(a.ops as usize)),
+                        ("bytes", Json::from(a.bytes as usize)),
+                        ("comm_s", Json::from(a.comm_s)),
+                        ("blocked_s", Json::from(a.blocked_s)),
+                        ("hidden_frac", Json::from(a.hidden_frac)),
+                    ])
+                })
+                .collect();
+            let t = &p.timers_mean;
+            let mut pf = vec![
+                ("final_acc", Json::from(p.final_acc as f64)),
+                ("tp_hidden_frac", Json::from(p.tp_hidden_frac)),
+                ("axes", Json::Arr(axes)),
+                (
+                    "per_rank_mean_s",
+                    obj(vec![
+                        ("sampling", Json::from(t.sampling)),
+                        ("spmm", Json::from(t.spmm)),
+                        ("gemm", Json::from(t.gemm)),
+                        ("elementwise", Json::from(t.elementwise)),
+                        ("tp_comm", Json::from(t.tp_comm)),
+                        ("dp_comm", Json::from(t.dp_comm)),
+                        ("reshard", Json::from(t.reshard)),
+                    ]),
+                ),
+            ];
+            if let Some((v, te)) = p.eval {
+                pf.push(("eval_val", Json::from(v as f64)));
+                pf.push(("eval_test", Json::from(te as f64)));
+            }
+            fields.push(("pmm", obj(pf)));
+        }
+        if let Some(s) = &self.sim {
+            fields.push((
+                "sim",
+                obj(vec![
+                    ("machine", Json::from(s.machine.as_str())),
+                    ("hide_frac", Json::from(s.hide_frac)),
+                    (
+                        "points",
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|p| {
+                                    obj(vec![
+                                        ("gd", Json::from(p.gd)),
+                                        ("devices", Json::from(p.devices)),
+                                        ("breakdown", breakdown_json(&p.breakdown)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        obj(fields)
+    }
+}

@@ -1,0 +1,976 @@
+//! `RunSpec`: the single typed description of a ScaleGNN run.
+//!
+//! A spec names a backend (reference trainer / out-of-core trainer / 4D
+//! PMM engine / analytical simulator), a dataset source, the sampler, the
+//! model dimensions, the 4D grid, precision and the §V toggles.  It
+//! cross-validates ([`RunSpec::validate`] returns every violation as a
+//! structured [`SpecError`]) and round-trips losslessly through
+//! `util::json` ([`RunSpec::to_json`] / [`RunSpec::from_json`]) so runs
+//! are shareable, diffable artifacts (`scalegnn run --spec FILE.json`).
+
+use std::path::PathBuf;
+
+use crate::comm::Precision;
+use crate::graph::datasets;
+use crate::grid::Grid4D;
+use crate::sampling::SamplerKind;
+use crate::sim;
+use crate::util::json::{obj, Json};
+
+/// Which engine executes the spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT reference trainer (`trainer::train`): fused or DP artifacts,
+    /// in-memory dataset.
+    Reference,
+    /// Out-of-core pure-Rust trainer (`trainer::train_from_store`): the
+    /// graph/features stay on disk behind the `.pallas` block cache.
+    Ooc,
+    /// Rank-thread 4D PMM engine (`pmm::PmmGcn`): pure Rust, executes the
+    /// sharded collectives for real.
+    Pmm,
+    /// Analytical projection (`sim::scalegnn_epoch_with`) at paper scale.
+    Sim,
+}
+
+impl BackendKind {
+    /// Parse a backend tag; the error names the accepted values.
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        match s {
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "ooc" => Ok(BackendKind::Ooc),
+            "pmm" => Ok(BackendKind::Pmm),
+            "sim" => Ok(BackendKind::Sim),
+            other => Err(format!(
+                "unknown backend '{other}' (accepted: reference, ooc, pmm, sim)"
+            )),
+        }
+    }
+
+    /// Canonical tag used by the JSON encoding and error messages.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Ooc => "ooc",
+            BackendKind::Pmm => "pmm",
+            BackendKind::Sim => "sim",
+        }
+    }
+}
+
+/// Where the graph + vertex data come from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataSource {
+    /// Generated in memory from the dataset registry.
+    Mem,
+    /// Served out-of-core from a `.pallas` container (packed from the
+    /// registry dataset on first use).
+    Ooc {
+        /// Path of the `.pallas` store.
+        store: PathBuf,
+    },
+}
+
+/// The 4D process-grid axes `Gd x Gx x Gy x Gz` (§IV-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridSpec {
+    /// Data-parallel groups.
+    pub gd: usize,
+    /// PMM x axis.
+    pub gx: usize,
+    /// PMM y axis.
+    pub gy: usize,
+    /// PMM z axis.
+    pub gz: usize,
+}
+
+impl GridSpec {
+    /// 1x1x1x1 (single rank).
+    pub const SOLO: GridSpec = GridSpec { gd: 1, gx: 1, gy: 1, gz: 1 };
+
+    /// Parse `"GdxGxxGyxGz"` (4 fields) or `"GxxGyxGz"` (3 fields, Gd=1);
+    /// the error names the accepted form.  Zero axes parse and are
+    /// rejected later by [`RunSpec::validate`] (never a panic).
+    pub fn parse(s: &str) -> Result<GridSpec, String> {
+        let bad = || format!("bad grid '{s}' (accepted: AxBxCxD or AxBxC, e.g. 2x2x2x2)");
+        let parts: Vec<usize> = s
+            .split('x')
+            .map(|p| p.parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| bad())?;
+        match parts[..] {
+            [gx, gy, gz] => Ok(GridSpec { gd: 1, gx, gy, gz }),
+            [gd, gx, gy, gz] => Ok(GridSpec { gd, gx, gy, gz }),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Total rank count (saturating, so absurd JSON values fail
+    /// validation instead of overflowing).
+    pub fn world_size(&self) -> usize {
+        self.gd
+            .saturating_mul(self.gx)
+            .saturating_mul(self.gy)
+            .saturating_mul(self.gz)
+    }
+
+    /// Canonical `GdxGxxGyxGz` form.
+    pub fn to_string(&self) -> String {
+        format!("{}x{}x{}x{}", self.gd, self.gx, self.gy, self.gz)
+    }
+}
+
+impl From<Grid4D> for GridSpec {
+    fn from(g: Grid4D) -> GridSpec {
+        GridSpec { gd: g.gd, gx: g.gx, gy: g.gy, gz: g.gz }
+    }
+}
+
+impl From<GridSpec> for Grid4D {
+    fn from(g: GridSpec) -> Grid4D {
+        Grid4D::new(g.gd, g.gx, g.gy, g.gz)
+    }
+}
+
+/// Model dimensions carried by the spec (`d_in`/`d_out` always come from
+/// the dataset registry).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Hidden width.
+    pub d_h: usize,
+    /// GCN layers.
+    pub layers: usize,
+    /// Dropout probability.
+    pub dropout: f32,
+}
+
+impl ModelSpec {
+    /// The per-dataset defaults the artifact configurations use
+    /// (tiny: 16x2, e2e_big: 512x4, otherwise 128x3).
+    pub fn for_dataset(dataset: &str, dropout: f32) -> ModelSpec {
+        let (d_h, layers) = match dataset {
+            "tiny" => (16, 2),
+            "e2e_big" => (512, 4),
+            _ => (128, 3),
+        };
+        ModelSpec { d_h, layers, dropout }
+    }
+}
+
+/// Simulator-only parameters (`backend == Sim`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSpec {
+    /// Machine profile name (`perlmutter` / `frontier` / `tuolumne`).
+    pub machine: String,
+    /// §V-D hide fraction override; `None` uses the calibration default.
+    pub hide_frac: Option<f64>,
+    /// `Gd` values to project, one per session step (the 3D base comes
+    /// from `RunSpec::grid`).
+    pub gd_sweep: Vec<usize>,
+}
+
+/// One structured violation found by [`RunSpec::validate`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// `dataset` is not in the registry.
+    UnknownDataset(String),
+    /// A grid axis is zero.
+    ZeroGridAxis(GridSpec),
+    /// The grid volume exceeds what the rank-thread runtime executes.
+    WorldTooLarge {
+        /// Requested rank count.
+        ranks: usize,
+        /// Executable maximum.
+        max: usize,
+    },
+    /// The backend cannot consume the given data source (e.g. OOC + PMM).
+    SourceMismatch {
+        /// Offending backend.
+        backend: BackendKind,
+        /// What that backend requires.
+        need: &'static str,
+    },
+    /// The backend only trains with ScaleGNN uniform sampling.
+    SamplerUnsupported(BackendKind),
+    /// The backend uses the `Gd` axis only; `Gx/Gy/Gz` must be 1.
+    GridUnsupported(BackendKind),
+    /// `hide_frac` outside `[0, 1]`.
+    HideFracRange(f64),
+    /// Unknown simulator machine profile.
+    UnknownMachine(String),
+    /// `sim` section present iff `backend == Sim` was violated.
+    SimSectionMismatch {
+        /// The spec's backend.
+        backend: BackendKind,
+        /// Whether the `sim` section was present.
+        present: bool,
+    },
+    /// The sim `gd_sweep` is empty.
+    EmptySweep,
+    /// A training backend was given zero steps (and zero epochs).
+    NoWork(BackendKind),
+    /// `batch` is zero or exceeds the dataset's vertex count.
+    BatchTooLarge {
+        /// Requested batch.
+        batch: usize,
+        /// Dataset vertices.
+        n: usize,
+    },
+    /// The backend takes the mini-batch size from the artifact manifest;
+    /// a spec override cannot be honored.
+    BatchUnsupported(BackendKind),
+    /// A spec field the backend would silently ignore.
+    FieldUnsupported {
+        /// Offending backend.
+        backend: BackendKind,
+        /// The field that would not apply.
+        field: &'static str,
+    },
+    /// `d_h` or `layers` is zero.
+    BadModel(ModelSpec),
+    /// Learning rate is not finite-positive.
+    BadLr(f32),
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnknownDataset(d) => {
+                write!(f, "unknown dataset '{d}' (see `scalegnn info`)")
+            }
+            SpecError::ZeroGridAxis(g) => {
+                write!(f, "grid {} has a zero axis", g.to_string())
+            }
+            SpecError::WorldTooLarge { ranks, max } => write!(
+                f,
+                "grid volume {ranks} exceeds the {max} rank threads the runtime executes"
+            ),
+            SpecError::SourceMismatch { backend, need } => {
+                write!(f, "backend '{}' requires {need}", backend.tag())
+            }
+            SpecError::SamplerUnsupported(b) => write!(
+                f,
+                "backend '{}' only supports the scalegnn uniform sampler",
+                b.tag()
+            ),
+            SpecError::GridUnsupported(b) => match b {
+                BackendKind::Ooc => {
+                    write!(f, "backend 'ooc' is single-rank (grid must be 1x1x1x1)")
+                }
+                _ => write!(
+                    f,
+                    "backend '{}' parallelizes over Gd only (grid must be Dx1x1x1)",
+                    b.tag()
+                ),
+            },
+            SpecError::HideFracRange(v) => {
+                write!(f, "hide_frac must be in [0, 1], got {v}")
+            }
+            SpecError::UnknownMachine(m) => write!(
+                f,
+                "unknown machine '{m}' (accepted: perlmutter, frontier, tuolumne)"
+            ),
+            SpecError::SimSectionMismatch { backend, present } => {
+                if *present {
+                    write!(f, "'sim' section given but backend is '{}'", backend.tag())
+                } else {
+                    write!(f, "backend 'sim' needs a 'sim' section (machine, gd_sweep)")
+                }
+            }
+            SpecError::EmptySweep => {
+                write!(f, "sim.gd_sweep must list at least one nonzero Gd")
+            }
+            SpecError::NoWork(b) => match b {
+                BackendKind::Reference => {
+                    write!(f, "backend 'reference' needs steps > 0 or epochs > 0")
+                }
+                BackendKind::Pmm => write!(
+                    f,
+                    "backend 'pmm' needs steps > 0 (or final_eval for an evaluation-only run)"
+                ),
+                _ => write!(f, "backend '{}' needs steps > 0", b.tag()),
+            },
+            SpecError::BatchTooLarge { batch, n } => {
+                write!(f, "batch {batch} must be in [1, {n}] (the dataset's vertex count)")
+            }
+            SpecError::BatchUnsupported(b) => write!(
+                f,
+                "backend '{}' takes the mini-batch size from the artifact manifest; omit 'batch'",
+                b.tag()
+            ),
+            SpecError::FieldUnsupported { backend, field } => write!(
+                f,
+                "backend '{}' does not support '{field}' (it would silently not apply)",
+                backend.tag()
+            ),
+            SpecError::BadModel(m) => write!(
+                f,
+                "model must have d_h > 0 and layers > 0 (got d_h={}, layers={})",
+                m.d_h, m.layers
+            ),
+            SpecError::BadLr(lr) => write!(f, "lr must be finite and positive, got {lr}"),
+        }
+    }
+}
+
+/// Maximum rank threads the in-process runtime will spawn for one run.
+pub const MAX_RANK_THREADS: usize = 256;
+
+/// The single typed description of a run: dataset source, backend, model,
+/// grid, precision, §V toggles and the training hyper-parameters.  Build
+/// one with [`RunSpec::new`] + the chainable setters, validate with
+/// [`RunSpec::validate`], execute with [`super::run`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Executing backend.
+    pub backend: BackendKind,
+    /// Registry dataset name.
+    pub dataset: String,
+    /// In-memory vs out-of-core source.
+    pub source: DataSource,
+    /// Sampling algorithm.
+    pub sampler: SamplerKind,
+    /// Model dimensions (`d_in`/`d_out` come from the dataset).  The
+    /// reference backend reads its dims from the artifact manifest —
+    /// [`ModelSpec::for_dataset`] mirrors those configurations.
+    pub model: ModelSpec,
+    /// 4D grid axes.
+    pub grid: GridSpec,
+    /// Collective payload precision (§V-B).
+    pub precision: Precision,
+    /// §V-D communication/computation overlap.
+    pub overlap: bool,
+    /// §V-A sampling/training prefetch overlap.
+    pub prefetch: bool,
+    /// Step cap (0 = derive from `epochs` on the reference backend).
+    pub steps: u64,
+    /// Epoch cap used by the reference backend when `steps == 0`.
+    pub epochs: usize,
+    /// Mini-batch size override (`None` = backend default; rejected on
+    /// the reference backend, whose batch is fixed by the artifact).
+    pub batch: Option<usize>,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Sampling / parameter-init seed.
+    pub seed: u64,
+    /// Stop once full-graph test accuracy reaches this (reference backend).
+    pub target_acc: Option<f32>,
+    /// Evaluate every k epochs (reference backend).
+    pub eval_every_epochs: usize,
+    /// Block-cache budget (MiB) of the OOC source.
+    pub cache_mb: usize,
+    /// PJRT artifact directory of the reference backend.
+    pub artifacts: PathBuf,
+    /// Run a distributed full-graph evaluation at the end (PMM backend).
+    pub final_eval: bool,
+    /// Simulator section (`backend == Sim` only).
+    pub sim: Option<SimSpec>,
+}
+
+impl RunSpec {
+    /// A spec with the backend's defaults: solo grid, scalegnn sampling,
+    /// the dataset's default model dims, fp32, overlap + prefetch on.
+    pub fn new(backend: BackendKind, dataset: &str) -> RunSpec {
+        RunSpec {
+            backend,
+            dataset: dataset.to_string(),
+            source: DataSource::Mem,
+            sampler: SamplerKind::ScaleGnnUniform,
+            model: ModelSpec::for_dataset(dataset, 0.0),
+            grid: GridSpec::SOLO,
+            precision: Precision::Fp32,
+            overlap: true,
+            prefetch: true,
+            steps: 0,
+            epochs: 20,
+            batch: None,
+            lr: 1e-2,
+            seed: 42,
+            target_acc: None,
+            eval_every_epochs: 1,
+            cache_mb: 64,
+            artifacts: PathBuf::from("artifacts"),
+            final_eval: false,
+            sim: None,
+        }
+    }
+
+    /// Set the 4D grid.
+    pub fn grid(mut self, gd: usize, gx: usize, gy: usize, gz: usize) -> Self {
+        self.grid = GridSpec { gd, gx, gy, gz };
+        self
+    }
+
+    /// Set the sampler.
+    pub fn sampler(mut self, s: SamplerKind) -> Self {
+        self.sampler = s;
+        self
+    }
+
+    /// Set the model dims.
+    pub fn model(mut self, d_h: usize, layers: usize, dropout: f32) -> Self {
+        self.model = ModelSpec { d_h, layers, dropout };
+        self
+    }
+
+    /// Set the step cap.
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Set the epoch cap (reference backend, `steps == 0`).
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Set the learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Set the seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Toggle §V-D overlap.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Toggle §V-A prefetch.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Set the collective precision.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Override the mini-batch size.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = Some(b);
+        self
+    }
+
+    /// Set the target accuracy (reference backend stops when reached).
+    pub fn target_acc(mut self, acc: f32) -> Self {
+        self.target_acc = Some(acc);
+        self
+    }
+
+    /// Evaluate every `k` epochs (reference backend).
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every_epochs = k;
+        self
+    }
+
+    /// Serve the dataset out-of-core from `store` (packs on first use).
+    pub fn store(mut self, store: PathBuf) -> Self {
+        self.source = DataSource::Ooc { store };
+        self
+    }
+
+    /// Set the OOC block-cache budget in MiB.
+    pub fn cache_mb(mut self, mb: usize) -> Self {
+        self.cache_mb = mb;
+        self
+    }
+
+    /// Set the PJRT artifact directory.
+    pub fn artifacts(mut self, dir: PathBuf) -> Self {
+        self.artifacts = dir;
+        self
+    }
+
+    /// Request a final distributed full-graph evaluation (PMM backend).
+    pub fn final_eval(mut self, on: bool) -> Self {
+        self.final_eval = on;
+        self
+    }
+
+    /// Attach the simulator section (`backend == Sim`).
+    pub fn sim(mut self, machine: &str, hide_frac: Option<f64>, gd_sweep: Vec<usize>) -> Self {
+        self.sim = Some(SimSpec { machine: machine.to_string(), hide_frac, gd_sweep });
+        self
+    }
+
+    /// Cross-field validation; returns **every** violation.
+    pub fn validate(&self) -> Result<(), Vec<SpecError>> {
+        let mut errs = Vec::new();
+        let spec = datasets::spec(&self.dataset);
+        if spec.is_none() {
+            errs.push(SpecError::UnknownDataset(self.dataset.clone()));
+        }
+        let g = self.grid;
+        if g.gd == 0 || g.gx == 0 || g.gy == 0 || g.gz == 0 {
+            errs.push(SpecError::ZeroGridAxis(g));
+        } else if self.backend != BackendKind::Sim && g.world_size() > MAX_RANK_THREADS {
+            errs.push(SpecError::WorldTooLarge {
+                ranks: g.world_size(),
+                max: MAX_RANK_THREADS,
+            });
+        }
+        if self.model.d_h == 0 || self.model.layers == 0 {
+            errs.push(SpecError::BadModel(self.model));
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            errs.push(SpecError::BadLr(self.lr));
+        }
+        if let Some(s) = spec.as_ref() {
+            // the OOC backend defaults to OocTrainConfig::quick's batch of
+            // 1024 when no override is given — check the effective value
+            // so a batch-less spec on a small dataset fails here, not at
+            // run time
+            let eff = match (self.batch, self.backend) {
+                (Some(b), _) => Some(b),
+                (None, BackendKind::Ooc) => Some(1024),
+                (None, _) => None,
+            };
+            if let Some(b) = eff {
+                if b == 0 || b > s.planted.n {
+                    errs.push(SpecError::BatchTooLarge { batch: b, n: s.planted.n });
+                }
+            }
+        }
+        match self.backend {
+            BackendKind::Reference => {
+                // batch and model dims come from the AOT artifact manifest
+                // on this backend; a spec override would silently not apply
+                if self.batch.is_some() {
+                    errs.push(SpecError::BatchUnsupported(self.backend));
+                }
+                if self.source != DataSource::Mem {
+                    errs.push(SpecError::SourceMismatch {
+                        backend: self.backend,
+                        need: "an in-memory source (source.kind = \"mem\")",
+                    });
+                }
+                if g.gx != 1 || g.gy != 1 || g.gz != 1 {
+                    errs.push(SpecError::GridUnsupported(self.backend));
+                }
+                if self.steps == 0 && self.epochs == 0 {
+                    errs.push(SpecError::NoWork(self.backend));
+                }
+                // this backend evaluates periodically on its own; the
+                // pmm-only final_eval knob would silently not apply
+                if self.final_eval {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "final_eval",
+                    });
+                }
+                // model dims AND dropout come from the artifact manifest;
+                // anything but the spec default (which mirrors the
+                // artifact configurations) would silently not apply
+                if self.model != ModelSpec::for_dataset(&self.dataset, 0.0) {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "model",
+                    });
+                }
+                // 0 would be silently clamped to "every epoch"
+                if self.eval_every_epochs == 0 {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "eval_every_epochs = 0",
+                    });
+                }
+            }
+            BackendKind::Ooc => {
+                if !matches!(self.source, DataSource::Ooc { .. }) {
+                    errs.push(SpecError::SourceMismatch {
+                        backend: self.backend,
+                        need: "an out-of-core source (source.kind = \"ooc\" with a store path)",
+                    });
+                }
+                if self.sampler != SamplerKind::ScaleGnnUniform {
+                    errs.push(SpecError::SamplerUnsupported(self.backend));
+                }
+                if g.world_size() != 1 {
+                    errs.push(SpecError::GridUnsupported(self.backend));
+                }
+                if self.steps == 0 {
+                    errs.push(SpecError::NoWork(self.backend));
+                }
+                // fields this backend would silently ignore.  `overlap`
+                // and `precision` stay accepted: they toggle collectives
+                // and this single-rank path has none, so they are
+                // vacuously honored (the session-vs-legacy identity tests
+                // exercise overlap on/off here by design).
+                if self.target_acc.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "target_acc",
+                    });
+                }
+                if self.final_eval {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "final_eval",
+                    });
+                }
+            }
+            BackendKind::Pmm => {
+                // the PMM engine shards the in-memory dataset per rank; an
+                // out-of-core source would need per-rank shard extraction
+                // (`scalegnn sample --from-store`) — not a training path
+                if self.source != DataSource::Mem {
+                    errs.push(SpecError::SourceMismatch {
+                        backend: self.backend,
+                        need: "an in-memory source (OOC + PMM is not a training combination)",
+                    });
+                }
+                if self.sampler != SamplerKind::ScaleGnnUniform {
+                    errs.push(SpecError::SamplerUnsupported(self.backend));
+                }
+                // steps == 0 is allowed for an evaluation-only session
+                if self.steps == 0 && !self.final_eval {
+                    errs.push(SpecError::NoWork(self.backend));
+                }
+                // fields this backend would silently ignore: it has no
+                // early-stopping eval, and its Algorithm-2 subgraph
+                // prefetcher cannot be disabled
+                if self.target_acc.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "target_acc",
+                    });
+                }
+                if !self.prefetch {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "prefetch",
+                    });
+                }
+            }
+            BackendKind::Sim => {
+                if self.target_acc.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "target_acc",
+                    });
+                }
+                if self.batch.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "batch",
+                    });
+                }
+                if self.final_eval {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "final_eval",
+                    });
+                }
+            }
+        }
+        match (&self.sim, self.backend) {
+            (Some(s), BackendKind::Sim) => {
+                if sim::by_name(&s.machine).is_none() {
+                    errs.push(SpecError::UnknownMachine(s.machine.clone()));
+                }
+                if let Some(h) = s.hide_frac {
+                    if !(0.0..=1.0).contains(&h) {
+                        errs.push(SpecError::HideFracRange(h));
+                    }
+                }
+                if s.gd_sweep.is_empty() || s.gd_sweep.contains(&0) {
+                    errs.push(SpecError::EmptySweep);
+                }
+            }
+            (None, BackendKind::Sim) => {
+                errs.push(SpecError::SimSectionMismatch { backend: self.backend, present: false })
+            }
+            (Some(_), b) => {
+                errs.push(SpecError::SimSectionMismatch { backend: b, present: true })
+            }
+            (None, _) => {}
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+
+    /// Lossless JSON encoding (the inverse of [`RunSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let source = match &self.source {
+            DataSource::Mem => obj(vec![("kind", Json::from("mem"))]),
+            DataSource::Ooc { store } => obj(vec![
+                ("kind", Json::from("ooc")),
+                ("store", Json::from(store.to_string_lossy().as_ref())),
+            ]),
+        };
+        let sim = match &self.sim {
+            None => Json::Null,
+            Some(s) => obj(vec![
+                ("machine", Json::from(s.machine.as_str())),
+                (
+                    "hide_frac",
+                    s.hide_frac.map(Json::from).unwrap_or(Json::Null),
+                ),
+                (
+                    "gd_sweep",
+                    Json::Arr(s.gd_sweep.iter().map(|&g| Json::from(g)).collect()),
+                ),
+            ]),
+        };
+        obj(vec![
+            ("backend", Json::from(self.backend.tag())),
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("source", source),
+            ("sampler", Json::from(sampler_tag(self.sampler))),
+            (
+                "model",
+                obj(vec![
+                    ("d_h", Json::from(self.model.d_h)),
+                    ("layers", Json::from(self.model.layers)),
+                    ("dropout", Json::from(self.model.dropout as f64)),
+                ]),
+            ),
+            ("grid", Json::from(self.grid.to_string().as_str())),
+            (
+                "precision",
+                Json::from(match self.precision {
+                    Precision::Fp32 => "fp32",
+                    Precision::Bf16 => "bf16",
+                }),
+            ),
+            ("overlap", Json::Bool(self.overlap)),
+            ("prefetch", Json::Bool(self.prefetch)),
+            ("steps", Json::from(self.steps as usize)),
+            ("epochs", Json::from(self.epochs)),
+            (
+                "batch",
+                self.batch.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("lr", Json::from(self.lr as f64)),
+            // a decimal string: JSON numbers are f64 and would corrupt
+            // seeds above 2^53
+            ("seed", Json::from(self.seed.to_string().as_str())),
+            (
+                "target_acc",
+                self.target_acc.map(|t| Json::from(t as f64)).unwrap_or(Json::Null),
+            ),
+            ("eval_every_epochs", Json::from(self.eval_every_epochs)),
+            ("cache_mb", Json::from(self.cache_mb)),
+            ("artifacts", Json::from(self.artifacts.to_string_lossy().as_ref())),
+            ("final_eval", Json::Bool(self.final_eval)),
+            ("sim", sim),
+        ])
+    }
+
+    /// Compact JSON text of [`RunSpec::to_json`].
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode a spec from JSON, rejecting unknown keys and bad types with
+    /// messages that name the field.
+    pub fn from_json(j: &Json) -> Result<RunSpec, String> {
+        let o = j.as_obj().ok_or("spec must be a JSON object")?;
+        const KNOWN: [&str; 20] = [
+            "backend", "dataset", "source", "sampler", "model", "grid", "precision", "overlap",
+            "prefetch", "steps", "epochs", "batch", "lr", "seed", "target_acc",
+            "eval_every_epochs", "cache_mb", "artifacts", "final_eval", "sim",
+        ];
+        for k in o.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(format!("unknown spec field '{k}'"));
+            }
+        }
+        let str_field = |name: &str| -> Result<&str, String> {
+            j.get(name)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("spec field '{name}' must be a string"))
+        };
+        let backend = BackendKind::parse(str_field("backend")?)?;
+        let dataset = str_field("dataset")?.to_string();
+        let mut spec = RunSpec::new(backend, &dataset);
+
+        if let Some(s) = j.get("source") {
+            check_obj_keys(s, "source", &["kind", "store"])?;
+            let kind = s
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("source.kind must be \"mem\" or \"ooc\"")?;
+            spec.source = match kind {
+                "mem" => DataSource::Mem,
+                "ooc" => DataSource::Ooc {
+                    store: PathBuf::from(
+                        s.get("store")
+                            .and_then(Json::as_str)
+                            .ok_or("source.store (a path) is required when source.kind = \"ooc\"")?,
+                    ),
+                },
+                other => {
+                    return Err(format!("source.kind must be \"mem\" or \"ooc\", got '{other}'"))
+                }
+            };
+        }
+        // typed string fields: a wrong-typed value is an error, never a
+        // silent fall-back to the default
+        let str_typed = |name: &str| -> Result<Option<&str>, String> {
+            match j.get(name) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Str(s)) => Ok(Some(s.as_str())),
+                Some(_) => Err(format!("spec field '{name}' must be a string")),
+            }
+        };
+        if let Some(s) = str_typed("sampler")? {
+            spec.sampler = SamplerKind::parse(s).ok_or_else(|| {
+                format!("unknown sampler '{s}' (accepted: scalegnn, graphsage, graphsaint)")
+            })?;
+        }
+        if let Some(m) = j.get("model") {
+            check_obj_keys(m, "model", &["d_h", "layers", "dropout"])?;
+            let num = |name: &str| -> Result<f64, String> {
+                m.get(name)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("model.{name} must be a number"))
+            };
+            spec.model = ModelSpec {
+                d_h: num("d_h")? as usize,
+                layers: num("layers")? as usize,
+                dropout: num("dropout")? as f32,
+            };
+        }
+        if let Some(g) = str_typed("grid")? {
+            spec.grid = GridSpec::parse(g)?;
+        }
+        if let Some(p) = str_typed("precision")? {
+            spec.precision = match p {
+                "fp32" => Precision::Fp32,
+                "bf16" => Precision::Bf16,
+                other => {
+                    return Err(format!("precision must be fp32 or bf16, got '{other}'"))
+                }
+            };
+        }
+        let bool_field = |name: &str, dflt: bool| -> Result<bool, String> {
+            match j.get(name) {
+                None | Some(Json::Null) => Ok(dflt),
+                Some(Json::Bool(b)) => Ok(*b),
+                Some(_) => Err(format!("spec field '{name}' must be true or false")),
+            }
+        };
+        spec.overlap = bool_field("overlap", spec.overlap)?;
+        spec.prefetch = bool_field("prefetch", spec.prefetch)?;
+        spec.final_eval = bool_field("final_eval", spec.final_eval)?;
+        let num_field = |name: &str| -> Result<Option<f64>, String> {
+            match j.get(name) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| format!("spec field '{name}' must be a number")),
+            }
+        };
+        if let Some(v) = num_field("steps")? {
+            spec.steps = v as u64;
+        }
+        if let Some(v) = num_field("epochs")? {
+            spec.epochs = v as usize;
+        }
+        spec.batch = num_field("batch")?.map(|v| v as usize);
+        if let Some(v) = num_field("lr")? {
+            spec.lr = v as f32;
+        }
+        // seed: a decimal string (lossless for the full u64 range) or,
+        // for hand-written specs, a plain number
+        match j.get("seed") {
+            None | Some(Json::Null) => {}
+            Some(Json::Str(s)) => {
+                spec.seed = s
+                    .parse::<u64>()
+                    .map_err(|_| format!("spec field 'seed' must be a u64, got '{s}'"))?;
+            }
+            Some(v) => {
+                spec.seed = v
+                    .as_f64()
+                    .ok_or("spec field 'seed' must be a number or decimal string")?
+                    as u64;
+            }
+        }
+        spec.target_acc = num_field("target_acc")?.map(|v| v as f32);
+        if let Some(v) = num_field("eval_every_epochs")? {
+            spec.eval_every_epochs = v as usize;
+        }
+        if let Some(v) = num_field("cache_mb")? {
+            spec.cache_mb = v as usize;
+        }
+        if let Some(a) = str_typed("artifacts")? {
+            spec.artifacts = PathBuf::from(a);
+        }
+        match j.get("sim") {
+            None | Some(Json::Null) => {}
+            Some(s) => {
+                check_obj_keys(s, "sim", &["machine", "hide_frac", "gd_sweep"])?;
+                let machine = s
+                    .get("machine")
+                    .and_then(Json::as_str)
+                    .ok_or("sim.machine must be a string")?
+                    .to_string();
+                let hide_frac = match s.get("hide_frac") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_f64().ok_or("sim.hide_frac must be a number or null")?,
+                    ),
+                };
+                let arr = s
+                    .get("gd_sweep")
+                    .and_then(Json::as_arr)
+                    .ok_or("sim.gd_sweep must be an array of numbers")?;
+                let mut gd_sweep = Vec::with_capacity(arr.len());
+                for v in arr {
+                    // strict: a non-numeric entry is an error, not a
+                    // silently shrunken sweep
+                    gd_sweep
+                        .push(v.as_f64().ok_or("sim.gd_sweep must be an array of numbers")?
+                            as usize);
+                }
+                spec.sim = Some(SimSpec { machine, hide_frac, gd_sweep });
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_json_str(s: &str) -> Result<RunSpec, String> {
+        RunSpec::from_json(&Json::parse(s)?)
+    }
+}
+
+/// Reject unknown keys inside a nested spec object so a typo'd field
+/// (`hide_fraction` for `hide_frac`) errors instead of silently falling
+/// back to a default.
+fn check_obj_keys(j: &Json, ctx: &str, known: &[&str]) -> Result<(), String> {
+    if let Some(o) = j.as_obj() {
+        for k in o.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown spec field '{ctx}.{k}'"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Canonical CLI/JSON tag of a sampler (the inverse of
+/// `SamplerKind::parse`).
+pub fn sampler_tag(s: SamplerKind) -> &'static str {
+    match s {
+        SamplerKind::ScaleGnnUniform => "scalegnn",
+        SamplerKind::GraphSage => "graphsage",
+        SamplerKind::GraphSaintNode => "graphsaint",
+    }
+}

@@ -140,6 +140,29 @@ pub struct TrainReport {
     pub breakdown: StepBreakdown,
 }
 
+/// One streamed training-step event: the progress feed `session::run`
+/// turns into `StepReport`s.  Streaming is observation-only — the worker
+/// never blocks on (or reacts to) the receiver, so a run with a progress
+/// sender is bitwise identical to one without.
+#[derive(Clone, Copy, Debug)]
+pub struct StepEvent {
+    /// 0-based step index.
+    pub step: u64,
+    /// Loss of this step.
+    pub loss: f32,
+    /// Sampled train accuracy (NaN where the path does not measure it).
+    pub acc: f32,
+    /// Wall-clock of the step, excluding evaluation.
+    pub wall_s: f64,
+    /// Full-graph (val, test) accuracy when this step evaluated.
+    pub eval: Option<(f32, f32)>,
+    /// Whether this is the last step of the run.
+    pub done: bool,
+}
+
+/// Sending half of a [`StepEvent`] stream.
+pub type ProgressSender = std::sync::mpsc::Sender<StepEvent>;
+
 /// Convert artifact-manifest model metadata into reference-model dims.
 pub fn meta_to_dims(m: &ModelMeta) -> GcnDims {
     GcnDims {
@@ -222,6 +245,7 @@ fn worker_loop(
     group: usize,
     world: Option<&CommWorld>,
     report: &mut TrainReport,
+    progress: Option<ProgressSender>,
 ) -> Result<()> {
     let rt = Runtime::open(&cfg.artifacts)?;
     let dims = meta_to_dims(meta);
@@ -366,13 +390,16 @@ fn worker_loop(
             }
             bd.dp_comm_s += t0.elapsed().as_secs_f64();
         }
-        train_time += t_step.elapsed().as_secs_f64();
+        let step_wall = t_step.elapsed().as_secs_f64();
+        train_time += step_wall;
 
         if step % steps_per_epoch == 0 || step == total_steps - 1 {
             report.loss_curve.push((step, last_loss));
         }
 
         // --- periodic full-graph evaluation (group 0 computes; others sync) ---
+        let mut evaled = None;
+        let mut target_stop = false;
         let epoch_done = (step + 1) % (steps_per_epoch * cfg.eval_every_epochs as u64) == 0
             || step == total_steps - 1;
         if epoch_done {
@@ -385,6 +412,7 @@ fn worker_loop(
             eval_time += t0.elapsed().as_secs_f64();
             best_test = best_test.max(test);
             best_val = best_val.max(val);
+            evaled = Some((val, test));
             report.acc_curve.push((step + 1, val, test));
             if cfg.verbose && group == 0 {
                 eprintln!(
@@ -403,12 +431,25 @@ fn worker_loop(
                     time_to_target = Some(train_time);
                 }
                 if test >= target {
-                    report.steps = step + 1;
-                    break;
+                    target_stop = true;
                 }
             }
         }
         report.steps = step + 1;
+        if let Some(tx) = &progress {
+            // observation only: a gone receiver must not end the run
+            let _ = tx.send(StepEvent {
+                step,
+                loss: last_loss,
+                acc: f32::NAN,
+                wall_s: step_wall,
+                eval: evaled,
+                done: target_stop || step == total_steps - 1,
+            });
+        }
+        if target_stop {
+            break;
+        }
     }
 
     let steps = report.steps.max(1) as f64;
@@ -430,6 +471,16 @@ fn worker_loop(
 
 /// Run a training job per `cfg`; returns group 0's report.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    train_with_progress(cfg, None)
+}
+
+/// [`train`] with an optional [`StepEvent`] stream from group 0 — the
+/// session-API internal (`session::run` receives the events and fans them
+/// out to its observers).  `progress = None` is exactly [`train`].
+pub fn train_with_progress(
+    cfg: &TrainConfig,
+    progress: Option<ProgressSender>,
+) -> Result<TrainReport> {
     let data = Arc::new(
         datasets::load(&cfg.dataset)
             .ok_or_else(|| anyhow!("unknown dataset {}", cfg.dataset))?,
@@ -441,19 +492,21 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     if cfg.dp == 1 {
         let mut report = TrainReport::default();
-        worker_loop(cfg, data, &meta, 0, None, &mut report)?;
+        worker_loop(cfg, data, &meta, 0, None, &mut report, progress)?;
         Ok(report)
     } else {
         let world = Arc::new(CommWorld::new(Grid4D::new(cfg.dp, 1, 1, 1)));
         let mut handles = vec![];
+        let mut progress = progress;
         for g in 0..cfg.dp {
             let cfg = cfg.clone();
             let data = data.clone();
             let meta = meta.clone();
             let world = world.clone();
+            let tx = if g == 0 { progress.take() } else { None };
             handles.push(std::thread::spawn(move || -> Result<TrainReport> {
                 let mut report = TrainReport::default();
-                worker_loop(&cfg, data, &meta, g, Some(&world), &mut report)?;
+                worker_loop(&cfg, data, &meta, g, Some(&world), &mut report, tx)?;
                 Ok(report)
             }));
         }
@@ -582,6 +635,16 @@ fn build_ooc_batch(store: &OocGraph, sampler: &UniformVertexSampler, step: u64) 
 /// never materialized in RAM — peak store residency is reported in
 /// `OocTrainReport::cache_resident_bytes` and bounded by the budget.
 pub fn train_from_store(cfg: &OocTrainConfig) -> Result<OocTrainReport> {
+    train_from_store_with_progress(cfg, None)
+}
+
+/// [`train_from_store`] with an optional [`StepEvent`] stream (the
+/// session-API internal).  `progress = None` is exactly
+/// [`train_from_store`].
+pub fn train_from_store_with_progress(
+    cfg: &OocTrainConfig,
+    progress: Option<ProgressSender>,
+) -> Result<OocTrainReport> {
     let store = Arc::new(match &cfg.dataset {
         Some(name) => crate::graph::store::open_or_pack(name, &cfg.store, cfg.cache_bytes)?,
         None => OocGraph::open(&cfg.store, cfg.cache_bytes)?,
@@ -627,12 +690,12 @@ pub fn train_from_store(cfg: &OocTrainConfig) -> Result<OocTrainReport> {
     let mut last = (f32::NAN, 0.0f32);
     let t_train = Instant::now();
     for step in 0..cfg.steps {
-        let t0 = Instant::now();
+        let t_step = Instant::now();
         let b = match &rx {
             Some(rx) => rx.recv().map_err(|_| anyhow!("ooc prefetcher died"))?,
             None => build_ooc_batch(&store, &sampler, step),
         };
-        wait += t0.elapsed().as_secs_f64();
+        wait += t_step.elapsed().as_secs_f64();
         let (loss, acc) = crate::model::train_step_ws(
             &dims, &mut params, &mut opt, &b.mb.adj, &b.mb.adj_t, &b.x, &b.y, &b.w, &masks,
             cfg.lr, &mut ws,
@@ -643,6 +706,16 @@ pub fn train_from_store(cfg: &OocTrainConfig) -> Result<OocTrainReport> {
             eprintln!("[ooc] step {step} loss {loss:.4} train-acc {acc:.4}");
         }
         report.steps = step + 1;
+        if let Some(tx) = &progress {
+            let _ = tx.send(StepEvent {
+                step,
+                loss,
+                acc,
+                wall_s: t_step.elapsed().as_secs_f64(),
+                eval: None,
+                done: step + 1 == cfg.steps,
+            });
+        }
     }
     drop(rx);
     report.train_time_s = t_train.elapsed().as_secs_f64();

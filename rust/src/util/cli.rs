@@ -84,6 +84,42 @@ impl Args {
     pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
         Ok(self.get(name)?.unwrap_or(default))
     }
+
+    /// Reject any option/flag the subcommand does not accept; the error
+    /// names the offending flag and lists every accepted one.
+    pub fn check_known(&self, sub: &str, opts: &[&str], flags: &[&str]) -> Result<(), String> {
+        let describe = |kind: &str, got: &str| {
+            let mut accepted: Vec<String> = opts.iter().map(|o| format!("--{o} V")).collect();
+            accepted.extend(flags.iter().map(|f| format!("--{f}")));
+            format!(
+                "unknown {kind} '--{got}' for '{sub}' (accepted: {})",
+                if accepted.is_empty() { "none".to_string() } else { accepted.join(", ") }
+            )
+        };
+        for k in self.opts.keys() {
+            if !opts.contains(&k.as_str()) {
+                return Err(describe("option", k));
+            }
+        }
+        for f in &self.flags {
+            if !flags.contains(&f.as_str()) {
+                return Err(describe("flag", f));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse an `on|off` option (also accepts `true/false/1/0`), or
+    /// `default` when absent; the error names the flag and the accepted
+    /// values.
+    pub fn on_off(&self, name: &str, default: bool) -> Result<bool, String> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some("on") | Some("true") | Some("1") => Ok(true),
+            Some("off") | Some("false") | Some("0") => Ok(false),
+            Some(other) => Err(format!("--{name} must be on|off, got '{other}'")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +176,28 @@ mod tests {
     #[test]
     fn double_positional_rejected() {
         assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+
+    #[test]
+    fn check_known_names_flag_and_accepted_values() {
+        let a = parse("train --dataset tiny --vrbose");
+        let err = a.check_known("train", &["dataset"], &["verbose"]).unwrap_err();
+        assert!(err.contains("--vrbose"), "{err}");
+        assert!(err.contains("--dataset") && err.contains("--verbose"), "{err}");
+        let a = parse("train --datset tiny");
+        let err = a.check_known("train", &["dataset"], &[]).unwrap_err();
+        assert!(err.contains("--datset") && err.contains("train"), "{err}");
+        let a = parse("train --dataset tiny --verbose");
+        assert!(a.check_known("train", &["dataset"], &["verbose"]).is_ok());
+    }
+
+    #[test]
+    fn on_off_parses_and_names_accepted_values() {
+        let a = parse("x --overlap off");
+        assert!(!a.on_off("overlap", true).unwrap());
+        assert!(a.on_off("missing", true).unwrap());
+        let a = parse("x --overlap sideways");
+        let err = a.on_off("overlap", true).unwrap_err();
+        assert!(err.contains("--overlap") && err.contains("on|off"), "{err}");
     }
 }

@@ -1,0 +1,487 @@
+//! Session-API tests: `RunSpec` JSON round-trips losslessly, every
+//! `SpecError` variant triggers, observers see the full stream, and —
+//! the load-bearing guarantee — `session::run` is **bitwise identical**
+//! to the legacy entry points (reference trainer, OOC trainer, PMM
+//! engine) for mirroring specs, with §V-D overlap both on and off.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::graph::datasets;
+use scalegnn::grid::Grid4D;
+use scalegnn::model::GcnDims;
+use scalegnn::pmm::{PmmCtx, PmmGcn};
+use scalegnn::sampling::SamplerKind;
+use scalegnn::session::{
+    self, BackendKind, JsonlObserver, RunReport, RunSpec, SpecError, StepObserver, StepReport,
+};
+use scalegnn::trainer::{self, OocTrainConfig, TrainConfig};
+use scalegnn::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scalegnn_session_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------------------
+// RunSpec JSON round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runspec_json_roundtrip_is_lossless() {
+    let specs = vec![
+        RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(2, 2, 2, 1)
+            .model(16, 2, 0.5)
+            .batch(64)
+            .steps(13)
+            .lr(5e-3)
+            // above 2^53: must survive the JSON round-trip bit-exactly
+            .seed(0xDEAD_BEEF_DEAD_BEEF)
+            .precision(Precision::Bf16)
+            .overlap(false)
+            .final_eval(true),
+        RunSpec::new(BackendKind::Ooc, "tiny")
+            .store(PathBuf::from("/tmp/x.pallas"))
+            .cache_mb(16)
+            .steps(50)
+            .prefetch(false),
+        RunSpec::new(BackendKind::Reference, "products_sim")
+            .sampler(SamplerKind::GraphSage)
+            .epochs(3)
+            .eval_every(2)
+            .target_acc(0.7)
+            .artifacts(PathBuf::from("somewhere/artifacts")),
+        RunSpec::new(BackendKind::Sim, "papers100m_sim")
+            .grid(1, 4, 4, 4)
+            .sim("frontier", Some(0.25), vec![1, 2, 4, 8]),
+    ];
+    for spec in specs {
+        let text = spec.to_json_string();
+        let back = RunSpec::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("reparse failed for {text}: {e}"));
+        assert_eq!(back, spec, "round-trip changed the spec: {text}");
+        // and serialization is stable
+        assert_eq!(back.to_json_string(), text);
+    }
+}
+
+#[test]
+fn checked_in_example_specs_parse_and_validate() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/specs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/specs exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = RunSpec::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("{} does not parse: {e}", path.display()));
+        if let Err(errs) = spec.validate() {
+            panic!("{} does not validate: {errs:?}", path.display());
+        }
+        seen += 1;
+    }
+    assert!(seen >= 4, "expected the checked-in spec files, found {seen}");
+}
+
+#[test]
+fn from_json_rejects_unknown_fields_and_bad_values() {
+    let base = RunSpec::new(BackendKind::Pmm, "tiny").steps(1);
+    let with_typo = base.to_json_string().replacen("\"steps\"", "\"stepz\"", 1);
+    let err = RunSpec::from_json_str(&with_typo).unwrap_err();
+    assert!(err.contains("stepz"), "error should name the field: {err}");
+
+    let err = RunSpec::from_json_str(r#"{"backend": "warp", "dataset": "tiny"}"#).unwrap_err();
+    assert!(err.contains("warp") && err.contains("accepted"), "{err}");
+
+    let err =
+        RunSpec::from_json_str(r#"{"backend": "pmm", "dataset": "tiny", "grid": "2by2"}"#)
+            .unwrap_err();
+    assert!(err.contains("2by2"), "{err}");
+
+    // typos inside nested sections are rejected too
+    let err = RunSpec::from_json_str(
+        r#"{"backend": "sim", "dataset": "papers100m_sim",
+            "sim": {"machine": "perlmutter", "gd_sweep": [8], "hide_fraction": 0.9}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("sim.hide_fraction"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// SpecError coverage: every variant triggers
+// ---------------------------------------------------------------------------
+
+fn errs_of(spec: &RunSpec) -> Vec<SpecError> {
+    spec.validate().expect_err("spec should be invalid")
+}
+
+#[test]
+fn every_spec_error_variant_triggers() {
+    // UnknownDataset
+    let s = RunSpec::new(BackendKind::Pmm, "no_such_dataset").steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::UnknownDataset(_))));
+
+    // ZeroGridAxis
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").grid(0, 1, 1, 1).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::ZeroGridAxis(_))));
+
+    // WorldTooLarge
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").grid(300, 1, 1, 1).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::WorldTooLarge { .. })));
+
+    // SourceMismatch: ooc backend without a store...
+    let s = RunSpec::new(BackendKind::Ooc, "tiny").steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::SourceMismatch { .. })));
+    // ...and the OOC + PMM combination
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").store(PathBuf::from("g.pallas")).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::SourceMismatch { .. })));
+
+    // SamplerUnsupported
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").sampler(SamplerKind::GraphSage).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::SamplerUnsupported(_))));
+
+    // GridUnsupported (reference parallelizes over Gd only)
+    let s = RunSpec::new(BackendKind::Reference, "tiny").grid(1, 2, 1, 1).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::GridUnsupported(_))));
+
+    // HideFracRange
+    let s = RunSpec::new(BackendKind::Sim, "tiny").sim("perlmutter", Some(1.5), vec![1]);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::HideFracRange(_))));
+
+    // UnknownMachine
+    let s = RunSpec::new(BackendKind::Sim, "tiny").sim("laptop", None, vec![1]);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::UnknownMachine(_))));
+
+    // SimSectionMismatch, both directions
+    let s = RunSpec::new(BackendKind::Sim, "tiny");
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::SimSectionMismatch { present: false, .. })));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).sim("perlmutter", None, vec![1]);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::SimSectionMismatch { present: true, .. })));
+
+    // EmptySweep
+    let s = RunSpec::new(BackendKind::Sim, "tiny").sim("perlmutter", None, vec![]);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::EmptySweep)));
+
+    // NoWork
+    let s = RunSpec::new(BackendKind::Pmm, "tiny");
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::NoWork(_))));
+    let mut s = RunSpec::new(BackendKind::Reference, "tiny");
+    s.epochs = 0;
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::NoWork(_))));
+
+    // BatchTooLarge (tiny has 512 vertices) — zero is rejected too
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").batch(10_000).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BatchTooLarge { .. })));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").batch(0).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BatchTooLarge { .. })));
+    // ...and the OOC backend's implicit 1024 default is checked as well
+    let s = RunSpec::new(BackendKind::Ooc, "tiny").store(PathBuf::from("g.pallas")).steps(1);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::BatchTooLarge { batch: 1024, .. })));
+
+    // BatchUnsupported (the reference batch is fixed by the artifact)
+    let s = RunSpec::new(BackendKind::Reference, "tiny").steps(5).batch(64);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BatchUnsupported(_))));
+
+    // FieldUnsupported: fields a backend would silently ignore
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).target_acc(0.9);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "target_acc", .. })));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).prefetch(false);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "prefetch", .. })));
+    let s = RunSpec::new(BackendKind::Reference, "tiny").steps(1).final_eval(true);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "final_eval", .. })));
+    // reference dims AND dropout come from the artifact manifest
+    let s = RunSpec::new(BackendKind::Reference, "tiny").steps(1).model(512, 4, 0.0);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "model", .. })));
+    let s = RunSpec::new(BackendKind::Reference, "tiny").steps(1).model(16, 2, 0.9);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "model", .. })));
+    let mut s = RunSpec::new(BackendKind::Reference, "tiny").steps(1);
+    s.eval_every_epochs = 0;
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { .. })));
+
+    // BadModel
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").model(0, 2, 0.0).steps(1);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadModel(_))));
+
+    // BadLr
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).lr(-1.0);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadLr(_))));
+}
+
+#[test]
+fn validate_collects_every_violation() {
+    let s = RunSpec::new(BackendKind::Pmm, "no_such_dataset")
+        .sampler(SamplerKind::GraphSage)
+        .model(0, 0, 0.0)
+        .lr(f32::NAN);
+    let errs = errs_of(&s);
+    assert!(errs.len() >= 4, "expected all violations at once, got {errs:?}");
+    // and run() refuses with a message naming them
+    let err = session::run_silent(&s).unwrap_err().to_string();
+    assert!(err.contains("invalid spec"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise identity: session vs legacy entry points
+// ---------------------------------------------------------------------------
+
+fn assert_bitwise_eq(a: &[(u64, f32)], b: &[(u64, f32)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (&(sa, la), &(sb, lb)) in a.iter().zip(b.iter()) {
+        assert_eq!(sa, sb, "{what}: step index diverged");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{what}: loss at step {sa}: {la} vs {lb}");
+    }
+}
+
+/// The legacy PMM entry point: rank threads stepping `PmmGcn` directly
+/// (exactly what `cmd_pmm_train` used to hand-roll).
+fn legacy_pmm_losses(grid: Grid4D, overlap: bool, steps: u64) -> Vec<(u64, f32)> {
+    let data = Arc::new(datasets::load("tiny").unwrap());
+    let ds = datasets::spec("tiny").unwrap();
+    let batch = ds.batch;
+    let dims = GcnDims {
+        d_in: ds.planted.d_in,
+        d_h: 16,
+        d_out: ds.planted.classes,
+        layers: 2,
+        dropout: 0.5,
+        weight_decay: 0.0,
+    };
+    let world = Arc::new(CommWorld::new(grid));
+    let mut handles = vec![];
+    for r in 0..grid.world_size() {
+        let w = world.clone();
+        let d = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+            let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
+            eng.set_overlap(overlap);
+            (0..steps).map(|s| (s, eng.train_step(s, 5e-3).loss)).collect::<Vec<_>>()
+        }));
+    }
+    let mut out = None;
+    for h in handles {
+        let losses = h.join().unwrap();
+        out.get_or_insert(losses);
+    }
+    out.unwrap()
+}
+
+#[test]
+fn pmm_session_is_bitwise_identical_to_legacy() {
+    for grid in [Grid4D::new(1, 2, 2, 2), Grid4D::new(2, 2, 1, 1)] {
+        for overlap in [true, false] {
+            let steps = 6u64;
+            let legacy = legacy_pmm_losses(grid, overlap, steps);
+            let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+                .grid(grid.gd, grid.gx, grid.gy, grid.gz)
+                .model(16, 2, 0.5)
+                .steps(steps)
+                .lr(5e-3)
+                .seed(42)
+                .overlap(overlap);
+            let report = session::run_silent(&spec).unwrap();
+            assert_eq!(report.steps, steps);
+            assert_bitwise_eq(
+                &legacy,
+                &report.loss_curve,
+                &format!("pmm grid {:?} overlap {overlap}", (grid.gd, grid.gx, grid.gy, grid.gz)),
+            );
+            // repeated session runs are deterministic too
+            let again = session::run_silent(&spec).unwrap();
+            assert_bitwise_eq(&report.loss_curve, &again.loss_curve, "pmm repeat");
+        }
+    }
+}
+
+#[test]
+fn ooc_session_is_bitwise_identical_to_legacy() {
+    let dir = tmp_dir("ooc");
+    let store = dir.join("tiny.pallas");
+    let mut cfg = OocTrainConfig::quick(store.clone());
+    cfg.dataset = Some("tiny".into());
+    cfg.cache_bytes = 4 << 20;
+    cfg.batch = 128;
+    cfg.d_h = 16;
+    cfg.layers = 2;
+    cfg.steps = 20;
+    cfg.lr = 1e-2;
+    cfg.seed = 42;
+    let legacy = trainer::train_from_store(&cfg).unwrap();
+
+    for overlap in [true, false] {
+        let spec = RunSpec::new(BackendKind::Ooc, "tiny")
+            .store(store.clone())
+            .cache_mb(4)
+            .batch(128)
+            .model(16, 2, 0.0)
+            .steps(20)
+            .lr(1e-2)
+            .seed(42)
+            .overlap(overlap);
+        let report = session::run_silent(&spec).unwrap();
+        assert_bitwise_eq(
+            &legacy.loss_curve,
+            &report.loss_curve,
+            &format!("ooc overlap {overlap}"),
+        );
+        let o = report.ooc.expect("ooc backend returns an ooc report");
+        assert_eq!(o.final_loss.to_bits(), legacy.final_loss.to_bits());
+        assert_eq!(o.store_bytes, legacy.store_bytes);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reference_session_is_bitwise_identical_to_legacy() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !scalegnn::runtime::pjrt_artifacts_available(&artifacts) {
+        eprintln!("skipping: PJRT artifacts/backend not available");
+        return;
+    }
+    for (dp, overlap) in [(1usize, true), (2, true), (2, false)] {
+        let mut cfg = TrainConfig::quick("tiny", SamplerKind::ScaleGnnUniform);
+        cfg.artifacts = artifacts.clone();
+        cfg.dp = dp;
+        cfg.max_steps = 12;
+        cfg.lr = 5e-3;
+        cfg.overlap = overlap;
+        let legacy = trainer::train(&cfg).unwrap();
+
+        let spec = RunSpec::new(BackendKind::Reference, "tiny")
+            .grid(dp, 1, 1, 1)
+            .steps(12)
+            .lr(5e-3)
+            .seed(42)
+            .overlap(overlap)
+            .artifacts(artifacts.clone());
+        let report = session::run_silent(&spec).unwrap();
+        assert_bitwise_eq(
+            &legacy.loss_curve,
+            &report.loss_curve,
+            &format!("reference dp {dp} overlap {overlap}"),
+        );
+        let t = report.trainer.expect("reference backend returns a trainer report");
+        assert_eq!(t.final_loss.to_bits(), legacy.final_loss.to_bits());
+        assert_eq!(t.acc_curve, legacy.acc_curve);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observer stream
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct CountState {
+    started: usize,
+    steps: Vec<u64>,
+    finished: Option<u64>,
+    last_done: bool,
+}
+
+/// Observer writing into shared state the test can inspect afterwards.
+struct SharedObserver(std::rc::Rc<std::cell::RefCell<CountState>>);
+
+impl StepObserver for SharedObserver {
+    fn on_start(&mut self, _spec: &RunSpec) {
+        self.0.borrow_mut().started += 1;
+    }
+    fn on_step(&mut self, r: &StepReport) {
+        let mut s = self.0.borrow_mut();
+        s.steps.push(r.step);
+        s.last_done = r.done;
+    }
+    fn on_finish(&mut self, r: &RunReport) {
+        self.0.borrow_mut().finished = Some(r.steps);
+    }
+}
+
+#[test]
+fn observers_see_every_step_in_order() {
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .model(16, 2, 0.0)
+        .steps(5)
+        .lr(5e-3);
+    let state = std::rc::Rc::new(std::cell::RefCell::new(CountState::default()));
+    let mut obs: Vec<Box<dyn StepObserver>> = vec![Box::new(SharedObserver(state.clone()))];
+    let report = session::run(&spec, &mut obs).unwrap();
+    drop(obs);
+    let s = state.borrow();
+    assert_eq!(s.started, 1, "on_start fires once");
+    assert_eq!(s.steps, (0..5).collect::<Vec<u64>>(), "every step streamed, in order");
+    assert!(s.last_done, "final step is flagged done");
+    assert_eq!(s.finished, Some(5), "on_finish sees the final report");
+    assert_eq!(report.steps, 5);
+}
+
+#[test]
+fn jsonl_observer_streams_machine_readable_events() {
+    let dir = tmp_dir("jsonl");
+    let path = dir.join("events.jsonl");
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .model(16, 2, 0.0)
+        .steps(4)
+        .lr(5e-3);
+    let mut obs: Vec<Box<dyn StepObserver>> =
+        vec![Box::new(JsonlObserver::create(&path).unwrap())];
+    let report = session::run(&spec, &mut obs).unwrap();
+    drop(obs); // flush
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + 4 + 1, "start + one per step + finish");
+    let first = Json::parse(lines[0]).unwrap();
+    assert_eq!(first.get("event").and_then(Json::as_str), Some("start"));
+    // the start line embeds the exact spec
+    let embedded = RunSpec::from_json(first.get("spec").unwrap()).unwrap();
+    assert_eq!(embedded, spec);
+    for line in &lines[1..5] {
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("event").and_then(Json::as_str), Some("step"));
+        assert!(v.get("report").and_then(|r| r.get("loss")).is_some());
+    }
+    let last = Json::parse(lines[5]).unwrap();
+    assert_eq!(last.get("event").and_then(Json::as_str), Some("finish"));
+    assert_eq!(
+        last.get("report").and_then(|r| r.get("steps")).and_then(Json::as_usize),
+        Some(report.steps as usize)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eval_only_pmm_session_reports_accuracy() {
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 2, 1)
+        .model(16, 2, 0.0)
+        .steps(0)
+        .final_eval(true);
+    let report = session::run_silent(&spec).unwrap();
+    assert_eq!(report.steps, 0);
+    let (val, test) = report.pmm.unwrap().eval.expect("final_eval requested");
+    assert!(val.is_finite() && test.is_finite());
+}
