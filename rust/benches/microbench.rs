@@ -591,10 +591,119 @@ fn main() {
         println!("(artifacts not built; skipping PJRT benches)");
     }
 
+    sampling_sweep_section();
     e2e_overlap_section();
     session_overhead_section();
 
     write_kernel_json(&records);
+}
+
+/// Sampling fast-path sweep (EXPERIMENTS.md §Sampling): sort-free
+/// workspace induction vs the pre-fast-path reference
+/// (`induce_rescaled_reference`: triple list + sorting `from_triples` +
+/// allocating transpose), across batch sizes and graph densities, serial
+/// and parallel.  Emits `BENCH_sampling.json`; the acceptance bar is a
+/// >= 2x single-thread speedup on the largest swept batch.
+fn sampling_sweep_section() {
+    use scalegnn::sampling::{
+        induce_rescaled_into_threads, induce_rescaled_reference, InduceWorkspace, MiniBatch,
+    };
+    use scalegnn::util::json::{obj, Json};
+
+    println!("--- sampling fast path (sort-free induction vs reference) ---");
+    let graphs = [
+        ("rmat13_ef16", generate::rmat(13, 16, 7).gcn_normalize()),
+        ("rmat12_ef64", generate::rmat(12, 64, 9).gcn_normalize()),
+    ];
+    let par_t = pool::num_threads().max(2);
+    let mut entries: Vec<Json> = Vec::new();
+    for (gname, g) in &graphs {
+        for &batch in &[256usize, 1024, 4096] {
+            if batch > g.rows {
+                continue;
+            }
+            let sampler = UniformVertexSampler::new(g.rows, batch, 42);
+            let p = sampler.inclusion_prob();
+            // rotate through a few samples so no path benefits from a
+            // warm single working set
+            let samples: Vec<Vec<u32>> = (0..8u64).map(|t| sampler.sample(t)).collect();
+            let shape = format!("{gname} nnz={} B={batch}", g.nnz());
+
+            let mut i = 0usize;
+            let r_ref = bench(&format!("induce reference   {shape}"), 2, 15, || {
+                let mb = induce_rescaled_reference(g, &samples[i % 8], p);
+                i += 1;
+                std::hint::black_box(mb.adj.nnz());
+            });
+            println!("{}", r_ref.report());
+
+            let mut ws = InduceWorkspace::new();
+            let mut out = MiniBatch::default();
+            let mut i = 0usize;
+            let r_fast = bench(&format!("induce fast t=1    {shape}"), 2, 15, || {
+                induce_rescaled_into_threads(g, &samples[i % 8], p, true, 1, &mut ws, &mut out);
+                i += 1;
+                std::hint::black_box(out.adj.nnz());
+            });
+            println!("{}", r_fast.report());
+            println!(
+                "    -> sort-free speedup vs reference (t=1): {:.2}x",
+                r_ref.mean_s / r_fast.mean_s
+            );
+
+            // the parallel row is only honest when the work estimate
+            // actually engages the thread pool (small batches run the
+            // identical inline path regardless of the requested count)
+            let engages = batch * 512 >= pool::MIN_PARALLEL_WORK && par_t > 1;
+            let (par_ns, par_speedup) = if engages {
+                let mut i = 0usize;
+                let r_par = bench(&format!("induce fast t={par_t}    {shape}"), 2, 15, || {
+                    let s = &samples[i % 8];
+                    induce_rescaled_into_threads(g, s, p, true, par_t, &mut ws, &mut out);
+                    i += 1;
+                    std::hint::black_box(out.adj.nnz());
+                });
+                println!("{}", r_par.report());
+                println!(
+                    "    -> parallel speedup vs reference: {:.2}x\n",
+                    r_ref.mean_s / r_par.mean_s
+                );
+                (
+                    Json::from(r_par.mean_s * 1e9),
+                    Json::from(r_ref.mean_s / r_par.mean_s),
+                )
+            } else {
+                println!("    (B={batch} is below the parallel work threshold; inline path only)\n");
+                (Json::Null, Json::Null)
+            };
+
+            entries.push(obj(vec![
+                ("graph", Json::from(*gname)),
+                ("nnz", Json::from(g.nnz())),
+                ("batch", Json::from(batch)),
+                ("reference_ns", Json::from(r_ref.mean_s * 1e9)),
+                ("fast_serial_ns", Json::from(r_fast.mean_s * 1e9)),
+                ("fast_parallel_ns", par_ns),
+                ("parallel_threads", if engages { Json::from(par_t) } else { Json::Null }),
+                ("speedup_serial_vs_reference", Json::from(r_ref.mean_s / r_fast.mean_s)),
+                ("speedup_parallel_vs_reference", par_speedup),
+            ]));
+        }
+    }
+    let doc = obj(vec![
+        (
+            "what",
+            Json::from(
+                "mini-batch induction: reference (triple sort + allocating transpose) \
+                 vs sort-free workspace fast path, serial and parallel",
+            ),
+        ),
+        ("sweep", Json::Arr(entries)),
+    ]);
+    match std::fs::write("BENCH_sampling.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_sampling.json\n"),
+        Err(e) => eprintln!("could not write BENCH_sampling.json: {e}\n"),
+    }
 }
 
 /// Session-API overhead: the same tiny PMM run through the legacy direct

@@ -62,29 +62,93 @@ impl Csr {
         Csr { rows, cols, indptr, indices, values }
     }
 
+    /// Build from triples that are already sorted by `(row, col)` with no
+    /// duplicate coordinates — the stream in-order subgraph induction
+    /// emits.  Skips `from_triples`' `O(E log E)` sort and duplicate-sum
+    /// pass; on such input the output is byte-identical to
+    /// [`Csr::from_triples`] (asserted here and, against the induction
+    /// fast path's directly-assembled CSR, in `tests/induction.rs`).
+    pub fn from_sorted_triples(rows: usize, cols: usize, t: &[(u32, u32, f32)]) -> Csr {
+        let mut out = Csr::empty(0, 0);
+        Csr::from_sorted_triples_into(rows, cols, t, &mut out);
+        out
+    }
+
+    /// Workspace variant of [`Csr::from_sorted_triples`]: emits into
+    /// `out`, reusing its buffers (zero allocations once their capacities
+    /// have grown to fit).
+    pub fn from_sorted_triples_into(
+        rows: usize,
+        cols: usize,
+        t: &[(u32, u32, f32)],
+        out: &mut Csr,
+    ) {
+        out.rows = rows;
+        out.cols = cols;
+        out.indptr.clear();
+        out.indptr.resize(rows + 1, 0);
+        out.indices.clear();
+        out.values.clear();
+        out.indices.reserve(t.len());
+        out.values.reserve(t.len());
+        #[cfg(debug_assertions)]
+        let mut last: Option<(u32, u32)> = None;
+        for &(r, c, v) in t {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            #[cfg(debug_assertions)]
+            {
+                debug_assert!(
+                    last.is_none() || last.unwrap() < (r, c),
+                    "triples must be strictly (row, col)-sorted with no duplicates"
+                );
+                last = Some((r, c));
+            }
+            out.indptr[r as usize + 1] += 1;
+            out.indices.push(c);
+            out.values.push(v);
+        }
+        for i in 0..rows {
+            out.indptr[i + 1] += out.indptr[i];
+        }
+    }
+
     /// Transpose (CSC view materialized as CSR).
     pub fn transpose(&self) -> Csr {
-        let mut counts = vec![0usize; self.cols + 1];
+        let mut out = Csr::empty(0, 0);
+        self.transpose_into(&mut out, &mut Vec::new());
+        out
+    }
+
+    /// Workspace variant of [`Csr::transpose`]: writes the transpose into
+    /// `out` reusing its buffers, with `cursor` as the per-column
+    /// insertion scratch.  Byte-identical to [`Csr::transpose`] (which
+    /// delegates here with fresh buffers).
+    pub fn transpose_into(&self, out: &mut Csr, cursor: &mut Vec<usize>) {
+        out.rows = self.cols;
+        out.cols = self.rows;
+        out.indptr.clear();
+        out.indptr.resize(self.cols + 1, 0);
         for &c in &self.indices {
-            counts[c as usize + 1] += 1;
+            out.indptr[c as usize + 1] += 1;
         }
         for i in 0..self.cols {
-            counts[i + 1] += counts[i];
+            out.indptr[i + 1] += out.indptr[i];
         }
-        let indptr = counts.clone();
-        let mut indices = vec![0u32; self.nnz()];
-        let mut values = vec![0.0f32; self.nnz()];
-        let mut cursor = counts;
+        cursor.clear();
+        cursor.extend_from_slice(&out.indptr[..self.cols]);
+        out.indices.clear();
+        out.indices.resize(self.nnz(), 0);
+        out.values.clear();
+        out.values.resize(self.nnz(), 0.0);
         for r in 0..self.rows {
             let (cs, vs) = self.row(r);
             for (&c, &v) in cs.iter().zip(vs) {
                 let slot = cursor[c as usize];
-                indices[slot] = r as u32;
-                values[slot] = v;
+                out.indices[slot] = r as u32;
+                out.values[slot] = v;
                 cursor[c as usize] += 1;
             }
         }
-        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
     }
 
     /// y = self @ x  (SpMM into a dense matrix).
@@ -361,6 +425,45 @@ mod tests {
         assert_eq!(c.nnz(), 3);
         assert_eq!(c.row(0).0, &[0, 1]);
         assert_eq!(c.row(1), (&[2u32][..], &[4.0f32][..]));
+    }
+
+    #[test]
+    fn from_sorted_triples_matches_from_triples() {
+        // sorted, duplicate-free triple stream (what induction emits)
+        let t = vec![(0u32, 0u32, 1.0f32), (0, 2, 2.0), (1, 1, 3.0), (3, 0, 4.0)];
+        let want = Csr::from_triples(4, 3, t.clone());
+        let got = Csr::from_sorted_triples(4, 3, &t);
+        assert_eq!(got.indptr, want.indptr);
+        assert_eq!(got.indices, want.indices);
+        assert_eq!(got.values, want.values);
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    }
+
+    #[test]
+    fn from_sorted_triples_into_reuses_buffers() {
+        let mut out = Csr::empty(0, 0);
+        let mut cursor = Vec::new();
+        for seed in 0..4u64 {
+            let a = random_csr(17, 11, 0.3, seed);
+            let mut t: Vec<(u32, u32, f32)> = Vec::new();
+            for r in 0..a.rows {
+                let (cs, vs) = a.row(r);
+                for (&c, &v) in cs.iter().zip(vs) {
+                    t.push((r as u32, c, v));
+                }
+            }
+            Csr::from_sorted_triples_into(17, 11, &t, &mut out);
+            assert_eq!(out.indptr, a.indptr, "seed {seed}");
+            assert_eq!(out.indices, a.indices);
+            assert_eq!(out.values, a.values);
+            // transpose through the reused-buffer variant too
+            let mut tr = Csr::empty(0, 0);
+            a.transpose_into(&mut tr, &mut cursor);
+            let want = a.transpose();
+            assert_eq!(tr.indptr, want.indptr, "seed {seed}");
+            assert_eq!(tr.indices, want.indices);
+            assert_eq!(tr.values, want.values);
+        }
     }
 
     #[test]

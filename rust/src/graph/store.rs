@@ -90,6 +90,22 @@ pub trait GraphAccess: Send + Sync {
     /// Copy row `r` into the buffers (cleared first): sorted column ids into
     /// `cols`, matching edge weights into `vals`.
     fn read_row(&self, r: usize, cols: &mut Vec<u32>, vals: &mut Vec<f32>);
+
+    /// Visit row `r` as slices, zero-copy where the implementation can
+    /// (in-memory [`Csr`] borrows the row in place; the default reads
+    /// through [`GraphAccess::read_row`] into the caller's scratch).  The
+    /// sampling fast path uses this so the hot induction loop never pays
+    /// a row copy for in-memory graphs.
+    fn with_row(
+        &self,
+        r: usize,
+        cols: &mut Vec<u32>,
+        vals: &mut Vec<f32>,
+        f: &mut dyn FnMut(&[u32], &[f32]),
+    ) {
+        self.read_row(r, cols, vals);
+        f(cols, vals);
+    }
 }
 
 impl GraphAccess for Csr {
@@ -111,6 +127,17 @@ impl GraphAccess for Csr {
         vals.clear();
         cols.extend_from_slice(cs);
         vals.extend_from_slice(vs);
+    }
+
+    fn with_row(
+        &self,
+        r: usize,
+        _cols: &mut Vec<u32>,
+        _vals: &mut Vec<f32>,
+        f: &mut dyn FnMut(&[u32], &[f32]),
+    ) {
+        let (cs, vs) = self.row(r);
+        f(cs, vs);
     }
 }
 

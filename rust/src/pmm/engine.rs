@@ -117,6 +117,8 @@ struct LayerCacheP {
 struct SubgraphPrefetcher {
     req_tx: Option<Sender<u64>>,
     res_rx: Receiver<(u64, Vec<LocalSubgraph>)>,
+    /// spent subgraph shells flowing back to the builder thread for reuse
+    free_tx: Sender<Vec<LocalSubgraph>>,
     handle: Option<std::thread::JoinHandle<()>>,
     /// a finished speculative result not yet consumed
     pending: Option<(u64, Vec<LocalSubgraph>)>,
@@ -128,10 +130,16 @@ impl SubgraphPrefetcher {
     fn new(mut builders: Vec<DistributedSubgraphBuilder>) -> SubgraphPrefetcher {
         let (req_tx, req_rx) = channel::<u64>();
         let (res_tx, res_rx) = channel::<(u64, Vec<LocalSubgraph>)>();
+        let (free_tx, free_rx) = channel::<Vec<LocalSubgraph>>();
         let handle = std::thread::spawn(move || {
             while let Ok(step) = req_rx.recv() {
-                let subs: Vec<LocalSubgraph> =
-                    builders.iter_mut().map(|b| b.build(step)).collect();
+                // reuse a recycled shell set when one has come back; the
+                // builders then run allocation-free (`build_into`)
+                let mut subs = free_rx.try_recv().unwrap_or_default();
+                subs.resize_with(builders.len(), LocalSubgraph::empty);
+                for (b, out) in builders.iter_mut().zip(subs.iter_mut()) {
+                    b.build_into(step, out);
+                }
                 if res_tx.send((step, subs)).is_err() {
                     break; // engine dropped
                 }
@@ -140,10 +148,21 @@ impl SubgraphPrefetcher {
         SubgraphPrefetcher {
             req_tx: Some(req_tx),
             res_rx,
+            free_tx,
             handle: Some(handle),
             pending: None,
             in_flight: None,
         }
+    }
+
+    /// Hand a spent step's subgraphs (plus the sample that was moved out
+    /// of slot 0) back to the builder thread for buffer reuse.  Fire and
+    /// forget: a closed channel (worker already exited) just drops them.
+    fn recycle(&self, mut subs: Vec<LocalSubgraph>, sample: Vec<u32>) {
+        if let Some(s0) = subs.get_mut(0) {
+            s0.sample = sample;
+        }
+        let _ = self.free_tx.send(subs);
     }
 
     /// Blocking fetch of step `step`'s subgraphs; afterwards requests
@@ -884,6 +903,11 @@ impl<'a> PmmGcn<'a> {
         // fold the context's per-op timings into the step accumulators
         let ct = self.ctx.drain_timers();
         self.timers.add(&ct);
+
+        // recycle the step's per-layer subgraph buffers (and the sample
+        // that was moved out of slot 0) so the prefetcher's next
+        // Algorithm-2 build is allocation-free
+        self.prefetcher.recycle(caches.into_iter().map(|c| c.adj).collect(), sample);
 
         PmmStepOutput { loss, acc }
     }

@@ -38,6 +38,21 @@ pub struct LocalSubgraph {
 }
 
 impl LocalSubgraph {
+    /// An empty slot for [`DistributedSubgraphBuilder::build_into`] to
+    /// fill — what buffer-recycling call sites (the PMM engine's
+    /// `SubgraphPrefetcher`) hand back for reuse.
+    pub fn empty() -> LocalSubgraph {
+        LocalSubgraph {
+            sample: Vec::new(),
+            row_lo: 0,
+            row_hi: 0,
+            col_lo: 0,
+            col_hi: 0,
+            adj: Csr::empty(0, 0),
+            p: 0.0,
+        }
+    }
+
     /// Number of compact rows owned by this rank.
     pub fn local_rows(&self) -> usize {
         self.row_hi - self.row_lo
@@ -47,6 +62,12 @@ impl LocalSubgraph {
     /// compact column ids — the backward-SpMM operand (Eq. 17).
     pub fn transpose(&self) -> Csr {
         self.adj.transpose()
+    }
+
+    /// Workspace variant of [`LocalSubgraph::transpose`]: reuses `out`'s
+    /// buffers with `cursor` as insertion scratch, byte-identical output.
+    pub fn transpose_into(&self, out: &mut Csr, cursor: &mut Vec<usize>) {
+        self.adj.transpose_into(out, cursor)
     }
 }
 
@@ -92,6 +113,7 @@ pub struct DistributedSubgraphBuilder {
     // scratch reused across steps
     row_nnz: Vec<usize>,
     prefix: Vec<usize>,
+    sample_scratch: crate::util::rng::SampleScratch,
 }
 
 impl DistributedSubgraphBuilder {
@@ -104,15 +126,28 @@ impl DistributedSubgraphBuilder {
             tags: TagMap::new(n),
             row_nnz: Vec::new(),
             prefix: Vec::new(),
+            sample_scratch: crate::util::rng::SampleScratch::default(),
         }
     }
 
-    /// Run Algorithm 2 for `step`.
+    /// Run Algorithm 2 for `step` (allocating wrapper over
+    /// [`DistributedSubgraphBuilder::build_into`]).
     pub fn build(&mut self, step: u64) -> LocalSubgraph {
+        let mut out = LocalSubgraph::empty();
+        self.build_into(step, &mut out);
+        out
+    }
+
+    /// Run Algorithm 2 for `step`, reusing `out`'s sample and adjacency
+    /// buffers (zero steady-state allocations; content is identical to
+    /// [`DistributedSubgraphBuilder::build`]).
+    pub fn build_into(&mut self, step: u64, out: &mut LocalSubgraph) {
         let b = self.sampler.batch;
         let p = self.sampler.inclusion_prob();
-        // Line 1: shared sample (communication-free)
-        let sample = self.sampler.sample(step);
+        // Line 1: shared sample (communication-free), drawn through the
+        // reusable overlay straight into the output slot
+        self.sampler.sample_into(step, &mut self.sample_scratch, &mut out.sample);
+        let sample = &out.sample;
 
         // Phase 1: binary-search local ranges (lines 3-5)
         let row_lo = sample.partition_point(|&v| (v as usize) < self.shard.r0);
@@ -141,11 +176,16 @@ impl DistributedSubgraphBuilder {
 
         // Phases 3+4 fused with assembly: columns within each CSR row are
         // sorted and the compact map is monotonic, so the output CSR can be
-        // built directly without a sort.
-        let mut indptr = Vec::with_capacity(s_r.len() + 1);
-        let mut indices: Vec<u32> = Vec::with_capacity(total / 4 + 1);
-        let mut values: Vec<f32> = Vec::with_capacity(total / 4 + 1);
-        indptr.push(0);
+        // built directly without a sort.  The output buffers are reused
+        // (the reserves are no-ops once warm).
+        let adj = &mut out.adj;
+        adj.indptr.clear();
+        adj.indptr.reserve(s_r.len() + 1);
+        adj.indices.clear();
+        adj.values.clear();
+        adj.indices.reserve(total / 4 + 1);
+        adj.values.reserve(total / 4 + 1);
+        adj.indptr.push(0);
         for (k, &v) in s_r.iter().enumerate() {
             let lr = v as usize - self.shard.r0;
             let (cs, vs) = self.shard.csr.row(lr);
@@ -154,23 +194,20 @@ impl DistributedSubgraphBuilder {
                 if let Some(j) = self.tags.lookup(c) {
                     // Phase 4: unbiased rescale (Eq. 24) — self loops kept
                     let w = if j == gi { w } else { w / p };
-                    indices.push(j);
-                    values.push(w);
+                    adj.indices.push(j);
+                    adj.values.push(w);
                 }
             }
-            indptr.push(indices.len());
+            adj.indptr.push(adj.indices.len());
         }
+        adj.rows = s_r.len();
+        adj.cols = b;
 
-        let local_rows = s_r.len();
-        LocalSubgraph {
-            sample,
-            row_lo,
-            row_hi,
-            col_lo,
-            col_hi,
-            adj: Csr { rows: local_rows, cols: b, indptr, indices, values },
-            p,
-        }
+        out.row_lo = row_lo;
+        out.row_hi = row_hi;
+        out.col_lo = col_lo;
+        out.col_hi = col_hi;
+        out.p = p;
     }
 }
 
@@ -258,6 +295,28 @@ mod tests {
             assert_eq!(got.adj.indptr, want.adj.indptr, "step {step}");
             assert_eq!(got.adj.indices, want.adj.indices);
             assert_eq!(got.adj.values, want.adj.values);
+        }
+    }
+
+    #[test]
+    fn build_into_recycled_slot_matches_fresh_build() {
+        let (_, mut builders, _) = setup(2, 2);
+        let mut slot = LocalSubgraph::empty();
+        for b in builders.iter_mut() {
+            for step in 0..5u64 {
+                b.build_into(step, &mut slot); // slot reused across steps
+                let want = b.build(step);
+                assert_eq!(slot.sample, want.sample, "step {step}");
+                assert_eq!(
+                    (slot.row_lo, slot.row_hi, slot.col_lo, slot.col_hi),
+                    (want.row_lo, want.row_hi, want.col_lo, want.col_hi)
+                );
+                assert_eq!((slot.adj.rows, slot.adj.cols), (want.adj.rows, want.adj.cols));
+                assert_eq!(slot.adj.indptr, want.adj.indptr);
+                assert_eq!(slot.adj.indices, want.adj.indices);
+                assert_eq!(slot.adj.values, want.adj.values);
+                assert_eq!(slot.p, want.p);
+            }
         }
     }
 

@@ -9,5 +9,7 @@ pub mod uniform;
 pub use baselines::{GraphSageSampler, GraphSaintNodeSampler, SampledBatch, SamplerKind};
 pub use distributed::{assemble_global, DistributedSubgraphBuilder, LocalSubgraph};
 pub use uniform::{
-    densify_into, induce_rescaled, induce_rescaled_from, MiniBatch, UniformVertexSampler,
+    densify_into, induce_rescaled, induce_rescaled_from, induce_rescaled_into,
+    induce_rescaled_into_threads, induce_rescaled_reference, sample_and_induce_into,
+    InduceWorkspace, MiniBatch, UniformVertexSampler,
 };

@@ -3,9 +3,44 @@
 //! Every rank derives the *same* sorted sample `S` from the shared
 //! `(seed, step)` pair — no inter-rank communication — then extracts its
 //! local portion of the induced subgraph (Algorithm 2, `distributed.rs`).
+//!
+//! # The sampling fast path
+//!
+//! Mini-batch induction is the last stage of the per-step pipeline, and
+//! with the compute and communication paths parallelized (PR 1/PR 3) it is
+//! the one §V-A overlap can only hide, not shrink.  The fast path applies
+//! the same discipline as the kernels: **bitwise-identical output, zero
+//! steady-state allocations, row-parallel execution.**
+//!
+//! * **Sort-free assembly** — sampled rows are visited in ascending
+//!   compact-row order and each CSR row stores its columns sorted, so the
+//!   induced `(row, col, weight)` stream is emitted already CSR-ordered.
+//!   The triple list + `Csr::from_triples` `O(E log E)` sort of the old
+//!   path is pure waste; the fast path appends straight into the output
+//!   CSR.  Induction cannot produce duplicate coordinates (each source
+//!   row is visited once and a sorted row holds each column once), so the
+//!   duplicate-sum pass is dead weight too.
+//! * **Workspace reuse** — [`InduceWorkspace`] owns every scratch buffer
+//!   (RNG overlay, sample, per-chunk segments, transpose cursor) and the
+//!   caller owns the output [`MiniBatch`]; after warmup a step allocates
+//!   nothing (asserted by `tests/alloc_batch.rs`).
+//! * **Strategy-switching intersection** — per row, the sorted
+//!   row-columns × sorted-sample intersection runs as a linear merge when
+//!   the sizes are comparable and as a binary-search probe of the larger
+//!   side when they are lopsided (`deg(v) ≫ B` or `B ≫ deg(v)`).  All
+//!   strategies emit the identical pair stream in the identical order
+//!   with the identical float ops, so the switch is bitwise-invisible.
+//! * **Row-range parallelism** — chunks of sample rows are induced
+//!   concurrently into per-chunk segments (`tensor::pool::par_chunks`)
+//!   and concatenated in chunk order; induction is row-local, so the
+//!   concatenated stream is bitwise identical for any thread count.
+//!
+//! The pre-fast-path implementation is kept as
+//! [`induce_rescaled_reference`] — the oracle `tests/induction.rs` and the
+//! `BENCH_sampling.json` sweep compare against.
 
 use crate::graph::{Csr, GraphAccess};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SampleScratch};
 
 /// Sampler state shared (by value — it is tiny) by every rank of a DP group.
 #[derive(Clone, Debug)]
@@ -32,9 +67,31 @@ impl UniformVertexSampler {
         rng.sample_k_of_n_sorted(self.batch, self.n)
     }
 
+    /// Workspace variant of [`UniformVertexSampler::sample`]: identical
+    /// output for the same `(seed, step)`, zero steady-state allocations
+    /// (the permutation overlay lives in `scratch`, the sample in `out`).
+    pub fn sample_into(&self, step: u64, scratch: &mut SampleScratch, out: &mut Vec<u32>) {
+        let mut rng = Rng::for_step(self.seed, step);
+        rng.sample_k_of_n_sorted_into(self.batch, self.n, scratch, out);
+    }
+
     /// Eq. 23: conditional inclusion probability of a *neighbor* given the
-    /// target is in the sample.
+    /// target is in the sample, `(B - 1) / (n - 1)`.
+    ///
+    /// Degenerate sizes are handled explicitly:
+    /// * `n == 1` — Eq. 23 is `0/0`; the single vertex is always sampled
+    ///   and has no neighbors to condition on, so `1.0` is returned (any
+    ///   finite value is unused, and `1.0` keeps a hypothetical `1/p`
+    ///   rescale a no-op) instead of the `NaN` this used to produce.
+    /// * `batch == 1` — the numerator is zero and `p = 0.0` is *correct*
+    ///   (no second vertex is ever co-sampled) and safe: induction divides
+    ///   by `p` only for an off-diagonal edge between two distinct sampled
+    ///   vertices, which cannot exist in a one-vertex sample (regression
+    ///   test `batch_of_one_induces_finite_weights`).
     pub fn inclusion_prob(&self) -> f32 {
+        if self.n <= 1 {
+            return 1.0;
+        }
         (self.batch as f32 - 1.0) / (self.n as f32 - 1.0)
     }
 }
@@ -45,16 +102,287 @@ pub struct MiniBatch {
     pub vertices: Vec<u32>,
     /// induced, rescaled adjacency in the compact [0,B) namespace
     pub adj: Csr,
-    /// its transpose (for backward SpMM, Eq. 17)
+    /// its transpose (for backward SpMM, Eq. 17); left structurally empty
+    /// when induction is asked to skip it (the padded-edge-list trainer
+    /// path never reads it)
     pub adj_t: Csr,
 }
 
-/// Merge one sampled row into the induced triple list: intersect the row's
-/// (sorted) columns with the (sorted) sample and rescale off-diagonal
-/// weights by `1/p` (Eq. 24).  Shared by the zero-copy in-memory path and
-/// the scratch-buffer out-of-core path, so the two cannot drift.
+impl Default for MiniBatch {
+    /// An empty shell for the workspace constructors to fill; buffers grow
+    /// on first use and are reused afterwards.
+    fn default() -> MiniBatch {
+        MiniBatch { vertices: Vec::new(), adj: Csr::empty(0, 0), adj_t: Csr::empty(0, 0) }
+    }
+}
+
+/// One row-range's induction output plus its private row-read scratch:
+/// what each parallel worker fills.  Segments concatenate in chunk order
+/// into the output CSR.
+#[derive(Default)]
+struct InduceSeg {
+    /// nnz of each induced row in this chunk's range, in row order
+    row_nnz: Vec<usize>,
+    /// compact column ids, concatenated across the chunk's rows
+    indices: Vec<u32>,
+    /// rescaled weights, aligned with `indices`
+    values: Vec<f32>,
+    /// row-read scratch of the [`GraphAccess::with_row`] default impl
+    rcols: Vec<u32>,
+    /// row-read scratch (values half)
+    rvals: Vec<f32>,
+}
+
+/// Every scratch buffer mini-batch construction needs, owned by the call
+/// site and reused across steps so the steady-state `make()` allocates
+/// nothing.  One workspace serves one construction stream (a trainer
+/// worker, a prefetch thread, a per-rank builder); it is `Send` but not
+/// shared.
+pub struct InduceWorkspace {
+    /// per-chunk segments of the parallel induction
+    segs: Vec<InduceSeg>,
+    /// transpose column-cursor scratch
+    cursor: Vec<usize>,
+    /// RNG permutation overlay of [`UniformVertexSampler::sample_into`]
+    pub scratch: SampleScratch,
+    /// the current step's sorted sample (filled by
+    /// [`sample_and_induce_into`])
+    pub sample: Vec<u32>,
+}
+
+impl InduceWorkspace {
+    /// An empty workspace; buffers grow on first use.
+    pub fn new() -> InduceWorkspace {
+        InduceWorkspace {
+            segs: Vec::new(),
+            cursor: Vec::new(),
+            scratch: SampleScratch::default(),
+            sample: Vec::new(),
+        }
+    }
+}
+
+impl Default for InduceWorkspace {
+    fn default() -> InduceWorkspace {
+        InduceWorkspace::new()
+    }
+}
+
+/// Size ratio beyond which the per-row intersection switches from the
+/// linear merge to a binary-search probe of the larger side.
+const GALLOP_RATIO: usize = 16;
+
+/// Intersect one sampled row with the sorted sample and rescale
+/// off-diagonal weights by `1/p` (Eq. 24), appending compact columns and
+/// weights for the row.  Three strategies — probe-the-sample for short
+/// rows, probe-the-row for small samples, linear merge otherwise — that
+/// emit the identical `(compact col, weight)` stream: the same matches in
+/// the same ascending order with the same float ops, so the switch is
+/// exact, not approximate.
 #[inline]
-fn induce_row(
+fn induce_row_into(
+    s: &[u32],
+    v: u32,
+    cs: &[u32],
+    vs: &[f32],
+    p: f32,
+    cols: &mut Vec<u32>,
+    vals: &mut Vec<f32>,
+) {
+    let b = s.len();
+    let deg = cs.len();
+    if deg.saturating_mul(GALLOP_RATIO) < b {
+        // short row, large sample: binary-search each column in `s`
+        for (&c, &w) in cs.iter().zip(vs) {
+            if let Ok(ci) = s.binary_search(&c) {
+                cols.push(ci as u32);
+                vals.push(if c == v { w } else { w / p });
+            }
+        }
+    } else if b.saturating_mul(GALLOP_RATIO) < deg {
+        // long row, small sample: binary-search each sampled id in the row
+        for (ci, &c) in s.iter().enumerate() {
+            if let Ok(k) = cs.binary_search(&c) {
+                let w = vs[k];
+                cols.push(ci as u32);
+                vals.push(if c == v { w } else { w / p });
+            }
+        }
+    } else {
+        // comparable sizes: linear merge (the reference strategy)
+        let mut ci = 0usize;
+        for (&c, &w) in cs.iter().zip(vs) {
+            while ci < b && s[ci] < c {
+                ci += 1;
+            }
+            if ci < b && s[ci] == c {
+                cols.push(ci as u32);
+                vals.push(if c == v { w } else { w / p });
+            }
+        }
+    }
+}
+
+/// Induce sample rows `[r0, r1)` into one segment.  Row-local: the output
+/// depends only on the graph, the sample and the row range, never on the
+/// chunking — the property that makes chunk-order concatenation bitwise
+/// deterministic.
+fn induce_chunk<G: GraphAccess + ?Sized>(
+    a: &G,
+    s: &[u32],
+    p: f32,
+    r0: usize,
+    r1: usize,
+    seg: &mut InduceSeg,
+) {
+    let InduceSeg { row_nnz, indices, values, rcols, rvals } = seg;
+    row_nnz.clear();
+    indices.clear();
+    values.clear();
+    for si in r0..r1 {
+        let v = s[si];
+        let before = indices.len();
+        a.with_row(v as usize, rcols, rvals, &mut |cs, vs| {
+            induce_row_into(s, v, cs, vs, p, indices, values);
+        });
+        row_nnz.push(indices.len() - before);
+    }
+}
+
+/// The shared body of the workspace fast path, over split-borrowed
+/// workspace parts (so the sample may live in the same workspace).
+fn induce_into_parts<G: GraphAccess + ?Sized>(
+    a: &G,
+    s: &[u32],
+    p: f32,
+    transpose: bool,
+    threads: usize,
+    segs: &mut Vec<InduceSeg>,
+    cursor: &mut Vec<usize>,
+    out: &mut MiniBatch,
+) {
+    let b = s.len();
+    let nseg = threads.max(1).min(b.max(1));
+    if segs.len() < nseg {
+        segs.resize_with(nseg, InduceSeg::default);
+    }
+    // rough per-row cost estimate; small batches run inline (identical
+    // result either way — induction is row-local)
+    let work = b.saturating_mul(512);
+    let used = crate::tensor::pool::par_chunks(&mut segs[..nseg], b, work, |_, r0, r1, seg| {
+        induce_chunk(a, s, p, r0, r1, seg)
+    });
+
+    out.vertices.clear();
+    out.vertices.extend_from_slice(s);
+    let adj = &mut out.adj;
+    adj.rows = b;
+    adj.cols = b;
+    adj.indptr.clear();
+    adj.indptr.push(0);
+    adj.indices.clear();
+    adj.values.clear();
+    let mut nnz = 0usize;
+    for seg in &segs[..used] {
+        for &rn in &seg.row_nnz {
+            nnz += rn;
+            adj.indptr.push(nnz);
+        }
+        adj.indices.extend_from_slice(&seg.indices);
+        adj.values.extend_from_slice(&seg.values);
+    }
+    debug_assert_eq!(adj.indptr.len(), b + 1);
+    debug_assert_eq!(adj.indices.len(), nnz);
+
+    if transpose {
+        adj.transpose_into(&mut out.adj_t, cursor);
+    } else {
+        out.adj_t.rows = b;
+        out.adj_t.cols = b;
+        out.adj_t.indptr.clear();
+        out.adj_t.indptr.resize(b + 1, 0);
+        out.adj_t.indices.clear();
+        out.adj_t.values.clear();
+    }
+}
+
+/// Workspace fast path of [`induce_rescaled`]: induce the subgraph on
+/// sorted `s` (off-diagonal weights rescaled by `1/p`, Eq. 24) into
+/// `out`, reusing every buffer of `ws` and `out`.  `transpose` skips the
+/// `adj_t` build when the caller never reads it (the padded-edge-list
+/// trainer path); `adj_t` is then left structurally empty.  Output is
+/// byte-identical to [`induce_rescaled_reference`] — asserted across edge
+/// cases and thread counts by `tests/induction.rs`.
+pub fn induce_rescaled_into<G: GraphAccess + ?Sized>(
+    a: &G,
+    s: &[u32],
+    p: f32,
+    transpose: bool,
+    ws: &mut InduceWorkspace,
+    out: &mut MiniBatch,
+) {
+    induce_rescaled_into_threads(a, s, p, transpose, crate::tensor::pool::num_threads(), ws, out)
+}
+
+/// [`induce_rescaled_into`] with an explicit thread count (1 = serial
+/// reference) — what the bitwise-equality tests and the bench sweep use.
+pub fn induce_rescaled_into_threads<G: GraphAccess + ?Sized>(
+    a: &G,
+    s: &[u32],
+    p: f32,
+    transpose: bool,
+    threads: usize,
+    ws: &mut InduceWorkspace,
+    out: &mut MiniBatch,
+) {
+    induce_into_parts(a, s, p, transpose, threads, &mut ws.segs, &mut ws.cursor, out)
+}
+
+/// Algorithm 1 + induction for `step`, entirely inside the workspace: the
+/// sample is drawn into `ws.sample` (zero-allocation overlay) and the
+/// induced mini-batch lands in `out`.  The one-call hot path of
+/// `trainer::batch`, the OOC prefetcher and the microbench sweep.
+pub fn sample_and_induce_into<G: GraphAccess + ?Sized>(
+    a: &G,
+    sampler: &UniformVertexSampler,
+    step: u64,
+    transpose: bool,
+    ws: &mut InduceWorkspace,
+    out: &mut MiniBatch,
+) {
+    sampler.sample_into(step, &mut ws.scratch, &mut ws.sample);
+    let p = sampler.inclusion_prob();
+    // split borrows: the sample is read while segs/cursor are written
+    let InduceWorkspace { segs, cursor, sample, .. } = ws;
+    let threads = crate::tensor::pool::num_threads();
+    induce_into_parts(a, sample, p, transpose, threads, segs, cursor, out)
+}
+
+/// Induce the subgraph on sorted `s` and rescale off-diagonal entries by
+/// `1/p` (Eq. 24).  Single-rank convenience wrapper over the workspace
+/// fast path ([`induce_rescaled_into`]); the oracle the distributed
+/// builder is tested against.
+pub fn induce_rescaled(a: &Csr, s: &[u32], p: f32) -> MiniBatch {
+    induce_rescaled_from(a, s, p)
+}
+
+/// As [`induce_rescaled`], but generic over [`GraphAccess`] so the same
+/// mini-batch construction serves out-of-core graphs.  For the same
+/// stored bytes, sample and probability the output is bitwise identical
+/// regardless of where the graph lives — the per-row intersection is the
+/// very same code.
+pub fn induce_rescaled_from<G: GraphAccess + ?Sized>(a: &G, s: &[u32], p: f32) -> MiniBatch {
+    let mut ws = InduceWorkspace::new();
+    let mut out = MiniBatch::default();
+    induce_rescaled_into(a, s, p, true, &mut ws, &mut out);
+    out
+}
+
+/// The row merge of the pre-fast-path implementation: intersect the row's
+/// (sorted) columns with the (sorted) sample by linear merge and push
+/// `(row, col, weight)` triples.
+#[inline]
+fn induce_row_reference(
     s: &[u32],
     si: usize,
     v: u32,
@@ -77,40 +405,22 @@ fn induce_row(
     }
 }
 
-fn assemble_minibatch(s: &[u32], triples: Vec<(u32, u32, f32)>) -> MiniBatch {
-    let b = s.len();
-    let adj = Csr::from_triples(b, b, triples);
-    let adj_t = adj.transpose();
-    MiniBatch { vertices: s.to_vec(), adj, adj_t }
-}
-
-/// Induce the subgraph on sorted `s` and rescale off-diagonal entries by
-/// `1/p` (Eq. 24).  Single-rank reference used by the per-group trainer and
-/// as the oracle the distributed builder is tested against.  Rows are
-/// borrowed zero-copy; the out-of-core variant is [`induce_rescaled_from`].
-pub fn induce_rescaled(a: &Csr, s: &[u32], p: f32) -> MiniBatch {
-    let mut triples = Vec::new();
-    for (si, &v) in s.iter().enumerate() {
-        let (cs, vs) = a.row(v as usize);
-        induce_row(s, si, v, cs, vs, p, &mut triples);
-    }
-    assemble_minibatch(s, triples)
-}
-
-/// As [`induce_rescaled`], but generic over [`GraphAccess`] so the same
-/// mini-batch construction serves out-of-core graphs.  Rows are read into
-/// reused scratch buffers; the per-row merge (`induce_row`) is the very
-/// function the in-memory path runs, so for the same stored bytes, sample
-/// and probability the output is bitwise identical regardless of where the
-/// graph lives.
-pub fn induce_rescaled_from<G: GraphAccess + ?Sized>(a: &G, s: &[u32], p: f32) -> MiniBatch {
+/// The pre-fast-path induction, kept verbatim as the bitwise oracle:
+/// triple list -> sorting [`Csr::from_triples`] -> allocating transpose,
+/// single-threaded.  `tests/induction.rs` asserts the fast path matches
+/// it byte-for-byte and the `BENCH_sampling.json` sweep measures the
+/// speedup against it.
+pub fn induce_rescaled_reference<G: GraphAccess + ?Sized>(a: &G, s: &[u32], p: f32) -> MiniBatch {
     let mut triples = Vec::new();
     let (mut rcols, mut rvals) = (Vec::new(), Vec::new());
     for (si, &v) in s.iter().enumerate() {
         a.read_row(v as usize, &mut rcols, &mut rvals);
-        induce_row(s, si, v, &rcols, &rvals, p, &mut triples);
+        induce_row_reference(s, si, v, &rcols, &rvals, p, &mut triples);
     }
-    assemble_minibatch(s, triples)
+    let b = s.len();
+    let adj = Csr::from_triples(b, b, triples);
+    let adj_t = adj.transpose();
+    MiniBatch { vertices: s.to_vec(), adj, adj_t }
 }
 
 /// Dense-ified `B x B` adjacency (row-major) for the PJRT train-step
@@ -144,9 +454,48 @@ mod tests {
     }
 
     #[test]
+    fn sample_into_matches_sample() {
+        let s = UniformVertexSampler::new(777, 50, 3);
+        let mut scratch = SampleScratch::default();
+        let mut out = Vec::new();
+        for step in 0..6u64 {
+            s.sample_into(step, &mut scratch, &mut out);
+            assert_eq!(out, s.sample(step), "step {step}");
+        }
+    }
+
+    #[test]
     fn inclusion_prob_matches_eq23() {
         let s = UniformVertexSampler::new(101, 11, 0);
         assert!((s.inclusion_prob() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inclusion_prob_is_finite_for_degenerate_sizes() {
+        // n == 1 used to evaluate 0/0 = NaN
+        let s = UniformVertexSampler::new(1, 1, 0);
+        assert_eq!(s.inclusion_prob(), 1.0);
+        // batch == 1 legitimately yields p = 0 (never divided by)
+        let s = UniformVertexSampler::new(10, 1, 0);
+        assert_eq!(s.inclusion_prob(), 0.0);
+        // full batch: every off-diagonal neighbor is certainly included
+        let s = UniformVertexSampler::new(10, 10, 0);
+        assert_eq!(s.inclusion_prob(), 1.0);
+    }
+
+    #[test]
+    fn batch_of_one_induces_finite_weights() {
+        let g = rmat(5, 6, 4).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 1, 9);
+        for step in 0..8u64 {
+            let s = sampler.sample(step);
+            let mb = induce_rescaled(&g, &s, sampler.inclusion_prob());
+            // only a self loop can survive; its weight is untouched
+            assert!(mb.adj.nnz() <= 1);
+            assert!(mb.adj.values.iter().all(|v| v.is_finite()));
+            let want = induce_rescaled_reference(&g, &s, sampler.inclusion_prob());
+            assert_eq!(mb.adj.values, want.adj.values);
+        }
     }
 
     #[test]
@@ -236,6 +585,40 @@ mod tests {
         let est = acc / hits as f64;
         let rel = (est - full).abs() / full.abs();
         assert!(rel < 0.05, "estimator {est} vs full {full} (rel {rel})");
+    }
+
+    #[test]
+    fn fast_path_matches_reference_bitwise() {
+        let g = rmat(8, 10, 21).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 96, 5);
+        let mut ws = InduceWorkspace::new();
+        let mut out = MiniBatch::default();
+        for step in 0..6u64 {
+            let s = sampler.sample(step);
+            let p = sampler.inclusion_prob();
+            let want = induce_rescaled_reference(&g, &s, p);
+            induce_rescaled_into(&g, &s, p, true, &mut ws, &mut out);
+            assert_eq!(out.vertices, want.vertices, "step {step}");
+            assert_eq!(out.adj.indptr, want.adj.indptr);
+            assert_eq!(out.adj.indices, want.adj.indices);
+            assert_eq!(out.adj.values, want.adj.values);
+            assert_eq!(out.adj_t.indptr, want.adj_t.indptr);
+            assert_eq!(out.adj_t.indices, want.adj_t.indices);
+            assert_eq!(out.adj_t.values, want.adj_t.values);
+        }
+    }
+
+    #[test]
+    fn skipped_transpose_leaves_adj_t_structurally_empty() {
+        let g = rmat(6, 6, 1).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, 16, 2);
+        let s = sampler.sample(0);
+        let mut ws = InduceWorkspace::new();
+        let mut out = MiniBatch::default();
+        induce_rescaled_into(&g, &s, sampler.inclusion_prob(), false, &mut ws, &mut out);
+        assert_eq!(out.adj_t.nnz(), 0);
+        assert_eq!(out.adj_t.indptr, vec![0; 17]);
+        assert!(out.adj.nnz() > 0);
     }
 
     #[test]

@@ -60,14 +60,19 @@ pub fn backend_for(kind: BackendKind) -> &'static dyn Backend {
 }
 
 /// Translate a streamed [`StepEvent`] into the public [`StepReport`].
+/// Anomalies ride along in `detail`: a batch that overflowed the
+/// artifact's `edge_cap` reports its dropped-edge count as
+/// `truncated_edges` instead of disappearing silently.
 fn event_report(ev: StepEvent) -> StepReport {
-    let detail = match ev.eval {
-        Some((val, test)) => obj(vec![
-            ("val", Json::from(val as f64)),
-            ("test", Json::from(test as f64)),
-        ]),
-        None => Json::Null,
-    };
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if let Some((val, test)) = ev.eval {
+        fields.push(("val", Json::from(val as f64)));
+        fields.push(("test", Json::from(test as f64)));
+    }
+    if ev.truncated > 0 {
+        fields.push(("truncated_edges", Json::from(ev.truncated)));
+    }
+    let detail = if fields.is_empty() { Json::Null } else { obj(fields) };
     StepReport {
         step: ev.step,
         loss: ev.loss,
@@ -305,6 +310,7 @@ impl Backend for PmmBackend {
                             acc: o.acc,
                             wall_s: t0.elapsed().as_secs_f64(),
                             eval: None,
+                            truncated: 0,
                             done: s + 1 == steps,
                         });
                     }
@@ -486,5 +492,45 @@ impl Session for SimSession {
             }),
             ..RunReport::default()
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_report_surfaces_truncated_edges() {
+        let ev = StepEvent {
+            step: 3,
+            loss: 1.0,
+            acc: f32::NAN,
+            wall_s: 0.1,
+            eval: None,
+            truncated: 17,
+            done: false,
+        };
+        let r = event_report(ev);
+        assert_eq!(r.detail.get("truncated_edges").and_then(Json::as_f64), Some(17.0));
+        // a clean step keeps a Null detail (JSONL stays compact)
+        let clean = StepEvent { truncated: 0, ..ev };
+        assert_eq!(event_report(clean).detail, Json::Null);
+    }
+
+    #[test]
+    fn event_report_keeps_eval_detail() {
+        let ev = StepEvent {
+            step: 0,
+            loss: 0.5,
+            acc: 0.9,
+            wall_s: 0.2,
+            eval: Some((0.7, 0.6)),
+            truncated: 2,
+            done: true,
+        };
+        let r = event_report(ev);
+        assert_eq!(r.detail.get("val").and_then(Json::as_f64), Some(0.7f32 as f64));
+        assert_eq!(r.detail.get("test").and_then(Json::as_f64), Some(0.6f32 as f64));
+        assert_eq!(r.detail.get("truncated_edges").and_then(Json::as_f64), Some(2.0));
     }
 }

@@ -72,8 +72,10 @@ impl StepObserver for LogObserver {
 
     fn on_step(&mut self, r: &StepReport) {
         let eval = r.detail.get("val").is_some();
+        // an edge_cap overflow is an anomaly, never rate-limited away
+        let truncated = r.detail.get("truncated_edges").and_then(Json::as_f64);
         let periodic = self.every > 0 && (r.step + 1) % self.every == 0;
-        if !(periodic || eval || r.done) {
+        if !(periodic || eval || truncated.is_some() || r.done) {
             return;
         }
         let mut line = format!("[session] step {:>6}", r.step + 1);
@@ -88,6 +90,9 @@ impl StepObserver for LogObserver {
             r.detail.get("test").and_then(Json::as_f64),
         ) {
             line.push_str(&format!(" val {v:.4} test {t:.4}"));
+        }
+        if let Some(t) = truncated {
+            line.push_str(&format!(" WARNING: {t:.0} edges dropped past edge_cap"));
         }
         line.push_str(&format!(" ({:.1} ms)", r.wall_s * 1e3));
         eprintln!("{line}");

@@ -130,6 +130,48 @@ pub fn par_row_blocks_pair<F>(
     });
 }
 
+/// Split `[0, rows)` into `outs.len()` contiguous row ranges and run
+/// `f(chunk_index, r0, r1, out_chunk)` on each, one worker per chunk.
+/// Returns the number of chunks actually used: `1` when the job ran
+/// inline on the caller thread (`outs.len() <= 1`, tiny `work`, or fewer
+/// than two rows), `outs.len()` otherwise (trailing ranges may be empty).
+///
+/// Unlike [`par_row_blocks`] the per-chunk output is an arbitrary `T`
+/// (e.g. a growable segment buffer), so producers whose per-row output
+/// size is not known up front — subgraph induction — can run row-ranges
+/// in parallel and concatenate the segments in chunk order afterwards.
+/// When the per-row computation is row-local (no row reads another row's
+/// output), the concatenated stream is bitwise identical for any chunk
+/// count, including the inline path.
+pub fn par_chunks<T, F>(outs: &mut [T], rows: usize, work: usize, f: F) -> usize
+where
+    T: Send,
+    F: Fn(usize, usize, usize, &mut T) + Sync,
+{
+    let nc = outs.len();
+    if nc <= 1 || rows < 2 || work < MIN_PARALLEL_WORK {
+        if let Some(first) = outs.first_mut() {
+            f(0, 0, rows, first);
+            return 1;
+        }
+        return 0;
+    }
+    let per = (rows + nc - 1) / nc;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut iter = outs.iter_mut().enumerate();
+        let (_, first) = iter.next().expect("nc >= 2");
+        for (i, o) in iter {
+            let r0 = (i * per).min(rows);
+            let r1 = ((i + 1) * per).min(rows);
+            s.spawn(move || fr(i, r0, r1, o));
+        }
+        // the caller thread takes chunk 0
+        fr(0, 0, per.min(rows), first);
+    });
+    nc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +224,30 @@ mod tests {
             }
         });
         assert!(a.iter().chain(b.iter()).all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn par_chunks_covers_rows_in_order() {
+        for &(rows, nseg) in &[(1usize, 4usize), (7, 3), (23, 4), (100, 7), (5, 8)] {
+            let mut segs: Vec<Vec<usize>> = vec![Vec::new(); nseg];
+            let used = par_chunks(&mut segs, rows, usize::MAX, |_, r0, r1, seg| {
+                seg.clear();
+                seg.extend(r0..r1);
+            });
+            let flat: Vec<usize> = segs[..used].iter().flatten().copied().collect();
+            assert_eq!(flat, (0..rows).collect::<Vec<_>>(), "rows={rows} nseg={nseg}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_small_work_runs_inline() {
+        let mut segs: Vec<Vec<usize>> = vec![Vec::new(); 4];
+        let used = par_chunks(&mut segs, 10, 10, |i, r0, r1, seg| {
+            assert_eq!((i, r0, r1), (0, 0, 10));
+            seg.push(r1);
+        });
+        assert_eq!(used, 1);
+        assert!(segs[1].is_empty());
     }
 
     #[test]

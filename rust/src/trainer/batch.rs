@@ -9,14 +9,21 @@
 //! ([`BatchMaker::from_store`]); same seed, same batch — bitwise — either
 //! way.  The baseline samplers need `raw_adj`/degree statistics and remain
 //! in-memory only.
+//!
+//! The ScaleGNN path runs the sampling fast path (`sampling::uniform`):
+//! sort-free induction into a reused [`MiniBatch`] slot (the transpose is
+//! skipped — the edge-list payload never reads it), a row-parallel feature
+//! gather, and recycled [`BatchData`] buffers ([`BatchMaker::recycle`]),
+//! so the steady-state `make()` performs ~zero heap allocations
+//! (asserted by `tests/alloc_batch.rs`).
 
 use std::sync::Arc;
 
 use crate::graph::store::{OocGraph, VertexData};
 use crate::graph::Dataset;
 use crate::sampling::{
-    induce_rescaled, induce_rescaled_from, GraphSageSampler, GraphSaintNodeSampler, SamplerKind,
-    UniformVertexSampler,
+    sample_and_induce_into, GraphSageSampler, GraphSaintNodeSampler, InduceWorkspace, MiniBatch,
+    SamplerKind, UniformVertexSampler,
 };
 
 /// One step's packed inputs (ready to become literals).  The adjacency is
@@ -37,8 +44,26 @@ pub struct BatchData {
     pub y: Vec<i32>,
     /// Per-slot loss weight (0 masks a slot out of the loss).
     pub wmask: Vec<f32>,
-    /// edges dropped because the batch exceeded edge_cap (0 in practice)
+    /// edges dropped because the batch exceeded edge_cap (0 in practice;
+    /// surfaced as a trainer warning + session `truncated_edges` detail)
     pub truncated: usize,
+}
+
+impl BatchData {
+    /// An empty shell for [`BatchMaker::make_into`] to fill; buffers grow
+    /// on first use and are reused when the shell is recycled.
+    pub fn empty() -> BatchData {
+        BatchData {
+            step: 0,
+            src: Vec::new(),
+            dst: Vec::new(),
+            val: Vec::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+            wmask: Vec::new(),
+            truncated: 0,
+        }
+    }
 }
 
 /// Where the maker reads graph + vertex data from.
@@ -64,6 +89,12 @@ pub struct BatchMaker {
     uniform: UniformVertexSampler,
     sage: Option<GraphSageSampler>,
     saint: Option<GraphSaintNodeSampler>,
+    /// sampling fast-path scratch (RNG overlay, sample, induction segments)
+    ws: InduceWorkspace,
+    /// reused induced-subgraph slot (vertices + adjacency; no transpose)
+    mb: MiniBatch,
+    /// recycled output shells ([`BatchMaker::recycle`])
+    free: Vec<BatchData>,
 }
 
 impl BatchMaker {
@@ -89,6 +120,9 @@ impl BatchMaker {
             saint: (kind == SamplerKind::GraphSaintNode)
                 .then(|| GraphSaintNodeSampler::new(&data, batch, group_seed)),
             source: Source::Mem(data),
+            ws: InduceWorkspace::new(),
+            mb: MiniBatch::default(),
+            free: Vec::new(),
         }
     }
 
@@ -110,32 +144,72 @@ impl BatchMaker {
             sage: None,
             saint: None,
             source: Source::Ooc(store),
+            ws: InduceWorkspace::new(),
+            mb: MiniBatch::default(),
+            free: Vec::new(),
         }
     }
 
     /// Build the batch for `step` (Algorithm 1 for ScaleGNN; the baselines'
-    /// own pipelines otherwise).
+    /// own pipelines otherwise).  Pops a recycled shell when one is
+    /// available ([`BatchMaker::recycle`]), so the double-buffered
+    /// steady state allocates nothing.
     pub fn make(&mut self, step: u64) -> BatchData {
+        let mut out = self.free.pop().unwrap_or_else(BatchData::empty);
+        self.make_into(step, &mut out);
+        out
+    }
+
+    /// Return a spent batch's buffers for reuse by a later
+    /// [`BatchMaker::make`] — the consumer half of the double-buffer
+    /// recycle loop (`trainer`'s prefetcher sends shells back over a
+    /// channel; the inline path recycles directly).
+    pub fn recycle(&mut self, spent: BatchData) {
+        // a couple of shells cover every double-buffering depth in use;
+        // beyond that just drop (a burst would otherwise pin memory)
+        if self.free.len() < 4 {
+            self.free.push(spent);
+        }
+    }
+
+    /// [`BatchMaker::make`] into a caller-owned shell: every output buffer
+    /// is cleared and refilled, never reallocated once grown.
+    pub fn make_into(&mut self, step: u64, out: &mut BatchData) {
         let b = self.batch;
-        let (vertices, adj, weights): (Vec<u32>, _, Vec<f32>) = match (&self.source, self.kind) {
+        let cap = self.edge_cap;
+        out.step = step;
+        out.wmask.clear();
+
+        // --- sample + induce into the reused `self.mb` slot ---
+        match (&self.source, self.kind) {
             (Source::Mem(d), SamplerKind::ScaleGnnUniform) => {
-                let s = self.uniform.sample(step);
-                let mb = induce_rescaled(&d.adj, &s, self.uniform.inclusion_prob());
+                // fast path: sort-free induction, no transpose (the edge
+                // list below never reads adj_t)
+                sample_and_induce_into(
+                    &d.adj,
+                    &self.uniform,
+                    step,
+                    false,
+                    &mut self.ws,
+                    &mut self.mb,
+                );
                 // loss on sampled train-split vertices
-                let w = s
-                    .iter()
-                    .map(|&v| if d.split[v as usize] == 0 { 1.0 } else { 0.0 })
-                    .collect();
-                (s, mb.adj, w)
+                for &v in &self.mb.vertices {
+                    out.wmask.push(if d.split[v as usize] == 0 { 1.0 } else { 0.0 });
+                }
             }
             (Source::Ooc(g), SamplerKind::ScaleGnnUniform) => {
-                let s = self.uniform.sample(step);
-                let mb = induce_rescaled_from(g.as_ref(), &s, self.uniform.inclusion_prob());
-                let w = s
-                    .iter()
-                    .map(|&v| if g.split_of(v as usize) == 0 { 1.0 } else { 0.0 })
-                    .collect();
-                (s, mb.adj, w)
+                sample_and_induce_into(
+                    g.as_ref(),
+                    &self.uniform,
+                    step,
+                    false,
+                    &mut self.ws,
+                    &mut self.mb,
+                );
+                for &v in &self.mb.vertices {
+                    out.wmask.push(if g.split_of(v as usize) == 0 { 1.0 } else { 0.0 });
+                }
             }
             (Source::Mem(d), SamplerKind::GraphSage) => {
                 let sb = self
@@ -143,7 +217,9 @@ impl BatchMaker {
                     .as_ref()
                     .expect("in-memory maker carries the GraphSAGE sampler")
                     .sample(d, step, true);
-                (sb.vertices, sb.adj, sb.loss_weight)
+                out.wmask.extend_from_slice(&sb.loss_weight);
+                self.mb.vertices = sb.vertices;
+                self.mb.adj = sb.adj;
             }
             (Source::Mem(d), SamplerKind::GraphSaintNode) => {
                 let sb = self
@@ -151,53 +227,76 @@ impl BatchMaker {
                     .as_ref()
                     .expect("in-memory maker carries the GraphSAINT sampler")
                     .sample(d, step);
-                let w = sb
-                    .vertices
-                    .iter()
-                    .zip(&sb.loss_weight)
-                    .map(|(&v, &lw)| if d.split[v as usize] == 0 { lw } else { 0.0 })
-                    .collect();
-                (sb.vertices, sb.adj, w)
+                for (&v, &lw) in sb.vertices.iter().zip(&sb.loss_weight) {
+                    out.wmask.push(if d.split[v as usize] == 0 { lw } else { 0.0 });
+                }
+                self.mb.vertices = sb.vertices;
+                self.mb.adj = sb.adj;
             }
             (Source::Ooc(_), kind) => {
                 panic!("sampler {kind:?} is not supported out-of-core (uniform only)")
             }
-        };
+        }
 
-        // flatten the induced CSR into the padded edge list
-        let cap = self.edge_cap;
-        let mut src = vec![0i32; cap];
-        let mut dst = vec![0i32; cap];
-        let mut val = vec![0.0f32; cap];
+        // --- flatten the induced CSR into the padded edge list ---
+        // (the zero-refill after clear is the padding contract)
+        out.src.clear();
+        out.src.resize(cap, 0);
+        out.dst.clear();
+        out.dst.resize(cap, 0);
+        out.val.clear();
+        out.val.resize(cap, 0.0);
+        let adj = &self.mb.adj;
         let mut k = 0usize;
         let mut truncated = 0usize;
         for r in 0..adj.rows {
             let (cs, vs) = adj.row(r);
             for (&c, &w) in cs.iter().zip(vs) {
                 if k < cap {
-                    dst[k] = r as i32;
-                    src[k] = c as i32;
-                    val[k] = w;
+                    out.dst[k] = r as i32;
+                    out.src[k] = c as i32;
+                    out.val[k] = w;
                     k += 1;
                 } else {
                     truncated += 1;
                 }
             }
         }
+        out.truncated = truncated;
 
-        let mut x = vec![0.0f32; b * self.d_in];
-        let mut y = vec![0i32; b];
-        {
-            let vd: &dyn VertexData = match &self.source {
-                Source::Mem(d) => d.as_ref(),
-                Source::Ooc(g) => g.as_ref(),
-            };
-            for (i, &v) in vertices.iter().enumerate() {
-                vd.read_features(v as usize, &mut x[i * self.d_in..(i + 1) * self.d_in]);
-                y[i] = vd.label_of(v as usize) as i32;
-            }
+        // --- gather features (row-parallel) and labels ---
+        let d_in = self.d_in;
+        out.x.clear();
+        out.x.resize(b * d_in, 0.0);
+        out.y.clear();
+        out.y.resize(b, 0);
+        let vertices = &self.mb.vertices;
+        let rows = vertices.len().min(b);
+        let vd: &dyn VertexData = match &self.source {
+            Source::Mem(d) => d.as_ref(),
+            Source::Ooc(g) => g.as_ref(),
+        };
+        if d_in > 0 && rows > 0 {
+            crate::tensor::pool::par_row_blocks(
+                &mut out.x[..rows * d_in],
+                rows,
+                d_in,
+                crate::tensor::pool::num_threads(),
+                4 * rows * d_in,
+                |r0, chunk| {
+                    let nr = chunk.len() / d_in;
+                    for i in 0..nr {
+                        vd.read_features(
+                            vertices[r0 + i] as usize,
+                            &mut chunk[i * d_in..(i + 1) * d_in],
+                        );
+                    }
+                },
+            );
         }
-        BatchData { step, src, dst, val, x, y, wmask: weights, truncated }
+        for (i, &v) in vertices.iter().take(b).enumerate() {
+            out.y[i] = vd.label_of(v as usize) as i32;
+        }
     }
 }
 
@@ -248,5 +347,40 @@ mod tests {
         let b0 = m.make(0);
         let b1 = m.make(1);
         assert_ne!(b0.y, b1.y);
+    }
+
+    #[test]
+    fn recycled_shells_rebuild_bitwise_identical_batches() {
+        for kind in [
+            SamplerKind::ScaleGnnUniform,
+            SamplerKind::GraphSage,
+            SamplerKind::GraphSaintNode,
+        ] {
+            let mut fresh = maker(kind);
+            let mut recycled = maker(kind);
+            for step in 0..5u64 {
+                let want = fresh.make(step);
+                let got = recycled.make(step);
+                assert_eq!(got.step, want.step, "{kind:?} step {step}");
+                assert_eq!(got.src, want.src, "{kind:?} step {step}");
+                assert_eq!(got.dst, want.dst);
+                assert_eq!(got.val, want.val);
+                assert_eq!(got.x, want.x);
+                assert_eq!(got.y, want.y);
+                assert_eq!(got.wmask, want.wmask);
+                assert_eq!(got.truncated, want.truncated);
+                recycled.recycle(got); // reuse the same shell every step
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_edge_cap_reports_truncation() {
+        let d = Arc::new(datasets::load("tiny").unwrap());
+        let mut m = BatchMaker::new(d, SamplerKind::ScaleGnnUniform, 32, 1, 2, 9);
+        let b = m.make(0);
+        // a 32-vertex induced subgraph always carries > 1 edge (self loops)
+        assert!(b.truncated > 0, "edge_cap 1 must truncate");
+        assert_eq!(b.val.len(), 1);
     }
 }

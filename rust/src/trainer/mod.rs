@@ -21,7 +21,7 @@ pub mod batch;
 pub mod eval;
 
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -33,7 +33,7 @@ use crate::graph::{datasets, Dataset};
 use crate::grid::{Axis, Grid4D};
 use crate::model::GcnDims;
 use crate::runtime::{lit_f32, lit_i32, lit_u32, scalar_f32, to_f32, ModelMeta, Runtime};
-use crate::sampling::{induce_rescaled_from, SamplerKind, UniformVertexSampler};
+use crate::sampling::{SamplerKind, UniformVertexSampler};
 use crate::tensor::Mat;
 use crate::util::rng::splitmix64;
 use batch::{BatchData, BatchMaker};
@@ -156,6 +156,11 @@ pub struct StepEvent {
     pub wall_s: f64,
     /// Full-graph (val, test) accuracy when this step evaluated.
     pub eval: Option<(f32, f32)>,
+    /// Edges dropped from this step's batch because it exceeded the
+    /// artifact's `edge_cap` (0 on paths without an edge cap).  Non-zero
+    /// values are surfaced as a trainer warning and a `truncated_edges`
+    /// session detail instead of being silently dropped.
+    pub truncated: usize,
     /// Whether this is the last step of the run.
     pub done: bool,
 }
@@ -176,18 +181,29 @@ pub fn meta_to_dims(m: &ModelMeta) -> GcnDims {
 }
 
 /// Spawn the §V-A prefetch pipeline: a sampler thread feeding a bounded(2)
-/// channel.  Returns the receiving end.
-fn spawn_prefetcher(mut maker: BatchMaker, max_steps: u64) -> Receiver<BatchData> {
+/// channel.  Returns the receiving end plus the recycle sender the trainer
+/// uses to hand spent [`BatchData`] shells back — with the shells
+/// circulating, the sampler thread's steady-state `make()` allocates
+/// nothing (double buffering in both directions).
+fn spawn_prefetcher(
+    mut maker: BatchMaker,
+    max_steps: u64,
+) -> (Receiver<BatchData>, SyncSender<BatchData>) {
     let (tx, rx) = sync_channel::<BatchData>(2);
+    let (free_tx, free_rx) = sync_channel::<BatchData>(4);
     std::thread::spawn(move || {
         for step in 0..max_steps {
+            // drain recycled shells first so `make` reuses their buffers
+            while let Ok(spent) = free_rx.try_recv() {
+                maker.recycle(spent);
+            }
             let b = maker.make(step);
             if tx.send(b).is_err() {
                 break; // trainer finished / dropped
             }
         }
     });
-    rx
+    (rx, free_tx)
 }
 
 struct PackedState {
@@ -272,8 +288,9 @@ fn worker_loop(
 
     let mut st = init_state(meta, cfg.seed);
     // §V-A double buffering: with prefetch on, the maker moves to a sampler
-    // thread that builds batch t+1 while step t executes; otherwise it runs
-    // inline on the critical path (the Fig. 5 baseline).
+    // thread that builds batch t+1 while step t executes (spent shells are
+    // recycled back over the second channel); otherwise it runs inline on
+    // the critical path (the Fig. 5 baseline).
     let (mut rx, mut inline_maker) = if cfg.prefetch {
         (Some(spawn_prefetcher(maker, total_steps)), None)
     } else {
@@ -288,6 +305,7 @@ fn worker_loop(
     let mut best_val = 0.0f32;
     let mut time_to_target = None;
     let mut last_loss = f32::NAN;
+    let mut warned_truncation = false;
     // evaluation parameter buffers, allocated once and refilled per eval
     let mut eval_params: Vec<crate::tensor::Mat> = meta
         .param_shapes
@@ -303,16 +321,36 @@ fn worker_loop(
         // --- sample (or wait on the prefetcher) ---
         let t0 = Instant::now();
         let bdat = match (&mut rx, &mut inline_maker) {
-            (Some(rx), _) => rx.recv().map_err(|_| anyhow!("prefetcher died"))?,
+            (Some((rx, _)), _) => rx.recv().map_err(|_| anyhow!("prefetcher died"))?,
             (None, Some(mk)) => mk.make(step),
             _ => unreachable!(),
         };
         bd.sample_wait_s += t0.elapsed().as_secs_f64();
+        let truncated = bdat.truncated;
+        if truncated > 0 && !warned_truncation {
+            warned_truncation = true;
+            eprintln!(
+                "warning: [group {group}] step {step}: {truncated} edges dropped past \
+                 edge_cap {} — the batch is inexact; rebuild the artifacts with a larger \
+                 edge_cap (further occurrences stream as `truncated` step events)",
+                meta.edge_cap
+            );
+        }
 
         // --- pack ---
         let t0 = Instant::now();
         let mut inputs = batch_literals(meta, &bdat, group_seed)?;
         bd.pack_s += t0.elapsed().as_secs_f64();
+
+        // hand the spent shell back for buffer reuse (never blocks; a
+        // full/closed recycle channel or finished prefetcher just drops it)
+        match (&rx, &mut inline_maker) {
+            (Some((_, free_tx)), _) => {
+                let _ = free_tx.try_send(bdat);
+            }
+            (None, Some(mk)) => mk.recycle(bdat),
+            _ => unreachable!(),
+        }
 
         if fused {
             let t0 = Instant::now();
@@ -444,6 +482,7 @@ fn worker_loop(
                 acc: f32::NAN,
                 wall_s: step_wall,
                 eval: evaled,
+                truncated,
                 done: target_stop || step == total_steps - 1,
             });
         }
@@ -612,20 +651,43 @@ struct OocBatch {
     w: Vec<f32>,
 }
 
-fn build_ooc_batch(store: &OocGraph, sampler: &UniformVertexSampler, step: u64) -> OocBatch {
-    use crate::graph::store::VertexData;
-    let s = sampler.sample(step);
-    let mb = induce_rescaled_from(store, &s, sampler.inclusion_prob());
-    let d_in = store.d_in;
-    let mut x = Mat::zeros(s.len(), d_in);
-    let mut y = Vec::with_capacity(s.len());
-    let mut w = Vec::with_capacity(s.len());
-    for (i, &v) in s.iter().enumerate() {
-        store.read_features(v as usize, &mut x.data[i * d_in..(i + 1) * d_in]);
-        y.push(store.label_of(v as usize));
-        w.push(if store.split_of(v as usize) == 0 { 1.0 } else { 0.0 });
+impl OocBatch {
+    /// An empty shell for [`build_ooc_batch_into`] to fill/recycle.
+    fn empty() -> OocBatch {
+        OocBatch {
+            mb: crate::sampling::MiniBatch::default(),
+            x: Mat::zeros(0, 0),
+            y: Vec::new(),
+            w: Vec::new(),
+        }
     }
-    OocBatch { mb, x, y, w }
+}
+
+/// Build the batch for `step` into a (possibly recycled) shell through the
+/// sampling fast path: sort-free induction with the transpose kept (the
+/// reference GCN backward needs `adj_t`), disk rows/features read through
+/// the store's block cache, zero steady-state allocations.
+fn build_ooc_batch_into(
+    store: &OocGraph,
+    sampler: &UniformVertexSampler,
+    step: u64,
+    ws: &mut crate::sampling::InduceWorkspace,
+    out: &mut OocBatch,
+) {
+    use crate::graph::store::VertexData;
+    crate::sampling::sample_and_induce_into(store, sampler, step, true, ws, &mut out.mb);
+    let d_in = store.d_in;
+    let b = out.mb.vertices.len();
+    if out.x.rows != b || out.x.cols != d_in {
+        out.x = Mat::zeros(b, d_in);
+    }
+    out.y.clear();
+    out.w.clear();
+    for (i, &v) in out.mb.vertices.iter().enumerate() {
+        store.read_features(v as usize, &mut out.x.data[i * d_in..(i + 1) * d_in]);
+        out.y.push(store.label_of(v as usize));
+        out.w.push(if store.split_of(v as usize) == 0 { 1.0 } else { 0.0 });
+    }
 }
 
 /// Train the pure-Rust reference GCN from a `.pallas` store: Algorithm 1
@@ -663,22 +725,28 @@ pub fn train_from_store_with_progress(
     let group_seed = splitmix64(cfg.seed ^ 0xD0);
     let sampler = UniformVertexSampler::new(store.n, cfg.batch, group_seed);
 
-    // §V-A overlap: batch t+1 is read from disk while step t computes
-    let rx = if cfg.prefetch {
+    // §V-A overlap: batch t+1 is read from disk while step t computes.
+    // Spent shells circulate back over the recycle channel, so the sampler
+    // thread's steady-state batch build allocates nothing.
+    let (rx, free_tx) = if cfg.prefetch {
         let (tx, rx) = sync_channel::<OocBatch>(2);
+        let (free_tx, free_rx) = sync_channel::<OocBatch>(4);
         let st = store.clone();
         let sm = sampler.clone();
         let steps = cfg.steps;
         std::thread::spawn(move || {
+            let mut ws = crate::sampling::InduceWorkspace::new();
             for step in 0..steps {
-                if tx.send(build_ooc_batch(&st, &sm, step)).is_err() {
+                let mut shell = free_rx.try_recv().unwrap_or_else(|_| OocBatch::empty());
+                build_ooc_batch_into(&st, &sm, step, &mut ws, &mut shell);
+                if tx.send(shell).is_err() {
                     break; // trainer finished / dropped
                 }
             }
         });
-        Some(rx)
+        (Some(rx), Some(free_tx))
     } else {
-        None
+        (None, None)
     };
 
     let mut params = crate::model::init_params(&dims, cfg.seed);
@@ -688,18 +756,33 @@ pub fn train_from_store_with_progress(
     let mut report = OocTrainReport { store_bytes: store.store_bytes(), ..Default::default() };
     let mut wait = 0.0f64;
     let mut last = (f32::NAN, 0.0f32);
+    // inline-path (prefetch off) workspace + reused shell
+    let mut inline_ws = crate::sampling::InduceWorkspace::new();
+    let mut inline_shell = OocBatch::empty();
     let t_train = Instant::now();
     for step in 0..cfg.steps {
         let t_step = Instant::now();
-        let b = match &rx {
-            Some(rx) => rx.recv().map_err(|_| anyhow!("ooc prefetcher died"))?,
-            None => build_ooc_batch(&store, &sampler, step),
+        let mut recvd: Option<OocBatch> = None;
+        let b: &OocBatch = match &rx {
+            Some(rx) => {
+                recvd = Some(rx.recv().map_err(|_| anyhow!("ooc prefetcher died"))?);
+                recvd.as_ref().expect("just set")
+            }
+            None => {
+                build_ooc_batch_into(&store, &sampler, step, &mut inline_ws, &mut inline_shell);
+                &inline_shell
+            }
         };
         wait += t_step.elapsed().as_secs_f64();
         let (loss, acc) = crate::model::train_step_ws(
             &dims, &mut params, &mut opt, &b.mb.adj, &b.mb.adj_t, &b.x, &b.y, &b.w, &masks,
             cfg.lr, &mut ws,
         );
+        // recycle the spent shell (never blocks; drops when the channel is
+        // full or the prefetcher already exited)
+        if let (Some(ftx), Some(spent)) = (&free_tx, recvd.take()) {
+            let _ = ftx.try_send(spent);
+        }
         last = (loss, acc);
         report.loss_curve.push((step, loss));
         if cfg.verbose {
@@ -713,6 +796,7 @@ pub fn train_from_store_with_progress(
                 acc,
                 wall_s: t_step.elapsed().as_secs_f64(),
                 eval: None,
+                truncated: 0,
                 done: step + 1 == cfg.steps,
             });
         }

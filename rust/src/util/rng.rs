@@ -14,6 +14,14 @@ pub fn splitmix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Reusable scratch of [`Rng::sample_k_of_n_sorted_into`]: the sparse
+/// Fisher–Yates permutation overlay, retained (cleared, capacity kept)
+/// across steps so the steady-state sample draw allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct SampleScratch {
+    overlay: std::collections::HashMap<u64, u64>,
+}
+
 /// Xoshiro256++ PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -109,12 +117,35 @@ impl Rng {
     /// returned **sorted** — Eq. 20's `S ~ Uniform(C(V, B))`.
     ///
     /// Partial Fisher–Yates over a sparse (hash-map overlay) permutation:
-    /// `O(k)` time and space regardless of `n`.
+    /// `O(k)` time and space regardless of `n`.  Allocating convenience
+    /// wrapper over [`Rng::sample_k_of_n_sorted_into`].
     pub fn sample_k_of_n_sorted(&mut self, k: usize, n: usize) -> Vec<u32> {
-        assert!(k <= n, "cannot sample {k} of {n}");
-        let mut overlay: std::collections::HashMap<u64, u64> =
-            std::collections::HashMap::with_capacity(k * 2);
         let mut out = Vec::with_capacity(k);
+        self.sample_k_of_n_sorted_into(k, n, &mut SampleScratch::default(), &mut out);
+        out
+    }
+
+    /// Workspace variant of [`Rng::sample_k_of_n_sorted`]: the sparse
+    /// permutation overlay lives in `scratch` and the sample lands in
+    /// `out`, so the steady-state per-step draw performs zero heap
+    /// allocations once both have warmed up.  The overlay is an
+    /// implementation detail of the partial Fisher–Yates walk — clearing a
+    /// retained map is observationally identical to building a fresh one,
+    /// so the draw sequence (and therefore the sample) is identical to the
+    /// allocating wrapper for the same RNG state.
+    pub fn sample_k_of_n_sorted_into(
+        &mut self,
+        k: usize,
+        n: usize,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<u32>,
+    ) {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        let overlay = &mut scratch.overlay;
+        overlay.clear();
+        overlay.reserve(k * 2); // no-op once the scratch has warmed up
+        out.clear();
+        out.reserve(k);
         for i in 0..k as u64 {
             let j = i + self.below(n as u64 - i);
             let vj = *overlay.get(&j).unwrap_or(&j);
@@ -123,7 +154,6 @@ impl Rng {
             out.push(vj as u32);
         }
         out.sort_unstable();
-        out
     }
 
     /// Fisher–Yates shuffle of a slice.
@@ -184,6 +214,19 @@ mod tests {
                 assert!(w[0] < w[1], "sorted + distinct");
             }
             assert!(s.iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn sample_into_reused_scratch_matches_allocating_wrapper() {
+        let mut scratch = SampleScratch::default();
+        let mut out = Vec::new();
+        for step in 0..8u64 {
+            let mut a = Rng::for_step(13, step);
+            let mut b = Rng::for_step(13, step);
+            let want = a.sample_k_of_n_sorted(33, 500);
+            b.sample_k_of_n_sorted_into(33, 500, &mut scratch, &mut out);
+            assert_eq!(out, want, "step {step}");
         }
     }
 

@@ -1,0 +1,94 @@
+//! Integration: steady-state mini-batch construction must be
+//! allocation-free — the sampling-fast-path acceptance bar.  After a short
+//! warmup (buffer capacities grow to their steady sizes), a recycled
+//! `BatchMaker::make()` and a workspace `sample_and_induce_into` must
+//! average ~zero heap allocations per step.
+//!
+//! A counting global allocator measures exact allocation counts.  The test
+//! pins `PALLAS_THREADS=1` before any pool use so the serial inline path is
+//! exercised and thread-spawn allocations cannot pollute the counts (this
+//! file contains exactly one test, so there is no env-mutation race).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_batch_construction_is_allocation_free() {
+    std::env::set_var("PALLAS_THREADS", "1");
+
+    use std::sync::Arc;
+
+    use scalegnn::graph::datasets;
+    use scalegnn::sampling::{
+        sample_and_induce_into, InduceWorkspace, MiniBatch, SamplerKind, UniformVertexSampler,
+    };
+    use scalegnn::trainer::batch::BatchMaker;
+
+    let d = Arc::new(datasets::load("tiny").unwrap());
+
+    // --- full BatchMaker::make with shell recycling ---
+    let mut maker = BatchMaker::new(d.clone(), SamplerKind::ScaleGnnUniform, 64, 2048, 2, 9);
+    // warmup: capacities grow to the steady-state maximum
+    for step in 0..8u64 {
+        let b = maker.make(step);
+        maker.recycle(b);
+    }
+    let before = allocs();
+    let steps = 20u64;
+    for step in 8..8 + steps {
+        let b = maker.make(step);
+        maker.recycle(b);
+    }
+    let per_step = (allocs() - before) as f64 / steps as f64;
+    // ~0: an occasional capacity regrow on an unusually dense batch is
+    // amortized away; anything structural (per-step Vec/Box/HashMap churn)
+    // lands far above 1
+    assert!(
+        per_step < 1.0,
+        "BatchMaker::make allocates {per_step:.2}x per step in steady state"
+    );
+
+    // --- raw workspace induction (with transpose, the OOC/PMM shape) ---
+    let sampler = UniformVertexSampler::new(d.n, 64, 11);
+    let mut ws = InduceWorkspace::new();
+    let mut mb = MiniBatch::default();
+    for step in 0..8u64 {
+        sample_and_induce_into(&d.adj, &sampler, step, true, &mut ws, &mut mb);
+    }
+    let before = allocs();
+    for step in 8..8 + steps {
+        sample_and_induce_into(&d.adj, &sampler, step, true, &mut ws, &mut mb);
+    }
+    let per_step = (allocs() - before) as f64 / steps as f64;
+    assert!(
+        per_step < 1.0,
+        "sample_and_induce_into allocates {per_step:.2}x per step in steady state"
+    );
+}

@@ -1,0 +1,312 @@
+//! Integration: the sampling fast path (sort-free workspace induction,
+//! strategy-switching intersection, row-range parallelism) must be
+//! **byte-identical** to the pre-fast-path reference
+//! (`induce_rescaled_reference`: triple list -> sorting `from_triples` ->
+//! allocating transpose) on every graph shape and batch regime — in
+//! memory and out of core, serial and parallel, fresh and reused
+//! workspace — and the `BatchData` the trainer consumes must be identical
+//! through the whole maker pipeline.
+
+use std::sync::Arc;
+
+use scalegnn::graph::generate::rmat;
+use scalegnn::graph::store::{pack, OocGraph};
+use scalegnn::graph::{datasets, Csr};
+use scalegnn::sampling::{
+    induce_rescaled_into_threads, induce_rescaled_reference, InduceWorkspace, MiniBatch,
+    SamplerKind, UniformVertexSampler,
+};
+use scalegnn::trainer::batch::BatchMaker;
+
+const THREADS: &[usize] = &[1, 2, 3, 4, 8];
+
+fn assert_minibatch_eq(got: &MiniBatch, want: &MiniBatch, what: &str) {
+    assert_eq!(got.vertices, want.vertices, "{what}: vertices");
+    assert_eq!((got.adj.rows, got.adj.cols), (want.adj.rows, want.adj.cols), "{what}: adj dims");
+    assert_eq!(got.adj.indptr, want.adj.indptr, "{what}: adj indptr");
+    assert_eq!(got.adj.indices, want.adj.indices, "{what}: adj indices");
+    assert_eq!(got.adj.values, want.adj.values, "{what}: adj values");
+    assert_eq!(got.adj_t.indptr, want.adj_t.indptr, "{what}: adj_t indptr");
+    assert_eq!(got.adj_t.indices, want.adj_t.indices, "{what}: adj_t indices");
+    assert_eq!(got.adj_t.values, want.adj_t.values, "{what}: adj_t values");
+}
+
+/// Fast path at every thread count — with a workspace reused across all of
+/// them, the adversarial case — vs the reference oracle.
+fn check_graph(g: &Csr, s: &[u32], p: f32, what: &str) {
+    let want = induce_rescaled_reference(g, s, p);
+    let mut ws = InduceWorkspace::new();
+    let mut out = MiniBatch::default();
+    for &t in THREADS {
+        induce_rescaled_into_threads(g, s, p, true, t, &mut ws, &mut out);
+        assert_minibatch_eq(&out, &want, &format!("{what} t={t}"));
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_on_rmat_graphs() {
+    for (scale, ef, seed) in [(8u32, 8usize, 1u64), (9, 16, 2), (10, 4, 3)] {
+        let g = rmat(scale, ef, seed).gcn_normalize();
+        let sampler = UniformVertexSampler::new(g.rows, (g.rows / 3).max(2), 7 + seed);
+        for step in 0..4u64 {
+            let s = sampler.sample(step);
+            check_graph(&g, &s, sampler.inclusion_prob(), &format!("rmat s{scale} step {step}"));
+        }
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_on_full_batch() {
+    // batch == n: every vertex sampled, p == 1 (no rescale)
+    let g = rmat(8, 10, 11).gcn_normalize();
+    let n = g.rows;
+    let sampler = UniformVertexSampler::new(n, n, 5);
+    let s = sampler.sample(0);
+    assert_eq!(s.len(), n);
+    assert_eq!(sampler.inclusion_prob(), 1.0);
+    check_graph(&g, &s, sampler.inclusion_prob(), "batch == n");
+}
+
+#[test]
+fn fast_path_matches_reference_on_batch_of_one() {
+    // batch == 1: p == 0 by Eq. 23; only a self loop can survive and it is
+    // never divided by p
+    let g = rmat(7, 6, 13).gcn_normalize();
+    let sampler = UniformVertexSampler::new(g.rows, 1, 17);
+    for step in 0..6u64 {
+        let s = sampler.sample(step);
+        check_graph(&g, &s, sampler.inclusion_prob(), &format!("batch==1 step {step}"));
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_on_empty_rows() {
+    // raw un-normalized graph: many rows have no entries at all
+    let n = 600usize;
+    let mut triples = Vec::new();
+    for i in (0..n).step_by(7) {
+        triples.push((i as u32, ((i * 13 + 5) % n) as u32, 0.5));
+    }
+    let g = Csr::from_triples(n, n, triples);
+    assert!(g.degrees().iter().filter(|&&d| d == 0).count() > n / 2);
+    let sampler = UniformVertexSampler::new(n, 200, 3);
+    let s = sampler.sample(1);
+    check_graph(&g, &s, sampler.inclusion_prob(), "empty rows");
+}
+
+#[test]
+fn fast_path_matches_reference_on_all_self_loop_graph() {
+    // pure diagonal: every induced edge is a self loop (weights untouched)
+    let n = 500usize;
+    let triples: Vec<(u32, u32, f32)> =
+        (0..n as u32).map(|i| (i, i, 1.0 + i as f32 * 0.01)).collect();
+    let g = Csr::from_triples(n, n, triples);
+    let sampler = UniformVertexSampler::new(n, 128, 23);
+    let s = sampler.sample(2);
+    check_graph(&g, &s, sampler.inclusion_prob(), "all self loops");
+    let want = induce_rescaled_reference(&g, &s, sampler.inclusion_prob());
+    assert_eq!(want.adj.nnz(), s.len(), "one self loop per sampled vertex");
+}
+
+#[test]
+fn both_gallop_strategies_match_the_merge() {
+    // Star graph: hub row 0 has degree n-1 (probe-the-row strategy when the
+    // sample is small), leaves have degree 2 (merge / probe-the-sample).
+    let n = 3000usize;
+    let mut triples = Vec::new();
+    for j in 1..n as u32 {
+        triples.push((0u32, j, 0.25));
+        triples.push((j, 0u32, 0.25));
+        triples.push((j, j, 1.0));
+    }
+    let g = Csr::from_triples(n, n, triples);
+
+    // small sample including the hub: hub row takes the probe-the-row
+    // branch (deg = 2999 > 16 * B)
+    let mut s: Vec<u32> = vec![0, 3, 50, 700, 1500, 2200, 2999];
+    s.sort_unstable();
+    check_graph(&g, &s, 0.3, "probe-the-row (hub, small sample)");
+
+    // large sample over low-degree rows: probe-the-sample branch
+    // (deg * 16 < B for every leaf row)
+    let sampler = UniformVertexSampler::new(n, 1024, 31);
+    let s = sampler.sample(4);
+    check_graph(&g, &s, sampler.inclusion_prob(), "probe-the-sample (large batch)");
+}
+
+#[test]
+fn skewed_rmat_exercises_mixed_strategies_bitwise() {
+    // R-MAT degree profiles are heavy-tailed: with a large batch the same
+    // induction mixes probe-the-sample rows (low-degree tail) and merge
+    // rows (hubs) in one pass.
+    let g = rmat(11, 16, 41).gcn_normalize();
+    let degs = g.degrees();
+    let dmax = *degs.iter().max().unwrap();
+    let dmin = *degs.iter().min().unwrap();
+    assert!(dmax > 4 * dmin.max(1), "expected a skewed degree profile ({dmin}..{dmax})");
+    let sampler = UniformVertexSampler::new(g.rows, 1024, 43);
+    for step in 0..3u64 {
+        let s = sampler.sample(step);
+        check_graph(&g, &s, sampler.inclusion_prob(), &format!("skewed rmat step {step}"));
+    }
+}
+
+#[test]
+fn sorted_triple_constructor_agrees_with_direct_assembly() {
+    // Three independent routes to the induced adjacency must coincide:
+    // the sorting `from_triples` (reference), the sort-free
+    // `from_sorted_triples_into` over the same in-order triple stream,
+    // and the fast path's direct segment assembly.
+    let g = rmat(9, 12, 61).gcn_normalize();
+    let sampler = UniformVertexSampler::new(g.rows, 160, 63);
+    let mut sorted = Csr::empty(0, 0);
+    let mut ws = InduceWorkspace::new();
+    let mut fast = MiniBatch::default();
+    for step in 0..4u64 {
+        let s = sampler.sample(step);
+        let p = sampler.inclusion_prob();
+        let want = induce_rescaled_reference(&g, &s, p);
+        // rebuild the reference's (row, col)-ordered, duplicate-free
+        // triple stream and feed it to the sort-free constructor
+        let mut triples: Vec<(u32, u32, f32)> = Vec::new();
+        for r in 0..want.adj.rows {
+            let (cs, vs) = want.adj.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                triples.push((r as u32, c, v));
+            }
+        }
+        Csr::from_sorted_triples_into(s.len(), s.len(), &triples, &mut sorted);
+        assert_eq!(sorted.indptr, want.adj.indptr, "step {step}");
+        assert_eq!(sorted.indices, want.adj.indices);
+        assert_eq!(sorted.values, want.adj.values);
+        induce_rescaled_into_threads(&g, &s, p, true, 1, &mut ws, &mut fast);
+        assert_eq!(fast.adj.indptr, sorted.indptr, "step {step}");
+        assert_eq!(fast.adj.indices, sorted.indices);
+        assert_eq!(fast.adj.values, sorted.values);
+    }
+}
+
+#[test]
+fn workspace_reuse_across_heterogeneous_calls_is_clean() {
+    // one workspace serves alternating graphs/batch sizes without
+    // cross-step contamination
+    let g1 = rmat(9, 8, 51).gcn_normalize();
+    let g2 = rmat(8, 24, 52).gcn_normalize();
+    let mut ws = InduceWorkspace::new();
+    let mut out = MiniBatch::default();
+    for step in 0..6u64 {
+        let (g, batch) = if step % 2 == 0 { (&g1, 300) } else { (&g2, 40) };
+        let sampler = UniformVertexSampler::new(g.rows, batch, 60 + step);
+        let s = sampler.sample(step);
+        let p = sampler.inclusion_prob();
+        let want = induce_rescaled_reference(g, &s, p);
+        induce_rescaled_into_threads(g, &s, p, true, 4, &mut ws, &mut out);
+        assert_minibatch_eq(&out, &want, &format!("heterogeneous step {step}"));
+    }
+}
+
+/// The pre-fast-path `BatchMaker::make` pipeline, reconstructed verbatim:
+/// reference induction + serial flatten + serial gather.
+fn reference_batch(
+    d: &scalegnn::graph::Dataset,
+    sampler: &UniformVertexSampler,
+    step: u64,
+    edge_cap: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, usize) {
+    let s = sampler.sample(step);
+    let mb = induce_rescaled_reference(&d.adj, &s, sampler.inclusion_prob());
+    let w: Vec<f32> = s
+        .iter()
+        .map(|&v| if d.split[v as usize] == 0 { 1.0 } else { 0.0 })
+        .collect();
+    let mut src = vec![0i32; edge_cap];
+    let mut dst = vec![0i32; edge_cap];
+    let mut val = vec![0.0f32; edge_cap];
+    let mut k = 0usize;
+    let mut truncated = 0usize;
+    for r in 0..mb.adj.rows {
+        let (cs, vs) = mb.adj.row(r);
+        for (&c, &wv) in cs.iter().zip(vs) {
+            if k < edge_cap {
+                dst[k] = r as i32;
+                src[k] = c as i32;
+                val[k] = wv;
+                k += 1;
+            } else {
+                truncated += 1;
+            }
+        }
+    }
+    let d_in = d.features.cols;
+    let mut x = vec![0.0f32; s.len() * d_in];
+    let mut y = vec![0i32; s.len()];
+    for (i, &v) in s.iter().enumerate() {
+        x[i * d_in..(i + 1) * d_in]
+            .copy_from_slice(&d.features.data[v as usize * d_in..(v as usize + 1) * d_in]);
+        y[i] = d.labels[v as usize] as i32;
+    }
+    (src, dst, val, x, y, w, truncated)
+}
+
+#[test]
+fn batch_maker_matches_pre_fast_path_batches() {
+    let d = Arc::new(datasets::load("tiny").unwrap());
+    let seed = 9u64;
+    let (batch, edge_cap) = (32usize, 512usize);
+    let sampler = UniformVertexSampler::new(d.n, batch, seed);
+    let mut maker =
+        BatchMaker::new(d.clone(), SamplerKind::ScaleGnnUniform, batch, edge_cap, 2, seed);
+    for step in 0..6u64 {
+        let got = maker.make(step);
+        let (src, dst, val, x, y, w, truncated) = reference_batch(&d, &sampler, step, edge_cap);
+        assert_eq!(got.src, src, "step {step}");
+        assert_eq!(got.dst, dst);
+        assert_eq!(got.val, val);
+        assert_eq!(got.x, x);
+        assert_eq!(got.y, y);
+        assert_eq!(got.wmask, w);
+        assert_eq!(got.truncated, truncated);
+        maker.recycle(got);
+    }
+}
+
+#[test]
+fn ooc_fast_path_matches_reference_and_memory() {
+    let d = Arc::new(datasets::load("tiny").unwrap());
+    let path = std::env::temp_dir().join("pallas_induction_test_tiny.pallas");
+    pack(&d, &path).unwrap();
+    let store = Arc::new(OocGraph::open(&path, 1 << 20).unwrap());
+
+    // raw induction: OOC fast path == OOC reference == in-memory reference
+    let sampler = UniformVertexSampler::new(d.n, 48, 77);
+    let mut ws = InduceWorkspace::new();
+    let mut out = MiniBatch::default();
+    for step in 0..4u64 {
+        let s = sampler.sample(step);
+        let p = sampler.inclusion_prob();
+        let want_mem = induce_rescaled_reference(&d.adj, &s, p);
+        let want_ooc = induce_rescaled_reference(store.as_ref(), &s, p);
+        assert_minibatch_eq(&want_ooc, &want_mem, &format!("ooc-vs-mem ref step {step}"));
+        for &t in THREADS {
+            induce_rescaled_into_threads(store.as_ref(), &s, p, true, t, &mut ws, &mut out);
+            assert_minibatch_eq(&out, &want_mem, &format!("ooc fast step {step} t={t}"));
+        }
+    }
+
+    // the full BatchData payload: OOC maker == in-memory maker, recycled
+    let mut mem = BatchMaker::new(d.clone(), SamplerKind::ScaleGnnUniform, 32, 512, 2, 5);
+    let mut ooc = BatchMaker::from_store(store, 32, 512, 5);
+    for step in 0..4u64 {
+        let a = mem.make(step);
+        let b = ooc.make(step);
+        assert_eq!(a.src, b.src, "step {step}");
+        assert_eq!(a.dst, b.dst);
+        assert_eq!(a.val, b.val);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.wmask, b.wmask);
+        mem.recycle(a);
+        ooc.recycle(b);
+    }
+    let _ = std::fs::remove_file(&path);
+}
