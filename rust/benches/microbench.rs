@@ -594,6 +594,7 @@ fn main() {
     sampling_sweep_section();
     e2e_overlap_section();
     session_overhead_section();
+    checkpoint_throughput_section();
 
     write_kernel_json(&records);
 }
@@ -795,4 +796,116 @@ fn session_overhead_section() {
         Ok(()) => println!("wrote BENCH_session.json\n"),
         Err(e) => eprintln!("could not write BENCH_session.json: {e}\n"),
     }
+}
+
+/// Checkpoint-subsystem throughput: atomic save and validated restore
+/// latency across model sizes, plus the end-to-end per-step training
+/// overhead of snapshotting every 10 and every 50 steps on the tiny PMM
+/// engine.  Emits `BENCH_checkpoint.json`.
+fn checkpoint_throughput_section() {
+    use scalegnn::checkpoint::{self, Snapshot};
+    use scalegnn::session::{self, BackendKind, RunSpec};
+    use scalegnn::util::json::{obj, Json};
+
+    println!("--- checkpoint save/restore throughput ---");
+    let dir = std::env::temp_dir().join(format!("scalegnn_bench_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // save/restore latency vs model size (params + both Adam moments,
+    // i.e. 12 bytes per element on disk plus header/table)
+    let mut sizes: Vec<Json> = Vec::new();
+    for &elems in &[1usize << 16, 1 << 20, 1 << 22] {
+        let tensor: Vec<f32> = (0..elems).map(|i| (i as f32 * 0.37).sin()).collect();
+        let snap = Snapshot::from_flat(
+            1,
+            42,
+            0xBEEF,
+            vec![tensor.clone()],
+            vec![tensor.clone()],
+            vec![tensor],
+            1.0,
+        );
+        let bytes = snap.encode().len();
+        let mib = bytes as f64 / (1 << 20) as f64;
+        let iters = if elems >= 1 << 22 { 4 } else { 10 };
+        let r_save = bench(&format!("ckpt save    {elems} elems ({mib:.1} MiB)"), 1, iters, || {
+            std::hint::black_box(checkpoint::save(&dir, "bench", &snap).unwrap());
+        });
+        println!("{}", r_save.report());
+        let path = checkpoint::path_for(&dir, "bench", 1);
+        let r_load = bench(&format!("ckpt restore {elems} elems ({mib:.1} MiB)"), 1, iters, || {
+            std::hint::black_box(checkpoint::load(&path).unwrap().step);
+        });
+        println!("{}", r_load.report());
+        sizes.push(obj(vec![
+            ("elements", Json::from(elems)),
+            ("file_bytes", Json::from(bytes)),
+            ("save_s", Json::from(r_save.mean_s)),
+            ("restore_s", Json::from(r_load.mean_s)),
+            ("save_mib_per_s", Json::from(mib / r_save.mean_s)),
+            ("restore_mib_per_s", Json::from(mib / r_load.mean_s)),
+        ]));
+    }
+
+    // end-to-end overhead: the same tiny PMM run with and without a
+    // snapshot cadence (every = 0 disables checkpointing)
+    let per_step = |every: u64| -> f64 {
+        let steps = 50u64;
+        let mut spec = RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 1, 1)
+            .model(16, 2, 0.0)
+            .steps(steps)
+            .lr(5e-3);
+        if every > 0 {
+            spec = spec.checkpoint(dir.join(format!("every{every}")), every, 2);
+        }
+        let t0 = std::time::Instant::now();
+        let report = session::run_silent(&spec).unwrap();
+        std::hint::black_box(report.final_loss);
+        t0.elapsed().as_secs_f64() / steps as f64
+    };
+    let reps = 3usize;
+    let med = |every: u64| -> f64 {
+        let samples: Vec<f64> = (0..reps).map(|_| per_step(every)).collect();
+        median(&samples)
+    };
+    let base = med(0);
+    let every10 = med(10);
+    let every50 = med(50);
+    println!(
+        "train overhead: baseline {}/step, every-10 {}/step ({:+.1}%), every-50 {}/step ({:+.1}%)",
+        fmt_time(base),
+        fmt_time(every10),
+        (every10 - base) / base * 100.0,
+        fmt_time(every50),
+        (every50 - base) / base * 100.0,
+    );
+
+    let doc = obj(vec![
+        (
+            "what",
+            Json::from(
+                "versioned CRC32 snapshot format: atomic save + validated restore latency \
+                 vs model size, and per-step overhead of checkpoint cadences on the tiny \
+                 PMM engine (1x2x1x1, 50 steps, median of 3 runs)",
+            ),
+        ),
+        ("sizes", Json::Arr(sizes)),
+        (
+            "train_overhead",
+            obj(vec![
+                ("baseline_step_s", Json::from(base)),
+                ("every10_step_s", Json::from(every10)),
+                ("every50_step_s", Json::from(every50)),
+                ("every10_overhead_frac", Json::from((every10 - base) / base)),
+                ("every50_overhead_frac", Json::from((every50 - base) / base)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_checkpoint.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_checkpoint.json\n"),
+        Err(e) => eprintln!("could not write BENCH_checkpoint.json: {e}\n"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,615 @@
+//! Versioned binary training-state snapshots with torn-write detection.
+//!
+//! The paper's headline runs live at 1024–2048 devices, where preemption
+//! and node loss are routine.  The communication-free sampling contract
+//! (§IV-B) makes recovery unusually cheap here: every rank reconstructs
+//! its mini-batch stream from just `(seed, step)`, so a snapshot of the
+//! model parameters, the Adam moments, the RNG state and the step cursor
+//! is *sufficient* for a **bitwise-identical** resume — no sampler state,
+//! no in-flight batches, no peer coordination.
+//!
+//! # Snapshot format (version 1, little-endian)
+//!
+//! ```text
+//! fixed header (80 B): magic "PALLASC1" | version u32 | flags u32
+//!                      | step u64 (completed steps = next step index)
+//!                      | seed u64 | spec_hash u64
+//!                      | rng state 4 x u64 (xoshiro256++ words)
+//!                      | adam t (f32 bits) u32 | n_tensors u32
+//! tensor table:        n_tensors x u64        element count per tensor
+//! payload:             params, then Adam m, then Adam v — each group is
+//!                      n_tensors tensors of f32, in parameter-slot order
+//! trailer (4 B):       CRC32 (IEEE) over every preceding byte
+//! ```
+//!
+//! The layout is a pure function of the tensor table, so the expected file
+//! size is known up front; [`load`] validates magic, version, exact length
+//! AND the payload checksum and returns a clean error — never a panic — on
+//! truncated, stale-version or bit-flipped files.  [`save`] writes through
+//! a pid-unique `.tmp` sibling, fsyncs, then renames into place (the same
+//! atomic discipline as the `.pallas` container, `graph::store::pack`), so
+//! a crash mid-save never leaves a torn file at a snapshot path; a torn
+//! `.tmp` is simply never picked up because [`latest_valid`] only
+//! considers `*.ckpt` names.  Retention is keep-last-K ([`prune`]).
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{AdamState, Params};
+use crate::util::rng::{splitmix64, Rng};
+
+/// File magic: "PALLASC1" (pallas checkpoint, generation 1).
+pub const MAGIC: [u8; 8] = *b"PALLASC1";
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes (everything before the tensor table).
+pub const FIXED_HEADER_BYTES: usize = 80;
+/// Trailing checksum size in bytes.
+pub const TRAILER_BYTES: usize = 4;
+
+// CRC32 (IEEE 802.3, reflected 0xEDB88320) lookup table, built at compile
+// time — the offline toolchain has no checksum crate.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE) of `bytes` — the payload checksum of the snapshot trailer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Deterministic order-sensitive hash of a run configuration, stored in
+/// the snapshot header so resume refuses state from a *different* run
+/// (other dims, other seed, other backend) with a descriptive error
+/// instead of silently training on mismatched tensors.
+pub fn state_hash(parts: &[u64]) -> u64 {
+    parts
+        .iter()
+        .fold(0xC0FF_EE00_D15E_A5E5u64, |h, &p| splitmix64(h ^ p))
+}
+
+/// One decoded training-state snapshot: everything a backend needs for a
+/// bitwise-identical resume at `step`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Completed steps — the index of the next step to execute on resume.
+    pub step: u64,
+    /// The run's sampling / parameter-init seed (with `step`, this is the
+    /// whole §IV-B communication-free sampler cursor).
+    pub seed: u64,
+    /// [`state_hash`] of the run configuration that wrote the snapshot.
+    pub spec_hash: u64,
+    /// Full xoshiro256++ state of the step-`step` RNG stream
+    /// (`Rng::for_step(seed, step)` — recorded for auditability; engines
+    /// re-derive every per-step stream from `(seed, step)`).
+    pub rng: [u64; 4],
+    /// Adam step counter `t` (f32, mirroring the artifact scalar).
+    pub t: f32,
+    /// Parameter tensors in slot order, flattened row-major.
+    pub tensors: Vec<Vec<f32>>,
+    /// Adam first moments, same order/shapes as `tensors`.
+    pub m: Vec<Vec<f32>>,
+    /// Adam second moments, same order/shapes as `tensors`.
+    pub v: Vec<Vec<f32>>,
+}
+
+impl Snapshot {
+    /// Assemble a snapshot from flat tensor groups (the PMM engine's
+    /// export format).  The RNG words are derived from `(seed, step)`.
+    pub fn from_flat(
+        step: u64,
+        seed: u64,
+        spec_hash: u64,
+        tensors: Vec<Vec<f32>>,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        t: f32,
+    ) -> Snapshot {
+        Snapshot {
+            step,
+            seed,
+            spec_hash,
+            rng: Rng::for_step(seed, step).state(),
+            t,
+            tensors,
+            m,
+            v,
+        }
+    }
+
+    /// Snapshot the reference-model state (`model::Params` +
+    /// [`AdamState`]) after `step` completed steps.
+    pub fn from_model(
+        step: u64,
+        seed: u64,
+        spec_hash: u64,
+        params: &Params,
+        opt: &AdamState,
+    ) -> Snapshot {
+        Snapshot::from_flat(
+            step,
+            seed,
+            spec_hash,
+            params.iter().map(|p| p.data.clone()).collect(),
+            opt.m.iter().map(|p| p.data.clone()).collect(),
+            opt.v.iter().map(|p| p.data.clone()).collect(),
+            opt.t,
+        )
+    }
+
+    /// Restore the reference-model state in place; every tensor length is
+    /// validated against the live shapes before anything is written.
+    pub fn restore_model(&self, params: &mut Params, opt: &mut AdamState) -> Result<()> {
+        if self.tensors.len() != params.len() {
+            bail!(
+                "checkpoint holds {} tensors but the model has {}",
+                self.tensors.len(),
+                params.len()
+            );
+        }
+        if self.m.len() != params.len() || self.v.len() != params.len() {
+            bail!("checkpoint moment groups do not match its parameter count");
+        }
+        for (i, (t, p)) in self.tensors.iter().zip(params.iter()).enumerate() {
+            if t.len() != p.data.len() || self.m[i].len() != t.len() || self.v[i].len() != t.len()
+            {
+                bail!(
+                    "checkpoint tensor {i} has {} elements but the model expects {}",
+                    t.len(),
+                    p.data.len()
+                );
+            }
+        }
+        for (((p, t), (m, sm)), (v, sv)) in params
+            .iter_mut()
+            .zip(&self.tensors)
+            .zip(opt.m.iter_mut().zip(&self.m))
+            .zip(opt.v.iter_mut().zip(&self.v))
+        {
+            p.data.copy_from_slice(t);
+            m.data.copy_from_slice(sm);
+            v.data.copy_from_slice(sv);
+        }
+        opt.t = self.t;
+        Ok(())
+    }
+
+    /// Refuse a snapshot written by a different run configuration.
+    pub fn check_hash(&self, expected: u64, what: &str) -> Result<()> {
+        if self.spec_hash != expected {
+            bail!(
+                "checkpoint for {what}: run-configuration hash mismatch (snapshot \
+                 {:#018x}, current run {:#018x}) — refusing to resume a different \
+                 model/seed/backend configuration",
+                self.spec_hash,
+                expected
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the on-disk byte layout, checksum included.
+    pub fn encode(&self) -> Vec<u8> {
+        let elems: usize = self.tensors.iter().map(Vec::len).sum();
+        let mut out =
+            Vec::with_capacity(FIXED_HEADER_BYTES + 8 * self.tensors.len() + 12 * elems + 4);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes()); // flags (reserved)
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.spec_hash.to_le_bytes());
+        for w in self.rng {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&self.t.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.len() as u64).to_le_bytes());
+        }
+        for group in [&self.tensors, &self.m, &self.v] {
+            for t in group {
+                for &x in t {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a snapshot from raw bytes; `origin` names the
+    /// file in every error.  Never panics: truncation, bad magic, stale
+    /// versions, impossible tensor tables and checksum mismatches all
+    /// surface as descriptive errors.
+    pub fn decode(bytes: &[u8], origin: &Path) -> Result<Snapshot> {
+        let show = origin.display();
+        let min = FIXED_HEADER_BYTES + TRAILER_BYTES;
+        if bytes.len() < min {
+            bail!("checkpoint {show}: truncated ({} bytes, need at least {min})", bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("checkpoint {show}: bad magic (not a pallas checkpoint)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("checkpoint {show}: unsupported version {version} (this build reads {VERSION})");
+        }
+        let step = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let seed = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let spec_hash = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        let mut rng = [0u64; 4];
+        for (i, w) in rng.iter_mut().enumerate() {
+            *w = u64::from_le_bytes(bytes[40 + 8 * i..48 + 8 * i].try_into().unwrap());
+        }
+        let t = f32::from_bits(u32::from_le_bytes(bytes[72..76].try_into().unwrap()));
+        let n = u32::from_le_bytes(bytes[76..80].try_into().unwrap()) as usize;
+
+        // expected size from the tensor table, all checked arithmetic so a
+        // corrupt header is rejected instead of overflowing
+        let table_end = (FIXED_HEADER_BYTES as u64)
+            .checked_add((n as u64).checked_mul(8).unwrap_or(u64::MAX))
+            .unwrap_or(u64::MAX);
+        if table_end > bytes.len() as u64 {
+            bail!("checkpoint {show}: truncated inside the tensor table ({n} tensors)");
+        }
+        let mut lens = Vec::with_capacity(n);
+        let mut total_elems: u64 = 0;
+        for i in 0..n {
+            let off = FIXED_HEADER_BYTES + 8 * i;
+            let len = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            total_elems = total_elems
+                .checked_add(len)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint {show}: tensor table overflows"))?;
+            lens.push(len);
+        }
+        let expected = total_elems
+            .checked_mul(12)
+            .and_then(|p| p.checked_add(table_end))
+            .and_then(|p| p.checked_add(TRAILER_BYTES as u64))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint {show}: tensor table overflows"))?;
+        if (bytes.len() as u64) < expected {
+            bail!(
+                "checkpoint {show}: truncated ({} bytes, the header implies {expected})",
+                bytes.len()
+            );
+        }
+        if (bytes.len() as u64) > expected {
+            bail!(
+                "checkpoint {show}: length mismatch ({} bytes, the header implies {expected})",
+                bytes.len()
+            );
+        }
+        let body = &bytes[..bytes.len() - TRAILER_BYTES];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let computed = crc32(body);
+        if stored != computed {
+            bail!(
+                "checkpoint {show}: checksum mismatch (stored {stored:08x}, computed \
+                 {computed:08x}) — the payload is corrupt"
+            );
+        }
+
+        let mut off = table_end as usize;
+        let mut read_group = |lens: &[u64]| -> Vec<Vec<f32>> {
+            lens.iter()
+                .map(|&len| {
+                    let end = off + 4 * len as usize;
+                    let t: Vec<f32> = bytes[off..end]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    off = end;
+                    t
+                })
+                .collect()
+        };
+        let tensors = read_group(&lens);
+        let m = read_group(&lens);
+        let v = read_group(&lens);
+        Ok(Snapshot { step, seed, spec_hash, rng, t, tensors, m, v })
+    }
+}
+
+/// Canonical snapshot path: `dir/{tag}-step{step:012}.ckpt` (zero-padded
+/// so lexical order equals step order).
+pub fn path_for(dir: &Path, tag: &str, step: u64) -> PathBuf {
+    dir.join(format!("{tag}-step{step:012}.ckpt"))
+}
+
+/// `(step, path)` of every snapshot file of `tag` in `dir`, ascending by
+/// step.  A missing directory is an empty listing, not an error.
+pub fn snapshot_files(dir: &Path, tag: &str) -> Vec<(u64, PathBuf)> {
+    let prefix = format!("{tag}-step");
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(middle) = name.strip_prefix(&prefix).and_then(|s| s.strip_suffix(".ckpt"))
+        else {
+            continue;
+        };
+        if let Ok(step) = middle.parse::<u64>() {
+            out.push((step, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|&(s, _)| s);
+    out
+}
+
+/// Atomically write `snap` into `dir` under `tag` (creating `dir` if
+/// needed) and return the snapshot path.  The bytes go to a pid-unique
+/// `.tmp` sibling, are fsynced, and rename into place — a crash mid-save
+/// never leaves a torn `.ckpt` file.
+pub fn save(dir: &Path, tag: &str, snap: &Snapshot) -> Result<PathBuf> {
+    if snap.m.len() != snap.tensors.len() || snap.v.len() != snap.tensors.len() {
+        bail!(
+            "snapshot moment group sizes ({}, {}) do not match its {} tensors",
+            snap.m.len(),
+            snap.v.len(),
+            snap.tensors.len()
+        );
+    }
+    for (i, t) in snap.tensors.iter().enumerate() {
+        if snap.m[i].len() != t.len() || snap.v[i].len() != t.len() {
+            bail!("snapshot tensor {i}: moment lengths do not match the parameter length");
+        }
+    }
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let path = path_for(dir, tag, snap.step);
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".tmp.{}", std::process::id()));
+        PathBuf::from(os)
+    };
+    {
+        let f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(&snap.encode())?;
+        w.flush()?;
+        // durable BEFORE the rename is journaled, or a crash could leave a
+        // correct-length file with zeroed sections in place
+        w.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(path)
+}
+
+/// Read and validate the snapshot at `path`.
+pub fn load(path: &Path) -> Result<Snapshot> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Snapshot::decode(&bytes, path)
+}
+
+/// Steps of every snapshot of `tag` that decodes cleanly, ascending, plus
+/// one warning per torn/corrupt file that was skipped.
+pub fn valid_steps(dir: &Path, tag: &str) -> (Vec<u64>, Vec<String>) {
+    let mut steps = Vec::new();
+    let mut warnings = Vec::new();
+    for (step, path) in snapshot_files(dir, tag) {
+        match load(&path) {
+            Ok(_) => steps.push(step),
+            Err(e) => warnings.push(format!("skipping {}: {e:#}", path.display())),
+        }
+    }
+    (steps, warnings)
+}
+
+/// The newest snapshot of `tag` that decodes cleanly, skipping (and
+/// reporting) torn or corrupt newer files — the recovery entry point: a
+/// half-written or bit-flipped newest checkpoint falls back to the
+/// previous valid one with a descriptive warning, never a panic.
+pub fn latest_valid(dir: &Path, tag: &str) -> (Option<(PathBuf, Snapshot)>, Vec<String>) {
+    let mut warnings = Vec::new();
+    let mut files = snapshot_files(dir, tag);
+    files.reverse(); // newest first
+    for (_, path) in files {
+        match load(&path) {
+            Ok(s) => return (Some((path, s)), warnings),
+            Err(e) => warnings.push(format!("skipping {}: {e:#}", path.display())),
+        }
+    }
+    (None, warnings)
+}
+
+/// Keep-last-K retention: delete all but the newest `keep` snapshots of
+/// `tag` (by step).  Returns one warning per file that could not be
+/// removed; `keep == 0` is treated as 1 (never delete everything).
+pub fn prune(dir: &Path, tag: &str, keep: usize) -> Vec<String> {
+    let keep = keep.max(1);
+    let files = snapshot_files(dir, tag);
+    let mut warnings = Vec::new();
+    if files.len() <= keep {
+        return warnings;
+    }
+    for (_, path) in &files[..files.len() - keep] {
+        if let Err(e) = std::fs::remove_file(path) {
+            warnings.push(format!("could not prune {}: {e}", path.display()));
+        }
+    }
+    warnings
+}
+
+/// How [`corrupt_newest`] damages a snapshot (deterministic fault
+/// injection for crash-recovery tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorruptKind {
+    /// Cut the file to half its length (a torn write).
+    Truncate,
+    /// Flip one payload bit (detected by the CRC32 trailer).
+    FlipPayloadBit,
+    /// Rewrite the version field to 0 (a stale/foreign format).
+    StaleVersion,
+}
+
+/// Damage the newest snapshot of `tag` in place per `kind` and return its
+/// path.  Test-support fault injector — intentionally *not* atomic.
+pub fn corrupt_newest(dir: &Path, tag: &str, kind: CorruptKind) -> Result<PathBuf> {
+    let (step, path) = snapshot_files(dir, tag)
+        .pop()
+        .ok_or_else(|| anyhow::anyhow!("no snapshot of tag '{tag}' in {}", dir.display()))?;
+    let mut bytes = std::fs::read(&path)?;
+    match kind {
+        CorruptKind::Truncate => bytes.truncate(bytes.len() / 2),
+        CorruptKind::FlipPayloadBit => {
+            let mid = FIXED_HEADER_BYTES + (bytes.len() - FIXED_HEADER_BYTES) / 2;
+            bytes[mid] ^= 0x10;
+        }
+        CorruptKind::StaleVersion => bytes[8..12].copy_from_slice(&0u32.to_le_bytes()),
+    }
+    std::fs::write(&path, &bytes)
+        .with_context(|| format!("corrupting snapshot step {step} at {}", path.display()))?;
+    Ok(path)
+}
+
+/// Where, how often and how many: the checkpoint knobs a run carries
+/// (`RunSpec::checkpoint`, the trainer configs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Snapshot directory (shared by every rank of a run; tags disambiguate).
+    pub dir: PathBuf,
+    /// Save after every N-th step (`(step + 1) % N == 0`).
+    pub every_steps: u64,
+    /// Keep-last-K retention.
+    pub keep: usize,
+}
+
+impl CheckpointPolicy {
+    /// Policy with the given directory, cadence and retention.
+    pub fn new(dir: impl Into<PathBuf>, every_steps: u64, keep: usize) -> CheckpointPolicy {
+        CheckpointPolicy { dir: dir.into(), every_steps, keep }
+    }
+
+    /// Whether a snapshot is due after completing 0-based `step`.
+    pub fn should_save(&self, step: u64) -> bool {
+        self.every_steps > 0 && (step + 1) % self.every_steps == 0
+    }
+}
+
+/// A policy bound to one shard tag: the save/restore handle a training
+/// loop threads through its steps.
+#[derive(Clone, Debug)]
+pub struct CheckpointManager {
+    policy: CheckpointPolicy,
+    tag: String,
+}
+
+impl CheckpointManager {
+    /// Bind `policy` to shard `tag` (`ooc`, `ref-g0`, `pmm-r3`, ...).
+    pub fn new(policy: CheckpointPolicy, tag: &str) -> CheckpointManager {
+        CheckpointManager { policy, tag: tag.to_string() }
+    }
+
+    /// Whether a snapshot is due after completing 0-based `step`.
+    pub fn should_save(&self, step: u64) -> bool {
+        self.policy.should_save(step)
+    }
+
+    /// Save `snap` atomically, then apply keep-last-K retention.
+    pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
+        let path = save(&self.policy.dir, &self.tag, snap)?;
+        for w in prune(&self.policy.dir, &self.tag, self.policy.keep) {
+            eprintln!("warning: {w}");
+        }
+        Ok(path)
+    }
+
+    /// Newest valid snapshot of this tag (see [`latest_valid`]).
+    pub fn latest(&self) -> (Option<(PathBuf, Snapshot)>, Vec<String>) {
+        latest_valid(&self.policy.dir, &self.tag)
+    }
+
+    /// Valid snapshot steps of this tag, ascending (see [`valid_steps`]).
+    pub fn valid_steps(&self) -> (Vec<u64>, Vec<String>) {
+        valid_steps(&self.policy.dir, &self.tag)
+    }
+
+    /// The bound shard tag.
+    pub fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    /// The bound policy.
+    pub fn policy(&self) -> &CheckpointPolicy {
+        &self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical IEEE CRC32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn sample_snapshot(step: u64) -> Snapshot {
+        Snapshot::from_flat(
+            step,
+            42,
+            state_hash(&[1, 2, 3]),
+            vec![vec![1.0, -2.5, 3.25], vec![0.5]],
+            vec![vec![0.1, 0.2, 0.3], vec![0.4]],
+            vec![vec![0.01, 0.02, 0.03], vec![0.04]],
+            7.0,
+        )
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bitwise() {
+        let s = sample_snapshot(12);
+        let back = Snapshot::decode(&s.encode(), Path::new("mem")).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.rng, Rng::for_step(42, 12).state());
+    }
+
+    #[test]
+    fn cadence_fires_on_every_nth_completed_step() {
+        let p = CheckpointPolicy::new("x", 5, 2);
+        let due: Vec<u64> = (0..12).filter(|&s| p.should_save(s)).collect();
+        assert_eq!(due, vec![4, 9]);
+    }
+
+    #[test]
+    fn save_validates_moment_shapes() {
+        let mut s = sample_snapshot(0);
+        s.m.pop();
+        let dir = std::env::temp_dir().join("pallas_ckpt_shape_test");
+        let err = save(&dir, "t", &s).unwrap_err().to_string();
+        assert!(err.contains("moment group sizes"), "{err}");
+    }
+}

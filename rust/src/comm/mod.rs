@@ -25,10 +25,14 @@
 //!
 //! **Mismatch safety.**  Collectives that disagree across members at the
 //! same sequence number (different kind, payload length or precision)
-//! poison the group and panic on *every* member with a descriptive message
-//! instead of deadlocking in the rendezvous slot.  The poison cascades
-//! through every group a dying rank belongs to, so bystanders waiting on
-//! the dead rank in *other* groups fail fast too.
+//! poison the group and panic on *every* member instead of deadlocking in
+//! the rendezvous slot.  The panic payload is a structured [`CommError`]
+//! naming the originating rank, sequence number, op kind and axis; the
+//! *same* origin is carried unchanged through the cascade into every group
+//! a dying rank belongs to, so bystanders waiting on the dead rank in
+//! *other* groups fail fast — and a supervisor joining the rank threads
+//! can downcast the payload and report exactly which rank/seq/op died
+//! (the elastic-recovery path in `session::backends`).
 //!
 //! **BF16 mode** reproduces §V-B numerically: each rank's contribution is
 //! rounded to bf16 before the reduction (results stay f32), and the byte
@@ -75,6 +79,50 @@ impl Precision {
 /// Default elements per chunk (16 KiB of f32 payload per chunk).
 pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
 
+/// Structured origin of a collective failure: which rank died, at which
+/// group sequence number, issuing which op on which axis, and why.
+///
+/// This is the panic payload of every comm-engine death (mismatch
+/// handshake, poison cascade, injected fault), carried *unchanged* from
+/// the originating rank through the cascade so a bystander's panic still
+/// names the true origin.  Rank-thread supervisors downcast the payload
+/// (`Box<dyn Any>::downcast::<CommError>`) to report the failure in the
+/// `RunReport` and drive checkpoint-based recovery.
+#[derive(Clone, Debug)]
+pub struct CommError {
+    /// Global rank where the failure originated.
+    pub rank: usize,
+    /// Group sequence number of the failing collective (0 for injected
+    /// faults, which are not tied to an op slot).
+    pub seq: u64,
+    /// Op kind at the origin: `"all_reduce"`, `"all_gather"` or
+    /// `"injected-fault"`.
+    pub op: &'static str,
+    /// Axis of the group where the failure originated.
+    pub axis: Axis,
+    /// Human-readable cause (the handshake mismatch text, or the injected
+    /// fault description).
+    pub msg: String,
+}
+
+impl CommError {
+    fn new(rank: usize, seq: u64, op: &'static str, axis: Axis, msg: String) -> CommError {
+        CommError { rank, seq, op, axis, msg }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "comm: rank {} {} seq {} on axis {:?}: {}",
+            self.rank, self.op, self.seq, self.axis, self.msg
+        )
+    }
+}
+
+impl std::error::Error for CommError {}
+
 /// Collective kind carried by an op slot (handshake-checked across members).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum OpKind {
@@ -108,8 +156,9 @@ struct GroupState {
     next_seq: Vec<u64>,
     /// In-flight ops, ascending `seq`.
     ops: VecDeque<OpState>,
-    /// Set on a mismatched collective; every member panics with this.
-    poison: Option<String>,
+    /// Set on a mismatched collective (or injected fault); every member
+    /// panics with this same structured origin.
+    poison: Option<CommError>,
 }
 
 struct Group {
@@ -307,12 +356,14 @@ impl CommWorld {
         did
     }
 
-    /// Poison every group `rank` belongs to with `msg`, wake their
-    /// waiters, then panic.  A member that dies inside one collective must
-    /// not leave peers in its *other* groups waiting on a contribution
-    /// that will never come, so the poison cascades rank-by-rank through
-    /// shared groups (each awoken member panics and cascades in turn).
-    fn poison_and_panic(&self, rank: usize, msg: String) -> ! {
+    /// Poison every group `rank` belongs to with `err`, wake their
+    /// waiters, then panic with `err` as the structured payload.  A member
+    /// that dies inside one collective must not leave peers in its *other*
+    /// groups waiting on a contribution that will never come, so the
+    /// poison cascades rank-by-rank through shared groups (each awoken
+    /// member re-panics with the *original* origin and cascades in turn —
+    /// a bystander's panic still names the rank/seq/op that truly died).
+    fn poison_and_panic(&self, rank: usize, err: CommError) -> ! {
         for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
             let g = self.group(rank, axis);
             if g.size <= 1 {
@@ -320,12 +371,23 @@ impl CommWorld {
             }
             let mut st = g.state.lock().unwrap();
             if st.poison.is_none() {
-                st.poison = Some(msg.clone());
+                st.poison = Some(err.clone());
             }
             drop(st);
             g.cv.notify_all();
         }
-        panic!("comm: {msg}");
+        std::panic::panic_any(err);
+    }
+
+    /// Deterministic fault injection: kill the calling rank *now*,
+    /// poisoning all its groups exactly like a real collective failure so
+    /// peers fail fast and a supervisor can recover from the last
+    /// checkpoint.  Drives the `FaultSpec::KillRank` crash-recovery path.
+    pub fn fail(&self, rank: usize, msg: &str) -> ! {
+        self.poison_and_panic(
+            rank,
+            CommError::new(rank, 0, "injected-fault", Axis::X, msg.to_string()),
+        );
     }
 
     /// Issue a sum-all-reduce of `data` across the rank's `axis` group in
@@ -370,9 +432,9 @@ impl CommWorld {
         self.account(axis, data.len() as u64, prec, g.size);
         let me = self.grid.index_in_group(rank, axis);
         let mut st = g.state.lock().unwrap();
-        if let Some(m) = st.poison.clone() {
+        if let Some(e) = st.poison.clone() {
             drop(st);
-            self.poison_and_panic(rank, m);
+            self.poison_and_panic(rank, e);
         }
         let seq = st.next_seq[me];
         st.next_seq[me] += 1;
@@ -380,7 +442,7 @@ impl CommWorld {
             contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Reduce(prec), data)
         {
             drop(st);
-            self.poison_and_panic(rank, msg);
+            self.poison_and_panic(rank, CommError::new(rank, seq, "all_reduce", axis, msg));
         }
         g.cv.notify_all();
         drop(st);
@@ -431,9 +493,9 @@ impl CommWorld {
         self.account(axis, payload.len() as u64, Precision::Fp32, g.size);
         let me = self.grid.index_in_group(rank, axis);
         let mut st = g.state.lock().unwrap();
-        if let Some(m) = st.poison.clone() {
+        if let Some(e) = st.poison.clone() {
             drop(st);
-            self.poison_and_panic(rank, m);
+            self.poison_and_panic(rank, e);
         }
         let seq = st.next_seq[me];
         st.next_seq[me] += 1;
@@ -441,7 +503,7 @@ impl CommWorld {
             contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Gather, payload)
         {
             drop(st);
-            self.poison_and_panic(rank, msg);
+            self.poison_and_panic(rank, CommError::new(rank, seq, "all_gather", axis, msg));
         }
         g.cv.notify_all();
         drop(st);
@@ -621,8 +683,8 @@ impl PendingOp<'_> {
     /// Block until every chunk is reduced and write the result into `out`
     /// (same length as the issued payload).  Waiters drive the remaining
     /// reductions themselves, so completion never depends on a third
-    /// party.  Panics with the handshake message if the group was poisoned
-    /// by a mismatched collective.
+    /// party.  Panics with the originating [`CommError`] as payload if the
+    /// group was poisoned by a mismatched collective or injected fault.
     pub fn wait_into(self, out: &mut [f32]) {
         assert_eq!(out.len(), self.len, "wait_into buffer length mismatch");
         if let Some(p) = self.trivial {
@@ -634,9 +696,9 @@ impl PendingOp<'_> {
         let t_wait = Instant::now();
         let mut st = g.state.lock().unwrap();
         let completed_at = loop {
-            if let Some(m) = st.poison.clone() {
+            if let Some(e) = st.poison.clone() {
                 drop(st);
-                w.poison_and_panic(self.rank, m);
+                w.poison_and_panic(self.rank, e);
             }
             if w.reduce_ready_locked(&mut st, g.size, usize::MAX) {
                 g.cv.notify_all();
@@ -696,8 +758,9 @@ pub struct PendingGather<'w> {
 
 impl PendingGather<'_> {
     /// Block until every member's payload arrived; returns the payloads in
-    /// group-index order.  Panics with the handshake message if the group
-    /// was poisoned by a mismatched collective.
+    /// group-index order.  Panics with the originating [`CommError`] as
+    /// payload if the group was poisoned by a mismatched collective or
+    /// injected fault.
     pub fn wait(self) -> Vec<Vec<f32>> {
         if let Some(p) = self.trivial {
             return vec![p];
@@ -707,9 +770,9 @@ impl PendingGather<'_> {
         let t_wait = Instant::now();
         let mut st = g.state.lock().unwrap();
         let completed_at = loop {
-            if let Some(m) = st.poison.clone() {
+            if let Some(e) = st.poison.clone() {
                 drop(st);
-                w.poison_and_panic(self.rank, m);
+                w.poison_and_panic(self.rank, e);
             }
             let done = {
                 let op = st
@@ -946,6 +1009,54 @@ mod tests {
         p.wait_into(&mut out);
         assert_eq!(out, vec![3.0; 4]);
         assert_eq!(t.join().unwrap(), vec![3.0; 4]);
+    }
+
+    #[test]
+    fn mismatch_panic_payload_is_structured() {
+        // both the originating member and the poisoned peer must die with
+        // the SAME CommError origin, downcastable from the join payload
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let mut hs = vec![];
+        for rank in 0..2usize {
+            let w = world.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut v = vec![1.0f32; if rank == 0 { 4 } else { 8 }];
+                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+            }));
+        }
+        for h in hs {
+            let payload = h.join().expect_err("mismatch must panic");
+            let e = payload.downcast::<CommError>().expect("structured payload");
+            assert_eq!(e.op, "all_reduce");
+            assert_eq!(e.axis, Axis::X);
+            assert_eq!(e.seq, 0);
+            assert!(e.rank < 2);
+            assert!(e.msg.contains("length mismatch"), "{}", e.msg);
+        }
+    }
+
+    #[test]
+    fn injected_fault_poisons_peers_with_its_origin() {
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let w0 = world.clone();
+        let killer = std::thread::spawn(move || {
+            w0.fail(0, "scripted kill");
+        });
+        let w1 = world.clone();
+        let victim = std::thread::spawn(move || {
+            let mut v = vec![1.0f32; 4];
+            // peer never contributes; the poison must wake and kill this wait
+            w1.all_reduce(1, Axis::X, &mut v, Precision::Fp32);
+        });
+        for h in [killer, victim] {
+            let payload = h.join().expect_err("both sides must die");
+            let e = payload.downcast::<CommError>().expect("structured payload");
+            assert_eq!(e.rank, 0, "bystander panic must name the true origin");
+            assert_eq!(e.op, "injected-fault");
+            assert_eq!(e.msg, "scripted kill");
+        }
     }
 
     #[test]

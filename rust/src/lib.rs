@@ -11,6 +11,7 @@
 
 #![warn(missing_docs)]
 
+pub mod checkpoint;
 pub mod comm;
 pub mod model;
 pub mod pmm;

@@ -13,9 +13,14 @@
 //!                     [--lr F] [--no-prefetch] [--overlap on|off] [--verbose]
 //! scalegnn train      --from-store graph.pallas [--dataset papers100m_ooc]
 //!                     [--cache-mb M] [--steps S] [--batch B] [--lr F]
+//!                     [--checkpoint-dir D [--checkpoint-every N]
+//!                      [--checkpoint-keep K] [--resume]]
 //! scalegnn pack       --dataset papers100m_ooc [--out graph.pallas]
 //! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S] [--bf16]
 //!                     [--overlap on|off] [--stats-json FILE]
+//!                     [--checkpoint-dir D [--checkpoint-every N]
+//!                      [--checkpoint-keep K] [--resume]
+//!                      [--kill-rank R --kill-step S]]
 //! scalegnn eval       --dataset tiny --grid 2x2x2
 //! scalegnn sample     --dataset products_sim [--grid 2x2] [--steps S]
 //!                     [--from-store graph.pallas] [--cache-mb M]
@@ -35,8 +40,8 @@ use scalegnn::comm::Precision;
 use scalegnn::graph::{datasets, partition_2d};
 use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
 use scalegnn::session::{
-    self, BackendKind, GridSpec, JsonlObserver, LogObserver, ModelSpec, RunReport, RunSpec,
-    StepObserver,
+    self, BackendKind, CheckpointPolicy, FaultSpec, GridSpec, JsonlObserver, LogObserver,
+    ModelSpec, RunReport, RunSpec, StepObserver,
 };
 use scalegnn::sim;
 use scalegnn::util::cli::Args;
@@ -105,8 +110,28 @@ collectives; pmm-train reports the measured hidden-comm fraction per axis,
 --hide-frac F or --calibrate-overlap (measure the hide fraction on an
 executed 8-rank engine run instead of the default constant).
 
+Fault tolerance: pmm-train and train --from-store accept --checkpoint-dir D
+[--checkpoint-every N] [--checkpoint-keep K] (versioned CRC-checked
+snapshots, atomic writes, keep-last-K) and --resume (replay from the newest
+snapshot valid on every rank — bitwise-identical to the uninterrupted run).
+pmm-train also accepts --kill-rank R --kill-step S: a deterministic fault
+injection the supervisor must recover from by re-forming the world and
+replaying from the last checkpoint.
+
 Run `cargo bench` to regenerate every paper table/figure.
 ";
+
+/// Map `--checkpoint-dir D [--checkpoint-every N] [--checkpoint-keep K]`
+/// and `--resume` onto the spec's checkpoint section.
+fn apply_checkpoint_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
+    if let Some(dir) = args.path_opt("checkpoint-dir") {
+        let every = args.get_or("checkpoint-every", 10u64).map_err(|e| anyhow!(e))?;
+        let keep = args.get_or("checkpoint-keep", 4usize).map_err(|e| anyhow!(e))?;
+        spec.checkpoint = Some(CheckpointPolicy::new(dir, every, keep));
+    }
+    spec.resume = args.flag("resume");
+    Ok(())
+}
 
 /// Stderr observers for a subcommand: a `LogObserver` printing every
 /// `every`-th step (0 = eval/final only) when `--verbose` was given,
@@ -192,6 +217,14 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 /// Human-readable end-of-run summary of any backend's report.
 fn print_summary(report: &RunReport) {
+    for f in &report.failures {
+        if let Some(s) = f.resumed_from_step {
+            println!(
+                "recovered: rank {} died in {} (seq {}, axis '{}'); replayed from step {s}",
+                f.rank, f.op, f.seq, f.axis
+            );
+        }
+    }
     if let Some(t) = &report.trainer {
         println!(
             "steps={} epochs={} train={} eval={} loss={:.4} best_val={:.4} best_test={:.4}",
@@ -278,8 +311,9 @@ fn cmd_train_ooc(args: &Args, store: PathBuf) -> Result<()> {
         "train --from-store",
         &[
             "from-store", "dataset", "cache-mb", "batch", "d-h", "layers", "steps", "lr", "seed",
+            "checkpoint-dir", "checkpoint-every", "checkpoint-keep",
         ],
-        &["no-prefetch", "verbose", "v"],
+        &["no-prefetch", "resume", "verbose", "v"],
     )
     .map_err(|e| anyhow!(e))?;
     let dataset = match args.str_opt("dataset") {
@@ -312,6 +346,7 @@ fn cmd_train_ooc(args: &Args, store: PathBuf) -> Result<()> {
     spec.lr = args.get_or("lr", 1e-2).map_err(|e| anyhow!(e))?;
     spec.seed = args.get_or("seed", 42).map_err(|e| anyhow!(e))?;
     spec.prefetch = !args.flag("no-prefetch");
+    apply_checkpoint_flags(args, &mut spec)?;
     println!(
         "out-of-core training from {store_display} (cache budget {} MiB, prefetch={})",
         spec.cache_mb, spec.prefetch
@@ -383,9 +418,10 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         "pmm-train",
         &[
             "dataset", "grid", "steps", "lr", "seed", "batch", "d-h", "layers", "dropout",
-            "overlap", "stats-json",
+            "overlap", "stats-json", "checkpoint-dir", "checkpoint-every", "checkpoint-keep",
+            "kill-rank", "kill-step",
         ],
-        &["bf16", "verbose", "v"],
+        &["bf16", "resume", "verbose", "v"],
     )
     .map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "tiny");
@@ -403,6 +439,15 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
     }
     spec.precision = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
     spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
+    apply_checkpoint_flags(args, &mut spec)?;
+    match (
+        args.get::<usize>("kill-rank").map_err(|e| anyhow!(e))?,
+        args.get::<u64>("kill-step").map_err(|e| anyhow!(e))?,
+    ) {
+        (Some(rank), Some(step)) => spec.fault = Some(FaultSpec::KillRank { rank, step }),
+        (None, None) => {}
+        _ => bail!("--kill-rank and --kill-step must be given together"),
+    }
     println!(
         "4D PMM training {dataset} on grid {} ({} rank threads), {:?}, overlap={}",
         spec.grid.to_string(),

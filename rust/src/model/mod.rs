@@ -65,6 +65,20 @@ impl GcnDims {
         s.push((self.d_h, self.d_out));
         s
     }
+
+    /// Order-sensitive fold of every dimension field, one ingredient of
+    /// the checkpoint `spec_hash` (resume refuses a snapshot whose model
+    /// shape differs from the live run's).
+    pub fn state_signature(&self) -> u64 {
+        crate::checkpoint::state_hash(&[
+            self.d_in as u64,
+            self.d_h as u64,
+            self.d_out as u64,
+            self.layers as u64,
+            self.dropout.to_bits() as u64,
+            self.weight_decay.to_bits() as u64,
+        ])
+    }
 }
 
 /// Flat parameter vector in artifact order.

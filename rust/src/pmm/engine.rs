@@ -477,6 +477,81 @@ impl<'a> PmmGcn<'a> {
         out
     }
 
+    /// Export this rank's shard state for checkpointing: the local
+    /// parameter shards in optimizer slot order `[w_in, (w_l, g_l) per
+    /// layer, w_out]`, the Adam moments (same order) and the Adam step
+    /// counter.  Together with the engine's `(seed, step)` sampler cursor
+    /// this is *all* the state a bitwise-identical resume needs — the
+    /// subgraph prefetcher and dropout masks are pure functions of
+    /// `(seed, step)`, and the prefetcher accepts an arbitrary first step.
+    #[allow(clippy::type_complexity)]
+    pub fn export_state(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, f32) {
+        let mut tensors = vec![self.w_in.local.data.clone()];
+        for l in 0..self.dims.layers {
+            tensors.push(self.w[l].local.data.clone());
+            tensors.push(self.g[l].clone());
+        }
+        tensors.push(self.w_out.local.data.clone());
+        (tensors, self.adam_m.clone(), self.adam_v.clone(), self.t)
+    }
+
+    /// Restore this rank's shard state from an
+    /// [`PmmGcn::export_state`]-shaped snapshot.  Every tensor length is
+    /// validated against the live shard shapes *before* anything is
+    /// written, so a mismatched snapshot leaves the engine untouched.
+    pub fn restore_state(
+        &mut self,
+        tensors: &[Vec<f32>],
+        m: &[Vec<f32>],
+        v: &[Vec<f32>],
+        t: f32,
+    ) -> anyhow::Result<()> {
+        let lens: Vec<usize> = {
+            let mut l = vec![self.w_in.local.data.len()];
+            for i in 0..self.dims.layers {
+                l.push(self.w[i].local.data.len());
+                l.push(self.g[i].len());
+            }
+            l.push(self.w_out.local.data.len());
+            l
+        };
+        if tensors.len() != lens.len() || m.len() != lens.len() || v.len() != lens.len() {
+            anyhow::bail!(
+                "rank {}: snapshot has {} tensors, this shard expects {}",
+                self.ctx.rank,
+                tensors.len(),
+                lens.len()
+            );
+        }
+        for (i, &n) in lens.iter().enumerate() {
+            if tensors[i].len() != n || m[i].len() != n || v[i].len() != n {
+                anyhow::bail!(
+                    "rank {}: snapshot tensor {i} has {} elements, this shard expects {n}",
+                    self.ctx.rank,
+                    tensors[i].len()
+                );
+            }
+        }
+        let mut slots: Vec<&mut Vec<f32>> = Vec::with_capacity(lens.len());
+        slots.push(&mut self.w_in.local.data);
+        for (wl, gl) in self.w.iter_mut().zip(self.g.iter_mut()) {
+            slots.push(&mut wl.local.data);
+            slots.push(gl);
+        }
+        slots.push(&mut self.w_out.local.data);
+        for (slot, src) in slots.into_iter().zip(tensors) {
+            slot.copy_from_slice(src);
+        }
+        for (dst, src) in self.adam_m.iter_mut().zip(m) {
+            dst.copy_from_slice(src);
+        }
+        for (dst, src) in self.adam_v.iter_mut().zip(v) {
+            dst.copy_from_slice(src);
+        }
+        self.t = t;
+        Ok(())
+    }
+
     /// Input features shard for sampled rows (layout (X, Z)).
     fn input_shard(&self, sample: &[u32], cbx: &Arc<Vec<usize>>) -> PmmMat {
         let d_in = self.dims.d_in;
@@ -1185,6 +1260,55 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn export_restore_resumes_bitwise() {
+        // run 4 steps straight vs run 2, export, restore into a FRESH
+        // engine (new world, new prefetcher), run steps 2..4 — dropout on,
+        // so the stateless (seed, step) mask derivation is exercised too
+        let dims = GcnDims { dropout: 0.3, ..tiny_dims() };
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        let grid = Grid4D::new(1, 1, 1, 1);
+
+        let world_a = Arc::new(CommWorld::new(grid));
+        let ctx_a = super::super::PmmCtx::new(grid, 0, &world_a, Precision::Fp32);
+        let mut a = PmmGcn::new(ctx_a, dims, 48, data.clone(), 42);
+        let straight: Vec<u32> =
+            (0..4).map(|s| a.train_step(s, 5e-3).loss.to_bits()).collect();
+
+        let world_b = Arc::new(CommWorld::new(grid));
+        let ctx_b = super::super::PmmCtx::new(grid, 0, &world_b, Precision::Fp32);
+        let mut b = PmmGcn::new(ctx_b, dims, 48, data.clone(), 42);
+        let mut resumed: Vec<u32> =
+            (0..2).map(|s| b.train_step(s, 5e-3).loss.to_bits()).collect();
+        let (tensors, m, v, t) = b.export_state();
+        drop(b);
+
+        let world_c = Arc::new(CommWorld::new(grid));
+        let ctx_c = super::super::PmmCtx::new(grid, 0, &world_c, Precision::Fp32);
+        let mut c = PmmGcn::new(ctx_c, dims, 48, data, 42);
+        c.restore_state(&tensors, &m, &v, t).unwrap();
+        resumed.extend((2..4).map(|s| c.train_step(s, 5e-3).loss.to_bits()));
+
+        assert_eq!(straight, resumed, "resume must replay the exact trajectory");
+    }
+
+    #[test]
+    fn restore_state_rejects_shape_mismatch_untouched() {
+        let dims = tiny_dims();
+        let data = Arc::new(datasets::load("tiny").unwrap());
+        let grid = Grid4D::new(1, 1, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let ctx = super::super::PmmCtx::new(grid, 0, &world, Precision::Fp32);
+        let mut eng = PmmGcn::new(ctx, dims, 48, data, 42);
+        let (mut tensors, m, v, t) = eng.export_state();
+        tensors[1].pop(); // corrupt one shard length
+        let before = eng.export_state();
+        let err = eng.restore_state(&tensors, &m, &v, t).unwrap_err().to_string();
+        assert!(err.contains("tensor 1"), "{err}");
+        let after = eng.export_state();
+        assert_eq!(before.0, after.0, "failed restore must not mutate the engine");
     }
 
     #[test]

@@ -9,15 +9,18 @@
 //! identical to the legacy entry point for the same spec
 //! (`tests/session.rs` asserts this).
 
-use std::sync::mpsc::{channel, Receiver};
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::CommWorld;
-use crate::graph::datasets;
+use crate::checkpoint::{self, CheckpointManager, CheckpointPolicy, Snapshot};
+use crate::comm::{CommError, CommWorld, Precision};
+use crate::graph::{datasets, Dataset};
 use crate::grid::{Axis, Grid4D};
 use crate::model::GcnDims;
 use crate::pmm::{PmmCtx, PmmGcn, PmmTimers};
@@ -26,9 +29,35 @@ use crate::trainer::{self, OocTrainConfig, OocTrainReport, StepEvent, TrainConfi
 use crate::util::json::{obj, Json};
 
 use super::report::{
-    breakdown_json, AxisStats, PmmRunReport, RunReport, SimPoint, SimRunReport, StepReport,
+    breakdown_json, AxisStats, FailureReport, PmmRunReport, RunReport, SimPoint, SimRunReport,
+    StepReport,
 };
-use super::spec::{BackendKind, DataSource, RunSpec};
+use super::spec::{BackendKind, DataSource, FaultSpec, RunSpec};
+
+/// How many times the PMM supervisor will re-form the world and replay
+/// from the last checkpoint before declaring the run unrecoverable.
+const MAX_PMM_RESTARTS: u64 = 3;
+
+/// Apply a pre-run snapshot fault (`corrupt_newest` / `truncate_newest`)
+/// to every rank tag, so the subsequent resume scan must detect the
+/// damage and fall back to the previous valid snapshot.
+fn apply_snapshot_fault(
+    policy: Option<&CheckpointPolicy>,
+    fault: FaultSpec,
+    tags: &[String],
+) -> Result<()> {
+    let kind = match fault {
+        FaultSpec::CorruptNewest => checkpoint::CorruptKind::FlipPayloadBit,
+        FaultSpec::TruncateNewest => checkpoint::CorruptKind::Truncate,
+        FaultSpec::KillRank { .. } => return Ok(()), // armed in the rank loop instead
+    };
+    let p = policy.ok_or_else(|| anyhow!("a snapshot fault requires a checkpoint section"))?;
+    for tag in tags {
+        let path = checkpoint::corrupt_newest(&p.dir, tag, kind)?;
+        eprintln!("[fault] injected {fault:?} into {}", path.display());
+    }
+    Ok(())
+}
 
 /// A prepared, steppable run.
 pub trait Session {
@@ -137,9 +166,11 @@ pub fn train_config(spec: &RunSpec) -> TrainConfig {
     cfg.max_epochs = spec.epochs;
     cfg.target_acc = spec.target_acc;
     cfg.eval_every_epochs = spec.eval_every_epochs.max(1);
-    cfg.bf16_dp = spec.precision == crate::comm::Precision::Bf16;
+    cfg.bf16_dp = spec.precision == Precision::Bf16;
     cfg.overlap = spec.overlap;
     cfg.verbose = false; // observers replace verbose printing
+    cfg.checkpoint = spec.checkpoint.clone();
+    cfg.resume = spec.resume;
     cfg
 }
 
@@ -150,6 +181,10 @@ impl Backend for ReferenceBackend {
 
     fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
         let cfg = train_config(spec);
+        if let Some(f) = spec.fault {
+            let tags: Vec<String> = (0..spec.grid.gd).map(|g| format!("ref-g{g}")).collect();
+            apply_snapshot_fault(spec.checkpoint.as_ref(), f, &tags)?;
+        }
         let (tx, rx) = channel();
         // PJRT clients are per-thread; the whole legacy entry point moves
         // to a coordinator thread and streams its group-0 events back
@@ -205,6 +240,8 @@ pub fn ooc_config(spec: &RunSpec) -> OocTrainConfig {
     cfg.seed = spec.seed;
     cfg.prefetch = spec.prefetch;
     cfg.verbose = false;
+    cfg.checkpoint = spec.checkpoint.clone();
+    cfg.resume = spec.resume;
     cfg
 }
 
@@ -215,6 +252,9 @@ impl Backend for OocBackend {
 
     fn prepare(&self, spec: &RunSpec) -> Result<Box<dyn Session>> {
         let cfg = ooc_config(spec);
+        if let Some(f) = spec.fault {
+            apply_snapshot_fault(spec.checkpoint.as_ref(), f, &["ooc".to_string()])?;
+        }
         let (tx, rx) = channel();
         let handle =
             std::thread::spawn(move || trainer::train_from_store_with_progress(&cfg, Some(tx)));
@@ -244,18 +284,201 @@ impl Session for OocSession {
 // PMM backend (rank-thread 4D engine)
 // ---------------------------------------------------------------------------
 
-/// The rank-thread 4D PMM engine behind the session API.
+/// The rank-thread 4D PMM engine behind the session API, wrapped in an
+/// elastic supervisor: every rank body runs under `catch_unwind`, a
+/// failed collective surfaces as a structured [`CommError`] origin
+/// (rank/seq/op/axis), and when a rank dies the session joins the world,
+/// re-forms it and replays from the newest checkpoint step every rank has
+/// a valid snapshot for.
 struct PmmBackend;
 
 type PmmRankOut = (PmmTimers, (f32, f32), Option<(f32, f32)>);
 
+/// Why a rank thread ended without completing its steps.
+enum RankFailure {
+    /// A collective died — locally or via the poison cascade; the payload
+    /// carries the *origin* (rank/seq/op/axis) unchanged.
+    Comm(CommError),
+    /// A non-comm error or panic on the given rank.
+    Other(usize, String),
+}
+
+/// Everything needed to (re)spawn the rank threads — kept by the session
+/// so recovery can re-form the world from the last checkpoint.
+#[derive(Clone)]
+struct PmmRunCfg {
+    grid: Grid4D,
+    data: Arc<Dataset>,
+    dims: GcnDims,
+    batch: usize,
+    steps: u64,
+    lr: f32,
+    seed: u64,
+    prec: Precision,
+    overlap: bool,
+    final_eval: bool,
+    ckpt: Option<CheckpointPolicy>,
+}
+
+/// Per-rank run-configuration hash stored in every snapshot header, so a
+/// resume refuses state from a different grid/model/seed/shard.
+fn pmm_spec_hash(cfg: &PmmRunCfg, rank: usize) -> u64 {
+    checkpoint::state_hash(&[
+        0x504D_4D00, // backend tag "PMM"
+        cfg.seed,
+        cfg.dims.state_signature(),
+        cfg.batch as u64,
+        cfg.lr.to_bits() as u64,
+        cfg.grid.gd as u64,
+        cfg.grid.gx as u64,
+        cfg.grid.gy as u64,
+        cfg.grid.gz as u64,
+        rank as u64,
+    ])
+}
+
+/// The newest step every rank has a valid snapshot for, plus the loaded
+/// (hash-checked) per-rank snapshots.  Torn/corrupt files are skipped
+/// with a warning — the whole point of the fallback path.
+fn pmm_resume_point(cfg: &PmmRunCfg) -> Result<(u64, Vec<Option<Snapshot>>)> {
+    let policy = cfg
+        .ckpt
+        .as_ref()
+        .ok_or_else(|| anyhow!("resume requires a checkpoint section"))?;
+    let n = cfg.grid.world_size();
+    let mut common: Option<BTreeSet<u64>> = None;
+    for r in 0..n {
+        let (steps, warnings) = checkpoint::valid_steps(&policy.dir, &format!("pmm-r{r}"));
+        for w in warnings {
+            eprintln!("warning: {w}");
+        }
+        let set: BTreeSet<u64> = steps.into_iter().collect();
+        common = Some(match common {
+            None => set,
+            Some(c) => c.intersection(&set).copied().collect(),
+        });
+    }
+    let step = common.and_then(|c| c.into_iter().next_back()).ok_or_else(|| {
+        anyhow!(
+            "no snapshot step is valid across all {n} rank(s) under {}",
+            policy.dir.display()
+        )
+    })?;
+    let mut snaps = Vec::with_capacity(n);
+    for r in 0..n {
+        let path = checkpoint::path_for(&policy.dir, &format!("pmm-r{r}"), step);
+        let snap = checkpoint::load(&path)?;
+        snap.check_hash(pmm_spec_hash(cfg, r), &format!("pmm rank {r}"))?;
+        snaps.push(Some(snap));
+    }
+    Ok((step, snaps))
+}
+
+/// Spawn one thread per rank, running `start..cfg.steps`.  Each body runs
+/// under `catch_unwind` so a poisoned collective (or any panic) joins as
+/// a structured [`RankFailure`] instead of an opaque unwind; `kill` arms
+/// the deterministic `FaultSpec::KillRank` injection.
+fn spawn_pmm_ranks(
+    cfg: &PmmRunCfg,
+    world: &Arc<CommWorld>,
+    tx: Sender<StepEvent>,
+    start: u64,
+    mut snaps: Vec<Option<Snapshot>>,
+    kill: Option<(usize, u64)>,
+) -> Vec<JoinHandle<Result<PmmRankOut, RankFailure>>> {
+    let mut handles = Vec::with_capacity(cfg.grid.world_size());
+    for r in 0..cfg.grid.world_size() {
+        let w = world.clone();
+        let d = cfg.data.clone();
+        let tx = if r == 0 { Some(tx.clone()) } else { None };
+        let (grid, dims, batch) = (cfg.grid, cfg.dims, cfg.batch);
+        let (steps, lr, seed) = (cfg.steps, cfg.lr, cfg.seed);
+        let (prec, overlap, final_eval) = (cfg.prec, cfg.overlap, cfg.final_eval);
+        let hash = pmm_spec_hash(cfg, r);
+        let ckpt = cfg
+            .ckpt
+            .as_ref()
+            .map(|p| CheckpointManager::new(p.clone(), &format!("pmm-r{r}")));
+        let snap = snaps[r].take();
+        handles.push(std::thread::spawn(move || -> Result<PmmRankOut, RankFailure> {
+            let out = catch_unwind(AssertUnwindSafe(|| -> Result<PmmRankOut> {
+                let ctx = PmmCtx::new(grid, r, &w, prec);
+                let mut eng = PmmGcn::new(ctx, dims, batch, d, seed);
+                eng.set_overlap(overlap);
+                if let Some(snap) = &snap {
+                    eng.restore_state(&snap.tensors, &snap.m, &snap.v, snap.t)?;
+                }
+                let mut last = (0.0f32, 0.0f32);
+                for s in start..steps {
+                    if let Some((kr, ks)) = kill {
+                        if r == kr && s == ks {
+                            // dies before issuing any step-s collective, so
+                            // no peer can reach a later save barrier (they
+                            // all stall inside step s's poisoned waits)
+                            w.fail(r, &format!("scripted fault: kill rank {kr} at step {ks}"));
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let o = eng.train_step(s, lr);
+                    last = (o.loss, o.acc);
+                    if let Some(tx) = &tx {
+                        let _ = tx.send(StepEvent {
+                            step: s,
+                            loss: o.loss,
+                            acc: o.acc,
+                            wall_s: t0.elapsed().as_secs_f64(),
+                            eval: None,
+                            truncated: 0,
+                            done: s + 1 == steps,
+                        });
+                    }
+                    if let Some(mgr) = &ckpt {
+                        if mgr.should_save(s) {
+                            // shard-consistent save: every rank finishes
+                            // step s (all collectives drained) before any
+                            // shard is written, so the per-rank snapshot
+                            // set forms one world-wide state
+                            for ax in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+                                w.barrier(r, ax);
+                            }
+                            let (tensors, m, v, t) = eng.export_state();
+                            mgr.save(&Snapshot::from_flat(s + 1, seed, hash, tensors, m, v, t))?;
+                        }
+                    }
+                }
+                let eval = final_eval.then(|| eng.eval_full_graph());
+                Ok((eng.timers, last, eval))
+            }));
+            match out {
+                Ok(Ok(v)) => Ok(v),
+                Ok(Err(e)) => Err(RankFailure::Other(r, format!("{e:#}"))),
+                Err(payload) => Err(match payload.downcast_ref::<CommError>() {
+                    Some(ce) => RankFailure::Comm(ce.clone()),
+                    None => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        RankFailure::Other(r, msg)
+                    }
+                }),
+            }
+        }));
+    }
+    handles
+}
+
 struct PmmSession {
     rx: Receiver<StepEvent>,
-    handles: Vec<JoinHandle<PmmRankOut>>,
+    handles: Vec<JoinHandle<Result<PmmRankOut, RankFailure>>>,
     world: Arc<CommWorld>,
     ranks: usize,
     steps: u64,
     loss_curve: Vec<(u64, f32)>,
+    cfg: PmmRunCfg,
+    failures: Vec<FailureReport>,
+    restarts: u64,
 }
 
 /// The reference-model dims a spec maps onto for the PMM engine.
@@ -283,50 +506,134 @@ impl Backend for PmmBackend {
                 .ok_or_else(|| anyhow!("unknown dataset {}", spec.dataset))?,
         );
         let ds = datasets::spec(&spec.dataset).unwrap();
-        let dims = pmm_dims(spec);
-        let batch = spec.batch.unwrap_or(ds.batch);
-        let (steps, lr, seed) = (spec.steps, spec.lr, spec.seed);
-        let (prec, overlap, final_eval) = (spec.precision, spec.overlap, spec.final_eval);
+        let cfg = PmmRunCfg {
+            grid,
+            data,
+            dims: pmm_dims(spec),
+            batch: spec.batch.unwrap_or(ds.batch),
+            steps: spec.steps,
+            lr: spec.lr,
+            seed: spec.seed,
+            prec: spec.precision,
+            overlap: spec.overlap,
+            final_eval: spec.final_eval,
+            ckpt: spec.checkpoint.clone(),
+        };
+        if let Some(fault) = spec.fault {
+            let tags: Vec<String> =
+                (0..grid.world_size()).map(|r| format!("pmm-r{r}")).collect();
+            apply_snapshot_fault(cfg.ckpt.as_ref(), fault, &tags)?;
+        }
+        let kill = match spec.fault {
+            Some(FaultSpec::KillRank { rank, step }) => Some((rank, step)),
+            _ => None,
+        };
+        let (start, snaps) = if spec.resume {
+            pmm_resume_point(&cfg)?
+        } else {
+            (0, vec![None; grid.world_size()])
+        };
+        if cfg.steps > 0 && start >= cfg.steps {
+            bail!(
+                "the snapshot already covers step {start} of {}; nothing left to resume \
+                 (raise 'steps' to continue training)",
+                cfg.steps
+            );
+        }
         let world = Arc::new(CommWorld::new(grid));
         let (tx, rx) = channel();
-        let mut handles = Vec::with_capacity(grid.world_size());
-        for r in 0..grid.world_size() {
-            let w = world.clone();
-            let d = data.clone();
-            let tx = if r == 0 { Some(tx.clone()) } else { None };
-            handles.push(std::thread::spawn(move || -> PmmRankOut {
-                let ctx = PmmCtx::new(grid, r, &w, prec);
-                let mut eng = PmmGcn::new(ctx, dims, batch, d, seed);
-                eng.set_overlap(overlap);
-                let mut last = (0.0f32, 0.0f32);
-                for s in 0..steps {
-                    let t0 = Instant::now();
-                    let o = eng.train_step(s, lr);
-                    last = (o.loss, o.acc);
-                    if let Some(tx) = &tx {
-                        let _ = tx.send(StepEvent {
-                            step: s,
-                            loss: o.loss,
-                            acc: o.acc,
-                            wall_s: t0.elapsed().as_secs_f64(),
-                            eval: None,
-                            truncated: 0,
-                            done: s + 1 == steps,
-                        });
-                    }
-                }
-                let eval = final_eval.then(|| eng.eval_full_graph());
-                (eng.timers, last, eval)
-            }));
-        }
+        let handles = spawn_pmm_ranks(&cfg, &world, tx, start, snaps, kill);
         Ok(Box::new(PmmSession {
             rx,
             handles,
             world,
             ranks: grid.world_size(),
-            steps,
+            steps: cfg.steps,
             loss_curve: Vec::new(),
+            cfg,
+            failures: Vec::new(),
+            restarts: 0,
         }))
+    }
+}
+
+impl PmmSession {
+    /// Join the dead world, extract the failure origin, and — when a
+    /// checkpoint policy exists — re-form the world replaying from the
+    /// newest step every rank has a valid snapshot for.
+    fn recover(&mut self) -> Result<()> {
+        let mut failures = Vec::new();
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(f)) => failures.push(f),
+                Err(_) => {
+                    failures.push(RankFailure::Other(
+                        usize::MAX,
+                        "rank panicked outside the harness".to_string(),
+                    ));
+                }
+            }
+        }
+        if failures.is_empty() {
+            // all ranks returned cleanly yet rank 0 never sent `done` —
+            // a logic error, not something a restart can fix
+            bail!("pmm worker ended without a final step event");
+        }
+        let mut report = None;
+        for f in &failures {
+            if let RankFailure::Comm(e) = f {
+                report = Some(FailureReport {
+                    rank: e.rank,
+                    seq: e.seq,
+                    op: e.op.to_string(),
+                    axis: format!("{:?}", e.axis).to_lowercase(),
+                    message: e.msg.clone(),
+                    resumed_from_step: None,
+                });
+                break;
+            }
+        }
+        let mut report = report.unwrap_or_else(|| {
+            let (rank, msg) = match &failures[0] {
+                RankFailure::Other(r, m) => (*r, m.clone()),
+                RankFailure::Comm(_) => unreachable!("comm failures handled above"),
+            };
+            FailureReport {
+                rank,
+                seq: 0,
+                op: "panic".to_string(),
+                axis: String::new(),
+                message: msg,
+                resumed_from_step: None,
+            }
+        });
+        let origin = format!(
+            "rank {} died in {} (seq {}, axis '{}'): {}",
+            report.rank, report.op, report.seq, report.axis, report.message
+        );
+        if self.cfg.ckpt.is_none() {
+            bail!("pmm rank failed with no checkpoint to recover from: {origin}");
+        }
+        if self.restarts >= MAX_PMM_RESTARTS {
+            bail!("giving up after {MAX_PMM_RESTARTS} recovery attempts: {origin}");
+        }
+        let (start, snaps) = pmm_resume_point(&self.cfg)
+            .with_context(|| format!("recovering from: {origin}"))?;
+        // re-streamed steps replace anything recorded past the snapshot
+        self.loss_curve.retain(|&(s, _)| s < start);
+        report.resumed_from_step = Some(start);
+        eprintln!("[recover] {origin}; replaying from step {start}");
+        self.failures.push(report);
+        self.restarts += 1;
+        let world = Arc::new(CommWorld::new(self.cfg.grid));
+        let (tx, rx) = channel();
+        // the scripted fault is disarmed on replay: a real cluster's
+        // deterministic fault does not re-fire after the rank is replaced
+        self.handles = spawn_pmm_ranks(&self.cfg, &world, tx, start, snaps, None);
+        self.world = world;
+        self.rx = rx;
+        Ok(())
     }
 }
 
@@ -336,12 +643,16 @@ impl Session for PmmSession {
             // evaluation-only session: no training steps to stream
             return Ok(None);
         }
-        match self.rx.recv() {
-            Ok(ev) => {
-                self.loss_curve.push((ev.step, ev.loss));
-                Ok(Some(event_report(ev)))
+        loop {
+            match self.rx.recv() {
+                Ok(ev) => {
+                    self.loss_curve.push((ev.step, ev.loss));
+                    return Ok(Some(event_report(ev)));
+                }
+                // rank 0's sender dropped before `done`: a rank died (the
+                // poison cascade guarantees rank 0 is among the casualties)
+                Err(_) => self.recover()?,
             }
-            Err(_) => bail!("a pmm rank thread panicked before finishing its steps"),
         }
     }
 
@@ -351,7 +662,19 @@ impl Session for PmmSession {
         let mut last = None;
         let mut eval = None;
         for h in this.handles {
-            let (t, l, e) = h.join().map_err(|_| anyhow!("pmm rank thread panicked"))?;
+            let (t, l, e) = match h.join() {
+                Ok(Ok(v)) => v,
+                Ok(Err(RankFailure::Comm(e))) => bail!(
+                    "pmm rank {} died in {} (seq {}, axis {:?}): {}",
+                    e.rank,
+                    e.op,
+                    e.seq,
+                    e.axis,
+                    e.msg
+                ),
+                Ok(Err(RankFailure::Other(r, m))) => bail!("pmm rank {r} failed: {m}"),
+                Err(_) => bail!("pmm rank thread panicked outside the harness"),
+            };
             timers.add(&t);
             // rank 0 joins first; keep ITS values so final_loss/final_acc
             // agree with the streamed loss_curve (DP groups draw distinct
@@ -391,6 +714,8 @@ impl Session for PmmSession {
             steps: this.loss_curve.len() as u64,
             final_loss: last.0,
             loss_curve: this.loss_curve,
+            failures: this.failures,
+            restarts: this.restarts,
             pmm: Some(PmmRunReport {
                 final_acc: last.1,
                 timers_mean,

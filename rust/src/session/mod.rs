@@ -28,12 +28,14 @@ pub mod spec;
 pub use backends::{backend_for, ooc_config, pmm_dims, train_config, Backend, Session};
 pub use observer::{JsonlObserver, LogObserver, NullObserver, StepObserver};
 pub use report::{
-    AxisStats, PmmRunReport, RunReport, SimPoint, SimRunReport, StepReport,
+    AxisStats, FailureReport, PmmRunReport, RunReport, SimPoint, SimRunReport, StepReport,
 };
 pub use spec::{
-    sampler_tag, BackendKind, DataSource, GridSpec, ModelSpec, RunSpec, SimSpec, SpecError,
-    MAX_RANK_THREADS,
+    sampler_tag, BackendKind, DataSource, FaultSpec, GridSpec, ModelSpec, RunSpec, SimSpec,
+    SpecError, MAX_RANK_THREADS,
 };
+
+pub use crate::checkpoint::CheckpointPolicy;
 
 use anyhow::{bail, Result};
 

@@ -99,10 +99,26 @@ impl StepObserver for LogObserver {
     }
 
     fn on_finish(&mut self, r: &RunReport) {
+        for f in &r.failures {
+            match f.resumed_from_step {
+                Some(s) => eprintln!(
+                    "[session] recovered: rank {} died in {} (seq {}, axis '{}'): {}; \
+                     replayed from step {s}",
+                    f.rank, f.op, f.seq, f.axis, f.message
+                ),
+                None => eprintln!(
+                    "[session] rank {} died in {} (seq {}, axis '{}'): {}",
+                    f.rank, f.op, f.seq, f.axis, f.message
+                ),
+            }
+        }
         eprintln!(
             "[session] finished: {} steps in {:.2}s, final loss {:.4}",
             r.steps, r.wall_s, r.final_loss
         );
+        // a panicking rank unwinds through arbitrary frames; make sure
+        // the summary is on the terminal before anything re-raises
+        let _ = std::io::stderr().flush();
     }
 }
 
@@ -145,6 +161,22 @@ impl JsonlObserver {
             "warning: jsonl stream {} failed ({e}); the event log is incomplete",
             self.path.display()
         );
+    }
+}
+
+impl Drop for JsonlObserver {
+    /// A run that aborts mid-way (rank panic, unrecoverable fault) drops
+    /// the observer without `on_finish`; flush here so the steps that DID
+    /// stream survive in the file instead of dying in the buffer.
+    fn drop(&mut self) {
+        if !self.failed {
+            if let Err(e) = self.out.flush() {
+                eprintln!(
+                    "warning: jsonl stream {} lost buffered events on drop ({e})",
+                    self.path.display()
+                );
+            }
+        }
     }
 }
 

@@ -102,6 +102,26 @@ pub struct SimRunReport {
     pub points: Vec<SimPoint>,
 }
 
+/// One recovered (or fatal) rank failure, with the structured origin the
+/// comm layer carried through the poison cascade.
+#[derive(Clone, Debug)]
+pub struct FailureReport {
+    /// Rank the failure originated on.
+    pub rank: usize,
+    /// Collective sequence number on the originating group (0 for
+    /// injected faults and non-comm panics).
+    pub seq: u64,
+    /// Operation that died (`all_reduce`, `all_gather`, `injected-fault`,
+    /// `panic`, ...).
+    pub op: String,
+    /// Grid axis of the originating group (empty for non-comm panics).
+    pub axis: String,
+    /// Human-readable cause.
+    pub message: String,
+    /// Step the supervisor replayed from, when recovery succeeded.
+    pub resumed_from_step: Option<u64>,
+}
+
 /// Final aggregate of a session run.  The typed per-backend sections are
 /// `Some` exactly for the backend that ran.
 #[derive(Clone, Debug, Default)]
@@ -117,6 +137,10 @@ pub struct RunReport {
     /// (step, loss) curve — per-epoch on the reference backend, per-step
     /// on OOC/PMM, empty on sim.
     pub loss_curve: Vec<(u64, f32)>,
+    /// Rank failures the run hit, recovered or fatal (PMM backend).
+    pub failures: Vec<FailureReport>,
+    /// World re-formations the supervisor performed.
+    pub restarts: u64,
     /// Reference-backend report.
     pub trainer: Option<TrainReport>,
     /// OOC-backend report.
@@ -164,6 +188,32 @@ impl RunReport {
                         .iter()
                         .map(|&(s, l)| {
                             Json::Arr(vec![Json::from(s as usize), Json::from(l as f64)])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if self.restarts > 0 {
+            fields.push(("restarts", Json::from(self.restarts as usize)));
+        }
+        if !self.failures.is_empty() {
+            fields.push((
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| {
+                            let mut ff = vec![
+                                ("rank", Json::from(f.rank)),
+                                ("seq", Json::from(f.seq as usize)),
+                                ("op", Json::from(f.op.as_str())),
+                                ("axis", Json::from(f.axis.as_str())),
+                                ("message", Json::from(f.message.as_str())),
+                            ];
+                            if let Some(s) = f.resumed_from_step {
+                                ff.push(("resumed_from_step", Json::from(s as usize)));
+                            }
+                            obj(ff)
                         })
                         .collect(),
                 ),

@@ -10,6 +10,7 @@
 
 use std::path::PathBuf;
 
+use crate::checkpoint::CheckpointPolicy;
 use crate::comm::Precision;
 use crate::graph::datasets;
 use crate::grid::Grid4D;
@@ -169,6 +170,31 @@ pub struct SimSpec {
     pub gd_sweep: Vec<usize>,
 }
 
+/// A deterministic fault the session layer injects to drive the
+/// crash-recovery path end to end.  Faults require a `checkpoint`
+/// section: recovery replays from the newest common snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Kill rank `rank` when it reaches step `step` (PMM backend only):
+    /// the rank poisons its collectives and unwinds, peers drain with the
+    /// same structured origin, and the session supervisor re-forms the
+    /// world and resumes from the newest common checkpoint.
+    KillRank {
+        /// Rank thread to kill.
+        rank: usize,
+        /// Step index at which the kill fires (at step entry, before the
+        /// step's collectives).
+        step: u64,
+    },
+    /// Flip a payload bit in the newest snapshot before the run starts,
+    /// so restore must detect the bad checksum and fall back to the
+    /// previous valid snapshot.
+    CorruptNewest,
+    /// Truncate the newest snapshot to half its length before the run
+    /// starts (a torn write), forcing the same fallback.
+    TruncateNewest,
+}
+
 /// One structured violation found by [`RunSpec::validate`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum SpecError {
@@ -230,6 +256,10 @@ pub enum SpecError {
     BadModel(ModelSpec),
     /// Learning rate is not finite-positive.
     BadLr(f32),
+    /// The `checkpoint` section (or `resume` flag) is malformed.
+    BadCheckpoint(&'static str),
+    /// The `fault` section is malformed or not executable on this spec.
+    BadFault(&'static str),
 }
 
 impl std::fmt::Display for SpecError {
@@ -309,6 +339,8 @@ impl std::fmt::Display for SpecError {
                 m.d_h, m.layers
             ),
             SpecError::BadLr(lr) => write!(f, "lr must be finite and positive, got {lr}"),
+            SpecError::BadCheckpoint(why) => write!(f, "bad checkpoint section: {why}"),
+            SpecError::BadFault(why) => write!(f, "bad fault section: {why}"),
         }
     }
 }
@@ -363,6 +395,13 @@ pub struct RunSpec {
     pub artifacts: PathBuf,
     /// Run a distributed full-graph evaluation at the end (PMM backend).
     pub final_eval: bool,
+    /// Periodic snapshot policy (`None` = no checkpointing).
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume from the newest valid snapshot in `checkpoint.dir` before
+    /// training (requires a `checkpoint` section).
+    pub resume: bool,
+    /// Deterministic fault injection for the crash-recovery tests.
+    pub fault: Option<FaultSpec>,
     /// Simulator section (`backend == Sim` only).
     pub sim: Option<SimSpec>,
 }
@@ -391,6 +430,9 @@ impl RunSpec {
             cache_mb: 64,
             artifacts: PathBuf::from("artifacts"),
             final_eval: false,
+            checkpoint: None,
+            resume: false,
+            fault: None,
             sim: None,
         }
     }
@@ -494,6 +536,25 @@ impl RunSpec {
     /// Request a final distributed full-graph evaluation (PMM backend).
     pub fn final_eval(mut self, on: bool) -> Self {
         self.final_eval = on;
+        self
+    }
+
+    /// Snapshot to `dir` every `every_steps` steps, keeping the newest
+    /// `keep` snapshots per rank tag.
+    pub fn checkpoint(mut self, dir: PathBuf, every_steps: u64, keep: usize) -> Self {
+        self.checkpoint = Some(CheckpointPolicy::new(dir, every_steps, keep));
+        self
+    }
+
+    /// Resume from the newest valid snapshot before training.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.resume = on;
+        self
+    }
+
+    /// Inject a deterministic fault (drives the crash-recovery tests).
+    pub fn fault(mut self, fault: FaultSpec) -> Self {
+        self.fault = Some(fault);
         self
     }
 
@@ -671,6 +732,63 @@ impl RunSpec {
                         field: "final_eval",
                     });
                 }
+                // the analytical projection holds no trainable state; a
+                // snapshot section would silently not apply
+                if self.checkpoint.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "checkpoint",
+                    });
+                }
+                if self.resume {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "resume",
+                    });
+                }
+                if self.fault.is_some() {
+                    errs.push(SpecError::FieldUnsupported {
+                        backend: self.backend,
+                        field: "fault",
+                    });
+                }
+            }
+        }
+        if let Some(cp) = &self.checkpoint {
+            if cp.every_steps == 0 {
+                errs.push(SpecError::BadCheckpoint("checkpoint.every_steps must be > 0"));
+            }
+            if cp.keep == 0 {
+                errs.push(SpecError::BadCheckpoint("checkpoint.keep must be > 0"));
+            }
+        }
+        if self.resume && self.checkpoint.is_none() {
+            errs.push(SpecError::BadCheckpoint(
+                "resume requires a 'checkpoint' section naming the snapshot dir",
+            ));
+        }
+        if let Some(fault) = self.fault {
+            if self.checkpoint.is_none() {
+                errs.push(SpecError::BadFault(
+                    "faults require a 'checkpoint' section (recovery replays from snapshots)",
+                ));
+            }
+            if let FaultSpec::KillRank { rank, step } = fault {
+                if self.backend != BackendKind::Pmm {
+                    errs.push(SpecError::BadFault(
+                        "kill_rank faults only run on the pmm backend",
+                    ));
+                }
+                if rank >= g.world_size() {
+                    errs.push(SpecError::BadFault(
+                        "fault.rank must be below the grid's world size",
+                    ));
+                }
+                if step >= self.steps {
+                    errs.push(SpecError::BadFault(
+                        "fault.step must be below 'steps' (the kill must fire mid-run)",
+                    ));
+                }
             }
         }
         match (&self.sim, self.backend) {
@@ -766,6 +884,35 @@ impl RunSpec {
             ("cache_mb", Json::from(self.cache_mb)),
             ("artifacts", Json::from(self.artifacts.to_string_lossy().as_ref())),
             ("final_eval", Json::Bool(self.final_eval)),
+            (
+                "checkpoint",
+                match &self.checkpoint {
+                    None => Json::Null,
+                    Some(c) => obj(vec![
+                        ("dir", Json::from(c.dir.to_string_lossy().as_ref())),
+                        ("every_steps", Json::from(c.every_steps as usize)),
+                        ("keep", Json::from(c.keep)),
+                    ]),
+                },
+            ),
+            ("resume", Json::Bool(self.resume)),
+            (
+                "fault",
+                match self.fault {
+                    None => Json::Null,
+                    Some(FaultSpec::KillRank { rank, step }) => obj(vec![
+                        ("kind", Json::from("kill_rank")),
+                        ("rank", Json::from(rank)),
+                        ("step", Json::from(step as usize)),
+                    ]),
+                    Some(FaultSpec::CorruptNewest) => {
+                        obj(vec![("kind", Json::from("corrupt_newest"))])
+                    }
+                    Some(FaultSpec::TruncateNewest) => {
+                        obj(vec![("kind", Json::from("truncate_newest"))])
+                    }
+                },
+            ),
             ("sim", sim),
         ])
     }
@@ -779,10 +926,11 @@ impl RunSpec {
     /// messages that name the field.
     pub fn from_json(j: &Json) -> Result<RunSpec, String> {
         let o = j.as_obj().ok_or("spec must be a JSON object")?;
-        const KNOWN: [&str; 20] = [
+        const KNOWN: [&str; 23] = [
             "backend", "dataset", "source", "sampler", "model", "grid", "precision", "overlap",
             "prefetch", "steps", "epochs", "batch", "lr", "seed", "target_acc",
-            "eval_every_epochs", "cache_mb", "artifacts", "final_eval", "sim",
+            "eval_every_epochs", "cache_mb", "artifacts", "final_eval", "checkpoint", "resume",
+            "fault", "sim",
         ];
         for k in o.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -867,6 +1015,7 @@ impl RunSpec {
         spec.overlap = bool_field("overlap", spec.overlap)?;
         spec.prefetch = bool_field("prefetch", spec.prefetch)?;
         spec.final_eval = bool_field("final_eval", spec.final_eval)?;
+        spec.resume = bool_field("resume", spec.resume)?;
         let num_field = |name: &str| -> Result<Option<f64>, String> {
             match j.get(name) {
                 None | Some(Json::Null) => Ok(None),
@@ -911,6 +1060,58 @@ impl RunSpec {
         }
         if let Some(a) = str_typed("artifacts")? {
             spec.artifacts = PathBuf::from(a);
+        }
+        match j.get("checkpoint") {
+            None | Some(Json::Null) => {}
+            Some(c) => {
+                check_obj_keys(c, "checkpoint", &["dir", "every_steps", "keep"])?;
+                let dir = c
+                    .get("dir")
+                    .and_then(Json::as_str)
+                    .ok_or("checkpoint.dir must be a path string")?;
+                let every = c
+                    .get("every_steps")
+                    .and_then(Json::as_f64)
+                    .ok_or("checkpoint.every_steps must be a number")?;
+                let keep = match c.get("keep") {
+                    None | Some(Json::Null) => 4.0,
+                    Some(v) => v.as_f64().ok_or("checkpoint.keep must be a number")?,
+                };
+                spec.checkpoint = Some(CheckpointPolicy::new(
+                    PathBuf::from(dir),
+                    every as u64,
+                    keep as usize,
+                ));
+            }
+        }
+        match j.get("fault") {
+            None | Some(Json::Null) => {}
+            Some(v) => {
+                check_obj_keys(v, "fault", &["kind", "rank", "step"])?;
+                let kind = v.get("kind").and_then(Json::as_str).ok_or(
+                    "fault.kind must be \"kill_rank\", \"corrupt_newest\" or \"truncate_newest\"",
+                )?;
+                spec.fault = Some(match kind {
+                    "kill_rank" => {
+                        let rank = v
+                            .get("rank")
+                            .and_then(Json::as_f64)
+                            .ok_or("fault.rank must be a number when fault.kind = \"kill_rank\"")?;
+                        let step = v
+                            .get("step")
+                            .and_then(Json::as_f64)
+                            .ok_or("fault.step must be a number when fault.kind = \"kill_rank\"")?;
+                        FaultSpec::KillRank { rank: rank as usize, step: step as u64 }
+                    }
+                    "corrupt_newest" => FaultSpec::CorruptNewest,
+                    "truncate_newest" => FaultSpec::TruncateNewest,
+                    other => {
+                        return Err(format!(
+                            "fault.kind must be kill_rank, corrupt_newest or truncate_newest, got '{other}'"
+                        ))
+                    }
+                });
+            }
         }
         match j.get("sim") {
             None | Some(Json::Null) => {}

@@ -27,6 +27,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::{CheckpointManager, CheckpointPolicy, Snapshot};
 use crate::comm::{CommWorld, Precision};
 use crate::graph::store::OocGraph;
 use crate::graph::{datasets, Dataset};
@@ -73,6 +74,12 @@ pub struct TrainConfig {
     /// the nonblocking collective engine before draining (default), vs
     /// one blocking all-reduce per tensor
     pub overlap: bool,
+    /// Periodic snapshot policy (`None` = no checkpointing); each group
+    /// saves under tag `ref-g{group}`.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume from the newest snapshot step every group has a valid
+    /// snapshot for (requires `checkpoint`).
+    pub resume: bool,
 }
 
 impl TrainConfig {
@@ -96,6 +103,8 @@ impl TrainConfig {
             verbose: false,
             bf16_dp: false,
             overlap: true,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -187,12 +196,13 @@ pub fn meta_to_dims(m: &ModelMeta) -> GcnDims {
 /// nothing (double buffering in both directions).
 fn spawn_prefetcher(
     mut maker: BatchMaker,
+    start: u64,
     max_steps: u64,
 ) -> (Receiver<BatchData>, SyncSender<BatchData>) {
     let (tx, rx) = sync_channel::<BatchData>(2);
     let (free_tx, free_rx) = sync_channel::<BatchData>(4);
     std::thread::spawn(move || {
-        for step in 0..max_steps {
+        for step in start..max_steps {
             // drain recycled shells first so `make` reuses their buffers
             while let Ok(spent) = free_rx.try_recv() {
                 maker.recycle(spent);
@@ -252,7 +262,8 @@ fn batch_literals(meta: &ModelMeta, b: &BatchData, seed: u64) -> Result<Vec<xla:
 }
 
 /// Shared per-worker training loop.  `world` carries the DP communicator
-/// when `cfg.dp > 1`.
+/// when `cfg.dp > 1`; `resume_from` is this group's snapshot when the run
+/// resumes (all groups must resume from the same step).
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     cfg: &TrainConfig,
@@ -262,6 +273,7 @@ fn worker_loop(
     world: Option<&CommWorld>,
     report: &mut TrainReport,
     progress: Option<ProgressSender>,
+    resume_from: Option<Snapshot>,
 ) -> Result<()> {
     let rt = Runtime::open(&cfg.artifacts)?;
     let dims = meta_to_dims(meta);
@@ -272,6 +284,19 @@ fn worker_loop(
         steps_per_epoch * cfg.max_epochs as u64
     };
     let group_seed = splitmix64(cfg.seed ^ (0xD0 + group as u64));
+    let spec_hash = crate::checkpoint::state_hash(&[
+        0x5245_4600, // backend tag "REF"
+        cfg.seed,
+        dims.state_signature(),
+        meta.batch as u64,
+        cfg.lr.to_bits() as u64,
+        cfg.dp as u64,
+        group as u64,
+    ]);
+    let ckpt = cfg
+        .checkpoint
+        .as_ref()
+        .map(|p| CheckpointManager::new(p.clone(), &format!("ref-g{group}")));
     let maker =
         BatchMaker::new(data.clone(), cfg.sampler, meta.batch, meta.edge_cap, meta.layers, group_seed);
 
@@ -287,12 +312,32 @@ fn worker_loop(
     };
 
     let mut st = init_state(meta, cfg.seed);
+    let mut start: u64 = 0;
+    if let Some(snap) = &resume_from {
+        snap.check_hash(spec_hash, &format!("reference group {group}"))?;
+        if snap.tensors.len() != st.params.len()
+            || snap.tensors.iter().zip(&st.params).any(|(s, p)| s.len() != p.len())
+        {
+            bail!("group {group}: snapshot tensor shapes do not match this model");
+        }
+        st.params = snap.tensors.clone();
+        st.m = snap.m.clone();
+        st.v = snap.v.clone();
+        st.t = snap.t;
+        start = snap.step;
+    }
+    if start >= total_steps {
+        bail!(
+            "group {group}: the snapshot already covers step {start} of {total_steps}; \
+             nothing left to resume (raise max_steps to continue training)"
+        );
+    }
     // §V-A double buffering: with prefetch on, the maker moves to a sampler
     // thread that builds batch t+1 while step t executes (spent shells are
     // recycled back over the second channel); otherwise it runs inline on
     // the critical path (the Fig. 5 baseline).
     let (mut rx, mut inline_maker) = if cfg.prefetch {
-        (Some(spawn_prefetcher(maker, total_steps)), None)
+        (Some(spawn_prefetcher(maker, start, total_steps)), None)
     } else {
         (None, Some(maker))
     };
@@ -316,7 +361,7 @@ fn worker_loop(
         })
         .collect();
 
-    for step in 0..total_steps {
+    for step in start..total_steps {
         let t_step = Instant::now();
         // --- sample (or wait on the prefetcher) ---
         let t0 = Instant::now();
@@ -431,6 +476,22 @@ fn worker_loop(
         let step_wall = t_step.elapsed().as_secs_f64();
         train_time += step_wall;
 
+        if let Some(mgr) = &ckpt {
+            if mgr.should_save(step) {
+                let snap = Snapshot::from_flat(
+                    step + 1,
+                    cfg.seed,
+                    spec_hash,
+                    st.params.clone(),
+                    st.m.clone(),
+                    st.v.clone(),
+                    st.t,
+                );
+                mgr.save(&snap)
+                    .with_context(|| format!("group {group}: saving the step-{step} snapshot"))?;
+            }
+        }
+
         if step % steps_per_epoch == 0 || step == total_steps - 1 {
             report.loss_curve.push((step, last_loss));
         }
@@ -491,7 +552,9 @@ fn worker_loop(
         }
     }
 
-    let steps = report.steps.max(1) as f64;
+    // breakdown averages are over the steps *this* invocation executed
+    // (absolute indices `start..report.steps` after a resume)
+    let steps = report.steps.saturating_sub(start).max(1) as f64;
     report.epochs = (report.steps / steps_per_epoch) as usize;
     report.train_time_s = train_time;
     report.eval_time_s = eval_time;
@@ -529,9 +592,50 @@ pub fn train_with_progress(
     let meta = rt.model(spec.model_config)?.clone();
     drop(rt);
 
+    // resume every group from the newest step that *all* groups have a
+    // valid snapshot for (a crash can leave the final save partial)
+    let mut resume: Vec<Option<Snapshot>> = if cfg.resume {
+        let policy = cfg
+            .checkpoint
+            .clone()
+            .ok_or_else(|| anyhow!("resume requires a checkpoint directory (cfg.checkpoint)"))?;
+        let mut common: Option<std::collections::BTreeSet<u64>> = None;
+        for g in 0..cfg.dp {
+            let (steps, warnings) =
+                crate::checkpoint::valid_steps(&policy.dir, &format!("ref-g{g}"));
+            for w in warnings {
+                eprintln!("warning: {w}");
+            }
+            let set: std::collections::BTreeSet<u64> = steps.into_iter().collect();
+            common = Some(match common {
+                None => set,
+                Some(c) => c.intersection(&set).copied().collect(),
+            });
+        }
+        let step = common.and_then(|c| c.into_iter().next_back()).ok_or_else(|| {
+            anyhow!(
+                "resume requested but no valid snapshot covers all {} group(s) under {}",
+                cfg.dp,
+                policy.dir.display()
+            )
+        })?;
+        (0..cfg.dp)
+            .map(|g| {
+                crate::checkpoint::load(&crate::checkpoint::path_for(
+                    &policy.dir,
+                    &format!("ref-g{g}"),
+                    step,
+                ))
+                .map(Some)
+            })
+            .collect::<Result<_>>()?
+    } else {
+        vec![None; cfg.dp]
+    };
+
     if cfg.dp == 1 {
         let mut report = TrainReport::default();
-        worker_loop(cfg, data, &meta, 0, None, &mut report, progress)?;
+        worker_loop(cfg, data, &meta, 0, None, &mut report, progress, resume.pop().unwrap())?;
         Ok(report)
     } else {
         let world = Arc::new(CommWorld::new(Grid4D::new(cfg.dp, 1, 1, 1)));
@@ -543,9 +647,10 @@ pub fn train_with_progress(
             let meta = meta.clone();
             let world = world.clone();
             let tx = if g == 0 { progress.take() } else { None };
+            let snap = resume[g].take();
             handles.push(std::thread::spawn(move || -> Result<TrainReport> {
                 let mut report = TrainReport::default();
-                worker_loop(&cfg, data, &meta, g, Some(&world), &mut report, tx)?;
+                worker_loop(&cfg, data, &meta, g, Some(&world), &mut report, tx, snap)?;
                 Ok(report)
             }));
         }
@@ -594,6 +699,11 @@ pub struct OocTrainConfig {
     pub prefetch: bool,
     /// Per-step stderr logging.
     pub verbose: bool,
+    /// Periodic snapshot policy (`None` = no checkpointing); saves under
+    /// tag `ooc`.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume from the newest valid `ooc` snapshot (requires `checkpoint`).
+    pub resume: bool,
 }
 
 impl OocTrainConfig {
@@ -611,6 +721,8 @@ impl OocTrainConfig {
             seed: 42,
             prefetch: true,
             verbose: false,
+            checkpoint: None,
+            resume: false,
         }
     }
 }
@@ -725,6 +837,47 @@ pub fn train_from_store_with_progress(
     let group_seed = splitmix64(cfg.seed ^ 0xD0);
     let sampler = UniformVertexSampler::new(store.n, cfg.batch, group_seed);
 
+    let mut params = crate::model::init_params(&dims, cfg.seed);
+    let mut opt = crate::model::AdamState::new(&dims);
+    let spec_hash = crate::checkpoint::state_hash(&[
+        0x4F4F_4300, // backend tag "OOC"
+        cfg.seed,
+        dims.state_signature(),
+        cfg.batch as u64,
+        cfg.lr.to_bits() as u64,
+    ]);
+    let ckpt = cfg.checkpoint.as_ref().map(|p| CheckpointManager::new(p.clone(), "ooc"));
+    let mut start: u64 = 0;
+    if cfg.resume {
+        let mgr = ckpt
+            .as_ref()
+            .ok_or_else(|| anyhow!("resume requires a checkpoint directory (cfg.checkpoint)"))?;
+        let (found, warnings) = mgr.latest();
+        for w in warnings {
+            eprintln!("warning: {w}");
+        }
+        let (path, snap) = found.ok_or_else(|| {
+            anyhow!(
+                "resume requested but no valid 'ooc' snapshot under {}",
+                mgr.policy().dir.display()
+            )
+        })?;
+        snap.check_hash(spec_hash, "the ooc trainer")?;
+        snap.restore_model(&mut params, &mut opt)
+            .with_context(|| format!("restoring {}", path.display()))?;
+        start = snap.step;
+        if cfg.verbose {
+            eprintln!("[ooc] resuming from {} at step {start}", path.display());
+        }
+    }
+    if start >= cfg.steps {
+        bail!(
+            "the snapshot already covers step {start} of {}; nothing left to resume \
+             (raise steps to continue training)",
+            cfg.steps
+        );
+    }
+
     // §V-A overlap: batch t+1 is read from disk while step t computes.
     // Spent shells circulate back over the recycle channel, so the sampler
     // thread's steady-state batch build allocates nothing.
@@ -734,9 +887,10 @@ pub fn train_from_store_with_progress(
         let st = store.clone();
         let sm = sampler.clone();
         let steps = cfg.steps;
+        let first = start;
         std::thread::spawn(move || {
             let mut ws = crate::sampling::InduceWorkspace::new();
-            for step in 0..steps {
+            for step in first..steps {
                 let mut shell = free_rx.try_recv().unwrap_or_else(|_| OocBatch::empty());
                 build_ooc_batch_into(&st, &sm, step, &mut ws, &mut shell);
                 if tx.send(shell).is_err() {
@@ -749,8 +903,6 @@ pub fn train_from_store_with_progress(
         (None, None)
     };
 
-    let mut params = crate::model::init_params(&dims, cfg.seed);
-    let mut opt = crate::model::AdamState::new(&dims);
     let mut ws = crate::model::StepWorkspace::new();
     let masks = vec![Mat::filled(cfg.batch, dims.d_h, 1.0); dims.layers];
     let mut report = OocTrainReport { store_bytes: store.store_bytes(), ..Default::default() };
@@ -760,7 +912,7 @@ pub fn train_from_store_with_progress(
     let mut inline_ws = crate::sampling::InduceWorkspace::new();
     let mut inline_shell = OocBatch::empty();
     let t_train = Instant::now();
-    for step in 0..cfg.steps {
+    for step in start..cfg.steps {
         let t_step = Instant::now();
         let mut recvd: Option<OocBatch> = None;
         let b: &OocBatch = match &rx {
@@ -785,6 +937,13 @@ pub fn train_from_store_with_progress(
         }
         last = (loss, acc);
         report.loss_curve.push((step, loss));
+        if let Some(mgr) = &ckpt {
+            if mgr.should_save(step) {
+                let snap = Snapshot::from_model(step + 1, cfg.seed, spec_hash, &params, &opt);
+                mgr.save(&snap)
+                    .with_context(|| format!("saving the step-{step} ooc snapshot"))?;
+            }
+        }
         if cfg.verbose {
             eprintln!("[ooc] step {step} loss {loss:.4} train-acc {acc:.4}");
         }
@@ -803,7 +962,7 @@ pub fn train_from_store_with_progress(
     }
     drop(rx);
     report.train_time_s = t_train.elapsed().as_secs_f64();
-    report.sample_wait_s = wait / report.steps.max(1) as f64;
+    report.sample_wait_s = wait / report.steps.saturating_sub(start).max(1) as f64;
     report.final_loss = last.0;
     report.final_train_acc = last.1;
     let cs = store.cache_stats();

@@ -1,0 +1,117 @@
+//! Checkpoint-subsystem tests: the binary format round-trips bitwise,
+//! every torn-write mode (truncation, payload corruption, stale version)
+//! is detected with a descriptive error — never a panic — and the
+//! discovery path falls back to the previous valid snapshot.
+
+use std::path::PathBuf;
+
+use scalegnn::checkpoint::{
+    self, CheckpointManager, CheckpointPolicy, CorruptKind, Snapshot,
+};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scalegnn_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn sample_snapshot(step: u64) -> Snapshot {
+    let tensors = vec![vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE], vec![3.0; 7]];
+    let m = vec![vec![0.1f32, 0.2, 0.3, 0.4], vec![-0.5; 7]];
+    let v = vec![vec![0.01f32, 0.02, 0.03, 0.04], vec![0.5; 7]];
+    Snapshot::from_flat(step, 42, 0xFEED, tensors, m, v, step as f32)
+}
+
+#[test]
+fn snapshot_roundtrips_bitwise_through_a_file() {
+    let dir = tmp_dir("roundtrip");
+    let snap = sample_snapshot(7);
+    let path = checkpoint::save(&dir, "t", &snap).unwrap();
+    assert_eq!(path, checkpoint::path_for(&dir, "t", 7));
+    let back = checkpoint::load(&path).unwrap();
+    assert_eq!(back, snap, "decode(encode(s)) must be identical");
+    // f32 payloads survive bit-exactly, not just approximately
+    for (a, b) in snap.tensors.iter().zip(&back.tensors) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_torn_write_mode_is_a_clean_descriptive_error() {
+    for (kind, needle) in [
+        (CorruptKind::Truncate, "truncated"),
+        (CorruptKind::FlipPayloadBit, "checksum"),
+        (CorruptKind::StaleVersion, "version"),
+    ] {
+        let dir = tmp_dir(&format!("torn_{needle}"));
+        checkpoint::save(&dir, "t", &sample_snapshot(3)).unwrap();
+        let path = checkpoint::corrupt_newest(&dir, "t", kind).unwrap();
+        let err = checkpoint::load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains(needle),
+            "{kind:?} should report '{needle}', got: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn discovery_skips_corrupt_newest_and_falls_back() {
+    let dir = tmp_dir("fallback");
+    checkpoint::save(&dir, "t", &sample_snapshot(2)).unwrap();
+    checkpoint::save(&dir, "t", &sample_snapshot(4)).unwrap();
+    checkpoint::corrupt_newest(&dir, "t", CorruptKind::FlipPayloadBit).unwrap();
+
+    let (steps, warnings) = checkpoint::valid_steps(&dir, "t");
+    assert_eq!(steps, vec![2], "the corrupt step-4 file must be skipped");
+    assert!(!warnings.is_empty(), "skipping must be reported, not silent");
+
+    let (found, _) = checkpoint::latest_valid(&dir, "t");
+    let (path, snap) = found.expect("the previous valid snapshot survives");
+    assert_eq!(snap.step, 2);
+    assert_eq!(path, checkpoint::path_for(&dir, "t", 2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unrelated_files_do_not_confuse_discovery() {
+    let dir = tmp_dir("unrelated");
+    checkpoint::save(&dir, "t", &sample_snapshot(1)).unwrap();
+    std::fs::write(dir.join("notes.txt"), "not a checkpoint").unwrap();
+    std::fs::write(dir.join("other-step000000000009.ckpt"), "different tag").unwrap();
+    let (steps, _) = checkpoint::valid_steps(&dir, "t");
+    assert_eq!(steps, vec![1]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manager_enforces_cadence_and_retention() {
+    let dir = tmp_dir("manager");
+    let mgr = CheckpointManager::new(CheckpointPolicy::new(dir.clone(), 2, 2), "t");
+    // every_steps = 2 saves after steps 1, 3, 5, ... (0-based)
+    assert!(!mgr.should_save(0));
+    assert!(mgr.should_save(1));
+    assert!(!mgr.should_save(2));
+    assert!(mgr.should_save(3));
+    for step in [2u64, 4, 6, 8] {
+        mgr.save(&sample_snapshot(step)).unwrap();
+    }
+    let (steps, warnings) = mgr.valid_steps();
+    assert_eq!(steps, vec![6, 8], "keep = 2 retains only the newest two");
+    assert!(warnings.is_empty());
+    let (found, _) = mgr.latest();
+    assert_eq!(found.unwrap().1.step, 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn check_hash_refuses_a_different_run_configuration() {
+    let snap = sample_snapshot(5);
+    snap.check_hash(0xFEED, "test").unwrap();
+    let err = snap.check_hash(0xBEEF, "test").unwrap_err().to_string();
+    assert!(err.contains("hash mismatch"), "{err}");
+}

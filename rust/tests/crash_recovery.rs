@@ -1,0 +1,231 @@
+//! Crash-recovery tests: interrupted-then-resumed runs are **bitwise
+//! identical** to uninterrupted ones on every training backend, a rank
+//! killed mid-run on the PMM backend recovers automatically from the last
+//! checkpoint, and a torn newest snapshot falls back to the previous
+//! valid one — end to end through the session API.
+
+use std::path::PathBuf;
+
+use scalegnn::session::{self, BackendKind, FaultSpec, RunSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scalegnn_crash_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn assert_bitwise_eq(a: &[(u64, f32)], b: &[(u64, f32)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (&(sa, la), &(sb, lb)) in a.iter().zip(b.iter()) {
+        assert_eq!(sa, sb, "{what}: step index diverged");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{what}: loss at step {sa}: {la} vs {lb}");
+    }
+}
+
+/// `prefix ++ resumed` must equal the uninterrupted curve bit for bit.
+fn assert_resume_identity(
+    full: &[(u64, f32)],
+    prefix: &[(u64, f32)],
+    resumed: &[(u64, f32)],
+    what: &str,
+) {
+    let mut stitched = prefix.to_vec();
+    stitched.extend_from_slice(resumed);
+    assert_bitwise_eq(full, &stitched, what);
+}
+
+fn pmm_spec(steps: u64, overlap: bool) -> RunSpec {
+    RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .model(16, 2, 0.5)
+        .steps(steps)
+        .lr(5e-3)
+        .seed(42)
+        .overlap(overlap)
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise resume identity, per backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pmm_resume_is_bitwise_identical_to_uninterrupted() {
+    for overlap in [true, false] {
+        let dir = tmp_dir(&format!("pmm_resume_{overlap}"));
+        let full = session::run_silent(&pmm_spec(8, overlap)).unwrap();
+
+        // interrupted run: 4 steps, snapshots after steps 1 and 3
+        let first = session::run_silent(
+            &pmm_spec(4, overlap).checkpoint(dir.clone(), 2, 4),
+        )
+        .unwrap();
+        // resumed run: picks up at step 4 and finishes
+        let second = session::run_silent(
+            &pmm_spec(8, overlap).checkpoint(dir.clone(), 2, 4).resume(true),
+        )
+        .unwrap();
+        assert_eq!(second.loss_curve.first().map(|&(s, _)| s), Some(4));
+        assert_resume_identity(
+            &full.loss_curve,
+            &first.loss_curve,
+            &second.loss_curve,
+            &format!("pmm overlap {overlap}"),
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn ooc_resume_is_bitwise_identical_to_uninterrupted() {
+    let dir = tmp_dir("ooc_resume");
+    let store = dir.join("tiny.pallas");
+    let spec = |steps: u64| {
+        RunSpec::new(BackendKind::Ooc, "tiny")
+            .store(store.clone())
+            .cache_mb(4)
+            .batch(128)
+            .model(16, 2, 0.0)
+            .steps(steps)
+            .lr(1e-2)
+            .seed(42)
+    };
+    let full = session::run_silent(&spec(12)).unwrap();
+    let first = session::run_silent(&spec(6).checkpoint(dir.join("ckpt"), 3, 4)).unwrap();
+    let second =
+        session::run_silent(&spec(12).checkpoint(dir.join("ckpt"), 3, 4).resume(true)).unwrap();
+    assert_eq!(second.loss_curve.first().map(|&(s, _)| s), Some(6));
+    assert_resume_identity(&full.loss_curve, &first.loss_curve, &second.loss_curve, "ooc");
+    assert_eq!(
+        full.final_loss.to_bits(),
+        second.final_loss.to_bits(),
+        "resumed final loss must be bitwise identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reference_resume_is_bitwise_identical_to_uninterrupted() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !scalegnn::runtime::pjrt_artifacts_available(&artifacts) {
+        eprintln!("skipping: PJRT artifacts/backend not available");
+        return;
+    }
+    for dp in [1usize, 2] {
+        let dir = tmp_dir(&format!("ref_resume_{dp}"));
+        let spec = |steps: u64| {
+            RunSpec::new(BackendKind::Reference, "tiny")
+                .grid(dp, 1, 1, 1)
+                .steps(steps)
+                .lr(5e-3)
+                .seed(42)
+                .artifacts(artifacts.clone())
+        };
+        let full = session::run_silent(&spec(12)).unwrap();
+        let first = session::run_silent(&spec(8).checkpoint(dir.clone(), 4, 4)).unwrap();
+        let second =
+            session::run_silent(&spec(12).checkpoint(dir.clone(), 4, 4).resume(true)).unwrap();
+        // the interrupted run snapshotted after step 7; the resumed run
+        // covers 8..12 and must reproduce the uninterrupted suffix exactly
+        // (the reference curve records epoch boundaries, so compare the
+        // entries both runs share rather than concatenating)
+        assert!(first.steps == 8 && second.loss_curve.iter().all(|&(s, _)| s >= 8));
+        let suffix: Vec<(u64, f32)> =
+            full.loss_curve.iter().copied().filter(|&(s, _)| s >= 8).collect();
+        assert_bitwise_eq(&suffix, &second.loss_curve, &format!("reference dp {dp}"));
+        assert_eq!(full.final_loss.to_bits(), second.final_loss.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic recovery: kill a rank mid-run, recover, match the unfaulted curve
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pmm_kill_rank_recovers_and_matches_unfaulted_curve() {
+    for overlap in [true, false] {
+        let dir = tmp_dir(&format!("pmm_kill_{overlap}"));
+        let unfaulted = session::run_silent(&pmm_spec(8, overlap)).unwrap();
+        assert!(unfaulted.failures.is_empty());
+        assert_eq!(unfaulted.restarts, 0);
+
+        let faulted = session::run_silent(
+            &pmm_spec(8, overlap)
+                .checkpoint(dir.clone(), 2, 4)
+                .fault(FaultSpec::KillRank { rank: 1, step: 5 }),
+        )
+        .unwrap();
+        assert_bitwise_eq(
+            &unfaulted.loss_curve,
+            &faulted.loss_curve,
+            &format!("kill-rank recovery, overlap {overlap}"),
+        );
+        assert_eq!(faulted.restarts, 1, "exactly one world re-formation");
+        assert_eq!(faulted.failures.len(), 1);
+        let f = &faulted.failures[0];
+        assert_eq!(f.rank, 1, "the origin rank is surfaced, not the cascade victim");
+        assert_eq!(f.op, "injected-fault");
+        assert_eq!(f.axis, "x");
+        assert!(f.message.contains("kill rank 1 at step 5"), "{}", f.message);
+        // snapshots exist for steps 2 and 4; the kill at step 5 means the
+        // newest consistent state is step 4
+        assert_eq!(f.resumed_from_step, Some(4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn pmm_kill_without_checkpoint_section_is_rejected_up_front() {
+    // a fault with nothing to recover from must fail validation, not hang
+    let spec = pmm_spec(8, true).fault(FaultSpec::KillRank { rank: 1, step: 5 });
+    let err = session::run_silent(&spec).unwrap_err().to_string();
+    assert!(err.contains("invalid spec"), "{err}");
+    assert!(err.contains("checkpoint"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Torn-write fallback, end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_newest_snapshot_falls_back_to_previous_valid_one() {
+    for (fault, tag) in [
+        (FaultSpec::TruncateNewest, "truncate"),
+        (FaultSpec::CorruptNewest, "corrupt"),
+    ] {
+        let dir = tmp_dir(&format!("pmm_torn_{tag}"));
+        let full = session::run_silent(&pmm_spec(6, true)).unwrap();
+        // snapshots after steps 1, 3, 5 → files for steps 2, 4, 6
+        let first =
+            session::run_silent(&pmm_spec(6, true).checkpoint(dir.clone(), 2, 4)).unwrap();
+        assert_bitwise_eq(&full.loss_curve, &first.loss_curve, "checkpointed run");
+
+        // damage the newest snapshot on every rank, then resume: discovery
+        // must skip it and replay from step 4 (undamaged), not error out
+        let resumed = session::run_silent(
+            &pmm_spec(6, true).checkpoint(dir.clone(), 2, 4).resume(true).fault(fault),
+        )
+        .unwrap();
+        assert_eq!(
+            resumed.loss_curve.first().map(|&(s, _)| s),
+            Some(4),
+            "{tag}: resume must fall back to the previous valid snapshot"
+        );
+        assert_bitwise_eq(&full.loss_curve[4..], &resumed.loss_curve, tag);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_with_no_valid_snapshot_is_a_clean_error() {
+    let dir = tmp_dir("pmm_no_snap");
+    let err = session::run_silent(&pmm_spec(6, true).checkpoint(dir.clone(), 2, 4).resume(true))
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("no snapshot step is valid"),
+        "expected a descriptive discovery error, got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -14,7 +14,8 @@ use scalegnn::model::GcnDims;
 use scalegnn::pmm::{PmmCtx, PmmGcn};
 use scalegnn::sampling::SamplerKind;
 use scalegnn::session::{
-    self, BackendKind, JsonlObserver, RunReport, RunSpec, SpecError, StepObserver, StepReport,
+    self, BackendKind, FaultSpec, JsonlObserver, RunReport, RunSpec, SpecError, StepObserver,
+    StepReport,
 };
 use scalegnn::trainer::{self, OocTrainConfig, TrainConfig};
 use scalegnn::util::json::Json;
@@ -58,6 +59,18 @@ fn runspec_json_roundtrip_is_lossless() {
         RunSpec::new(BackendKind::Sim, "papers100m_sim")
             .grid(1, 4, 4, 4)
             .sim("frontier", Some(0.25), vec![1, 2, 4, 8]),
+        RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 1, 1)
+            .model(16, 2, 0.0)
+            .steps(8)
+            .checkpoint(PathBuf::from("/tmp/ckpts"), 2, 3)
+            .resume(true)
+            .fault(FaultSpec::KillRank { rank: 1, step: 5 }),
+        RunSpec::new(BackendKind::Ooc, "tiny")
+            .store(PathBuf::from("/tmp/x.pallas"))
+            .steps(10)
+            .checkpoint(PathBuf::from("ckpts"), 5, 1)
+            .fault(FaultSpec::TruncateNewest),
     ];
     for spec in specs {
         let text = spec.to_json_string();
@@ -229,6 +242,52 @@ fn every_spec_error_variant_triggers() {
     // BadLr
     let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).lr(-1.0);
     assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadLr(_))));
+
+    // BadCheckpoint: zero cadence, zero retention, resume without a dir
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 0, 2);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadCheckpoint(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 2, 0);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadCheckpoint(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(4).resume(true);
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadCheckpoint(_))));
+
+    // BadFault: no checkpoint to recover from, wrong backend, rank/step
+    // out of range
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .steps(4)
+        .fault(FaultSpec::KillRank { rank: 0, step: 1 });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadFault(_))));
+    let s = RunSpec::new(BackendKind::Ooc, "tiny")
+        .store(PathBuf::from("g.pallas"))
+        .batch(128)
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 2, 2)
+        .fault(FaultSpec::KillRank { rank: 0, step: 1 });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadFault(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 2, 2)
+        .fault(FaultSpec::KillRank { rank: 5, step: 1 });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadFault(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 2, 2)
+        .fault(FaultSpec::KillRank { rank: 0, step: 9 });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadFault(_))));
+
+    // FieldUnsupported: the sim backend has no training state to snapshot
+    let s = RunSpec::new(BackendKind::Sim, "tiny")
+        .sim("perlmutter", None, vec![1])
+        .checkpoint(PathBuf::from("c"), 2, 2);
+    assert!(errs_of(&s)
+        .iter()
+        .any(|e| matches!(e, SpecError::FieldUnsupported { field: "checkpoint", .. })));
 }
 
 #[test]
