@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::comm::{CommWorld, Endpoint, Precision};
 use scalegnn::graph::{datasets, generate, partition_2d};
 use scalegnn::grid::{Axis, Grid4D};
 use scalegnn::runtime::{lit_f32, Runtime};
@@ -595,8 +595,116 @@ fn main() {
     e2e_overlap_section();
     session_overhead_section();
     checkpoint_throughput_section();
+    transport_section();
 
     write_kernel_json(&records);
+}
+
+/// `iters` timed X-axis fp32 all-reduces on one rank of a 2-rank world,
+/// after one warmup op that also synchronizes the ranks; returns seconds
+/// per op.
+fn timed_reduces(w: &CommWorld, rank: usize, elems: usize, iters: usize) -> f64 {
+    let mut v = vec![rank as f32 + 1.0; elems];
+    w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+    }
+    std::hint::black_box(v[0]);
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Both ranks of `grid` reduce concurrently — through one shared
+/// in-process world when `ep` is `None`, else each through its own
+/// socket connection to the coordinator at `ep`.  Returns the slowest
+/// rank's per-op seconds.
+fn transport_pair_step_s(grid: Grid4D, ep: Option<&Endpoint>, elems: usize, iters: usize) -> f64 {
+    let mut hs: Vec<std::thread::JoinHandle<f64>> = Vec::new();
+    match ep {
+        None => {
+            let world = Arc::new(CommWorld::new(grid));
+            for rank in 0..grid.world_size() {
+                let w = world.clone();
+                hs.push(std::thread::spawn(move || timed_reduces(&w, rank, elems, iters)));
+            }
+        }
+        Some(ep) => {
+            for rank in 0..grid.world_size() {
+                let ep = ep.clone();
+                hs.push(std::thread::spawn(move || {
+                    let w = CommWorld::connect(grid, rank, &ep).expect("rank connect");
+                    timed_reduces(&w, rank, elems, iters)
+                }));
+            }
+        }
+    }
+    hs.into_iter().map(|h| h.join().unwrap()).fold(0.0, f64::max)
+}
+
+/// Transport-backend comparison (EXPERIMENTS.md §Transport): per-op
+/// latency and effective payload bandwidth of a 2-rank fp32 all-reduce
+/// through the in-process engine, a Unix-socket coordinator world and a
+/// TCP-loopback coordinator world.  Emits `BENCH_transport.json`.
+fn transport_section() {
+    use scalegnn::comm::{CoordConfig, Coordinator};
+    use scalegnn::util::json::{obj, Json};
+
+    println!("--- transport backends (2-rank all-reduce, fp32) ---");
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let mut entries: Vec<Json> = Vec::new();
+    for &(elems, iters) in &[(1usize << 10, 200usize), (1 << 14, 100), (1 << 18, 30)] {
+        for backend in ["inproc", "uds", "tcp"] {
+            let step_s = if backend == "inproc" {
+                transport_pair_step_s(grid, None, elems, iters)
+            } else {
+                let ep = if backend == "uds" {
+                    Endpoint::Unix(std::env::temp_dir().join(format!(
+                        "sgnn_bench_{}_{elems}.sock",
+                        std::process::id()
+                    )))
+                } else {
+                    Endpoint::Tcp("127.0.0.1:0".to_string())
+                };
+                let coord =
+                    Coordinator::bind(grid, &ep, CoordConfig::default()).expect("coord bind");
+                let ep = coord.endpoint().clone();
+                let h = coord.spawn();
+                let s = transport_pair_step_s(grid, Some(&ep), elems, iters);
+                let failure = h.join().expect("coordinator thread").expect("coordinator run");
+                assert!(failure.is_none(), "bench world failed: {failure:?}");
+                s
+            };
+            let mib = (elems * 4) as f64 / (1 << 20) as f64;
+            println!(
+                "all-reduce {elems:>7} elems  {backend:>6}: {:>10}/op  ({:.1} MiB/s payload)",
+                fmt_time(step_s),
+                mib / step_s
+            );
+            entries.push(obj(vec![
+                ("backend", Json::from(backend)),
+                ("elems", Json::from(elems)),
+                ("payload_bytes", Json::from(elems * 4)),
+                ("iters", Json::from(iters)),
+                ("step_s", Json::from(step_s)),
+                ("payload_mib_per_s", Json::from(mib / step_s)),
+            ]));
+        }
+    }
+    let doc = obj(vec![
+        (
+            "what",
+            Json::from(
+                "2-rank X-axis fp32 all-reduce through each comm transport: shared-memory \
+                 in-process engine vs Unix-socket vs TCP-loopback coordinator worlds \
+                 (per-op latency after one warmup, payload bandwidth = elems*4B / op)",
+            ),
+        ),
+        ("sweep", Json::Arr(entries)),
+    ]);
+    match std::fs::write("BENCH_transport.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_transport.json\n"),
+        Err(e) => eprintln!("could not write BENCH_transport.json: {e}\n"),
+    }
 }
 
 /// Sampling fast-path sweep (EXPERIMENTS.md §Sampling): sort-free

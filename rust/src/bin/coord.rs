@@ -1,0 +1,82 @@
+//! `scalegnn-coord`: the multi-process world coordinator.
+//!
+//! ```text
+//! scalegnn-coord --grid 1x2x1x1 (--tcp HOST:PORT | --unix PATH)
+//!                [--heartbeat-ms N] [--quiet]
+//! ```
+//!
+//! Binds the endpoint, prints `listening <endpoint>` on stdout (launch
+//! scripts parse this line — with `--tcp HOST:0` it carries the
+//! OS-assigned port), registers `world_size` ranks, serves the run, and
+//! exits 0 on a clean world.  If the world fails, the structured origin
+//! is printed as
+//! `failure origin rank R op OP seq S axis A: MSG` and the exit code
+//! is 1.
+
+use std::io::Write;
+
+use anyhow::{anyhow, bail, Result};
+
+use scalegnn::comm::{CoordConfig, Coordinator, Endpoint};
+use scalegnn::grid::Grid4D;
+use scalegnn::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match run(&args) {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `Ok(true)` = clean world, `Ok(false)` = world failed (origin printed),
+/// `Err` = the coordinator itself could not run.
+fn run(args: &Args) -> Result<bool> {
+    args.check_known(
+        "scalegnn-coord",
+        &["grid", "tcp", "unix", "heartbeat-ms"],
+        &["quiet"],
+    )
+    .map_err(|e| anyhow!(e))?;
+    let grid_s = args
+        .str_opt("grid")
+        .ok_or_else(|| anyhow!("--grid DxXxYxZ is required"))?;
+    let grid = Grid4D::parse(grid_s).ok_or_else(|| anyhow!("invalid --grid '{grid_s}'"))?;
+    let ep = match (args.str_opt("tcp"), args.str_opt("unix")) {
+        (Some(addr), None) => Endpoint::Tcp(addr.to_string()),
+        (None, Some(path)) => Endpoint::Unix(path.into()),
+        _ => bail!("exactly one of --tcp HOST:PORT or --unix PATH is required"),
+    };
+    let cfg = CoordConfig {
+        heartbeat_ms: args.get_or("heartbeat-ms", 0).map_err(|e| anyhow!(e))?,
+        quiet: args.flag("quiet"),
+    };
+    let coord = Coordinator::bind(grid, &ep, cfg)?;
+    println!("listening {}", coord.endpoint());
+    std::io::stdout().flush().ok();
+    match coord.run()? {
+        None => Ok(true),
+        Some(err) => {
+            println!(
+                "failure origin rank {} op {} seq {} axis {}: {}",
+                err.rank,
+                err.op,
+                err.seq,
+                err.axis.tag(),
+                err.msg
+            );
+            std::io::stdout().flush().ok();
+            Ok(false)
+        }
+    }
+}

@@ -1,0 +1,534 @@
+//! The multi-process world coordinator behind the socket transports
+//! (the `scalegnn-coord` binary wraps [`Coordinator`]).
+//!
+//! Handshake state machine (one world, one run):
+//!
+//! ```text
+//!   BIND ──accept──► REGISTER: each connection must open with a valid
+//!     Hello{rank, grid}; wrong grid / out-of-range rank / duplicate
+//!     rank / undecodable bytes are rejected (logged, connection
+//!     dropped) without disturbing registered ranks.
+//!   REGISTER ──all ranks present──► RUN: Welcome{world, heartbeat_ms}
+//!     is sent to every rank; per-rank handler threads serve
+//!     Contribute / Barrier / Ping / Poison / Bye frames.
+//!   RUN ──every rank sent Bye──► DONE (returns no failure), or
+//!   RUN ──any failure──► POISONED: the first failure origin is
+//!     recorded and broadcast to every rank as a Poison frame; ranks
+//!     panic with that origin, close, and the coordinator drains the
+//!     remaining connections and returns the failure.
+//! ```
+//!
+//! Failures that poison the world: a collective handshake mismatch
+//! (kind/length/precision — same checks, same message text as the
+//! in-process engine), a rank-sent Poison (injected fault), a peer
+//! connection dying mid-run or sending undecodable bytes
+//! (`"rank-death"`), a heartbeat timeout, or a protocol violation.
+//!
+//! Determinism: a reduce completes when the last member contributes and
+//! is summed **in group-index member order**, never arrival order — so
+//! socket-transport results are bitwise identical to the in-process
+//! engine's ordered chunk reduction.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::socket::{Conn, Endpoint};
+use super::wire::{self, Msg, WireError};
+use super::{CollKind, CommError};
+use crate::grid::{Axis, Grid4D};
+
+/// Coordinator tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordConfig {
+    /// Heartbeat interval ranks are told to ping at; a rank silent for
+    /// 4 intervals is declared dead.  0 disables the watchdog (tests,
+    /// and runs where rank steps may legitimately take long).
+    pub heartbeat_ms: u32,
+    /// Suppress progress logging on stderr.
+    pub quiet: bool,
+}
+
+impl Default for CoordConfig {
+    fn default() -> CoordConfig {
+        CoordConfig { heartbeat_ms: 0, quiet: true }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// One in-flight collective of one group: contributions keyed by member
+/// index, completed (and answered) when the last member arrives.
+struct CoordOp {
+    kind: CollKind,
+    /// Reduce payload length handshake (first contributor sets it).
+    len: usize,
+    parts: Vec<Option<Vec<f32>>>,
+    n: usize,
+}
+
+struct CoordState {
+    /// Op slots keyed by (axis index, group id, seq).
+    ops: HashMap<(usize, usize, u64), CoordOp>,
+    /// Barrier arrival counts keyed by (axis index, group id, bseq).
+    barriers: HashMap<(usize, usize, u64), usize>,
+    /// First failure origin; sticky once set.
+    failure: Option<CommError>,
+    /// Ranks that sent Bye.
+    done: Vec<bool>,
+    /// Last frame seen per rank (heartbeat watchdog).
+    last_seen: Vec<Instant>,
+}
+
+struct Shared {
+    grid: Grid4D,
+    cfg: CoordConfig,
+    state: Mutex<CoordState>,
+    /// Per-rank write half, locked per frame (handlers of any rank may
+    /// complete an op and answer every member).
+    writers: Vec<Mutex<Conn>>,
+    /// Per-rank shutdown handles (watchdog unblocks a dead rank's
+    /// blocked reader).
+    shutdowns: Vec<Conn>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Shared {
+    fn log(&self, msg: &str) {
+        if !self.cfg.quiet {
+            eprintln!("coord: {msg}");
+        }
+    }
+
+    fn send(&self, rank: usize, msg: &Msg) {
+        let failed = {
+            let mut w = lock(&self.writers[rank]);
+            wire::write_msg(&mut *w, msg).is_err()
+        };
+        if failed && !matches!(msg, Msg::Poison { .. }) {
+            self.poison_world(CommError::new(
+                rank,
+                0,
+                "rank-death",
+                Axis::X,
+                format!("rank {rank} unreachable (result delivery failed)"),
+            ));
+        }
+    }
+
+    /// Record the first failure origin and broadcast it to every rank.
+    /// Idempotent: later failures are cascade effects of the first.
+    fn poison_world(&self, err: CommError) {
+        {
+            let mut st = lock(&self.state);
+            if st.failure.is_some() {
+                return;
+            }
+            st.failure = Some(err.clone());
+        }
+        self.log(&format!(
+            "failure origin rank {} op {} seq {} axis {}: {}",
+            err.rank,
+            err.op,
+            err.seq,
+            err.axis.tag(),
+            err.msg
+        ));
+        for r in 0..self.grid.world_size() {
+            self.send(r, &Msg::Poison { err: err.clone() });
+        }
+    }
+
+    fn touch(&self, rank: usize) {
+        lock(&self.state).last_seen[rank] = Instant::now();
+    }
+
+    fn contribute(&self, rank: usize, axis: Axis, seq: u64, kind: CollKind, data: Vec<f32>) {
+        let size = self.grid.axis_size(axis);
+        if size <= 1 {
+            // size-1 groups never reach a transport; a frame for one is a
+            // protocol violation
+            self.poison_world(CommError::new(
+                rank,
+                seq,
+                "protocol",
+                axis,
+                format!("contribution to size-1 axis {axis:?}"),
+            ));
+            return;
+        }
+        let gid = self.grid.group_id(rank, axis);
+        let me = self.grid.index_in_group(rank, axis);
+        let key = (axis.index(), gid, seq);
+        let completed = {
+            let mut st = lock(&self.state);
+            if st.failure.is_some() {
+                return; // world is dying; ranks have the origin
+            }
+            let op = st.ops.entry(key).or_insert_with(|| CoordOp {
+                kind,
+                len: data.len(),
+                parts: vec![None; size],
+                n: 0,
+            });
+            if op.kind != kind {
+                let msg = format!(
+                    "collective kind mismatch at seq {seq}: slot holds {:?}, member {me} issued {:?}",
+                    op.kind, kind
+                );
+                let err = CommError::new(rank, seq, kind.op_name(), axis, msg);
+                drop(st);
+                self.poison_world(err);
+                return;
+            }
+            if matches!(kind, CollKind::Reduce(_)) && op.len != data.len() {
+                let msg = format!(
+                    "all_reduce length mismatch at seq {seq}: slot has {} elems, member {me} sent {}",
+                    op.len,
+                    data.len()
+                );
+                let err = CommError::new(rank, seq, kind.op_name(), axis, msg);
+                drop(st);
+                self.poison_world(err);
+                return;
+            }
+            if op.parts[me].is_some() {
+                let err = CommError::new(
+                    rank,
+                    seq,
+                    "protocol",
+                    axis,
+                    format!("member {me} double-contributed seq {seq}"),
+                );
+                drop(st);
+                self.poison_world(err);
+                return;
+            }
+            op.parts[me] = Some(data);
+            op.n += 1;
+            if op.n == size {
+                st.ops.remove(&key)
+            } else {
+                None
+            }
+        };
+        if let Some(op) = completed {
+            let members = self.grid.group_ranks(rank, axis);
+            match op.kind {
+                CollKind::Reduce(_) => {
+                    // ordered sum in group-index member order: bitwise
+                    // identical to the in-process chunked reduction
+                    let mut parts = op.parts.into_iter().map(|p| p.unwrap());
+                    let mut result = parts.next().unwrap();
+                    for p in parts {
+                        for (d, v) in result.iter_mut().zip(p) {
+                            *d += v;
+                        }
+                    }
+                    for &m in &members {
+                        self.send(m, &Msg::ReduceResult { axis, seq, data: result.clone() });
+                    }
+                }
+                CollKind::Gather => {
+                    let parts: Vec<Vec<f32>> =
+                        op.parts.into_iter().map(|p| p.unwrap()).collect();
+                    for &m in &members {
+                        self.send(m, &Msg::GatherResult { axis, seq, parts: parts.clone() });
+                    }
+                }
+            }
+        }
+    }
+
+    fn barrier(&self, rank: usize, axis: Axis, bseq: u64) {
+        let size = self.grid.axis_size(axis);
+        if size <= 1 {
+            self.poison_world(CommError::new(
+                rank,
+                bseq,
+                "protocol",
+                axis,
+                format!("barrier on size-1 axis {axis:?}"),
+            ));
+            return;
+        }
+        let gid = self.grid.group_id(rank, axis);
+        let key = (axis.index(), gid, bseq);
+        let release = {
+            let mut st = lock(&self.state);
+            if st.failure.is_some() {
+                return;
+            }
+            let n = st.barriers.entry(key).or_insert(0);
+            *n += 1;
+            if *n == size {
+                st.barriers.remove(&key);
+                true
+            } else {
+                false
+            }
+        };
+        if release {
+            for &m in &self.grid.group_ranks(rank, axis) {
+                self.send(m, &Msg::BarrierRelease { axis, bseq });
+            }
+        }
+    }
+
+    fn handle_rank(&self, rank: usize, conn: &mut Conn) {
+        loop {
+            match wire::read_msg(conn) {
+                Ok(Msg::Contribute { axis, seq, kind, data }) => {
+                    self.touch(rank);
+                    self.contribute(rank, axis, seq, kind, data);
+                }
+                Ok(Msg::Barrier { axis, bseq }) => {
+                    self.touch(rank);
+                    self.barrier(rank, axis, bseq);
+                }
+                Ok(Msg::Ping) => self.touch(rank),
+                Ok(Msg::Poison { err }) => {
+                    // a rank announcing its own death (injected fault):
+                    // broadcast the origin unchanged
+                    self.poison_world(err);
+                }
+                Ok(Msg::Bye) => {
+                    lock(&self.state).done[rank] = true;
+                    self.log(&format!("rank {rank} completed"));
+                    return;
+                }
+                Ok(m) => {
+                    self.poison_world(CommError::new(
+                        rank,
+                        0,
+                        "protocol",
+                        Axis::X,
+                        format!("unexpected frame {m:?} mid-run"),
+                    ));
+                    return;
+                }
+                Err(e) => {
+                    let benign = {
+                        let st = lock(&self.state);
+                        st.done[rank] || st.failure.is_some()
+                    };
+                    if !benign {
+                        let msg = match e {
+                            WireError::Closed => {
+                                format!("rank {rank} connection closed mid-run")
+                            }
+                            e => format!("undecodable frame from rank {rank}: {e}"),
+                        };
+                        self.poison_world(CommError::new(rank, 0, "rank-death", Axis::X, msg));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// One-shot world coordinator: bind, register `world_size` ranks, serve
+/// the run, return the failure origin (if any).  See the module docs for
+/// the handshake state machine.
+pub struct Coordinator {
+    grid: Grid4D,
+    cfg: CoordConfig,
+    listener: Listener,
+    endpoint: Endpoint,
+}
+
+impl Coordinator {
+    /// Bind the listening socket.  For `tcp:host:0` the OS picks a port;
+    /// [`Coordinator::endpoint`] reports the resolved address.  An
+    /// existing file at a unix socket path is removed (a stale socket
+    /// from a previous run).
+    pub fn bind(grid: Grid4D, ep: &Endpoint, cfg: CoordConfig) -> Result<Coordinator> {
+        let (listener, endpoint) = match ep {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .map_err(|e| anyhow!("binding tcp {addr}: {e}"))?;
+                let resolved = l.local_addr()?.to_string();
+                (Listener::Tcp(l), Endpoint::Tcp(resolved))
+            }
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| anyhow!("binding unix {}: {e}", path.display()))?;
+                (Listener::Unix(l), Endpoint::Unix(path.clone()))
+            }
+        };
+        Ok(Coordinator { grid, cfg, listener, endpoint })
+    }
+
+    /// The resolved endpoint ranks should connect to.
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    fn accept(&self) -> Result<Conn> {
+        Ok(match &self.listener {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            }
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Conn::Unix(s)
+            }
+        })
+    }
+
+    /// Register every rank, serve the world, and return the failure
+    /// origin (`None` = every rank completed cleanly).
+    pub fn run(self) -> Result<Option<CommError>> {
+        let n = self.grid.world_size();
+        let quiet = self.cfg.quiet;
+        let log = |m: &str| {
+            if !quiet {
+                eprintln!("coord: {m}");
+            }
+        };
+        // --- REGISTER: n valid Hellos, invalid connections rejected ---
+        let mut conns: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
+        let mut registered = 0;
+        while registered < n {
+            let mut conn = self.accept()?;
+            // a connection that never sends its Hello must not stall
+            // world assembly forever
+            let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
+            match wire::read_msg(&mut conn) {
+                Ok(Msg::Hello { rank, grid }) => {
+                    let want = [
+                        self.grid.gd as u32,
+                        self.grid.gx as u32,
+                        self.grid.gy as u32,
+                        self.grid.gz as u32,
+                    ];
+                    let r = rank as usize;
+                    if grid != want {
+                        log(&format!(
+                            "rejecting rank {rank}: grid {grid:?} does not match {want:?}"
+                        ));
+                    } else if r >= n {
+                        log(&format!("rejecting rank {rank}: world has {n} ranks"));
+                    } else if conns[r].is_some() {
+                        log(&format!("rejecting duplicate registration for rank {rank}"));
+                    } else {
+                        let _ = conn.set_read_timeout(None);
+                        conns[r] = Some(conn);
+                        registered += 1;
+                        log(&format!("rank {r} registered ({registered}/{n})"));
+                    }
+                }
+                Ok(m) => log(&format!("rejecting connection: expected hello, got {m:?}")),
+                Err(e) => log(&format!("rejecting connection: {e}")),
+            }
+        }
+        // --- RUN: welcome everyone, then serve per-rank handlers ---
+        let mut writers = Vec::with_capacity(n);
+        let mut shutdowns = Vec::with_capacity(n);
+        let mut readers = Vec::with_capacity(n);
+        for c in conns.into_iter().map(|c| c.expect("registered")) {
+            writers.push(Mutex::new(c.try_clone()?));
+            shutdowns.push(c.try_clone()?);
+            readers.push(c);
+        }
+        let shared = Arc::new(Shared {
+            grid: self.grid,
+            cfg: self.cfg,
+            state: Mutex::new(CoordState {
+                ops: HashMap::new(),
+                barriers: HashMap::new(),
+                failure: None,
+                done: vec![false; n],
+                last_seen: vec![Instant::now(); n],
+            }),
+            writers,
+            shutdowns,
+        });
+        for r in 0..n {
+            shared.send(
+                r,
+                &Msg::Welcome { world: n as u32, heartbeat_ms: self.cfg.heartbeat_ms },
+            );
+        }
+        log(&format!("world assembled: {n} ranks on {}", self.endpoint));
+        let mut handles = Vec::with_capacity(n);
+        for (r, mut conn) in readers.into_iter().enumerate() {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || sh.handle_rank(r, &mut conn)));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let watchdog = (self.cfg.heartbeat_ms > 0).then(|| {
+            let sh = shared.clone();
+            let stop = stop.clone();
+            let hb = self.cfg.heartbeat_ms;
+            std::thread::spawn(move || watchdog_loop(&sh, &stop, hb))
+        });
+        for h in handles {
+            let _ = h.join();
+        }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        if let Endpoint::Unix(path) = &self.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+        let failure = lock(&shared.state).failure.clone();
+        match &failure {
+            None => log("world completed cleanly"),
+            Some(e) => log(&format!("world failed: {e}")),
+        }
+        Ok(failure)
+    }
+
+    /// [`Coordinator::run`] on a background thread (in-process tests and
+    /// benchmarks; child processes use the `scalegnn-coord` binary).
+    pub fn spawn(self) -> std::thread::JoinHandle<Result<Option<CommError>>> {
+        std::thread::spawn(move || self.run())
+    }
+}
+
+fn watchdog_loop(sh: &Shared, stop: &AtomicBool, heartbeat_ms: u32) {
+    let timeout = Duration::from_millis(heartbeat_ms as u64 * 4);
+    loop {
+        std::thread::sleep(Duration::from_millis((heartbeat_ms as u64 / 2).max(10)));
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let dead = {
+            let st = lock(&sh.state);
+            if st.failure.is_some() {
+                return;
+            }
+            (0..sh.grid.world_size())
+                .find(|&r| !st.done[r] && st.last_seen[r].elapsed() > timeout)
+        };
+        if let Some(r) = dead {
+            sh.poison_world(CommError::new(
+                r,
+                0,
+                "rank-death",
+                Axis::X,
+                format!("rank {r} heartbeat timeout (> {} ms silent)", timeout.as_millis()),
+            ));
+            // the dead rank's handler may be blocked in read; unblock it
+            sh.shutdowns[r].shutdown();
+            return;
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! The shared-memory [`Transport`]: every rank is a thread of this
+//! process and op slots live behind per-group mutexes.
+//!
+//! This is the pre-trait collective engine moved verbatim — same op-slot
+//! protocol, same ordered chunk reduction, same poison cascade — so the
+//! refactor is bitwise-invisible to every existing caller (pinned by the
+//! `comm` unit tests and `tests/comm_overlap.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Barrier, Condvar, Mutex};
+use std::time::Instant;
+
+use super::{CollKind, CommError, Precision, Transport};
+use crate::grid::{Axis, Grid4D};
+use crate::util::bf16_round;
+
+/// One in-flight collective of a process group, matched across members by
+/// sequence number (every member issues its group's collectives in the same
+/// program order, so equal seq = same logical op).
+struct OpState {
+    seq: u64,
+    kind: CollKind,
+    /// Reduce: payload elements (identical on every member; handshaked).
+    len: usize,
+    /// Per-member contributions, group-index order (freed after reduction).
+    parts: Vec<Vec<f32>>,
+    contributed: Vec<bool>,
+    n_contributed: usize,
+    /// Reduce: ordered-sum result, valid below `chunks_done * chunk_elems`.
+    result: Vec<f32>,
+    chunks_done: usize,
+    total_chunks: usize,
+    /// Set when the payload is fully reduced (Reduce) / gathered (Gather).
+    completed_at: Option<Instant>,
+    read: usize,
+}
+
+struct GroupState {
+    /// Per-member sequence number of its next issued collective.
+    next_seq: Vec<u64>,
+    /// In-flight ops, ascending `seq`.
+    ops: VecDeque<OpState>,
+    /// Set on a mismatched collective (or injected fault); every member
+    /// fails with this same structured origin.
+    poison: Option<CommError>,
+}
+
+struct Group {
+    size: usize,
+    barrier: Barrier,
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+/// Contribute `data` to the op slot at `seq`, creating the slot on first
+/// touch.  Returns a mismatch message (instead of contributing) when the
+/// slot disagrees on kind or payload length — the length handshake that
+/// turns a would-be deadlock into a clean error.
+fn contribute(
+    st: &mut GroupState,
+    size: usize,
+    chunk_elems: usize,
+    me: usize,
+    seq: u64,
+    kind: CollKind,
+    data: &[f32],
+) -> Option<String> {
+    if st.ops.iter().all(|o| o.seq != seq) {
+        st.ops.push_back(OpState {
+            seq,
+            kind,
+            len: data.len(),
+            parts: vec![Vec::new(); size],
+            contributed: vec![false; size],
+            n_contributed: 0,
+            result: match kind {
+                CollKind::Reduce(_) => vec![0.0; data.len()],
+                CollKind::Gather => Vec::new(),
+            },
+            chunks_done: 0,
+            total_chunks: match kind {
+                CollKind::Reduce(_) => data.len().div_ceil(chunk_elems).max(1),
+                CollKind::Gather => 0,
+            },
+            completed_at: None,
+            read: 0,
+        });
+    }
+    let op = st.ops.iter_mut().find(|o| o.seq == seq).expect("just ensured");
+    if op.kind != kind {
+        return Some(format!(
+            "collective kind mismatch at seq {seq}: slot holds {:?}, member {me} issued {:?}",
+            op.kind, kind
+        ));
+    }
+    if matches!(kind, CollKind::Reduce(_)) && op.len != data.len() {
+        return Some(format!(
+            "all_reduce length mismatch at seq {seq}: slot has {} elems, member {me} sent {}",
+            op.len,
+            data.len()
+        ));
+    }
+    assert!(!op.contributed[me], "member {me} double-contributed seq {seq}");
+    op.parts[me] = match kind {
+        CollKind::Reduce(Precision::Bf16) => data.iter().map(|&v| bf16_round(v)).collect(),
+        _ => data.to_vec(),
+    };
+    op.contributed[me] = true;
+    op.n_contributed += 1;
+    if op.n_contributed == size && matches!(kind, CollKind::Gather) {
+        op.completed_at = Some(Instant::now());
+    }
+    None
+}
+
+/// Shared-memory transport: all process groups of the grid as in-memory
+/// op slots (see the module docs).
+pub struct InProcTransport {
+    grid: Grid4D,
+    groups: Vec<Vec<Group>>, // [axis][group_id]
+    /// Elements per reduction chunk.
+    chunk_elems: usize,
+}
+
+impl InProcTransport {
+    /// Allocate the op slots of every process group of `grid`.
+    pub fn new(grid: Grid4D, chunk_elems: usize) -> InProcTransport {
+        assert!(chunk_elems > 0, "chunk_elems must be positive");
+        let mk = |axis: Axis| -> Vec<Group> {
+            (0..grid.num_groups(axis))
+                .map(|_| Group {
+                    size: grid.axis_size(axis),
+                    barrier: Barrier::new(grid.axis_size(axis)),
+                    state: Mutex::new(GroupState {
+                        next_seq: vec![0; grid.axis_size(axis)],
+                        ops: VecDeque::new(),
+                        poison: None,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect()
+        };
+        InProcTransport {
+            grid,
+            groups: vec![mk(Axis::X), mk(Axis::Y), mk(Axis::Z), mk(Axis::Dp)],
+            chunk_elems,
+        }
+    }
+
+    fn group(&self, rank: usize, axis: Axis) -> &Group {
+        &self.groups[axis.index()][self.grid.group_id(rank, axis)]
+    }
+
+    /// Advance ordered chunk reductions of every fully-contributed op of
+    /// the group; `budget` caps the chunks reduced per call so `progress`
+    /// stays cheap.  Returns whether any chunk was advanced.
+    fn reduce_ready_locked(&self, st: &mut GroupState, size: usize, mut budget: usize) -> bool {
+        let chunk = self.chunk_elems;
+        let mut did = false;
+        for op in st.ops.iter_mut() {
+            if budget == 0 {
+                break;
+            }
+            if !matches!(op.kind, CollKind::Reduce(_)) || op.n_contributed < size {
+                continue;
+            }
+            while op.chunks_done < op.total_chunks && budget > 0 {
+                let lo = (op.chunks_done * chunk).min(op.len);
+                let hi = ((op.chunks_done + 1) * chunk).min(op.len);
+                // ordered sum over members: deterministic regardless of
+                // arrival order or of which rank drives the reduction
+                let dst = &mut op.result[lo..hi];
+                dst.copy_from_slice(&op.parts[0][lo..hi]);
+                for p in op.parts.iter().skip(1) {
+                    for (d, &v) in dst.iter_mut().zip(&p[lo..hi]) {
+                        *d += v;
+                    }
+                }
+                op.chunks_done += 1;
+                budget -= 1;
+                did = true;
+            }
+            if op.chunks_done == op.total_chunks && op.completed_at.is_none() {
+                op.completed_at = Some(Instant::now());
+                // contributions are no longer needed; free them eagerly
+                for p in op.parts.iter_mut() {
+                    *p = Vec::new();
+                }
+            }
+        }
+        did
+    }
+}
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn issue(
+        &self,
+        rank: usize,
+        axis: Axis,
+        kind: CollKind,
+        data: &[f32],
+    ) -> Result<u64, CommError> {
+        let g = self.group(rank, axis);
+        let me = self.grid.index_in_group(rank, axis);
+        let mut st = g.state.lock().unwrap();
+        if let Some(e) = st.poison.clone() {
+            return Err(e);
+        }
+        let seq = st.next_seq[me];
+        st.next_seq[me] += 1;
+        if let Some(msg) = contribute(&mut st, g.size, self.chunk_elems, me, seq, kind, data) {
+            return Err(CommError::new(rank, seq, kind.op_name(), axis, msg));
+        }
+        drop(st);
+        g.cv.notify_all();
+        Ok(seq)
+    }
+
+    fn try_ready(&self, rank: usize, axis: Axis, seq: u64) -> bool {
+        let g = self.group(rank, axis);
+        match g.state.try_lock() {
+            Ok(mut st) => {
+                if st.poison.is_some() {
+                    return true; // the wait surfaces the error
+                }
+                if self.reduce_ready_locked(&mut st, g.size, 8) {
+                    g.cv.notify_all();
+                }
+                st.ops
+                    .iter()
+                    .find(|o| o.seq == seq)
+                    .map(|o| o.chunks_done == o.total_chunks)
+                    .unwrap_or(false)
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn wait_reduce(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+        out: &mut [f32],
+    ) -> Result<Instant, CommError> {
+        let g = self.group(rank, axis);
+        let mut st = g.state.lock().unwrap();
+        let completed_at = loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            if self.reduce_ready_locked(&mut st, g.size, usize::MAX) {
+                g.cv.notify_all();
+            }
+            let done = {
+                let op = st.ops.iter().find(|o| o.seq == seq).expect("pending op slot missing");
+                if op.chunks_done == op.total_chunks {
+                    op.completed_at
+                } else {
+                    None
+                }
+            };
+            if let Some(t) = done {
+                break t;
+            }
+            st = g.cv.wait(st).unwrap();
+        };
+        let retire = {
+            let op = st.ops.iter_mut().find(|o| o.seq == seq).unwrap();
+            out.copy_from_slice(&op.result);
+            op.read += 1;
+            op.read == g.size
+        };
+        if retire {
+            st.ops.retain(|o| o.seq != seq);
+        }
+        Ok(completed_at)
+    }
+
+    fn wait_gather(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+    ) -> Result<(Vec<Vec<f32>>, Instant), CommError> {
+        let g = self.group(rank, axis);
+        let mut st = g.state.lock().unwrap();
+        let completed_at = loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            let done = {
+                let op =
+                    st.ops.iter().find(|o| o.seq == seq).expect("pending gather slot missing");
+                if op.n_contributed == g.size {
+                    op.completed_at
+                } else {
+                    None
+                }
+            };
+            if let Some(t) = done {
+                break t;
+            }
+            st = g.cv.wait(st).unwrap();
+        };
+        let (out, retire) = {
+            let op = st.ops.iter_mut().find(|o| o.seq == seq).unwrap();
+            let out = op.parts.clone();
+            op.read += 1;
+            (out, op.read == g.size)
+        };
+        if retire {
+            st.ops.retain(|o| o.seq != seq);
+        }
+        Ok((out, completed_at))
+    }
+
+    fn progress(&self, rank: usize) -> bool {
+        let mut did = false;
+        for axis in Axis::ALL {
+            let g = self.group(rank, axis);
+            if g.size <= 1 {
+                continue;
+            }
+            if let Ok(mut st) = g.state.try_lock() {
+                if st.poison.is_some() {
+                    continue; // surfaced by the owning wait
+                }
+                if self.reduce_ready_locked(&mut st, g.size, 8) {
+                    did = true;
+                    g.cv.notify_all();
+                }
+            }
+        }
+        did
+    }
+
+    fn barrier(&self, rank: usize, axis: Axis) -> Result<(), CommError> {
+        let g = self.group(rank, axis);
+        if g.size > 1 {
+            g.barrier.wait();
+        }
+        Ok(())
+    }
+
+    fn fail(&self, rank: usize, err: &CommError) {
+        for axis in Axis::ALL {
+            let g = self.group(rank, axis);
+            if g.size <= 1 {
+                continue;
+            }
+            let mut st = g.state.lock().unwrap();
+            if st.poison.is_none() {
+                st.poison = Some(err.clone());
+            }
+            drop(st);
+            g.cv.notify_all();
+        }
+    }
+
+    fn poison_of(&self, rank: usize) -> Option<CommError> {
+        for axis in Axis::ALL {
+            let g = self.group(rank, axis);
+            if g.size <= 1 {
+                continue;
+            }
+            if let Some(e) = &g.state.lock().unwrap().poison {
+                return Some(e.clone());
+            }
+        }
+        None
+    }
+}

@@ -1,27 +1,40 @@
-//! Shared-memory collectives over rank threads — a nonblocking, chunked
-//! collective engine (§V-D).
+//! Collectives over rank threads or rank processes — a nonblocking,
+//! chunked collective engine (§V-D) behind a pluggable [`Transport`].
 //!
-//! A "GPU" in this reproduction is an OS thread with private shard state;
-//! collectives move real data through per-group, sequence-matched op slots,
-//! so the 3D PMM algebra and the DP gradient synchronization are *executed*,
-//! not mocked.  Wall-clock at paper scale is projected separately by
-//! `sim::` — these collectives are for correctness and for measuring the
+//! A "GPU" in this reproduction is an OS thread (or, over the socket
+//! transports, an OS process) with private shard state; collectives move
+//! real data through per-group, sequence-matched op slots, so the 3D PMM
+//! algebra and the DP gradient synchronization are *executed*, not
+//! mocked.  Wall-clock at paper scale is projected separately by `sim::`
+//! — these collectives are for correctness and for measuring the
 //! coordinator's real overheads at <= 64 ranks.
 //!
-//! **Nonblocking issue (§V-D).**  [`CommWorld::issue_all_reduce`] copies the
-//! caller's contribution into the op slot in fixed-size chunks and returns a
-//! [`PendingOp`] handle immediately; the ordered reduction of chunk *k*
-//! proceeds — driven by any member's [`CommWorld::progress`] call or by a
-//! waiter — while the caller computes, and [`PendingOp::wait_into`] blocks
-//! only at the true data dependency.  The blocking
-//! [`CommWorld::all_reduce`] / [`CommWorld::all_gather`] entry points are
-//! thin `issue(..).wait(..)` wrappers, so call sites opt into overlap
-//! mechanically.
+//! **Transports.**  [`CommWorld`] owns a boxed [`Transport`] that moves
+//! the payloads; everything above it (accounting, overlap timing, the
+//! poison-cascade contract, the pending-handle API) is shared:
+//!
+//! * [`InProcTransport`] — every rank is a thread of this process and op
+//!   slots live in shared memory.  The default ([`CommWorld::new`]) and
+//!   bit-for-bit the pre-trait engine.
+//! * [`SocketTransport`] — this process runs *one* rank; contributions
+//!   travel as CRC-checked [`wire`] frames over TCP or a Unix-domain
+//!   socket to a `scalegnn-coord` coordinator ([`coord::Coordinator`])
+//!   that reduces in group-index member order, so results are bitwise
+//!   identical to the in-process engine.  Built by [`CommWorld::connect`].
+//!
+//! **Nonblocking issue (§V-D).**  [`CommWorld::issue_all_reduce`] stages the
+//! caller's contribution and returns a [`PendingOp`] handle immediately;
+//! the reduction proceeds while the caller computes, and
+//! [`PendingOp::wait_into`] blocks only at the true data dependency.  The
+//! blocking [`CommWorld::all_reduce`] / [`CommWorld::all_gather`] entry
+//! points are thin `issue(..).wait(..)` wrappers, so call sites opt into
+//! overlap mechanically.
 //!
 //! **Determinism.**  Reductions are order-deterministic: once every member
-//! has contributed, chunks are summed in group-index order, never in
-//! arrival order — so overlap-on and overlap-off schedules (and repeated
-//! runs) produce bitwise-identical results.
+//! has contributed, payloads are summed in group-index order, never in
+//! arrival order — so overlap-on and overlap-off schedules, repeated
+//! runs, *and different transports* produce bitwise-identical results
+//! (`tests/transport_conformance.rs` pins this).
 //!
 //! **Mismatch safety.**  Collectives that disagree across members at the
 //! same sequence number (different kind, payload length or precision)
@@ -29,15 +42,16 @@
 //! the rendezvous slot.  The panic payload is a structured [`CommError`]
 //! naming the originating rank, sequence number, op kind and axis; the
 //! *same* origin is carried unchanged through the cascade into every group
-//! a dying rank belongs to, so bystanders waiting on the dead rank in
-//! *other* groups fail fast — and a supervisor joining the rank threads
-//! can downcast the payload and report exactly which rank/seq/op died
+//! a dying rank belongs to — over sockets the coordinator broadcasts it to
+//! every live rank — so bystanders fail fast and a supervisor can
+//! downcast the payload and report exactly which rank/seq/op died
 //! (the elastic-recovery path in `session::backends`).
 //!
 //! **BF16 mode** reproduces §V-B numerically: each rank's contribution is
 //! rounded to bf16 before the reduction (results stay f32), and the byte
 //! accounting halves the payload — exactly what casting before an NCCL
-//! all-reduce does.
+//! all-reduce does.  The socket transports ship bf16 contributions as the
+//! high 16 bits of the rounded f32, which is lossless.
 //!
 //! **Measured overlap.**  Per-axis counters record logical traffic (ops,
 //! bytes) plus per-op timings: issue→fully-reduced (`comm`) vs time spent
@@ -47,14 +61,22 @@
 //! hidden-communication fraction ([`CommWorld::hidden_fraction`],
 //! [`CommWorld::tp_hidden_fraction`]) that calibrates the hideable share
 //! of the §V-D term in `sim::model` in place of a guessed constant.
+//! Counters live on the world handle: with `InProc` all ranks share one
+//! world, over sockets each rank process owns its own.
 
-use std::collections::VecDeque;
+pub mod coord;
+mod inproc;
+mod socket;
+pub mod wire;
+
+pub use coord::{CoordConfig, Coordinator};
+pub use inproc::InProcTransport;
+pub use socket::{Endpoint, SocketTransport};
+
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Barrier, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::grid::{Axis, Grid4D};
-use crate::util::bf16_round;
 
 /// Payload precision for collectives (§V-B low-precision communication).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,30 +105,35 @@ pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
 /// group sequence number, issuing which op on which axis, and why.
 ///
 /// This is the panic payload of every comm-engine death (mismatch
-/// handshake, poison cascade, injected fault), carried *unchanged* from
-/// the originating rank through the cascade so a bystander's panic still
-/// names the true origin.  Rank-thread supervisors downcast the payload
-/// (`Box<dyn Any>::downcast::<CommError>`) to report the failure in the
-/// `RunReport` and drive checkpoint-based recovery.
-#[derive(Clone, Debug)]
+/// handshake, poison cascade, injected fault, peer process death),
+/// carried *unchanged* from the originating rank through the cascade so
+/// a bystander's panic still names the true origin.  Rank supervisors
+/// downcast the payload (`Box<dyn Any>::downcast::<CommError>`) to
+/// report the failure in the `RunReport` and drive checkpoint-based
+/// recovery.
+#[derive(Clone, Debug, PartialEq)]
 pub struct CommError {
     /// Global rank where the failure originated.
     pub rank: usize,
     /// Group sequence number of the failing collective (0 for injected
     /// faults, which are not tied to an op slot).
     pub seq: u64,
-    /// Op kind at the origin: `"all_reduce"`, `"all_gather"` or
-    /// `"injected-fault"`.
+    /// Op kind at the origin: `"all_reduce"`, `"all_gather"`,
+    /// `"injected-fault"`, or — over socket transports — `"rank-death"`
+    /// (a peer process died or sent an undecodable frame) /
+    /// `"coordinator-lost"` (the coordinator connection dropped).
     pub op: &'static str,
     /// Axis of the group where the failure originated.
     pub axis: Axis,
-    /// Human-readable cause (the handshake mismatch text, or the injected
-    /// fault description).
+    /// Human-readable cause (the handshake mismatch text, the injected
+    /// fault description, or the wire decode error).
     pub msg: String,
 }
 
 impl CommError {
-    fn new(rank: usize, seq: u64, op: &'static str, axis: Axis, msg: String) -> CommError {
+    /// Build a failure origin (transports construct these; everything
+    /// downstream only clones and reports them).
+    pub fn new(rank: usize, seq: u64, op: &'static str, axis: Axis, msg: String) -> CommError {
         CommError { rank, seq, op, axis, msg }
     }
 }
@@ -123,49 +150,28 @@ impl std::fmt::Display for CommError {
 
 impl std::error::Error for CommError {}
 
-/// Collective kind carried by an op slot (handshake-checked across members).
+/// Collective kind carried by an op slot (handshake-checked across
+/// members, and across the wire by the socket transports).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum OpKind {
+pub enum CollKind {
+    /// Sum all-reduce at a payload precision.
     Reduce(Precision),
+    /// All-gather (variable payload lengths allowed).
     Gather,
 }
 
-/// One in-flight collective of a process group, matched across members by
-/// sequence number (every member issues its group's collectives in the same
-/// program order, so equal seq = same logical op).
-struct OpState {
-    seq: u64,
-    kind: OpKind,
-    /// Reduce: payload elements (identical on every member; handshaked).
-    len: usize,
-    /// Per-member contributions, group-index order (freed after reduction).
-    parts: Vec<Vec<f32>>,
-    contributed: Vec<bool>,
-    n_contributed: usize,
-    /// Reduce: ordered-sum result, valid below `chunks_done * chunk_elems`.
-    result: Vec<f32>,
-    chunks_done: usize,
-    total_chunks: usize,
-    /// Set when the payload is fully reduced (Reduce) / gathered (Gather).
-    completed_at: Option<Instant>,
-    read: usize,
+impl CollKind {
+    /// The op name reported in [`CommError::op`] for this kind.
+    pub fn op_name(self) -> &'static str {
+        match self {
+            CollKind::Reduce(_) => "all_reduce",
+            CollKind::Gather => "all_gather",
+        }
+    }
 }
 
-struct GroupState {
-    /// Per-member sequence number of its next issued collective.
-    next_seq: Vec<u64>,
-    /// In-flight ops, ascending `seq`.
-    ops: VecDeque<OpState>,
-    /// Set on a mismatched collective (or injected fault); every member
-    /// panics with this same structured origin.
-    poison: Option<CommError>,
-}
-
-struct Group {
-    size: usize,
-    barrier: Barrier,
-    state: Mutex<GroupState>,
-    cv: Condvar,
+pub(crate) fn axis_idx(a: Axis) -> usize {
+    a.index()
 }
 
 /// Per-axis traffic + overlap counters (feeds the epoch-time breakdown
@@ -187,90 +193,89 @@ pub struct AxisCounters {
     pub blocked_ns: AtomicU64,
 }
 
-/// All process groups of a 4D grid.
+/// What a collective backend must provide for [`CommWorld`] to run the
+/// sequence-matched op protocol over it.
+///
+/// The contract (pinned for every implementation by
+/// `tests/transport_conformance.rs`):
+///
+/// * **Sequencing** — [`Transport::issue`] assigns the rank's next
+///   per-axis sequence number and stages its contribution; equal seq on
+///   an axis group = same logical op on every member.
+/// * **Determinism** — reductions sum contributions in group-index
+///   member order, so every transport yields bitwise-identical results.
+/// * **Errors, never deadlocks** — kind/length/precision mismatches,
+///   injected faults and peer deaths surface as a [`CommError`] from
+///   `issue`/`wait_*`/`barrier` (the *same* origin on every member);
+///   implementations never panic and never hang a waiter forever.
+/// * **Poison is sticky** — after [`Transport::fail`] (or any internal
+///   failure) every subsequent call of this rank returns the recorded
+///   origin via [`Transport::poison_of`].
+///
+/// Size-1 groups never reach the transport: [`CommWorld`] short-circuits
+/// them (the reduction is the identity, the barrier a no-op).
+pub trait Transport: Send + Sync {
+    /// Short name for reports and benchmarks (`"inproc"`, `"tcp"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Stage `rank`'s contribution to its next collective on `axis` and
+    /// return the op's sequence number.
+    fn issue(&self, rank: usize, axis: Axis, kind: CollKind, data: &[f32])
+        -> Result<u64, CommError>;
+
+    /// Nonblocking: has the reduce issued at `seq` on `axis` completed
+    /// (or failed — the subsequent wait surfaces the error)?
+    fn try_ready(&self, rank: usize, axis: Axis, seq: u64) -> bool;
+
+    /// Block until the reduce at `seq` completes; write the result into
+    /// `out` and return the completion instant (for the overlap timing).
+    fn wait_reduce(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+        out: &mut [f32],
+    ) -> Result<Instant, CommError>;
+
+    /// Block until the gather at `seq` completes; returns the payloads in
+    /// group-index order plus the completion instant.
+    fn wait_gather(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+    ) -> Result<(Vec<Vec<f32>>, Instant), CommError>;
+
+    /// Opportunistically advance pending work without blocking; returns
+    /// whether anything moved (socket transports complete remotely and
+    /// return `false`).
+    fn progress(&self, rank: usize) -> bool;
+
+    /// Barrier across `rank`'s `axis` group.
+    fn barrier(&self, rank: usize, axis: Axis) -> Result<(), CommError>;
+
+    /// Record `err` as the failure origin of `rank`'s groups and wake /
+    /// notify every peer that could block on this rank (does **not**
+    /// panic; [`CommWorld`] layers the panic-with-payload on top).
+    fn fail(&self, rank: usize, err: &CommError);
+
+    /// The recorded failure origin visible to `rank`, if any of its
+    /// groups was poisoned.
+    fn poison_of(&self, rank: usize) -> Option<CommError>;
+}
+
+/// All process groups of a 4D grid, over a pluggable [`Transport`].
 pub struct CommWorld {
     /// The grid this world was built for.
     pub grid: Grid4D,
-    groups: Vec<Vec<Group>>, // [axis][group_id]
     /// Traffic counters indexed by axis (X, Y, Z, Dp).
     pub counters: [AxisCounters; 4],
-    /// Elements per reduction chunk.
-    chunk_elems: usize,
-}
-
-fn axis_idx(a: Axis) -> usize {
-    match a {
-        Axis::X => 0,
-        Axis::Y => 1,
-        Axis::Z => 2,
-        Axis::Dp => 3,
-    }
-}
-
-/// Contribute `data` to the op slot at `seq`, creating the slot on first
-/// touch.  Returns a mismatch message (instead of contributing) when the
-/// slot disagrees on kind or payload length — the length handshake that
-/// turns a would-be deadlock into a clean error.
-fn contribute(
-    st: &mut GroupState,
-    size: usize,
-    chunk_elems: usize,
-    me: usize,
-    seq: u64,
-    kind: OpKind,
-    data: &[f32],
-) -> Option<String> {
-    if st.ops.iter().all(|o| o.seq != seq) {
-        st.ops.push_back(OpState {
-            seq,
-            kind,
-            len: data.len(),
-            parts: vec![Vec::new(); size],
-            contributed: vec![false; size],
-            n_contributed: 0,
-            result: match kind {
-                OpKind::Reduce(_) => vec![0.0; data.len()],
-                OpKind::Gather => Vec::new(),
-            },
-            chunks_done: 0,
-            total_chunks: match kind {
-                OpKind::Reduce(_) => data.len().div_ceil(chunk_elems).max(1),
-                OpKind::Gather => 0,
-            },
-            completed_at: None,
-            read: 0,
-        });
-    }
-    let op = st.ops.iter_mut().find(|o| o.seq == seq).expect("just ensured");
-    if op.kind != kind {
-        return Some(format!(
-            "collective kind mismatch at seq {seq}: slot holds {:?}, member {me} issued {:?}",
-            op.kind, kind
-        ));
-    }
-    if matches!(kind, OpKind::Reduce(_)) && op.len != data.len() {
-        return Some(format!(
-            "all_reduce length mismatch at seq {seq}: slot has {} elems, member {me} sent {}",
-            op.len,
-            data.len()
-        ));
-    }
-    assert!(!op.contributed[me], "member {me} double-contributed seq {seq}");
-    op.parts[me] = match kind {
-        OpKind::Reduce(Precision::Bf16) => data.iter().map(|&v| bf16_round(v)).collect(),
-        _ => data.to_vec(),
-    };
-    op.contributed[me] = true;
-    op.n_contributed += 1;
-    if op.n_contributed == size && matches!(kind, OpKind::Gather) {
-        op.completed_at = Some(Instant::now());
-    }
-    None
+    transport: Box<dyn Transport>,
 }
 
 impl CommWorld {
-    /// Allocate the op slots of every process group of `grid` with the
-    /// default reduction chunk size.
+    /// In-process world: every rank is a thread sharing op slots in
+    /// memory, with the default reduction chunk size.
     pub fn new(grid: Grid4D) -> CommWorld {
         CommWorld::with_chunk_elems(grid, DEFAULT_CHUNK_ELEMS)
     }
@@ -278,31 +283,28 @@ impl CommWorld {
     /// As [`CommWorld::new`] with an explicit reduction chunk size in
     /// elements (tests use tiny chunks to exercise the chunk pipeline).
     pub fn with_chunk_elems(grid: Grid4D, chunk_elems: usize) -> CommWorld {
-        assert!(chunk_elems > 0, "chunk_elems must be positive");
-        let mk = |axis: Axis| -> Vec<Group> {
-            (0..grid.num_groups(axis))
-                .map(|_| Group {
-                    size: grid.axis_size(axis),
-                    barrier: Barrier::new(grid.axis_size(axis)),
-                    state: Mutex::new(GroupState {
-                        next_seq: vec![0; grid.axis_size(axis)],
-                        ops: VecDeque::new(),
-                        poison: None,
-                    }),
-                    cv: Condvar::new(),
-                })
-                .collect()
-        };
-        CommWorld {
-            grid,
-            groups: vec![mk(Axis::X), mk(Axis::Y), mk(Axis::Z), mk(Axis::Dp)],
-            counters: Default::default(),
-            chunk_elems,
-        }
+        CommWorld::with_transport(grid, Box::new(InProcTransport::new(grid, chunk_elems)))
     }
 
-    fn group(&self, rank: usize, axis: Axis) -> &Group {
-        &self.groups[axis_idx(axis)][self.grid.group_id(rank, axis)]
+    /// A world over an explicit transport (the conformance suite builds
+    /// every backend through this one constructor).
+    pub fn with_transport(grid: Grid4D, transport: Box<dyn Transport>) -> CommWorld {
+        CommWorld { grid, counters: Default::default(), transport }
+    }
+
+    /// Socket world for **one** rank of a multi-process run: register
+    /// with the `scalegnn-coord` coordinator at `endpoint`, block until
+    /// the full world assembled, and return a world whose collectives
+    /// travel as [`wire`] frames.  Counters on this handle account this
+    /// rank's traffic only.
+    pub fn connect(grid: Grid4D, rank: usize, endpoint: &Endpoint) -> anyhow::Result<CommWorld> {
+        let t = SocketTransport::connect(grid, rank, endpoint)?;
+        Ok(CommWorld::with_transport(grid, Box::new(t)))
+    }
+
+    /// Short name of the transport moving this world's payloads.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
     }
 
     fn account(&self, axis: Axis, elems: u64, prec: Precision, group_size: usize) {
@@ -316,66 +318,15 @@ impl CommWorld {
         c.bytes.fetch_add(elems * prec.bytes_per_elem(), Ordering::Relaxed);
     }
 
-    /// Advance ordered chunk reductions of every fully-contributed op of
-    /// the group; `budget` caps the chunks reduced per call so `progress`
-    /// stays cheap.  Returns whether any chunk was advanced.
-    fn reduce_ready_locked(&self, st: &mut GroupState, size: usize, mut budget: usize) -> bool {
-        let chunk = self.chunk_elems;
-        let mut did = false;
-        for op in st.ops.iter_mut() {
-            if budget == 0 {
-                break;
-            }
-            if !matches!(op.kind, OpKind::Reduce(_)) || op.n_contributed < size {
-                continue;
-            }
-            while op.chunks_done < op.total_chunks && budget > 0 {
-                let lo = (op.chunks_done * chunk).min(op.len);
-                let hi = ((op.chunks_done + 1) * chunk).min(op.len);
-                // ordered sum over members: deterministic regardless of
-                // arrival order or of which rank drives the reduction
-                let dst = &mut op.result[lo..hi];
-                dst.copy_from_slice(&op.parts[0][lo..hi]);
-                for p in op.parts.iter().skip(1) {
-                    for (d, &v) in dst.iter_mut().zip(&p[lo..hi]) {
-                        *d += v;
-                    }
-                }
-                op.chunks_done += 1;
-                budget -= 1;
-                did = true;
-            }
-            if op.chunks_done == op.total_chunks && op.completed_at.is_none() {
-                op.completed_at = Some(Instant::now());
-                // contributions are no longer needed; free them eagerly
-                for p in op.parts.iter_mut() {
-                    *p = Vec::new();
-                }
-            }
-        }
-        did
-    }
-
-    /// Poison every group `rank` belongs to with `err`, wake their
-    /// waiters, then panic with `err` as the structured payload.  A member
-    /// that dies inside one collective must not leave peers in its *other*
-    /// groups waiting on a contribution that will never come, so the
-    /// poison cascades rank-by-rank through shared groups (each awoken
-    /// member re-panics with the *original* origin and cascades in turn —
-    /// a bystander's panic still names the rank/seq/op that truly died).
+    /// Poison every group `rank` belongs to with `err` (waking their
+    /// waiters), then panic with `err` as the structured payload.  A
+    /// member that dies inside one collective must not leave peers in its
+    /// *other* groups waiting on a contribution that will never come, so
+    /// the poison cascades rank-by-rank through shared groups — over
+    /// sockets the coordinator broadcasts it world-wide — and each awoken
+    /// member re-panics with the *original* origin.
     fn poison_and_panic(&self, rank: usize, err: CommError) -> ! {
-        for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
-            let g = self.group(rank, axis);
-            if g.size <= 1 {
-                continue;
-            }
-            let mut st = g.state.lock().unwrap();
-            if st.poison.is_none() {
-                st.poison = Some(err.clone());
-            }
-            drop(st);
-            g.cv.notify_all();
-        }
+        self.transport.fail(rank, &err);
         std::panic::panic_any(err);
     }
 
@@ -390,11 +341,29 @@ impl CommWorld {
         );
     }
 
-    /// Issue a sum-all-reduce of `data` across the rank's `axis` group in
-    /// fixed-size chunks; returns a [`PendingOp`] handle.  The caller's
-    /// contribution is staged immediately (the borrow ends at return);
-    /// chunk reductions proceed while the caller computes, and
-    /// [`PendingOp::wait_into`] blocks only on the true dependency.
+    /// The failure origin poisoning any of `rank`'s groups, if one was
+    /// recorded.  Engines call this at step boundaries so a rank whose
+    /// next collective is far away still learns of a dead peer promptly.
+    pub fn poison_of(&self, rank: usize) -> Option<CommError> {
+        self.transport.poison_of(rank)
+    }
+
+    /// `Ok(())` while `rank`'s groups are healthy; the recorded failure
+    /// origin as the error once any of them was poisoned.  The checked
+    /// entry point for report/stats queries after a run — a poisoned
+    /// world must answer with the origin, not with misleading numbers.
+    pub fn check_healthy(&self, rank: usize) -> Result<(), CommError> {
+        match self.transport.poison_of(rank) {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Issue a sum-all-reduce of `data` across the rank's `axis` group;
+    /// returns a [`PendingOp`] handle.  The caller's contribution is
+    /// staged immediately (the borrow ends at return); the reduction
+    /// proceeds while the caller computes, and [`PendingOp::wait_into`]
+    /// blocks only on the true dependency.
     pub fn issue_all_reduce(
         &self,
         rank: usize,
@@ -414,8 +383,7 @@ impl CommWorld {
         deferred: bool,
     ) -> PendingOp<'_> {
         let issued_at = Instant::now();
-        let g = self.group(rank, axis);
-        if g.size == 1 {
+        if self.grid.axis_size(axis) == 1 {
             // a size-1 "reduction" is the identity; keep the payload so
             // wait_into honors its write-into-`out` contract
             return PendingOp {
@@ -429,32 +397,19 @@ impl CommWorld {
                 issued_at,
             };
         }
-        self.account(axis, data.len() as u64, prec, g.size);
-        let me = self.grid.index_in_group(rank, axis);
-        let mut st = g.state.lock().unwrap();
-        if let Some(e) = st.poison.clone() {
-            drop(st);
-            self.poison_and_panic(rank, e);
-        }
-        let seq = st.next_seq[me];
-        st.next_seq[me] += 1;
-        if let Some(msg) =
-            contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Reduce(prec), data)
-        {
-            drop(st);
-            self.poison_and_panic(rank, CommError::new(rank, seq, "all_reduce", axis, msg));
-        }
-        g.cv.notify_all();
-        drop(st);
-        PendingOp {
-            world: self,
-            axis,
-            rank,
-            seq,
-            len: data.len(),
-            trivial: None,
-            deferred,
-            issued_at,
+        self.account(axis, data.len() as u64, prec, self.grid.axis_size(axis));
+        match self.transport.issue(rank, axis, CollKind::Reduce(prec), data) {
+            Ok(seq) => PendingOp {
+                world: self,
+                axis,
+                rank,
+                seq,
+                len: data.len(),
+                trivial: None,
+                deferred,
+                issued_at,
+            },
+            Err(e) => self.poison_and_panic(rank, e),
         }
     }
 
@@ -478,8 +433,7 @@ impl CommWorld {
         deferred: bool,
     ) -> PendingGather<'_> {
         let issued_at = Instant::now();
-        let g = self.group(rank, axis);
-        if g.size == 1 {
+        if self.grid.axis_size(axis) == 1 {
             return PendingGather {
                 world: self,
                 axis,
@@ -490,55 +444,27 @@ impl CommWorld {
                 issued_at,
             };
         }
-        self.account(axis, payload.len() as u64, Precision::Fp32, g.size);
-        let me = self.grid.index_in_group(rank, axis);
-        let mut st = g.state.lock().unwrap();
-        if let Some(e) = st.poison.clone() {
-            drop(st);
-            self.poison_and_panic(rank, e);
+        self.account(axis, payload.len() as u64, Precision::Fp32, self.grid.axis_size(axis));
+        match self.transport.issue(rank, axis, CollKind::Gather, payload) {
+            Ok(seq) => {
+                PendingGather { world: self, axis, rank, seq, trivial: None, deferred, issued_at }
+            }
+            Err(e) => self.poison_and_panic(rank, e),
         }
-        let seq = st.next_seq[me];
-        st.next_seq[me] += 1;
-        if let Some(msg) =
-            contribute(&mut st, g.size, self.chunk_elems, me, seq, OpKind::Gather, payload)
-        {
-            drop(st);
-            self.poison_and_panic(rank, CommError::new(rank, seq, "all_gather", axis, msg));
-        }
-        g.cv.notify_all();
-        drop(st);
-        PendingGather { world: self, axis, rank, seq, trivial: None, deferred, issued_at }
     }
 
-    /// Drive pending chunk reductions of this rank's groups without
-    /// blocking — the per-rank progress engine of the nonblocking API.
-    /// Cheap (bounded work, `try_lock` only); returns whether any chunk
-    /// was advanced.
+    /// Drive pending work of this rank's groups without blocking — the
+    /// per-rank progress engine of the nonblocking API.  Cheap (bounded
+    /// work, `try_lock` only); returns whether anything advanced.
     pub fn progress(&self, rank: usize) -> bool {
-        let mut did = false;
-        for axis in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
-            let g = self.group(rank, axis);
-            if g.size <= 1 {
-                continue;
-            }
-            if let Ok(mut st) = g.state.try_lock() {
-                if st.poison.is_some() {
-                    continue; // surfaced by the owning wait
-                }
-                if self.reduce_ready_locked(&mut st, g.size, 8) {
-                    did = true;
-                    g.cv.notify_all();
-                }
-            }
-        }
-        did
+        self.transport.progress(rank)
     }
 
     /// Sum-all-reduce `data` across the rank's `axis` group, in place
     /// (blocking wrapper over issue + wait; excluded from the hidden-comm
     /// timing so the measured fraction covers only deferrable ops).
     pub fn all_reduce(&self, rank: usize, axis: Axis, data: &mut [f32], prec: Precision) {
-        if self.group(rank, axis).size == 1 {
+        if self.grid.axis_size(axis) == 1 {
             return; // identity in place, no payload copy
         }
         let op = self.issue_reduce_inner(rank, axis, data, prec, false);
@@ -550,17 +476,21 @@ impl CommWorld {
     /// (blocking wrapper over issue + wait; excluded from the hidden-comm
     /// timing).
     pub fn all_gather(&self, rank: usize, axis: Axis, payload: &[f32]) -> Vec<Vec<f32>> {
-        if self.group(rank, axis).size == 1 {
+        if self.grid.axis_size(axis) == 1 {
             return vec![payload.to_vec()];
         }
         self.issue_gather_inner(rank, axis, payload, false).wait()
     }
 
-    /// Barrier across the rank's `axis` group.
+    /// Barrier across the rank's `axis` group.  Panics with the
+    /// originating [`CommError`] if the group was poisoned while waiting
+    /// (a dead peer can never arrive).
     pub fn barrier(&self, rank: usize, axis: Axis) {
-        let g = self.group(rank, axis);
-        if g.size > 1 {
-            g.barrier.wait();
+        if self.grid.axis_size(axis) == 1 {
+            return;
+        }
+        if let Err(e) = self.transport.barrier(rank, axis) {
+            self.poison_and_panic(rank, e);
         }
     }
 
@@ -568,6 +498,14 @@ impl CommWorld {
     pub fn stats(&self, axis: Axis) -> (u64, u64) {
         let c = &self.counters[axis_idx(axis)];
         (c.ops.load(Ordering::Relaxed), c.bytes.load(Ordering::Relaxed))
+    }
+
+    /// [`CommWorld::stats`] that refuses to answer on a poisoned world:
+    /// returns the failure origin instead of counters that stopped
+    /// moving when the world died.
+    pub fn stats_checked(&self, rank: usize, axis: Axis) -> Result<(u64, u64), CommError> {
+        self.check_healthy(rank)?;
+        Ok(self.stats(axis))
     }
 
     /// Snapshot (comm seconds, blocked seconds) measured on an axis: total
@@ -578,6 +516,12 @@ impl CommWorld {
             c.comm_ns.load(Ordering::Relaxed) as f64 * 1e-9,
             c.blocked_ns.load(Ordering::Relaxed) as f64 * 1e-9,
         )
+    }
+
+    /// [`CommWorld::timing`] guarded like [`CommWorld::stats_checked`].
+    pub fn timing_checked(&self, rank: usize, axis: Axis) -> Result<(f64, f64), CommError> {
+        self.check_healthy(rank)?;
+        Ok(self.timing(axis))
     }
 
     /// Measured fraction of this axis's *deferrable* collective time
@@ -594,6 +538,15 @@ impl CommWorld {
         }
         let blocked = c.blocked_ns.load(Ordering::Relaxed) as f64;
         (1.0 - blocked / comm).clamp(0.0, 1.0)
+    }
+
+    /// [`CommWorld::hidden_fraction`] that returns the failure origin on
+    /// a poisoned world instead of an overlap number cut short by the
+    /// death (ops in flight when a world dies never accrue their
+    /// blocked time, so the unchecked fraction would read as optimistic).
+    pub fn hidden_fraction_checked(&self, rank: usize, axis: Axis) -> Result<f64, CommError> {
+        self.check_healthy(rank)?;
+        Ok(self.hidden_fraction(axis))
     }
 
     /// Aggregate hidden fraction over the tensor-parallel axes (X, Y, Z):
@@ -653,31 +606,13 @@ impl PendingOp<'_> {
         self.len == 0
     }
 
-    /// Nonblocking readiness check; opportunistically drives a bounded
-    /// number of chunk reductions while it holds the group lock (bounded
-    /// like `progress` so a poll never stalls peers queueing on the lock;
-    /// a subsequent blocking wait finishes any remainder).
+    /// Nonblocking readiness check; in-process it opportunistically
+    /// drives a bounded number of chunk reductions while it holds the
+    /// group lock (bounded like `progress` so a poll never stalls peers
+    /// queueing on the lock; a subsequent blocking wait finishes any
+    /// remainder).
     pub fn try_ready(&self) -> bool {
-        if self.trivial.is_some() {
-            return true;
-        }
-        let g = self.world.group(self.rank, self.axis);
-        match g.state.try_lock() {
-            Ok(mut st) => {
-                if st.poison.is_some() {
-                    return true; // wait_into surfaces the error
-                }
-                if self.world.reduce_ready_locked(&mut st, g.size, 8) {
-                    g.cv.notify_all();
-                }
-                st.ops
-                    .iter()
-                    .find(|o| o.seq == self.seq)
-                    .map(|o| o.chunks_done == o.total_chunks)
-                    .unwrap_or(false)
-            }
-            Err(_) => false,
-        }
+        self.trivial.is_some() || self.world.transport.try_ready(self.rank, self.axis, self.seq)
     }
 
     /// Block until every chunk is reduced and write the result into `out`
@@ -692,44 +627,11 @@ impl PendingOp<'_> {
             return;
         }
         let w = self.world;
-        let g = w.group(self.rank, self.axis);
         let t_wait = Instant::now();
-        let mut st = g.state.lock().unwrap();
-        let completed_at = loop {
-            if let Some(e) = st.poison.clone() {
-                drop(st);
-                w.poison_and_panic(self.rank, e);
-            }
-            if w.reduce_ready_locked(&mut st, g.size, usize::MAX) {
-                g.cv.notify_all();
-            }
-            let done = {
-                let op = st
-                    .ops
-                    .iter()
-                    .find(|o| o.seq == self.seq)
-                    .expect("pending op slot missing");
-                if op.chunks_done == op.total_chunks {
-                    op.completed_at
-                } else {
-                    None
-                }
-            };
-            if let Some(t) = done {
-                break t;
-            }
-            st = g.cv.wait(st).unwrap();
+        let completed_at = match w.transport.wait_reduce(self.rank, self.axis, self.seq, out) {
+            Ok(t) => t,
+            Err(e) => w.poison_and_panic(self.rank, e),
         };
-        let retire = {
-            let op = st.ops.iter_mut().find(|o| o.seq == self.seq).unwrap();
-            out.copy_from_slice(&op.result);
-            op.read += 1;
-            op.read == g.size
-        };
-        if retire {
-            st.ops.retain(|o| o.seq != self.seq);
-        }
-        drop(st);
         if self.deferred {
             let blocked = t_wait.elapsed();
             let total = completed_at.saturating_duration_since(self.issued_at);
@@ -766,41 +668,11 @@ impl PendingGather<'_> {
             return vec![p];
         }
         let w = self.world;
-        let g = w.group(self.rank, self.axis);
         let t_wait = Instant::now();
-        let mut st = g.state.lock().unwrap();
-        let completed_at = loop {
-            if let Some(e) = st.poison.clone() {
-                drop(st);
-                w.poison_and_panic(self.rank, e);
-            }
-            let done = {
-                let op = st
-                    .ops
-                    .iter()
-                    .find(|o| o.seq == self.seq)
-                    .expect("pending gather slot missing");
-                if op.n_contributed == g.size {
-                    op.completed_at
-                } else {
-                    None
-                }
-            };
-            if let Some(t) = done {
-                break t;
-            }
-            st = g.cv.wait(st).unwrap();
+        let (out, completed_at) = match w.transport.wait_gather(self.rank, self.axis, self.seq) {
+            Ok(r) => r,
+            Err(e) => w.poison_and_panic(self.rank, e),
         };
-        let (out, retire) = {
-            let op = st.ops.iter_mut().find(|o| o.seq == self.seq).unwrap();
-            let out = op.parts.clone();
-            op.read += 1;
-            (out, op.read == g.size)
-        };
-        if retire {
-            st.ops.retain(|o| o.seq != self.seq);
-        }
-        drop(st);
         if self.deferred {
             let blocked = t_wait.elapsed();
             let total = completed_at.saturating_duration_since(self.issued_at);
@@ -816,6 +688,7 @@ impl PendingGather<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bf16_round;
     use std::sync::Arc;
 
     fn run_ranks<F>(grid: Grid4D, f: F) -> Vec<Vec<f32>>

@@ -1,0 +1,486 @@
+//! The socket [`Transport`]: this process runs **one** rank; collectives
+//! travel as [`wire`] frames over TCP or a Unix-domain socket to a
+//! `scalegnn-coord` coordinator ([`super::coord`]) that matches
+//! sequence-numbered contributions, reduces them in group-index member
+//! order (bitwise identical to the in-process engine) and sends results
+//! back.
+//!
+//! Connection anatomy: one stream per rank, writer behind a mutex (the
+//! rank thread issues contributions / barriers / heartbeats), plus a
+//! reader thread that dispatches results, barrier releases and poison
+//! frames into shared state a waiting rank blocks on.  A lost
+//! coordinator connection poisons the rank with a `"coordinator-lost"`
+//! origin instead of hanging a wait forever.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::wire::{self, Msg};
+use super::{CollKind, CommError, Transport};
+use crate::grid::{Axis, Grid4D};
+
+/// Where a coordinator listens (and ranks connect).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP at `"host:port"` (port 0 = coordinator picks one and reports
+    /// the resolved address).
+    Tcp(String),
+    /// Unix-domain socket at a filesystem path.
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse `"tcp:HOST:PORT"` or `"unix:PATH"`.
+    pub fn parse(s: &str) -> Result<Endpoint, String> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                return Err("tcp endpoint needs an address: tcp:HOST:PORT".into());
+            }
+            Ok(Endpoint::Tcp(addr.to_string()))
+        } else if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err("unix endpoint needs a path: unix:/some/socket".into());
+            }
+            Ok(Endpoint::Unix(PathBuf::from(path)))
+        } else {
+            Err(format!("unknown endpoint '{s}' (want tcp:HOST:PORT or unix:PATH)"))
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// One coordinator connection, TCP or Unix-domain.
+pub(crate) enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Connect with retries until `timeout` (the coordinator may still be
+    /// binding when ranks launch).
+    pub(crate) fn connect(ep: &Endpoint, timeout: Duration) -> io::Result<Conn> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let r = match ep {
+                Endpoint::Tcp(addr) => TcpStream::connect(addr.as_str()).map(|s| {
+                    let _ = s.set_nodelay(true);
+                    Conn::Tcp(s)
+                }),
+                Endpoint::Unix(path) => UnixStream::connect(path).map(Conn::Unix),
+            };
+            match r {
+                Ok(c) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => return Err(e),
+                Err(_) => std::thread::sleep(Duration::from_millis(30)),
+            }
+        }
+    }
+
+    pub(crate) fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    /// Shut both directions down, unblocking any reader; errors ignored
+    /// (the peer may already be gone).
+    pub(crate) fn shutdown(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Conn::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            Conn::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Lock that survives a poisoned mutex (a panicking rank thread must
+/// still be able to close the connection in Drop).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct Tx {
+    w: Conn,
+    /// Per-axis sequence number of this rank's next collective (assigned
+    /// under the writer lock so seq order equals wire order).
+    next_seq: [u64; 4],
+    /// Per-axis barrier sequence number.
+    next_bseq: [u64; 4],
+}
+
+#[derive(Default)]
+struct RxState {
+    /// Completed reduces keyed by (axis index, seq), with arrival time.
+    reduces: HashMap<(usize, u64), (Vec<f32>, Instant)>,
+    /// Completed gathers keyed by (axis index, seq).
+    gathers: HashMap<(usize, u64), (Vec<Vec<f32>>, Instant)>,
+    /// Count of barrier releases received per axis.
+    releases: [u64; 4],
+    /// First failure origin seen (from the coordinator, a peer via the
+    /// coordinator, or a lost connection).
+    poison: Option<CommError>,
+    /// Set by Drop so the reader thread exits silently on EOF.
+    closing: bool,
+}
+
+struct Shared {
+    state: Mutex<RxState>,
+    cv: Condvar,
+}
+
+/// Socket transport for one rank of a multi-process world (see the
+/// module docs); built by [`SocketTransport::connect`], normally via
+/// [`super::CommWorld::connect`].
+pub struct SocketTransport {
+    rank: usize,
+    tx: Arc<Mutex<Tx>>,
+    sh: Arc<Shared>,
+    /// Dedicated handle for Drop to unblock the reader thread.
+    shutdown_conn: Conn,
+    kind: &'static str,
+    reader: Option<JoinHandle<()>>,
+    pinger: Option<JoinHandle<()>>,
+}
+
+impl SocketTransport {
+    /// Register `rank` with the coordinator at `ep`, block until the
+    /// whole world assembled (the coordinator's Welcome), and start the
+    /// reader (and, if the coordinator asked for heartbeats, pinger)
+    /// threads.
+    pub fn connect(grid: Grid4D, rank: usize, ep: &Endpoint) -> Result<SocketTransport> {
+        if rank >= grid.world_size() {
+            bail!("rank {rank} outside world of {} ranks", grid.world_size());
+        }
+        let mut conn = Conn::connect(ep, Duration::from_secs(10))
+            .map_err(|e| anyhow!("rank {rank}: connecting to coordinator at {ep}: {e}"))?;
+        wire::write_msg(
+            &mut conn,
+            &Msg::Hello {
+                rank: rank as u32,
+                grid: [grid.gd as u32, grid.gx as u32, grid.gy as u32, grid.gz as u32],
+            },
+        )
+        .map_err(|e| anyhow!("rank {rank}: sending hello: {e}"))?;
+        let heartbeat_ms = match wire::read_msg(&mut conn) {
+            Ok(Msg::Welcome { world, heartbeat_ms }) => {
+                if world as usize != grid.world_size() {
+                    bail!(
+                        "rank {rank}: coordinator assembled {world} ranks, this grid has {}",
+                        grid.world_size()
+                    );
+                }
+                heartbeat_ms
+            }
+            Ok(Msg::Poison { err }) => {
+                bail!("rank {rank}: world failed during assembly: {err}")
+            }
+            Ok(m) => bail!("rank {rank}: expected welcome, coordinator sent {m:?}"),
+            Err(e) => bail!("rank {rank}: waiting for welcome: {e}"),
+        };
+        let shutdown_conn = conn.try_clone()?;
+        let mut rconn = conn.try_clone()?;
+        let sh = Arc::new(Shared { state: Mutex::new(RxState::default()), cv: Condvar::new() });
+        let sh_r = sh.clone();
+        let reader = std::thread::spawn(move || reader_loop(&mut rconn, &sh_r, rank));
+        let tx =
+            Arc::new(Mutex::new(Tx { w: conn, next_seq: [0; 4], next_bseq: [0; 4] }));
+        let pinger = (heartbeat_ms > 0).then(|| {
+            let tx = tx.clone();
+            let sh = sh.clone();
+            std::thread::spawn(move || ping_loop(&tx, &sh, heartbeat_ms))
+        });
+        Ok(SocketTransport {
+            rank,
+            tx,
+            sh,
+            shutdown_conn,
+            kind: match ep {
+                Endpoint::Tcp(_) => "tcp",
+                Endpoint::Unix(_) => "uds",
+            },
+            reader: Some(reader),
+            pinger: Some(pinger).flatten(),
+        })
+    }
+
+    fn poison(&self) -> Option<CommError> {
+        lock(&self.sh.state).poison.clone()
+    }
+
+    /// A write failure usually means the world already died and the
+    /// poison explains why; fall back to a send-failure origin.
+    fn send_err(&self, seq: u64, op: &'static str, axis: Axis, e: io::Error) -> CommError {
+        self.poison().unwrap_or_else(|| {
+            CommError::new(self.rank, seq, op, axis, format!("sending to coordinator: {e}"))
+        })
+    }
+}
+
+fn reader_loop(conn: &mut Conn, sh: &Shared, rank: usize) {
+    loop {
+        match wire::read_msg(conn) {
+            Ok(Msg::ReduceResult { axis, seq, data }) => {
+                let mut st = lock(&sh.state);
+                st.reduces.insert((axis.index(), seq), (data, Instant::now()));
+                drop(st);
+                sh.cv.notify_all();
+            }
+            Ok(Msg::GatherResult { axis, seq, parts }) => {
+                let mut st = lock(&sh.state);
+                st.gathers.insert((axis.index(), seq), (parts, Instant::now()));
+                drop(st);
+                sh.cv.notify_all();
+            }
+            Ok(Msg::BarrierRelease { axis, .. }) => {
+                let mut st = lock(&sh.state);
+                st.releases[axis.index()] += 1;
+                drop(st);
+                sh.cv.notify_all();
+            }
+            Ok(Msg::Poison { err }) => {
+                let mut st = lock(&sh.state);
+                if st.poison.is_none() {
+                    st.poison = Some(err);
+                }
+                drop(st);
+                sh.cv.notify_all();
+                // keep reading: the coordinator closes after the
+                // broadcast and the EOF ends this loop cleanly
+            }
+            Ok(_) => {} // stray frame; harmless
+            Err(e) => {
+                let mut st = lock(&sh.state);
+                if !st.closing && st.poison.is_none() {
+                    st.poison = Some(CommError::new(
+                        rank,
+                        0,
+                        "coordinator-lost",
+                        Axis::X,
+                        format!("coordinator connection lost: {e}"),
+                    ));
+                }
+                drop(st);
+                sh.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+fn ping_loop(tx: &Mutex<Tx>, sh: &Shared, heartbeat_ms: u32) {
+    let interval = Duration::from_millis((heartbeat_ms as u64 / 3).max(10));
+    loop {
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            {
+                let st = lock(&sh.state);
+                if st.closing || st.poison.is_some() {
+                    return;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20).min(interval));
+        }
+        let mut tx = lock(tx);
+        if wire::write_msg(&mut tx.w, &Msg::Ping).is_err() {
+            return;
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn name(&self) -> &'static str {
+        self.kind
+    }
+
+    fn issue(
+        &self,
+        rank: usize,
+        axis: Axis,
+        kind: CollKind,
+        data: &[f32],
+    ) -> Result<u64, CommError> {
+        debug_assert_eq!(rank, self.rank, "a socket world carries exactly one rank");
+        if let Some(e) = self.poison() {
+            return Err(e);
+        }
+        let mut tx = lock(&self.tx);
+        let seq = tx.next_seq[axis.index()];
+        tx.next_seq[axis.index()] += 1;
+        wire::write_msg(
+            &mut tx.w,
+            &Msg::Contribute { axis, seq, kind, data: data.to_vec() },
+        )
+        .map_err(|e| self.send_err(seq, kind.op_name(), axis, e))?;
+        Ok(seq)
+    }
+
+    fn try_ready(&self, _rank: usize, axis: Axis, seq: u64) -> bool {
+        let st = lock(&self.sh.state);
+        st.poison.is_some() || st.reduces.contains_key(&(axis.index(), seq))
+    }
+
+    fn wait_reduce(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+        out: &mut [f32],
+    ) -> Result<Instant, CommError> {
+        let key = (axis.index(), seq);
+        let mut st = lock(&self.sh.state);
+        loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            if let Some((data, at)) = st.reduces.remove(&key) {
+                if data.len() != out.len() {
+                    return Err(CommError::new(
+                        rank,
+                        seq,
+                        "protocol",
+                        axis,
+                        format!("result has {} elems, issued {}", data.len(), out.len()),
+                    ));
+                }
+                out.copy_from_slice(&data);
+                return Ok(at);
+            }
+            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn wait_gather(
+        &self,
+        _rank: usize,
+        axis: Axis,
+        seq: u64,
+    ) -> Result<(Vec<Vec<f32>>, Instant), CommError> {
+        let key = (axis.index(), seq);
+        let mut st = lock(&self.sh.state);
+        loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            if let Some(r) = st.gathers.remove(&key) {
+                return Ok(r);
+            }
+            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn progress(&self, _rank: usize) -> bool {
+        false // reductions complete at the coordinator; nothing to drive
+    }
+
+    fn barrier(&self, _rank: usize, axis: Axis) -> Result<(), CommError> {
+        let bseq = {
+            let mut tx = lock(&self.tx);
+            let b = tx.next_bseq[axis.index()];
+            tx.next_bseq[axis.index()] += 1;
+            wire::write_msg(&mut tx.w, &Msg::Barrier { axis, bseq: b })
+                .map_err(|e| self.send_err(b, "protocol", axis, e))?;
+            b
+        };
+        let mut st = lock(&self.sh.state);
+        loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            if st.releases[axis.index()] > bseq {
+                return Ok(());
+            }
+            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn fail(&self, _rank: usize, err: &CommError) {
+        {
+            let mut st = lock(&self.sh.state);
+            if st.poison.is_none() {
+                st.poison = Some(err.clone());
+            }
+        }
+        self.sh.cv.notify_all();
+        // tell the coordinator so it broadcasts the origin world-wide
+        let mut tx = lock(&self.tx);
+        let _ = wire::write_msg(&mut tx.w, &Msg::Poison { err: err.clone() });
+    }
+
+    fn poison_of(&self, _rank: usize) -> Option<CommError> {
+        self.poison()
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        let was_poisoned = {
+            let mut st = lock(&self.sh.state);
+            st.closing = true;
+            st.poison.is_some()
+        };
+        self.sh.cv.notify_all();
+        if !was_poisoned {
+            // clean completion; a poisoned rank just closes
+            let mut tx = lock(&self.tx);
+            let _ = wire::write_msg(&mut tx.w, &Msg::Bye);
+        }
+        self.shutdown_conn.shutdown();
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pinger.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,641 @@
+//! Wire format of the socket transports: length-prefixed, CRC-checked
+//! frames with magic and version, following the checkpoint module's
+//! validated-decode discipline (`checkpoint::mod` — magic, version,
+//! exact lengths, CRC32 trailer, and a decoder that *returns* errors,
+//! never panics).
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic  "PLSW"
+//!   4       2     version (u16 LE)
+//!   6       2     frame type (u16 LE, FrameType)
+//!   8       4     payload length (u32 LE, <= MAX_FRAME_PAYLOAD)
+//!   12      n     payload (per-type encoding, all integers LE)
+//!   12+n    4     CRC32 (u32 LE) over header + payload
+//! ```
+//!
+//! Every multi-byte integer is little-endian.  bf16 reduce contributions
+//! travel as the high 16 bits of the already-rounded f32 — lossless, at
+//! half the bytes, mirroring the §V-B byte accounting.
+//!
+//! The decoder ([`read_msg`]) classifies every way a frame can be bad
+//! (truncated, wrong magic, unsupported version, unknown type, oversized
+//! length, CRC mismatch, malformed payload) into a descriptive
+//! [`WireError`]; the adversarial battery in
+//! `tests/transport_conformance.rs` feeds it each class and asserts the
+//! message, and the live transports convert the error into a
+//! [`CommError`](super::CommError) naming the peer that sent the bytes.
+
+use std::io::{self, Read, Write};
+
+use super::{CollKind, CommError, Precision};
+use crate::checkpoint::crc32;
+use crate::grid::Axis;
+use crate::util::bf16_round;
+
+/// Frame magic: "PLSW" (PaLlaS Wire).
+pub const WIRE_MAGIC: [u8; 4] = *b"PLSW";
+/// Wire protocol version; bumped on any frame-format change.
+pub const WIRE_VERSION: u16 = 1;
+/// Hard cap on a frame payload (64 MiB) — a corrupted length prefix must
+/// fail fast, not trigger a giant allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 64 << 20;
+
+const HEADER_BYTES: usize = 12;
+
+/// Everything that can be wrong with bytes arriving on a transport
+/// connection.  Every variant renders to a human-readable description
+/// that the transports embed in the resulting [`CommError`].
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean EOF on a frame boundary (peer closed the connection).
+    Closed,
+    /// The stream ended mid-header or mid-payload.
+    Truncated {
+        /// Which part of the frame was being read.
+        what: &'static str,
+        /// Bytes actually read.
+        got: usize,
+        /// Bytes the frame promised.
+        want: usize,
+    },
+    /// The 4 magic bytes were not [`WIRE_MAGIC`].
+    BadMagic([u8; 4]),
+    /// The version field names a protocol this build does not speak.
+    BadVersion(u16),
+    /// The frame-type field is not a known [`FrameType`].
+    BadFrameType(u16),
+    /// The length prefix exceeds [`MAX_FRAME_PAYLOAD`].
+    Oversized(usize),
+    /// The CRC32 trailer does not match the received header + payload.
+    BadCrc {
+        /// CRC computed over the received bytes.
+        computed: u32,
+        /// CRC the frame carried.
+        carried: u32,
+    },
+    /// Header and CRC were fine but the payload does not decode as the
+    /// frame type's encoding.
+    Malformed(String),
+    /// An I/O error below the framing layer.
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Truncated { what, got, want } => {
+                write!(f, "truncated frame: {what} ended after {got} of {want} bytes")
+            }
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?} (want {WIRE_MAGIC:02x?} \"PLSW\")")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadFrameType(t) => write!(f, "unknown frame type {t}"),
+            WireError::Oversized(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_FRAME_PAYLOAD} B cap")
+            }
+            WireError::BadCrc { computed, carried } => {
+                write!(f, "frame CRC mismatch: computed {computed:08x}, trailer {carried:08x}")
+            }
+            WireError::Malformed(s) => write!(f, "malformed frame payload: {s}"),
+            WireError::Io(s) => write!(f, "wire i/o error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Frame types (the u16 at header offset 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum FrameType {
+    /// Rank → coordinator: registration (rank + expected grid).
+    Hello = 1,
+    /// Coordinator → rank: the world assembled.
+    Welcome = 2,
+    /// Rank → coordinator: a collective contribution.
+    Contribute = 3,
+    /// Coordinator → rank: a completed reduction's result.
+    ReduceResult = 4,
+    /// Coordinator → rank: a completed gather's payloads.
+    GatherResult = 5,
+    /// Rank → coordinator: barrier arrival.
+    Barrier = 6,
+    /// Coordinator → rank: barrier release.
+    BarrierRelease = 7,
+    /// Either direction: a structured failure origin.
+    Poison = 8,
+    /// Rank → coordinator: heartbeat.
+    Ping = 9,
+    /// Rank → coordinator: clean completion.
+    Bye = 10,
+}
+
+impl FrameType {
+    fn from_u16(t: u16) -> Option<FrameType> {
+        match t {
+            1 => Some(FrameType::Hello),
+            2 => Some(FrameType::Welcome),
+            3 => Some(FrameType::Contribute),
+            4 => Some(FrameType::ReduceResult),
+            5 => Some(FrameType::GatherResult),
+            6 => Some(FrameType::Barrier),
+            7 => Some(FrameType::BarrierRelease),
+            8 => Some(FrameType::Poison),
+            9 => Some(FrameType::Ping),
+            10 => Some(FrameType::Bye),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Rank registration: global rank + the grid it was launched for
+    /// (the coordinator rejects a rank whose grid disagrees).
+    Hello {
+        /// Global rank registering.
+        rank: u32,
+        /// Grid shape as `[gd, gx, gy, gz]`.
+        grid: [u32; 4],
+    },
+    /// World assembly complete; collectives may start.
+    Welcome {
+        /// World size the coordinator assembled.
+        world: u32,
+        /// Heartbeat interval the coordinator expects (0 = no heartbeat).
+        heartbeat_ms: u32,
+    },
+    /// One rank's contribution to the sequence-matched op at
+    /// (`axis`, sender's group, `seq`).
+    Contribute {
+        /// Axis of the group.
+        axis: Axis,
+        /// Group sequence number.
+        seq: u64,
+        /// Collective kind (handshake-checked against the slot).
+        kind: CollKind,
+        /// The payload (bf16 reduces are already rounded).
+        data: Vec<f32>,
+    },
+    /// Ordered-sum result of a completed reduce.
+    ReduceResult {
+        /// Axis of the group.
+        axis: Axis,
+        /// Group sequence number.
+        seq: u64,
+        /// The reduced payload.
+        data: Vec<f32>,
+    },
+    /// Payloads of a completed gather, group-index order.
+    GatherResult {
+        /// Axis of the group.
+        axis: Axis,
+        /// Group sequence number.
+        seq: u64,
+        /// Per-member payloads ordered by index in group.
+        parts: Vec<Vec<f32>>,
+    },
+    /// Barrier arrival `bseq` on `axis` (per-axis barrier counter).
+    Barrier {
+        /// Axis of the barrier group.
+        axis: Axis,
+        /// Per-axis barrier sequence number.
+        bseq: u64,
+    },
+    /// All members arrived at barrier `bseq` on `axis`.
+    BarrierRelease {
+        /// Axis of the barrier group.
+        axis: Axis,
+        /// Per-axis barrier sequence number.
+        bseq: u64,
+    },
+    /// A structured failure origin (rank → coordinator on injected
+    /// faults; coordinator → every rank on any world death).
+    Poison {
+        /// The failure origin, carried unchanged through the cascade.
+        err: CommError,
+    },
+    /// Heartbeat.
+    Ping,
+    /// Clean completion; the sender will close its connection.
+    Bye,
+}
+
+// Op-name codes for CommError::op over the wire.  CommError.op is a
+// &'static str, so decode maps back onto the canonical strings.
+fn op_code(op: &str) -> u8 {
+    match op {
+        "all_reduce" => 0,
+        "all_gather" => 1,
+        "injected-fault" => 2,
+        "rank-death" => 3,
+        "coordinator-lost" => 4,
+        "protocol" => 5,
+        _ => 255,
+    }
+}
+
+fn op_from_code(c: u8) -> &'static str {
+    match c {
+        0 => "all_reduce",
+        1 => "all_gather",
+        2 => "injected-fault",
+        3 => "rank-death",
+        4 => "coordinator-lost",
+        5 => "protocol",
+        _ => "remote-failure",
+    }
+}
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.0.reserve(vs.len() * 4);
+        for &v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.at + n > self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "payload needs {} more bytes at offset {}, {} remain",
+                n,
+                self.at,
+                self.b.len() - self.at
+            )));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn axis(&mut self) -> Result<Axis, WireError> {
+        let c = self.u8()?;
+        Axis::from_code(c).ok_or_else(|| WireError::Malformed(format!("unknown axis code {c}")))
+    }
+    fn finished(&self) -> Result<(), WireError> {
+        if self.at != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing payload bytes after a complete message",
+                self.b.len() - self.at
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn encode(msg: &Msg) -> (FrameType, Vec<u8>) {
+    let mut e = Enc(Vec::new());
+    let ty = match msg {
+        Msg::Hello { rank, grid } => {
+            e.u32(*rank);
+            for &g in grid {
+                e.u32(g);
+            }
+            FrameType::Hello
+        }
+        Msg::Welcome { world, heartbeat_ms } => {
+            e.u32(*world);
+            e.u32(*heartbeat_ms);
+            FrameType::Welcome
+        }
+        Msg::Contribute { axis, seq, kind, data } => {
+            e.u8(axis.code());
+            e.u8(match kind {
+                CollKind::Reduce(Precision::Fp32) => 0,
+                CollKind::Reduce(Precision::Bf16) => 1,
+                CollKind::Gather => 2,
+            });
+            e.u64(*seq);
+            e.u32(data.len() as u32);
+            if matches!(kind, CollKind::Reduce(Precision::Bf16)) {
+                // round here (idempotent if the caller already did): the
+                // high 16 bits then carry the full bf16 value — lossless
+                // at half the bytes
+                for &v in data {
+                    e.u16((bf16_round(v).to_bits() >> 16) as u16);
+                }
+            } else {
+                e.f32s(data);
+            }
+            FrameType::Contribute
+        }
+        Msg::ReduceResult { axis, seq, data } => {
+            e.u8(axis.code());
+            e.u64(*seq);
+            e.u32(data.len() as u32);
+            e.f32s(data);
+            FrameType::ReduceResult
+        }
+        Msg::GatherResult { axis, seq, parts } => {
+            e.u8(axis.code());
+            e.u64(*seq);
+            e.u32(parts.len() as u32);
+            for p in parts {
+                e.u32(p.len() as u32);
+                e.f32s(p);
+            }
+            FrameType::GatherResult
+        }
+        Msg::Barrier { axis, bseq } => {
+            e.u8(axis.code());
+            e.u64(*bseq);
+            FrameType::Barrier
+        }
+        Msg::BarrierRelease { axis, bseq } => {
+            e.u8(axis.code());
+            e.u64(*bseq);
+            FrameType::BarrierRelease
+        }
+        Msg::Poison { err } => {
+            e.u32(err.rank as u32);
+            e.u64(err.seq);
+            e.u8(op_code(err.op));
+            e.u8(err.axis.code());
+            let m = err.msg.as_bytes();
+            e.u32(m.len() as u32);
+            e.0.extend_from_slice(m);
+            FrameType::Poison
+        }
+        Msg::Ping => FrameType::Ping,
+        Msg::Bye => FrameType::Bye,
+    };
+    (ty, e.0)
+}
+
+fn decode(ty: FrameType, payload: &[u8]) -> Result<Msg, WireError> {
+    let mut d = Dec { b: payload, at: 0 };
+    let msg = match ty {
+        FrameType::Hello => {
+            let rank = d.u32()?;
+            let grid = [d.u32()?, d.u32()?, d.u32()?, d.u32()?];
+            Msg::Hello { rank, grid }
+        }
+        FrameType::Welcome => Msg::Welcome { world: d.u32()?, heartbeat_ms: d.u32()? },
+        FrameType::Contribute => {
+            let axis = d.axis()?;
+            let kc = d.u8()?;
+            let seq = d.u64()?;
+            let n = d.u32()? as usize;
+            let (kind, data) = match kc {
+                0 => (CollKind::Reduce(Precision::Fp32), d.f32s(n)?),
+                1 => {
+                    let raw = d.take(n * 2)?;
+                    let data = raw
+                        .chunks_exact(2)
+                        .map(|c| {
+                            let hi = u16::from_le_bytes(c.try_into().unwrap());
+                            f32::from_bits((hi as u32) << 16)
+                        })
+                        .collect();
+                    (CollKind::Reduce(Precision::Bf16), data)
+                }
+                2 => (CollKind::Gather, d.f32s(n)?),
+                k => return Err(WireError::Malformed(format!("unknown collective kind {k}"))),
+            };
+            Msg::Contribute { axis, seq, kind, data }
+        }
+        FrameType::ReduceResult => {
+            let axis = d.axis()?;
+            let seq = d.u64()?;
+            let n = d.u32()? as usize;
+            Msg::ReduceResult { axis, seq, data: d.f32s(n)? }
+        }
+        FrameType::GatherResult => {
+            let axis = d.axis()?;
+            let seq = d.u64()?;
+            let np = d.u32()? as usize;
+            let mut parts = Vec::with_capacity(np.min(1 << 16));
+            for _ in 0..np {
+                let n = d.u32()? as usize;
+                parts.push(d.f32s(n)?);
+            }
+            Msg::GatherResult { axis, seq, parts }
+        }
+        FrameType::Barrier => Msg::Barrier { axis: d.axis()?, bseq: d.u64()? },
+        FrameType::BarrierRelease => Msg::BarrierRelease { axis: d.axis()?, bseq: d.u64()? },
+        FrameType::Poison => {
+            let rank = d.u32()? as usize;
+            let seq = d.u64()?;
+            let op = op_from_code(d.u8()?);
+            let axis = d.axis()?;
+            let ml = d.u32()? as usize;
+            let msg = String::from_utf8(d.take(ml)?.to_vec())
+                .map_err(|_| WireError::Malformed("poison message is not UTF-8".into()))?;
+            Msg::Poison { err: CommError::new(rank, seq, op, axis, msg) }
+        }
+        FrameType::Ping => Msg::Ping,
+        FrameType::Bye => Msg::Bye,
+    };
+    d.finished()?;
+    Ok(msg)
+}
+
+/// Encode `msg` as one frame and write it (single `write_all` + flush,
+/// so a frame is never interleaved when callers serialize on a writer
+/// lock).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
+    let (ty, payload) = encode(msg);
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len() + 4);
+    buf.extend_from_slice(&WIRE_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(ty as u16).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    what: &'static str,
+    clean_eof: bool,
+) -> Result<(), WireError> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => {
+                return Err(if n == 0 && clean_eof {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated { what, got: n, want: buf.len() }
+                });
+            }
+            Ok(k) => n += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read and validate one frame: magic, version, known type, sane length,
+/// CRC, then the per-type payload decode.  Returns [`WireError::Closed`]
+/// on a clean EOF at a frame boundary; every other failure mode gets its
+/// own descriptive variant.  Never panics on adversarial bytes.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, WireError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    read_full(r, &mut hdr, "header", true)?;
+    if hdr[0..4] != WIRE_MAGIC {
+        return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    let version = u16::from_le_bytes([hdr[4], hdr[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let ty_raw = u16::from_le_bytes([hdr[6], hdr[7]]);
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    let ty = FrameType::from_u16(ty_raw).ok_or(WireError::BadFrameType(ty_raw))?;
+    let mut payload = vec![0u8; len];
+    read_full(r, &mut payload, "payload", false)?;
+    let mut trailer = [0u8; 4];
+    read_full(r, &mut trailer, "crc trailer", false)?;
+    let carried = u32::from_le_bytes(trailer);
+    let mut whole = Vec::with_capacity(HEADER_BYTES + len);
+    whole.extend_from_slice(&hdr);
+    whole.extend_from_slice(&payload);
+    let computed = crc32(&whole);
+    if computed != carried {
+        return Err(WireError::BadCrc { computed, carried });
+    }
+    decode(ty, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: Msg) -> Msg {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        read_msg(&mut &buf[..]).unwrap()
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        let msgs = vec![
+            Msg::Hello { rank: 3, grid: [1, 2, 2, 1] },
+            Msg::Welcome { world: 4, heartbeat_ms: 250 },
+            Msg::Contribute {
+                axis: Axis::Y,
+                seq: 7,
+                kind: CollKind::Reduce(Precision::Fp32),
+                data: vec![1.5, -2.25, 0.0],
+            },
+            Msg::Contribute { axis: Axis::Dp, seq: 0, kind: CollKind::Gather, data: vec![9.0] },
+            Msg::ReduceResult { axis: Axis::X, seq: 2, data: vec![4.0; 5] },
+            Msg::GatherResult {
+                axis: Axis::Z,
+                seq: 1,
+                parts: vec![vec![1.0], vec![], vec![2.0, 3.0]],
+            },
+            Msg::Barrier { axis: Axis::X, bseq: 11 },
+            Msg::BarrierRelease { axis: Axis::X, bseq: 11 },
+            Msg::Poison {
+                err: CommError::new(2, 5, "all_reduce", Axis::Y, "length mismatch".into()),
+            },
+            Msg::Ping,
+            Msg::Bye,
+        ];
+        for m in msgs {
+            assert_eq!(round_trip(m.clone()), m, "frame failed to round-trip");
+        }
+    }
+
+    #[test]
+    fn bf16_contributions_round_trip_losslessly_at_half_width() {
+        let vals: Vec<f32> = vec![1.0009765625, -3.75, 0.0, 1e-30, 6.5e4]
+            .into_iter()
+            .map(crate::util::bf16_round)
+            .collect();
+        let msg = Msg::Contribute {
+            axis: Axis::X,
+            seq: 0,
+            kind: CollKind::Reduce(Precision::Bf16),
+            data: vals.clone(),
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let fp32 = {
+            let mut b = Vec::new();
+            write_msg(
+                &mut b,
+                &Msg::Contribute {
+                    axis: Axis::X,
+                    seq: 0,
+                    kind: CollKind::Reduce(Precision::Fp32),
+                    data: vals.clone(),
+                },
+            )
+            .unwrap();
+            b.len()
+        };
+        assert_eq!(fp32 - buf.len(), vals.len() * 2, "bf16 frames ship 2 bytes/elem");
+        match read_msg(&mut &buf[..]).unwrap() {
+            Msg::Contribute { data, .. } => {
+                for (a, b) in data.iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bf16 wire transit must be lossless");
+                }
+            }
+            m => panic!("decoded {m:?}"),
+        }
+    }
+
+    #[test]
+    fn poison_op_names_survive_the_wire() {
+        for op in ["all_reduce", "all_gather", "injected-fault", "rank-death", "protocol"] {
+            let m = round_trip(Msg::Poison {
+                err: CommError::new(1, 2, op, Axis::Dp, "why".into()),
+            });
+            match m {
+                Msg::Poison { err } => assert_eq!(err.op, op),
+                m => panic!("decoded {m:?}"),
+            }
+        }
+    }
+}

@@ -44,6 +44,46 @@ pub enum Axis {
     Dp,
 }
 
+impl Axis {
+    /// All four axes in canonical (indexing / wire) order.
+    pub const ALL: [Axis; 4] = [Axis::X, Axis::Y, Axis::Z, Axis::Dp];
+
+    /// Dense index of this axis (X=0, Y=1, Z=2, Dp=3) — the order used by
+    /// per-axis arrays throughout `comm` and `pmm`.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Single-byte wire code of this axis (same value as [`Axis::index`];
+    /// decode with [`Axis::from_code`]).
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Axis::code`]; `None` for an unknown byte (a malformed
+    /// frame, surfaced as a decode error rather than a panic).
+    pub fn from_code(c: u8) -> Option<Axis> {
+        match c {
+            0 => Some(Axis::X),
+            1 => Some(Axis::Y),
+            2 => Some(Axis::Z),
+            3 => Some(Axis::Dp),
+            _ => None,
+        }
+    }
+
+    /// Lowercase report tag ("x", "y", "z", "dp") used by `RunReport`
+    /// axis stats and failure records.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Axis::X => "x",
+            Axis::Y => "y",
+            Axis::Z => "z",
+            Axis::Dp => "dp",
+        }
+    }
+}
+
 impl Grid4D {
     /// Grid of `gd` DP groups, each a `gx x gy x gz` PMM block (all > 0).
     pub fn new(gd: usize, gx: usize, gy: usize, gz: usize) -> Grid4D {
@@ -233,6 +273,16 @@ mod tests {
         assert_eq!(Grid4D::parse("4x2x2x1"), Some(Grid4D::new(4, 2, 2, 1)));
         assert_eq!(Grid4D::parse("2x2"), None);
         assert_eq!(Grid4D::parse("axb"), None);
+    }
+
+    #[test]
+    fn axis_codes_round_trip() {
+        for a in Axis::ALL {
+            assert_eq!(Axis::from_code(a.code()), Some(a));
+            assert_eq!(a.index(), a.code() as usize);
+        }
+        assert_eq!(Axis::from_code(4), None);
+        assert_eq!(Axis::Dp.tag(), "dp");
     }
 
     #[test]

@@ -41,7 +41,7 @@ use scalegnn::graph::{datasets, partition_2d};
 use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
 use scalegnn::session::{
     self, BackendKind, CheckpointPolicy, FaultSpec, GridSpec, JsonlObserver, LogObserver,
-    ModelSpec, RunReport, RunSpec, StepObserver,
+    ModelSpec, RunReport, RunSpec, StepObserver, TransportSpec,
 };
 use scalegnn::sim;
 use scalegnn::util::cli::Args;
@@ -118,6 +118,13 @@ pmm-train also accepts --kill-rank R --kill-step S: a deterministic fault
 injection the supervisor must recover from by re-forming the world and
 replaying from the last checkpoint.
 
+Multi-process worlds: run and pmm-train accept --transport tcp:HOST:PORT |
+unix:PATH --rank R to join a world assembled by `scalegnn-coord --grid G
+(--tcp HOST:PORT | --unix PATH)` — one OS process per rank, same chunked
+sequence-matched collectives over length-prefixed CRC-checked frames,
+bitwise identical to the in-process run (see EXPERIMENTS.md for the
+launch recipe).
+
 Run `cargo bench` to regenerate every paper table/figure.
 ";
 
@@ -130,6 +137,22 @@ fn apply_checkpoint_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
         spec.checkpoint = Some(CheckpointPolicy::new(dir, every, keep));
     }
     spec.resume = args.flag("resume");
+    Ok(())
+}
+
+/// Map `--transport inproc|tcp:HOST:PORT|unix:PATH` and `--rank R` onto
+/// the spec's transport section.  The same spec file can be shared by
+/// every rank process, with `--rank` supplying the per-process member.
+fn apply_transport_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
+    if let Some(t) = args.str_opt("transport") {
+        spec.transport = TransportSpec::parse(&t).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(r) = args.get::<usize>("rank").map_err(|e| anyhow!(e))? {
+        if !matches!(spec.transport, TransportSpec::Socket { .. }) {
+            bail!("--rank only applies to socket transports (give --transport tcp:… or unix:…)");
+        }
+        *spec = spec.clone().with_rank(r);
+    }
     Ok(())
 }
 
@@ -189,7 +212,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
-        &["spec", "stats-json", "jsonl", "log-every"],
+        &["spec", "stats-json", "jsonl", "log-every", "transport", "rank"],
         &["quiet"],
     )
     .map_err(|e| anyhow!(e))?;
@@ -198,7 +221,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("run requires --spec FILE.json (see examples/specs/)"))?;
     let text = std::fs::read_to_string(&path)
         .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
-    let spec = RunSpec::from_json_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut spec =
+        RunSpec::from_json_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    apply_transport_flags(args, &mut spec)?;
     let mut obs: Vec<Box<dyn StepObserver>> = Vec::new();
     if !args.flag("quiet") {
         let every = args.get_or("log-every", 1u64).map_err(|e| anyhow!(e))?;
@@ -419,7 +444,7 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         &[
             "dataset", "grid", "steps", "lr", "seed", "batch", "d-h", "layers", "dropout",
             "overlap", "stats-json", "checkpoint-dir", "checkpoint-every", "checkpoint-keep",
-            "kill-rank", "kill-step",
+            "kill-rank", "kill-step", "transport", "rank",
         ],
         &["bf16", "resume", "verbose", "v"],
     )
@@ -448,10 +473,12 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         (None, None) => {}
         _ => bail!("--kill-rank and --kill-step must be given together"),
     }
+    apply_transport_flags(args, &mut spec)?;
     println!(
-        "4D PMM training {dataset} on grid {} ({} rank threads), {:?}, overlap={}",
+        "4D PMM training {dataset} on grid {} ({} ranks, {}), {:?}, overlap={}",
         spec.grid.to_string(),
         spec.grid.world_size(),
+        spec.transport.endpoint_tag(),
         spec.precision,
         if spec.overlap { "on" } else { "off" }
     );

@@ -756,6 +756,9 @@ impl<'a> PmmGcn<'a> {
     /// One 4D training step: Algorithm 1/2 sampling, 3D PMM forward +
     /// backward, DP gradient all-reduce, rank-local Adam.
     pub fn train_step(&mut self, step: u64, lr: f32) -> PmmStepOutput {
+        // fail fast with the recorded origin if a peer died since the
+        // last step (otherwise a rank only notices at its next wait)
+        self.ctx.check_world();
         let dims = self.dims;
         let (logits, caches, sample, f_last, x_in) = self.forward_sampled(step, true);
 

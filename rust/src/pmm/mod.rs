@@ -188,6 +188,18 @@ impl<'a> PmmCtx<'a> {
         std::mem::take(&mut self.timers.borrow_mut())
     }
 
+    /// Die with the recorded failure origin if any of this rank's groups
+    /// was poisoned.  The engine calls this at every step boundary so a
+    /// rank whose next collective is several phases away still learns of
+    /// a dead peer promptly — essential over the socket transports, where
+    /// a poisoned world otherwise only surfaces at the next wire
+    /// round-trip.
+    pub fn check_world(&self) {
+        if let Some(err) = self.world.poison_of(self.rank) {
+            std::panic::panic_any(err);
+        }
+    }
+
     fn time<T>(&self, f: impl FnOnce() -> T, pick: impl FnOnce(&mut PmmTimers) -> &mut f64) -> T {
         let t0 = std::time::Instant::now();
         let r = f();

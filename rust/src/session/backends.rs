@@ -32,7 +32,7 @@ use super::report::{
     breakdown_json, AxisStats, FailureReport, PmmRunReport, RunReport, SimPoint, SimRunReport,
     StepReport,
 };
-use super::spec::{BackendKind, DataSource, FaultSpec, RunSpec};
+use super::spec::{BackendKind, DataSource, FaultSpec, RunSpec, TransportSpec};
 
 /// How many times the PMM supervisor will re-form the world and replay
 /// from the last checkpoint before declaring the run unrecoverable.
@@ -374,6 +374,97 @@ fn pmm_resume_point(cfg: &PmmRunCfg) -> Result<(u64, Vec<Option<Snapshot>>)> {
     Ok((step, snaps))
 }
 
+/// One rank's training body, `start..cfg.steps` — shared verbatim by the
+/// in-process thread-per-rank world and the one-rank-per-process socket
+/// world, so the two transports execute the identical step/checkpoint/
+/// kill logic (the basis of the bitwise-identity guarantee).
+fn run_pmm_rank(
+    cfg: &PmmRunCfg,
+    world: &CommWorld,
+    r: usize,
+    tx: Option<&Sender<StepEvent>>,
+    start: u64,
+    snap: Option<&Snapshot>,
+    kill: Option<(usize, u64)>,
+) -> Result<PmmRankOut> {
+    let hash = pmm_spec_hash(cfg, r);
+    let ckpt = cfg
+        .ckpt
+        .as_ref()
+        .map(|p| CheckpointManager::new(p.clone(), &format!("pmm-r{r}")));
+    let ctx = PmmCtx::new(cfg.grid, r, world, cfg.prec);
+    let mut eng = PmmGcn::new(ctx, cfg.dims, cfg.batch, cfg.data.clone(), cfg.seed);
+    eng.set_overlap(cfg.overlap);
+    if let Some(snap) = snap {
+        eng.restore_state(&snap.tensors, &snap.m, &snap.v, snap.t)?;
+    }
+    let mut last = (0.0f32, 0.0f32);
+    for s in start..cfg.steps {
+        if let Some((kr, ks)) = kill {
+            if r == kr && s == ks {
+                // dies before issuing any step-s collective, so
+                // no peer can reach a later save barrier (they
+                // all stall inside step s's poisoned waits)
+                world.fail(r, &format!("scripted fault: kill rank {kr} at step {ks}"));
+            }
+        }
+        let t0 = Instant::now();
+        let o = eng.train_step(s, cfg.lr);
+        last = (o.loss, o.acc);
+        if let Some(tx) = tx {
+            let _ = tx.send(StepEvent {
+                step: s,
+                loss: o.loss,
+                acc: o.acc,
+                wall_s: t0.elapsed().as_secs_f64(),
+                eval: None,
+                truncated: 0,
+                done: s + 1 == cfg.steps,
+            });
+        }
+        if let Some(mgr) = &ckpt {
+            if mgr.should_save(s) {
+                // shard-consistent save: every rank finishes
+                // step s (all collectives drained) before any
+                // shard is written, so the per-rank snapshot
+                // set forms one world-wide state
+                for ax in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
+                    world.barrier(r, ax);
+                }
+                let (tensors, m, v, t) = eng.export_state();
+                mgr.save(&Snapshot::from_flat(s + 1, cfg.seed, hash, tensors, m, v, t))?;
+            }
+        }
+    }
+    let eval = cfg.final_eval.then(|| eng.eval_full_graph());
+    Ok((eng.timers, last, eval))
+}
+
+/// Run `f` under `catch_unwind`, classifying any unwind into a
+/// structured [`RankFailure`]: a poisoned collective's `CommError`
+/// payload is carried through unchanged (preserving the *origin*
+/// rank/seq/op/axis), everything else becomes `Other`.
+fn catch_rank<F>(r: usize, f: F) -> Result<PmmRankOut, RankFailure>
+where
+    F: FnOnce() -> Result<PmmRankOut>,
+{
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(RankFailure::Other(r, format!("{e:#}"))),
+        Err(payload) => Err(match payload.downcast_ref::<CommError>() {
+            Some(ce) => RankFailure::Comm(ce.clone()),
+            None => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                RankFailure::Other(r, msg)
+            }
+        }),
+    }
+}
+
 /// Spawn one thread per rank, running `start..cfg.steps`.  Each body runs
 /// under `catch_unwind` so a poisoned collective (or any panic) joins as
 /// a structured [`RankFailure`] instead of an opaque unwind; `kill` arms
@@ -389,81 +480,11 @@ fn spawn_pmm_ranks(
     let mut handles = Vec::with_capacity(cfg.grid.world_size());
     for r in 0..cfg.grid.world_size() {
         let w = world.clone();
-        let d = cfg.data.clone();
+        let cfg = cfg.clone();
         let tx = if r == 0 { Some(tx.clone()) } else { None };
-        let (grid, dims, batch) = (cfg.grid, cfg.dims, cfg.batch);
-        let (steps, lr, seed) = (cfg.steps, cfg.lr, cfg.seed);
-        let (prec, overlap, final_eval) = (cfg.prec, cfg.overlap, cfg.final_eval);
-        let hash = pmm_spec_hash(cfg, r);
-        let ckpt = cfg
-            .ckpt
-            .as_ref()
-            .map(|p| CheckpointManager::new(p.clone(), &format!("pmm-r{r}")));
         let snap = snaps[r].take();
-        handles.push(std::thread::spawn(move || -> Result<PmmRankOut, RankFailure> {
-            let out = catch_unwind(AssertUnwindSafe(|| -> Result<PmmRankOut> {
-                let ctx = PmmCtx::new(grid, r, &w, prec);
-                let mut eng = PmmGcn::new(ctx, dims, batch, d, seed);
-                eng.set_overlap(overlap);
-                if let Some(snap) = &snap {
-                    eng.restore_state(&snap.tensors, &snap.m, &snap.v, snap.t)?;
-                }
-                let mut last = (0.0f32, 0.0f32);
-                for s in start..steps {
-                    if let Some((kr, ks)) = kill {
-                        if r == kr && s == ks {
-                            // dies before issuing any step-s collective, so
-                            // no peer can reach a later save barrier (they
-                            // all stall inside step s's poisoned waits)
-                            w.fail(r, &format!("scripted fault: kill rank {kr} at step {ks}"));
-                        }
-                    }
-                    let t0 = Instant::now();
-                    let o = eng.train_step(s, lr);
-                    last = (o.loss, o.acc);
-                    if let Some(tx) = &tx {
-                        let _ = tx.send(StepEvent {
-                            step: s,
-                            loss: o.loss,
-                            acc: o.acc,
-                            wall_s: t0.elapsed().as_secs_f64(),
-                            eval: None,
-                            truncated: 0,
-                            done: s + 1 == steps,
-                        });
-                    }
-                    if let Some(mgr) = &ckpt {
-                        if mgr.should_save(s) {
-                            // shard-consistent save: every rank finishes
-                            // step s (all collectives drained) before any
-                            // shard is written, so the per-rank snapshot
-                            // set forms one world-wide state
-                            for ax in [Axis::X, Axis::Y, Axis::Z, Axis::Dp] {
-                                w.barrier(r, ax);
-                            }
-                            let (tensors, m, v, t) = eng.export_state();
-                            mgr.save(&Snapshot::from_flat(s + 1, seed, hash, tensors, m, v, t))?;
-                        }
-                    }
-                }
-                let eval = final_eval.then(|| eng.eval_full_graph());
-                Ok((eng.timers, last, eval))
-            }));
-            match out {
-                Ok(Ok(v)) => Ok(v),
-                Ok(Err(e)) => Err(RankFailure::Other(r, format!("{e:#}"))),
-                Err(payload) => Err(match payload.downcast_ref::<CommError>() {
-                    Some(ce) => RankFailure::Comm(ce.clone()),
-                    None => {
-                        let msg = payload
-                            .downcast_ref::<&str>()
-                            .map(|s| (*s).to_string())
-                            .or_else(|| payload.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "opaque panic payload".to_string());
-                        RankFailure::Other(r, msg)
-                    }
-                }),
-            }
+        handles.push(std::thread::spawn(move || {
+            catch_rank(r, || run_pmm_rank(&cfg, &w, r, tx.as_ref(), start, snap.as_ref(), kill))
         }));
     }
     handles
@@ -539,6 +560,32 @@ impl Backend for PmmBackend {
                  (raise 'steps' to continue training)",
                 cfg.steps
             );
+        }
+        if let TransportSpec::Socket { endpoint, rank } = &spec.transport {
+            let rank = rank.ok_or_else(|| {
+                anyhow!(
+                    "socket transport needs the rank this process runs \
+                     (--rank R or transport.rank in the spec)"
+                )
+            })?;
+            let mut snaps = snaps;
+            let snap = snaps[rank].take();
+            let world = Arc::new(CommWorld::connect(grid, rank, endpoint)?);
+            let (tx, rx) = channel();
+            let (w, cfg2) = (world.clone(), cfg.clone());
+            let handle = std::thread::spawn(move || {
+                catch_rank(rank, || {
+                    run_pmm_rank(&cfg2, &w, rank, Some(&tx), start, snap.as_ref(), kill)
+                })
+            });
+            return Ok(Box::new(SocketPmmSession {
+                rx,
+                handle: Some(handle),
+                world,
+                rank,
+                steps: cfg.steps,
+                loss_curve: Vec::new(),
+            }));
         }
         let world = Arc::new(CommWorld::new(grid));
         let (tx, rx) = channel();
@@ -694,21 +741,8 @@ impl Session for PmmSession {
             reshard: timers.reshard / n,
             other: timers.other / n,
         };
-        let axes = [(Axis::X, "x"), (Axis::Y, "y"), (Axis::Z, "z"), (Axis::Dp, "dp")]
-            .into_iter()
-            .map(|(ax, name)| {
-                let (ops, bytes) = this.world.stats(ax);
-                let (comm_s, blocked_s) = this.world.timing(ax);
-                AxisStats {
-                    axis: name,
-                    ops,
-                    bytes,
-                    comm_s,
-                    blocked_s,
-                    hidden_frac: this.world.hidden_fraction(ax),
-                }
-            })
-            .collect();
+        let axes = axis_stats_checked(&this.world, 0)
+            .map_err(|e| anyhow!("pmm world poisoned at finish: {e}"))?;
         Ok(RunReport {
             backend: Some(BackendKind::Pmm),
             steps: this.loss_curve.len() as u64,
@@ -719,6 +753,122 @@ impl Session for PmmSession {
             pmm: Some(PmmRunReport {
                 final_acc: last.1,
                 timers_mean,
+                axes,
+                tp_hidden_frac: this.world.tp_hidden_fraction(),
+                eval,
+            }),
+            ..RunReport::default()
+        })
+    }
+}
+
+/// Per-axis traffic/timing snapshot for the final report, read through
+/// the *checked* queries: a poisoned world answers with its failure
+/// origin instead of misleading half-recorded numbers.
+fn axis_stats_checked(world: &CommWorld, rank: usize) -> Result<Vec<AxisStats>, CommError> {
+    [(Axis::X, "x"), (Axis::Y, "y"), (Axis::Z, "z"), (Axis::Dp, "dp")]
+        .into_iter()
+        .map(|(ax, name)| {
+            let (ops, bytes) = world.stats_checked(rank, ax)?;
+            let (comm_s, blocked_s) = world.timing_checked(rank, ax)?;
+            Ok(AxisStats {
+                axis: name,
+                ops,
+                bytes,
+                comm_s,
+                blocked_s,
+                hidden_frac: world.hidden_fraction_checked(rank, ax)?,
+            })
+        })
+        .collect()
+}
+
+/// One rank of a multi-process PMM world, attached to a coordinator over
+/// a [`TransportSpec::Socket`] endpoint.  Unlike the in-process
+/// [`PmmSession`] there is no elastic restart here — a socket world
+/// cannot be re-formed from inside one member process, so a failure
+/// surfaces as a structured error naming the origin and the run is
+/// relaunched (optionally with `resume` from the shared checkpoint dir).
+struct SocketPmmSession {
+    rx: Receiver<StepEvent>,
+    handle: Option<JoinHandle<Result<PmmRankOut, RankFailure>>>,
+    world: Arc<CommWorld>,
+    rank: usize,
+    steps: u64,
+    loss_curve: Vec<(u64, f32)>,
+}
+
+impl SocketPmmSession {
+    /// Join the worker after its event channel closed early and convert
+    /// whatever it died of into the structured error this process exits
+    /// with (the coordinator separately reports the same origin).
+    fn rank_error(&mut self) -> anyhow::Error {
+        match self.handle.take().map(JoinHandle::join) {
+            Some(Ok(Ok(_))) => {
+                anyhow!("pmm rank {} ended without a final step event", self.rank)
+            }
+            Some(Ok(Err(RankFailure::Comm(e)))) => anyhow!(
+                "pmm rank {} died in {} (seq {}, axis {:?}): {} \
+                 (relaunch the coordinator and all ranks, with --resume to \
+                 replay from the shared checkpoint dir)",
+                e.rank,
+                e.op,
+                e.seq,
+                e.axis,
+                e.msg
+            ),
+            Some(Ok(Err(RankFailure::Other(r, m)))) => anyhow!("pmm rank {r} failed: {m}"),
+            Some(Err(_)) => anyhow!("pmm rank thread panicked outside the harness"),
+            None => anyhow!("pmm rank worker already joined"),
+        }
+    }
+}
+
+impl Session for SocketPmmSession {
+    fn step(&mut self) -> Result<Option<StepReport>> {
+        if self.steps == 0 {
+            return Ok(None);
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                self.loss_curve.push((ev.step, ev.loss));
+                Ok(Some(event_report(ev)))
+            }
+            Err(_) => Err(self.rank_error()),
+        }
+    }
+
+    fn finish(self: Box<Self>) -> Result<RunReport> {
+        let mut this = *self;
+        let (timers, last, eval) = match this.handle.take() {
+            Some(h) => match h.join() {
+                Ok(Ok(v)) => v,
+                Ok(Err(RankFailure::Comm(e))) => bail!(
+                    "pmm rank {} died in {} (seq {}, axis {:?}): {}",
+                    e.rank,
+                    e.op,
+                    e.seq,
+                    e.axis,
+                    e.msg
+                ),
+                Ok(Err(RankFailure::Other(r, m))) => bail!("pmm rank {r} failed: {m}"),
+                Err(_) => bail!("pmm rank thread panicked outside the harness"),
+            },
+            None => bail!("pmm rank worker already joined"),
+        };
+        // single-rank report: timers are this rank's own (no cross-rank
+        // mean is possible from inside one process), and the loss curve
+        // is this rank's stream — rank 0's matches the in-process run
+        let axes = axis_stats_checked(&this.world, this.rank)
+            .map_err(|e| anyhow!("pmm world poisoned at finish: {e}"))?;
+        Ok(RunReport {
+            backend: Some(BackendKind::Pmm),
+            steps: this.loss_curve.len() as u64,
+            final_loss: last.0,
+            loss_curve: this.loss_curve,
+            pmm: Some(PmmRunReport {
+                final_acc: last.1,
+                timers_mean: timers,
                 axes,
                 tp_hidden_frac: this.world.tp_hidden_fraction(),
                 eval,

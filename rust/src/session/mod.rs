@@ -32,7 +32,7 @@ pub use report::{
 };
 pub use spec::{
     sampler_tag, BackendKind, DataSource, FaultSpec, GridSpec, ModelSpec, RunSpec, SimSpec,
-    SpecError, MAX_RANK_THREADS,
+    SpecError, TransportSpec, MAX_RANK_THREADS,
 };
 
 pub use crate::checkpoint::CheckpointPolicy;

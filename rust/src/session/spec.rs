@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 
 use crate::checkpoint::CheckpointPolicy;
-use crate::comm::Precision;
+use crate::comm::{Endpoint, Precision};
 use crate::graph::datasets;
 use crate::grid::Grid4D;
 use crate::sampling::SamplerKind;
@@ -170,6 +170,50 @@ pub struct SimSpec {
     pub gd_sweep: Vec<usize>,
 }
 
+/// How the ranks of a PMM run communicate (the comm transport behind
+/// `CommWorld`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// Rank threads of this process over shared-memory op slots (the
+    /// default; every rank of the grid runs in-process).
+    InProc,
+    /// This process runs **one** rank; collectives travel as wire frames
+    /// to a `scalegnn-coord` coordinator.  The same spec file is shared
+    /// by every rank process — only `rank` differs per process (usually
+    /// supplied as a per-process `--rank` override rather than baked into
+    /// the file).
+    Socket {
+        /// The coordinator endpoint every rank connects to.
+        endpoint: Endpoint,
+        /// Which rank this process runs; `None` in a shared spec file
+        /// (each launch must then supply it) — rejected at prepare time,
+        /// not by `validate`, so one spec artifact serves all ranks.
+        rank: Option<usize>,
+    },
+}
+
+impl TransportSpec {
+    /// Parse `"inproc"`, `"tcp:HOST:PORT"` or `"unix:PATH"` (socket forms
+    /// leave `rank` unset for a per-process override).
+    pub fn parse(s: &str) -> Result<TransportSpec, String> {
+        if s == "inproc" {
+            return Ok(TransportSpec::InProc);
+        }
+        let endpoint = Endpoint::parse(s)
+            .map_err(|e| format!("bad transport '{s}': {e} (or use 'inproc')"))?;
+        Ok(TransportSpec::Socket { endpoint, rank: None })
+    }
+
+    /// The endpoint string (`"inproc"`, `"tcp:…"`, `"unix:…"`) without
+    /// the rank.
+    pub fn endpoint_tag(&self) -> String {
+        match self {
+            TransportSpec::InProc => "inproc".to_string(),
+            TransportSpec::Socket { endpoint, .. } => endpoint.to_string(),
+        }
+    }
+}
+
 /// A deterministic fault the session layer injects to drive the
 /// crash-recovery path end to end.  Faults require a `checkpoint`
 /// section: recovery replays from the newest common snapshot.
@@ -260,6 +304,9 @@ pub enum SpecError {
     BadCheckpoint(&'static str),
     /// The `fault` section is malformed or not executable on this spec.
     BadFault(&'static str),
+    /// The `transport` section is malformed or not executable on this
+    /// spec.
+    BadTransport(&'static str),
 }
 
 impl std::fmt::Display for SpecError {
@@ -341,6 +388,7 @@ impl std::fmt::Display for SpecError {
             SpecError::BadLr(lr) => write!(f, "lr must be finite and positive, got {lr}"),
             SpecError::BadCheckpoint(why) => write!(f, "bad checkpoint section: {why}"),
             SpecError::BadFault(why) => write!(f, "bad fault section: {why}"),
+            SpecError::BadTransport(why) => write!(f, "bad transport section: {why}"),
         }
     }
 }
@@ -402,6 +450,9 @@ pub struct RunSpec {
     pub resume: bool,
     /// Deterministic fault injection for the crash-recovery tests.
     pub fault: Option<FaultSpec>,
+    /// Comm transport of the PMM ranks (in-process rank threads vs one
+    /// rank per OS process over a socket).
+    pub transport: TransportSpec,
     /// Simulator section (`backend == Sim` only).
     pub sim: Option<SimSpec>,
 }
@@ -433,6 +484,7 @@ impl RunSpec {
             checkpoint: None,
             resume: false,
             fault: None,
+            transport: TransportSpec::InProc,
             sim: None,
         }
     }
@@ -555,6 +607,21 @@ impl RunSpec {
     /// Inject a deterministic fault (drives the crash-recovery tests).
     pub fn fault(mut self, fault: FaultSpec) -> Self {
         self.fault = Some(fault);
+        self
+    }
+
+    /// Set the comm transport (PMM backend; default [`TransportSpec::InProc`]).
+    pub fn transport(mut self, t: TransportSpec) -> Self {
+        self.transport = t;
+        self
+    }
+
+    /// Set which rank this process runs on a socket transport (no-op on
+    /// `InProc`, which runs every rank).
+    pub fn with_rank(mut self, r: usize) -> Self {
+        if let TransportSpec::Socket { rank, .. } = &mut self.transport {
+            *rank = Some(r);
+        }
         self
     }
 
@@ -791,6 +858,27 @@ impl RunSpec {
                 }
             }
         }
+        if let TransportSpec::Socket { rank, .. } = &self.transport {
+            if self.backend != BackendKind::Pmm {
+                errs.push(SpecError::BadTransport(
+                    "socket transports only run on the pmm backend",
+                ));
+            }
+            if let Some(r) = rank {
+                if *r >= g.world_size() {
+                    errs.push(SpecError::BadTransport(
+                        "transport.rank must be below the grid's world size",
+                    ));
+                }
+            }
+            // every rank process would mangle the shared snapshot dir
+            // once; these faults only make sense in-process
+            if matches!(self.fault, Some(FaultSpec::CorruptNewest | FaultSpec::TruncateNewest)) {
+                errs.push(SpecError::BadTransport(
+                    "corrupt/truncate faults run in-process only (each rank process would mutate the shared snapshot dir)",
+                ));
+            }
+        }
         match (&self.sim, self.backend) {
             (Some(s), BackendKind::Sim) => {
                 if sim::by_name(&s.machine).is_none() {
@@ -913,6 +1001,16 @@ impl RunSpec {
                     }
                 },
             ),
+            (
+                "transport",
+                match &self.transport {
+                    TransportSpec::InProc => Json::Null,
+                    TransportSpec::Socket { endpoint, rank } => obj(vec![
+                        ("endpoint", Json::from(endpoint.to_string().as_str())),
+                        ("rank", rank.map(Json::from).unwrap_or(Json::Null)),
+                    ]),
+                },
+            ),
             ("sim", sim),
         ])
     }
@@ -926,11 +1024,11 @@ impl RunSpec {
     /// messages that name the field.
     pub fn from_json(j: &Json) -> Result<RunSpec, String> {
         let o = j.as_obj().ok_or("spec must be a JSON object")?;
-        const KNOWN: [&str; 23] = [
+        const KNOWN: [&str; 24] = [
             "backend", "dataset", "source", "sampler", "model", "grid", "precision", "overlap",
             "prefetch", "steps", "epochs", "batch", "lr", "seed", "target_acc",
             "eval_every_epochs", "cache_mb", "artifacts", "final_eval", "checkpoint", "resume",
-            "fault", "sim",
+            "fault", "transport", "sim",
         ];
         for k in o.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -1113,6 +1211,32 @@ impl RunSpec {
                 });
             }
         }
+        match j.get("transport") {
+            None | Some(Json::Null) => {}
+            // string shorthand: "inproc", "tcp:HOST:PORT", "unix:PATH"
+            Some(Json::Str(s)) => spec.transport = TransportSpec::parse(s)?,
+            Some(t) => {
+                check_obj_keys(t, "transport", &["endpoint", "rank"])?;
+                let ep = t
+                    .get("endpoint")
+                    .and_then(Json::as_str)
+                    .ok_or("transport.endpoint must be \"inproc\", \"tcp:HOST:PORT\" or \"unix:PATH\"")?;
+                let mut tr = TransportSpec::parse(ep)?;
+                match t.get("rank") {
+                    None | Some(Json::Null) => {}
+                    Some(v) => {
+                        let r = v.as_f64().ok_or("transport.rank must be a number or null")?;
+                        if matches!(tr, TransportSpec::InProc) {
+                            return Err(
+                                "transport.rank only applies to socket transports".to_string()
+                            );
+                        }
+                        tr = tr_with_rank(tr, r as usize);
+                    }
+                }
+                spec.transport = tr;
+            }
+        }
         match j.get("sim") {
             None | Some(Json::Null) => {}
             Some(s) => {
@@ -1149,6 +1273,15 @@ impl RunSpec {
     /// Parse a spec from JSON text.
     pub fn from_json_str(s: &str) -> Result<RunSpec, String> {
         RunSpec::from_json(&Json::parse(s)?)
+    }
+}
+
+fn tr_with_rank(t: TransportSpec, r: usize) -> TransportSpec {
+    match t {
+        TransportSpec::Socket { endpoint, .. } => {
+            TransportSpec::Socket { endpoint, rank: Some(r) }
+        }
+        t => t,
     }
 }
 

@@ -1,13 +1,19 @@
-//! Integration tests of the §V-D nonblocking chunked collective engine:
-//! concurrent in-flight ops across axes, byte accounting under chunking,
-//! the mismatch handshake (clean error, not a deadlock), and bitwise
-//! equality of overlap-on vs overlap-off training trajectories.
+//! Integration tests of §V-D communication overlap at the *engine*
+//! level: bitwise equality of overlap-on vs overlap-off training
+//! trajectories, and bitwise determinism across repeated runs.
+//!
+//! The collective-engine contracts that used to live here (concurrent
+//! in-flight ops, byte accounting under chunking, the mismatch
+//! handshake and its poison cascade) moved into the backend-
+//! parameterized battery in `tests/transport_conformance.rs`, which
+//! runs them against the in-process, Unix-socket and TCP transports
+//! alike.
 
 use std::sync::Arc;
 
 use scalegnn::comm::{CommWorld, Precision};
 use scalegnn::graph::datasets;
-use scalegnn::grid::{Axis, Grid4D};
+use scalegnn::grid::Grid4D;
 use scalegnn::model::GcnDims;
 use scalegnn::pmm::{PmmCtx, PmmGcn};
 use scalegnn::tensor::Mat;
@@ -73,164 +79,5 @@ fn repeated_overlap_runs_are_bitwise_deterministic() {
         for (ma, mb) in pa.iter().zip(pb) {
             assert_eq!(ma.data, mb.data);
         }
-    }
-}
-
-#[test]
-fn concurrent_issue_stress_across_axes() {
-    // many in-flight PendingOps per rank, spread over all four axes, with
-    // tiny chunks so every op is multi-chunk; waits happen out of issue
-    // order within an axis
-    let grid = Grid4D::new(2, 2, 2, 1);
-    let world = Arc::new(CommWorld::with_chunk_elems(grid, 16));
-    let mut hs = vec![];
-    for rank in 0..grid.world_size() {
-        let w = world.clone();
-        hs.push(std::thread::spawn(move || {
-            let g = w.grid;
-            let sum_of = |axis: Axis, f: &dyn Fn(usize) -> f32| -> f32 {
-                g.group_ranks(rank, axis).into_iter().map(f).sum()
-            };
-            for round in 0..25u32 {
-                let rb = round as f32;
-                let vx = vec![rank as f32 + rb; 100];
-                let vy = vec![2.0 * rank as f32 - rb; 37];
-                let vd = vec![0.5 * rank as f32 + 3.0; 64];
-                let px = w.issue_all_reduce(rank, Axis::X, &vx, Precision::Fp32);
-                let py = w.issue_all_reduce(rank, Axis::Y, &vy, Precision::Fp32);
-                let pg = w.issue_all_gather(rank, Axis::Y, &[rank as f32]);
-                let pd = w.issue_all_reduce(rank, Axis::Dp, &vd, Precision::Fp32);
-                // a second X op while the first is still in flight
-                let vx2 = vec![1.0; 10];
-                let px2 = w.issue_all_reduce(rank, Axis::X, &vx2, Precision::Fp32);
-                w.progress(rank);
-
-                let mut ox2 = vec![0.0; 10];
-                px2.wait_into(&mut ox2); // out of issue order on X
-                let mut ox = vec![0.0; 100];
-                px.wait_into(&mut ox);
-                let mut od = vec![0.0; 64];
-                pd.wait_into(&mut od);
-                let gathered = pg.wait();
-                let mut oy = vec![0.0; 37];
-                py.wait_into(&mut oy);
-
-                let want_x = sum_of(Axis::X, &|r| r as f32 + rb);
-                let want_y = sum_of(Axis::Y, &|r| 2.0 * r as f32 - rb);
-                let want_d = sum_of(Axis::Dp, &|r| 0.5 * r as f32 + 3.0);
-                assert!(ox.iter().all(|&v| v == want_x), "round {round}: X sum");
-                assert!(oy.iter().all(|&v| v == want_y), "round {round}: Y sum");
-                assert!(od.iter().all(|&v| v == want_d), "round {round}: Dp sum");
-                assert!(ox2.iter().all(|&v| v == g.axis_size(Axis::X) as f32));
-                let want_members: Vec<f32> =
-                    g.group_ranks(rank, Axis::Y).iter().map(|&r| r as f32).collect();
-                let got: Vec<f32> = gathered.into_iter().flatten().collect();
-                assert_eq!(got, want_members, "round {round}: Y gather order");
-            }
-        }));
-    }
-    for h in hs {
-        h.join().unwrap();
-    }
-}
-
-#[test]
-fn bf16_byte_accounting_is_exact_under_chunking() {
-    // payload of 10 elems with 3-elem chunks: the per-chunk accounting must
-    // still total elems * 2 bytes per contributing rank
-    let grid = Grid4D::new(1, 2, 1, 1);
-    let world = Arc::new(CommWorld::with_chunk_elems(grid, 3));
-    let mut hs = vec![];
-    for rank in 0..2 {
-        let w = world.clone();
-        hs.push(std::thread::spawn(move || {
-            let mut v: Vec<f32> = (0..10).map(|i| (rank * 10 + i) as f32).collect();
-            w.all_reduce(rank, Axis::X, &mut v, Precision::Bf16);
-            v
-        }));
-    }
-    for h in hs {
-        let v = h.join().unwrap();
-        // bf16 rounding is exact for these small integers
-        for (i, &x) in v.iter().enumerate() {
-            assert_eq!(x, (10 + 2 * i) as f32);
-        }
-    }
-    let (ops, bytes) = world.stats(Axis::X);
-    assert_eq!(ops, 2, "one op per contributing rank");
-    assert_eq!(bytes, 2 * 10 * 2, "bf16 halves the accounted payload");
-}
-
-#[test]
-fn mismatched_lengths_error_instead_of_deadlocking() {
-    // rank 0 reduces 4 elems, rank 1 reduces 8: the length handshake must
-    // poison the group so BOTH ranks fail fast with a message instead of
-    // hanging in the rendezvous
-    let grid = Grid4D::new(1, 2, 1, 1);
-    let world = Arc::new(CommWorld::new(grid));
-    let mut hs = vec![];
-    for rank in 0..2usize {
-        let w = world.clone();
-        hs.push(std::thread::spawn(move || {
-            let mut v = vec![1.0f32; if rank == 0 { 4 } else { 8 }];
-            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
-        }));
-    }
-    for h in hs {
-        assert!(h.join().is_err(), "mismatched collective must panic, not hang");
-    }
-}
-
-#[test]
-fn mismatch_poison_cascades_to_bystander_groups() {
-    // ranks 0 and 1 mismatch on their X group; ranks 2 and 3 wait on Y
-    // collectives whose peers (0 resp. 1) die — the poison must cascade
-    // through the dead ranks' other groups so the bystanders fail fast
-    // instead of waiting forever
-    let grid = Grid4D::new(1, 2, 2, 1);
-    let world = Arc::new(CommWorld::new(grid));
-    let mut hs = vec![];
-    for rank in 0..4usize {
-        let w = world.clone();
-        hs.push(std::thread::spawn(move || match rank {
-            0 => {
-                let mut v = vec![1.0f32; 4];
-                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
-            }
-            1 => {
-                let mut v = vec![1.0f32; 8]; // length mismatch vs rank 0
-                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
-            }
-            _ => {
-                // Y groups are {0,2} and {1,3}: peers never arrive
-                let mut v = vec![1.0f32; 3];
-                w.all_reduce(rank, Axis::Y, &mut v, Precision::Fp32);
-            }
-        }));
-    }
-    for (rank, h) in hs.into_iter().enumerate() {
-        assert!(h.join().is_err(), "rank {rank} must fail fast, not hang");
-    }
-}
-
-#[test]
-fn kind_mismatch_also_errors_cleanly() {
-    // same seq, one rank reduces while the other gathers
-    let grid = Grid4D::new(1, 2, 1, 1);
-    let world = Arc::new(CommWorld::new(grid));
-    let mut hs = vec![];
-    for rank in 0..2usize {
-        let w = world.clone();
-        hs.push(std::thread::spawn(move || {
-            if rank == 0 {
-                let mut v = vec![1.0f32; 4];
-                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
-            } else {
-                let _ = w.all_gather(rank, Axis::X, &[1.0, 2.0]);
-            }
-        }));
-    }
-    for h in hs {
-        assert!(h.join().is_err(), "kind mismatch must panic, not hang");
     }
 }

@@ -1,12 +1,16 @@
 //! Crash-recovery tests: interrupted-then-resumed runs are **bitwise
 //! identical** to uninterrupted ones on every training backend, a rank
 //! killed mid-run on the PMM backend recovers automatically from the last
-//! checkpoint, and a torn newest snapshot falls back to the previous
-//! valid one — end to end through the session API.
+//! checkpoint, a torn newest snapshot falls back to the previous valid
+//! one — end to end through the session API — and a *real process* death
+//! on the socket transport is reported by the coordinator and recovered
+//! by relaunching the world with `--resume`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 
 use scalegnn::session::{self, BackendKind, FaultSpec, RunSpec};
+use scalegnn::util::json::Json;
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("scalegnn_crash_{tag}_{}", std::process::id()));
@@ -215,6 +219,116 @@ fn torn_newest_snapshot_falls_back_to_previous_valid_one() {
         assert_bitwise_eq(&full.loss_curve[4..], &resumed.loss_curve, tag);
         let _ = std::fs::remove_dir_all(&dir);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-process elastic recovery over the socket transport, end to end
+// through the real binaries: a killed rank takes its whole OS process
+// down, the coordinator names the origin, and a relaunched world resumes
+// from the shared checkpoint dir onto the unfaulted curve — bitwise.
+// ---------------------------------------------------------------------------
+
+fn spawn_coord(sock: &Path) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_scalegnn-coord"))
+        .args(["--grid", "1x2x1x1", "--unix"])
+        .arg(sock)
+        .arg("--quiet")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn scalegnn-coord")
+}
+
+/// Launch one `pmm-train` rank process mirroring `pmm_spec(10, true)`,
+/// attached to the Unix-socket coordinator at `sock`.
+fn spawn_pmm_rank(rank: usize, sock: &Path, ckpt: &Path, extra: &[&str]) -> Child {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_scalegnn"));
+    c.args(["pmm-train", "--dataset", "tiny", "--grid", "1x2x1x1", "--steps", "10"])
+        .args(["--lr", "5e-3", "--seed", "42", "--d-h", "16", "--layers", "2"])
+        .args(["--dropout", "0.5"])
+        .arg("--transport")
+        .arg(format!("unix:{}", sock.display()))
+        .args(["--rank", &rank.to_string()])
+        .arg("--checkpoint-dir")
+        .arg(ckpt)
+        .args(["--checkpoint-every", "2", "--checkpoint-keep", "4"])
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    c.spawn().expect("spawn pmm-train rank")
+}
+
+/// Parse `report.loss_curve` out of a `--stats-json` file.
+fn stats_loss_curve(path: &Path) -> Vec<(u64, f32)> {
+    let text = std::fs::read_to_string(path).expect("stats json written");
+    let doc = Json::parse(&text).expect("valid stats json");
+    doc.get("report")
+        .and_then(|r| r.get("loss_curve"))
+        .and_then(Json::as_arr)
+        .expect("report.loss_curve present")
+        .iter()
+        .map(|e| {
+            let s = e.idx(0).and_then(Json::as_usize).expect("step index") as u64;
+            let l = e.idx(1).and_then(Json::as_f64).expect("loss value") as f32;
+            (s, l)
+        })
+        .collect()
+}
+
+#[test]
+fn socket_kill_rank_reports_origin_and_resumed_relaunch_matches_bitwise() {
+    let dir = tmp_dir("socket_kill");
+    let ckpt = dir.join("ckpts");
+
+    // the unfaulted reference curve, computed in-process
+    let clean = session::run_silent(&pmm_spec(10, true)).unwrap();
+    assert_eq!(clean.loss_curve.len(), 10);
+
+    // generation 1: rank 1's *process* dies at step 5.  Snapshots exist
+    // for steps 2 and 4; the step-5 fault fires before any step-5
+    // collective, so step 4 is the newest world-consistent state.
+    let sock1 = dir.join("gen1.sock");
+    let coord = spawn_coord(&sock1);
+    let kill = ["--kill-rank", "1", "--kill-step", "5"];
+    let mut r0 = spawn_pmm_rank(0, &sock1, &ckpt, &kill);
+    let mut r1 = spawn_pmm_rank(1, &sock1, &ckpt, &kill);
+    assert!(!r1.wait().expect("rank 1").success(), "the killed rank must exit nonzero");
+    assert!(!r0.wait().expect("rank 0").success(), "the surviving rank must fail too");
+    let out = coord.wait_with_output().expect("coordinator");
+    assert_eq!(out.status.code(), Some(1), "coordinator exits 1 on a failed world");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("failure origin rank 1 op injected-fault"),
+        "coordinator must name the origin, got: {stdout}"
+    );
+    assert!(stdout.contains("kill rank 1 at step 5"), "coordinator stdout: {stdout}");
+
+    // generation 2: fresh coordinator, same checkpoint dir, no fault,
+    // --resume.  The relaunched world replays from step 4 and must land
+    // on the unfaulted curve bit for bit.
+    let sock2 = dir.join("gen2.sock");
+    let stats = dir.join("stats-r0.json");
+    let coord = spawn_coord(&sock2);
+    let resume0 = ["--resume", "--stats-json", stats.to_str().unwrap()];
+    let mut r0 = spawn_pmm_rank(0, &sock2, &ckpt, &resume0);
+    let mut r1 = spawn_pmm_rank(1, &sock2, &ckpt, &["--resume"]);
+    assert!(r0.wait().expect("rank 0").success(), "resumed rank 0 must succeed");
+    assert!(r1.wait().expect("rank 1").success(), "resumed rank 1 must succeed");
+    let out = coord.wait_with_output().expect("coordinator");
+    assert!(
+        out.status.success(),
+        "recovered world must end clean, coordinator stdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    let resumed = stats_loss_curve(&stats);
+    assert_eq!(
+        resumed.first().map(|&(s, _)| s),
+        Some(4),
+        "resume must replay from the newest world-consistent snapshot"
+    );
+    assert_bitwise_eq(&clean.loss_curve[4..], &resumed, "socket kill-rank recovery");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,817 @@
+//! Transport conformance suite: one shared battery of collective-engine
+//! contracts run against every [`Transport`] backend — the in-process
+//! shared-memory engine, a Unix-domain-socket world, and a TCP-loopback
+//! world (each socket world assembled by an in-process [`Coordinator`];
+//! the multi-process tests at the bottom drive the real binaries).
+//!
+//! The battery pins, per backend:
+//!   * bitwise-deterministic group-index-ordered reductions,
+//!   * gather ordering, chunked multi-op overlap, out-of-order waits,
+//!   * byte/op accounting (incl. bf16 half-width),
+//!   * the failure contract: every mismatch / injected fault / peer
+//!     death surfaces the SAME structured `CommError` origin on every
+//!     member — an error, never a panic into the harness, never a hang,
+//!   * poisoned-world stats queries answering with the origin.
+//!
+//! Below the battery: adversarial wire-format decode tests (truncated
+//! frame, bad magic, wrong version, oversized length, CRC mismatch),
+//! live mid-payload-disconnect / garbage-server tests, coordinator
+//! registration rejection, and a multi-process bitwise-identity test
+//! (the same `RunSpec` trained over sockets across real OS processes is
+//! bitwise equal to the in-process threaded run).
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use scalegnn::checkpoint::crc32;
+use scalegnn::comm::wire::{self, Msg, WireError, MAX_FRAME_PAYLOAD, WIRE_MAGIC};
+use scalegnn::comm::{CommError, CommWorld, CoordConfig, Coordinator, Endpoint, Precision};
+use scalegnn::grid::{Axis, Grid4D};
+use scalegnn::session::{run_silent, BackendKind, RunSpec};
+use scalegnn::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Backend-parameterized harness
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BackendSel {
+    InProc,
+    Uds,
+    Tcp,
+}
+
+fn uds_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sgnn-{}-{tag}.sock", std::process::id()))
+}
+
+/// Outcome of running one closure per rank over a backend: per-rank join
+/// results, per-rank world handles (for stats / poison assertions), and
+/// — for socket backends — the coordinator's join handle.
+///
+/// Make every world/stat assertion BEFORE calling [`WorldRun::finish`]:
+/// finish drops the worlds (closing their connections so the coordinator
+/// can exit) and returns the coordinator's verdict.
+struct WorldRun {
+    /// In-process worlds share one counter set; socket worlds count per
+    /// rank.
+    shared: bool,
+    worlds: Vec<Arc<CommWorld>>,
+    results: Vec<std::thread::Result<()>>,
+    coord: Option<JoinHandle<anyhow::Result<Option<CommError>>>>,
+}
+
+impl WorldRun {
+    /// World-total (ops, bytes) on an axis, backend-independent.
+    fn total_stats(&self, axis: Axis) -> (u64, u64) {
+        if self.shared {
+            self.worlds[0].stats(axis)
+        } else {
+            self.worlds.iter().fold((0, 0), |(o, by), w| {
+                let (a, b) = w.stats(axis);
+                (o + a, by + b)
+            })
+        }
+    }
+
+    /// The failure origin visible to `rank` through its world handle.
+    fn poison_of(&self, rank: usize) -> Option<CommError> {
+        self.worlds[rank].poison_of(rank)
+    }
+
+    /// Drop the rank worlds (closing their connections) and return the
+    /// coordinator's recorded failure (`None` for in-process backends or
+    /// a clean socket world).
+    fn finish(mut self) -> Option<CommError> {
+        self.worlds.clear();
+        match self.coord.take() {
+            None => None,
+            Some(h) => h.join().expect("coordinator thread").expect("coordinator run"),
+        }
+    }
+}
+
+/// Run `f(rank, world)` on every rank of `grid` over the selected
+/// backend.  `chunk` sets the in-process reduction chunk size (socket
+/// worlds reduce whole ops at the coordinator — same ordered sum, so
+/// results are bitwise identical either way).
+fn run_world<F>(b: BackendSel, tag: &str, grid: Grid4D, chunk: Option<usize>, f: F) -> WorldRun
+where
+    F: Fn(usize, &CommWorld) + Send + Sync + 'static,
+{
+    let n = grid.world_size();
+    let f = Arc::new(f);
+    if b == BackendSel::InProc {
+        let world = Arc::new(match chunk {
+            Some(c) => CommWorld::with_chunk_elems(grid, c),
+            None => CommWorld::new(grid),
+        });
+        let hs: Vec<_> = (0..n)
+            .map(|r| {
+                let (w, f) = (world.clone(), f.clone());
+                std::thread::spawn(move || f(r, &w))
+            })
+            .collect();
+        let results = hs.into_iter().map(|h| h.join()).collect();
+        return WorldRun { shared: true, worlds: vec![world; n], results, coord: None };
+    }
+    let ep = match b {
+        BackendSel::Uds => Endpoint::Unix(uds_path(tag)),
+        _ => Endpoint::Tcp("127.0.0.1:0".to_string()),
+    };
+    let coord = Coordinator::bind(grid, &ep, CoordConfig::default()).expect("coordinator bind");
+    let ep = coord.endpoint().clone();
+    let coord = coord.spawn();
+    let slots: Arc<Mutex<Vec<Option<Arc<CommWorld>>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let hs: Vec<_> = (0..n)
+        .map(|r| {
+            let (ep, f, slots) = (ep.clone(), f.clone(), slots.clone());
+            std::thread::spawn(move || {
+                let w = Arc::new(CommWorld::connect(grid, r, &ep).expect("rank connect"));
+                slots.lock().unwrap()[r] = Some(w.clone());
+                f(r, &w);
+            })
+        })
+        .collect();
+    let results = hs.into_iter().map(|h| h.join()).collect();
+    let worlds =
+        slots.lock().unwrap().iter().map(|w| w.clone().expect("rank connected")).collect();
+    WorldRun { shared: false, worlds, results, coord: Some(coord) }
+}
+
+/// Instantiate the battery for all three backends; each case becomes
+/// `inproc::<name>`, `uds::<name>`, `tcp::<name>`.
+macro_rules! conformance {
+    ($($name:ident),* $(,)?) => {
+        mod inproc {
+            $(#[test]
+            fn $name() { super::$name(super::BackendSel::InProc, concat!("ip-", stringify!($name))); })*
+        }
+        mod uds {
+            $(#[test]
+            fn $name() { super::$name(super::BackendSel::Uds, concat!("u-", stringify!($name))); })*
+        }
+        mod tcp {
+            $(#[test]
+            fn $name() { super::$name(super::BackendSel::Tcp, concat!("t-", stringify!($name))); })*
+        }
+    };
+}
+
+conformance!(
+    reduces_across_axes_with_out_of_order_waits,
+    gather_orders_by_group_index,
+    bf16_accounting_is_exact,
+    barriers_interleave_with_reduces,
+    size1_world_short_circuits,
+    length_mismatch_errors_all_ranks,
+    kind_mismatch_errors_all_ranks,
+    mismatch_poison_cascades_to_bystanders,
+    injected_fault_reports_origin_everywhere,
+    poisoned_stats_error_instead_of_blocking,
+);
+
+// ---------------------------------------------------------------------------
+// The battery
+// ---------------------------------------------------------------------------
+
+/// Many in-flight ops per rank across all axes, tiny chunks (so every
+/// in-process op is multi-chunk), waits out of issue order within an
+/// axis.
+fn reduces_across_axes_with_out_of_order_waits(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(2, 2, 2, 1);
+    let run = run_world(b, tag, grid, Some(16), |rank, w| {
+        let g = w.grid;
+        let sum_of = |axis: Axis, f: &dyn Fn(usize) -> f32| -> f32 {
+            g.group_ranks(rank, axis).into_iter().map(f).sum()
+        };
+        for round in 0..5u32 {
+            let rb = round as f32;
+            let vx = vec![rank as f32 + rb; 100];
+            let vy = vec![2.0 * rank as f32 - rb; 37];
+            let vd = vec![0.5 * rank as f32 + 3.0; 64];
+            let px = w.issue_all_reduce(rank, Axis::X, &vx, Precision::Fp32);
+            let py = w.issue_all_reduce(rank, Axis::Y, &vy, Precision::Fp32);
+            let pg = w.issue_all_gather(rank, Axis::Y, &[rank as f32]);
+            let pd = w.issue_all_reduce(rank, Axis::Dp, &vd, Precision::Fp32);
+            let vx2 = vec![1.0; 10];
+            let px2 = w.issue_all_reduce(rank, Axis::X, &vx2, Precision::Fp32);
+            w.progress(rank);
+
+            let mut ox2 = vec![0.0; 10];
+            px2.wait_into(&mut ox2); // out of issue order on X
+            let mut ox = vec![0.0; 100];
+            px.wait_into(&mut ox);
+            let mut od = vec![0.0; 64];
+            pd.wait_into(&mut od);
+            let gathered = pg.wait();
+            let mut oy = vec![0.0; 37];
+            py.wait_into(&mut oy);
+
+            let want_x = sum_of(Axis::X, &|r| r as f32 + rb);
+            let want_y = sum_of(Axis::Y, &|r| 2.0 * r as f32 - rb);
+            let want_d = sum_of(Axis::Dp, &|r| 0.5 * r as f32 + 3.0);
+            assert!(ox.iter().all(|&v| v == want_x), "round {round}: X sum");
+            assert!(oy.iter().all(|&v| v == want_y), "round {round}: Y sum");
+            assert!(od.iter().all(|&v| v == want_d), "round {round}: Dp sum");
+            assert!(ox2.iter().all(|&v| v == g.axis_size(Axis::X) as f32));
+            let want_members: Vec<f32> =
+                g.group_ranks(rank, Axis::Y).iter().map(|&r| r as f32).collect();
+            let got: Vec<f32> = gathered.into_iter().flatten().collect();
+            assert_eq!(got, want_members, "round {round}: Y gather order");
+        }
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_ok(), "rank {r} failed");
+    }
+    let failure = run.finish();
+    assert!(failure.is_none(), "coordinator reported {failure:?}");
+}
+
+/// Gathered payloads arrive ordered by group index, never arrival order,
+/// with per-member lengths allowed to differ.
+fn gather_orders_by_group_index(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 2, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        let payload = vec![rank as f32 + 0.25; rank + 1]; // distinct lengths
+        let parts = w.all_gather(rank, Axis::Y, &payload);
+        let members = w.grid.group_ranks(rank, Axis::Y);
+        assert_eq!(parts.len(), members.len());
+        for (p, &m) in parts.iter().zip(&members) {
+            assert_eq!(p.len(), m + 1, "member {m} payload length");
+            assert!(p.iter().all(|&v| v == m as f32 + 0.25), "member {m} payload");
+        }
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_ok(), "rank {r} failed");
+    }
+    assert!(run.finish().is_none());
+}
+
+/// bf16 payloads are rounded identically on every backend, and the
+/// accounting charges 2 bytes/elem regardless of chunking.
+fn bf16_accounting_is_exact(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let run = run_world(b, tag, grid, Some(3), |rank, w| {
+        let mut v: Vec<f32> = (0..10).map(|i| (rank * 10 + i) as f32).collect();
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Bf16);
+        // bf16 rounding is exact for these small integers
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, (10 + 2 * i) as f32);
+        }
+    });
+    for res in &run.results {
+        assert!(res.is_ok());
+    }
+    let (ops, bytes) = run.total_stats(Axis::X);
+    assert_eq!(ops, 2, "one op per contributing rank");
+    assert_eq!(bytes, 2 * 10 * 2, "bf16 halves the accounted payload");
+    assert!(run.finish().is_none());
+}
+
+/// Barriers release all members, carry their own sequence space, and
+/// interleave freely with reduces on the same and other axes.
+fn barriers_interleave_with_reduces(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 2, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        for round in 0..5u32 {
+            let mut v = vec![rank as f32 + round as f32; 8];
+            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+            let want: f32 =
+                w.grid.group_ranks(rank, Axis::X).iter().map(|&r| r as f32 + round as f32).sum();
+            assert!(v.iter().all(|&x| x == want), "round {round}: X sum");
+            w.barrier(rank, Axis::X);
+            w.barrier(rank, Axis::Y);
+            let mut u = vec![1.0f32; 5];
+            w.all_reduce(rank, Axis::Y, &mut u, Precision::Fp32);
+            assert!(u.iter().all(|&x| x == 2.0), "round {round}: Y sum");
+            w.barrier(rank, Axis::X);
+        }
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_ok(), "rank {r} failed");
+    }
+    assert!(run.finish().is_none());
+}
+
+/// A world of one rank short-circuits every collective (identity
+/// reduce, no-op barrier) without a single transport frame.
+fn size1_world_short_circuits(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 1, 1, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        let mut v = vec![3.5f32; 4];
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+        assert_eq!(v, vec![3.5; 4]);
+        let parts = w.all_gather(rank, Axis::Dp, &[7.0]);
+        assert_eq!(parts, vec![vec![7.0]]);
+        w.barrier(rank, Axis::Z);
+    });
+    assert!(run.results[0].is_ok());
+    assert_eq!(run.total_stats(Axis::X), (0, 0), "size-1 ops must not be accounted");
+    assert!(run.finish().is_none());
+}
+
+/// Mismatched reduce lengths poison the group: every member gets an
+/// error (not a hang), and the origin is an `all_reduce` failure whose
+/// message names the mismatch.
+fn length_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        let mut v = vec![1.0f32; if rank == 0 { 4 } else { 8 }];
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_err(), "rank {r} must fail fast, not hang");
+    }
+    let origin = run.poison_of(0).expect("world must be poisoned");
+    assert_eq!(origin.op, "all_reduce");
+    assert!(origin.msg.contains("length mismatch"), "origin: {origin}");
+    if let Some(f) = run.finish() {
+        assert_eq!(f.op, "all_reduce");
+        assert!(f.msg.contains("length mismatch"), "coordinator origin: {f}");
+    }
+}
+
+/// A reduce and a gather meeting at the same sequence slot is a kind
+/// mismatch: clean structured error on every member.
+fn kind_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        if rank == 0 {
+            let mut v = vec![1.0f32; 4];
+            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+        } else {
+            let _ = w.all_gather(rank, Axis::X, &[1.0, 2.0]);
+        }
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_err(), "rank {r} must fail fast, not hang");
+    }
+    let origin = run.poison_of(0).expect("world must be poisoned");
+    assert!(origin.msg.contains("kind mismatch"), "origin: {origin}");
+    if let Some(f) = run.finish() {
+        assert!(f.msg.contains("kind mismatch"), "coordinator origin: {f}");
+    }
+}
+
+/// Ranks 0/1 mismatch on X; ranks 2/3 wait on Y collectives whose peers
+/// die — the poison must cascade so the bystanders fail fast too.
+fn mismatch_poison_cascades_to_bystanders(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 2, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| match rank {
+        0 => {
+            let mut v = vec![1.0f32; 4];
+            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+        }
+        1 => {
+            let mut v = vec![1.0f32; 8]; // length mismatch vs rank 0
+            w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+        }
+        _ => {
+            // Y groups are {0,2} and {1,3}: peers never arrive
+            let mut v = vec![1.0f32; 3];
+            w.all_reduce(rank, Axis::Y, &mut v, Precision::Fp32);
+        }
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_err(), "rank {r} must fail fast, not hang");
+    }
+    if let Some(f) = run.finish() {
+        assert!(f.msg.contains("length mismatch"), "coordinator origin: {f}");
+    }
+}
+
+/// An injected fault (`CommWorld::fail`) surfaces the SAME origin —
+/// rank, `"injected-fault"`, message — on every member of the world,
+/// including ranks sharing no group with the victim.
+fn injected_fault_reports_origin_everywhere(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 2, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        if rank == 3 {
+            w.fail(rank, "scripted fault: conformance battery");
+        }
+        let mut v = vec![1.0f32; 4];
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+        let mut u = vec![1.0f32; 4];
+        w.all_reduce(rank, Axis::Y, &mut u, Precision::Fp32);
+    });
+    for (r, res) in run.results.iter().enumerate() {
+        assert!(res.is_err(), "rank {r} must fail fast, not hang");
+    }
+    for rank in 0..4 {
+        let origin = run.poison_of(rank).unwrap_or_else(|| panic!("rank {rank} not poisoned"));
+        assert_eq!(origin.rank, 3, "rank {rank} sees origin rank");
+        assert_eq!(origin.op, "injected-fault", "rank {rank} sees origin op");
+        assert!(origin.msg.contains("scripted fault"), "rank {rank}: {origin}");
+    }
+    if let Some(f) = run.finish() {
+        assert_eq!((f.rank, f.op), (3, "injected-fault"), "coordinator origin: {f}");
+    }
+}
+
+/// Regression (the fix this suite rides with): stats / timing /
+/// hidden-fraction queries on a poisoned world must return the failure
+/// origin as an error — promptly — instead of blocking or answering
+/// with misleading half-recorded numbers.
+fn poisoned_stats_error_instead_of_blocking(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        if rank == 1 {
+            w.fail(rank, "scripted fault: stats regression");
+        }
+        let mut v = vec![1.0f32; 4];
+        w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+    });
+    for res in &run.results {
+        assert!(res.is_err());
+    }
+    for rank in 0..2 {
+        let w = &run.worlds[rank];
+        let origin = w.check_healthy(rank).expect_err("poisoned world must refuse");
+        assert_eq!(origin.op, "injected-fault");
+        assert!(w.stats_checked(rank, Axis::X).is_err());
+        assert!(w.timing_checked(rank, Axis::X).is_err());
+        assert!(w.hidden_fraction_checked(rank, Axis::X).is_err());
+        // the unchecked queries still answer (monitoring may poll them);
+        // only the checked report path refuses
+        let _ = w.stats(Axis::X);
+        let _ = w.hidden_fraction(Axis::X);
+    }
+    let _ = run.finish();
+}
+
+// ---------------------------------------------------------------------------
+// Cross-backend bitwise identity (in-process harness)
+// ---------------------------------------------------------------------------
+
+/// The same multi-round reduce workload produces bit-identical f32
+/// results on all three backends: the coordinator's whole-op sum in
+/// group-index member order equals the in-process ordered chunk
+/// reduction.
+#[test]
+fn reduction_results_are_bitwise_identical_across_backends() {
+    let grid = Grid4D::new(1, 2, 2, 1);
+    let collect = |b: BackendSel, tag: &str| -> Vec<Vec<f32>> {
+        let out: Arc<Mutex<Vec<Vec<f32>>>> =
+            Arc::new(Mutex::new(vec![Vec::new(); grid.world_size()]));
+        let sink = out.clone();
+        let run = run_world(b, tag, grid, Some(7), move |rank, w| {
+            let mut acc = Vec::new();
+            for round in 0..4u32 {
+                // irrational-ish payloads so float addition order matters
+                let mut v: Vec<f32> =
+                    (0..23).map(|i| ((rank * 31 + i) as f32).sin() * 0.37 + round as f32).collect();
+                w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+                acc.extend_from_slice(&v);
+                let mut u: Vec<f32> =
+                    (0..11).map(|i| ((rank * 17 + i) as f32).cos() * 1.91).collect();
+                w.all_reduce(rank, Axis::Y, &mut u, Precision::Fp32);
+                acc.extend_from_slice(&u);
+            }
+            sink.lock().unwrap()[rank] = acc;
+        });
+        for res in &run.results {
+            assert!(res.is_ok());
+        }
+        assert!(run.finish().is_none());
+        Arc::try_unwrap(out).expect("sole owner").into_inner().unwrap()
+    };
+    let a = collect(BackendSel::InProc, "bw-ip");
+    let b = collect(BackendSel::Uds, "bw-u");
+    let c = collect(BackendSel::Tcp, "bw-t");
+    for rank in 0..grid.world_size() {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a[rank]), bits(&b[rank]), "rank {rank}: inproc vs uds");
+        assert_eq!(bits(&a[rank]), bits(&c[rank]), "rank {rank}: inproc vs tcp");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial wire-format decode
+// ---------------------------------------------------------------------------
+
+/// Hand-craft a frame: header (magic, version, type, payload len) +
+/// payload + CRC32 trailer over header+payload.
+fn raw_frame(version: u16, ftype: u16, payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&WIRE_MAGIC);
+    b.extend_from_slice(&version.to_le_bytes());
+    b.extend_from_slice(&ftype.to_le_bytes());
+    b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    b.extend_from_slice(payload);
+    let crc = crc32(&b);
+    b.extend_from_slice(&crc.to_le_bytes());
+    b
+}
+
+fn encode(msg: &Msg) -> Vec<u8> {
+    let mut buf = Vec::new();
+    wire::write_msg(&mut buf, msg).expect("encode to Vec");
+    buf
+}
+
+fn decode_err(bytes: &[u8]) -> WireError {
+    let mut r = bytes;
+    wire::read_msg(&mut r).expect_err("malformed frame must not decode")
+}
+
+#[test]
+fn wire_rejects_bad_magic_with_description() {
+    let mut bytes = encode(&Msg::Ping);
+    bytes[..4].copy_from_slice(b"XXXX");
+    let e = decode_err(&bytes);
+    assert!(matches!(e, WireError::BadMagic(_)), "got {e:?}");
+    assert!(e.to_string().contains("bad frame magic"), "message: {e}");
+}
+
+#[test]
+fn wire_rejects_wrong_version_with_description() {
+    let e = decode_err(&raw_frame(99, 9, &[]));
+    assert!(matches!(e, WireError::BadVersion(99)), "got {e:?}");
+    assert!(e.to_string().contains("unsupported wire version 99"), "message: {e}");
+}
+
+#[test]
+fn wire_rejects_unknown_frame_type() {
+    let e = decode_err(&raw_frame(wire::WIRE_VERSION, 200, &[]));
+    assert!(matches!(e, WireError::BadFrameType(200)), "got {e:?}");
+    assert!(e.to_string().contains("unknown frame type"), "message: {e}");
+}
+
+#[test]
+fn wire_rejects_oversized_payload_before_allocating() {
+    // header only — an oversized declared length must be rejected from
+    // the 12 header bytes, never by attempting the allocation
+    let mut b = Vec::new();
+    b.extend_from_slice(&WIRE_MAGIC);
+    b.extend_from_slice(&wire::WIRE_VERSION.to_le_bytes());
+    b.extend_from_slice(&9u16.to_le_bytes());
+    b.extend_from_slice(&((MAX_FRAME_PAYLOAD as u32) + 1).to_le_bytes());
+    let e = decode_err(&b);
+    assert!(matches!(e, WireError::Oversized(_)), "got {e:?}");
+    assert!(e.to_string().contains("exceeds"), "message: {e}");
+}
+
+#[test]
+fn wire_reports_truncation_position() {
+    let full = encode(&Msg::Contribute {
+        axis: Axis::Y,
+        seq: 3,
+        kind: scalegnn::comm::CollKind::Reduce(Precision::Fp32),
+        data: vec![1.0; 16],
+    });
+    // mid-payload cut: past the header, inside the payload bytes
+    let e = decode_err(&full[..20]);
+    assert!(matches!(e, WireError::Truncated { .. }), "got {e:?}");
+    assert!(e.to_string().contains("truncated frame"), "message: {e}");
+    // mid-header cut
+    let e = decode_err(&full[..5]);
+    assert!(matches!(e, WireError::Truncated { .. }), "got {e:?}");
+    // clean EOF at a frame boundary is Closed, not Truncated
+    let e = decode_err(&[]);
+    assert!(matches!(e, WireError::Closed), "got {e:?}");
+}
+
+#[test]
+fn wire_rejects_corrupt_crc_with_both_values() {
+    let mut bytes = encode(&Msg::ReduceResult { axis: Axis::X, seq: 1, data: vec![2.0; 8] });
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    let e = decode_err(&bytes);
+    assert!(matches!(e, WireError::BadCrc { .. }), "got {e:?}");
+    assert!(e.to_string().contains("CRC mismatch"), "message: {e}");
+}
+
+#[test]
+fn wire_rejects_payload_with_trailing_garbage() {
+    // a Bye frame carries no payload; extra bytes are a malformed frame
+    let e = decode_err(&raw_frame(wire::WIRE_VERSION, 10, &[1, 2, 3]));
+    assert!(matches!(e, WireError::Malformed(_)), "got {e:?}");
+}
+
+#[test]
+fn wire_round_trips_every_error_op_name() {
+    for op in ["all_reduce", "all_gather", "injected-fault", "rank-death", "coordinator-lost"] {
+        let msg = Msg::Poison { err: CommError::new(2, 9, op, Axis::Dp, "x".to_string()) };
+        let bytes = encode(&msg);
+        let mut r = &bytes[..];
+        let back = wire::read_msg(&mut r).expect("round trip");
+        assert_eq!(back, msg, "op {op}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live adversarial: dying peers, garbage servers, bad registrations
+// ---------------------------------------------------------------------------
+
+/// A registered rank that disconnects mid-payload poisons the world
+/// with a `"rank-death"` origin naming it; the surviving rank gets a
+/// clean error, and nobody hangs.
+#[test]
+fn mid_payload_disconnect_poisons_world_with_rank_death() {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let ep = Endpoint::Tcp("127.0.0.1:0".to_string());
+    let coord = Coordinator::bind(grid, &ep, CoordConfig::default()).expect("bind");
+    let addr = match coord.endpoint() {
+        Endpoint::Tcp(a) => a.clone(),
+        _ => unreachable!(),
+    };
+    let coord = coord.spawn();
+
+    // rank 1: a raw client that registers, then sends HALF a contribute
+    // frame and vanishes
+    let addr1 = addr.clone();
+    let liar = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr1.as_str()).expect("connect");
+        wire::write_msg(&mut s, &Msg::Hello { rank: 1, grid: [1, 2, 1, 1] }).expect("hello");
+        match wire::read_msg(&mut s) {
+            Ok(Msg::Welcome { .. }) => {}
+            other => panic!("expected welcome, got {other:?}"),
+        }
+        let full = encode(&Msg::Contribute {
+            axis: Axis::X,
+            seq: 0,
+            kind: scalegnn::comm::CollKind::Reduce(Precision::Fp32),
+            data: vec![1.0; 64],
+        });
+        s.write_all(&full[..full.len() / 2]).expect("half frame");
+        // drop: mid-payload disconnect
+    });
+
+    // rank 0: a real member whose reduce can never complete
+    let addr0 = addr.clone();
+    let victim = std::thread::spawn(move || {
+        let w = CommWorld::connect(grid, 0, &Endpoint::Tcp(addr0)).expect("connect");
+        let mut v = vec![1.0f32; 64];
+        w.all_reduce(0, Axis::X, &mut v, Precision::Fp32);
+    });
+
+    liar.join().expect("raw client");
+    assert!(victim.join().is_err(), "surviving rank must error, not hang");
+    let failure = coord
+        .join()
+        .expect("coordinator thread")
+        .expect("coordinator run")
+        .expect("world must be poisoned");
+    assert_eq!(failure.op, "rank-death");
+    assert_eq!(failure.rank, 1);
+    assert!(failure.msg.contains("rank 1"), "origin must name the dead rank: {failure}");
+}
+
+/// Connecting to something that is not a coordinator errors with a
+/// descriptive wire failure instead of hanging in the handshake.
+#[test]
+fn connecting_to_garbage_server_errors_descriptively() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("accept");
+        s.write_all(b"HTTP/1.1 200 OK\r\ncontent-length: 0\r\n\r\n").expect("garbage");
+        // keep the connection open so a buggy client would block forever
+        std::thread::sleep(Duration::from_millis(300));
+    });
+    let err = CommWorld::connect(Grid4D::new(1, 2, 1, 1), 0, &Endpoint::Tcp(addr))
+        .expect_err("a garbage server must not produce a world");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad frame magic"), "error must describe the frame: {msg}");
+    server.join().expect("server thread");
+}
+
+/// The coordinator rejects garbage connections and wrong registrations
+/// (bad grid, out-of-range rank) while continuing to assemble the world
+/// from valid ranks.
+#[test]
+fn coordinator_rejects_bad_registrations_and_still_assembles() {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let ep = Endpoint::Tcp("127.0.0.1:0".to_string());
+    let coord = Coordinator::bind(grid, &ep, CoordConfig::default()).expect("bind");
+    let addr = match coord.endpoint() {
+        Endpoint::Tcp(a) => a.clone(),
+        _ => unreachable!(),
+    };
+    let coord = coord.spawn();
+
+    // three invalid registration attempts, all rejected without
+    // disturbing assembly
+    {
+        let mut s = std::net::TcpStream::connect(addr.as_str()).expect("connect");
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n--garbage--").expect("garbage bytes");
+    }
+    {
+        let mut s = std::net::TcpStream::connect(addr.as_str()).expect("connect");
+        wire::write_msg(&mut s, &Msg::Hello { rank: 0, grid: [9, 9, 9, 9] }).expect("wrong grid");
+    }
+    {
+        let mut s = std::net::TcpStream::connect(addr.as_str()).expect("connect");
+        wire::write_msg(&mut s, &Msg::Hello { rank: 77, grid: [1, 2, 1, 1] })
+            .expect("rank out of range");
+    }
+
+    let hs: Vec<_> = (0..2)
+        .map(|r| {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                let w = CommWorld::connect(grid, r, &Endpoint::Tcp(a)).expect("valid rank");
+                let mut v = vec![r as f32 + 1.0; 6];
+                w.all_reduce(r, Axis::X, &mut v, Precision::Fp32);
+                assert!(v.iter().all(|&x| x == 3.0));
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().expect("valid ranks must train through the noise");
+    }
+    let failure = coord.join().expect("coordinator thread").expect("coordinator run");
+    assert!(failure.is_none(), "world must complete cleanly: {failure:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process bitwise identity (real binaries, real OS processes)
+// ---------------------------------------------------------------------------
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sgnn-conf-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create tmp dir");
+    d
+}
+
+/// The `[[step, loss], ...]` pairs of a report's `loss_curve` from a
+/// stats-json document.  f32→JSON→f64→f32 round-trips exactly, so these
+/// support bitwise comparisons.
+fn loss_curve_of(stats_json: &str) -> Vec<(u64, f32)> {
+    let doc = Json::parse(stats_json).expect("stats json parses");
+    let curve = doc
+        .get("report")
+        .and_then(|r| r.get("loss_curve"))
+        .and_then(|c| c.as_arr())
+        .expect("report.loss_curve");
+    curve
+        .iter()
+        .map(|pair| {
+            let s = pair.idx(0).and_then(|v| v.as_usize()).expect("step") as u64;
+            let l = pair.idx(1).and_then(|v| v.as_f64()).expect("loss") as f32;
+            (s, l)
+        })
+        .collect()
+}
+
+/// Headline: the same `RunSpec` trained over a Unix-socket world across
+/// two real OS processes (plus the coordinator binary) produces a
+/// loss curve bitwise identical to the in-process threaded run.
+#[test]
+fn multiprocess_socket_run_is_bitwise_identical_to_inproc() {
+    let spec = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .model(16, 2, 0.5)
+        .steps(6)
+        .lr(5e-3)
+        .seed(42);
+    let clean = run_silent(&spec).expect("in-process run");
+    assert_eq!(clean.loss_curve.len(), 6);
+
+    let dir = tmp_dir("mpbw");
+    let spec_path = dir.join("spec.json");
+    std::fs::write(&spec_path, spec.to_json().to_string() + "\n").expect("write spec");
+    let sock = dir.join("world.sock");
+
+    let coord = std::process::Command::new(env!("CARGO_BIN_EXE_scalegnn-coord"))
+        .args(["--grid", "1x2x1x1", "--unix"])
+        .arg(&sock)
+        .arg("--quiet")
+        .spawn()
+        .expect("spawn coordinator");
+
+    let children: Vec<_> = (0..2)
+        .map(|r| {
+            let out = dir.join(format!("stats-r{r}.json"));
+            std::process::Command::new(env!("CARGO_BIN_EXE_scalegnn"))
+                .args(["run", "--spec"])
+                .arg(&spec_path)
+                .args(["--transport", &format!("unix:{}", sock.display())])
+                .args(["--rank", &r.to_string(), "--quiet", "--stats-json"])
+                .arg(&out)
+                .spawn()
+                .expect("spawn rank")
+        })
+        .collect();
+    for (r, c) in children.into_iter().enumerate() {
+        let st = c.wait_with_output().expect("rank wait");
+        assert!(st.status.success(), "rank {r} failed: {st:?}");
+    }
+    let st = coord.wait_with_output().expect("coordinator wait");
+    assert!(st.status.success(), "coordinator failed: {st:?}");
+
+    let stats = std::fs::read_to_string(dir.join("stats-r0.json")).expect("rank 0 stats");
+    let socket_curve = loss_curve_of(&stats);
+    assert_eq!(socket_curve.len(), clean.loss_curve.len());
+    for (i, (&(es, el), &(gs, gl))) in clean.loss_curve.iter().zip(&socket_curve).enumerate() {
+        assert_eq!(es, gs, "step index {i}");
+        assert_eq!(el.to_bits(), gl.to_bits(), "step {es}: in-process {el} vs socket {gl}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
