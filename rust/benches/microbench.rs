@@ -180,6 +180,36 @@ fn kernel_section(records: &mut Vec<KernelRecord>) {
         },
     );
 
+    // §V-B bf16 widen/narrow: runtime-dispatched SIMD vs the retained
+    // scalar reference (acceptance bar: >= 1.5x when a vector level is
+    // detected; under PALLAS_SIMD=0 both rows execute the scalar path)
+    {
+        use scalegnn::tensor::simd;
+        let n = 1usize << 20;
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut bits = vec![0u16; n];
+        let mut wide = vec![0.0f32; n];
+        println!("    (simd dispatch level: {:?})", simd::level());
+        let d_nar = kbench(records, "bf16_narrow", format!("{n} elems"), 1, n, 50, || {
+            simd::narrow_bf16(&xs, &mut bits);
+            std::hint::black_box(bits[0]);
+        });
+        let s_nar = kbench(records, "bf16_narrow_scalar", format!("{n} elems"), 1, n, 50, || {
+            simd::narrow_bf16_scalar(&xs, &mut bits);
+            std::hint::black_box(bits[0]);
+        });
+        println!("    -> narrow speedup vs scalar: {:.2}x", s_nar / d_nar);
+        let d_wid = kbench(records, "bf16_widen", format!("{n} elems"), 1, n, 50, || {
+            simd::widen_bf16(&bits, &mut wide);
+            std::hint::black_box(wide[0]);
+        });
+        let s_wid = kbench(records, "bf16_widen_scalar", format!("{n} elems"), 1, n, 50, || {
+            simd::widen_bf16_scalar(&bits, &mut wide);
+            std::hint::black_box(wide[0]);
+        });
+        println!("    -> widen speedup vs scalar: {:.2}x", s_wid / d_wid);
+    }
+
     // workspace train step (zero-allocation serial hot loop)
     let dims = scalegnn::model::GcnDims {
         d_in: 128,
@@ -222,7 +252,11 @@ fn kernel_section(records: &mut Vec<KernelRecord>) {
 /// §V-D end-to-end ablation: run the 8-rank PMM engine with overlap on and
 /// off on the products_sim config and emit `BENCH_e2e.json` — the per-step
 /// epoch-time breakdown with the measured hidden-comm fraction per axis,
-/// so the perf trajectory has executed end-to-end numbers per PR.
+/// so the perf trajectory has executed end-to-end numbers per PR.  A third
+/// run repeats the overlap-on config at bf16 (§V-B: TP matmul all-reduces
+/// and activation gathers ride as rounded 2-byte payloads) and the doc
+/// records the measured TP comm-byte reduction and the loss/accuracy delta
+/// against the fp32 baseline.
 fn e2e_overlap_section() {
     use scalegnn::model::GcnDims;
     use scalegnn::pmm::{PmmCtx, PmmGcn, PmmTimers};
@@ -243,64 +277,117 @@ fn e2e_overlap_section() {
     let steps: u64 = 16;
     let warmup = 4usize;
 
-    let run = |overlap: bool| -> (f64, PmmTimers, [f64; 4], f64) {
+    struct E2eRun {
+        step_s: f64,
+        timers: PmmTimers,
+        hidden: [f64; 4],
+        tp_hidden: f64,
+        /// cumulative payload bytes per axis over the whole run [x, y, z, dp]
+        bytes: [u64; 4],
+        final_loss: f32,
+        final_acc: f32,
+    }
+
+    let run = |overlap: bool, prec: Precision| -> E2eRun {
         let world = Arc::new(CommWorld::new(grid));
         let mut hs = vec![];
         for r in 0..grid.world_size() {
             let w = world.clone();
             let d = data.clone();
             hs.push(std::thread::spawn(move || {
-                let ctx = PmmCtx::new(grid, r, &w, Precision::Fp32);
+                let ctx = PmmCtx::new(grid, r, &w, prec);
                 let mut eng = PmmGcn::new(ctx, dims, batch, d, 42);
                 eng.set_overlap(overlap);
                 let mut per_step = Vec::with_capacity(steps as usize);
+                let mut last = (0.0f32, 0.0f32);
                 for s in 0..steps {
                     let t0 = std::time::Instant::now();
-                    eng.train_step(s, 5e-3);
+                    let out = eng.train_step(s, 5e-3);
                     per_step.push(t0.elapsed().as_secs_f64());
+                    last = (out.loss, out.acc);
                 }
-                (per_step, eng.timers)
+                (per_step, eng.timers, last)
             }));
         }
         let mut all_steps: Vec<Vec<f64>> = vec![];
         let mut timers = PmmTimers::default();
-        for h in hs {
-            let (ps, t) = h.join().unwrap();
+        let mut last = (0.0f32, 0.0f32);
+        for (r, h) in hs.into_iter().enumerate() {
+            let (ps, t, l) = h.join().unwrap();
             all_steps.push(ps);
             timers.add(&t);
+            if r == 0 {
+                last = l;
+            }
         }
         // per-step critical path = slowest rank; median over post-warmup steps
         let per_step_max: Vec<f64> = (warmup..steps as usize)
             .map(|s| all_steps.iter().map(|v| v[s]).fold(0.0f64, f64::max))
             .collect();
-        let hidden = [
-            world.hidden_fraction(Axis::X),
-            world.hidden_fraction(Axis::Y),
-            world.hidden_fraction(Axis::Z),
-            world.hidden_fraction(Axis::Dp),
-        ];
-        (median(&per_step_max), timers, hidden, world.tp_hidden_fraction())
+        E2eRun {
+            step_s: median(&per_step_max),
+            timers,
+            hidden: [
+                world.hidden_fraction(Axis::X),
+                world.hidden_fraction(Axis::Y),
+                world.hidden_fraction(Axis::Z),
+                world.hidden_fraction(Axis::Dp),
+            ],
+            tp_hidden: world.tp_hidden_fraction(),
+            bytes: [
+                world.stats(Axis::X).1,
+                world.stats(Axis::Y).1,
+                world.stats(Axis::Z).1,
+                world.stats(Axis::Dp).1,
+            ],
+            final_loss: last.0,
+            final_acc: last.1,
+        }
     };
 
     println!("--- §V-D end-to-end overlap ablation (8 rank threads, products_sim) ---");
-    let (on_s, on_t, on_hidden, on_tp) = run(true);
-    let (off_s, off_t, off_hidden, off_tp) = run(false);
+    let on = run(true, Precision::Fp32);
+    let off = run(false, Precision::Fp32);
     println!(
         "overlap on : median step {}  (tp hidden frac {:.3})",
-        fmt_time(on_s),
-        on_tp
+        fmt_time(on.step_s),
+        on.tp_hidden
     );
     println!(
         "overlap off: median step {}  (tp hidden frac {:.3})  -> on/off speedup {:.2}x",
-        fmt_time(off_s),
-        off_tp,
-        off_s / on_s
+        fmt_time(off.step_s),
+        off.tp_hidden,
+        off.step_s / on.step_s
+    );
+
+    // §V-B precision ablation: identical config and seed, overlap on; the
+    // overlap-on fp32 run above doubles as the baseline side
+    let bf = run(true, Precision::Bf16);
+    let steps_f = steps as f64;
+    let tp_bytes = |r: &E2eRun| (r.bytes[0] + r.bytes[1] + r.bytes[2]) as f64;
+    let reduction = tp_bytes(&on) / tp_bytes(&bf);
+    println!(
+        "precision fp32: median step {}  tp comm {:.1} KiB/step  final loss {:.4} acc {:.3}",
+        fmt_time(on.step_s),
+        tp_bytes(&on) / steps_f / 1024.0,
+        on.final_loss,
+        on.final_acc
+    );
+    println!(
+        "precision bf16: median step {}  tp comm {:.1} KiB/step  final loss {:.4} acc {:.3}  \
+         -> {:.2}x fewer tp bytes",
+        fmt_time(bf.step_s),
+        tp_bytes(&bf) / steps_f / 1024.0,
+        bf.final_loss,
+        bf.final_acc,
+        reduction
     );
 
     let n = grid.world_size() as f64;
-    let side = |step_s: f64, t: &PmmTimers, hidden: &[f64; 4], tp: f64| -> Json {
+    let side = |r: &E2eRun| -> Json {
+        let t = &r.timers;
         obj(vec![
-            ("step_s_median", Json::from(step_s)),
+            ("step_s_median", Json::from(r.step_s)),
             (
                 "per_rank_mean_s",
                 obj(vec![
@@ -317,13 +404,32 @@ fn e2e_overlap_section() {
             (
                 "hidden_frac",
                 obj(vec![
-                    ("x", Json::from(hidden[0])),
-                    ("y", Json::from(hidden[1])),
-                    ("z", Json::from(hidden[2])),
-                    ("dp", Json::from(hidden[3])),
-                    ("tp_aggregate", Json::from(tp)),
+                    ("x", Json::from(r.hidden[0])),
+                    ("y", Json::from(r.hidden[1])),
+                    ("z", Json::from(r.hidden[2])),
+                    ("dp", Json::from(r.hidden[3])),
+                    ("tp_aggregate", Json::from(r.tp_hidden)),
                 ]),
             ),
+            (
+                "comm_bytes_per_step",
+                obj(vec![
+                    ("x", Json::from(r.bytes[0] as f64 / steps_f)),
+                    ("y", Json::from(r.bytes[1] as f64 / steps_f)),
+                    ("z", Json::from(r.bytes[2] as f64 / steps_f)),
+                    ("dp", Json::from(r.bytes[3] as f64 / steps_f)),
+                    ("tp_total", Json::from(tp_bytes(r) / steps_f)),
+                ]),
+            ),
+        ])
+    };
+    let prec_side = |r: &E2eRun| -> Json {
+        obj(vec![
+            ("step_s_median", Json::from(r.step_s)),
+            ("tp_comm_bytes_per_step", Json::from(tp_bytes(r) / steps_f)),
+            ("dp_comm_bytes_per_step", Json::from(r.bytes[3] as f64 / steps_f)),
+            ("final_loss", Json::from(r.final_loss as f64)),
+            ("final_train_acc", Json::from(r.final_acc as f64)),
         ])
     };
     let doc = obj(vec![
@@ -340,9 +446,28 @@ fn e2e_overlap_section() {
                 ("warmup_steps", Json::from(warmup)),
             ]),
         ),
-        ("overlap_on", side(on_s, &on_t, &on_hidden, on_tp)),
-        ("overlap_off", side(off_s, &off_t, &off_hidden, off_tp)),
-        ("speedup_off_over_on", Json::from(off_s / on_s)),
+        ("overlap_on", side(&on)),
+        ("overlap_off", side(&off)),
+        ("speedup_off_over_on", Json::from(off.step_s / on.step_s)),
+        (
+            "precision_ablation",
+            obj(vec![
+                (
+                    "what",
+                    Json::from(
+                        "§V-B: same seed and config as overlap_on; bf16 sends the TP matmul \
+                         all-reduces and activation-reshard gathers as rounded 2-byte payloads \
+                         (class-axis softmax ops and DP gradient buckets stay fp32)",
+                    ),
+                ),
+                ("fp32", prec_side(&on)),
+                ("bf16", prec_side(&bf)),
+                ("tp_comm_byte_reduction", Json::from(reduction)),
+                ("step_speedup_bf16_over_fp32", Json::from(on.step_s / bf.step_s)),
+                ("final_loss_delta", Json::from((bf.final_loss - on.final_loss) as f64)),
+                ("final_acc_delta", Json::from((bf.final_acc - on.final_acc) as f64)),
+            ]),
+        ),
     ]);
     match std::fs::write("BENCH_e2e.json", doc.to_string() + "\n") {
         Ok(()) => println!("wrote BENCH_e2e.json\n"),

@@ -70,11 +70,39 @@ const CRC_TABLE: [u32; 256] = {
 
 /// CRC32 (IEEE) of `bytes` — the payload checksum of the snapshot trailer.
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in bytes {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// Streaming CRC32 (IEEE) state: feed chunks with [`Crc32::update`], read
+/// the digest with [`Crc32::finish`].  Chunking does not change the digest
+/// (`crc32(a ++ b)` equals streaming `a` then `b`), which is what lets the
+/// `.pallas` section checksums be computed and verified with a bounded
+/// buffer instead of materializing whole sections.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    /// Fresh CRC state (the IEEE init value).
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
     }
-    c ^ 0xFFFF_FFFF
+
+    /// Fold `bytes` into the running digest.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    /// Final digest of everything fed so far (the state stays usable).
+    pub fn finish(&self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
 }
 
 /// Deterministic order-sensitive hash of a run configuration, stored in

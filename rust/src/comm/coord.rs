@@ -240,11 +240,16 @@ impl Shared {
                         self.send(m, &Msg::ReduceResult { axis, seq, data: result.clone() });
                     }
                 }
-                CollKind::Gather => {
+                CollKind::Gather(prec) => {
+                    // parts were rounded at the source for bf16, so the
+                    // result leg re-narrows losslessly on the wire
                     let parts: Vec<Vec<f32>> =
                         op.parts.into_iter().map(|p| p.unwrap()).collect();
                     for &m in &members {
-                        self.send(m, &Msg::GatherResult { axis, seq, parts: parts.clone() });
+                        self.send(
+                            m,
+                            &Msg::GatherResult { axis, seq, prec, parts: parts.clone() },
+                        );
                     }
                 }
             }

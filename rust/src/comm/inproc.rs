@@ -12,7 +12,6 @@ use std::time::Instant;
 
 use super::{CollKind, CommError, Precision, Transport};
 use crate::grid::{Axis, Grid4D};
-use crate::util::bf16_round;
 
 /// One in-flight collective of a process group, matched across members by
 /// sequence number (every member issues its group's collectives in the same
@@ -75,12 +74,12 @@ fn contribute(
             n_contributed: 0,
             result: match kind {
                 CollKind::Reduce(_) => vec![0.0; data.len()],
-                CollKind::Gather => Vec::new(),
+                CollKind::Gather(_) => Vec::new(),
             },
             chunks_done: 0,
             total_chunks: match kind {
                 CollKind::Reduce(_) => data.len().div_ceil(chunk_elems).max(1),
-                CollKind::Gather => 0,
+                CollKind::Gather(_) => 0,
             },
             completed_at: None,
             read: 0,
@@ -101,13 +100,19 @@ fn contribute(
         ));
     }
     assert!(!op.contributed[me], "member {me} double-contributed seq {seq}");
-    op.parts[me] = match kind {
-        CollKind::Reduce(Precision::Bf16) => data.iter().map(|&v| bf16_round(v)).collect(),
-        _ => data.to_vec(),
+    // bf16 contributions are rounded once at the source (§V-B) so every
+    // receiver — and every transport — sees identical rounded payloads
+    op.parts[me] = match kind.precision() {
+        Precision::Bf16 => {
+            let mut v = data.to_vec();
+            crate::tensor::simd::round_bf16(&mut v);
+            v
+        }
+        Precision::Fp32 => data.to_vec(),
     };
     op.contributed[me] = true;
     op.n_contributed += 1;
-    if op.n_contributed == size && matches!(kind, CollKind::Gather) {
+    if op.n_contributed == size && matches!(kind, CollKind::Gather(_)) {
         op.completed_at = Some(Instant::now());
     }
     None

@@ -51,7 +51,11 @@
 //! rounded to bf16 before the reduction (results stay f32), and the byte
 //! accounting halves the payload — exactly what casting before an NCCL
 //! all-reduce does.  The socket transports ship bf16 contributions as the
-//! high 16 bits of the rounded f32, which is lossless.
+//! high 16 bits of the rounded f32, which is lossless.  All-gathers take
+//! the same [`Precision`]: a bf16 gather rounds every member's payload
+//! before distribution (each receiver sees identical rounded rows on any
+//! transport), and both wire directions — the contribution *and* the
+//! broadcast gather result — ship the half-width bits.
 //!
 //! **Measured overlap.**  Per-axis counters record logical traffic (ops,
 //! bytes) plus per-op timings: issue→fully-reduced (`comm`) vs time spent
@@ -94,6 +98,24 @@ impl Precision {
         match self {
             Precision::Fp32 => 4,
             Precision::Bf16 => 2,
+        }
+    }
+
+    /// Spec / CLI name of the precision (`"fp32"` / `"bf16"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a spec / CLI precision name; `None` for anything but
+    /// `"fp32"` / `"bf16"`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "fp32" => Some(Precision::Fp32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
         }
     }
 }
@@ -156,8 +178,9 @@ impl std::error::Error for CommError {}
 pub enum CollKind {
     /// Sum all-reduce at a payload precision.
     Reduce(Precision),
-    /// All-gather (variable payload lengths allowed).
-    Gather,
+    /// All-gather at a payload precision (variable payload lengths
+    /// allowed; bf16 rounds every member's payload before distribution).
+    Gather(Precision),
 }
 
 impl CollKind {
@@ -165,7 +188,14 @@ impl CollKind {
     pub fn op_name(self) -> &'static str {
         match self {
             CollKind::Reduce(_) => "all_reduce",
-            CollKind::Gather => "all_gather",
+            CollKind::Gather(_) => "all_gather",
+        }
+    }
+
+    /// The payload precision carried by this kind.
+    pub fn precision(self) -> Precision {
+        match self {
+            CollKind::Reduce(p) | CollKind::Gather(p) => p,
         }
     }
 }
@@ -415,14 +445,17 @@ impl CommWorld {
 
     /// Issue a gather of `payload` across the rank's `axis` group; returns
     /// a [`PendingGather`] resolved by [`PendingGather::wait`].  Payload
-    /// lengths may differ across members.
+    /// lengths may differ across members.  With [`Precision::Bf16`] every
+    /// member's payload is rounded to bf16 before distribution (§V-B) and
+    /// the byte accounting halves.
     pub fn issue_all_gather(
         &self,
         rank: usize,
         axis: Axis,
         payload: &[f32],
+        prec: Precision,
     ) -> PendingGather<'_> {
-        self.issue_gather_inner(rank, axis, payload, true)
+        self.issue_gather_inner(rank, axis, payload, prec, true)
     }
 
     fn issue_gather_inner(
@@ -430,6 +463,7 @@ impl CommWorld {
         rank: usize,
         axis: Axis,
         payload: &[f32],
+        prec: Precision,
         deferred: bool,
     ) -> PendingGather<'_> {
         let issued_at = Instant::now();
@@ -444,8 +478,8 @@ impl CommWorld {
                 issued_at,
             };
         }
-        self.account(axis, payload.len() as u64, Precision::Fp32, self.grid.axis_size(axis));
-        match self.transport.issue(rank, axis, CollKind::Gather, payload) {
+        self.account(axis, payload.len() as u64, prec, self.grid.axis_size(axis));
+        match self.transport.issue(rank, axis, CollKind::Gather(prec), payload) {
             Ok(seq) => {
                 PendingGather { world: self, axis, rank, seq, trivial: None, deferred, issued_at }
             }
@@ -474,12 +508,19 @@ impl CommWorld {
     /// Gather each member's payload; returns the payloads ordered by the
     /// member's index within the group.  Payload lengths may differ
     /// (blocking wrapper over issue + wait; excluded from the hidden-comm
-    /// timing).
-    pub fn all_gather(&self, rank: usize, axis: Axis, payload: &[f32]) -> Vec<Vec<f32>> {
+    /// timing).  With [`Precision::Bf16`] payloads are rounded before
+    /// distribution (§V-B) and the byte accounting halves.
+    pub fn all_gather(
+        &self,
+        rank: usize,
+        axis: Axis,
+        payload: &[f32],
+        prec: Precision,
+    ) -> Vec<Vec<f32>> {
         if self.grid.axis_size(axis) == 1 {
             return vec![payload.to_vec()];
         }
-        self.issue_gather_inner(rank, axis, payload, false).wait()
+        self.issue_gather_inner(rank, axis, payload, prec, false).wait()
     }
 
     /// Barrier across the rank's `axis` group.  Panics with the
@@ -761,12 +802,40 @@ mod tests {
         let grid = Grid4D::new(1, 1, 3, 1);
         let outs = run_ranks(grid, |rank, w| {
             let mine = vec![rank as f32; rank + 1]; // variable lengths
-            let all = w.all_gather(rank, Axis::Y, &mine);
+            let all = w.all_gather(rank, Axis::Y, &mine, Precision::Fp32);
             all.into_iter().flatten().collect()
         });
         for o in outs {
             assert_eq!(o, vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
         }
+    }
+
+    #[test]
+    fn bf16_gather_rounds_payloads_and_halves_bytes() {
+        let grid = Grid4D::new(1, 2, 1, 1);
+        let world = Arc::new(CommWorld::new(grid));
+        let mut hs = vec![];
+        for rank in 0..2usize {
+            let w = world.clone();
+            hs.push(std::thread::spawn(move || {
+                // a value with bits below bf16 precision
+                let mine = vec![1.0009765625f32 + rank as f32];
+                w.all_gather(rank, Axis::X, &mine, Precision::Bf16)
+            }));
+        }
+        for h in hs {
+            let parts = h.join().unwrap();
+            assert_eq!(parts.len(), 2);
+            for (r, p) in parts.iter().enumerate() {
+                let want = bf16_round(1.0009765625 + r as f32);
+                assert_eq!(p[0], want, "member {r} payload must be rounded");
+                assert_ne!(p[0], 1.0009765625 + r as f32);
+            }
+        }
+        // 1 elem x 2 bytes x 2 ranks accounted
+        let (ops, bytes) = world.stats(Axis::X);
+        assert_eq!(ops, 2);
+        assert_eq!(bytes, 2 * 2);
     }
 
     #[test]

@@ -276,7 +276,7 @@ fn reader_loop(conn: &mut Conn, sh: &Shared, rank: usize) {
                 drop(st);
                 sh.cv.notify_all();
             }
-            Ok(Msg::GatherResult { axis, seq, parts }) => {
+            Ok(Msg::GatherResult { axis, seq, parts, .. }) => {
                 let mut st = lock(&sh.state);
                 st.gathers.insert((axis.index(), seq), (parts, Instant::now()));
                 drop(st);

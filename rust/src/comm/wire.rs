@@ -14,9 +14,13 @@
 //!   12+n    4     CRC32 (u32 LE) over header + payload
 //! ```
 //!
-//! Every multi-byte integer is little-endian.  bf16 reduce contributions
-//! travel as the high 16 bits of the already-rounded f32 — lossless, at
-//! half the bytes, mirroring the §V-B byte accounting.
+//! Every multi-byte integer is little-endian.  bf16 contributions —
+//! reduce *and* gather — travel as the high 16 bits of the
+//! already-rounded f32, and a bf16 gather's broadcast result ships the
+//! same half-width bits back out, so both wire directions are lossless at
+//! half the bytes, mirroring the §V-B byte accounting.  (Wire version 2
+//! added the gather precision; version-1 peers are rejected with
+//! [`WireError::BadVersion`].)
 //!
 //! The decoder ([`read_msg`]) classifies every way a frame can be bad
 //! (truncated, wrong magic, unsupported version, unknown type, oversized
@@ -35,8 +39,9 @@ use crate::util::bf16_round;
 
 /// Frame magic: "PLSW" (PaLlaS Wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"PLSW";
-/// Wire protocol version; bumped on any frame-format change.
-pub const WIRE_VERSION: u16 = 1;
+/// Wire protocol version; bumped on any frame-format change (2: bf16
+/// gather contributions and half-width gather results).
+pub const WIRE_VERSION: u16 = 2;
 /// Hard cap on a frame payload (64 MiB) — a corrupted length prefix must
 /// fail fast, not trigger a giant allocation.
 pub const MAX_FRAME_PAYLOAD: usize = 64 << 20;
@@ -198,6 +203,9 @@ pub enum Msg {
         axis: Axis,
         /// Group sequence number.
         seq: u64,
+        /// Gather precision: bf16 results ship as high-16-bit halves
+        /// (the payloads are already rounded, so the transit is lossless).
+        prec: Precision,
         /// Per-member payloads ordered by index in group.
         parts: Vec<Vec<f32>>,
     },
@@ -274,6 +282,15 @@ impl Enc {
             self.0.extend_from_slice(&v.to_le_bytes());
         }
     }
+    /// bf16 payload: the high 16 bits of each (rounded) f32.  Rounding
+    /// here is idempotent when the caller already rounded, so both the
+    /// rank→coordinator and coordinator→rank legs use this one encoder.
+    fn bf16s(&mut self, vs: &[f32]) {
+        self.0.reserve(vs.len() * 2);
+        for &v in vs {
+            self.u16((bf16_round(v).to_bits() >> 16) as u16);
+        }
+    }
 }
 
 struct Dec<'a> {
@@ -307,6 +324,17 @@ impl<'a> Dec<'a> {
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(n * 4)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    /// Widen a bf16 payload (high-16-bit halves) back to f32.
+    fn bf16s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.take(n * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| {
+                let hi = u16::from_le_bytes(c.try_into().unwrap());
+                f32::from_bits((hi as u32) << 16)
+            })
+            .collect())
     }
     fn axis(&mut self) -> Result<Axis, WireError> {
         let c = self.u8()?;
@@ -343,19 +371,14 @@ fn encode(msg: &Msg) -> (FrameType, Vec<u8>) {
             e.u8(match kind {
                 CollKind::Reduce(Precision::Fp32) => 0,
                 CollKind::Reduce(Precision::Bf16) => 1,
-                CollKind::Gather => 2,
+                CollKind::Gather(Precision::Fp32) => 2,
+                CollKind::Gather(Precision::Bf16) => 3,
             });
             e.u64(*seq);
             e.u32(data.len() as u32);
-            if matches!(kind, CollKind::Reduce(Precision::Bf16)) {
-                // round here (idempotent if the caller already did): the
-                // high 16 bits then carry the full bf16 value — lossless
-                // at half the bytes
-                for &v in data {
-                    e.u16((bf16_round(v).to_bits() >> 16) as u16);
-                }
-            } else {
-                e.f32s(data);
+            match kind.precision() {
+                Precision::Bf16 => e.bf16s(data),
+                Precision::Fp32 => e.f32s(data),
             }
             FrameType::Contribute
         }
@@ -366,13 +389,20 @@ fn encode(msg: &Msg) -> (FrameType, Vec<u8>) {
             e.f32s(data);
             FrameType::ReduceResult
         }
-        Msg::GatherResult { axis, seq, parts } => {
+        Msg::GatherResult { axis, seq, prec, parts } => {
             e.u8(axis.code());
             e.u64(*seq);
+            e.u8(match prec {
+                Precision::Fp32 => 0,
+                Precision::Bf16 => 1,
+            });
             e.u32(parts.len() as u32);
             for p in parts {
                 e.u32(p.len() as u32);
-                e.f32s(p);
+                match prec {
+                    Precision::Bf16 => e.bf16s(p),
+                    Precision::Fp32 => e.f32s(p),
+                }
             }
             FrameType::GatherResult
         }
@@ -418,18 +448,9 @@ fn decode(ty: FrameType, payload: &[u8]) -> Result<Msg, WireError> {
             let n = d.u32()? as usize;
             let (kind, data) = match kc {
                 0 => (CollKind::Reduce(Precision::Fp32), d.f32s(n)?),
-                1 => {
-                    let raw = d.take(n * 2)?;
-                    let data = raw
-                        .chunks_exact(2)
-                        .map(|c| {
-                            let hi = u16::from_le_bytes(c.try_into().unwrap());
-                            f32::from_bits((hi as u32) << 16)
-                        })
-                        .collect();
-                    (CollKind::Reduce(Precision::Bf16), data)
-                }
-                2 => (CollKind::Gather, d.f32s(n)?),
+                1 => (CollKind::Reduce(Precision::Bf16), d.bf16s(n)?),
+                2 => (CollKind::Gather(Precision::Fp32), d.f32s(n)?),
+                3 => (CollKind::Gather(Precision::Bf16), d.bf16s(n)?),
                 k => return Err(WireError::Malformed(format!("unknown collective kind {k}"))),
             };
             Msg::Contribute { axis, seq, kind, data }
@@ -443,13 +464,23 @@ fn decode(ty: FrameType, payload: &[u8]) -> Result<Msg, WireError> {
         FrameType::GatherResult => {
             let axis = d.axis()?;
             let seq = d.u64()?;
+            let prec = match d.u8()? {
+                0 => Precision::Fp32,
+                1 => Precision::Bf16,
+                p => {
+                    return Err(WireError::Malformed(format!("unknown gather precision {p}")));
+                }
+            };
             let np = d.u32()? as usize;
             let mut parts = Vec::with_capacity(np.min(1 << 16));
             for _ in 0..np {
                 let n = d.u32()? as usize;
-                parts.push(d.f32s(n)?);
+                parts.push(match prec {
+                    Precision::Bf16 => d.bf16s(n)?,
+                    Precision::Fp32 => d.f32s(n)?,
+                });
             }
-            Msg::GatherResult { axis, seq, parts }
+            Msg::GatherResult { axis, seq, prec, parts }
         }
         FrameType::Barrier => Msg::Barrier { axis: d.axis()?, bseq: d.u64()? },
         FrameType::BarrierRelease => Msg::BarrierRelease { axis: d.axis()?, bseq: d.u64()? },
@@ -567,12 +598,30 @@ mod tests {
                 kind: CollKind::Reduce(Precision::Fp32),
                 data: vec![1.5, -2.25, 0.0],
             },
-            Msg::Contribute { axis: Axis::Dp, seq: 0, kind: CollKind::Gather, data: vec![9.0] },
+            Msg::Contribute {
+                axis: Axis::Dp,
+                seq: 0,
+                kind: CollKind::Gather(Precision::Fp32),
+                data: vec![9.0],
+            },
+            Msg::Contribute {
+                axis: Axis::Y,
+                seq: 4,
+                kind: CollKind::Gather(Precision::Bf16),
+                data: vec![crate::util::bf16_round(3.141)],
+            },
             Msg::ReduceResult { axis: Axis::X, seq: 2, data: vec![4.0; 5] },
             Msg::GatherResult {
                 axis: Axis::Z,
                 seq: 1,
+                prec: Precision::Fp32,
                 parts: vec![vec![1.0], vec![], vec![2.0, 3.0]],
+            },
+            Msg::GatherResult {
+                axis: Axis::Y,
+                seq: 6,
+                prec: Precision::Bf16,
+                parts: vec![vec![crate::util::bf16_round(-0.5)], vec![]],
             },
             Msg::Barrier { axis: Axis::X, bseq: 11 },
             Msg::BarrierRelease { axis: Axis::X, bseq: 11 },
@@ -619,6 +668,70 @@ mod tests {
         match read_msg(&mut &buf[..]).unwrap() {
             Msg::Contribute { data, .. } => {
                 for (a, b) in data.iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bf16 wire transit must be lossless");
+                }
+            }
+            m => panic!("decoded {m:?}"),
+        }
+    }
+
+    #[test]
+    fn bf16_gathers_ship_half_width_in_both_directions() {
+        let vals: Vec<f32> = vec![1.0009765625, -3.75, 0.0, 1e-30, 6.5e4]
+            .into_iter()
+            .map(crate::util::bf16_round)
+            .collect();
+        // contribution leg
+        let frame_len = |kind: CollKind| {
+            let mut b = Vec::new();
+            write_msg(
+                &mut b,
+                &Msg::Contribute { axis: Axis::X, seq: 0, kind, data: vals.clone() },
+            )
+            .unwrap();
+            b.len()
+        };
+        assert_eq!(
+            frame_len(CollKind::Gather(Precision::Fp32))
+                - frame_len(CollKind::Gather(Precision::Bf16)),
+            vals.len() * 2,
+            "bf16 gather contributions ship 2 bytes/elem"
+        );
+        // result leg
+        let result_len = |prec: Precision| {
+            let mut b = Vec::new();
+            write_msg(
+                &mut b,
+                &Msg::GatherResult {
+                    axis: Axis::X,
+                    seq: 0,
+                    prec,
+                    parts: vec![vals.clone(), vals.clone()],
+                },
+            )
+            .unwrap();
+            b.len()
+        };
+        assert_eq!(
+            result_len(Precision::Fp32) - result_len(Precision::Bf16),
+            2 * vals.len() * 2,
+            "bf16 gather results ship 2 bytes/elem per part"
+        );
+        // both legs are lossless on already-rounded payloads
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::GatherResult {
+                axis: Axis::X,
+                seq: 0,
+                prec: Precision::Bf16,
+                parts: vec![vals.clone()],
+            },
+        )
+        .unwrap();
+        match read_msg(&mut &buf[..]).unwrap() {
+            Msg::GatherResult { parts, .. } => {
+                for (a, b) in parts[0].iter().zip(&vals) {
                     assert_eq!(a.to_bits(), b.to_bits(), "bf16 wire transit must be lossless");
                 }
             }

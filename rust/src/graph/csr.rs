@@ -187,9 +187,7 @@ impl Csr {
                 let yrow = &mut yb[i * d..(i + 1) * d];
                 for (&c, &v) in cs.iter().zip(vs) {
                     let xrow = &x_data[c as usize * d..(c as usize + 1) * d];
-                    for j in 0..d {
-                        yrow[j] += v * xrow[j];
-                    }
+                    crate::tensor::simd::axpy(yrow, v, xrow);
                 }
             }
         });
@@ -254,9 +252,7 @@ impl Csr {
                             aggrow.fill(0.0);
                             for (&c, &v) in cs.iter().zip(vs) {
                                 let xrow = &x_data[c as usize * d..(c as usize + 1) * d];
-                                for j in 0..d {
-                                    aggrow[j] += v * xrow[j];
-                                }
+                                crate::tensor::simd::axpy(&mut aggrow, v, xrow);
                             }
                             gemm_row(&aggrow, w_data, p, &mut ob[i * p..(i + 1) * p]);
                         }
@@ -388,9 +384,7 @@ fn fused_rows(
         let arow = &mut agg_block[i * d..(i + 1) * d];
         for (&c, &v) in cs.iter().zip(vs) {
             let xrow = &x[c as usize * d..(c as usize + 1) * d];
-            for j in 0..d {
-                arow[j] += v * xrow[j];
-            }
+            crate::tensor::simd::axpy(arow, v, xrow);
         }
         gemm_row(arow, w, p, &mut out_block[i * p..(i + 1) * p]);
     }

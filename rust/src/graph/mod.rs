@@ -12,4 +12,4 @@ pub use csr::Csr;
 pub use datasets::{load, registry, spec, DatasetSpec};
 pub use generate::{planted_partition, rmat, Dataset, PlantedConfig};
 pub use partition::{block_bounds, extract_shard_from, partition_2d, CsrShard};
-pub use store::{open_or_pack, pack, GraphAccess, OocGraph, VertexData};
+pub use store::{open_or_pack, pack, pack_with, GraphAccess, OocGraph, VertexData};

@@ -2,7 +2,7 @@
 //! bounded-memory reader, which let the mini-batch pipeline train on graphs
 //! that never fully reside in RAM (the papers100M scenario of §VI-C).
 //!
-//! # Container format (version 1, little-endian)
+//! # Container format (version 2, little-endian)
 //!
 //! ```text
 //! header (64 B): magic "PALLASG1" | version u32 | flags u32
@@ -11,19 +11,27 @@
 //! sections:      indptr   (n+1) x u64     CSR row offsets (normalized adj)
 //!                indices  nnz x u32       column ids, sorted per row
 //!                values   nnz x f32       GCN-normalized edge weights
-//!                features n x d_in x f32  row-major vertex features
+//!                features n x d_in x f32|bf16  row-major vertex features
 //!                labels   n x u32
 //!                split    n x u8          0 = train, 1 = val, 2 = test
+//!                crcs     6 x u32         per-section CRC32, section order
 //! ```
+//!
+//! Flags bit 0 selects the on-disk feature element (§V-B low precision):
+//! 0 = f32, 1 = bf16 (`scalegnn pack --feat-precision bf16`).  A bf16 store
+//! moves half the feature bytes per batch and the pinned-block cache holds
+//! twice the features per byte of budget; reads widen back to f32 through
+//! the SIMD batch conversion (`tensor::simd::widen_bf16`).
 //!
 //! Section offsets are a pure function of the header counts, so the expected
 //! file size is known up front: `OocGraph::open` validates magic, version,
-//! exact length AND the full indptr table (monotone from 0 to nnz) and
-//! returns a clean error — never a panic — on truncated or structurally
-//! corrupt files; every later row read is guaranteed in-bounds.  (Cell-level
-//! corruption of indices/values/features is not checksummed.)  `pack` writes
-//! through a `.tmp` sibling and renames into place, so an interrupted pack
-//! never leaves a half-written container at the target path.
+//! exact length, every section's CRC32 (streamed with a bounded buffer; a
+//! flipped byte anywhere is reported as a *named* corrupt section) AND the
+//! full indptr table (monotone from 0 to nnz), returning a clean error —
+//! never a panic — on truncated or corrupt files; every later row read is
+//! guaranteed in-bounds.  `pack` writes through a `.tmp` sibling and renames
+//! into place, so an interrupted pack never leaves a half-written container
+//! at the target path.
 //!
 //! # Reader
 //!
@@ -57,15 +65,22 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::csr::Csr;
 use super::generate::Dataset;
+use crate::checkpoint::Crc32;
+use crate::comm::Precision;
 
 /// File magic: "PALLASG1" (pallas graph container, generation 1).
 pub const MAGIC: [u8; 8] = *b"PALLASG1";
-/// Current container format version.
-pub const VERSION: u32 = 1;
+/// Current container format version (2 added bf16 features + section CRCs).
+pub const VERSION: u32 = 2;
 /// Fixed header size in bytes (magic + version + flags + 4 counts + pad).
 pub const HEADER_BYTES: u64 = 64;
 /// Cache block size: one `read_at` unit of the pinned-block LRU cache.
+/// Even, so 2-byte bf16 feature elements never straddle a block boundary.
 pub const BLOCK_BYTES: usize = 64 * 1024;
+/// Header flags bit 0: features are stored as bf16 (high half of the f32).
+const FLAG_FEAT_BF16: u32 = 1;
+/// Number of checksummed sections (indptr through split, in file order).
+const SECTION_COUNT: usize = 6;
 
 /// Uniform read access to a CSR adjacency that may live in RAM or on disk.
 ///
@@ -199,39 +214,46 @@ struct SectionLayout {
     features: u64,
     labels: u64,
     split: u64,
+    crcs: u64,
     total: u64,
 }
 
-/// Section offsets for the given counts; `None` when the sizes overflow
-/// u64 (only reachable through a corrupt header — rejecting it here keeps
+/// Section offsets for the given counts and on-disk feature element size
+/// (4 for f32, 2 for bf16); `None` when the sizes overflow u64 (only
+/// reachable through a corrupt header — rejecting it here keeps
 /// `OocGraph::open`'s never-panic contract).
-fn layout(n: u64, nnz: u64, d_in: u64) -> Option<SectionLayout> {
+fn layout(n: u64, nnz: u64, d_in: u64, feat_elem: u64) -> Option<SectionLayout> {
     let indptr = HEADER_BYTES;
     let indices = indptr.checked_add(n.checked_add(1)?.checked_mul(8)?)?;
     let values = indices.checked_add(nnz.checked_mul(4)?)?;
     let features = values.checked_add(nnz.checked_mul(4)?)?;
-    let labels = features.checked_add(n.checked_mul(d_in)?.checked_mul(4)?)?;
+    let labels = features.checked_add(n.checked_mul(d_in)?.checked_mul(feat_elem)?)?;
     let split = labels.checked_add(n.checked_mul(4)?)?;
-    let total = split.checked_add(n)?;
-    Some(SectionLayout { indptr, indices, values, features, labels, split, total })
+    let crcs = split.checked_add(n)?;
+    let total = crcs.checked_add(4 * SECTION_COUNT as u64)?;
+    Some(SectionLayout { indptr, indices, values, features, labels, split, crcs, total })
 }
 
 /// Buffered little-endian serialization of a slice; `enc` encodes one
-/// element (the single writer all sections go through).
+/// element (the single writer all sections go through).  Returns the
+/// CRC32 of the bytes written — the section checksum stored in the
+/// container's crc table.
 fn write_le<W: Write, T: Copy, const N: usize>(
     w: &mut W,
     xs: &[T],
     enc: impl Fn(T) -> [u8; N],
-) -> std::io::Result<()> {
+) -> std::io::Result<u32> {
+    let mut crc = Crc32::new();
     let mut buf = Vec::with_capacity(N * 8192);
     for chunk in xs.chunks(8192) {
         buf.clear();
         for &x in chunk {
             buf.extend_from_slice(&enc(x));
         }
+        crc.update(&buf);
         w.write_all(&buf)?;
     }
-    Ok(())
+    Ok(crc.finish())
 }
 
 /// Deterministic identity tag of a dataset name, stored in the container
@@ -254,11 +276,20 @@ pub struct PackStats {
 }
 
 /// Serialize an in-memory [`Dataset`] into a `.pallas` container at `path`
+/// (overwriting any existing file) with f32 features — see [`pack_with`].
+pub fn pack(data: &Dataset, path: &Path) -> Result<PackStats> {
+    pack_with(data, path, Precision::Fp32)
+}
+
+/// Serialize an in-memory [`Dataset`] into a `.pallas` container at `path`
 /// (overwriting any existing file).  The normalized adjacency (`data.adj`),
 /// features, labels and split are stored; see the module docs for the exact
-/// layout.  The bytes go to a `.tmp` sibling first and are renamed into
-/// place, so a crash mid-pack never leaves a truncated container at `path`.
-pub fn pack(data: &Dataset, path: &Path) -> Result<PackStats> {
+/// layout.  `feat` selects the on-disk feature element: [`Precision::Bf16`]
+/// rounds each feature once (round-to-nearest-even, via the SIMD batch
+/// narrow) and halves the feature section.  The bytes go to a `.tmp`
+/// sibling first and are renamed into place, so a crash mid-pack never
+/// leaves a truncated container at `path`.
+pub fn pack_with(data: &Dataset, path: &Path, feat: Precision) -> Result<PackStats> {
     let n = data.n;
     if data.adj.rows != n || data.adj.cols != n {
         bail!("pack: adjacency must be square n x n (got {}x{})", data.adj.rows, data.adj.cols);
@@ -268,7 +299,7 @@ pub fn pack(data: &Dataset, path: &Path) -> Result<PackStats> {
     }
     let nnz = data.adj.nnz();
     let d_in = data.features.cols;
-    let lay = layout(n as u64, nnz as u64, d_in as u64)
+    let lay = layout(n as u64, nnz as u64, d_in as u64, feat.bytes_per_elem())
         .ok_or_else(|| anyhow!("pack: dataset sizes overflow the container format"))?;
 
     // pid-unique tmp sibling: concurrent packs of the same destination each
@@ -283,19 +314,47 @@ pub fn pack(data: &Dataset, path: &Path) -> Result<PackStats> {
         let mut w = std::io::BufWriter::new(f);
         w.write_all(&MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&0u32.to_le_bytes())?; // flags (reserved)
+        let flags = match feat {
+            Precision::Fp32 => 0u32,
+            Precision::Bf16 => FLAG_FEAT_BF16,
+        };
+        w.write_all(&flags.to_le_bytes())?;
         for v in [n as u64, nnz as u64, d_in as u64, data.classes as u64] {
             w.write_all(&v.to_le_bytes())?;
         }
         w.write_all(&name_tag(&data.name).to_le_bytes())?;
         w.write_all(&[0u8; 8])?; // reserved padding up to HEADER_BYTES
 
-        write_le(&mut w, &data.adj.indptr, |p| (p as u64).to_le_bytes())?;
-        write_le(&mut w, &data.adj.indices, |x| x.to_le_bytes())?;
-        write_le(&mut w, &data.adj.values, |x| x.to_le_bytes())?;
-        write_le(&mut w, &data.features.data, |x| x.to_le_bytes())?;
-        write_le(&mut w, &data.labels, |x| x.to_le_bytes())?;
+        let mut crcs = [0u32; SECTION_COUNT];
+        crcs[0] = write_le(&mut w, &data.adj.indptr, |p| (p as u64).to_le_bytes())?;
+        crcs[1] = write_le(&mut w, &data.adj.indices, |x| x.to_le_bytes())?;
+        crcs[2] = write_le(&mut w, &data.adj.values, |x| x.to_le_bytes())?;
+        crcs[3] = match feat {
+            Precision::Fp32 => write_le(&mut w, &data.features.data, |x| x.to_le_bytes())?,
+            Precision::Bf16 => {
+                // narrow in bounded chunks through the SIMD batch kernel
+                let mut crc = Crc32::new();
+                let mut bits = [0u16; 8192];
+                let mut buf = Vec::with_capacity(2 * 8192);
+                for chunk in data.features.data.chunks(8192) {
+                    let bs = &mut bits[..chunk.len()];
+                    crate::tensor::simd::narrow_bf16(chunk, bs);
+                    buf.clear();
+                    for b in bs.iter() {
+                        buf.extend_from_slice(&b.to_le_bytes());
+                    }
+                    crc.update(&buf);
+                    w.write_all(&buf)?;
+                }
+                crc.finish()
+            }
+        };
+        crcs[4] = write_le(&mut w, &data.labels, |x| x.to_le_bytes())?;
+        crcs[5] = crate::checkpoint::crc32(&data.split);
         w.write_all(&data.split)?;
+        for c in crcs {
+            w.write_all(&c.to_le_bytes())?;
+        }
         w.flush()?;
         // data must be durable BEFORE the rename is journaled, or a crash
         // could leave a correct-length file with zeroed sections in place
@@ -407,6 +466,9 @@ pub struct OocGraph {
     pub classes: usize,
     /// Identity tag written by `pack` ([`name_tag`] of the dataset name).
     pub source_tag: u64,
+    /// On-disk feature element precision (header flags bit 0): reads always
+    /// return f32, widening from bf16 when the store was packed that way.
+    pub feat_precision: Precision,
     cache: Mutex<BlockCache>,
 }
 
@@ -442,10 +504,20 @@ impl OocGraph {
                 path.display()
             );
         }
+        let flags = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+        if flags & !FLAG_FEAT_BF16 != 0 {
+            bail!(
+                "pallas store {}: unknown header flags {flags:#x} (this build understands {:#x})",
+                path.display(),
+                FLAG_FEAT_BF16
+            );
+        }
+        let feat_precision =
+            if flags & FLAG_FEAT_BF16 != 0 { Precision::Bf16 } else { Precision::Fp32 };
         let field = |o: usize| u64::from_le_bytes(hdr[o..o + 8].try_into().unwrap());
         let (n, nnz, d_in, classes) = (field(16), field(24), field(32), field(40));
         let source_tag = field(48);
-        let lay = layout(n, nnz, d_in).ok_or_else(|| {
+        let lay = layout(n, nnz, d_in, feat_precision.bytes_per_elem()).ok_or_else(|| {
             anyhow!("pallas store {}: corrupt header counts (sizes overflow)", path.display())
         })?;
         if file_len != lay.total {
@@ -454,6 +526,39 @@ impl OocGraph {
                 path.display(),
                 lay.total
             );
+        }
+        // verify every section checksum, streaming with a bounded buffer:
+        // a flipped byte anywhere in the payload is reported as a *named*
+        // corrupt section instead of surfacing later as wrong numbers
+        let mut crc_table = [0u8; 4 * SECTION_COUNT];
+        file.read_exact_at(&mut crc_table, lay.crcs)?;
+        let sections: [(&str, u64, u64); SECTION_COUNT] = [
+            ("indptr", lay.indptr, lay.indices),
+            ("indices", lay.indices, lay.values),
+            ("values", lay.values, lay.features),
+            ("features", lay.features, lay.labels),
+            ("labels", lay.labels, lay.split),
+            ("split", lay.split, lay.crcs),
+        ];
+        let mut buf = vec![0u8; 64 * 1024];
+        for (i, &(name, start, end)) in sections.iter().enumerate() {
+            let stored = u32::from_le_bytes(crc_table[4 * i..4 * i + 4].try_into().unwrap());
+            let mut crc = Crc32::new();
+            let mut off = start;
+            while off < end {
+                let take = ((end - off) as usize).min(buf.len());
+                file.read_exact_at(&mut buf[..take], off)?;
+                crc.update(&buf[..take]);
+                off += take as u64;
+            }
+            let computed = crc.finish();
+            if computed != stored {
+                bail!(
+                    "pallas store {}: corrupt {name} section \
+                     (crc mismatch: stored {stored:08x}, computed {computed:08x})",
+                    path.display()
+                );
+            }
         }
         // stream-validate the indptr table: starts at 0, monotone, ends at
         // nnz — the invariant every row_range/read_row relies on
@@ -496,6 +601,7 @@ impl OocGraph {
             d_in: d_in as usize,
             classes: classes as usize,
             source_tag,
+            feat_precision,
             cache: Mutex::new(BlockCache::new(cache_bytes)),
         })
     }
@@ -517,27 +623,28 @@ impl OocGraph {
         }
     }
 
-    /// Walk `n_elems` 4-byte elements starting at 4-byte-aligned `off`,
+    /// Walk `n_elems` `elem`-byte elements starting at `elem`-aligned `off`,
     /// handing `f` one contiguous little-endian byte run (a whole number of
     /// elements) per block visit, straight out of the cache blocks.
-    /// Sections and blocks are both 4-byte aligned, so an element never
-    /// straddles a block boundary and the hot path performs no heap
-    /// allocation.  The single block-walk all typed readers go through;
-    /// callers bulk-decode each run, so the indirect call is per block, not
-    /// per element.
-    fn walk_runs_cached(&self, mut off: u64, n_elems: usize, f: &mut dyn FnMut(&[u8])) {
-        debug_assert_eq!(off % 4, 0);
+    /// Sections start `elem`-aligned and [`BLOCK_BYTES`] is a multiple of
+    /// every element size (4 for the graph sections, 2 for bf16 features),
+    /// so an element never straddles a block boundary and the hot path
+    /// performs no heap allocation.  The single block-walk all typed
+    /// readers go through; callers bulk-decode each run, so the indirect
+    /// call is per block, not per element.
+    fn walk_runs_cached(&self, mut off: u64, n_elems: usize, elem: usize, f: &mut dyn FnMut(&[u8])) {
+        debug_assert_eq!(off % elem as u64, 0);
         let mut cache = self.cache.lock().unwrap();
         let mut remaining = n_elems;
         while remaining > 0 {
             let id = off / BLOCK_BYTES as u64;
             let in_off = (off % BLOCK_BYTES as u64) as usize;
             let blk = cache.block(&self.file, self.file_len, id);
-            let take = remaining.min((blk.len() - in_off) / 4);
+            let take = remaining.min((blk.len() - in_off) / elem);
             debug_assert!(take > 0);
-            f(&blk[in_off..in_off + 4 * take]);
+            f(&blk[in_off..in_off + elem * take]);
             remaining -= take;
-            off += 4 * take as u64;
+            off += (elem * take) as u64;
         }
     }
 
@@ -545,7 +652,7 @@ impl OocGraph {
     fn read_f32s_slice_cached(&self, off: u64, out: &mut [f32]) {
         let n = out.len();
         let mut done = 0usize;
-        self.walk_runs_cached(off, n, &mut |run| {
+        self.walk_runs_cached(off, n, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
                 out[done] = f32::from_le_bytes(ch.try_into().unwrap());
                 done += 1;
@@ -553,10 +660,29 @@ impl OocGraph {
         });
     }
 
+    /// Decode bf16 feature elements from `off`, widening into `out`
+    /// through the SIMD batch conversion (a fixed stack scratch per block
+    /// run, no heap allocation).
+    fn read_bf16s_slice_cached(&self, off: u64, out: &mut [f32]) {
+        let n = out.len();
+        let mut done = 0usize;
+        let mut bits = [0u16; 256];
+        self.walk_runs_cached(off, n, 2, &mut |run| {
+            for bytes in run.chunks(2 * 256) {
+                let m = bytes.len() / 2;
+                for (b, ch) in bits[..m].iter_mut().zip(bytes.chunks_exact(2)) {
+                    *b = u16::from_le_bytes(ch.try_into().unwrap());
+                }
+                crate::tensor::simd::widen_bf16(&bits[..m], &mut out[done..done + m]);
+                done += m;
+            }
+        });
+    }
+
     /// Decode `n_elems` f32s from `off`, appending to `out`.
     fn read_f32s_vec_cached(&self, off: u64, n_elems: usize, out: &mut Vec<f32>) {
         out.reserve(n_elems);
-        self.walk_runs_cached(off, n_elems, &mut |run| {
+        self.walk_runs_cached(off, n_elems, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
                 out.push(f32::from_le_bytes(ch.try_into().unwrap()));
             }
@@ -566,7 +692,7 @@ impl OocGraph {
     /// Decode `n_elems` u32s from `off`, appending to `out`.
     fn read_u32s_vec_cached(&self, off: u64, n_elems: usize, out: &mut Vec<u32>) {
         out.reserve(n_elems);
-        self.walk_runs_cached(off, n_elems, &mut |run| {
+        self.walk_runs_cached(off, n_elems, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
                 out.push(u32::from_le_bytes(ch.try_into().unwrap()));
             }
@@ -624,6 +750,7 @@ impl std::fmt::Debug for OocGraph {
             .field("nnz", &self.nnz)
             .field("d_in", &self.d_in)
             .field("classes", &self.classes)
+            .field("feat_precision", &self.feat_precision)
             .field("file_len", &self.file_len)
             .finish()
     }
@@ -672,7 +799,15 @@ impl VertexData for OocGraph {
     fn read_features(&self, v: usize, out: &mut [f32]) {
         assert!(v < self.n, "vertex {v} out of range (n = {})", self.n);
         assert_eq!(out.len(), self.d_in, "feature buffer must be d_in long");
-        self.read_f32s_slice_cached(self.lay.features + 4 * (v as u64) * self.d_in as u64, out);
+        let row = (v as u64) * self.d_in as u64;
+        match self.feat_precision {
+            Precision::Fp32 => {
+                self.read_f32s_slice_cached(self.lay.features + 4 * row, out);
+            }
+            Precision::Bf16 => {
+                self.read_bf16s_slice_cached(self.lay.features + 2 * row, out);
+            }
+        }
     }
 
     fn label_of(&self, v: usize) -> u32 {
@@ -726,21 +861,26 @@ mod tests {
 
     #[test]
     fn layout_is_contiguous_and_sized() {
-        let l = layout(10, 33, 4).unwrap();
+        let l = layout(10, 33, 4, 4).unwrap();
         assert_eq!(l.indptr, HEADER_BYTES);
         assert_eq!(l.indices, l.indptr + 8 * 11);
         assert_eq!(l.values, l.indices + 4 * 33);
         assert_eq!(l.features, l.values + 4 * 33);
         assert_eq!(l.labels, l.features + 4 * 40);
         assert_eq!(l.split, l.labels + 4 * 10);
-        assert_eq!(l.total, l.split + 10);
+        assert_eq!(l.crcs, l.split + 10);
+        assert_eq!(l.total, l.crcs + 4 * SECTION_COUNT as u64);
+        // bf16 features halve exactly the feature section
+        let h = layout(10, 33, 4, 2).unwrap();
+        assert_eq!(h.labels, h.features + 2 * 40);
+        assert_eq!(l.total - h.total, 2 * 40);
     }
 
     #[test]
     fn overflowing_header_counts_are_rejected() {
-        assert!(layout(u64::MAX, 1, 1).is_none());
-        assert!(layout(1, u64::MAX, 1).is_none());
-        assert!(layout(1 << 40, 1, 1 << 40).is_none());
+        assert!(layout(u64::MAX, 1, 1, 4).is_none());
+        assert!(layout(1, u64::MAX, 1, 4).is_none());
+        assert!(layout(1 << 40, 1, 1 << 40, 4).is_none());
     }
 
     #[test]
@@ -803,6 +943,83 @@ mod tests {
         let s = g.cache_stats();
         assert!(s.resident_bytes <= BLOCK_BYTES, "resident {}", s.resident_bytes);
         assert_eq!(s.misses, 3, "hits {} misses {}", s.hits, s.misses);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bf16_store_halves_features_and_widens_rounded_values() {
+        let d = datasets::load("tiny").unwrap();
+        let pf = tmp("bf16_f32");
+        let ph = tmp("bf16_half");
+        let f32_stats = pack_with(&d, &pf, Precision::Fp32).unwrap();
+        let bf16_stats = pack_with(&d, &ph, Precision::Bf16).unwrap();
+        // exactly the feature section shrinks, by 2 bytes per element
+        assert_eq!(f32_stats.bytes - bf16_stats.bytes, 2 * (d.n * d.features.cols) as u64);
+
+        let g = OocGraph::open(&ph, 4 << 20).unwrap();
+        assert_eq!(g.feat_precision, Precision::Bf16);
+        // adjacency is untouched by the feature precision
+        let csr = g.read_csr();
+        assert_eq!(csr.indices, d.adj.indices);
+        // features come back as exactly the bf16 rounding of the originals
+        let dcols = d.features.cols;
+        let mut feat = vec![0.0f32; dcols];
+        for v in [0usize, 1, d.n / 2, d.n - 1] {
+            g.read_features(v, &mut feat);
+            for (j, (a, b)) in feat.iter().zip(&d.features.data[v * dcols..(v + 1) * dcols]).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    crate::util::bf16_round(*b).to_bits(),
+                    "vertex {v} feature {j}"
+                );
+            }
+            assert_eq!(g.label_of(v), d.labels[v]);
+            assert_eq!(g.split_of(v), d.split[v]);
+        }
+        std::fs::remove_file(&pf).ok();
+        std::fs::remove_file(&ph).ok();
+    }
+
+    #[test]
+    fn corrupt_sections_are_reported_by_name() {
+        let d = datasets::load("tiny").unwrap();
+        let p = tmp("crc");
+        pack(&d, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let lay = layout(d.n as u64, d.adj.nnz() as u64, d.features.cols as u64, 4).unwrap();
+        for (name, off) in [
+            ("values", lay.values + 5),
+            ("features", lay.features + 7),
+            ("labels", lay.labels + 2),
+            ("split", lay.split),
+        ] {
+            let mut bad = full.clone();
+            bad[off as usize] ^= 0x55;
+            std::fs::write(&p, &bad).unwrap();
+            let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains(&format!("corrupt {name} section")),
+                "flip in {name} at {off}: {msg}"
+            );
+        }
+        // untouched file still opens
+        std::fs::write(&p, &full).unwrap();
+        assert!(OocGraph::open(&p, 1 << 20).is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let d = datasets::load("tiny").unwrap();
+        let p = tmp("flags");
+        pack(&d, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[13] = 0x80; // set a flag bit this build does not understand
+        std::fs::write(&p, &bytes).unwrap();
+        let e = OocGraph::open(&p, 1 << 20).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown header flags"), "{e:#}");
         std::fs::remove_file(&p).ok();
     }
 }

@@ -7,16 +7,19 @@
 //! ```text
 //! scalegnn info
 //! scalegnn run        --spec FILE.json [--stats-json F] [--jsonl F]
-//!                     [--log-every N] [--quiet]
+//!                     [--precision fp32|bf16] [--log-every N] [--quiet]
 //! scalegnn train      --dataset products_sim [--sampler scalegnn|sage|saint]
 //!                     [--dp N] [--epochs E | --steps S] [--target-acc A]
-//!                     [--lr F] [--no-prefetch] [--overlap on|off] [--verbose]
+//!                     [--lr F] [--precision fp32|bf16] [--no-prefetch]
+//!                     [--overlap on|off] [--verbose]
 //! scalegnn train      --from-store graph.pallas [--dataset papers100m_ooc]
 //!                     [--cache-mb M] [--steps S] [--batch B] [--lr F]
 //!                     [--checkpoint-dir D [--checkpoint-every N]
 //!                      [--checkpoint-keep K] [--resume]]
 //! scalegnn pack       --dataset papers100m_ooc [--out graph.pallas]
-//! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S] [--bf16]
+//!                     [--feat-precision fp32|bf16]
+//! scalegnn pmm-train  --dataset tiny --grid 1x2x2x2 [--steps S]
+//!                     [--precision fp32|bf16]
 //!                     [--overlap on|off] [--stats-json FILE]
 //!                     [--checkpoint-dir D [--checkpoint-every N]
 //!                      [--checkpoint-keep K] [--resume]
@@ -104,6 +107,12 @@ directly: --jsonl F streams one JSON object per step, --stats-json F
 writes {"spec", "report"} (self-identifying), --log-every N / --quiet
 control stderr logging.
 
+§V-B low precision: run/train/pmm-train accept --precision fp32|bf16
+(bf16 collective payloads: gathers and reduces ship half the bytes;
+pmm-train's old --bf16 flag remains as a deprecated alias).  pack accepts
+--feat-precision fp32|bf16 to store .pallas features at half width (reads
+widen back to f32 through the SIMD batch conversion).
+
 §V-D overlap: train/pmm-train accept --overlap on|off (nonblocking chunked
 collectives; pmm-train reports the measured hidden-comm fraction per axis,
 --stats-json FILE writes it).  The sim commands accept --overlap on|off and
@@ -127,6 +136,18 @@ launch recipe).
 
 Run `cargo bench` to regenerate every paper table/figure.
 ";
+
+/// Parse `--precision fp32|bf16` (§V-B); `None` when the flag was not
+/// given, a descriptive error on any other value.
+fn precision_opt(args: &Args, key: &str) -> Result<Option<Precision>> {
+    match args.str_opt(key) {
+        Some(p) => match Precision::parse(&p) {
+            Some(v) => Ok(Some(v)),
+            None => bail!("--{key} must be fp32|bf16, got '{p}'"),
+        },
+        None => Ok(None),
+    }
+}
 
 /// Map `--checkpoint-dir D [--checkpoint-every N] [--checkpoint-keep K]`
 /// and `--resume` onto the spec's checkpoint section.
@@ -212,7 +233,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
-        &["spec", "stats-json", "jsonl", "log-every", "transport", "rank"],
+        &["spec", "stats-json", "jsonl", "log-every", "transport", "rank", "precision"],
         &["quiet"],
     )
     .map_err(|e| anyhow!(e))?;
@@ -224,6 +245,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut spec =
         RunSpec::from_json_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
     apply_transport_flags(args, &mut spec)?;
+    if let Some(p) = precision_opt(args, "precision")? {
+        spec.precision = p;
+    }
     let mut obs: Vec<Box<dyn StepObserver>> = Vec::new();
     if !args.flag("quiet") {
         let every = args.get_or("log-every", 1u64).map_err(|e| anyhow!(e))?;
@@ -306,16 +330,24 @@ fn print_summary(report: &RunReport) {
 }
 
 fn cmd_pack(args: &Args) -> Result<()> {
-    args.check_known("pack", &["dataset", "out"], &[]).map_err(|e| anyhow!(e))?;
+    args.check_known("pack", &["dataset", "out", "feat-precision"], &[])
+        .map_err(|e| anyhow!(e))?;
     let dataset = args.str_or("dataset", "papers100m_ooc");
     let out = args
         .path_opt("out")
         .unwrap_or_else(|| PathBuf::from(format!("{dataset}.pallas")));
+    let feat = precision_opt(args, "feat-precision")?.unwrap_or(Precision::Fp32);
     let t0 = std::time::Instant::now();
     println!("generating {dataset}...");
     let data = datasets::load(&dataset).ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
-    println!("packing {} vertices / {} edges into {}", data.n, data.adj.nnz(), out.display());
-    let stats = scalegnn::graph::store::pack(&data, &out)?;
+    println!(
+        "packing {} vertices / {} edges into {} ({} features)",
+        data.n,
+        data.adj.nnz(),
+        out.display(),
+        feat.name()
+    );
+    let stats = scalegnn::graph::store::pack_with(&data, &out, feat)?;
     println!(
         "wrote {} ({} bytes = {:.1} MiB) in {}",
         out.display(),
@@ -395,7 +427,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "train",
         &[
             "dataset", "sampler", "dp", "epochs", "steps", "target-acc", "lr", "seed", "overlap",
-            "artifacts", "eval-every-epochs",
+            "artifacts", "eval-every-epochs", "precision",
         ],
         &["no-prefetch", "verbose", "v"],
     )
@@ -414,6 +446,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     spec.epochs = args.get_or("epochs", 20).map_err(|e| anyhow!(e))?;
     spec.prefetch = !args.flag("no-prefetch");
     spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
+    if let Some(p) = precision_opt(args, "precision")? {
+        spec.precision = p;
+    }
     spec.eval_every_epochs = args.get_or("eval-every-epochs", 1).map_err(|e| anyhow!(e))?;
     if let Some(t) = args.get::<f32>("target-acc").map_err(|e| anyhow!(e))? {
         spec.target_acc = Some(t);
@@ -444,7 +479,7 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         &[
             "dataset", "grid", "steps", "lr", "seed", "batch", "d-h", "layers", "dropout",
             "overlap", "stats-json", "checkpoint-dir", "checkpoint-every", "checkpoint-keep",
-            "kill-rank", "kill-step", "transport", "rank",
+            "kill-rank", "kill-step", "transport", "rank", "precision",
         ],
         &["bf16", "resume", "verbose", "v"],
     )
@@ -462,7 +497,19 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
     if let Some(b) = args.get::<usize>("batch").map_err(|e| anyhow!(e))? {
         spec.batch = Some(b);
     }
-    spec.precision = if args.flag("bf16") { Precision::Bf16 } else { Precision::Fp32 };
+    spec.precision = match precision_opt(args, "precision")? {
+        Some(p) => {
+            if args.flag("bf16") && p != Precision::Bf16 {
+                bail!("--bf16 and --precision {} conflict", p.name());
+            }
+            p
+        }
+        None if args.flag("bf16") => {
+            eprintln!("warning: --bf16 is deprecated, use --precision bf16");
+            Precision::Bf16
+        }
+        None => Precision::Fp32,
+    };
     spec.overlap = args.on_off("overlap", true).map_err(|e| anyhow!(e))?;
     apply_checkpoint_flags(args, &mut spec)?;
     match (

@@ -466,7 +466,7 @@ impl<'a> PmmGcn<'a> {
             let parts = self
                 .ctx
                 .world
-                .all_gather(self.ctx.rank, fl.row_axis, &self.g[l]);
+                .all_gather(self.ctx.rank, fl.row_axis, &self.g[l], Precision::Fp32);
             out.push(Mat::from_vec(
                 1,
                 self.dims.d_h,
@@ -672,7 +672,10 @@ impl<'a> PmmGcn<'a> {
         let local_max: Vec<f32> = (0..rows)
             .map(|r| logits.local.row(r).iter().cloned().fold(f32::NEG_INFINITY, f32::max))
             .collect();
-        let maxes = self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_max);
+        // loss reductions stay FP32 (§V-B): the argmax gather below ships
+        // f32-encoded class indices bf16 rounding would corrupt
+        let maxes =
+            self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_max, Precision::Fp32);
         let gmax: Vec<f32> = (0..rows)
             .map(|r| maxes.iter().map(|p| p[r]).fold(f32::NEG_INFINITY, f32::max))
             .collect();
@@ -699,7 +702,8 @@ impl<'a> PmmGcn<'a> {
                 [(c0 + bi) as f32, bv]
             })
             .collect();
-        let args = self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_arg);
+        let args =
+            self.ctx.world.all_gather(self.ctx.rank, class_axis, &local_arg, Precision::Fp32);
 
         // loss/acc partial sums + dlogits (fresh buffer, fully overwritten
         // below — no need to copy the logits data)

@@ -393,9 +393,7 @@ impl<'a> PmmCtx<'a> {
                     for (&c, &v) in cs.iter().zip(vs) {
                         let br = c as usize - k0;
                         let brow = &b.local.data[br * d..(br + 1) * d];
-                        for j in 0..d {
-                            orow[j] += v * brow[j];
-                        }
+                        crate::tensor::simd::axpy(orow, v, brow);
                     }
                 }
             },
@@ -435,9 +433,7 @@ impl<'a> PmmCtx<'a> {
                     for (&c, &v) in cs.iter().zip(vs) {
                         let or = c as usize - o0;
                         let orow = &mut out.data[or * d..(or + 1) * d];
-                        for j in 0..d {
-                            orow[j] += v * brow[j];
-                        }
+                        crate::tensor::simd::axpy(orow, v, brow);
                     }
                 }
             },
@@ -499,9 +495,12 @@ impl<'a> PmmCtx<'a> {
         new_rb: Arc<Vec<usize>>,
         new_cb: Arc<Vec<usize>>,
     ) -> PmmMat {
-        // gather along current row axis -> full rows of my column strip
+        // gather along current row axis -> full rows of my column strip;
+        // activation gathers ride at the spec's precision (§V-B): bf16
+        // halves the dominant 3D-PMM gather volume
+        let prec = self.tp_precision;
         let row_parts = self.time(
-            || self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data),
+            || self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data, prec),
             |t| &mut t.reshard,
         );
         let cols_local = m.local.cols;
@@ -513,7 +512,7 @@ impl<'a> PmmCtx<'a> {
         }
         // gather strips along current col axis -> full matrix
         let col_parts = self.time(
-            || self.world.all_gather(self.rank, m.layout.col_axis, &strip.data),
+            || self.world.all_gather(self.rank, m.layout.col_axis, &strip.data, prec),
             |t| &mut t.reshard,
         );
         let mut full = Mat::zeros(m.global_rows(), m.global_cols());
@@ -538,14 +537,16 @@ impl<'a> PmmCtx<'a> {
 
     /// Gather a sharded matrix into the full global matrix (tests/eval).
     pub fn gather_global(&self, m: &PmmMat) -> Mat {
-        let row_parts = self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data);
+        let row_parts =
+            self.world.all_gather(self.rank, m.layout.row_axis, &m.local.data, Precision::Fp32);
         let cols_local = m.local.cols;
         let mut strip = Mat::zeros(m.global_rows(), cols_local);
         for (i, part) in row_parts.iter().enumerate() {
             let (r0, r1) = (m.row_bounds[i], m.row_bounds[i + 1]);
             strip.data[r0 * cols_local..r1 * cols_local].copy_from_slice(part);
         }
-        let col_parts = self.world.all_gather(self.rank, m.layout.col_axis, &strip.data);
+        let col_parts =
+            self.world.all_gather(self.rank, m.layout.col_axis, &strip.data, Precision::Fp32);
         let mut full = Mat::zeros(m.global_rows(), m.global_cols());
         for (i, part) in col_parts.iter().enumerate() {
             let (c0, c1) = (m.col_bounds[i], m.col_bounds[i + 1]);

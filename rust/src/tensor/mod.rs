@@ -12,6 +12,7 @@
 //! parallelism; see EXPERIMENTS.md §Perf for measured numbers.
 
 pub mod pool;
+pub mod simd;
 
 /// Column tile of the GEMM inner loops: the B panel touched by one tile is
 /// `k x JT` floats, sized to stay L2-resident across an entire row block.
@@ -277,9 +278,7 @@ pub(crate) fn gemm_rows(a_block: &[f32], k: usize, b: &[f32], n: usize, c_block:
                     continue;
                 }
                 let brow = &b[kk * n + j0..kk * n + j1];
-                for (cj, &bj) in crow.iter_mut().zip(brow) {
-                    *cj += av * bj;
-                }
+                simd::axpy(crow, av, brow);
             }
         }
         j0 = j1;
@@ -330,9 +329,7 @@ pub fn t_matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
                     continue;
                 }
                 let crow = &mut c_block[ii * n..(ii + 1) * n];
-                for (cj, &bj) in crow.iter_mut().zip(brow) {
-                    *cj += av * bj;
-                }
+                simd::axpy(crow, av, brow);
             }
         }
     });

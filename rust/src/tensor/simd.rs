@@ -1,0 +1,477 @@
+//! Runtime-dispatched SIMD kernels for the hot inner loops (§V-B makes
+//! low precision free only if widen/narrow is; the same discipline makes
+//! the f32 inner loops vectorize).
+//!
+//! Every kernel here has a retained scalar reference (`*_scalar`) and the
+//! dispatched entry point is **bitwise identical** to it on every input —
+//! the invariant the whole oracle-test discipline of this crate rests on:
+//!
+//! * The f32 kernel ([`axpy`]) vectorizes across *independent output
+//!   columns* only, so the per-scalar accumulation order over `k` never
+//!   changes, and the vector lanes use separate multiply and add (never
+//!   FMA) — packed IEEE-754 `mul`/`add` round exactly like their scalar
+//!   counterparts, and Rust never enables FTZ/DAZ, so denormal and NaN
+//!   lanes match too.
+//! * The bf16 conversions ([`widen_bf16`], [`narrow_bf16`],
+//!   [`round_bf16`]) are pure integer bit manipulation, replicating
+//!   `util::f32_to_bf16_bits` (round-to-nearest-even, NaN quieting) lane
+//!   for lane.
+//!
+//! Dispatch resolves once per process ([`level`]): AVX2 on `x86_64` when
+//! the CPU reports it, NEON on `aarch64` (baseline), scalar otherwise.
+//! Setting `PALLAS_SIMD=0` forces the scalar path — CI runs the test
+//! suite both ways so each dispatch path stays covered.
+
+use std::sync::OnceLock;
+
+use crate::util::{bf16_bits_to_f32, f32_to_bf16_bits, bf16_round};
+
+/// Vector path the dispatched kernels take for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar reference path (also the `PALLAS_SIMD=0` escape
+    /// hatch and the oracle every vector path is pinned against).
+    Scalar,
+    /// 256-bit AVX2 path (`x86_64`, detected at runtime).
+    Avx2,
+    /// 128-bit NEON path (`aarch64`, baseline feature).
+    Neon,
+}
+
+/// The vector path selected for this process, resolved once on first use:
+/// `PALLAS_SIMD=0` forces [`SimdLevel::Scalar`], otherwise the best path
+/// the CPU supports.  Mirrors `pool::num_threads`' `PALLAS_THREADS`
+/// resolution so the per-call hot path is a cached load.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if let Ok(v) = std::env::var("PALLAS_SIMD") {
+            if v.trim() == "0" {
+                return SimdLevel::Scalar;
+            }
+        }
+        detect()
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> SimdLevel {
+    SimdLevel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// axpy: the shared inner loop of GEMM / SpMM / fused spmm_matmul
+// ---------------------------------------------------------------------------
+
+/// `acc[j] += a * b[j]` over independent output columns — the one inner
+/// loop shared by the j-tiled GEMM microkernel, SpMM row accumulation and
+/// the fused `spmm_matmul`.  Bitwise identical to [`axpy_scalar`] on
+/// every input (see the module docs for why).
+#[inline]
+pub fn axpy(acc: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { axpy_avx2(acc, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { axpy_neon(acc, a, b) },
+        _ => axpy_scalar(acc, a, b),
+    }
+}
+
+/// Scalar reference for [`axpy`], retained as the oracle the vector paths
+/// are pinned against (and the `PALLAS_SIMD=0` path).
+#[inline]
+pub fn axpy_scalar(acc: &mut [f32], a: f32, b: &[f32]) {
+    for (cj, &bj) in acc.iter_mut().zip(b) {
+        *cj += a * bj;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(b.len());
+    let va = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + 8 <= n {
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let vc = _mm256_loadu_ps(acc.as_ptr().add(j));
+        // separate mul then add, operand order as in the scalar kernel
+        // (`acc + a * b`): packed IEEE semantics equal scalar mulss/addss
+        // per lane, so no FMA and no reassociation — bitwise identical
+        let prod = _mm256_mul_ps(va, vb);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(vc, prod));
+        j += 8;
+    }
+    axpy_scalar(&mut acc[j..n], a, &b[j..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn axpy_neon(acc: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = acc.len().min(b.len());
+    let va = vdupq_n_f32(a);
+    let mut j = 0;
+    while j + 4 <= n {
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        let vc = vld1q_f32(acc.as_ptr().add(j));
+        let prod = vmulq_f32(va, vb);
+        vst1q_f32(acc.as_mut_ptr().add(j), vaddq_f32(vc, prod));
+        j += 4;
+    }
+    axpy_scalar(&mut acc[j..n], a, &b[j..n]);
+}
+
+// ---------------------------------------------------------------------------
+// bf16 widen / narrow / round batch conversion
+// ---------------------------------------------------------------------------
+
+/// Widen packed bf16 bits to f32: `dst[i] = bits[i] << 16` reinterpreted.
+/// Exact by construction (bf16 is the high half of an f32); bitwise
+/// identical to [`widen_bf16_scalar`].
+pub fn widen_bf16(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "widen_bf16 length mismatch");
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { widen_bf16_avx2(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { widen_bf16_neon(src, dst) },
+        _ => widen_bf16_scalar(src, dst),
+    }
+}
+
+/// Scalar reference for [`widen_bf16`].
+pub fn widen_bf16_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_bits_to_f32(s);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn widen_bf16_avx2(src: &[u16], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, w);
+        i += 8;
+    }
+    widen_bf16_scalar(&src[i..], &mut dst[i..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn widen_bf16_neon(src: &[u16], dst: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = src.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let h = vld1_u16(src.as_ptr().add(i));
+        let w = vshlq_n_u32::<16>(vmovl_u16(h));
+        vst1q_u32(dst.as_mut_ptr().add(i) as *mut u32, w);
+        i += 4;
+    }
+    widen_bf16_scalar(&src[i..], &mut dst[i..]);
+}
+
+/// Narrow f32s to packed bf16 bits with round-to-nearest-even and NaN
+/// quieting — lane-for-lane the integer algorithm of
+/// `util::f32_to_bf16_bits`, so bitwise identical to
+/// [`narrow_bf16_scalar`] including NaN and denormal lanes.
+pub fn narrow_bf16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "narrow_bf16 length mismatch");
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { narrow_bf16_avx2(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { narrow_bf16_neon(src, dst) },
+        _ => narrow_bf16_scalar(src, dst),
+    }
+}
+
+/// Scalar reference for [`narrow_bf16`].
+pub fn narrow_bf16_scalar(src: &[f32], dst: &mut [u16]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16_bits(s);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn narrow_bf16_avx2(src: &[f32], dst: &mut [u16]) {
+    use std::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    // 8 f32 -> 8 u32 lanes, each holding the bf16 bits in its low half
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn narrow8(p: *const f32) -> __m256i {
+        let bits = _mm256_loadu_si256(p as *const __m256i);
+        let magnitude = _mm256_and_si256(bits, _mm256_set1_epi32(0x7fff_ffff));
+        // NaN <=> magnitude > 0x7f80_0000; both sides are non-negative
+        // i32s after the mask, so the signed compare is exact
+        let is_nan = _mm256_cmpgt_epi32(magnitude, _mm256_set1_epi32(0x7f80_0000));
+        let hi = _mm256_srli_epi32::<16>(bits);
+        let quieted = _mm256_or_si256(hi, _mm256_set1_epi32(0x0040));
+        // round-to-nearest-even: bits + 0x7fff + lsb-of-result, then >> 16
+        let lsb = _mm256_and_si256(hi, _mm256_set1_epi32(1));
+        let biased = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7fff)), lsb);
+        let rounded = _mm256_srli_epi32::<16>(biased);
+        _mm256_blendv_epi8(rounded, quieted, is_nan)
+    }
+    while i + 16 <= n {
+        let a = narrow8(src.as_ptr().add(i));
+        let b = narrow8(src.as_ptr().add(i + 8));
+        // packus interleaves the two 128-bit lanes; permute restores
+        // element order.  Values fit in u16 so the saturation is exact.
+        let packed = _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packus_epi32(a, b));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, packed);
+        i += 16;
+    }
+    narrow_bf16_scalar(&src[i..], &mut dst[i..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn narrow_bf16_neon(src: &[f32], dst: &mut [u16]) {
+    use std::arch::aarch64::*;
+    let n = src.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let bits = vreinterpretq_u32_f32(vld1q_f32(src.as_ptr().add(i)));
+        let magnitude = vandq_u32(bits, vdupq_n_u32(0x7fff_ffff));
+        let is_nan = vcgtq_u32(magnitude, vdupq_n_u32(0x7f80_0000));
+        let hi = vshrq_n_u32::<16>(bits);
+        let quieted = vorrq_u32(hi, vdupq_n_u32(0x0040));
+        let lsb = vandq_u32(hi, vdupq_n_u32(1));
+        let biased = vaddq_u32(vaddq_u32(bits, vdupq_n_u32(0x7fff)), lsb);
+        let rounded = vshrq_n_u32::<16>(biased);
+        let sel = vbslq_u32(is_nan, quieted, rounded);
+        vst1_u16(dst.as_mut_ptr().add(i), vmovn_u32(sel));
+        i += 4;
+    }
+    narrow_bf16_scalar(&src[i..], &mut dst[i..]);
+}
+
+/// In-place bf16 round of an f32 slice (fused narrow + widen): exactly
+/// what a bf16 collective does to each contribution before it moves
+/// (`util::bf16_round` per lane).  Bitwise identical to
+/// [`round_bf16_scalar`].
+pub fn round_bf16(xs: &mut [f32]) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { round_bf16_avx2(xs) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { round_bf16_neon(xs) },
+        _ => round_bf16_scalar(xs),
+    }
+}
+
+/// Scalar reference for [`round_bf16`].
+pub fn round_bf16_scalar(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn round_bf16_avx2(xs: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let bits = _mm256_loadu_si256(xs.as_ptr().add(i) as *const __m256i);
+        let magnitude = _mm256_and_si256(bits, _mm256_set1_epi32(0x7fff_ffff));
+        let is_nan = _mm256_cmpgt_epi32(magnitude, _mm256_set1_epi32(0x7f80_0000));
+        let hi = _mm256_srli_epi32::<16>(bits);
+        let quieted = _mm256_or_si256(hi, _mm256_set1_epi32(0x0040));
+        let lsb = _mm256_and_si256(hi, _mm256_set1_epi32(1));
+        let biased = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7fff)), lsb);
+        let rounded = _mm256_srli_epi32::<16>(biased);
+        let sel = _mm256_blendv_epi8(rounded, quieted, is_nan);
+        // widen back: the selected low 16 bits become the f32 high half
+        let widened = _mm256_slli_epi32::<16>(sel);
+        _mm256_storeu_si256(xs.as_mut_ptr().add(i) as *mut __m256i, widened);
+        i += 8;
+    }
+    round_bf16_scalar(&mut xs[i..]);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn round_bf16_neon(xs: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = xs.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let bits = vreinterpretq_u32_f32(vld1q_f32(xs.as_ptr().add(i)));
+        let magnitude = vandq_u32(bits, vdupq_n_u32(0x7fff_ffff));
+        let is_nan = vcgtq_u32(magnitude, vdupq_n_u32(0x7f80_0000));
+        let hi = vshrq_n_u32::<16>(bits);
+        let quieted = vorrq_u32(hi, vdupq_n_u32(0x0040));
+        let lsb = vandq_u32(hi, vdupq_n_u32(1));
+        let biased = vaddq_u32(vaddq_u32(bits, vdupq_n_u32(0x7fff)), lsb);
+        let rounded = vshrq_n_u32::<16>(biased);
+        let sel = vbslq_u32(is_nan, quieted, rounded);
+        vst1q_u32(xs.as_mut_ptr().add(i) as *mut u32, vshlq_n_u32::<16>(sel));
+        i += 4;
+    }
+    round_bf16_scalar(&mut xs[i..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Adversarial lane values: bf16-exact, needs-rounding, carries into
+    /// the exponent, ±0, ±inf, NaNs (payload bits), denormals (f32 and
+    /// below-bf16), and huge/tiny magnitudes.
+    fn adversarial_values() -> Vec<f32> {
+        let mut v = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            1.0009765625, // needs mantissa rounding
+            -1.0009765625,
+            1.00390625, // bf16-exact
+            f32::from_bits(0x3f80_7fff), // rounds up with carry
+            f32::from_bits(0x3f80_8000), // round-to-even boundary
+            f32::from_bits(0x3f81_8000), // round-to-even boundary, odd lsb
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7f80_0001), // signaling-ish NaN, tiny payload
+            f32::from_bits(0xffc1_2345), // negative NaN with payload
+            f32::MIN_POSITIVE,           // smallest normal
+            f32::MIN_POSITIVE / 4.0,     // denormal
+            f32::from_bits(1),           // smallest denormal
+            f32::MAX,
+            -f32::MAX,
+            3.4e38,
+            1e-40,
+            -1e-40,
+            65504.0,
+        ];
+        let mut r = Rng::new(77);
+        for _ in 0..200 {
+            v.push((r.f32() - 0.5) * 1e6);
+            v.push(r.normal() * 1e-3);
+        }
+        v
+    }
+
+    #[test]
+    fn axpy_bitwise_matches_scalar_on_adversarial_shapes() {
+        let vals = adversarial_values();
+        let mut r = Rng::new(5);
+        // non-multiple-of-lane lengths on both sides of every lane width
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 100] {
+            for &a in &[0.0f32, 1.0, -2.5, f32::NAN, f32::MIN_POSITIVE / 2.0, 1e30] {
+                let b: Vec<f32> = (0..n).map(|i| vals[(i * 7 + 3) % vals.len()]).collect();
+                let init: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let mut simd_acc = init.clone();
+                let mut scalar_acc = init.clone();
+                axpy(&mut simd_acc, a, &b);
+                axpy_scalar(&mut scalar_acc, a, &b);
+                let sb: Vec<u32> = simd_acc.iter().map(|x| x.to_bits()).collect();
+                let rb: Vec<u32> = scalar_acc.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, rb, "axpy n={n} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_bf16_bitwise_matches_scalar_on_specials() {
+        let vals = adversarial_values();
+        for n in [0usize, 1, 3, 4, 7, 8, 15, 16, 17, 24, 31, 32, 33, 100] {
+            let src: Vec<f32> = (0..n).map(|i| vals[(i * 5 + 1) % vals.len()]).collect();
+            let mut simd_dst = vec![0u16; n];
+            let mut scalar_dst = vec![0u16; n];
+            narrow_bf16(&src, &mut simd_dst);
+            narrow_bf16_scalar(&src, &mut scalar_dst);
+            assert_eq!(simd_dst, scalar_dst, "narrow n={n}");
+        }
+    }
+
+    #[test]
+    fn widen_bf16_bitwise_matches_scalar() {
+        let mut r = Rng::new(6);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 16, 17, 33, 100] {
+            let src: Vec<u16> = (0..n).map(|_| (r.f64() * 65536.0) as u16).collect();
+            let mut simd_dst = vec![0f32; n];
+            let mut scalar_dst = vec![0f32; n];
+            widen_bf16(&src, &mut simd_dst);
+            widen_bf16_scalar(&src, &mut scalar_dst);
+            let sb: Vec<u32> = simd_dst.iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = scalar_dst.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, rb, "widen n={n}");
+        }
+    }
+
+    #[test]
+    fn round_bf16_bitwise_matches_scalar_and_util() {
+        let vals = adversarial_values();
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 16, 17, 100] {
+            let src: Vec<f32> = (0..n).map(|i| vals[(i * 11 + 2) % vals.len()]).collect();
+            let mut simd_xs = src.clone();
+            let mut scalar_xs = src.clone();
+            round_bf16(&mut simd_xs);
+            round_bf16_scalar(&mut scalar_xs);
+            for (i, (a, b)) in simd_xs.iter().zip(&scalar_xs).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "round n={n} lane {i} ({:?})", src[i]);
+                assert_eq!(b.to_bits(), bf16_round(src[i]).to_bits(), "util mismatch lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_then_widen_is_round() {
+        let vals = adversarial_values();
+        let mut bits = vec![0u16; vals.len()];
+        narrow_bf16(&vals, &mut bits);
+        let mut back = vec![0f32; vals.len()];
+        widen_bf16(&bits, &mut back);
+        for (i, (&w, &v)) in back.iter().zip(&vals).enumerate() {
+            assert_eq!(w.to_bits(), bf16_round(v).to_bits(), "lane {i} ({v:?})");
+        }
+    }
+
+    #[test]
+    fn narrow_quiets_nans_and_keeps_infinities() {
+        let src = [f32::NAN, f32::from_bits(0x7f80_0001), f32::INFINITY, f32::NEG_INFINITY];
+        let mut dst = [0u16; 4];
+        narrow_bf16(&src, &mut dst);
+        assert!(bf16_bits_to_f32(dst[0]).is_nan());
+        assert!(bf16_bits_to_f32(dst[1]).is_nan(), "signaling NaN must stay a NaN");
+        assert_eq!(bf16_bits_to_f32(dst[2]), f32::INFINITY);
+        assert_eq!(bf16_bits_to_f32(dst[3]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn level_is_stable_and_scalar_gate_is_respected() {
+        // the level resolves once and stays fixed for the process
+        assert_eq!(level(), level());
+        if std::env::var("PALLAS_SIMD").map(|v| v.trim() == "0").unwrap_or(false) {
+            assert_eq!(level(), SimdLevel::Scalar, "PALLAS_SIMD=0 must force scalar");
+        }
+    }
+}

@@ -88,7 +88,7 @@ fn collectives_survive_many_rounds_of_mixed_ops() {
                 let mut v = vec![(rank + round) as f32; 7];
                 w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
                 acc += v[0];
-                let g = w.all_gather(rank, Axis::Dp, &[rank as f32]);
+                let g = w.all_gather(rank, Axis::Dp, &[rank as f32], Precision::Fp32);
                 acc += g.iter().map(|p| p[0]).sum::<f32>();
                 w.barrier(rank, Axis::X);
                 let mut d = vec![1.0f32];

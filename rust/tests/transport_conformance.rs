@@ -166,6 +166,7 @@ conformance!(
     reduces_across_axes_with_out_of_order_waits,
     gather_orders_by_group_index,
     bf16_accounting_is_exact,
+    bf16_gather_rounds_identically,
     barriers_interleave_with_reduces,
     size1_world_short_circuits,
     length_mismatch_errors_all_ranks,
@@ -196,7 +197,7 @@ fn reduces_across_axes_with_out_of_order_waits(b: BackendSel, tag: &str) {
             let vd = vec![0.5 * rank as f32 + 3.0; 64];
             let px = w.issue_all_reduce(rank, Axis::X, &vx, Precision::Fp32);
             let py = w.issue_all_reduce(rank, Axis::Y, &vy, Precision::Fp32);
-            let pg = w.issue_all_gather(rank, Axis::Y, &[rank as f32]);
+            let pg = w.issue_all_gather(rank, Axis::Y, &[rank as f32], Precision::Fp32);
             let pd = w.issue_all_reduce(rank, Axis::Dp, &vd, Precision::Fp32);
             let vx2 = vec![1.0; 10];
             let px2 = w.issue_all_reduce(rank, Axis::X, &vx2, Precision::Fp32);
@@ -238,7 +239,7 @@ fn gather_orders_by_group_index(b: BackendSel, tag: &str) {
     let grid = Grid4D::new(1, 2, 2, 1);
     let run = run_world(b, tag, grid, None, |rank, w| {
         let payload = vec![rank as f32 + 0.25; rank + 1]; // distinct lengths
-        let parts = w.all_gather(rank, Axis::Y, &payload);
+        let parts = w.all_gather(rank, Axis::Y, &payload, Precision::Fp32);
         let members = w.grid.group_ranks(rank, Axis::Y);
         assert_eq!(parts.len(), members.len());
         for (p, &m) in parts.iter().zip(&members) {
@@ -270,6 +271,46 @@ fn bf16_accounting_is_exact(b: BackendSel, tag: &str) {
     let (ops, bytes) = run.total_stats(Axis::X);
     assert_eq!(ops, 2, "one op per contributing rank");
     assert_eq!(bytes, 2 * 10 * 2, "bf16 halves the accounted payload");
+    assert!(run.finish().is_none());
+}
+
+/// bf16 gathers round every payload once at the source, so all three
+/// transports return bit-identical parts (including quieted NaNs and
+/// denormals), and the accounting charges 2 bytes/elem.
+fn bf16_gather_rounds_identically(b: BackendSel, tag: &str) {
+    let grid = Grid4D::new(1, 2, 1, 1);
+    let run = run_world(b, tag, grid, None, |rank, w| {
+        // values that actually round, plus a NaN and an f32 denormal
+        let payload = [
+            1.0009765625f32 + rank as f32, // needs mantissa rounding
+            f32::NAN,
+            f32::MIN_POSITIVE / 4.0, // denormal
+            -3.14159265f32,
+        ];
+        let parts = w.all_gather(rank, Axis::X, &payload, Precision::Bf16);
+        for (m, part) in parts.iter().enumerate() {
+            let src = [
+                1.0009765625f32 + m as f32,
+                f32::NAN,
+                f32::MIN_POSITIVE / 4.0,
+                -3.14159265f32,
+            ];
+            for (j, (&got, &s)) in part.iter().zip(&src).enumerate() {
+                let want = scalegnn::util::bf16_round(s);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "member {m} lane {j}: got {got:?} want {want:?}"
+                );
+            }
+        }
+    });
+    for res in &run.results {
+        assert!(res.is_ok());
+    }
+    let (ops, bytes) = run.total_stats(Axis::X);
+    assert_eq!(ops, 2, "one gather per contributing rank");
+    assert_eq!(bytes, 2 * 4 * 2, "bf16 halves the accounted gather payload");
     assert!(run.finish().is_none());
 }
 
@@ -306,7 +347,7 @@ fn size1_world_short_circuits(b: BackendSel, tag: &str) {
         let mut v = vec![3.5f32; 4];
         w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
         assert_eq!(v, vec![3.5; 4]);
-        let parts = w.all_gather(rank, Axis::Dp, &[7.0]);
+        let parts = w.all_gather(rank, Axis::Dp, &[7.0], Precision::Fp32);
         assert_eq!(parts, vec![vec![7.0]]);
         w.barrier(rank, Axis::Z);
     });
@@ -345,7 +386,7 @@ fn kind_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
             let mut v = vec![1.0f32; 4];
             w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
         } else {
-            let _ = w.all_gather(rank, Axis::X, &[1.0, 2.0]);
+            let _ = w.all_gather(rank, Axis::X, &[1.0, 2.0], Precision::Fp32);
         }
     });
     for (r, res) in run.results.iter().enumerate() {
