@@ -39,6 +39,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::model::{AdamState, Params};
+use crate::util::bytes::{f32_le, u32_le, u64_le};
 use crate::util::rng::{splitmix64, Rng};
 
 /// File magic: "PALLASC1" (pallas checkpoint, generation 1).
@@ -279,19 +280,19 @@ impl Snapshot {
         if bytes[..8] != MAGIC {
             bail!("checkpoint {show}: bad magic (not a pallas checkpoint)");
         }
-        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let version = u32_le(&bytes[8..12]);
         if version != VERSION {
             bail!("checkpoint {show}: unsupported version {version} (this build reads {VERSION})");
         }
-        let step = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-        let seed = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
-        let spec_hash = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        let step = u64_le(&bytes[16..24]);
+        let seed = u64_le(&bytes[24..32]);
+        let spec_hash = u64_le(&bytes[32..40]);
         let mut rng = [0u64; 4];
         for (i, w) in rng.iter_mut().enumerate() {
-            *w = u64::from_le_bytes(bytes[40 + 8 * i..48 + 8 * i].try_into().unwrap());
+            *w = u64_le(&bytes[40 + 8 * i..48 + 8 * i]);
         }
-        let t = f32::from_bits(u32::from_le_bytes(bytes[72..76].try_into().unwrap()));
-        let n = u32::from_le_bytes(bytes[76..80].try_into().unwrap()) as usize;
+        let t = f32_le(&bytes[72..76]);
+        let n = u32_le(&bytes[76..80]) as usize;
 
         // expected size from the tensor table, all checked arithmetic so a
         // corrupt header is rejected instead of overflowing
@@ -305,7 +306,7 @@ impl Snapshot {
         let mut total_elems: u64 = 0;
         for i in 0..n {
             let off = FIXED_HEADER_BYTES + 8 * i;
-            let len = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            let len = u64_le(&bytes[off..off + 8]);
             total_elems = total_elems
                 .checked_add(len)
                 .ok_or_else(|| anyhow::anyhow!("checkpoint {show}: tensor table overflows"))?;
@@ -329,7 +330,7 @@ impl Snapshot {
             );
         }
         let body = &bytes[..bytes.len() - TRAILER_BYTES];
-        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let stored = u32_le(&bytes[bytes.len() - 4..]);
         let computed = crc32(body);
         if stored != computed {
             bail!(
@@ -343,10 +344,7 @@ impl Snapshot {
             lens.iter()
                 .map(|&len| {
                     let end = off + 4 * len as usize;
-                    let t: Vec<f32> = bytes[off..end]
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
+                    let t: Vec<f32> = bytes[off..end].chunks_exact(4).map(f32_le).collect();
                     off = end;
                     t
                 })

@@ -36,6 +36,7 @@ use super::{CollKind, CommError, Precision};
 use crate::checkpoint::crc32;
 use crate::grid::Axis;
 use crate::util::bf16_round;
+use crate::util::bytes::{f32_le, u16_le, u32_le, u64_le};
 
 /// Frame magic: "PLSW" (PaLlaS Wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"PLSW";
@@ -316,25 +317,19 @@ impl<'a> Dec<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32_le(self.take(4)?))
     }
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64_le(self.take(8)?))
     }
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(n * 4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(f32_le).collect())
     }
     /// Widen a bf16 payload (high-16-bit halves) back to f32.
     fn bf16s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(n * 2)?;
-        Ok(raw
-            .chunks_exact(2)
-            .map(|c| {
-                let hi = u16::from_le_bytes(c.try_into().unwrap());
-                f32::from_bits((hi as u32) << 16)
-            })
-            .collect())
+        Ok(raw.chunks_exact(2).map(|c| f32::from_bits((u16_le(c) as u32) << 16)).collect())
     }
     fn axis(&mut self) -> Result<Axis, WireError> {
         let c = self.u8()?;

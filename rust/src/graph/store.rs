@@ -67,6 +67,8 @@ use super::csr::Csr;
 use super::generate::Dataset;
 use crate::checkpoint::Crc32;
 use crate::comm::Precision;
+use crate::util::bytes::{f32_le, u16_le, u32_le, u64_le};
+use crate::util::lock_unpoisoned;
 
 /// File magic: "PALLASG1" (pallas graph container, generation 1).
 pub const MAGIC: [u8; 8] = *b"PALLASG1";
@@ -414,6 +416,7 @@ impl BlockCache {
         let end = (start + BLOCK_BYTES as u64).min(file_len);
         let mut data = vec![0u8; (end - start) as usize];
         file.read_exact_at(&mut data, start)
+            // lint: allow(panic-free-boundary) — open() validated length and CRCs; losing the device mid-run is unrecoverable, and block() returning &[u8] keeps GraphAccess infallible
             .expect("pallas store: read failed after validated open");
         let slot = if self.slots.len() < self.max_blocks {
             self.slots.push(Slot { id, stamp: self.tick, data });
@@ -421,6 +424,7 @@ impl BlockCache {
         } else {
             let victim = (0..self.slots.len())
                 .min_by_key(|&i| self.slots[i].stamp)
+                // lint: allow(panic-free-boundary) — max_blocks >= 1 by construction (BlockCache::new clamps), so the eviction scan is never empty
                 .expect("cache has at least one slot");
             self.map.remove(&self.slots[victim].id);
             self.slots[victim] = Slot { id, stamp: self.tick, data };
@@ -497,14 +501,14 @@ impl OocGraph {
         if hdr[..8] != MAGIC {
             bail!("pallas store {}: bad magic (not a .pallas file)", path.display());
         }
-        let version = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        let version = u32_le(&hdr[8..12]);
         if version != VERSION {
             bail!(
                 "pallas store {}: unsupported version {version} (this build reads {VERSION})",
                 path.display()
             );
         }
-        let flags = u32::from_le_bytes(hdr[12..16].try_into().unwrap());
+        let flags = u32_le(&hdr[12..16]);
         if flags & !FLAG_FEAT_BF16 != 0 {
             bail!(
                 "pallas store {}: unknown header flags {flags:#x} (this build understands {:#x})",
@@ -514,7 +518,7 @@ impl OocGraph {
         }
         let feat_precision =
             if flags & FLAG_FEAT_BF16 != 0 { Precision::Bf16 } else { Precision::Fp32 };
-        let field = |o: usize| u64::from_le_bytes(hdr[o..o + 8].try_into().unwrap());
+        let field = |o: usize| u64_le(&hdr[o..o + 8]);
         let (n, nnz, d_in, classes) = (field(16), field(24), field(32), field(40));
         let source_tag = field(48);
         let lay = layout(n, nnz, d_in, feat_precision.bytes_per_elem()).ok_or_else(|| {
@@ -542,7 +546,7 @@ impl OocGraph {
         ];
         let mut buf = vec![0u8; 64 * 1024];
         for (i, &(name, start, end)) in sections.iter().enumerate() {
-            let stored = u32::from_le_bytes(crc_table[4 * i..4 * i + 4].try_into().unwrap());
+            let stored = u32_le(&crc_table[4 * i..4 * i + 4]);
             let mut crc = Crc32::new();
             let mut off = start;
             while off < end {
@@ -570,7 +574,7 @@ impl OocGraph {
             let take = ((lay.indices - off) as usize).min(buf.len());
             file.read_exact_at(&mut buf[..take], off)?;
             for ch in buf[..take].chunks_exact(8) {
-                let v = u64::from_le_bytes(ch.try_into().unwrap());
+                let v = u64_le(ch);
                 if !seen_first {
                     if v != 0 {
                         bail!(
@@ -610,7 +614,7 @@ impl OocGraph {
     /// through the block cache.
     fn read_at_cached(&self, mut off: u64, out: &mut [u8]) {
         debug_assert!(off + out.len() as u64 <= self.file_len);
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.cache);
         let mut done = 0usize;
         while done < out.len() {
             let id = off / BLOCK_BYTES as u64;
@@ -634,7 +638,7 @@ impl OocGraph {
     /// call is per block, not per element.
     fn walk_runs_cached(&self, mut off: u64, n_elems: usize, elem: usize, f: &mut dyn FnMut(&[u8])) {
         debug_assert_eq!(off % elem as u64, 0);
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.cache);
         let mut remaining = n_elems;
         while remaining > 0 {
             let id = off / BLOCK_BYTES as u64;
@@ -654,7 +658,7 @@ impl OocGraph {
         let mut done = 0usize;
         self.walk_runs_cached(off, n, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
-                out[done] = f32::from_le_bytes(ch.try_into().unwrap());
+                out[done] = f32_le(ch);
                 done += 1;
             }
         });
@@ -671,7 +675,7 @@ impl OocGraph {
             for bytes in run.chunks(2 * 256) {
                 let m = bytes.len() / 2;
                 for (b, ch) in bits[..m].iter_mut().zip(bytes.chunks_exact(2)) {
-                    *b = u16::from_le_bytes(ch.try_into().unwrap());
+                    *b = u16_le(ch);
                 }
                 crate::tensor::simd::widen_bf16(&bits[..m], &mut out[done..done + m]);
                 done += m;
@@ -684,7 +688,7 @@ impl OocGraph {
         out.reserve(n_elems);
         self.walk_runs_cached(off, n_elems, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
-                out.push(f32::from_le_bytes(ch.try_into().unwrap()));
+                out.push(f32_le(ch));
             }
         });
     }
@@ -694,7 +698,7 @@ impl OocGraph {
         out.reserve(n_elems);
         self.walk_runs_cached(off, n_elems, 4, &mut |run| {
             for ch in run.chunks_exact(4) {
-                out.push(u32::from_le_bytes(ch.try_into().unwrap()));
+                out.push(u32_le(ch));
             }
         });
     }
@@ -704,14 +708,14 @@ impl OocGraph {
         assert!(r < self.n, "row {r} out of range (n = {})", self.n);
         let mut b = [0u8; 16];
         self.read_at_cached(self.lay.indptr + 8 * r as u64, &mut b);
-        let lo = u64::from_le_bytes(b[..8].try_into().unwrap()) as usize;
-        let hi = u64::from_le_bytes(b[8..].try_into().unwrap()) as usize;
+        let lo = u64_le(&b[..8]) as usize;
+        let hi = u64_le(&b[8..]) as usize;
         (lo, hi)
     }
 
     /// Snapshot of the cache counters and the residency bound.
     pub fn cache_stats(&self) -> CacheStats {
-        let c = self.cache.lock().unwrap();
+        let c = lock_unpoisoned(&self.cache);
         CacheStats {
             hits: c.hits,
             misses: c.misses,

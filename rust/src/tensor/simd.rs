@@ -85,8 +85,13 @@ fn detect() -> SimdLevel {
 pub fn axpy(acc: &mut [f32], a: f32, b: &[f32]) {
     debug_assert_eq!(acc.len(), b.len());
     match level() {
+        // SAFETY: level() returns Avx2 only when is_x86_feature_detected!
+        // confirmed AVX2 at runtime, which is the target_feature
+        // precondition of axpy_avx2; slice bounds are checked inside.
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => unsafe { axpy_avx2(acc, a, b) },
+        // SAFETY: NEON is a baseline aarch64 feature, always present when
+        // this arm compiles; slice bounds are checked inside.
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => unsafe { axpy_neon(acc, a, b) },
         _ => axpy_scalar(acc, a, b),
@@ -102,6 +107,10 @@ pub fn axpy_scalar(acc: &mut [f32], a: f32, b: &[f32]) {
     }
 }
 
+// SAFETY: caller must ensure the CPU supports AVX2 (the dispatcher checks
+// via level()).  Every unaligned load/store stays in bounds: j + 8 <= n
+// with n = min(acc.len(), b.len()), and loadu/storeu have no alignment
+// requirement.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(acc: &mut [f32], a: f32, b: &[f32]) {
@@ -122,6 +131,9 @@ unsafe fn axpy_avx2(acc: &mut [f32], a: f32, b: &[f32]) {
     axpy_scalar(&mut acc[j..n], a, &b[j..n]);
 }
 
+// SAFETY: NEON is baseline on aarch64, so the intrinsics are always
+// available; every vld1q/vst1q stays in bounds because j + 4 <= n with
+// n = min(acc.len(), b.len()).
 #[cfg(target_arch = "aarch64")]
 unsafe fn axpy_neon(acc: &mut [f32], a: f32, b: &[f32]) {
     use std::arch::aarch64::*;
@@ -148,8 +160,13 @@ unsafe fn axpy_neon(acc: &mut [f32], a: f32, b: &[f32]) {
 pub fn widen_bf16(src: &[u16], dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len(), "widen_bf16 length mismatch");
     match level() {
+        // SAFETY: level() returns Avx2 only after runtime AVX2 detection
+        // (the target_feature precondition); src.len() == dst.len() was
+        // asserted above and all loads/stores are bounded by it.
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => unsafe { widen_bf16_avx2(src, dst) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal
+        // above bound every access.
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => unsafe { widen_bf16_neon(src, dst) },
         _ => widen_bf16_scalar(src, dst),
@@ -163,6 +180,9 @@ pub fn widen_bf16_scalar(src: &[u16], dst: &mut [f32]) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 support (dispatcher-checked) and
+// src.len() == dst.len() (asserted by the public wrapper); i + 8 <= n
+// bounds each 128-bit load and 256-bit store, both unaligned-safe.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn widen_bf16_avx2(src: &[u16], dst: &mut [f32]) {
@@ -178,6 +198,11 @@ unsafe fn widen_bf16_avx2(src: &[u16], dst: &mut [f32]) {
     widen_bf16_scalar(&src[i..], &mut dst[i..]);
 }
 
+// SAFETY: NEON is baseline on aarch64; caller guarantees src.len() ==
+// dst.len() (asserted by the public wrapper) and i + 4 <= n bounds every
+// access.  Storing u32 bit patterns through the *mut u32 cast is sound:
+// f32 and u32 have identical size/alignment and any bit pattern is a
+// valid f32.
 #[cfg(target_arch = "aarch64")]
 unsafe fn widen_bf16_neon(src: &[u16], dst: &mut [f32]) {
     use std::arch::aarch64::*;
@@ -199,8 +224,12 @@ unsafe fn widen_bf16_neon(src: &[u16], dst: &mut [f32]) {
 pub fn narrow_bf16(src: &[f32], dst: &mut [u16]) {
     assert_eq!(src.len(), dst.len(), "narrow_bf16 length mismatch");
     match level() {
+        // SAFETY: level() returns Avx2 only after runtime AVX2 detection;
+        // src.len() == dst.len() was asserted above.
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => unsafe { narrow_bf16_avx2(src, dst) },
+        // SAFETY: NEON is baseline on aarch64; lengths asserted equal
+        // above bound every access.
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => unsafe { narrow_bf16_neon(src, dst) },
         _ => narrow_bf16_scalar(src, dst),
@@ -214,6 +243,10 @@ pub fn narrow_bf16_scalar(src: &[f32], dst: &mut [u16]) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 support (dispatcher-checked) and
+// src.len() == dst.len() (asserted by the public wrapper); i + 16 <= n
+// bounds the two 8-lane loads and the packed 16-lane store, all
+// unaligned-safe.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn narrow_bf16_avx2(src: &[f32], dst: &mut [u16]) {
@@ -221,6 +254,9 @@ unsafe fn narrow_bf16_avx2(src: &[f32], dst: &mut [u16]) {
     let n = src.len();
     let mut i = 0;
     // 8 f32 -> 8 u32 lanes, each holding the bf16 bits in its low half
+    // SAFETY: caller must pass a pointer with 8 readable f32s (the outer
+    // loop guarantees i + 16 <= n for both 8-lane halves) on an
+    // AVX2-capable CPU (inherited from the enclosing target_feature fn).
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn narrow8(p: *const f32) -> __m256i {
@@ -249,6 +285,9 @@ unsafe fn narrow_bf16_avx2(src: &[f32], dst: &mut [u16]) {
     narrow_bf16_scalar(&src[i..], &mut dst[i..]);
 }
 
+// SAFETY: NEON is baseline on aarch64; caller guarantees src.len() ==
+// dst.len() (asserted by the public wrapper) and i + 4 <= n bounds every
+// load and the narrowing store.
 #[cfg(target_arch = "aarch64")]
 unsafe fn narrow_bf16_neon(src: &[f32], dst: &mut [u16]) {
     use std::arch::aarch64::*;
@@ -276,8 +315,12 @@ unsafe fn narrow_bf16_neon(src: &[f32], dst: &mut [u16]) {
 /// [`round_bf16_scalar`].
 pub fn round_bf16(xs: &mut [f32]) {
     match level() {
+        // SAFETY: level() returns Avx2 only after runtime AVX2 detection;
+        // the kernel bounds every access by xs.len().
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2 => unsafe { round_bf16_avx2(xs) },
+        // SAFETY: NEON is baseline on aarch64; the kernel bounds every
+        // access by xs.len().
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => unsafe { round_bf16_neon(xs) },
         _ => round_bf16_scalar(xs),
@@ -291,6 +334,9 @@ pub fn round_bf16_scalar(xs: &mut [f32]) {
     }
 }
 
+// SAFETY: caller must ensure AVX2 support (dispatcher-checked); i + 8 <= n
+// bounds every in-place load/store, and writing integer bit patterns into
+// the f32 slice is sound because any u32 pattern is a valid f32.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn round_bf16_avx2(xs: &mut [f32]) {
@@ -315,6 +361,9 @@ unsafe fn round_bf16_avx2(xs: &mut [f32]) {
     round_bf16_scalar(&mut xs[i..]);
 }
 
+// SAFETY: NEON is baseline on aarch64; i + 4 <= n bounds every in-place
+// load/store, and the *mut u32 store is sound because f32 and u32 share
+// size/alignment and any bit pattern is a valid f32.
 #[cfg(target_arch = "aarch64")]
 unsafe fn round_bf16_neon(xs: &mut [f32]) {
     use std::arch::aarch64::*;

@@ -23,14 +23,26 @@ struct SharedBuf {
     ptr: *mut f32,
     len: usize,
 }
+// SAFETY: SharedBuf is a raw view into a Vec<f32> that outlives the scoped
+// workers; cross-thread access follows the module safety model (disjoint
+// row chunks per phase, barrier between phases), so sending/sharing the
+// pointer is sound.
 unsafe impl Send for SharedBuf {}
+// SAFETY: see the Send impl above — the phase discipline serializes every
+// write against every read of the same element.
 unsafe impl Sync for SharedBuf {}
 
 impl SharedBuf {
+    // SAFETY: caller must not hold any overlapping &mut from rows_mut for
+    // the same phase (the barrier protocol guarantees readers only see the
+    // buffer written in the previous phase); ptr/len come from a live Vec.
     unsafe fn all(&self) -> &[f32] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 
+    // SAFETY: caller must pass a row range disjoint from every other
+    // worker's (r0..r1 chunks partition the rows) with r1*cols <= len, so
+    // the &mut slices never alias.
     #[allow(clippy::mut_from_ref)]
     unsafe fn rows_mut(&self, r0: usize, r1: usize, cols: usize) -> &mut [f32] {
         std::slice::from_raw_parts_mut(self.ptr.add(r0 * cols), (r1 - r0) * cols)
@@ -63,6 +75,9 @@ pub fn full_graph_accuracy(
             handles.push(scope.spawn(move || {
                 // input projection into my chunk of buf_a
                 {
+                    // SAFETY: each worker writes only its own disjoint
+                    // r0..r1 chunk in this phase; nobody reads buf_a until
+                    // the barrier below.
                     let dst = unsafe { buf_a.rows_mut(r0, r1, dh) };
                     for (k, r) in (r0..r1).enumerate() {
                         let xrow = &data.features.data[r * dims.d_in..(r + 1) * dims.d_in];
@@ -86,6 +101,10 @@ pub fn full_graph_accuracy(
                 for l in 0..dims.layers {
                     let w = &params[1 + 2 * l];
                     let g = &params[2 + 2 * l];
+                    // SAFETY: src is the buffer fully written in the
+                    // previous phase (sealed by the barrier) and dst is
+                    // this worker's disjoint chunk of the *other* buffer,
+                    // so no read aliases any concurrent write.
                     let (src, dst) = unsafe {
                         if read_a {
                             (buf_a.all(), buf_b.rows_mut(r0, r1, dh))
@@ -126,6 +145,8 @@ pub fn full_graph_accuracy(
                 }
 
                 // output head + accuracy for my rows
+                // SAFETY: the final barrier of the layer loop sealed the
+                // last-written buffer; every worker only reads from here on.
                 let src = unsafe { if read_a { buf_a.all() } else { buf_b.all() } };
                 let wout = &params[params.len() - 1];
                 let dout = dims.d_out;

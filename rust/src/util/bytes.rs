@@ -1,0 +1,74 @@
+//! Panic-free little-endian decode helpers for the wire, checkpoint and
+//! block-store boundaries.
+//!
+//! Every decoder in those layers validates lengths up front (`Dec::take`,
+//! header-size checks, `chunks_exact`), which made the subsequent
+//! `try_into().unwrap()` conversions infallible — but the panic-free
+//! boundary discipline bans `unwrap` outright so a future refactor that
+//! breaks the validation cannot turn into a panic.  These helpers read a
+//! fixed-width value from the *front* of a slice with zero-extension:
+//! given the callers' pre-validated lengths the padding never triggers,
+//! and if a caller ever regresses, the result is a value that fails the
+//! decoder's own semantic checks (checksums, length tables) instead of a
+//! process abort mid-collective.
+
+/// `u16` from the first 2 bytes of `b`, little endian.
+#[inline]
+pub fn u16_le(b: &[u8]) -> u16 {
+    let mut a = [0u8; 2];
+    let n = b.len().min(2);
+    a[..n].copy_from_slice(&b[..n]);
+    u16::from_le_bytes(a)
+}
+
+/// `u32` from the first 4 bytes of `b`, little endian.
+#[inline]
+pub fn u32_le(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    let n = b.len().min(4);
+    a[..n].copy_from_slice(&b[..n]);
+    u32::from_le_bytes(a)
+}
+
+/// `u64` from the first 8 bytes of `b`, little endian.
+#[inline]
+pub fn u64_le(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    let n = b.len().min(8);
+    a[..n].copy_from_slice(&b[..n]);
+    u64::from_le_bytes(a)
+}
+
+/// `f32` from the first 4 bytes of `b`, little endian.
+#[inline]
+pub fn f32_le(b: &[u8]) -> f32 {
+    f32::from_bits(u32_le(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_widths() {
+        assert_eq!(u16_le(&0xbeefu16.to_le_bytes()), 0xbeef);
+        assert_eq!(u32_le(&0xdead_beefu32.to_le_bytes()), 0xdead_beef);
+        assert_eq!(u64_le(&0x0123_4567_89ab_cdefu64.to_le_bytes()), 0x0123_4567_89ab_cdef);
+        assert_eq!(f32_le(&1.5f32.to_le_bytes()), 1.5);
+    }
+
+    #[test]
+    fn longer_slices_read_the_prefix() {
+        let b = [0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08, 0xff];
+        assert_eq!(u16_le(&b), 0x0201);
+        assert_eq!(u32_le(&b), 0x0403_0201);
+        assert_eq!(u64_le(&b), 0x0807_0605_0403_0201);
+    }
+
+    #[test]
+    fn short_slices_zero_extend_instead_of_panicking() {
+        assert_eq!(u32_le(&[0x01]), 0x01);
+        assert_eq!(u64_le(&[]), 0);
+        assert_eq!(u16_le(&[0xff]), 0xff);
+    }
+}

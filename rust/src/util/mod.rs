@@ -1,9 +1,23 @@
 //! Shared utilities: PRNG, JSON, CLI parsing, statistics/benching.
 
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// This is the sanctioned poison-recovery idiom for the panic-free
+/// boundary modules: the shared state the repo guards with mutexes
+/// (block caches, pending-op tables) stays structurally valid even if a
+/// holder unwound, so recovering the guard is strictly better than
+/// propagating a second panic out of a decode or I/O path.  pallas-lint's
+/// `lock-order` rule recognizes this helper as an acquisition site.
+#[inline]
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// bf16 round-to-nearest-even of an f32 (the paper's low-precision
 /// collective payload format, §V-B).

@@ -1,0 +1,53 @@
+//! Tier-1 enforcement of the repo's static-analysis pass: `pallas-lint`
+//! runs over the real `rust/src/**` tree and the build fails on any
+//! violation of the determinism / panic-free-boundary / SAFETY /
+//! hot-path-allocation / lock-order disciplines (see
+//! `tools/pallas-lint` and ARCHITECTURE.md §Static analysis).
+//!
+//! To silence a finding you must either fix it or add an explicit
+//! `// lint: allow(rule-id) — justification` escape on the preceding
+//! line; bare allows are themselves diagnostics.
+
+use std::path::Path;
+
+#[test]
+fn source_tree_has_zero_lint_diagnostics() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let cfg = pallas_lint::Config::repo();
+    let report = pallas_lint::lint_tree(&root, &cfg).expect("linting rust/src");
+    assert!(
+        !report.allows.is_empty(),
+        "the tree is known to carry justified allows; an empty list means the \
+         allow parser regressed"
+    );
+    assert!(
+        report.diagnostics.is_empty(),
+        "pallas-lint found {} violation(s) in rust/src:\n{}\nfix the code or add a \
+         justified `// lint: allow(rule-id) — why` on the preceding line",
+        report.diagnostics.len(),
+        report.render_text()
+    );
+}
+
+#[test]
+fn every_allow_in_the_tree_is_used_and_justified() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let cfg = pallas_lint::Config::repo();
+    let report = pallas_lint::lint_tree(&root, &cfg).expect("linting rust/src");
+    for a in &report.allows {
+        assert!(
+            !a.justification.is_empty(),
+            "{}:{} allow({}) has an empty justification",
+            a.file,
+            a.line,
+            a.rule
+        );
+        assert!(
+            a.used,
+            "{}:{} allow({}) suppresses nothing — stale escapes must be removed",
+            a.file,
+            a.line,
+            a.rule
+        );
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture near-miss: separate mul + add, mul_add mentioned in comments,
+// and identifiers merely containing "mul_add" must NOT fire.
+pub fn axpy(acc: &mut [f32], a: f32, b: &[f32]) {
+    for (c, &x) in acc.iter_mut().zip(b) {
+        // no x.mul_add(a, *c) here: separate mul then add rounds like the
+        // scalar oracle
+        let prod = x * a;
+        *c += prod;
+    }
+}
+
+pub fn accumulate_matmul_adds_on_top(acc: &mut [f32], delta: &[f32]) {
+    for (c, &d) in acc.iter_mut().zip(delta) {
+        *c += d;
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: fused multiply-add in a kernel module must fire, in both the
+// method and the intrinsic form.
+pub fn axpy(acc: &mut [f32], a: f32, b: &[f32]) {
+    for (c, &x) in acc.iter_mut().zip(b) {
+        *c = x.mul_add(a, *c);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+// SAFETY: caller checked the fma feature; bounds are the slice lengths.
+pub unsafe fn axpy_fma(acc: &mut [f32], a: f32, b: &[f32]) {
+    use std::arch::x86_64::*;
+    let va = _mm256_set1_ps(a);
+    let vb = _mm256_loadu_ps(b.as_ptr());
+    let vc = _mm256_loadu_ps(acc.as_ptr());
+    _mm256_storeu_ps(acc.as_mut_ptr(), _mm256_fmadd_ps(va, vb, vc));
+}

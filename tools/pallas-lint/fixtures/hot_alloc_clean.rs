@@ -1,0 +1,17 @@
+// Fixture near-miss: the same allocations in a NON-manifest fn, and a
+// manifest fn that only reuses caller-provided buffers, must NOT fire.
+pub fn gemm_rows(c: &mut [f32], a: &[f32], b: &[f32], k: usize) {
+    for (i, &av) in a.iter().enumerate() {
+        let row = &b[(i % k) * k..(i % k + 1) * k];
+        for (ci, &bv) in c.iter_mut().zip(row) {
+            *ci += av * bv;
+        }
+    }
+}
+
+pub fn gemm_rows_setup(k: usize) -> Vec<f32> {
+    // setup paths may allocate: this fn is not in the manifest
+    let mut ws = Vec::with_capacity(k);
+    ws.resize(k, 0.0);
+    ws.to_vec()
+}

@@ -1,0 +1,13 @@
+// Fixture: allocation inside a manifest hot-path fn must fire.
+pub fn gemm_rows(c: &mut [f32], a: &[f32], b: &[f32], k: usize) {
+    let mut scratch = Vec::new();
+    for (i, &av) in a.iter().enumerate() {
+        scratch.push(av * b[i % k]);
+    }
+    let copied = scratch.to_vec();
+    let label = format!("rows={}", copied.len());
+    let _ = label.clone();
+    for (ci, &s) in c.iter_mut().zip(&copied) {
+        *ci += s;
+    }
+}

@@ -1,0 +1,28 @@
+// Fixture near-miss: a consistent global acquisition order (state before
+// tx in every fn) must NOT fire.
+use std::sync::{Mutex, MutexGuard};
+
+pub struct Shared {
+    state: Mutex<Vec<u64>>,
+    tx: Mutex<Vec<u8>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+pub fn forward(sh: &Shared) {
+    let s = lock(&sh.state);
+    let mut t = lock(&sh.tx);
+    t.extend_from_slice(&s.len().to_le_bytes());
+}
+
+pub fn progress_one(sh: &Shared) {
+    let s = sh.state.lock().unwrap_or_else(|p| p.into_inner());
+    let mut t = sh.tx.lock().unwrap_or_else(|p| p.into_inner());
+    t.push(s.len() as u8);
+}
+
+pub fn state_only(sh: &Shared) -> usize {
+    lock(&sh.state).len()
+}

@@ -1,0 +1,24 @@
+// Fixture: opposite acquisition orders across two fns must fire, through
+// both the method form and the poison-recovery helper form.
+use std::sync::{Mutex, MutexGuard};
+
+pub struct Shared {
+    state: Mutex<Vec<u64>>,
+    tx: Mutex<Vec<u8>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+pub fn forward(sh: &Shared) {
+    let s = lock(&sh.state);
+    let mut t = lock(&sh.tx);
+    t.extend_from_slice(&s.len().to_le_bytes());
+}
+
+pub fn backward(sh: &Shared) {
+    let mut t = lock(&sh.tx);
+    let s = lock(&sh.state);
+    t.extend_from_slice(&s.len().to_le_bytes());
+}

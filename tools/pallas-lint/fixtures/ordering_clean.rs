@@ -1,0 +1,33 @@
+// Fixture near-miss: keyed HashMap access, iteration over Vec/BTreeMap,
+// and the path mention in `use` must NOT fire.
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Pending {
+    ops: HashMap<u64, Vec<f32>>,
+    order: Vec<u64>,
+    ranked: BTreeMap<u64, f32>,
+}
+
+pub fn keyed(p: &mut Pending, seq: u64) -> Option<Vec<f32>> {
+    if p.ops.contains_key(&seq) {
+        return p.ops.remove(&seq);
+    }
+    p.ops.insert(seq, Vec::new());
+    None
+}
+
+pub fn ordered_emit(p: &Pending, out: &mut Vec<f32>) {
+    // deterministic: Vec order and BTreeMap key order, never hash order
+    for seq in &p.order {
+        if let Some(part) = p.ops.get(seq) {
+            out.extend_from_slice(part);
+        }
+    }
+    for (_k, v) in &p.ranked {
+        out.push(*v);
+    }
+}
+
+pub fn vec_retain(p: &mut Pending) {
+    p.order.retain(|&s| s != 0);
+}

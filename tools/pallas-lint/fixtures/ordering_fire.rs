@@ -1,0 +1,23 @@
+// Fixture: iterating a HashMap/HashSet in an order-sensitive module must
+// fire, in both the method and the for-loop form.
+use std::collections::{HashMap, HashSet};
+
+pub struct Pending {
+    ops: HashMap<u64, Vec<f32>>,
+}
+
+pub fn drain_sums(p: &mut Pending, out: &mut Vec<f32>) {
+    for (_seq, part) in p.ops.drain() {
+        out.extend(part);
+    }
+}
+
+pub fn emit(p: &Pending, out: &mut Vec<u64>) {
+    for seq in &p.ops {
+        out.push(*seq.0);
+    }
+}
+
+pub fn tags(seen: HashSet<u64>) -> Vec<u64> {
+    seen.iter().copied().collect()
+}

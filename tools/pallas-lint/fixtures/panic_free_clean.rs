@@ -1,0 +1,32 @@
+// Fixture near-miss: error propagation, unwrap_or-family fallbacks, the
+// poison-recovery idiom, and test-only unwraps must NOT fire.
+use std::sync::{Mutex, MutexGuard};
+
+pub fn decode(b: &[u8]) -> Result<u32, String> {
+    if b.len() < 4 {
+        return Err("short buffer".to_string());
+    }
+    let mut arr = [0u8; 4];
+    arr.copy_from_slice(&b[..4]);
+    Ok(u32::from_le_bytes(arr))
+}
+
+pub fn first_or_zero(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}
+
+// the word unwrap() in a comment and "panic!" in a string are not calls
+pub const HINT: &str = "never panic! at a boundary";
+
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}

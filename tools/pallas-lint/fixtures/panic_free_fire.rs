@@ -1,0 +1,20 @@
+// Fixture: unwrap/expect/panic!/unreachable! in a boundary module must fire.
+pub fn decode(b: &[u8]) -> u32 {
+    if b.len() < 4 {
+        panic!("short buffer");
+    }
+    let arr: [u8; 4] = b[..4].try_into().unwrap();
+    u32::from_le_bytes(arr)
+}
+
+pub fn classify(tag: u8) -> &'static str {
+    match tag {
+        0 => "reduce",
+        1 => "gather",
+        _ => unreachable!("tag was validated"),
+    }
+}
+
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().expect("non-empty")
+}

@@ -1,0 +1,26 @@
+// Fixture near-miss: documented unsafe (including through attributes) and
+// the word unsafe inside comments/strings must NOT fire.
+
+// the string below mentions unsafe { } but is not code
+pub const DOC: &str = "never write unsafe { } without a reason";
+
+// SAFETY: lengths are equal by the caller's contract, and the regions
+// never overlap because dst is freshly allocated.
+#[inline]
+pub unsafe fn copy_exact(src: &[u16], dst: &mut [u16]) {
+    std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr(), src.len());
+}
+
+pub fn trailing_form(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: caller passes a pointer to a live byte
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_use_undocumented_unsafe() {
+        let x = 1u8;
+        let y = unsafe { *(&x as *const u8) };
+        assert_eq!(y, 1);
+    }
+}

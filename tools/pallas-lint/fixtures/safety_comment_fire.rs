@@ -1,0 +1,6 @@
+// Fixture: `unsafe` without a `// SAFETY:` comment must fire.
+pub fn widen(src: &[u16], dst: &mut [f32]) {
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr() as *mut u16, src.len());
+    }
+}

@@ -1,0 +1,1370 @@
+//! `pallas-lint` — repo-specific static analysis for the scalegnn crate.
+//!
+//! Every scale claim this repository makes rests on invariants that no
+//! general-purpose tool checks: bitwise determinism across thread counts,
+//! transports and SIMD levels; panic-free decode boundaries; `// SAFETY:`
+//! documentation on every `unsafe`; zero-allocation hot paths; and a
+//! cycle-free mutex acquisition order in the in-process collective engine.
+//! This crate turns those disciplines from reviewer folklore into tier-1
+//! test failures: a hand-rolled, dependency-free Rust lexer feeds a rule
+//! engine that walks `rust/src/**` and reports structured diagnostics.
+//!
+//! ## Rules
+//!
+//! | rule id | invariant |
+//! |---|---|
+//! | `safety-comment` | every `unsafe` is preceded by a `// SAFETY:` comment |
+//! | `panic-free-boundary` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` in the declared boundary modules |
+//! | `determinism-ordering` | no `HashMap`/`HashSet` *iteration* in modules whose output reaches a reduction, the wire, or a checkpoint |
+//! | `determinism-fma` | no `mul_add` / FMA intrinsics in kernel modules (bitwise discipline wants separate mul + add) |
+//! | `hot-path-alloc` | no allocating calls inside the checked-in hot-path function manifest |
+//! | `lock-order` | the per-crate mutex acquisition graph of the lock-scope modules is acyclic |
+//!
+//! ## Escapes
+//!
+//! A violation is silenced by an explicit, justified allow on the
+//! preceding line (or at the end of the same line):
+//!
+//! ```text
+//! // lint: allow(panic-free-boundary) — every slot is Some: completeness was checked under the lock
+//! ```
+//!
+//! The justification is mandatory (an allow without one is itself a
+//! `bad-allow` diagnostic and silences nothing) and every allow is
+//! surfaced in the `--json` report so escapes stay auditable.
+//!
+//! The lexer understands line/block (nested) comments, string/char/raw
+//! string/byte string literals, lifetimes and attributes, and records
+//! `file:line` spans.  `#[cfg(test)]` / `#[test]` items are skipped —
+//! test code may unwrap and allocate freely.  It is a *lexer*, not a
+//! parser: rules are token-pattern based, kept honest by fixture tests
+//! (`fixtures/` holds a firing snippet and a near-miss per rule).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// Rule identifiers, in reporting order.  `bad-allow` is the engine's own
+/// rule for malformed escape comments and cannot be disabled or allowed.
+pub const RULE_IDS: [&str; 7] = [
+    "safety-comment",
+    "panic-free-boundary",
+    "determinism-ordering",
+    "determinism-fma",
+    "hot-path-alloc",
+    "lock-order",
+    "bad-allow",
+];
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule id (one of [`RULE_IDS`]).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// `file:line rule-id: message` (the text output format).
+    pub fn render(&self) -> String {
+        format!("{}:{} {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One `// lint: allow(rule) — justification` escape found in the tree.
+/// Surfaced in the JSON report whether or not it suppressed anything.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Path relative to the linted root.
+    pub file: String,
+    /// 1-based line of the allow comment.
+    pub line: u32,
+    /// Rule the escape names.
+    pub rule: String,
+    /// The mandatory justification text.
+    pub justification: String,
+    /// Whether the allow actually suppressed a diagnostic.
+    pub used: bool,
+}
+
+/// Result of a lint run: surviving diagnostics plus every escape.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Violations that were not suppressed, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Every justified allow in the tree, sorted by (file, line).
+    pub allows: Vec<Allow>,
+}
+
+impl Report {
+    /// One line per diagnostic in `file:line rule-id: message` form.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Stable machine-readable form (shape pinned by a fixture test):
+    /// `{"version":1,"diagnostics":[{file,line,rule,message}...],`
+    /// `"allows":[{file,line,rule,justification,used}...]}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\"version\":1,\"diagnostics\":[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"file\":{},\"line\":{},\"rule\":{},\"message\":{}}}",
+                json_str(&d.file),
+                d.line,
+                json_str(d.rule),
+                json_str(&d.message)
+            ));
+        }
+        s.push_str("],\"allows\":[");
+        for (i, a) in self.allows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"file\":{},\"line\":{},\"rule\":{},\"justification\":{},\"used\":{}}}",
+                json_str(&a.file),
+                a.line,
+                json_str(&a.rule),
+                json_str(&a.justification),
+                a.used
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Scope and manifest configuration of a lint run.  [`Config::repo`] is
+/// the checked-in configuration the tier-1 test enforces; fixture tests
+/// build narrower ones.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Enabled rule ids (`bad-allow` is implicitly always on).
+    pub enabled: Vec<String>,
+    /// Panic-free modules: path prefixes relative to the linted root.
+    pub boundary_modules: Vec<String>,
+    /// Modules whose output reaches a reduction, the wire, or a
+    /// checkpoint: map iteration order must not be observable.
+    pub ordered_modules: Vec<String>,
+    /// Kernel modules where FMA would break bitwise identity.
+    pub fma_modules: Vec<String>,
+    /// Modules participating in the mutex acquisition graph.
+    pub lock_modules: Vec<String>,
+    /// Hot-path manifest: `(path prefix, fn name)`; an empty prefix
+    /// matches any file.
+    pub hot_fns: Vec<(String, String)>,
+}
+
+impl Config {
+    /// The repository configuration: boundary modules from PR 7/2/6, the
+    /// kernel discipline of PR 1/8, and the hot-path manifest of PR 1/5.
+    pub fn repo() -> Config {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        Config {
+            enabled: RULE_IDS.iter().map(|r| r.to_string()).collect(),
+            boundary_modules: s(&[
+                "comm/wire.rs",
+                "comm/socket.rs",
+                "comm/coord.rs",
+                "graph/store.rs",
+                "checkpoint/",
+            ]),
+            ordered_modules: s(&["comm/", "checkpoint/", "graph/store.rs"]),
+            fma_modules: s(&["tensor/", "pmm/", "model/"]),
+            lock_modules: s(&["comm/inproc.rs", "comm/coord.rs"]),
+            hot_fns: vec![
+                (String::new(), "train_step_ws".into()),
+                (String::new(), "induce_rescaled_into".into()),
+                (String::new(), "induce_rescaled_into_threads".into()),
+                (String::new(), "sample_and_induce_into".into()),
+                (String::new(), "make_into".into()),
+                (String::new(), "gemm_rows".into()),
+                (String::new(), "spmm_into".into()),
+                (String::new(), "spmm_into_threads".into()),
+                ("comm/".into(), "progress".into()),
+                ("pmm/".into(), "progress".into()),
+            ],
+        }
+    }
+
+    /// Copy of this configuration with `rule` switched off (fixture tests
+    /// prove each rule is live by disabling it and expecting silence).
+    pub fn disable(mut self, rule: &str) -> Config {
+        self.enabled.retain(|r| r != rule);
+        self
+    }
+
+    fn on(&self, rule: &str) -> bool {
+        self.enabled.iter().any(|r| r == rule)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+    /// String / char / byte / raw-string / lifetime / number literal —
+    /// rules only need to know "not an identifier, not punctuation".
+    Lit,
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    tok: Tok,
+    line: u32,
+}
+
+fn skip_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    // chars[i] is the opening '"'
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_raw_string(chars: &[char], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    // chars[i] is the opening '"'
+    i += 1;
+    while i < chars.len() {
+        if chars[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if chars[i] == '"' {
+            let mut k = 0;
+            while k < hashes && i + 1 + k < chars.len() && chars[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+fn skip_char_lit(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    // chars[i] is the opening '\''
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. /// and //!)
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested per Rust
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string and byte char prefixes: r"", r#""#, b"", br"", b''
+        if c == 'r' || c == 'b' {
+            let (mut j, raw) = if c == 'b' && i + 1 < n && chars[i + 1] == 'r' {
+                (i + 2, true)
+            } else if c == 'r' {
+                (i + 1, true)
+            } else {
+                (i + 1, false)
+            };
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    let start = line;
+                    i = skip_raw_string(&chars, j, hashes, &mut line);
+                    toks.push(Token { tok: Tok::Lit, line: start });
+                    continue;
+                }
+            } else if j < n && (chars[j] == '"' || chars[j] == '\'') {
+                let start = line;
+                i = if chars[j] == '"' {
+                    skip_string(&chars, j, &mut line)
+                } else {
+                    skip_char_lit(&chars, j, &mut line)
+                };
+                toks.push(Token { tok: Tok::Lit, line: start });
+                continue;
+            }
+            // plain identifier starting with r/b: fall through
+        }
+        if c == '"' {
+            let start = line;
+            i = skip_string(&chars, i, &mut line);
+            toks.push(Token { tok: Tok::Lit, line: start });
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime: 'x' / '\n' are literals, 'a in
+            // generics is a lifetime (no closing quote after one char)
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let start = line;
+                i = skip_char_lit(&chars, i, &mut line);
+                toks.push(Token { tok: Tok::Lit, line: start });
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                toks.push(Token { tok: Tok::Lit, line });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            toks.push(Token { tok: Tok::Lit, line });
+            i = j.max(i + 1);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = chars[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                    continue;
+                }
+                // decimal point only when a digit follows (so `0..n`
+                // keeps its range dots as punctuation)
+                if d == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    j += 2;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Token { tok: Tok::Lit, line });
+            i = j;
+            continue;
+        }
+        if c.is_alphanumeric() || c == '_' {
+            let mut j = i;
+            let mut s = String::new();
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                s.push(chars[j]);
+                j += 1;
+            }
+            toks.push(Token { tok: Tok::Ident(s), line });
+            i = j;
+            continue;
+        }
+        toks.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------------
+// Item segmentation: #[cfg(test)] spans and fn bodies
+// ---------------------------------------------------------------------------
+
+/// Scan an attribute starting at `i` (`toks[i]` is `#`).  Returns the
+/// index just past the closing `]` and whether the attribute marks test
+/// code (`#[test]`, `#[cfg(test)]`, `#[cfg(any(test, ...))]`, `#[bench]`
+/// — but not `#[cfg(not(test))]`, and never inner `#![...]` attributes).
+fn scan_attr(toks: &[Token], i: usize) -> (usize, bool) {
+    let mut j = i + 1;
+    let inner = matches!(toks.get(j).map(|t| &t.tok), Some(Tok::Punct('!')));
+    if inner {
+        j += 1;
+    }
+    if !matches!(toks.get(j).map(|t| &t.tok), Some(Tok::Punct('['))) {
+        return (i + 1, false);
+    }
+    let mut depth = 0usize;
+    let mut is_test = false;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (j + 1, is_test && !inner);
+                }
+            }
+            Tok::Ident(s) if s == "test" || s == "bench" => {
+                let negated = j >= 2
+                    && matches!(&toks[j - 1].tok, Tok::Punct('('))
+                    && matches!(&toks[j - 2].tok, Tok::Ident(x) if x == "not");
+                if !negated {
+                    is_test = true;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    (j, false)
+}
+
+/// From `j` (just past an item's attributes) return the index just past
+/// the item: through the matching `}` of its first top-level brace, or
+/// just past a terminating `;`.
+fn scan_item(toks: &[Token], mut j: usize) -> usize {
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct(';') => return j + 1,
+            Tok::Punct('{') => {
+                let mut depth = 0usize;
+                while j < toks.len() {
+                    match &toks[j].tok {
+                        Tok::Punct('{') => depth += 1,
+                        Tok::Punct('}') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return j + 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                return j;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+fn find_test_spans(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if matches!(toks[i].tok, Tok::Punct('#')) {
+            let start = i;
+            let (mut end, is_test) = scan_attr(toks, i);
+            if is_test {
+                // consume any further attributes of the same item
+                while matches!(toks.get(end).map(|t| &t.tok), Some(Tok::Punct('#'))) {
+                    end = scan_attr(toks, end).0;
+                }
+                let item_end = scan_item(toks, end);
+                spans.push((start, item_end));
+                i = item_end;
+                continue;
+            }
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+#[derive(Debug, Clone)]
+struct FnInfo {
+    name: String,
+    /// Token index range of the body including its braces.
+    body: (usize, usize),
+}
+
+fn find_fns(toks: &[Token]) -> Vec<FnInfo> {
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if matches!(&toks[i].tok, Tok::Ident(s) if s == "fn") {
+            if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.tok) {
+                let mut j = i + 2;
+                while j < toks.len() {
+                    match &toks[j].tok {
+                        // trait method declaration: no body to scan
+                        Tok::Punct(';') => break,
+                        Tok::Punct('{') => {
+                            let start = j;
+                            let mut depth = 0usize;
+                            while j < toks.len() {
+                                match &toks[j].tok {
+                                    Tok::Punct('{') => depth += 1,
+                                    Tok::Punct('}') => {
+                                        depth -= 1;
+                                        if depth == 0 {
+                                            break;
+                                        }
+                                    }
+                                    _ => {}
+                                }
+                                j += 1;
+                            }
+                            fns.push(FnInfo {
+                                name: name.clone(),
+                                body: (start, (j + 1).min(toks.len())),
+                            });
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis context
+// ---------------------------------------------------------------------------
+
+struct AllowRec {
+    line: u32,
+    rule: String,
+    justification: String,
+    used: bool,
+}
+
+struct FileCtx {
+    path: String,
+    toks: Vec<Token>,
+    test_spans: Vec<(usize, usize)>,
+    fns: Vec<FnInfo>,
+    lines: Vec<String>,
+    allows: Vec<AllowRec>,
+}
+
+impl FileCtx {
+    fn new(path: &str, src: &str, diags: &mut Vec<Diagnostic>) -> FileCtx {
+        let toks = lex(src);
+        let test_spans = find_test_spans(&toks);
+        let fns = find_fns(&toks);
+        let lines: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        let allows = parse_allows(path, &lines, diags);
+        FileCtx { path: path.to_string(), toks, test_spans, fns, lines, allows }
+    }
+
+    fn in_test(&self, idx: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| idx >= s && idx < e)
+    }
+
+    /// True when `line` (1-based) carries or is preceded by a `// SAFETY:`
+    /// comment block; intervening attribute lines are skipped.
+    fn has_safety_comment(&self, line: u32) -> bool {
+        let idx = line as usize - 1;
+        if let Some(raw) = self.lines.get(idx) {
+            if let Some(p) = raw.find("//") {
+                if raw[p..].contains("SAFETY:") {
+                    return true;
+                }
+            }
+        }
+        let mut k = idx;
+        while k > 0 {
+            k -= 1;
+            let t = self.lines[k].trim();
+            if t.starts_with("//") {
+                if t.contains("SAFETY:") {
+                    return true;
+                }
+                continue;
+            }
+            if t.starts_with("#[") || t.starts_with("#!") {
+                continue;
+            }
+            return false;
+        }
+        false
+    }
+}
+
+fn parse_allows(path: &str, lines: &[String], diags: &mut Vec<Diagnostic>) -> Vec<AllowRec> {
+    let mut out = Vec::new();
+    for (idx, raw) in lines.iter().enumerate() {
+        let line = idx as u32 + 1;
+        let Some(cpos) = raw.find("//") else { continue };
+        let c = &raw[cpos..];
+        let Some(apos) = c.find("lint: allow(").or_else(|| c.find("lint:allow(")) else {
+            continue;
+        };
+        let after = &c[apos..];
+        let Some(open) = after.find('(') else { continue };
+        let Some(close) = after.find(')') else {
+            diags.push(Diagnostic {
+                file: path.to_string(),
+                line,
+                rule: "bad-allow",
+                message: "unterminated lint: allow(...)".to_string(),
+            });
+            continue;
+        };
+        if close < open {
+            continue;
+        }
+        let rule = after[open + 1..close].trim().to_string();
+        let known = RULE_IDS.iter().any(|r| *r == rule && *r != "bad-allow");
+        if !known {
+            diags.push(Diagnostic {
+                file: path.to_string(),
+                line,
+                rule: "bad-allow",
+                message: format!("allow names unknown rule '{rule}'"),
+            });
+            continue;
+        }
+        let justification = after[close + 1..]
+            .trim_start_matches(|ch: char| {
+                ch.is_whitespace() || ch == '—' || ch == '-' || ch == ':' || ch == '·'
+            })
+            .trim()
+            .to_string();
+        if justification.is_empty() {
+            diags.push(Diagnostic {
+                file: path.to_string(),
+                line,
+                rule: "bad-allow",
+                message: format!(
+                    "allow({rule}) needs a justification: `// lint: allow({rule}) — why`"
+                ),
+            });
+            continue;
+        }
+        out.push(AllowRec { line, rule, justification, used: false });
+    }
+    out
+}
+
+fn in_scope(path: &str, modules: &[String]) -> bool {
+    modules.iter().any(|m| path.starts_with(m.as_str()))
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn ident_at<'a>(toks: &'a [Token], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i).map(|t| &t.tok), Some(Tok::Punct(p)) if *p == c)
+}
+
+fn check_safety(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if !matches!(&t.tok, Tok::Ident(s) if s == "unsafe") || ctx.in_test(i) {
+            continue;
+        }
+        if ctx.has_safety_comment(t.line) {
+            continue;
+        }
+        diags.push(Diagnostic {
+            file: ctx.path.clone(),
+            line: t.line,
+            rule: "safety-comment",
+            message: "`unsafe` without a preceding `// SAFETY:` comment documenting \
+                      the precondition that makes it sound"
+                .to_string(),
+        });
+    }
+}
+
+fn check_panic_free(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let toks = &ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        if let Some(name) = ident_at(toks, i) {
+            let method = (name == "unwrap" || name == "expect") && i > 0 && punct_at(toks, i - 1, '.');
+            let macro_call = matches!(name, "panic" | "unreachable" | "todo" | "unimplemented")
+                && punct_at(toks, i + 1, '!');
+            if method {
+                diags.push(Diagnostic {
+                    file: ctx.path.clone(),
+                    line: toks[i].line,
+                    rule: "panic-free-boundary",
+                    message: format!(
+                        "`.{name}()` in a panic-free boundary module — decode and I/O \
+                         failures here must stay descriptive errors, never panics"
+                    ),
+                });
+            } else if macro_call {
+                diags.push(Diagnostic {
+                    file: ctx.path.clone(),
+                    line: toks[i].line,
+                    rule: "panic-free-boundary",
+                    message: format!(
+                        "`{name}!` in a panic-free boundary module — return a \
+                         descriptive error instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+fn check_ordering(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let toks = &ctx.toks;
+    // names declared or initialized as HashMap / HashSet in this file
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for i in 0..toks.len() {
+        let Some(ty) = ident_at(toks, i) else { continue };
+        if ty != "HashMap" && ty != "HashSet" {
+            continue;
+        }
+        // path-qualified mention (`std::collections::HashMap`) is not a decl
+        if i >= 2 && punct_at(toks, i - 1, ':') && punct_at(toks, i - 2, ':') {
+            continue;
+        }
+        // walk back over `&` and `mut` to `name :` or `name =`
+        let mut k = i;
+        while k > 0 {
+            let prev = k - 1;
+            if punct_at(toks, prev, '&') || ident_at(toks, prev) == Some("mut") {
+                k = prev;
+                continue;
+            }
+            break;
+        }
+        if k == 0 {
+            continue;
+        }
+        let sep = k - 1;
+        let is_decl = punct_at(toks, sep, ':') || punct_at(toks, sep, '=');
+        if !is_decl || sep == 0 {
+            continue;
+        }
+        // a `::` before the separator means a path, not a binding
+        if punct_at(toks, sep, ':') && sep >= 1 && punct_at(toks, sep - 1, ':') {
+            continue;
+        }
+        if let Some(name) = ident_at(toks, sep - 1) {
+            names.insert(name.to_string());
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // receiver.iter_method(...)
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        if let Some(m) = ident_at(toks, i) {
+            if ITER_METHODS.contains(&m) && i >= 2 && punct_at(toks, i - 1, '.') {
+                if let Some(recv) = ident_at(toks, i - 2) {
+                    if names.contains(recv) {
+                        diags.push(Diagnostic {
+                            file: ctx.path.clone(),
+                            line: toks[i].line,
+                            rule: "determinism-ordering",
+                            message: format!(
+                                "`{recv}.{m}()` iterates a HashMap/HashSet in an \
+                                 order-sensitive module — arrival at a reduction, the \
+                                 wire, or a checkpoint must not depend on hash order \
+                                 (use BTreeMap or an indexed loop)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // for ... in [&][mut] name
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident_at(toks, i) == Some("for") && !ctx.in_test(i) {
+            let mut j = i + 1;
+            let limit = (i + 40).min(toks.len());
+            while j < limit {
+                if punct_at(toks, j, '{') || punct_at(toks, j, ';') {
+                    break;
+                }
+                if ident_at(toks, j) == Some("in") {
+                    let mut k = j + 1;
+                    while punct_at(toks, k, '&')
+                        || punct_at(toks, k, '(')
+                        || ident_at(toks, k) == Some("mut")
+                    {
+                        k += 1;
+                    }
+                    // walk a dotted path (`sh.state.ops`) to its last
+                    // segment; a trailing `(` means a method call, which
+                    // the receiver scan above already covers
+                    while ident_at(toks, k).is_some()
+                        && punct_at(toks, k + 1, '.')
+                        && ident_at(toks, k + 2).is_some()
+                    {
+                        k += 2;
+                    }
+                    if let Some(name) = ident_at(toks, k) {
+                        if names.contains(name) && !punct_at(toks, k + 1, '(') {
+                            diags.push(Diagnostic {
+                                file: ctx.path.clone(),
+                                line: toks[k].line,
+                                rule: "determinism-ordering",
+                                message: format!(
+                                    "`for ... in {name}` iterates a HashMap/HashSet in an \
+                                     order-sensitive module — hash order must not reach a \
+                                     reduction, the wire, or a checkpoint"
+                                ),
+                            });
+                        }
+                    }
+                    break;
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+}
+
+fn check_fma(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let toks = &ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i) else { continue };
+        let is_fma = (name == "mul_add" && i > 0 && punct_at(toks, i - 1, '.'))
+            || (name.starts_with("_mm") && name.contains("fmadd"))
+            || name.starts_with("vfma");
+        if is_fma {
+            diags.push(Diagnostic {
+                file: ctx.path.clone(),
+                line: toks[i].line,
+                rule: "determinism-fma",
+                message: format!(
+                    "`{name}` fuses multiply and add — the bitwise kernel discipline \
+                     requires separate mul + add so SIMD and scalar paths round \
+                     identically"
+                ),
+            });
+        }
+    }
+}
+
+fn check_hot_alloc(ctx: &FileCtx, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    let manifest: Vec<&str> = cfg
+        .hot_fns
+        .iter()
+        .filter(|(prefix, _)| prefix.is_empty() || ctx.path.starts_with(prefix.as_str()))
+        .map(|(_, name)| name.as_str())
+        .collect();
+    if manifest.is_empty() {
+        return;
+    }
+    let toks = &ctx.toks;
+    for f in &ctx.fns {
+        if !manifest.contains(&f.name.as_str()) || ctx.in_test(f.body.0) {
+            continue;
+        }
+        for i in f.body.0..f.body.1.min(toks.len()) {
+            let Some(name) = ident_at(toks, i) else { continue };
+            let path_call = |head: &str, tails: &[&str]| {
+                name == head
+                    && punct_at(toks, i + 1, ':')
+                    && punct_at(toks, i + 2, ':')
+                    && ident_at(toks, i + 3).map_or(false, |t| tails.contains(&t))
+            };
+            let offending: Option<String> = if path_call("Vec", &["new", "with_capacity"]) {
+                Some(format!("Vec::{}", ident_at(toks, i + 3).unwrap_or("new")))
+            } else if path_call("Box", &["new"]) {
+                Some("Box::new".to_string())
+            } else if path_call("String", &["from", "new"]) {
+                Some(format!("String::{}", ident_at(toks, i + 3).unwrap_or("from")))
+            } else if (name == "vec" || name == "format") && punct_at(toks, i + 1, '!') {
+                Some(format!("{name}!"))
+            } else if matches!(name, "to_vec" | "collect" | "clone" | "to_string" | "to_owned")
+                && i > 0
+                && punct_at(toks, i - 1, '.')
+            {
+                Some(format!(".{name}()"))
+            } else {
+                None
+            };
+            if let Some(what) = offending {
+                diags.push(Diagnostic {
+                    file: ctx.path.clone(),
+                    line: toks[i].line,
+                    rule: "hot-path-alloc",
+                    message: format!(
+                        "`{what}` inside hot-path fn `{}` — the zero-allocation \
+                         manifest requires reused workspace buffers here",
+                        f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// One mutex acquisition: receiver/guard name plus its witness location.
+struct LockAcq {
+    name: String,
+    file: String,
+    line: u32,
+    func: String,
+}
+
+/// Collect `name.lock()` / `name.try_lock()` plus the repo's sanctioned
+/// poison-recovering helpers `lock(&...name)` / `lock_unpoisoned(&...name)`
+/// into per-function acquisition sequences.
+fn collect_locks(ctx: &FileCtx, out: &mut Vec<Vec<LockAcq>>) {
+    let toks = &ctx.toks;
+    for f in &ctx.fns {
+        if ctx.in_test(f.body.0) {
+            continue;
+        }
+        let mut seq: Vec<LockAcq> = Vec::new();
+        let mut i = f.body.0;
+        while i < f.body.1.min(toks.len()) {
+            if let Some(name) = ident_at(toks, i) {
+                // receiver.lock() / receiver.try_lock()
+                if (name == "lock" || name == "try_lock")
+                    && i >= 2
+                    && punct_at(toks, i - 1, '.')
+                    && punct_at(toks, i + 1, '(')
+                {
+                    if let Some(recv) = ident_at(toks, i - 2) {
+                        seq.push(LockAcq {
+                            name: recv.to_string(),
+                            file: ctx.path.clone(),
+                            line: toks[i].line,
+                            func: f.name.clone(),
+                        });
+                    }
+                } else if (name == "lock" || name == "lock_unpoisoned")
+                    && punct_at(toks, i + 1, '(')
+                    && !(i >= 1 && punct_at(toks, i - 1, '.'))
+                {
+                    // helper call: the guarded mutex is the last ident of
+                    // the receiver path before any indexing
+                    let mut j = i + 2;
+                    let mut depth = 1usize;
+                    let mut last: Option<&str> = None;
+                    while j < toks.len() && depth > 0 {
+                        match &toks[j].tok {
+                            Tok::Punct('(') => depth += 1,
+                            Tok::Punct(')') => depth -= 1,
+                            Tok::Punct('[') if depth == 1 => break,
+                            Tok::Ident(s) if depth == 1 => last = Some(s.as_str()),
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if let Some(recv) = last {
+                        seq.push(LockAcq {
+                            name: recv.to_string(),
+                            file: ctx.path.clone(),
+                            line: toks[i].line,
+                            func: f.name.clone(),
+                        });
+                    }
+                }
+            }
+            i += 1;
+        }
+        if !seq.is_empty() {
+            out.push(seq);
+        }
+    }
+}
+
+/// Build the acquisition graph (edge `a -> b` when `b` is acquired after
+/// `a` within one function body) and report every strongly-connected
+/// component with more than one lock name as an ordering cycle.
+fn check_lock_cycles(seqs: &[Vec<LockAcq>], diags: &mut Vec<Diagnostic>) {
+    let mut edges: BTreeMap<(String, String), (String, u32, String)> = BTreeMap::new();
+    let mut nodes: BTreeSet<String> = BTreeSet::new();
+    for seq in seqs {
+        for a in seq.iter() {
+            nodes.insert(a.name.clone());
+        }
+        for (ai, a) in seq.iter().enumerate() {
+            for b in seq.iter().skip(ai + 1) {
+                if a.name != b.name {
+                    edges
+                        .entry((a.name.clone(), b.name.clone()))
+                        .or_insert((b.file.clone(), b.line, b.func.clone()));
+                }
+            }
+        }
+    }
+    let names: Vec<&String> = nodes.iter().collect();
+    let n = names.len();
+    let idx_of = |s: &str| names.iter().position(|x| x.as_str() == s);
+    // reachability closure
+    let mut reach = vec![vec![false; n]; n];
+    for (a, b) in edges.keys() {
+        if let (Some(i), Some(j)) = (idx_of(a), idx_of(b)) {
+            reach[i][j] = true;
+        }
+    }
+    for k in 0..n {
+        for i in 0..n {
+            if reach[i][k] {
+                for j in 0..n {
+                    if reach[k][j] {
+                        reach[i][j] = true;
+                    }
+                }
+            }
+        }
+    }
+    // SCCs by mutual reachability; deterministic by sorted name order
+    let mut assigned = vec![false; n];
+    for i in 0..n {
+        if assigned[i] {
+            continue;
+        }
+        let mut comp = vec![i];
+        for j in (i + 1)..n {
+            if !assigned[j] && reach[i][j] && reach[j][i] {
+                comp.push(j);
+            }
+        }
+        if comp.len() > 1 {
+            for &c in &comp {
+                assigned[c] = true;
+            }
+            let members: Vec<&str> = comp.iter().map(|&c| names[c].as_str()).collect();
+            // witness: smallest (file, line) among the component's edges
+            let mut witness: Option<(String, u32, String, String, String)> = None;
+            for ((a, b), (file, line, func)) in &edges {
+                if members.contains(&a.as_str()) && members.contains(&b.as_str()) {
+                    let cand = (file.clone(), *line, func.clone(), a.clone(), b.clone());
+                    let better = match &witness {
+                        None => true,
+                        Some(w) => (&cand.0, cand.1) < (&w.0, w.1),
+                    };
+                    if better {
+                        witness = Some(cand);
+                    }
+                }
+            }
+            if let Some((file, line, func, a, b)) = witness {
+                diags.push(Diagnostic {
+                    file,
+                    line,
+                    rule: "lock-order",
+                    message: format!(
+                        "mutex acquisition cycle among {{{}}} — fn `{func}` takes \
+                         `{b}` after `{a}` while another path takes them in the \
+                         opposite order; pick one global order",
+                        members.join(", ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Lint in-memory sources.  `files` holds `(path, source)` pairs where
+/// `path` is relative to the conceptual source root (`comm/wire.rs`,
+/// `tensor/simd.rs`, ...) — scope matching is prefix-based on it.
+pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Report {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut lock_seqs: Vec<Vec<LockAcq>> = Vec::new();
+    let mut ctxs: Vec<FileCtx> = Vec::new();
+    for (path, src) in files {
+        let ctx = FileCtx::new(path, src, &mut diags);
+        if cfg.on("safety-comment") {
+            check_safety(&ctx, &mut diags);
+        }
+        if cfg.on("panic-free-boundary") && in_scope(path, &cfg.boundary_modules) {
+            check_panic_free(&ctx, &mut diags);
+        }
+        if cfg.on("determinism-ordering") && in_scope(path, &cfg.ordered_modules) {
+            check_ordering(&ctx, &mut diags);
+        }
+        if cfg.on("determinism-fma") && in_scope(path, &cfg.fma_modules) {
+            check_fma(&ctx, &mut diags);
+        }
+        if cfg.on("hot-path-alloc") {
+            check_hot_alloc(&ctx, cfg, &mut diags);
+        }
+        if cfg.on("lock-order") && in_scope(path, &cfg.lock_modules) {
+            collect_locks(&ctx, &mut lock_seqs);
+        }
+        ctxs.push(ctx);
+    }
+    if cfg.on("lock-order") {
+        check_lock_cycles(&lock_seqs, &mut diags);
+    }
+    // apply allows: an allow on line L suppresses a same-rule diagnostic
+    // on L (trailing form) or L+1 (preceding-line form)
+    for ctx in &mut ctxs {
+        for a in &mut ctx.allows {
+            let before = diags.len();
+            diags.retain(|d| {
+                !(d.file == ctx.path
+                    && d.rule == a.rule
+                    && d.rule != "bad-allow"
+                    && (d.line == a.line || d.line == a.line + 1))
+            });
+            if diags.len() < before {
+                a.used = true;
+            }
+        }
+        for a in &ctx.allows {
+            allows.push(Allow {
+                file: ctx.path.clone(),
+                line: a.line,
+                rule: a.rule.clone(),
+                justification: a.justification.clone(),
+                used: a.used,
+            });
+        }
+    }
+    let rule_rank =
+        |r: &str| RULE_IDS.iter().position(|x| *x == r).unwrap_or(RULE_IDS.len());
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, rule_rank(a.rule), &a.message)
+            .cmp(&(&b.file, b.line, rule_rank(b.rule), &b.message))
+    });
+    diags.dedup();
+    allows.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Report { diagnostics: diags, allows }
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading directory {}: {e}", dir.display()))?;
+    let mut entries: Vec<std::path::PathBuf> =
+        rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .map_err(|e| format!("path {} outside root: {e}", p.display()))?;
+            let rel = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`), in sorted
+/// path order so reports are deterministic.
+pub fn lint_tree(root: &Path, cfg: &Config) -> Result<Report, String> {
+    let mut rels = Vec::new();
+    collect_rs(root, root, &mut rels)?;
+    rels.sort();
+    let mut files = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let full = root.join(&rel);
+        let src = std::fs::read_to_string(&full)
+            .map_err(|e| format!("reading {}: {e}", full.display()))?;
+        files.push((rel, src));
+    }
+    Ok(lint_sources(&files, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(path: &str, src: &str) -> Report {
+        lint_sources(&[(path.to_string(), src.to_string())], &Config::repo())
+    }
+
+    #[test]
+    fn lexer_survives_strings_comments_and_lifetimes() {
+        let src = r##"
+// a comment with unsafe and .unwrap() inside
+/* block /* nested */ still comment .unwrap() */
+fn f<'a>(x: &'a str) -> char {
+    let _s = "string with // not a comment and \" escape";
+    let _r = r#"raw "string" with .unwrap()"#;
+    let _b = b"bytes";
+    let _c = 'x';
+    let _e = '\n';
+    let _n = 0x7fff_ffff + 1e-30 + 0.5;
+    'x'
+}
+"##;
+        let toks = lex(src);
+        // no unwrap ident must have survived the comments/strings
+        assert!(toks.iter().all(|t| !matches!(&t.tok, Tok::Ident(s) if s == "unwrap")));
+        // the fn and its name are visible
+        assert!(toks.iter().any(|t| matches!(&t.tok, Tok::Ident(s) if s == "fn")));
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_items() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n fn t() { y.unwrap(); } }\n";
+        let r = run_one("comm/wire.rs", src);
+        assert_eq!(r.diagnostics.len(), 1, "{:?}", r.diagnostics);
+        assert_eq!(r.diagnostics[0].line, 1);
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_linted() {
+        let src = "#[cfg(not(test))]\nfn live() { x.unwrap(); }\n";
+        let r = run_one("comm/wire.rs", src);
+        assert_eq!(r.diagnostics.len(), 1, "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn allow_requires_justification() {
+        let src = "// lint: allow(panic-free-boundary)\nfn f() { x.unwrap(); }\n";
+        let r = run_one("comm/wire.rs", src);
+        // the bare allow is a bad-allow AND the unwrap still fires
+        assert!(r.diagnostics.iter().any(|d| d.rule == "bad-allow"), "{:?}", r.diagnostics);
+        assert!(
+            r.diagnostics.iter().any(|d| d.rule == "panic-free-boundary"),
+            "{:?}",
+            r.diagnostics
+        );
+        assert!(r.allows.is_empty());
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_is_reported() {
+        let src = "// lint: allow(panic-free-boundary) — infallible by construction\n\
+                   fn f() { x.unwrap(); }\n";
+        let r = run_one("comm/wire.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        assert_eq!(r.allows.len(), 1);
+        assert!(r.allows[0].used);
+        assert_eq!(r.allows[0].justification, "infallible by construction");
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_bad() {
+        let src = "// lint: allow(no-such-rule) — because\nfn f() {}\n";
+        let r = run_one("comm/wire.rs", src);
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].rule, "bad-allow");
+    }
+
+    #[test]
+    fn scope_prefixes_gate_rules() {
+        // unwrap outside a boundary module is fine
+        let r = run_one("model/mod.rs", "fn f() { x.unwrap(); }\n");
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        // mul_add outside kernel modules is fine
+        let r = run_one("session/spec.rs", "fn f(a: f32) -> f32 { a.mul_add(2.0, 1.0) }\n");
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn trait_method_declarations_have_no_body() {
+        let src = "trait T { fn progress(&self, rank: usize) -> bool; }\n";
+        let r = run_one("comm/mod.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+    }
+}

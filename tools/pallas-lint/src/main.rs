@@ -1,0 +1,84 @@
+//! `scalegnn-lint` — command-line front end for [`pallas_lint`].
+//!
+//! ```text
+//! scalegnn-lint [--json] [ROOT]
+//! ```
+//!
+//! `ROOT` defaults to the first of `rust/src`, `src`, `../rust/src` that
+//! exists, so the binary works from the workspace root, from `rust/`, and
+//! from `tools/pallas-lint/`.  Exit status: 0 clean, 1 diagnostics
+//! reported, 2 internal error (unreadable tree, bad usage).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("usage: scalegnn-lint [--json] [ROOT]");
+                println!("lint a Rust source tree against the scalegnn invariants");
+                return ExitCode::SUCCESS;
+            }
+            a if a.starts_with('-') => {
+                eprintln!("scalegnn-lint: unknown flag {a} (try --help)");
+                return ExitCode::from(2);
+            }
+            a => {
+                if root.is_some() {
+                    eprintln!("scalegnn-lint: more than one ROOT given");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(a));
+            }
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let candidates = ["rust/src", "src", "../rust/src", "../../rust/src"];
+            match candidates.iter().map(PathBuf::from).find(|p| p.is_dir()) {
+                Some(p) => p,
+                None => {
+                    eprintln!(
+                        "scalegnn-lint: no source root found (tried {}); pass one explicitly",
+                        candidates.join(", ")
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+    let cfg = pallas_lint::Config::repo();
+    let report = match pallas_lint::lint_tree(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("scalegnn-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+        if report.diagnostics.is_empty() {
+            eprintln!(
+                "scalegnn-lint: clean ({} allow(s) in effect)",
+                report.allows.len()
+            );
+        } else {
+            eprintln!(
+                "scalegnn-lint: {} diagnostic(s)",
+                report.diagnostics.len()
+            );
+        }
+    }
+    if report.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,200 @@
+//! Fixture self-tests: every rule is proven *live* (its firing snippet
+//! produces diagnostics, and disabling the rule silences them) and
+//! *precise* (its near-miss snippet stays clean).  Plus the allow
+//! round-trip and the JSON shape pin.
+
+use pallas_lint::{lint_sources, Config, Report};
+
+fn run(path: &str, src: &str, cfg: &Config) -> Report {
+    lint_sources(&[(path.to_string(), src.to_string())], cfg)
+}
+
+/// (rule, virtual path placing the fixture in the rule's scope, fire, clean)
+fn cases() -> Vec<(&'static str, &'static str, &'static str, &'static str)> {
+    vec![
+        (
+            "safety-comment",
+            "tensor/simd.rs",
+            include_str!("../fixtures/safety_comment_fire.rs"),
+            include_str!("../fixtures/safety_comment_clean.rs"),
+        ),
+        (
+            "panic-free-boundary",
+            "comm/wire.rs",
+            include_str!("../fixtures/panic_free_fire.rs"),
+            include_str!("../fixtures/panic_free_clean.rs"),
+        ),
+        (
+            "determinism-ordering",
+            "comm/coord.rs",
+            include_str!("../fixtures/ordering_fire.rs"),
+            include_str!("../fixtures/ordering_clean.rs"),
+        ),
+        (
+            "determinism-fma",
+            "tensor/kernel.rs",
+            include_str!("../fixtures/fma_fire.rs"),
+            include_str!("../fixtures/fma_clean.rs"),
+        ),
+        (
+            "hot-path-alloc",
+            "tensor/gemm.rs",
+            include_str!("../fixtures/hot_alloc_fire.rs"),
+            include_str!("../fixtures/hot_alloc_clean.rs"),
+        ),
+        (
+            "lock-order",
+            "comm/inproc.rs",
+            include_str!("../fixtures/lock_order_fire.rs"),
+            include_str!("../fixtures/lock_order_clean.rs"),
+        ),
+    ]
+}
+
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    for (rule, path, fire, _clean) in cases() {
+        let r = run(path, fire, &Config::repo());
+        assert!(
+            r.diagnostics.iter().any(|d| d.rule == rule),
+            "{rule}: firing fixture produced no {rule} diagnostic; got {:?}",
+            r.diagnostics
+        );
+        assert!(
+            r.diagnostics.iter().all(|d| d.rule == rule),
+            "{rule}: firing fixture tripped other rules too: {:?}",
+            r.diagnostics
+        );
+    }
+}
+
+#[test]
+fn every_rule_goes_silent_when_disabled() {
+    // proves each rule is live: the diagnostics of the firing fixture come
+    // from that rule's checker, not from some other path
+    for (rule, path, fire, _clean) in cases() {
+        let r = run(path, fire, &Config::repo().disable(rule));
+        assert!(
+            r.diagnostics.is_empty(),
+            "{rule}: disabling the rule should silence its fixture, got {:?}",
+            r.diagnostics
+        );
+    }
+}
+
+#[test]
+fn every_near_miss_stays_clean() {
+    for (rule, path, _fire, clean) in cases() {
+        let r = run(path, clean, &Config::repo());
+        assert!(
+            r.diagnostics.is_empty(),
+            "{rule}: near-miss fixture must not fire, got {:?}",
+            r.diagnostics
+        );
+    }
+}
+
+#[test]
+fn out_of_scope_path_silences_scoped_rules() {
+    // the same firing source outside the rule's module scope is clean
+    // (safety-comment and hot-path-alloc are tree-wide, so skip them here)
+    for (rule, _path, fire, _clean) in cases() {
+        if rule == "safety-comment" || rule == "hot-path-alloc" {
+            continue;
+        }
+        let r = run("session/spec.rs", fire, &Config::repo());
+        assert!(
+            r.diagnostics.iter().all(|d| d.rule != rule),
+            "{rule}: must not fire outside its module scope, got {:?}",
+            r.diagnostics
+        );
+    }
+}
+
+#[test]
+fn allow_roundtrip_suppresses_and_surfaces() {
+    let src = "\
+fn decode(b: &[u8]) -> u32 {
+    // lint: allow(panic-free-boundary) — length was validated two lines up
+    let arr: [u8; 4] = b[..4].try_into().unwrap();
+    u32::from_le_bytes(arr)
+}
+";
+    let r = run("comm/wire.rs", src, &Config::repo());
+    assert!(r.diagnostics.is_empty(), "justified allow must suppress: {:?}", r.diagnostics);
+    assert_eq!(r.allows.len(), 1);
+    let a = &r.allows[0];
+    assert_eq!(a.rule, "panic-free-boundary");
+    assert_eq!(a.line, 2);
+    assert!(a.used, "the allow must be marked used");
+    assert_eq!(a.justification, "length was validated two lines up");
+
+    // without the justification the allow is inert AND reported
+    let bare = src.replace(" — length was validated two lines up", "");
+    let r = run("comm/wire.rs", &bare, &Config::repo());
+    assert!(r.diagnostics.iter().any(|d| d.rule == "bad-allow"));
+    assert!(r.diagnostics.iter().any(|d| d.rule == "panic-free-boundary"));
+    assert!(r.allows.is_empty());
+
+    // an allow for the wrong rule does not suppress
+    let wrong = src.replace("panic-free-boundary", "determinism-fma");
+    let r = run("comm/wire.rs", &wrong, &Config::repo());
+    assert!(r.diagnostics.iter().any(|d| d.rule == "panic-free-boundary"));
+    assert_eq!(r.allows.len(), 1);
+    assert!(!r.allows[0].used, "a mismatched allow must be surfaced as unused");
+}
+
+#[test]
+fn json_shape_is_stable() {
+    let src = "\
+fn f(x: f32) -> f32 {
+    // lint: allow(determinism-fma) — reference path, compared against the oracle
+    x.mul_add(2.0, 1.0)
+}
+fn g(x: f32) -> f32 {
+    x.mul_add(2.0, 1.0)
+}
+";
+    let r = run("tensor/oracle.rs", src, &Config::repo());
+    let expected = concat!(
+        "{\"version\":1,\"diagnostics\":[",
+        "{\"file\":\"tensor/oracle.rs\",\"line\":6,\"rule\":\"determinism-fma\",",
+        "\"message\":\"`mul_add` fuses multiply and add — the bitwise kernel discipline ",
+        "requires separate mul + add so SIMD and scalar paths round identically\"}",
+        "],\"allows\":[",
+        "{\"file\":\"tensor/oracle.rs\",\"line\":2,\"rule\":\"determinism-fma\",",
+        "\"justification\":\"reference path, compared against the oracle\",\"used\":true}",
+        "]}"
+    );
+    assert_eq!(r.to_json(), expected);
+}
+
+#[test]
+fn text_rendering_is_file_line_rule_message() {
+    let r = run("tensor/k.rs", "fn f(x: f32) -> f32 { x.mul_add(2.0, 1.0) }\n", &Config::repo());
+    assert_eq!(r.diagnostics.len(), 1);
+    let line = r.diagnostics[0].render();
+    assert!(
+        line.starts_with("tensor/k.rs:1 determinism-fma: "),
+        "text format must be file:line rule-id: message, got {line}"
+    );
+}
+
+#[test]
+fn diagnostics_are_sorted_and_deterministic() {
+    let fire = include_str!("../fixtures/panic_free_fire.rs");
+    let files = vec![
+        ("comm/wire.rs".to_string(), fire.to_string()),
+        ("comm/coord.rs".to_string(), fire.to_string()),
+    ];
+    let a = lint_sources(&files, &Config::repo());
+    let b = lint_sources(&files, &Config::repo());
+    assert_eq!(a.to_json(), b.to_json());
+    let mut sorted = a.diagnostics.clone();
+    sorted.sort_by(|x, y| (&x.file, x.line).cmp(&(&y.file, y.line)));
+    assert_eq!(
+        a.diagnostics.iter().map(|d| (&d.file, d.line)).collect::<Vec<_>>(),
+        sorted.iter().map(|d| (&d.file, d.line)).collect::<Vec<_>>(),
+        "diagnostics must come out sorted by (file, line)"
+    );
+}
