@@ -721,6 +721,7 @@ fn main() {
     session_overhead_section();
     checkpoint_throughput_section();
     transport_section();
+    recovery_latency_section();
 
     write_kernel_json(&records);
 }
@@ -829,6 +830,189 @@ fn transport_section() {
     match std::fs::write("BENCH_transport.json", doc.to_string() + "\n") {
         Ok(()) => println!("wrote BENCH_transport.json\n"),
         Err(e) => eprintln!("could not write BENCH_transport.json: {e}\n"),
+    }
+}
+
+/// Fault-tolerance latency (EXPERIMENTS.md §Chaos): how far past the
+/// configured deadline a silent rank is actually diagnosed, how long a
+/// world takes to (re-)form on each transport, and what a mid-run rank
+/// kill plus snapshot replay costs end to end against the clean run.
+/// Emits `BENCH_recovery.json`.
+fn recovery_latency_section() {
+    use scalegnn::comm::{CoordConfig, Coordinator, TransportTuning};
+    use scalegnn::session::{self, BackendKind, FaultSpec, RunSpec};
+    use scalegnn::util::json::{obj, Json};
+
+    println!("--- recovery latency (2-rank worlds) ---");
+    let grid = Grid4D::new(1, 2, 1, 1);
+
+    // Stall-detection latency: rank 1 never contributes, so rank 0's
+    // deadline expires and poisons the group with a `Stalled` origin.
+    // The interesting number is the slop past the configured budget.
+    let mut detection: Vec<Json> = Vec::new();
+    for &deadline_ms in &[50u32, 100, 200] {
+        let tuning =
+            TransportTuning { wait_timeout_ms: Some(deadline_ms), ..Default::default() };
+        let world = Arc::new(CommWorld::with_tuning(grid, 1 << 10, &tuning, None));
+        let h = std::thread::spawn(move || {
+            let mut v = vec![1.0f32; 256];
+            let t0 = std::time::Instant::now();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                world.all_reduce(0, Axis::X, &mut v, Precision::Fp32);
+            }));
+            assert!(r.is_err(), "a silent peer must poison the wait, not complete it");
+            t0.elapsed().as_secs_f64()
+        });
+        let detect_s = h.join().expect("stall probe thread");
+        let slop_s = detect_s - deadline_ms as f64 / 1e3;
+        println!(
+            "stall detection, {deadline_ms:>4} ms deadline: diagnosed in {} ({} past budget)",
+            fmt_time(detect_s),
+            fmt_time(slop_s.max(0.0))
+        );
+        detection.push(obj(vec![
+            ("deadline_ms", Json::from(deadline_ms as usize)),
+            ("detect_s", Json::from(detect_s)),
+            ("slop_s", Json::from(slop_s)),
+        ]));
+    }
+
+    // World (re-)formation: what a recovery pays before the first replayed
+    // step — construct the world, bring every rank up, and complete one
+    // synchronizing collective.
+    let reform_inproc = || -> f64 {
+        let t0 = std::time::Instant::now();
+        let world = Arc::new(CommWorld::new(grid));
+        let hs: Vec<_> = (0..grid.world_size())
+            .map(|rank| {
+                let w = world.clone();
+                std::thread::spawn(move || {
+                    let mut v = vec![rank as f32; 64];
+                    w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let reform_uds = || -> f64 {
+        let sock = std::env::temp_dir()
+            .join(format!("sgnn_bench_reform_{}.sock", std::process::id()));
+        let t0 = std::time::Instant::now();
+        let coord = Coordinator::bind(grid, &Endpoint::Unix(sock), CoordConfig::default())
+            .expect("coord bind");
+        let ep = coord.endpoint().clone();
+        let ch = coord.spawn();
+        let hs: Vec<_> = (0..grid.world_size())
+            .map(|rank| {
+                let ep = ep.clone();
+                std::thread::spawn(move || {
+                    let w = CommWorld::connect(grid, rank, &ep).expect("rank connect");
+                    let mut v = vec![rank as f32; 64];
+                    w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let failure = ch.join().expect("coordinator thread").expect("coordinator run");
+        assert!(failure.is_none(), "reform world failed: {failure:?}");
+        t0.elapsed().as_secs_f64()
+    };
+    let mut reform: Vec<Json> = Vec::new();
+    let mut push_reform = |backend: &str, probe: &dyn Fn() -> f64| {
+        let samples: Vec<f64> = (0..5).map(|_| probe()).collect();
+        let m = median(&samples);
+        println!("world re-form, {backend:>6}: {} (bind + 2 ranks + first op)", fmt_time(m));
+        reform.push(obj(vec![
+            ("backend", Json::from(backend)),
+            ("reform_s_median", Json::from(m)),
+        ]));
+    };
+    push_reform("inproc", &reform_inproc);
+    push_reform("uds", &reform_uds);
+
+    // Kill + replay, end to end: a mid-run rank death on the session
+    // backend vs the identical clean run.  The overhead is detection +
+    // re-formation + the replayed steps.
+    let steps = 30u64;
+    let run = |fault: bool, rep: usize| -> (f64, session::RunReport) {
+        let dir = std::env::temp_dir().join(format!(
+            "sgnn_bench_recovery_{}_{}_{rep}",
+            std::process::id(),
+            fault
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 1, 1)
+            .model(16, 2, 0.0)
+            .steps(steps)
+            .lr(5e-3)
+            .checkpoint(dir.clone(), 5, 4);
+        if fault {
+            spec = spec.fault(FaultSpec::KillRank { rank: 1, step: 15 });
+        }
+        let t0 = std::time::Instant::now();
+        let report = session::run_silent(&spec).expect("bench run");
+        let s = t0.elapsed().as_secs_f64();
+        let _ = std::fs::remove_dir_all(&dir);
+        (s, report)
+    };
+    let mut clean_s = Vec::new();
+    let mut faulted_s = Vec::new();
+    let mut resumed_from = 0u64;
+    for rep in 0..3 {
+        clean_s.push(run(false, rep).0);
+        let (s, report) = run(true, rep);
+        faulted_s.push(s);
+        resumed_from = report.failures[0].resumed_from_step.expect("recovered run");
+    }
+    let (cm, fm) = (median(&clean_s), median(&faulted_s));
+    println!(
+        "kill at step 15 of {steps}: clean {} vs faulted {} (+{}, replayed from step \
+         {resumed_from})",
+        fmt_time(cm),
+        fmt_time(fm),
+        fmt_time((fm - cm).max(0.0))
+    );
+    println!(
+        "effective steps/s: clean {:.1} vs faulted {:.1}",
+        steps as f64 / cm,
+        steps as f64 / fm
+    );
+
+    let doc = obj(vec![
+        (
+            "what",
+            Json::from(
+                "fault-tolerance latency on 2-rank tiny worlds: stall-detection slop past \
+                 the configured wait deadline, world (re-)formation time per transport, \
+                 and the end-to-end cost of a mid-run rank kill + snapshot replay vs the \
+                 clean run (medians of 3-5 samples)",
+            ),
+        ),
+        ("stall_detection", Json::Arr(detection)),
+        ("world_reform", Json::Arr(reform)),
+        (
+            "kill_replay",
+            obj(vec![
+                ("steps", Json::from(steps as usize)),
+                ("kill_step", Json::from(15usize)),
+                ("resumed_from_step", Json::from(resumed_from as usize)),
+                ("clean_s_median", Json::from(cm)),
+                ("faulted_s_median", Json::from(fm)),
+                ("recovery_overhead_s", Json::from(fm - cm)),
+                ("clean_steps_per_s", Json::from(steps as f64 / cm)),
+                ("faulted_steps_per_s", Json::from(steps as f64 / fm)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_recovery.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_recovery.json\n"),
+        Err(e) => eprintln!("could not write BENCH_recovery.json: {e}\n"),
     }
 }
 

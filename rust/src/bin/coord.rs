@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! scalegnn-coord --grid 1x2x1x1 (--tcp HOST:PORT | --unix PATH)
-//!                [--heartbeat-ms N] [--quiet]
+//!                [--heartbeat-ms N] [--wait-timeout-ms N]
+//!                [--rejoin-grace-ms N] [--quiet]
 //! ```
 //!
 //! Binds the endpoint, prints `listening <endpoint>` on stdout (launch
@@ -44,7 +45,7 @@ fn main() {
 fn run(args: &Args) -> Result<bool> {
     args.check_known(
         "scalegnn-coord",
-        &["grid", "tcp", "unix", "heartbeat-ms"],
+        &["grid", "tcp", "unix", "heartbeat-ms", "wait-timeout-ms", "rejoin-grace-ms"],
         &["quiet"],
     )
     .map_err(|e| anyhow!(e))?;
@@ -57,8 +58,15 @@ fn run(args: &Args) -> Result<bool> {
         (None, Some(path)) => Endpoint::Unix(path.into()),
         _ => bail!("exactly one of --tcp HOST:PORT or --unix PATH is required"),
     };
+    let defaults = CoordConfig::default();
     let cfg = CoordConfig {
         heartbeat_ms: args.get_or("heartbeat-ms", 0).map_err(|e| anyhow!(e))?,
+        wait_timeout_ms: args
+            .get_or("wait-timeout-ms", defaults.wait_timeout_ms)
+            .map_err(|e| anyhow!(e))?,
+        rejoin_grace_ms: args
+            .get_or("rejoin-grace-ms", defaults.rejoin_grace_ms)
+            .map_err(|e| anyhow!(e))?,
         quiet: args.flag("quiet"),
     };
     let coord = Coordinator::bind(grid, &ep, cfg)?;

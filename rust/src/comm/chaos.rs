@@ -1,0 +1,539 @@
+//! Deterministic fault injection for the distributed runtime.
+//!
+//! Two composable wrappers inject faults from a reproducible schedule:
+//!
+//! * [`ChaosTransport`] composes over any [`Transport`] (the conformance
+//!   battery runs the in-process engine under it) and injects
+//!   issue-level faults: frame delay, stall-until-detected, and
+//!   connection-drop-style kills.
+//! * [`ChaosConn`] wraps the write side of a socket transport's wire
+//!   connection and injects byte-level faults on data frames: delay,
+//!   duplicate frame, CRC corruption, partial write, and connection drop
+//!   at byte N.
+//!
+//! Both draw every decision from a pure hash of
+//! `(seed, stream, event-counter)` — never from wall-clock time or
+//! thread interleaving — so the *schedule* of injected faults is
+//! byte-identical across runs of the same [`ChaosSpec`]: same event
+//! index faults, same mode, same drop offset.  That is what makes the
+//! seed-sweep test meaningful ("same spec ⇒ same failure origin and
+//! diagnosis") and lets CI soak across seeds with reproducible
+//! failures.
+//!
+//! The injected faults are *honest*: a `Drop` really poisons the world
+//! through [`Transport::fail`], a `Stall` really goes silent and is
+//! only unblocked by the deadline discipline detecting it (or a hard
+//! cap, so a test can never hang), and the byte-level modes produce
+//! exactly the wire damage a flaky network would.
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::socket::Conn;
+use super::{CollKind, CommError, Transport};
+use crate::grid::Axis;
+
+/// One injectable fault mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ChaosMode {
+    /// Delay the event a few milliseconds (adversarial timing; never
+    /// corrupts results).
+    Delay,
+    /// Go silent: the rank (or its data frames) stall until the
+    /// deadline discipline detects and poisons it.
+    Stall,
+    /// Kill the rank / drop the connection at a schedule-chosen byte.
+    Drop,
+    /// Flip a bit in the frame's CRC region (socket only).
+    Corrupt,
+    /// Send the data frame twice (socket only).
+    Duplicate,
+    /// Write half the frame, then fail the connection (socket only).
+    Partial,
+}
+
+/// Every mode, in the canonical order used for schedule selection.
+pub const ALL_CHAOS_MODES: [ChaosMode; 6] = [
+    ChaosMode::Delay,
+    ChaosMode::Stall,
+    ChaosMode::Drop,
+    ChaosMode::Corrupt,
+    ChaosMode::Duplicate,
+    ChaosMode::Partial,
+];
+
+impl ChaosMode {
+    /// Spec / CLI name of the mode.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ChaosMode::Delay => "delay",
+            ChaosMode::Stall => "stall",
+            ChaosMode::Drop => "drop",
+            ChaosMode::Corrupt => "corrupt",
+            ChaosMode::Duplicate => "duplicate",
+            ChaosMode::Partial => "partial",
+        }
+    }
+
+    /// Parse a spec / CLI mode name.
+    pub fn parse(s: &str) -> Option<ChaosMode> {
+        ALL_CHAOS_MODES.iter().copied().find(|m| m.tag() == s)
+    }
+}
+
+/// A reproducible fault-injection schedule: `seed` fixes the schedule,
+/// `rate` the per-event fault probability, `modes` the fault repertoire.
+/// Threaded through `RunSpec` and the `--chaos seed=S,rate=R` CLI flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// Schedule seed: every decision hashes off it.
+    pub seed: u64,
+    /// Per-event fault probability in `(0, 1]`.
+    pub rate: f64,
+    /// Enabled fault modes (sorted, deduplicated).
+    pub modes: Vec<ChaosMode>,
+}
+
+impl ChaosSpec {
+    /// A schedule over every mode.
+    pub fn new(seed: u64, rate: f64) -> ChaosSpec {
+        ChaosSpec { seed, rate, modes: ALL_CHAOS_MODES.to_vec() }
+    }
+
+    /// A schedule restricted to `modes` (sorted + deduplicated).
+    pub fn with_modes(seed: u64, rate: f64, mut modes: Vec<ChaosMode>) -> ChaosSpec {
+        modes.sort();
+        modes.dedup();
+        ChaosSpec { seed, rate, modes }
+    }
+
+    /// Parse the `--chaos` flag value: `seed=S,rate=R[,modes=a+b+c]`.
+    pub fn parse(s: &str) -> Result<ChaosSpec, String> {
+        let mut seed = None;
+        let mut rate = None;
+        let mut modes = ALL_CHAOS_MODES.to_vec();
+        for part in s.split(',') {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("chaos: expected key=value, got '{part}'"))?;
+            match k {
+                "seed" => {
+                    seed = Some(
+                        v.parse::<u64>().map_err(|_| format!("chaos: bad seed '{v}'"))?,
+                    );
+                }
+                "rate" => {
+                    rate = Some(
+                        v.parse::<f64>().map_err(|_| format!("chaos: bad rate '{v}'"))?,
+                    );
+                }
+                "modes" => {
+                    modes = v
+                        .split('+')
+                        .map(|m| {
+                            ChaosMode::parse(m).ok_or_else(|| format!("chaos: unknown mode '{m}'"))
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+                _ => return Err(format!("chaos: unknown key '{k}' (seed/rate/modes)")),
+            }
+        }
+        let seed = seed.ok_or("chaos: missing seed=".to_string())?;
+        let rate = rate.ok_or("chaos: missing rate=".to_string())?;
+        let spec = ChaosSpec::with_modes(seed, rate, modes);
+        spec.check().map_err(|e| format!("chaos: {e}"))?;
+        Ok(spec)
+    }
+
+    /// Validate rate and modes; the error text is embedded by the spec
+    /// layer's `BadChaos`.
+    pub fn check(&self) -> Result<(), &'static str> {
+        if !(self.rate > 0.0 && self.rate <= 1.0) {
+            return Err("rate must be in (0, 1]");
+        }
+        if self.modes.is_empty() {
+            return Err("at least one mode is required");
+        }
+        Ok(())
+    }
+
+    /// The pure per-event decision: does event `n` of `stream` fault,
+    /// and if so with which mode of `subset`?  Returns the mode plus a
+    /// derived hash for mode parameters (drop offset, delay length).
+    fn roll(&self, stream: u64, n: u64, subset: &[ChaosMode]) -> Option<(ChaosMode, u64)> {
+        if subset.is_empty() {
+            return None;
+        }
+        let h = mix(mix(self.seed ^ stream).wrapping_add(n));
+        // 53 uniform bits -> [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        if u >= self.rate {
+            return None;
+        }
+        let h2 = mix(h);
+        Some((subset[(h2 % subset.len() as u64) as usize], h2))
+    }
+
+    fn subset(&self, allowed: &[ChaosMode]) -> Vec<ChaosMode> {
+        self.modes.iter().copied().filter(|m| allowed.contains(m)).collect()
+    }
+}
+
+/// splitmix64 finalizer: the pure mixing function behind every schedule
+/// decision.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Transport-level chaos: composes over any inner [`Transport`] and
+/// injects a fault on schedule-chosen `issue` events.  Only the modes
+/// meaningful without a wire apply here (`Delay`, `Stall`, `Drop`);
+/// byte-level modes are exercised by [`ChaosConn`].
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    spec: ChaosSpec,
+    issue_modes: Vec<ChaosMode>,
+    /// Hard cap on a `Stall`'s silence so an undetected stall (nobody
+    /// waiting on this rank) can never hang a run.
+    stall_cap: Duration,
+    /// Per-(rank, axis) issue counters — the event index `n` of the
+    /// schedule.  Counted per logical stream, not per thread, so the
+    /// schedule is independent of interleaving.
+    counters: Mutex<HashMap<(usize, usize), u64>>,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` under the schedule `spec`.
+    pub fn new(inner: Box<dyn Transport>, spec: ChaosSpec) -> ChaosTransport {
+        let issue_modes = spec.subset(&[ChaosMode::Delay, ChaosMode::Stall, ChaosMode::Drop]);
+        ChaosTransport {
+            inner,
+            spec,
+            issue_modes,
+            stall_cap: Duration::from_secs(120),
+            counters: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Override the hard cap on injected stalls (worlds with short wait
+    /// deadlines shorten the cap so a dual-stall resolves quickly).
+    pub fn with_stall_cap(mut self, cap: Duration) -> ChaosTransport {
+        self.stall_cap = cap;
+        self
+    }
+
+    fn next_event(&self, rank: usize, axis: Axis) -> u64 {
+        let mut c = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+        let n = c.entry((rank, axis.index())).or_insert(0);
+        let v = *n;
+        *n += 1;
+        v
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn issue(
+        &self,
+        rank: usize,
+        axis: Axis,
+        kind: CollKind,
+        data: &[f32],
+    ) -> Result<u64, CommError> {
+        let n = self.next_event(rank, axis);
+        let stream = ((rank as u64) << 3) | axis.index() as u64;
+        match self.spec.roll(stream, n, &self.issue_modes) {
+            None => {}
+            Some((ChaosMode::Delay, h)) => {
+                std::thread::sleep(Duration::from_millis(1 + h % 4));
+            }
+            Some((ChaosMode::Stall, _)) => {
+                // go silent: contribute nothing until the deadline
+                // discipline poisons the group (naming this rank), or
+                // the hard cap expires so nothing can hang
+                let start = Instant::now();
+                while self.inner.poison_of(rank).is_none() && start.elapsed() < self.stall_cap {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+            Some((mode, _)) => {
+                // Drop (and any byte-level mode routed here): kill the
+                // rank with a deterministic, schedule-stamped origin
+                let err = CommError::new(
+                    rank,
+                    0,
+                    "injected-fault",
+                    axis,
+                    format!("chaos {} (seed {}, event {n})", mode.tag(), self.spec.seed),
+                );
+                self.inner.fail(rank, &err);
+                return Err(err);
+            }
+        }
+        self.inner.issue(rank, axis, kind, data)
+    }
+
+    fn try_ready(&self, rank: usize, axis: Axis, seq: u64) -> bool {
+        self.inner.try_ready(rank, axis, seq)
+    }
+
+    fn wait_reduce(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+        out: &mut [f32],
+    ) -> Result<Instant, CommError> {
+        self.inner.wait_reduce(rank, axis, seq, out)
+    }
+
+    fn wait_gather(
+        &self,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+    ) -> Result<(Vec<Vec<f32>>, Instant), CommError> {
+        self.inner.wait_gather(rank, axis, seq)
+    }
+
+    fn progress(&self, rank: usize) -> bool {
+        self.inner.progress(rank)
+    }
+
+    fn barrier(&self, rank: usize, axis: Axis) -> Result<(), CommError> {
+        self.inner.barrier(rank, axis)
+    }
+
+    fn fail(&self, rank: usize, err: &CommError) {
+        self.inner.fail(rank, err);
+    }
+
+    fn poison_of(&self, rank: usize) -> Option<CommError> {
+        self.inner.poison_of(rank)
+    }
+
+    fn rejoin_offered(&self, rank: usize) -> bool {
+        self.inner.rejoin_offered(rank)
+    }
+}
+
+// Wire frame types carrying collective data (see `wire::FrameType`):
+// only these consume schedule events; control frames (Hello, Ping,
+// Poison, Bye) always pass through so the handshake and the failure
+// cascade stay intact and the pinger thread cannot perturb the
+// schedule.
+const FT_CONTRIBUTE: u16 = 3;
+const FT_BARRIER: u16 = 6;
+
+/// Write-side chaos for a socket transport's wire connection: data
+/// frames are delayed, duplicated, CRC-corrupted, half-written, dropped
+/// mid-frame, or silenced per the schedule.  Reads are untouched — a
+/// "silent" rank still hears the coordinator's poison / rollback, which
+/// is exactly the semantics of a stalled-but-alive process.
+pub struct ChaosConn {
+    inner: Conn,
+    spec: ChaosSpec,
+    conn_modes: Vec<ChaosMode>,
+    /// Schedule stream of this connection (derived from the rank).
+    stream: u64,
+    /// Data-frame counter — the schedule's event index.
+    n: u64,
+    /// Bytes left of a partially-forwarded frame (robustness against a
+    /// caller splitting one frame over several writes).
+    remaining: usize,
+    /// Swallow the rest of the current frame.
+    swallowing: bool,
+    /// A `Stall` fired: every later data frame is swallowed, simulating
+    /// a silent rank until the coordinator's deadline poisons it.
+    mute: bool,
+}
+
+impl ChaosConn {
+    pub(crate) fn new(inner: Conn, spec: ChaosSpec, rank: usize) -> ChaosConn {
+        let conn_modes = spec.subset(&[
+            ChaosMode::Delay,
+            ChaosMode::Stall,
+            ChaosMode::Drop,
+            ChaosMode::Corrupt,
+            ChaosMode::Duplicate,
+            ChaosMode::Partial,
+        ]);
+        ChaosConn {
+            inner,
+            spec,
+            conn_modes,
+            stream: ((rank as u64) << 3) | 7,
+            n: 0,
+            remaining: 0,
+            swallowing: false,
+            mute: false,
+        }
+    }
+
+    fn fail_conn(&mut self, what: &str) -> io::Error {
+        let _ = self.inner.shutdown();
+        io::Error::new(io::ErrorKind::BrokenPipe, format!("chaos: {what}"))
+    }
+}
+
+impl Write for ChaosConn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        // tail of a frame already dispatched
+        if self.remaining > 0 {
+            let n = buf.len().min(self.remaining);
+            self.remaining -= n;
+            if self.remaining == 0 {
+                self.swallowing = false;
+            }
+            return if self.swallowing || self.mute {
+                Ok(n)
+            } else {
+                self.inner.write(&buf[..n])
+            };
+        }
+        if buf.len() < 12 {
+            // not a frame header; pass through untouched
+            return self.inner.write(buf);
+        }
+        let ty = u16::from_le_bytes([buf[6], buf[7]]);
+        let payload = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+        let total = 12 + payload + 4;
+        let data_frame = ty == FT_CONTRIBUTE || ty == FT_BARRIER;
+        if !data_frame {
+            // control frames pass through, no schedule event consumed
+            if buf.len() < total {
+                self.remaining = total - buf.len();
+                self.swallowing = false;
+            }
+            return self.inner.write(buf);
+        }
+        if self.mute {
+            // silent rank: swallow the whole data frame
+            if buf.len() < total {
+                self.remaining = total - buf.len();
+                self.swallowing = true;
+                return Ok(buf.len());
+            }
+            return Ok(total.min(buf.len()));
+        }
+        let n = self.n;
+        self.n += 1;
+        let roll = self.spec.roll(self.stream, n, &self.conn_modes);
+        // whole-frame modes need the whole frame in this write (the
+        // wire layer always sends one frame per write_all); fall back
+        // to pass-through when it is split
+        let whole = buf.len() >= total;
+        match roll {
+            Some((ChaosMode::Delay, h)) => {
+                std::thread::sleep(Duration::from_millis(1 + h % 4));
+            }
+            Some((ChaosMode::Stall, _)) => {
+                self.mute = true;
+                if !whole {
+                    self.remaining = total - buf.len();
+                    self.swallowing = true;
+                    return Ok(buf.len());
+                }
+                return Ok(total);
+            }
+            Some((ChaosMode::Drop, h)) if whole => {
+                // connection drop at byte N of the frame
+                let cut = (h % (total as u64 + 1)) as usize;
+                let _ = self.inner.write_all(&buf[..cut]);
+                let _ = self.inner.flush();
+                return Err(self.fail_conn(&format!("connection dropped at byte {cut} of frame")));
+            }
+            Some((ChaosMode::Corrupt, _)) if whole => {
+                // flip a bit in the CRC trailer: the receiver must
+                // diagnose BadCrc, not act on the frame
+                let mut bad = buf[..total].to_vec();
+                bad[total - 1] ^= 0x01;
+                self.inner.write_all(&bad)?;
+                if buf.len() > total {
+                    self.remaining = 0;
+                    let k = self.inner.write(&buf[total..])?;
+                    return Ok(total + k);
+                }
+                return Ok(total);
+            }
+            Some((ChaosMode::Duplicate, _)) if whole => {
+                self.inner.write_all(&buf[..total])?;
+                self.inner.write_all(&buf[..total])?;
+                return Ok(total);
+            }
+            Some((ChaosMode::Partial, _)) if whole => {
+                self.inner.write_all(&buf[..total / 2])?;
+                let _ = self.inner.flush();
+                return Err(
+                    self.fail_conn(&format!("partial write: {} of {total} bytes", total / 2))
+                );
+            }
+            _ => {}
+        }
+        if buf.len() < total {
+            self.remaining = total - buf.len();
+            self.swallowing = false;
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_stream_event() {
+        let spec = ChaosSpec::new(42, 0.3);
+        for stream in 0..8u64 {
+            for n in 0..200u64 {
+                let a = spec.roll(stream, n, &spec.modes);
+                let b = spec.roll(stream, n, &spec.modes);
+                assert_eq!(a, b, "roll must be deterministic");
+            }
+        }
+        // different seeds produce different schedules
+        let other = ChaosSpec::new(43, 0.3);
+        let fires =
+            |s: &ChaosSpec| (0..200).filter(|&n| s.roll(0, n, &s.modes).is_some()).count();
+        assert!(fires(&spec) > 0, "a 0.3 rate over 200 events must fire");
+        let a: Vec<u64> = (0..200).filter(|&n| spec.roll(0, n, &spec.modes).is_some()).collect();
+        let b: Vec<u64> = (0..200).filter(|&n| other.roll(0, n, &other.modes).is_some()).collect();
+        assert_ne!(a, b, "different seeds must differ somewhere in 200 events");
+    }
+
+    #[test]
+    fn rate_bounds_the_fire_fraction() {
+        let spec = ChaosSpec::new(7, 0.05);
+        let fired = (0..10_000).filter(|&n| spec.roll(1, n, &spec.modes).is_some()).count();
+        // 500 expected; allow generous slack, but it must be in the
+        // right ballpark for the soak job's budget math to hold
+        assert!((200..=900).contains(&fired), "fired {fired} of 10000 at rate 0.05");
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_flag() {
+        let spec = ChaosSpec::parse("seed=9,rate=0.25,modes=delay+drop").unwrap();
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.rate, 0.25);
+        assert_eq!(spec.modes, vec![ChaosMode::Delay, ChaosMode::Drop]);
+        assert!(ChaosSpec::parse("seed=1").is_err(), "rate is required");
+        assert!(ChaosSpec::parse("rate=0.5").is_err(), "seed is required");
+        assert!(ChaosSpec::parse("seed=1,rate=0").is_err(), "zero rate rejected");
+        assert!(ChaosSpec::parse("seed=1,rate=1.5").is_err(), "rate > 1 rejected");
+        assert!(ChaosSpec::parse("seed=1,rate=0.5,modes=fry").is_err(), "unknown mode");
+        assert!(ChaosSpec::parse("seed=1,rate=0.5,bogus=2").is_err(), "unknown key");
+    }
+}

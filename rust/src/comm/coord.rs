@@ -13,16 +13,25 @@
 //!     Contribute / Barrier / Ping / Poison / Bye frames.
 //!   RUN ──every rank sent Bye──► DONE (returns no failure), or
 //!   RUN ──any failure──► POISONED: the first failure origin is
-//!     recorded and broadcast to every rank as a Poison frame; ranks
-//!     panic with that origin, close, and the coordinator drains the
-//!     remaining connections and returns the failure.
+//!     recorded and broadcast to every rank — as a Poison frame
+//!     (fatal), or, with `rejoin_grace_ms > 0`, as a Rollback frame:
+//!   POISONED ──Rollback──► RE-REGISTER: the world's slots stay open
+//!     for the grace window; every rank re-registers with a fresh
+//!     Hello (survivors reconnect, the failed rank relaunches with
+//!     `--rank R --resume`) into the *same* coordinator, which bumps
+//!     the generation and serves the re-formed world.  Grace expiry
+//!     (or too many re-forms) falls back to the fatal path with the
+//!     original origin.
 //! ```
 //!
 //! Failures that poison the world: a collective handshake mismatch
 //! (kind/length/precision — same checks, same message text as the
 //! in-process engine), a rank-sent Poison (injected fault), a peer
 //! connection dying mid-run or sending undecodable bytes
-//! (`"rank-death"`), a heartbeat timeout, or a protocol violation.
+//! (`"rank-death"`), a heartbeat timeout, an op-stall deadline expiry
+//! (`FailureKind::Stalled` — a member opened a collective and some
+//! other member stayed silent past `wait_timeout_ms`), or a protocol
+//! violation.
 //!
 //! Determinism: a reduce completes when the last member contributes and
 //! is summed **in group-index member order**, never arrival order — so
@@ -30,6 +39,7 @@
 //! engine's ordered chunk reduction.
 
 use std::collections::HashMap;
+use std::io;
 use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -43,6 +53,10 @@ use super::wire::{self, Msg, WireError};
 use super::{CollKind, CommError};
 use crate::grid::{Axis, Grid4D};
 
+/// Most world re-forms a coordinator serves before declaring the run
+/// unrecoverable (mirrors the supervisor's checkpoint-restart cap).
+pub const MAX_REFORMS: u64 = 3;
+
 /// Coordinator tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordConfig {
@@ -50,13 +64,22 @@ pub struct CoordConfig {
     /// 4 intervals is declared dead.  0 disables the watchdog (tests,
     /// and runs where rank steps may legitimately take long).
     pub heartbeat_ms: u32,
+    /// Deadline on an open collective op: once any member contributed,
+    /// the rest must arrive within this window or the world is poisoned
+    /// with a `Stalled` origin naming the first silent member.  0
+    /// disables the op-stall watchdog.
+    pub wait_timeout_ms: u32,
+    /// After a failure, hold every rank's slot open this long for a
+    /// re-registration (Rollback / rejoin) before tearing the world
+    /// down.  0 = rejoin disabled, fail fast.
+    pub rejoin_grace_ms: u32,
     /// Suppress progress logging on stderr.
     pub quiet: bool,
 }
 
 impl Default for CoordConfig {
     fn default() -> CoordConfig {
-        CoordConfig { heartbeat_ms: 0, quiet: true }
+        CoordConfig { heartbeat_ms: 0, wait_timeout_ms: 30_000, rejoin_grace_ms: 0, quiet: true }
     }
 }
 
@@ -73,13 +96,29 @@ struct CoordOp {
     len: usize,
     parts: Vec<Option<Vec<f32>>>,
     n: usize,
+    /// Global ranks of the group in member order (stall diagnosis).
+    members: Vec<usize>,
+    /// When the slot opened — the op-stall watchdog's reference point.
+    born: Instant,
+}
+
+/// One in-flight barrier of one group, arrival-tracked per member so a
+/// stall names the first silent member (and a duplicate arrival is a
+/// protocol violation, not a silent double count).
+struct CoordBarrier {
+    arrived: Vec<bool>,
+    n: usize,
+    /// Global ranks of the group in member order (stall diagnosis).
+    members: Vec<usize>,
+    /// When the slot opened — the op-stall watchdog's reference point.
+    born: Instant,
 }
 
 struct CoordState {
     /// Op slots keyed by (axis index, group id, seq).
     ops: HashMap<(usize, usize, u64), CoordOp>,
-    /// Barrier arrival counts keyed by (axis index, group id, bseq).
-    barriers: HashMap<(usize, usize, u64), usize>,
+    /// Barrier slots keyed by (axis index, group id, bseq).
+    barriers: HashMap<(usize, usize, u64), CoordBarrier>,
     /// First failure origin; sticky once set.
     failure: Option<CommError>,
     /// Ranks that sent Bye.
@@ -91,6 +130,9 @@ struct CoordState {
 struct Shared {
     grid: Grid4D,
     cfg: CoordConfig,
+    /// This generation broadcasts Rollback (world re-forms in place)
+    /// instead of fatal Poison when a failure strikes.
+    offer_rejoin: bool,
     state: Mutex<CoordState>,
     /// Per-rank write half, locked per frame (handlers of any rank may
     /// complete an op and answer every member).
@@ -116,7 +158,7 @@ impl Shared {
             let mut w = lock(&self.writers[rank]);
             wire::write_msg(&mut *w, msg).is_err()
         };
-        if failed && !matches!(msg, Msg::Poison { .. }) {
+        if failed && !matches!(msg, Msg::Poison { .. } | Msg::Rollback { .. }) {
             self.poison_world(CommError::new(
                 rank,
                 0,
@@ -127,7 +169,8 @@ impl Shared {
         }
     }
 
-    /// Record the first failure origin and broadcast it to every rank.
+    /// Record the first failure origin and broadcast it to every rank —
+    /// fatal Poison, or Rollback when this generation offers a rejoin.
     /// Idempotent: later failures are cascade effects of the first.
     fn poison_world(&self, err: CommError) {
         {
@@ -146,7 +189,12 @@ impl Shared {
             err.msg
         ));
         for r in 0..self.grid.world_size() {
-            self.send(r, &Msg::Poison { err: err.clone() });
+            let msg = if self.offer_rejoin {
+                Msg::Rollback { err: err.clone() }
+            } else {
+                Msg::Poison { err: err.clone() }
+            };
+            self.send(r, &msg);
         }
     }
 
@@ -181,6 +229,8 @@ impl Shared {
                 len: data.len(),
                 parts: vec![None; size],
                 n: 0,
+                members: self.grid.group_ranks(rank, axis),
+                born: Instant::now(),
             });
             if op.kind != kind {
                 let msg = format!(
@@ -224,7 +274,6 @@ impl Shared {
             }
         };
         if let Some(op) = completed {
-            let members = self.grid.group_ranks(rank, axis);
             match op.kind {
                 CollKind::Reduce(_) => {
                     // ordered sum in group-index member order: bitwise
@@ -238,7 +287,7 @@ impl Shared {
                             *d += v;
                         }
                     }
-                    for &m in &members {
+                    for &m in &op.members {
                         self.send(m, &Msg::ReduceResult { axis, seq, data: result.clone() });
                     }
                 }
@@ -248,7 +297,7 @@ impl Shared {
                     let parts: Vec<Vec<f32>> =
                         // lint: allow(panic-free-boundary) — op completed under the state lock with n == size, so every slot is Some (see the Reduce arm)
                         op.parts.into_iter().map(|p| p.unwrap()).collect();
-                    for &m in &members {
+                    for &m in &op.members {
                         self.send(
                             m,
                             &Msg::GatherResult { axis, seq, prec, parts: parts.clone() },
@@ -272,25 +321,81 @@ impl Shared {
             return;
         }
         let gid = self.grid.group_id(rank, axis);
+        let me = self.grid.index_in_group(rank, axis);
         let key = (axis.index(), gid, bseq);
         let release = {
             let mut st = lock(&self.state);
             if st.failure.is_some() {
                 return;
             }
-            let n = st.barriers.entry(key).or_insert(0);
-            *n += 1;
-            if *n == size {
-                st.barriers.remove(&key);
-                true
+            let b = st.barriers.entry(key).or_insert_with(|| CoordBarrier {
+                arrived: vec![false; size],
+                n: 0,
+                members: self.grid.group_ranks(rank, axis),
+                born: Instant::now(),
+            });
+            if b.arrived[me] {
+                let err = CommError::new(
+                    rank,
+                    bseq,
+                    "protocol",
+                    axis,
+                    format!("member {me} double-arrived at barrier {bseq}"),
+                );
+                drop(st);
+                self.poison_world(err);
+                return;
+            }
+            b.arrived[me] = true;
+            b.n += 1;
+            if b.n == size {
+                st.barriers.remove(&key)
             } else {
-                false
+                None
             }
         };
-        if release {
-            for &m in &self.grid.group_ranks(rank, axis) {
+        if let Some(b) = release {
+            for &m in &b.members {
                 self.send(m, &Msg::BarrierRelease { axis, bseq });
             }
+        }
+    }
+
+    /// The op-stall scan: the oldest open slot past the deadline poisons
+    /// the world with a `Stalled` origin naming the first silent member.
+    fn check_op_stalls(&self, deadline: Duration) {
+        let stalled = {
+            let st = lock(&self.state);
+            if st.failure.is_some() {
+                return;
+            }
+            let from_ops = st.ops.iter().filter(|(_, op)| op.born.elapsed() > deadline).map(
+                |(&(ax, _, seq), op)| {
+                    let me = op.parts.iter().position(|p| p.is_none()).unwrap_or(0);
+                    (op.born, op.members[me], seq, op.kind.op_name(), ax)
+                },
+            );
+            let from_bars =
+                st.barriers.iter().filter(|(_, b)| b.born.elapsed() > deadline).map(
+                    |(&(ax, _, bseq), b)| {
+                        let me = b.arrived.iter().position(|&a| !a).unwrap_or(0);
+                        (b.born, b.members[me], bseq, "barrier", ax)
+                    },
+                );
+            from_ops.chain(from_bars).min_by_key(|&(born, ..)| born)
+        };
+        if let Some((_, origin, seq, op, ax)) = stalled {
+            let axis = Axis::ALL[ax];
+            self.poison_world(CommError::stalled(
+                origin,
+                seq,
+                op,
+                axis,
+                format!(
+                    "rank {origin} silent on {op} seq {seq}: no contribution within {} ms",
+                    deadline.as_millis()
+                ),
+            ));
         }
     }
 
@@ -348,8 +453,9 @@ impl Shared {
 }
 
 /// One-shot world coordinator: bind, register `world_size` ranks, serve
-/// the run, return the failure origin (if any).  See the module docs for
-/// the handshake state machine.
+/// the run — re-forming the world through Rollback / re-registration
+/// cycles when `rejoin_grace_ms` allows — and return the failure origin
+/// (if any).  See the module docs for the handshake state machine.
 pub struct Coordinator {
     grid: Grid4D,
     cfg: CoordConfig,
@@ -385,7 +491,13 @@ impl Coordinator {
         &self.endpoint
     }
 
-    fn accept(&self) -> Result<Conn> {
+    fn log(&self, m: &str) {
+        if !self.cfg.quiet {
+            eprintln!("coord: {m}");
+        }
+    }
+
+    fn try_accept(&self) -> io::Result<Conn> {
         Ok(match &self.listener {
             Listener::Tcp(l) => {
                 let (s, _) = l.accept()?;
@@ -399,24 +511,55 @@ impl Coordinator {
         })
     }
 
-    /// Register every rank, serve the world, and return the failure
-    /// origin (`None` = every rank completed cleanly).
-    pub fn run(self) -> Result<Option<CommError>> {
-        let n = self.grid.world_size();
-        let quiet = self.cfg.quiet;
-        let log = |m: &str| {
-            if !quiet {
-                eprintln!("coord: {m}");
+    fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        match &self.listener {
+            Listener::Tcp(l) => l.set_nonblocking(on),
+            Listener::Unix(l) => l.set_nonblocking(on),
+        }
+    }
+
+    /// Accept one connection — blocking, or, with a deadline, polling
+    /// nonblocking accepts until it expires (`Ok(None)`).
+    fn accept_within(&self, deadline: Option<Instant>) -> Result<Option<Conn>> {
+        let Some(d) = deadline else {
+            return Ok(Some(self.try_accept()?));
+        };
+        self.set_nonblocking(true)?;
+        let r = loop {
+            match self.try_accept() {
+                Ok(c) => break Ok(Some(c)),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= d {
+                        break Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => break Err(e.into()),
             }
         };
-        // --- REGISTER: n valid Hellos, invalid connections rejected ---
+        self.set_nonblocking(false)?;
+        r
+    }
+
+    /// Accept `n` valid Hellos (invalid connections rejected).  With a
+    /// deadline (the rejoin grace window) returns `Ok(None)` on expiry;
+    /// without one, blocks until the world assembled.
+    fn register(&self, n: usize, deadline: Option<Instant>) -> Result<Option<Vec<Conn>>> {
         let mut conns: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
         let mut registered = 0;
         while registered < n {
-            let mut conn = self.accept()?;
+            let Some(mut conn) = self.accept_within(deadline)? else {
+                return Ok(None);
+            };
             // a connection that never sends its Hello must not stall
             // world assembly forever
-            let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
+            let hello_budget = match deadline {
+                Some(d) => d
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(10)),
+                None => Duration::from_secs(30),
+            };
+            let _ = conn.set_read_timeout(Some(hello_budget));
             match wire::read_msg(&mut conn) {
                 Ok(Msg::Hello { rank, grid }) => {
                     let want = [
@@ -427,30 +570,47 @@ impl Coordinator {
                     ];
                     let r = rank as usize;
                     if grid != want {
-                        log(&format!(
+                        self.log(&format!(
                             "rejecting rank {rank}: grid {grid:?} does not match {want:?}"
                         ));
                     } else if r >= n {
-                        log(&format!("rejecting rank {rank}: world has {n} ranks"));
+                        self.log(&format!("rejecting rank {rank}: world has {n} ranks"));
                     } else if conns[r].is_some() {
-                        log(&format!("rejecting duplicate registration for rank {rank}"));
+                        self.log(&format!("rejecting duplicate registration for rank {rank}"));
                     } else {
+                        // lint: allow(unbounded-wait) — the run-phase handler read this re-arms is unblocked by the watchdogs' per-rank shutdown handles and by rank closes; collective progress itself is bounded by the op-stall watchdog
                         let _ = conn.set_read_timeout(None);
                         conns[r] = Some(conn);
                         registered += 1;
-                        log(&format!("rank {r} registered ({registered}/{n})"));
+                        self.log(&format!("rank {r} registered ({registered}/{n})"));
                     }
                 }
-                Ok(m) => log(&format!("rejecting connection: expected hello, got {m:?}")),
-                Err(e) => log(&format!("rejecting connection: {e}")),
+                Ok(m) => self.log(&format!("rejecting connection: expected hello, got {m:?}")),
+                Err(e) => self.log(&format!("rejecting connection: {e}")),
             }
         }
-        // --- RUN: welcome everyone, then serve per-rank handlers ---
+        // lint: allow(panic-free-boundary) — the loop above runs until registered == n, and registered only increments when conns[r] is filled, so every slot is Some here
+        Ok(Some(conns.into_iter().map(|c| c.expect("registered")).collect()))
+    }
+
+    /// Serve one world generation: welcome every rank, run handlers and
+    /// watchdogs, and return the failure origin (`None` = every rank
+    /// sent Bye).  With `offer_rejoin`, a failure is broadcast as
+    /// Rollback and this returns immediately so the caller can hold the
+    /// re-registration window (handler threads of lingering connections
+    /// drain on their own EOFs — they only touch this generation's
+    /// abandoned state).
+    fn serve_generation(
+        &self,
+        conns: Vec<Conn>,
+        generation: u64,
+        offer_rejoin: bool,
+    ) -> Result<Option<CommError>> {
+        let n = self.grid.world_size();
         let mut writers = Vec::with_capacity(n);
         let mut shutdowns = Vec::with_capacity(n);
         let mut readers = Vec::with_capacity(n);
-        // lint: allow(panic-free-boundary) — the accept loop above runs until registered == n, and registered only increments when conns[r] is filled, so every slot is Some here
-        for c in conns.into_iter().map(|c| c.expect("registered")) {
+        for c in conns {
             writers.push(Mutex::new(c.try_clone()?));
             shutdowns.push(c.try_clone()?);
             readers.push(c);
@@ -458,6 +618,7 @@ impl Coordinator {
         let shared = Arc::new(Shared {
             grid: self.grid,
             cfg: self.cfg,
+            offer_rejoin,
             state: Mutex::new(CoordState {
                 ops: HashMap::new(),
                 barriers: HashMap::new(),
@@ -474,35 +635,102 @@ impl Coordinator {
                 &Msg::Welcome { world: n as u32, heartbeat_ms: self.cfg.heartbeat_ms },
             );
         }
-        log(&format!("world assembled: {n} ranks on {}", self.endpoint));
+        self.log(&format!(
+            "world assembled: {n} ranks on {} (generation {generation})",
+            self.endpoint
+        ));
         let mut handles = Vec::with_capacity(n);
         for (r, mut conn) in readers.into_iter().enumerate() {
             let sh = shared.clone();
             handles.push(std::thread::spawn(move || sh.handle_rank(r, &mut conn)));
         }
         let stop = Arc::new(AtomicBool::new(false));
-        let watchdog = (self.cfg.heartbeat_ms > 0).then(|| {
+        let watchdog = (self.cfg.heartbeat_ms > 0 || self.cfg.wait_timeout_ms > 0).then(|| {
             let sh = shared.clone();
             let stop = stop.clone();
-            let hb = self.cfg.heartbeat_ms;
-            std::thread::spawn(move || watchdog_loop(&sh, &stop, hb))
+            std::thread::spawn(move || watchdog_loop(&sh, &stop))
         });
-        for h in handles {
-            let _ = h.join();
-        }
+        // completion poll: all-done ends the generation cleanly; a
+        // failure either ends the run (fatal) or hands control back for
+        // the re-registration window (rejoin)
+        let failure = loop {
+            std::thread::sleep(Duration::from_millis(10));
+            let (failed, all_done) = {
+                let st = lock(&shared.state);
+                (st.failure.clone(), st.done.iter().all(|&d| d))
+            };
+            if let Some(e) = failed {
+                break Some(e);
+            }
+            if all_done {
+                break None;
+            }
+        };
         stop.store(true, Ordering::Relaxed);
+        if failure.is_none() || !offer_rejoin {
+            // drain handlers: ranks got their verdict (or Bye'd) and
+            // close, ending each handler's read
+            for h in handles {
+                let _ = h.join();
+            }
+        }
         if let Some(w) = watchdog {
             let _ = w.join();
         }
+        Ok(failure)
+    }
+
+    /// Register every rank, serve the world — re-forming it through the
+    /// rejoin window when configured — and return the failure origin
+    /// (`None` = every rank completed cleanly).
+    pub fn run(self) -> Result<Option<CommError>> {
+        let res = self.run_inner();
         if let Endpoint::Unix(path) = &self.endpoint {
             let _ = std::fs::remove_file(path);
         }
-        let failure = lock(&shared.state).failure.clone();
-        match &failure {
-            None => log("world completed cleanly"),
-            Some(e) => log(&format!("world failed: {e}")),
+        match &res {
+            Ok(None) => self.log("world completed cleanly"),
+            Ok(Some(e)) => self.log(&format!("world failed: {e}")),
+            Err(_) => {}
         }
-        Ok(failure)
+        res
+    }
+
+    fn run_inner(&self) -> Result<Option<CommError>> {
+        let n = self.grid.world_size();
+        let mut conns = match self.register(n, None)? {
+            Some(c) => c,
+            // deadline-free registration blocks until the world forms
+            None => return Err(anyhow!("registration aborted")),
+        };
+        let mut generation: u64 = 0;
+        loop {
+            let offer_rejoin = self.cfg.rejoin_grace_ms > 0 && generation < MAX_REFORMS;
+            let failure = self.serve_generation(conns, generation, offer_rejoin)?;
+            let err = match failure {
+                None => return Ok(None),
+                Some(e) => e,
+            };
+            if !offer_rejoin {
+                return Ok(Some(err));
+            }
+            let grace = Duration::from_millis(u64::from(self.cfg.rejoin_grace_ms));
+            self.log(&format!(
+                "holding rank slots open {} ms for rejoin after: {err}",
+                grace.as_millis()
+            ));
+            match self.register(n, Some(Instant::now() + grace))? {
+                Some(c) => {
+                    generation += 1;
+                    self.log(&format!("world re-formed (generation {generation})"));
+                    conns = c;
+                }
+                None => {
+                    self.log("rejoin grace expired; world torn down");
+                    return Ok(Some(err));
+                }
+            }
+        }
     }
 
     /// [`Coordinator::run`] on a background thread (in-process tests and
@@ -512,20 +740,38 @@ impl Coordinator {
     }
 }
 
-fn watchdog_loop(sh: &Shared, stop: &AtomicBool, heartbeat_ms: u32) {
-    let timeout = Duration::from_millis(heartbeat_ms as u64 * 4);
+fn watchdog_loop(sh: &Shared, stop: &AtomicBool) {
+    let hb = Duration::from_millis(u64::from(sh.cfg.heartbeat_ms));
+    let wait = Duration::from_millis(u64::from(sh.cfg.wait_timeout_ms));
+    // scan at a quarter of the tightest enabled deadline, floored so the
+    // loop never busy-spins
+    let mut period = Duration::from_millis(250);
+    if sh.cfg.heartbeat_ms > 0 {
+        period = period.min(hb / 2);
+    }
+    if sh.cfg.wait_timeout_ms > 0 {
+        period = period.min(wait / 4);
+    }
+    let period = period.max(Duration::from_millis(10));
     loop {
-        std::thread::sleep(Duration::from_millis((heartbeat_ms as u64 / 2).max(10)));
+        std::thread::sleep(period);
         if stop.load(Ordering::Relaxed) {
             return;
+        }
+        if sh.cfg.wait_timeout_ms > 0 {
+            sh.check_op_stalls(wait);
         }
         let dead = {
             let st = lock(&sh.state);
             if st.failure.is_some() {
                 return;
             }
-            (0..sh.grid.world_size())
-                .find(|&r| !st.done[r] && st.last_seen[r].elapsed() > timeout)
+            if sh.cfg.heartbeat_ms == 0 {
+                None
+            } else {
+                (0..sh.grid.world_size())
+                    .find(|&r| !st.done[r] && st.last_seen[r].elapsed() > hb * 4)
+            }
         };
         if let Some(r) = dead {
             sh.poison_world(CommError::new(
@@ -533,7 +779,7 @@ fn watchdog_loop(sh: &Shared, stop: &AtomicBool, heartbeat_ms: u32) {
                 0,
                 "rank-death",
                 Axis::X,
-                format!("rank {r} heartbeat timeout (> {} ms silent)", timeout.as_millis()),
+                format!("rank {r} heartbeat timeout (> {} ms silent)", (hb * 4).as_millis()),
             ));
             // the dead rank's handler may be blocked in read; unblock it
             sh.shutdowns[r].shutdown();

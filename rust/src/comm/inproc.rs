@@ -1,16 +1,20 @@
 //! The shared-memory [`Transport`]: every rank is a thread of this
 //! process and op slots live behind per-group mutexes.
 //!
-//! This is the pre-trait collective engine moved verbatim — same op-slot
-//! protocol, same ordered chunk reduction, same poison cascade — so the
-//! refactor is bitwise-invisible to every existing caller (pinned by the
-//! `comm` unit tests and `tests/comm_overlap.rs`).
+//! This is the pre-trait collective engine — same op-slot protocol, same
+//! ordered chunk reduction, same poison cascade — so the refactor is
+//! bitwise-invisible to every existing caller (pinned by the `comm` unit
+//! tests and `tests/comm_overlap.rs`).  Every blocking wait (collective
+//! waits *and* the group barrier) runs against a configurable deadline:
+//! expiry names the first missing contributor in a
+//! [`FailureKind::Stalled`](super::FailureKind::Stalled) origin instead
+//! of hanging the world on a silent rank.
 
 use std::collections::VecDeque;
-use std::sync::{Barrier, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use super::{CollKind, CommError, Precision, Transport};
+use super::{CollKind, CommError, Precision, Transport, TransportTuning};
 use crate::grid::{Axis, Grid4D};
 
 /// One in-flight collective of a process group, matched across members by
@@ -42,11 +46,18 @@ struct GroupState {
     /// Set on a mismatched collective (or injected fault); every member
     /// fails with this same structured origin.
     poison: Option<CommError>,
+    /// Barrier generation (one per completed group barrier) — the
+    /// condvar-based barrier is poison-aware and deadline-capable,
+    /// unlike `std::sync::Barrier` which can never be woken early.
+    bar_gen: u64,
+    /// Members arrived at the current barrier generation, by group index
+    /// (names the straggler when the barrier deadline expires).
+    bar_arrived: Vec<bool>,
+    bar_count: usize,
 }
 
 struct Group {
     size: usize,
-    barrier: Barrier,
     state: Mutex<GroupState>,
     cv: Condvar,
 }
@@ -125,21 +136,43 @@ pub struct InProcTransport {
     groups: Vec<Vec<Group>>, // [axis][group_id]
     /// Elements per reduction chunk.
     chunk_elems: usize,
+    /// Deadline on every blocking wait; expiry poisons the group with a
+    /// `Stalled` origin naming the first missing contributor.
+    wait_timeout: Duration,
 }
 
 impl InProcTransport {
-    /// Allocate the op slots of every process group of `grid`.
+    /// Allocate the op slots of every process group of `grid`, with the
+    /// default wait deadline.
     pub fn new(grid: Grid4D, chunk_elems: usize) -> InProcTransport {
+        InProcTransport::with_wait_timeout(
+            grid,
+            chunk_elems,
+            TransportTuning::default().wait_timeout(),
+        )
+    }
+
+    /// As [`InProcTransport::new`] with an explicit deadline on every
+    /// blocking wait (tests use tiny deadlines to exercise the stall
+    /// detection; `CommWorld::with_tuning` threads the spec knob here).
+    pub fn with_wait_timeout(
+        grid: Grid4D,
+        chunk_elems: usize,
+        wait_timeout: Duration,
+    ) -> InProcTransport {
         assert!(chunk_elems > 0, "chunk_elems must be positive");
+        assert!(!wait_timeout.is_zero(), "wait_timeout must be positive");
         let mk = |axis: Axis| -> Vec<Group> {
             (0..grid.num_groups(axis))
                 .map(|_| Group {
                     size: grid.axis_size(axis),
-                    barrier: Barrier::new(grid.axis_size(axis)),
                     state: Mutex::new(GroupState {
                         next_seq: vec![0; grid.axis_size(axis)],
                         ops: VecDeque::new(),
                         poison: None,
+                        bar_gen: 0,
+                        bar_arrived: vec![false; grid.axis_size(axis)],
+                        bar_count: 0,
                     }),
                     cv: Condvar::new(),
                 })
@@ -149,11 +182,44 @@ impl InProcTransport {
             grid,
             groups: vec![mk(Axis::X), mk(Axis::Y), mk(Axis::Z), mk(Axis::Dp)],
             chunk_elems,
+            wait_timeout,
         }
     }
 
     fn group(&self, rank: usize, axis: Axis) -> &Group {
         &self.groups[axis.index()][self.grid.group_id(rank, axis)]
+    }
+
+    /// The `Stalled` origin for an expired wait on the op at `seq`: the
+    /// first member (group-index order) that never contributed is the
+    /// evidence — determinism matters so every waiter diagnoses the same
+    /// straggler.
+    fn stall_error(
+        &self,
+        st: &GroupState,
+        rank: usize,
+        axis: Axis,
+        seq: u64,
+        op_name: &'static str,
+    ) -> CommError {
+        let members = self.grid.group_ranks(rank, axis);
+        let origin = st
+            .ops
+            .iter()
+            .find(|o| o.seq == seq)
+            .and_then(|o| o.contributed.iter().position(|c| !*c))
+            .map(|i| members[i])
+            .unwrap_or(rank);
+        CommError::stalled(
+            origin,
+            seq,
+            op_name,
+            axis,
+            format!(
+                "rank {origin} silent on {op_name} seq {seq}: no contribution within {} ms",
+                self.wait_timeout.as_millis()
+            ),
+        )
     }
 
     /// Advance ordered chunk reductions of every fully-contributed op of
@@ -253,6 +319,7 @@ impl Transport for InProcTransport {
         out: &mut [f32],
     ) -> Result<Instant, CommError> {
         let g = self.group(rank, axis);
+        let deadline = Instant::now() + self.wait_timeout;
         let mut st = g.state.lock().unwrap();
         let completed_at = loop {
             if let Some(e) = st.poison.clone() {
@@ -272,7 +339,11 @@ impl Transport for InProcTransport {
             if let Some(t) = done {
                 break t;
             }
-            st = g.cv.wait(st).unwrap();
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.stall_error(&st, rank, axis, seq, "all_reduce"));
+            }
+            st = g.cv.wait_timeout(st, deadline - now).unwrap().0;
         };
         let retire = {
             let op = st.ops.iter_mut().find(|o| o.seq == seq).unwrap();
@@ -293,6 +364,7 @@ impl Transport for InProcTransport {
         seq: u64,
     ) -> Result<(Vec<Vec<f32>>, Instant), CommError> {
         let g = self.group(rank, axis);
+        let deadline = Instant::now() + self.wait_timeout;
         let mut st = g.state.lock().unwrap();
         let completed_at = loop {
             if let Some(e) = st.poison.clone() {
@@ -310,7 +382,11 @@ impl Transport for InProcTransport {
             if let Some(t) = done {
                 break t;
             }
-            st = g.cv.wait(st).unwrap();
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.stall_error(&st, rank, axis, seq, "all_gather"));
+            }
+            st = g.cv.wait_timeout(st, deadline - now).unwrap().0;
         };
         let (out, retire) = {
             let op = st.ops.iter_mut().find(|o| o.seq == seq).unwrap();
@@ -346,10 +422,58 @@ impl Transport for InProcTransport {
 
     fn barrier(&self, rank: usize, axis: Axis) -> Result<(), CommError> {
         let g = self.group(rank, axis);
-        if g.size > 1 {
-            g.barrier.wait();
+        if g.size <= 1 {
+            return Ok(());
         }
-        Ok(())
+        let me = self.grid.index_in_group(rank, axis);
+        let mut st = g.state.lock().unwrap();
+        if let Some(e) = st.poison.clone() {
+            return Err(e);
+        }
+        let gen = st.bar_gen;
+        st.bar_arrived[me] = true;
+        st.bar_count += 1;
+        if st.bar_count == g.size {
+            // last arrival releases the generation
+            st.bar_count = 0;
+            for a in st.bar_arrived.iter_mut() {
+                *a = false;
+            }
+            st.bar_gen += 1;
+            drop(st);
+            g.cv.notify_all();
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.wait_timeout;
+        loop {
+            if let Some(e) = st.poison.clone() {
+                return Err(e);
+            }
+            if st.bar_gen != gen {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let members = self.grid.group_ranks(rank, axis);
+                let origin = st
+                    .bar_arrived
+                    .iter()
+                    .position(|a| !*a)
+                    .map(|i| members[i])
+                    .unwrap_or(rank);
+                return Err(CommError::stalled(
+                    origin,
+                    gen,
+                    "barrier",
+                    axis,
+                    format!(
+                        "rank {origin} silent on barrier {gen}: no arrival within {} ms",
+                        self.wait_timeout.as_millis()
+                    ),
+                ));
+            }
+            st = g.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
     }
 
     fn fail(&self, rank: usize, err: &CommError) {

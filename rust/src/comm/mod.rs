@@ -68,17 +68,19 @@
 //! Counters live on the world handle: with `InProc` all ranks share one
 //! world, over sockets each rank process owns its own.
 
+pub mod chaos;
 pub mod coord;
 mod inproc;
 mod socket;
 pub mod wire;
 
+pub use chaos::{ChaosMode, ChaosSpec, ChaosTransport};
 pub use coord::{CoordConfig, Coordinator};
 pub use inproc::InProcTransport;
 pub use socket::{Endpoint, SocketTransport};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::grid::{Axis, Grid4D};
 
@@ -123,6 +125,77 @@ impl Precision {
 /// Default elements per chunk (16 KiB of f32 payload per chunk).
 pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
 
+/// How a collective failure came about — a real fault, a deadline expiry
+/// on a silent-but-alive rank, or a peer process death.  Supervisors
+/// route all three through the same re-form-and-replay recovery; reports
+/// keep them apart so a straggler is diagnosed as a straggler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A protocol violation, mismatch handshake, or injected fault.
+    Fault,
+    /// A configured `wait_timeout_ms` deadline expired: some member is
+    /// silent (not provably dead) and the group was poisoned instead of
+    /// hanging forever.
+    Stalled,
+    /// A peer process died or its connection dropped.
+    Death,
+}
+
+impl FailureKind {
+    /// Report tag for this kind (`"fault"` / `"stalled"` / `"death"`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FailureKind::Fault => "fault",
+            FailureKind::Stalled => "stalled",
+            FailureKind::Death => "death",
+        }
+    }
+}
+
+/// Timing knobs of the distributed runtime, spec-visible on
+/// `RunSpec.transport` and threaded to every blocking wait.  `None`
+/// fields resolve to the engine defaults via the accessor methods; the
+/// spec layer validates that provided values are nonzero and within a
+/// day (`session::spec`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportTuning {
+    /// Socket connect + registration handshake budget (default 10 000).
+    pub connect_timeout_ms: Option<u32>,
+    /// Heartbeat interval the coordinator demands of ranks; rank side
+    /// this is advisory (the coordinator's `Welcome` carries the actual
+    /// interval).  Default 0 = no heartbeat.
+    pub heartbeat_ms: Option<u32>,
+    /// Deadline on every blocking collective wait; expiry poisons the
+    /// group with a [`FailureKind::Stalled`] origin (default 30 000).
+    pub wait_timeout_ms: Option<u32>,
+    /// How long the coordinator holds a failed rank's slot open for a
+    /// re-registration before tearing the world down (default 0 =
+    /// rejoin disabled, fail fast).
+    pub rejoin_grace_ms: Option<u32>,
+}
+
+impl TransportTuning {
+    /// Socket connect + handshake budget.
+    pub fn connect_timeout(&self) -> Duration {
+        Duration::from_millis(u64::from(self.connect_timeout_ms.unwrap_or(10_000)))
+    }
+
+    /// Heartbeat interval in ms (0 = disabled).
+    pub fn heartbeat(&self) -> u32 {
+        self.heartbeat_ms.unwrap_or(0)
+    }
+
+    /// Deadline on every blocking collective wait.
+    pub fn wait_timeout(&self) -> Duration {
+        Duration::from_millis(u64::from(self.wait_timeout_ms.unwrap_or(30_000)))
+    }
+
+    /// Rejoin grace window (zero = rejoin disabled).
+    pub fn rejoin_grace(&self) -> Duration {
+        Duration::from_millis(u64::from(self.rejoin_grace_ms.unwrap_or(0)))
+    }
+}
+
 /// Structured origin of a collective failure: which rank died, at which
 /// group sequence number, issuing which op on which axis, and why.
 ///
@@ -141,12 +214,16 @@ pub struct CommError {
     /// faults, which are not tied to an op slot).
     pub seq: u64,
     /// Op kind at the origin: `"all_reduce"`, `"all_gather"`,
-    /// `"injected-fault"`, or — over socket transports — `"rank-death"`
-    /// (a peer process died or sent an undecodable frame) /
-    /// `"coordinator-lost"` (the coordinator connection dropped).
+    /// `"barrier"`, `"injected-fault"`, or — over socket transports —
+    /// `"rank-death"` (a peer process died or sent an undecodable frame)
+    /// / `"coordinator-lost"` (the coordinator connection dropped).
     pub op: &'static str,
     /// Axis of the group where the failure originated.
     pub axis: Axis,
+    /// How the failure came about; a [`FailureKind::Stalled`] origin
+    /// means a deadline expired on a silent member, not that anything
+    /// provably died.
+    pub kind: FailureKind,
     /// Human-readable cause (the handshake mismatch text, the injected
     /// fault description, or the wire decode error).
     pub msg: String,
@@ -154,9 +231,23 @@ pub struct CommError {
 
 impl CommError {
     /// Build a failure origin (transports construct these; everything
-    /// downstream only clones and reports them).
+    /// downstream only clones and reports them).  The kind is inferred
+    /// from the op — `"rank-death"` / `"coordinator-lost"` are deaths,
+    /// everything else a fault; use [`CommError::stalled`] for deadline
+    /// expiries.
     pub fn new(rank: usize, seq: u64, op: &'static str, axis: Axis, msg: String) -> CommError {
-        CommError { rank, seq, op, axis, msg }
+        let kind = match op {
+            "rank-death" | "coordinator-lost" => FailureKind::Death,
+            _ => FailureKind::Fault,
+        };
+        CommError { rank, seq, op, axis, kind, msg }
+    }
+
+    /// Build a [`FailureKind::Stalled`] origin: the deadline on `op`
+    /// expired and `rank` is the member the evidence points at (the
+    /// first missing contributor, or the silent waiter itself).
+    pub fn stalled(rank: usize, seq: u64, op: &'static str, axis: Axis, msg: String) -> CommError {
+        CommError { rank, seq, op, axis, kind: FailureKind::Stalled, msg }
     }
 }
 
@@ -292,6 +383,14 @@ pub trait Transport: Send + Sync {
     /// The recorded failure origin visible to `rank`, if any of its
     /// groups was poisoned.
     fn poison_of(&self, rank: usize) -> Option<CommError>;
+
+    /// Whether the coordinator offered this (poisoned) rank a rejoin:
+    /// the world is re-forming in place and the supervisor may
+    /// reconnect into the same coordinator instead of tearing the run
+    /// down.  Transports without a coordinator never offer one.
+    fn rejoin_offered(&self, _rank: usize) -> bool {
+        false
+    }
 }
 
 /// All process groups of a 4D grid, over a pluggable [`Transport`].
@@ -322,13 +421,46 @@ impl CommWorld {
         CommWorld { grid, counters: Default::default(), transport }
     }
 
+    /// In-process world with explicit [`TransportTuning`] and an
+    /// optional deterministic chaos schedule wrapped around the
+    /// transport (`session::backends` builds PMM worlds through this).
+    pub fn with_tuning(
+        grid: Grid4D,
+        chunk_elems: usize,
+        tuning: &TransportTuning,
+        chaos: Option<&ChaosSpec>,
+    ) -> CommWorld {
+        let inner = InProcTransport::with_wait_timeout(grid, chunk_elems, tuning.wait_timeout());
+        let transport: Box<dyn Transport> = match chaos {
+            Some(spec) => Box::new(
+                ChaosTransport::new(Box::new(inner), spec.clone())
+                    .with_stall_cap(tuning.wait_timeout() * 4),
+            ),
+            None => Box::new(inner),
+        };
+        CommWorld::with_transport(grid, transport)
+    }
+
     /// Socket world for **one** rank of a multi-process run: register
     /// with the `scalegnn-coord` coordinator at `endpoint`, block until
     /// the full world assembled, and return a world whose collectives
     /// travel as [`wire`] frames.  Counters on this handle account this
     /// rank's traffic only.
     pub fn connect(grid: Grid4D, rank: usize, endpoint: &Endpoint) -> anyhow::Result<CommWorld> {
-        let t = SocketTransport::connect(grid, rank, endpoint)?;
+        CommWorld::connect_with(grid, rank, endpoint, &TransportTuning::default(), None)
+    }
+
+    /// As [`CommWorld::connect`] with explicit [`TransportTuning`] and an
+    /// optional deterministic chaos schedule on the write side of the
+    /// connection.
+    pub fn connect_with(
+        grid: Grid4D,
+        rank: usize,
+        endpoint: &Endpoint,
+        tuning: &TransportTuning,
+        chaos: Option<&ChaosSpec>,
+    ) -> anyhow::Result<CommWorld> {
+        let t = SocketTransport::connect_with(grid, rank, endpoint, tuning, chaos)?;
         Ok(CommWorld::with_transport(grid, Box::new(t)))
     }
 
@@ -376,6 +508,14 @@ impl CommWorld {
     /// next collective is far away still learns of a dead peer promptly.
     pub fn poison_of(&self, rank: usize) -> Option<CommError> {
         self.transport.poison_of(rank)
+    }
+
+    /// Whether the coordinator offered this (poisoned) rank a rejoin —
+    /// the world is re-forming in place, and the supervisor should
+    /// reconnect and replay from the newest consistent snapshot rather
+    /// than exit.
+    pub fn rejoin_offered(&self, rank: usize) -> bool {
+        self.transport.rejoin_offered(rank)
     }
 
     /// `Ok(())` while `rank`'s groups are healthy; the recorded failure

@@ -7,10 +7,25 @@
 //!
 //! Connection anatomy: one stream per rank, writer behind a mutex (the
 //! rank thread issues contributions / barriers / heartbeats), plus a
-//! reader thread that dispatches results, barrier releases and poison
-//! frames into shared state a waiting rank blocks on.  A lost
+//! reader thread that dispatches results, barrier releases, poison and
+//! rollback frames into shared state a waiting rank blocks on.  A lost
 //! coordinator connection poisons the rank with a `"coordinator-lost"`
 //! origin instead of hanging a wait forever.
+//!
+//! **No unbounded waits.**  Every blocking path carries a deadline from
+//! [`TransportTuning`]: the handshake read times out at the connect
+//! budget, and collective waits use `wait_timeout` loops whose expiry
+//! poisons the rank with a [`FailureKind::Stalled`](super::FailureKind)
+//! origin.  The rank-local deadline is *twice* the configured
+//! `wait_timeout_ms` — the coordinator's op-stall watchdog (one
+//! `wait_timeout_ms`) names the true straggler first; the local fallback
+//! only fires when the coordinator itself went silent.
+//!
+//! **Rejoin.**  A coordinator re-forming the world (its
+//! `rejoin_grace_ms` window) broadcasts `Rollback` instead of plain
+//! poison; the reader records the offer and the supervisor can
+//! reconnect this rank into the same coordinator instead of tearing the
+//! run down ([`Transport::rejoin_offered`]).
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -23,8 +38,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::chaos::{ChaosConn, ChaosSpec};
 use super::wire::{self, Msg};
-use super::{CollKind, CommError, Transport};
+use super::{CollKind, CommError, Transport, TransportTuning};
 use crate::grid::{Axis, Grid4D};
 
 /// Where a coordinator listens (and ranks connect).
@@ -151,7 +167,9 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 }
 
 struct Tx {
-    w: Conn,
+    /// The write side of the coordinator connection — the raw [`Conn`],
+    /// or a [`ChaosConn`] injecting wire faults from its schedule.
+    w: Box<dyn Write + Send>,
     /// Per-axis sequence number of this rank's next collective (assigned
     /// under the writer lock so seq order equals wire order).
     next_seq: [u64; 4],
@@ -170,6 +188,9 @@ struct RxState {
     /// First failure origin seen (from the coordinator, a peer via the
     /// coordinator, or a lost connection).
     poison: Option<CommError>,
+    /// The coordinator broadcast `Rollback`: the world is re-forming in
+    /// place and this rank may reconnect into the same coordinator.
+    rejoin: bool,
     /// Set by Drop so the reader thread exits silently on EOF.
     closing: bool,
 }
@@ -189,20 +210,38 @@ pub struct SocketTransport {
     /// Dedicated handle for Drop to unblock the reader thread.
     shutdown_conn: Conn,
     kind: &'static str,
+    /// Rank-local fallback deadline on collective waits (twice the
+    /// configured `wait_timeout_ms`; see the module docs).
+    wait_deadline: Duration,
     reader: Option<JoinHandle<()>>,
     pinger: Option<JoinHandle<()>>,
 }
 
 impl SocketTransport {
-    /// Register `rank` with the coordinator at `ep`, block until the
-    /// whole world assembled (the coordinator's Welcome), and start the
-    /// reader (and, if the coordinator asked for heartbeats, pinger)
-    /// threads.
+    /// Register `rank` with the coordinator at `ep` under default
+    /// [`TransportTuning`] and no chaos (see
+    /// [`SocketTransport::connect_with`]).
     pub fn connect(grid: Grid4D, rank: usize, ep: &Endpoint) -> Result<SocketTransport> {
+        SocketTransport::connect_with(grid, rank, ep, &TransportTuning::default(), None)
+    }
+
+    /// Register `rank` with the coordinator at `ep`, block until the
+    /// whole world assembled (the coordinator's Welcome, bounded by the
+    /// connect budget plus the rejoin grace), and start the reader (and,
+    /// if the coordinator asked for heartbeats, pinger) threads.  With a
+    /// [`ChaosSpec`], the write side of the connection goes through a
+    /// [`ChaosConn`] injecting wire faults from the seeded schedule.
+    pub fn connect_with(
+        grid: Grid4D,
+        rank: usize,
+        ep: &Endpoint,
+        tuning: &TransportTuning,
+        chaos: Option<&ChaosSpec>,
+    ) -> Result<SocketTransport> {
         if rank >= grid.world_size() {
             bail!("rank {rank} outside world of {} ranks", grid.world_size());
         }
-        let mut conn = Conn::connect(ep, Duration::from_secs(10))
+        let mut conn = Conn::connect(ep, tuning.connect_timeout())
             .map_err(|e| anyhow!("rank {rank}: connecting to coordinator at {ep}: {e}"))?;
         wire::write_msg(
             &mut conn,
@@ -212,6 +251,11 @@ impl SocketTransport {
             },
         )
         .map_err(|e| anyhow!("rank {rank}: sending hello: {e}"))?;
+        // the Welcome wait is bounded: peers get the connect budget to
+        // assemble, plus the grace window if the world is re-forming
+        // around a rejoining rank
+        conn.set_read_timeout(Some(tuning.connect_timeout() + tuning.rejoin_grace()))
+            .map_err(|e| anyhow!("rank {rank}: arming handshake deadline: {e}"))?;
         let heartbeat_ms = match wire::read_msg(&mut conn) {
             Ok(Msg::Welcome { world, heartbeat_ms }) => {
                 if world as usize != grid.world_size() {
@@ -222,7 +266,7 @@ impl SocketTransport {
                 }
                 heartbeat_ms
             }
-            Ok(Msg::Poison { err }) => {
+            Ok(Msg::Poison { err }) | Ok(Msg::Rollback { err }) => {
                 bail!("rank {rank}: world failed during assembly: {err}")
             }
             Ok(m) => bail!("rank {rank}: expected welcome, coordinator sent {m:?}"),
@@ -230,11 +274,22 @@ impl SocketTransport {
         };
         let shutdown_conn = conn.try_clone()?;
         let mut rconn = conn.try_clone()?;
+        // The reader thread's blocking read carries no deadline of its
+        // own: shutdown_conn.shutdown() on poison/Drop unblocks it, a dead
+        // coordinator surfaces as an EOF/error poisoning the rank, and
+        // every *collective* wait above it is deadline-bounded.
+        // lint: allow(unbounded-wait) — reader-thread read; shutdown_conn.shutdown() unblocks it
+        if let Err(e) = rconn.set_read_timeout(None) {
+            bail!("rank {rank}: clearing handshake deadline: {e}");
+        }
         let sh = Arc::new(Shared { state: Mutex::new(RxState::default()), cv: Condvar::new() });
         let sh_r = sh.clone();
         let reader = std::thread::spawn(move || reader_loop(&mut rconn, &sh_r, rank));
-        let tx =
-            Arc::new(Mutex::new(Tx { w: conn, next_seq: [0; 4], next_bseq: [0; 4] }));
+        let w: Box<dyn Write + Send> = match chaos {
+            Some(spec) => Box::new(ChaosConn::new(conn, spec.clone(), rank)),
+            None => Box::new(conn),
+        };
+        let tx = Arc::new(Mutex::new(Tx { w, next_seq: [0; 4], next_bseq: [0; 4] }));
         let pinger = (heartbeat_ms > 0).then(|| {
             let tx = tx.clone();
             let sh = sh.clone();
@@ -249,6 +304,7 @@ impl SocketTransport {
                 Endpoint::Tcp(_) => "tcp",
                 Endpoint::Unix(_) => "uds",
             },
+            wait_deadline: tuning.wait_timeout() * 2,
             reader: Some(reader),
             pinger: Some(pinger).flatten(),
         })
@@ -264,6 +320,22 @@ impl SocketTransport {
         self.poison().unwrap_or_else(|| {
             CommError::new(self.rank, seq, op, axis, format!("sending to coordinator: {e}"))
         })
+    }
+
+    /// The rank-local deadline expired with no result and no poison: the
+    /// coordinator itself went silent (its own op-stall watchdog, at half
+    /// this deadline, would otherwise have named the straggler already).
+    fn stall_err(&self, seq: u64, op: &'static str, axis: Axis) -> CommError {
+        CommError::stalled(
+            self.rank,
+            seq,
+            op,
+            axis,
+            format!(
+                "no {op} result and no failure verdict within {} ms: coordinator silent",
+                self.wait_deadline.as_millis()
+            ),
+        )
     }
 }
 
@@ -297,6 +369,18 @@ fn reader_loop(conn: &mut Conn, sh: &Shared, rank: usize) {
                 sh.cv.notify_all();
                 // keep reading: the coordinator closes after the
                 // broadcast and the EOF ends this loop cleanly
+            }
+            Ok(Msg::Rollback { err }) => {
+                // like poison, but the coordinator is holding the world
+                // open: record the rejoin offer so the supervisor
+                // reconnects instead of tearing the run down
+                let mut st = lock(&sh.state);
+                st.rejoin = true;
+                if st.poison.is_none() {
+                    st.poison = Some(err);
+                }
+                drop(st);
+                sh.cv.notify_all();
             }
             Ok(_) => {} // stray frame; harmless
             Err(e) => {
@@ -378,6 +462,7 @@ impl Transport for SocketTransport {
         out: &mut [f32],
     ) -> Result<Instant, CommError> {
         let key = (axis.index(), seq);
+        let deadline = Instant::now() + self.wait_deadline;
         let mut st = lock(&self.sh.state);
         loop {
             if let Some(e) = st.poison.clone() {
@@ -396,7 +481,16 @@ impl Transport for SocketTransport {
                 out.copy_from_slice(&data);
                 return Ok(at);
             }
-            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.stall_err(seq, "all_reduce", axis));
+            }
+            st = self
+                .sh
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
         }
     }
 
@@ -407,6 +501,7 @@ impl Transport for SocketTransport {
         seq: u64,
     ) -> Result<(Vec<Vec<f32>>, Instant), CommError> {
         let key = (axis.index(), seq);
+        let deadline = Instant::now() + self.wait_deadline;
         let mut st = lock(&self.sh.state);
         loop {
             if let Some(e) = st.poison.clone() {
@@ -415,7 +510,16 @@ impl Transport for SocketTransport {
             if let Some(r) = st.gathers.remove(&key) {
                 return Ok(r);
             }
-            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.stall_err(seq, "all_gather", axis));
+            }
+            st = self
+                .sh
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
         }
     }
 
@@ -432,6 +536,7 @@ impl Transport for SocketTransport {
                 .map_err(|e| self.send_err(b, "protocol", axis, e))?;
             b
         };
+        let deadline = Instant::now() + self.wait_deadline;
         let mut st = lock(&self.sh.state);
         loop {
             if let Some(e) = st.poison.clone() {
@@ -440,7 +545,16 @@ impl Transport for SocketTransport {
             if st.releases[axis.index()] > bseq {
                 return Ok(());
             }
-            st = self.sh.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(self.stall_err(bseq, "barrier", axis));
+            }
+            st = self
+                .sh
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
         }
     }
 
@@ -459,6 +573,10 @@ impl Transport for SocketTransport {
 
     fn poison_of(&self, _rank: usize) -> Option<CommError> {
         self.poison()
+    }
+
+    fn rejoin_offered(&self, _rank: usize) -> bool {
+        lock(&self.sh.state).rejoin
     }
 }
 

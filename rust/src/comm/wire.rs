@@ -19,7 +19,9 @@
 //! already-rounded f32, and a bf16 gather's broadcast result ships the
 //! same half-width bits back out, so both wire directions are lossless at
 //! half the bytes, mirroring the §V-B byte accounting.  (Wire version 2
-//! added the gather precision; version-1 peers are rejected with
+//! added the gather precision; version 3 added the [`FailureKind`] byte
+//! on `Poison` frames and the `Rollback` frame that offers survivors a
+//! rejoin instead of a teardown; older peers are rejected with
 //! [`WireError::BadVersion`].)
 //!
 //! The decoder ([`read_msg`]) classifies every way a frame can be bad
@@ -32,7 +34,7 @@
 
 use std::io::{self, Read, Write};
 
-use super::{CollKind, CommError, Precision};
+use super::{CollKind, CommError, FailureKind, Precision};
 use crate::checkpoint::crc32;
 use crate::grid::Axis;
 use crate::util::bf16_round;
@@ -41,8 +43,9 @@ use crate::util::bytes::{f32_le, u16_le, u32_le, u64_le};
 /// Frame magic: "PLSW" (PaLlaS Wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"PLSW";
 /// Wire protocol version; bumped on any frame-format change (2: bf16
-/// gather contributions and half-width gather results).
-pub const WIRE_VERSION: u16 = 2;
+/// gather contributions and half-width gather results; 3: failure-kind
+/// byte on poison frames plus the `Rollback` re-form offer).
+pub const WIRE_VERSION: u16 = 3;
 /// Hard cap on a frame payload (64 MiB) — a corrupted length prefix must
 /// fail fast, not trigger a giant allocation.
 pub const MAX_FRAME_PAYLOAD: usize = 64 << 20;
@@ -139,6 +142,9 @@ pub enum FrameType {
     Ping = 9,
     /// Rank → coordinator: clean completion.
     Bye = 10,
+    /// Coordinator → rank: the world is re-forming around the carried
+    /// failure; the receiver may re-register (same payload as `Poison`).
+    Rollback = 11,
 }
 
 impl FrameType {
@@ -154,6 +160,7 @@ impl FrameType {
             8 => Some(FrameType::Poison),
             9 => Some(FrameType::Ping),
             10 => Some(FrameType::Bye),
+            11 => Some(FrameType::Rollback),
             _ => None,
         }
     }
@@ -234,6 +241,15 @@ pub enum Msg {
     Ping,
     /// Clean completion; the sender will close its connection.
     Bye,
+    /// The coordinator is re-forming the world around the carried
+    /// failure instead of tearing it down: the receiving rank's current
+    /// collectives die with this origin, and the process may reconnect
+    /// and re-register into the same coordinator within the rejoin
+    /// grace window.
+    Rollback {
+        /// The failure the world is re-forming around.
+        err: CommError,
+    },
 }
 
 // Op-name codes for CommError::op over the wire.  CommError.op is a
@@ -246,6 +262,7 @@ fn op_code(op: &str) -> u8 {
         "rank-death" => 3,
         "coordinator-lost" => 4,
         "protocol" => 5,
+        "barrier" => 6,
         _ => 255,
     }
 }
@@ -258,7 +275,25 @@ fn op_from_code(c: u8) -> &'static str {
         3 => "rank-death",
         4 => "coordinator-lost",
         5 => "protocol",
+        6 => "barrier",
         _ => "remote-failure",
+    }
+}
+
+fn kind_code(k: FailureKind) -> u8 {
+    match k {
+        FailureKind::Fault => 0,
+        FailureKind::Stalled => 1,
+        FailureKind::Death => 2,
+    }
+}
+
+fn kind_from_code(c: u8) -> Result<FailureKind, WireError> {
+    match c {
+        0 => Ok(FailureKind::Fault),
+        1 => Ok(FailureKind::Stalled),
+        2 => Ok(FailureKind::Death),
+        k => Err(WireError::Malformed(format!("unknown failure kind {k}"))),
     }
 }
 
@@ -412,19 +447,45 @@ fn encode(msg: &Msg) -> (FrameType, Vec<u8>) {
             FrameType::BarrierRelease
         }
         Msg::Poison { err } => {
-            e.u32(err.rank as u32);
-            e.u64(err.seq);
-            e.u8(op_code(err.op));
-            e.u8(err.axis.code());
-            let m = err.msg.as_bytes();
-            e.u32(m.len() as u32);
-            e.0.extend_from_slice(m);
+            encode_err(&mut e, err);
             FrameType::Poison
+        }
+        Msg::Rollback { err } => {
+            encode_err(&mut e, err);
+            FrameType::Rollback
         }
         Msg::Ping => FrameType::Ping,
         Msg::Bye => FrameType::Bye,
     };
     (ty, e.0)
+}
+
+// Poison and Rollback share one CommError payload encoding: rank, seq,
+// op code, failure-kind code, axis code, then the length-prefixed
+// message bytes.
+fn encode_err(e: &mut Enc, err: &CommError) {
+    e.u32(err.rank as u32);
+    e.u64(err.seq);
+    e.u8(op_code(err.op));
+    e.u8(kind_code(err.kind));
+    e.u8(err.axis.code());
+    let m = err.msg.as_bytes();
+    e.u32(m.len() as u32);
+    e.0.extend_from_slice(m);
+}
+
+fn decode_err(d: &mut Dec<'_>) -> Result<CommError, WireError> {
+    let rank = d.u32()? as usize;
+    let seq = d.u64()?;
+    let op = op_from_code(d.u8()?);
+    let kind = kind_from_code(d.u8()?)?;
+    let axis = d.axis()?;
+    let ml = d.u32()? as usize;
+    let msg = String::from_utf8(d.take(ml)?.to_vec())
+        .map_err(|_| WireError::Malformed("poison message is not UTF-8".into()))?;
+    let mut err = CommError::new(rank, seq, op, axis, msg);
+    err.kind = kind;
+    Ok(err)
 }
 
 fn decode(ty: FrameType, payload: &[u8]) -> Result<Msg, WireError> {
@@ -479,16 +540,8 @@ fn decode(ty: FrameType, payload: &[u8]) -> Result<Msg, WireError> {
         }
         FrameType::Barrier => Msg::Barrier { axis: d.axis()?, bseq: d.u64()? },
         FrameType::BarrierRelease => Msg::BarrierRelease { axis: d.axis()?, bseq: d.u64()? },
-        FrameType::Poison => {
-            let rank = d.u32()? as usize;
-            let seq = d.u64()?;
-            let op = op_from_code(d.u8()?);
-            let axis = d.axis()?;
-            let ml = d.u32()? as usize;
-            let msg = String::from_utf8(d.take(ml)?.to_vec())
-                .map_err(|_| WireError::Malformed("poison message is not UTF-8".into()))?;
-            Msg::Poison { err: CommError::new(rank, seq, op, axis, msg) }
-        }
+        FrameType::Poison => Msg::Poison { err: decode_err(&mut d)? },
+        FrameType::Rollback => Msg::Rollback { err: decode_err(&mut d)? },
         FrameType::Ping => Msg::Ping,
         FrameType::Bye => Msg::Bye,
     };
@@ -623,6 +676,9 @@ mod tests {
             Msg::Poison {
                 err: CommError::new(2, 5, "all_reduce", Axis::Y, "length mismatch".into()),
             },
+            Msg::Rollback {
+                err: CommError::stalled(1, 9, "all_gather", Axis::Z, "silent rank".into()),
+            },
             Msg::Ping,
             Msg::Bye,
         ];
@@ -736,7 +792,9 @@ mod tests {
 
     #[test]
     fn poison_op_names_survive_the_wire() {
-        for op in ["all_reduce", "all_gather", "injected-fault", "rank-death", "protocol"] {
+        for op in
+            ["all_reduce", "all_gather", "injected-fault", "rank-death", "protocol", "barrier"]
+        {
             let m = round_trip(Msg::Poison {
                 err: CommError::new(1, 2, op, Axis::Dp, "why".into()),
             });
@@ -744,6 +802,35 @@ mod tests {
                 Msg::Poison { err } => assert_eq!(err.op, op),
                 m => panic!("decoded {m:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn failure_kinds_survive_the_wire() {
+        // Stalled vs Fault vs Death must travel: the supervisor routes a
+        // stall through the same recovery as a death, but reports it as
+        // what it was.
+        let mk = |kind: FailureKind| {
+            let mut e = CommError::new(3, 7, "all_reduce", Axis::X, "k".into());
+            e.kind = kind;
+            e
+        };
+        for kind in [FailureKind::Fault, FailureKind::Stalled, FailureKind::Death] {
+            match round_trip(Msg::Poison { err: mk(kind) }) {
+                Msg::Poison { err } => assert_eq!(err.kind, kind),
+                m => panic!("decoded {m:?}"),
+            }
+            match round_trip(Msg::Rollback { err: mk(kind) }) {
+                Msg::Rollback { err } => assert_eq!(err.kind, kind),
+                m => panic!("decoded {m:?}"),
+            }
+        }
+        // rank-death defaults to the Death kind via CommError::new
+        match round_trip(Msg::Poison {
+            err: CommError::new(0, 0, "rank-death", Axis::X, "gone".into()),
+        }) {
+            Msg::Poison { err } => assert_eq!(err.kind, FailureKind::Death),
+            m => panic!("decoded {m:?}"),
         }
     }
 }

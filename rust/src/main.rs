@@ -23,7 +23,11 @@
 //!                     [--overlap on|off] [--stats-json FILE]
 //!                     [--checkpoint-dir D [--checkpoint-every N]
 //!                      [--checkpoint-keep K] [--resume]
-//!                      [--kill-rank R --kill-step S]]
+//!                      [--kill-rank R --kill-step S]
+//!                      [--stall-rank R --stall-step S [--stall-ms MS]]]
+//!                     [--chaos seed=S,rate=R[,modes=a+b]]
+//!                     [--wait-timeout-ms N] [--rejoin-grace-ms N]
+//!                     [--connect-timeout-ms N] [--heartbeat-ms N]
 //! scalegnn eval       --dataset tiny --grid 2x2x2
 //! scalegnn sample     --dataset products_sim [--grid 2x2] [--steps S]
 //!                     [--from-store graph.pallas] [--cache-mb M]
@@ -39,7 +43,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use scalegnn::comm::Precision;
+use scalegnn::comm::{ChaosSpec, Precision};
 use scalegnn::graph::{datasets, partition_2d};
 use scalegnn::sampling::{DistributedSubgraphBuilder, SamplerKind, UniformVertexSampler};
 use scalegnn::session::{
@@ -123,9 +127,24 @@ Fault tolerance: pmm-train and train --from-store accept --checkpoint-dir D
 [--checkpoint-every N] [--checkpoint-keep K] (versioned CRC-checked
 snapshots, atomic writes, keep-last-K) and --resume (replay from the newest
 snapshot valid on every rank — bitwise-identical to the uninterrupted run).
-pmm-train also accepts --kill-rank R --kill-step S: a deterministic fault
-injection the supervisor must recover from by re-forming the world and
+pmm-train also accepts --kill-rank R --kill-step S (a deterministic death)
+and --stall-rank R --stall-step S [--stall-ms MS] (a silent, not-dead rank
+the deadline discipline must detect and poison as Stalled): fault
+injections the supervisor must recover from by re-forming the world and
 replaying from the last checkpoint.
+
+Chaos testing: run and pmm-train accept --chaos seed=S,rate=R[,modes=a+b]
+(modes: delay, stall, drop, corrupt, duplicate, partial) — a reproducible
+fault-injection schedule on the transport.  The same seed yields the same
+failure origin; chaos is disarmed on recovery so the replayed run matches
+the clean loss curve bitwise.
+
+Deadlines: run and pmm-train accept --wait-timeout-ms N (every blocking
+collective wait; expiry poisons the world with a structured Stalled
+origin), --rejoin-grace-ms N (coordinator holds a failed rank's slot open
+for a relaunched --rank R --resume process), --connect-timeout-ms N and
+--heartbeat-ms N.  The same values ride on RunSpec.transport in a spec
+file.
 
 Multi-process worlds: run and pmm-train accept --transport tcp:HOST:PORT |
 unix:PATH --rank R to join a world assembled by `scalegnn-coord --grid G
@@ -162,8 +181,10 @@ fn apply_checkpoint_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
 }
 
 /// Map `--transport inproc|tcp:HOST:PORT|unix:PATH` and `--rank R` onto
-/// the spec's transport section.  The same spec file can be shared by
-/// every rank process, with `--rank` supplying the per-process member.
+/// the spec's transport section, the deadline/heartbeat tuning flags onto
+/// `spec.tuning`, and `--chaos seed=S,rate=R[,modes=a+b]` onto
+/// `spec.chaos`.  The same spec file can be shared by every rank process,
+/// with `--rank` supplying the per-process member.
 fn apply_transport_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
     if let Some(t) = args.str_opt("transport") {
         spec.transport = TransportSpec::parse(&t).map_err(|e| anyhow!(e))?;
@@ -173,6 +194,21 @@ fn apply_transport_flags(args: &Args, spec: &mut RunSpec) -> Result<()> {
             bail!("--rank only applies to socket transports (give --transport tcp:… or unix:…)");
         }
         *spec = spec.clone().with_rank(r);
+    }
+    if let Some(v) = args.get::<u32>("connect-timeout-ms").map_err(|e| anyhow!(e))? {
+        spec.tuning.connect_timeout_ms = Some(v);
+    }
+    if let Some(v) = args.get::<u32>("heartbeat-ms").map_err(|e| anyhow!(e))? {
+        spec.tuning.heartbeat_ms = Some(v);
+    }
+    if let Some(v) = args.get::<u32>("wait-timeout-ms").map_err(|e| anyhow!(e))? {
+        spec.tuning.wait_timeout_ms = Some(v);
+    }
+    if let Some(v) = args.get::<u32>("rejoin-grace-ms").map_err(|e| anyhow!(e))? {
+        spec.tuning.rejoin_grace_ms = Some(v);
+    }
+    if let Some(c) = args.str_opt("chaos") {
+        spec.chaos = Some(ChaosSpec::parse(&c).map_err(|e| anyhow!(e))?);
     }
     Ok(())
 }
@@ -233,7 +269,10 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
-        &["spec", "stats-json", "jsonl", "log-every", "transport", "rank", "precision"],
+        &[
+            "spec", "stats-json", "jsonl", "log-every", "transport", "rank", "precision",
+            "chaos", "connect-timeout-ms", "heartbeat-ms", "wait-timeout-ms", "rejoin-grace-ms",
+        ],
         &["quiet"],
     )
     .map_err(|e| anyhow!(e))?;
@@ -479,7 +518,9 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         &[
             "dataset", "grid", "steps", "lr", "seed", "batch", "d-h", "layers", "dropout",
             "overlap", "stats-json", "checkpoint-dir", "checkpoint-every", "checkpoint-keep",
-            "kill-rank", "kill-step", "transport", "rank", "precision",
+            "kill-rank", "kill-step", "stall-rank", "stall-step", "stall-ms", "transport",
+            "rank", "precision", "chaos", "connect-timeout-ms", "heartbeat-ms",
+            "wait-timeout-ms", "rejoin-grace-ms",
         ],
         &["bf16", "resume", "verbose", "v"],
     )
@@ -519,6 +560,24 @@ fn cmd_pmm_train(args: &Args) -> Result<()> {
         (Some(rank), Some(step)) => spec.fault = Some(FaultSpec::KillRank { rank, step }),
         (None, None) => {}
         _ => bail!("--kill-rank and --kill-step must be given together"),
+    }
+    match (
+        args.get::<usize>("stall-rank").map_err(|e| anyhow!(e))?,
+        args.get::<u64>("stall-step").map_err(|e| anyhow!(e))?,
+    ) {
+        (Some(rank), Some(step)) => {
+            if spec.fault.is_some() {
+                bail!("--kill-rank and --stall-rank conflict (one scripted fault per run)");
+            }
+            let ms = args.get_or("stall-ms", 60_000u64).map_err(|e| anyhow!(e))?;
+            spec.fault = Some(FaultSpec::StallRank { rank, step, ms });
+        }
+        (None, None) => {
+            if args.get::<u64>("stall-ms").map_err(|e| anyhow!(e))?.is_some() {
+                bail!("--stall-ms needs --stall-rank and --stall-step");
+            }
+        }
+        _ => bail!("--stall-rank and --stall-step must be given together"),
     }
     apply_transport_flags(args, &mut spec)?;
     println!(

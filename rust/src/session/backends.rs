@@ -14,12 +14,14 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::checkpoint::{self, CheckpointManager, CheckpointPolicy, Snapshot};
-use crate::comm::{CommError, CommWorld, Precision};
+use crate::comm::{
+    ChaosSpec, CommError, CommWorld, Endpoint, Precision, TransportTuning, DEFAULT_CHUNK_ELEMS,
+};
 use crate::graph::{datasets, Dataset};
 use crate::grid::{Axis, Grid4D};
 use crate::model::GcnDims;
@@ -49,7 +51,8 @@ fn apply_snapshot_fault(
     let kind = match fault {
         FaultSpec::CorruptNewest => checkpoint::CorruptKind::FlipPayloadBit,
         FaultSpec::TruncateNewest => checkpoint::CorruptKind::Truncate,
-        FaultSpec::KillRank { .. } => return Ok(()), // armed in the rank loop instead
+        // armed in the rank loop instead
+        FaultSpec::KillRank { .. } | FaultSpec::StallRank { .. } => return Ok(()),
     };
     let p = policy.ok_or_else(|| anyhow!("a snapshot fault requires a checkpoint section"))?;
     for tag in tags {
@@ -318,6 +321,8 @@ struct PmmRunCfg {
     overlap: bool,
     final_eval: bool,
     ckpt: Option<CheckpointPolicy>,
+    tuning: TransportTuning,
+    chaos: Option<ChaosSpec>,
 }
 
 /// Per-rank run-configuration hash stored in every snapshot header, so a
@@ -385,7 +390,7 @@ fn run_pmm_rank(
     tx: Option<&Sender<StepEvent>>,
     start: u64,
     snap: Option<&Snapshot>,
-    kill: Option<(usize, u64)>,
+    fault: Option<FaultSpec>,
 ) -> Result<PmmRankOut> {
     let hash = pmm_spec_hash(cfg, r);
     let ckpt = cfg
@@ -400,13 +405,21 @@ fn run_pmm_rank(
     }
     let mut last = (0.0f32, 0.0f32);
     for s in start..cfg.steps {
-        if let Some((kr, ks)) = kill {
-            if r == kr && s == ks {
+        match fault {
+            Some(FaultSpec::KillRank { rank: kr, step: ks }) if r == kr && s == ks => {
                 // dies before issuing any step-s collective, so
                 // no peer can reach a later save barrier (they
                 // all stall inside step s's poisoned waits)
                 world.fail(r, &format!("scripted fault: kill rank {kr} at step {ks}"));
             }
+            Some(FaultSpec::StallRank { rank: sr, step: ss, ms }) if r == sr && s == ss => {
+                // go silent without dying: no death notification is
+                // ever sent, so only the deadline discipline can
+                // detect this rank and poison the world as Stalled
+                eprintln!("[fault] rank {sr} stalling {ms} ms at step {ss}");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            _ => {}
         }
         let t0 = Instant::now();
         let o = eng.train_step(s, cfg.lr);
@@ -467,15 +480,15 @@ where
 
 /// Spawn one thread per rank, running `start..cfg.steps`.  Each body runs
 /// under `catch_unwind` so a poisoned collective (or any panic) joins as
-/// a structured [`RankFailure`] instead of an opaque unwind; `kill` arms
-/// the deterministic `FaultSpec::KillRank` injection.
+/// a structured [`RankFailure`] instead of an opaque unwind; `fault` arms
+/// the deterministic `kill_rank` / `stall_rank` injection.
 fn spawn_pmm_ranks(
     cfg: &PmmRunCfg,
     world: &Arc<CommWorld>,
     tx: Sender<StepEvent>,
     start: u64,
     mut snaps: Vec<Option<Snapshot>>,
-    kill: Option<(usize, u64)>,
+    fault: Option<FaultSpec>,
 ) -> Vec<JoinHandle<Result<PmmRankOut, RankFailure>>> {
     let mut handles = Vec::with_capacity(cfg.grid.world_size());
     for r in 0..cfg.grid.world_size() {
@@ -484,7 +497,7 @@ fn spawn_pmm_ranks(
         let tx = if r == 0 { Some(tx.clone()) } else { None };
         let snap = snaps[r].take();
         handles.push(std::thread::spawn(move || {
-            catch_rank(r, || run_pmm_rank(&cfg, &w, r, tx.as_ref(), start, snap.as_ref(), kill))
+            catch_rank(r, || run_pmm_rank(&cfg, &w, r, tx.as_ref(), start, snap.as_ref(), fault))
         }));
     }
     handles
@@ -539,14 +552,16 @@ impl Backend for PmmBackend {
             overlap: spec.overlap,
             final_eval: spec.final_eval,
             ckpt: spec.checkpoint.clone(),
+            tuning: spec.tuning,
+            chaos: spec.chaos.clone(),
         };
         if let Some(fault) = spec.fault {
             let tags: Vec<String> =
                 (0..grid.world_size()).map(|r| format!("pmm-r{r}")).collect();
             apply_snapshot_fault(cfg.ckpt.as_ref(), fault, &tags)?;
         }
-        let kill = match spec.fault {
-            Some(FaultSpec::KillRank { rank, step }) => Some((rank, step)),
+        let fault = match spec.fault {
+            f @ Some(FaultSpec::KillRank { .. } | FaultSpec::StallRank { .. }) => f,
             _ => None,
         };
         let (start, snaps) = if spec.resume {
@@ -570,12 +585,18 @@ impl Backend for PmmBackend {
             })?;
             let mut snaps = snaps;
             let snap = snaps[rank].take();
-            let world = Arc::new(CommWorld::connect(grid, rank, endpoint)?);
+            let world = Arc::new(CommWorld::connect_with(
+                grid,
+                rank,
+                endpoint,
+                &cfg.tuning,
+                cfg.chaos.as_ref(),
+            )?);
             let (tx, rx) = channel();
             let (w, cfg2) = (world.clone(), cfg.clone());
             let handle = std::thread::spawn(move || {
                 catch_rank(rank, || {
-                    run_pmm_rank(&cfg2, &w, rank, Some(&tx), start, snap.as_ref(), kill)
+                    run_pmm_rank(&cfg2, &w, rank, Some(&tx), start, snap.as_ref(), fault)
                 })
             });
             return Ok(Box::new(SocketPmmSession {
@@ -583,13 +604,22 @@ impl Backend for PmmBackend {
                 handle: Some(handle),
                 world,
                 rank,
+                endpoint: endpoint.clone(),
                 steps: cfg.steps,
                 loss_curve: Vec::new(),
+                cfg,
+                failures: Vec::new(),
+                restarts: 0,
             }));
         }
-        let world = Arc::new(CommWorld::new(grid));
+        let world = Arc::new(CommWorld::with_tuning(
+            grid,
+            DEFAULT_CHUNK_ELEMS,
+            &cfg.tuning,
+            cfg.chaos.as_ref(),
+        ));
         let (tx, rx) = channel();
-        let handles = spawn_pmm_ranks(&cfg, &world, tx, start, snaps, kill);
+        let handles = spawn_pmm_ranks(&cfg, &world, tx, start, snaps, fault);
         Ok(Box::new(PmmSession {
             rx,
             handles,
@@ -673,7 +703,15 @@ impl PmmSession {
         eprintln!("[recover] {origin}; replaying from step {start}");
         self.failures.push(report);
         self.restarts += 1;
-        let world = Arc::new(CommWorld::new(self.cfg.grid));
+        // chaos is disarmed on replay, like the scripted fault below: the
+        // recovered run must converge to the clean curve, not re-roll the
+        // same schedule and die again
+        let world = Arc::new(CommWorld::with_tuning(
+            self.cfg.grid,
+            DEFAULT_CHUNK_ELEMS,
+            &self.cfg.tuning,
+            None,
+        ));
         let (tx, rx) = channel();
         // the scripted fault is disarmed on replay: a real cluster's
         // deterministic fault does not re-fire after the rank is replaced
@@ -784,9 +822,10 @@ fn axis_stats_checked(world: &CommWorld, rank: usize) -> Result<Vec<AxisStats>, 
 }
 
 /// One rank of a multi-process PMM world, attached to a coordinator over
-/// a [`TransportSpec::Socket`] endpoint.  Unlike the in-process
-/// [`PmmSession`] there is no elastic restart here — a socket world
-/// cannot be re-formed from inside one member process, so a failure
+/// a [`TransportSpec::Socket`] endpoint.  When the coordinator offers a
+/// rejoin window (`rejoin_grace_ms > 0`) and a checkpoint exists, a world
+/// failure re-registers this rank into the coordinator's next generation
+/// and replays from the newest common snapshot; otherwise the failure
 /// surfaces as a structured error naming the origin and the run is
 /// relaunched (optionally with `resume` from the shared checkpoint dir).
 struct SocketPmmSession {
@@ -794,33 +833,103 @@ struct SocketPmmSession {
     handle: Option<JoinHandle<Result<PmmRankOut, RankFailure>>>,
     world: Arc<CommWorld>,
     rank: usize,
+    endpoint: Endpoint,
     steps: u64,
     loss_curve: Vec<(u64, f32)>,
+    cfg: PmmRunCfg,
+    failures: Vec<FailureReport>,
+    restarts: u64,
 }
 
 impl SocketPmmSession {
-    /// Join the worker after its event channel closed early and convert
-    /// whatever it died of into the structured error this process exits
-    /// with (the coordinator separately reports the same origin).
-    fn rank_error(&mut self) -> anyhow::Error {
+    /// Join the worker after its event channel closed early and return
+    /// the structured failure it died of.
+    fn join_failure(&mut self) -> Result<RankFailure> {
         match self.handle.take().map(JoinHandle::join) {
             Some(Ok(Ok(_))) => {
-                anyhow!("pmm rank {} ended without a final step event", self.rank)
+                bail!("pmm rank {} ended without a final step event", self.rank)
             }
-            Some(Ok(Err(RankFailure::Comm(e)))) => anyhow!(
-                "pmm rank {} died in {} (seq {}, axis {:?}): {} \
-                 (relaunch the coordinator and all ranks, with --resume to \
-                 replay from the shared checkpoint dir)",
-                e.rank,
-                e.op,
-                e.seq,
-                e.axis,
-                e.msg
-            ),
-            Some(Ok(Err(RankFailure::Other(r, m)))) => anyhow!("pmm rank {r} failed: {m}"),
-            Some(Err(_)) => anyhow!("pmm rank thread panicked outside the harness"),
-            None => anyhow!("pmm rank worker already joined"),
+            Some(Ok(Err(f))) => Ok(f),
+            Some(Err(_)) => bail!("pmm rank thread panicked outside the harness"),
+            None => bail!("pmm rank worker already joined"),
         }
+    }
+
+    /// Recover from a dead world: when the coordinator holds this rank's
+    /// slot open (a rejoin was offered, or a grace window is configured)
+    /// and snapshots exist, re-register into the next world generation
+    /// and replay from the newest common step; otherwise surface the
+    /// structured origin (the coordinator separately reports the same
+    /// origin and the run is relaunched by hand).
+    fn recover(&mut self) -> Result<()> {
+        let failure = self.join_failure()?;
+        let mut report = match &failure {
+            RankFailure::Comm(e) => FailureReport {
+                rank: e.rank,
+                seq: e.seq,
+                op: e.op.to_string(),
+                axis: format!("{:?}", e.axis).to_lowercase(),
+                message: e.msg.clone(),
+                resumed_from_step: None,
+            },
+            RankFailure::Other(r, m) => FailureReport {
+                rank: *r,
+                seq: 0,
+                op: "panic".to_string(),
+                axis: String::new(),
+                message: m.clone(),
+                resumed_from_step: None,
+            },
+        };
+        let origin = format!(
+            "rank {} died in {} (seq {}, axis '{}'): {}",
+            report.rank, report.op, report.seq, report.axis, report.message
+        );
+        let offered = self.world.rejoin_offered(self.rank)
+            || self.cfg.tuning.rejoin_grace() > Duration::ZERO;
+        if !offered {
+            bail!(
+                "pmm {origin} (relaunch the coordinator and all ranks, with --resume \
+                 to replay from the shared checkpoint dir)"
+            );
+        }
+        if self.cfg.ckpt.is_none() {
+            bail!("pmm rank failed with no checkpoint to rejoin from: {origin}");
+        }
+        if self.restarts >= MAX_PMM_RESTARTS {
+            bail!("giving up after {MAX_PMM_RESTARTS} rejoin attempts: {origin}");
+        }
+        let (start, mut snaps) = pmm_resume_point(&self.cfg)
+            .with_context(|| format!("rejoining after: {origin}"))?;
+        self.loss_curve.retain(|&(s, _)| s < start);
+        report.resumed_from_step = Some(start);
+        eprintln!(
+            "[rejoin] rank {}: {origin}; re-registering and replaying from step {start}",
+            self.rank
+        );
+        self.failures.push(report);
+        self.restarts += 1;
+        let snap = snaps[self.rank].take();
+        // chaos and the scripted fault are disarmed on rejoin, like the
+        // in-process recovery: the replayed run must converge to the
+        // clean curve, not re-fire and die again
+        let world = Arc::new(CommWorld::connect_with(
+            self.cfg.grid,
+            self.rank,
+            &self.endpoint,
+            &self.cfg.tuning,
+            None,
+        )?);
+        let (tx, rx) = channel();
+        let (w, cfg2, rank) = (world.clone(), self.cfg.clone(), self.rank);
+        self.handle = Some(std::thread::spawn(move || {
+            catch_rank(rank, || {
+                run_pmm_rank(&cfg2, &w, rank, Some(&tx), start, snap.as_ref(), None)
+            })
+        }));
+        self.world = world;
+        self.rx = rx;
+        Ok(())
     }
 }
 
@@ -829,12 +938,17 @@ impl Session for SocketPmmSession {
         if self.steps == 0 {
             return Ok(None);
         }
-        match self.rx.recv() {
-            Ok(ev) => {
-                self.loss_curve.push((ev.step, ev.loss));
-                Ok(Some(event_report(ev)))
+        loop {
+            match self.rx.recv() {
+                Ok(ev) => {
+                    self.loss_curve.push((ev.step, ev.loss));
+                    return Ok(Some(event_report(ev)));
+                }
+                // the worker's sender dropped before `done`: the world
+                // died (locally or via the poison cascade) — rejoin if
+                // the coordinator holds our slot, else surface the origin
+                Err(_) => self.recover()?,
             }
-            Err(_) => Err(self.rank_error()),
         }
     }
 
@@ -866,6 +980,8 @@ impl Session for SocketPmmSession {
             steps: this.loss_curve.len() as u64,
             final_loss: last.0,
             loss_curve: this.loss_curve,
+            failures: this.failures,
+            restarts: this.restarts,
             pmm: Some(PmmRunReport {
                 final_acc: last.1,
                 timers_mean: timers,

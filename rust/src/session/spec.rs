@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 
 use crate::checkpoint::CheckpointPolicy;
-use crate::comm::{Endpoint, Precision};
+use crate::comm::{ChaosMode, ChaosSpec, Endpoint, Precision, TransportTuning};
 use crate::graph::datasets;
 use crate::grid::Grid4D;
 use crate::sampling::SamplerKind;
@@ -230,6 +230,21 @@ pub enum FaultSpec {
         /// step's collectives).
         step: u64,
     },
+    /// Stall rank `rank` for `ms` milliseconds when it reaches step
+    /// `step` (PMM backend only): the rank goes silent without dying, so
+    /// the deadline discipline — not a death notification — must detect
+    /// it, poison the world with a `Stalled` origin, and recover from the
+    /// newest common snapshot.
+    StallRank {
+        /// Rank thread to stall.
+        rank: usize,
+        /// Step index at which the stall fires (at step entry, before the
+        /// step's collectives).
+        step: u64,
+        /// How long the rank sleeps; must exceed the world's
+        /// `wait_timeout_ms` for the stall to be detected.
+        ms: u64,
+    },
     /// Flip a payload bit in the newest snapshot before the run starts,
     /// so restore must detect the bad checksum and fall back to the
     /// previous valid snapshot.
@@ -307,6 +322,8 @@ pub enum SpecError {
     /// The `transport` section is malformed or not executable on this
     /// spec.
     BadTransport(&'static str),
+    /// The `chaos` section is malformed or not executable on this spec.
+    BadChaos(&'static str),
 }
 
 impl std::fmt::Display for SpecError {
@@ -389,6 +406,7 @@ impl std::fmt::Display for SpecError {
             SpecError::BadCheckpoint(why) => write!(f, "bad checkpoint section: {why}"),
             SpecError::BadFault(why) => write!(f, "bad fault section: {why}"),
             SpecError::BadTransport(why) => write!(f, "bad transport section: {why}"),
+            SpecError::BadChaos(why) => write!(f, "bad chaos section: {why}"),
         }
     }
 }
@@ -453,6 +471,12 @@ pub struct RunSpec {
     /// Comm transport of the PMM ranks (in-process rank threads vs one
     /// rank per OS process over a socket).
     pub transport: TransportSpec,
+    /// Transport deadlines and heartbeat tuning (`None` fields keep the
+    /// built-in defaults).  Rides on the `transport` JSON object.
+    pub tuning: TransportTuning,
+    /// Deterministic fault-injection schedule for chaos testing (PMM
+    /// backend only; `None` = no chaos).
+    pub chaos: Option<ChaosSpec>,
     /// Simulator section (`backend == Sim` only).
     pub sim: Option<SimSpec>,
 }
@@ -485,6 +509,8 @@ impl RunSpec {
             resume: false,
             fault: None,
             transport: TransportSpec::InProc,
+            tuning: TransportTuning::default(),
+            chaos: None,
             sim: None,
         }
     }
@@ -622,6 +648,19 @@ impl RunSpec {
         if let TransportSpec::Socket { rank, .. } = &mut self.transport {
             *rank = Some(r);
         }
+        self
+    }
+
+    /// Set the transport deadline / heartbeat tuning (`None` fields keep
+    /// the built-in defaults).
+    pub fn tuning(mut self, t: TransportTuning) -> Self {
+        self.tuning = t;
+        self
+    }
+
+    /// Enable deterministic chaos fault injection (PMM backend).
+    pub fn chaos(mut self, c: ChaosSpec) -> Self {
+        self.chaos = Some(c);
         self
     }
 
@@ -840,22 +879,47 @@ impl RunSpec {
                     "faults require a 'checkpoint' section (recovery replays from snapshots)",
                 ));
             }
-            if let FaultSpec::KillRank { rank, step } = fault {
-                if self.backend != BackendKind::Pmm {
-                    errs.push(SpecError::BadFault(
-                        "kill_rank faults only run on the pmm backend",
-                    ));
+            match fault {
+                FaultSpec::KillRank { rank, step } => {
+                    if self.backend != BackendKind::Pmm {
+                        errs.push(SpecError::BadFault(
+                            "kill_rank faults only run on the pmm backend",
+                        ));
+                    }
+                    if rank >= g.world_size() {
+                        errs.push(SpecError::BadFault(
+                            "fault.rank must be below the grid's world size",
+                        ));
+                    }
+                    if step >= self.steps {
+                        errs.push(SpecError::BadFault(
+                            "fault.step must be below 'steps' (the kill must fire mid-run)",
+                        ));
+                    }
                 }
-                if rank >= g.world_size() {
-                    errs.push(SpecError::BadFault(
-                        "fault.rank must be below the grid's world size",
-                    ));
+                FaultSpec::StallRank { rank, step, ms } => {
+                    if self.backend != BackendKind::Pmm {
+                        errs.push(SpecError::BadFault(
+                            "stall_rank faults only run on the pmm backend",
+                        ));
+                    }
+                    if rank >= g.world_size() {
+                        errs.push(SpecError::BadFault(
+                            "fault.rank must be below the grid's world size",
+                        ));
+                    }
+                    if step >= self.steps {
+                        errs.push(SpecError::BadFault(
+                            "fault.step must be below 'steps' (the stall must fire mid-run)",
+                        ));
+                    }
+                    if ms == 0 {
+                        errs.push(SpecError::BadFault(
+                            "fault.ms must be > 0 (the stall duration)",
+                        ));
+                    }
                 }
-                if step >= self.steps {
-                    errs.push(SpecError::BadFault(
-                        "fault.step must be below 'steps' (the kill must fire mid-run)",
-                    ));
-                }
+                FaultSpec::CorruptNewest | FaultSpec::TruncateNewest => {}
             }
         }
         if let TransportSpec::Socket { rank, .. } = &self.transport {
@@ -877,6 +941,38 @@ impl RunSpec {
                 errs.push(SpecError::BadTransport(
                     "corrupt/truncate faults run in-process only (each rank process would mutate the shared snapshot dir)",
                 ));
+            }
+        }
+        // tuning values are milliseconds; zero would silently disable the
+        // deadline (use `null`/omit for the default instead) and anything
+        // above a day is certainly a unit mistake
+        const MS_DAY: u32 = 86_400_000;
+        if matches!(self.tuning.connect_timeout_ms, Some(v) if v == 0 || v > MS_DAY) {
+            errs.push(SpecError::BadTransport(
+                "transport.connect_timeout_ms must be in [1, 86400000] (one day)",
+            ));
+        }
+        if matches!(self.tuning.heartbeat_ms, Some(v) if v == 0 || v > MS_DAY) {
+            errs.push(SpecError::BadTransport(
+                "transport.heartbeat_ms must be in [1, 86400000] (omit it to disable heartbeats)",
+            ));
+        }
+        if matches!(self.tuning.wait_timeout_ms, Some(v) if v == 0 || v > MS_DAY) {
+            errs.push(SpecError::BadTransport(
+                "transport.wait_timeout_ms must be in [1, 86400000] (one day)",
+            ));
+        }
+        if matches!(self.tuning.rejoin_grace_ms, Some(v) if v == 0 || v > MS_DAY) {
+            errs.push(SpecError::BadTransport(
+                "transport.rejoin_grace_ms must be in [1, 86400000] (omit it to disable rejoin)",
+            ));
+        }
+        if let Some(chaos) = &self.chaos {
+            if self.backend != BackendKind::Pmm {
+                errs.push(SpecError::BadChaos("chaos injection only runs on the pmm backend"));
+            }
+            if let Err(why) = chaos.check() {
+                errs.push(SpecError::BadChaos(why));
             }
         }
         match (&self.sim, self.backend) {
@@ -993,6 +1089,12 @@ impl RunSpec {
                         ("rank", Json::from(rank)),
                         ("step", Json::from(step as usize)),
                     ]),
+                    Some(FaultSpec::StallRank { rank, step, ms }) => obj(vec![
+                        ("kind", Json::from("stall_rank")),
+                        ("rank", Json::from(rank)),
+                        ("step", Json::from(step as usize)),
+                        ("ms", Json::from(ms as usize)),
+                    ]),
                     Some(FaultSpec::CorruptNewest) => {
                         obj(vec![("kind", Json::from("corrupt_newest"))])
                     }
@@ -1001,13 +1103,41 @@ impl RunSpec {
                     }
                 },
             ),
-            (
-                "transport",
+            ("transport", {
+                // plain InProc with default tuning stays `null`; any tuned
+                // field forces the object form so the values round-trip
+                let tuned = self.tuning != TransportTuning::default();
+                let ms = |v: Option<u32>| {
+                    v.map(|x| Json::from(x as usize)).unwrap_or(Json::Null)
+                };
                 match &self.transport {
-                    TransportSpec::InProc => Json::Null,
-                    TransportSpec::Socket { endpoint, rank } => obj(vec![
-                        ("endpoint", Json::from(endpoint.to_string().as_str())),
-                        ("rank", rank.map(Json::from).unwrap_or(Json::Null)),
+                    TransportSpec::InProc if !tuned => Json::Null,
+                    tr => {
+                        let ep = tr.endpoint_tag();
+                        let mut kv = vec![("endpoint", Json::from(ep.as_str()))];
+                        if let TransportSpec::Socket { rank, .. } = tr {
+                            kv.push(("rank", rank.map(Json::from).unwrap_or(Json::Null)));
+                        }
+                        kv.push(("connect_timeout_ms", ms(self.tuning.connect_timeout_ms)));
+                        kv.push(("heartbeat_ms", ms(self.tuning.heartbeat_ms)));
+                        kv.push(("wait_timeout_ms", ms(self.tuning.wait_timeout_ms)));
+                        kv.push(("rejoin_grace_ms", ms(self.tuning.rejoin_grace_ms)));
+                        obj(kv)
+                    }
+                }
+            }),
+            (
+                "chaos",
+                match &self.chaos {
+                    None => Json::Null,
+                    Some(c) => obj(vec![
+                        // a decimal string, like the top-level seed
+                        ("seed", Json::from(c.seed.to_string().as_str())),
+                        ("rate", Json::from(c.rate)),
+                        (
+                            "modes",
+                            Json::Arr(c.modes.iter().map(|m| Json::from(m.tag())).collect()),
+                        ),
                     ]),
                 },
             ),
@@ -1024,11 +1154,11 @@ impl RunSpec {
     /// messages that name the field.
     pub fn from_json(j: &Json) -> Result<RunSpec, String> {
         let o = j.as_obj().ok_or("spec must be a JSON object")?;
-        const KNOWN: [&str; 24] = [
+        const KNOWN: [&str; 25] = [
             "backend", "dataset", "source", "sampler", "model", "grid", "precision", "overlap",
             "prefetch", "steps", "epochs", "batch", "lr", "seed", "target_acc",
             "eval_every_epochs", "cache_mb", "artifacts", "final_eval", "checkpoint", "resume",
-            "fault", "transport", "sim",
+            "fault", "transport", "chaos", "sim",
         ];
         for k in o.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -1185,27 +1315,37 @@ impl RunSpec {
         match j.get("fault") {
             None | Some(Json::Null) => {}
             Some(v) => {
-                check_obj_keys(v, "fault", &["kind", "rank", "step"])?;
+                check_obj_keys(v, "fault", &["kind", "rank", "step", "ms"])?;
                 let kind = v.get("kind").and_then(Json::as_str).ok_or(
-                    "fault.kind must be \"kill_rank\", \"corrupt_newest\" or \"truncate_newest\"",
+                    "fault.kind must be \"kill_rank\", \"stall_rank\", \"corrupt_newest\" or \"truncate_newest\"",
                 )?;
+                let rank_step = |kind: &str| -> Result<(usize, u64), String> {
+                    let rank = v.get("rank").and_then(Json::as_f64).ok_or_else(|| {
+                        format!("fault.rank must be a number when fault.kind = \"{kind}\"")
+                    })?;
+                    let step = v.get("step").and_then(Json::as_f64).ok_or_else(|| {
+                        format!("fault.step must be a number when fault.kind = \"{kind}\"")
+                    })?;
+                    Ok((rank as usize, step as u64))
+                };
                 spec.fault = Some(match kind {
                     "kill_rank" => {
-                        let rank = v
-                            .get("rank")
+                        let (rank, step) = rank_step("kill_rank")?;
+                        FaultSpec::KillRank { rank, step }
+                    }
+                    "stall_rank" => {
+                        let (rank, step) = rank_step("stall_rank")?;
+                        let ms = v
+                            .get("ms")
                             .and_then(Json::as_f64)
-                            .ok_or("fault.rank must be a number when fault.kind = \"kill_rank\"")?;
-                        let step = v
-                            .get("step")
-                            .and_then(Json::as_f64)
-                            .ok_or("fault.step must be a number when fault.kind = \"kill_rank\"")?;
-                        FaultSpec::KillRank { rank: rank as usize, step: step as u64 }
+                            .ok_or("fault.ms must be a number when fault.kind = \"stall_rank\"")?;
+                        FaultSpec::StallRank { rank, step, ms: ms as u64 }
                     }
                     "corrupt_newest" => FaultSpec::CorruptNewest,
                     "truncate_newest" => FaultSpec::TruncateNewest,
                     other => {
                         return Err(format!(
-                            "fault.kind must be kill_rank, corrupt_newest or truncate_newest, got '{other}'"
+                            "fault.kind must be kill_rank, stall_rank, corrupt_newest or truncate_newest, got '{other}'"
                         ))
                     }
                 });
@@ -1216,7 +1356,18 @@ impl RunSpec {
             // string shorthand: "inproc", "tcp:HOST:PORT", "unix:PATH"
             Some(Json::Str(s)) => spec.transport = TransportSpec::parse(s)?,
             Some(t) => {
-                check_obj_keys(t, "transport", &["endpoint", "rank"])?;
+                check_obj_keys(
+                    t,
+                    "transport",
+                    &[
+                        "endpoint",
+                        "rank",
+                        "connect_timeout_ms",
+                        "heartbeat_ms",
+                        "wait_timeout_ms",
+                        "rejoin_grace_ms",
+                    ],
+                )?;
                 let ep = t
                     .get("endpoint")
                     .and_then(Json::as_str)
@@ -1234,7 +1385,77 @@ impl RunSpec {
                         tr = tr_with_rank(tr, r as usize);
                     }
                 }
+                // tuning values must fit a u32 here (a type-level bound);
+                // the [1, one-day] policy range is enforced by `validate`
+                // so a bad value is reported as a structured SpecError
+                let ms_field = |name: &str| -> Result<Option<u32>, String> {
+                    match t.get(name) {
+                        None | Some(Json::Null) => Ok(None),
+                        Some(v) => {
+                            let f = v.as_f64().ok_or_else(|| {
+                                format!("transport.{name} must be a number of ms or null")
+                            })?;
+                            if !(f.is_finite() && (0.0..=u32::MAX as f64).contains(&f)) {
+                                return Err(format!(
+                                    "transport.{name} must be a u32 number of ms, got {f}"
+                                ));
+                            }
+                            Ok(Some(f as u32))
+                        }
+                    }
+                };
+                spec.tuning = TransportTuning {
+                    connect_timeout_ms: ms_field("connect_timeout_ms")?,
+                    heartbeat_ms: ms_field("heartbeat_ms")?,
+                    wait_timeout_ms: ms_field("wait_timeout_ms")?,
+                    rejoin_grace_ms: ms_field("rejoin_grace_ms")?,
+                };
                 spec.transport = tr;
+            }
+        }
+        match j.get("chaos") {
+            None | Some(Json::Null) => {}
+            Some(c) => {
+                check_obj_keys(c, "chaos", &["seed", "rate", "modes"])?;
+                // seed: a decimal string (like the top-level seed) or a
+                // plain number for hand-written specs
+                let seed = match c.get("seed") {
+                    None | Some(Json::Null) => {
+                        return Err("chaos.seed is required".to_string())
+                    }
+                    Some(Json::Str(s)) => s
+                        .parse::<u64>()
+                        .map_err(|_| format!("chaos.seed must be a u64, got '{s}'"))?,
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or("chaos.seed must be a number or decimal string")?
+                        as u64,
+                };
+                let rate = c
+                    .get("rate")
+                    .and_then(Json::as_f64)
+                    .ok_or("chaos.rate must be a number in (0, 1]")?;
+                let chaos = match c.get("modes") {
+                    None | Some(Json::Null) => ChaosSpec::new(seed, rate),
+                    Some(v) => {
+                        let arr =
+                            v.as_arr().ok_or("chaos.modes must be an array of mode names")?;
+                        let mut modes = Vec::with_capacity(arr.len());
+                        for m in arr {
+                            let s = m
+                                .as_str()
+                                .ok_or("chaos.modes must be an array of mode names")?;
+                            modes.push(ChaosMode::parse(s).ok_or_else(|| {
+                                format!(
+                                    "unknown chaos mode '{s}' (accepted: delay, stall, drop, \
+                                     corrupt, duplicate, partial)"
+                                )
+                            })?);
+                        }
+                        ChaosSpec::with_modes(seed, rate, modes)
+                    }
+                };
+                spec.chaos = Some(chaos);
             }
         }
         match j.get("sim") {

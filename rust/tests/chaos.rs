@@ -1,0 +1,278 @@
+//! Chaos determinism: the fault-injection schedule is a pure function of
+//! `ChaosSpec`, so a faulting rank's failure origin is byte-identical
+//! across repeated runs — swept over ten seeds at the transport layer
+//! (single-threaded, where no poison race exists by construction) — and
+//! a PMM session under destructive chaos either recovers onto the clean
+//! loss curve bit for bit or fails with the schedule-stamped origin,
+//! identically on every run.  Every multi-threaded case sits under a
+//! hard watchdog: a chaos bug may fail a test, never hang it.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use scalegnn::comm::{
+    ChaosMode, ChaosSpec, ChaosTransport, CollKind, CommError, FailureKind, InProcTransport,
+    Precision, Transport, TransportTuning,
+};
+use scalegnn::grid::{Axis, Grid4D};
+use scalegnn::session::{self, BackendKind, RunReport, RunSpec};
+
+/// The ten sweep seeds: arbitrary but fixed, spread across the u64 range.
+fn sweep_seeds() -> [u64; 10] {
+    let mut s = [0u64; 10];
+    for (i, v) in s.iter_mut().enumerate() {
+        *v = 0xC4A0_5EED ^ ((i as u64) * 0x9E37_79B9_7F4A_7C15);
+    }
+    s
+}
+
+/// Run `f` on a helper thread under a hard deadline so an injected fault
+/// that slipped past the wait discipline fails the test instead of
+/// hanging the suite.
+fn with_no_hang_deadline<F: FnOnce() + Send + 'static>(name: &'static str, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(()) => h.join().expect("watchdogged test thread"),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{name}: exceeded the 120 s no-hang deadline")
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+            unreachable!("sender dropped without a panic");
+        }
+    }
+}
+
+/// Drive a fresh single-rank chaos transport until the schedule injects a
+/// fault; returns the event index and the error.  Single-threaded, so the
+/// outcome is exactly the schedule — nothing to race with.
+fn first_injected_fault(spec: &ChaosSpec) -> (u64, CommError) {
+    let grid = Grid4D::new(1, 1, 1, 1);
+    let t = ChaosTransport::new(Box::new(InProcTransport::new(grid, 64)), spec.clone());
+    let payload = [1.0f32, 2.0, 3.0];
+    let mut out = [0.0f32; 3];
+    for event in 0..10_000u64 {
+        match t.issue(0, Axis::X, CollKind::Reduce(Precision::Fp32), &payload) {
+            Ok(seq) => {
+                t.wait_reduce(0, Axis::X, seq, &mut out).expect("un-faulted op completes");
+            }
+            Err(e) => return (event, e),
+        }
+    }
+    panic!("no injected fault within 10k events at rate {}", spec.rate);
+}
+
+#[test]
+fn ten_seed_sweep_same_spec_gives_byte_identical_failure_origin() {
+    let mut first_events = Vec::new();
+    for seed in sweep_seeds() {
+        let spec = ChaosSpec::with_modes(seed, 0.35, vec![ChaosMode::Drop]);
+        let (n_a, err_a) = first_injected_fault(&spec);
+        let (n_b, err_b) = first_injected_fault(&spec);
+        assert_eq!(n_a, n_b, "seed {seed}: injection event index must be schedule-determined");
+        assert_eq!(err_a, err_b, "seed {seed}: failure origin must be byte-identical");
+        assert_eq!(err_a.rank, 0);
+        assert_eq!(err_a.seq, 0, "injected faults are not tied to an op slot");
+        assert_eq!(err_a.op, "injected-fault");
+        assert_eq!(err_a.axis, Axis::X);
+        assert_eq!(err_a.kind, FailureKind::Fault);
+        assert_eq!(
+            err_a.msg,
+            format!("chaos drop (seed {seed}, event {n_a})"),
+            "the origin message carries the schedule coordinates"
+        );
+        first_events.push(n_a);
+    }
+    // and the seed actually selects the schedule: ten seeds must not all
+    // agree on where the first fault lands
+    first_events.sort_unstable();
+    first_events.dedup();
+    assert!(first_events.len() >= 2, "every seed injected at the same event: {first_events:?}");
+}
+
+#[test]
+fn stall_injection_points_are_schedule_determined() {
+    // A `Stall` makes the rank go silent until poisoned or until the hard
+    // cap expires.  Single-threaded nobody ever poisons it, so the cap is
+    // the observable: events where `issue` blocked ~cap long are exactly
+    // the schedule's stall events, run after run.
+    let cap = Duration::from_millis(40);
+    let stalled_events = |spec: &ChaosSpec| -> Vec<u64> {
+        let grid = Grid4D::new(1, 1, 1, 1);
+        let t = ChaosTransport::new(Box::new(InProcTransport::new(grid, 64)), spec.clone())
+            .with_stall_cap(cap);
+        let payload = [4.0f32; 8];
+        let mut out = [0.0f32; 8];
+        let mut stalled = Vec::new();
+        for event in 0..48u64 {
+            let t0 = Instant::now();
+            let seq = t
+                .issue(0, Axis::Dp, CollKind::Reduce(Precision::Fp32), &payload)
+                .expect("stalls delay, they do not fail");
+            if t0.elapsed() >= cap {
+                stalled.push(event);
+            }
+            t.wait_reduce(0, Axis::Dp, seq, &mut out).expect("op completes after the stall");
+        }
+        stalled
+    };
+    let spec = ChaosSpec::with_modes(0xBAD_CAFE, 0.25, vec![ChaosMode::Stall]);
+    let a = stalled_events(&spec);
+    let b = stalled_events(&spec);
+    assert!(!a.is_empty(), "rate 0.25 over 48 events must stall at least once");
+    assert_eq!(a, b, "stall points must be schedule-determined, not timing-determined");
+}
+
+// ---------------------------------------------------------------------------
+// Session level: destructive chaos on a two-rank PMM world
+// ---------------------------------------------------------------------------
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scalegnn_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Two ranks, overlap off (issue/wait run in lockstep), snapshot every
+/// step, `Drop`-only chaos: the first injection — and therefore the whole
+/// run outcome — is a function of the seed alone.
+fn chaos_spec(seed: u64, dir: &std::path::Path) -> RunSpec {
+    RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .model(16, 2, 0.0)
+        .steps(8)
+        .lr(5e-3)
+        .overlap(false)
+        .checkpoint(dir.to_path_buf(), 1, 8)
+        .tuning(TransportTuning { wait_timeout_ms: Some(2_000), ..Default::default() })
+        .chaos(ChaosSpec::with_modes(seed, 0.05, vec![ChaosMode::Drop]))
+}
+
+fn assert_bitwise_eq(a: &[(u64, f32)], b: &[(u64, f32)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: curve lengths differ");
+    for (&(sa, la), &(sb, lb)) in a.iter().zip(b.iter()) {
+        assert_eq!(sa, sb, "{what}: step index diverged");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{what}: loss at step {sa}: {la} vs {lb}");
+    }
+}
+
+/// The schedule-stamped `chaos drop (seed S, event N)` span of an error
+/// string — the part that must agree across runs (paths around it, such
+/// as the per-run snapshot dir, legitimately differ).
+fn origin_span(text: &str) -> &str {
+    let start = text.find("chaos drop (").unwrap_or_else(|| {
+        panic!("a chaos-injected failure must carry its origin stamp, got: {text}")
+    });
+    let end = text[start..].find(')').expect("the stamp is parenthesized") + start + 1;
+    &text[start..end]
+}
+
+fn summarize(report: &RunReport) -> String {
+    let f: Vec<String> = report
+        .failures
+        .iter()
+        .map(|f| {
+            format!(
+                "rank {} seq {} op {} axis {} resumed {:?}: {}",
+                f.rank, f.seq, f.op, f.axis, f.resumed_from_step, f.message
+            )
+        })
+        .collect();
+    format!("restarts {} failures [{}]", report.restarts, f.join("; "))
+}
+
+/// The curve of the same world with chaos disarmed — what every
+/// recovered chaos run must land on bit for bit.
+fn clean_curve() -> Vec<(u64, f32)> {
+    session::run_silent(
+        &RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 1, 1)
+            .model(16, 2, 0.0)
+            .steps(8)
+            .lr(5e-3)
+            .overlap(false),
+    )
+    .unwrap()
+    .loss_curve
+}
+
+#[test]
+fn pmm_session_under_drop_chaos_is_run_to_run_deterministic() {
+    with_no_hang_deadline("pmm_session_under_drop_chaos_is_run_to_run_deterministic", || {
+        let clean = clean_curve();
+        for (i, seed) in sweep_seeds().iter().take(3).enumerate() {
+            let d1 = tmp_dir(&format!("s{i}_a"));
+            let d2 = tmp_dir(&format!("s{i}_b"));
+            let r1 = session::run_silent(&chaos_spec(*seed, &d1));
+            let r2 = session::run_silent(&chaos_spec(*seed, &d2));
+            match (r1, r2) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(summarize(&a), summarize(&b), "seed {seed}: reports diverged");
+                    assert_bitwise_eq(&a.loss_curve, &b.loss_curve, "chaos repeat");
+                    assert_bitwise_eq(&clean, &a.loss_curve, "chaos vs clean");
+                }
+                (Err(a), Err(b)) => {
+                    // died before the first snapshot: fatal, but with the
+                    // same schedule-stamped origin on both runs
+                    let (a, b) = (format!("{a:#}"), format!("{b:#}"));
+                    assert_eq!(origin_span(&a), origin_span(&b), "seed {seed}: origins diverged");
+                    assert!(a.contains("injected-fault"), "origin op must survive: {a}");
+                }
+                (a, b) => panic!(
+                    "seed {seed}: outcome must be seed-determined, got {:?} then {:?}",
+                    a.map(|r| summarize(&r)),
+                    b.map(|r| summarize(&r)),
+                ),
+            }
+            let _ = std::fs::remove_dir_all(&d1);
+            let _ = std::fs::remove_dir_all(&d2);
+        }
+    });
+}
+
+#[test]
+fn pmm_session_recovered_from_chaos_lands_on_the_clean_curve_bitwise() {
+    with_no_hang_deadline("pmm_session_recovered_from_chaos_lands_on_the_clean_curve_bitwise", || {
+        let clean = clean_curve();
+        // Which step the first injection hits is a fixed function of the
+        // seed, but not one this test can predict — so probe candidate
+        // seeds (deterministically, in order) until one survives past the
+        // first snapshot and recovers.  A fatal probe (injection before
+        // step 1) is a legitimate outcome covered above, not a recovery.
+        for probe in 0..16u64 {
+            let seed = 0x0DD5_EED5 + probe * 0x1_0001;
+            let dir = tmp_dir(&format!("probe_{probe}"));
+            let outcome = session::run_silent(&chaos_spec(seed, &dir));
+            let _ = std::fs::remove_dir_all(&dir);
+            let report = match outcome {
+                Ok(r) if !r.failures.is_empty() => r,
+                // fatal, or chaos never fired within 8 steps: next seed
+                _ => continue,
+            };
+            let f = &report.failures[0];
+            assert_eq!(f.op, "injected-fault", "origin op: {}", f.message);
+            assert!(
+                f.message.contains(&format!("chaos drop (seed {seed}, event ")),
+                "origin must be schedule-stamped: {}",
+                f.message
+            );
+            assert_eq!(report.restarts, 1, "chaos is disarmed on replay");
+            assert!(f.resumed_from_step.is_some(), "recovery names its snapshot step");
+            assert_bitwise_eq(&clean, &report.loss_curve, "recovered chaos vs clean");
+            // and the recovery itself is reproducible
+            let dir = tmp_dir("probe_again");
+            let again = session::run_silent(&chaos_spec(seed, &dir)).unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+            assert_eq!(summarize(&report), summarize(&again), "seed {seed}: reports diverged");
+            return;
+        }
+        panic!("no probe seed recovered: every injection landed before the first snapshot");
+    });
+}

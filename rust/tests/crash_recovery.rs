@@ -9,6 +9,7 @@
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 
+use scalegnn::comm::TransportTuning;
 use scalegnn::session::{self, BackendKind, FaultSpec, RunSpec};
 use scalegnn::util::json::Json;
 
@@ -179,6 +180,42 @@ fn pmm_kill_rank_recovers_and_matches_unfaulted_curve() {
     }
 }
 
+/// The silent-rank case: a rank that is alive but contributes nothing
+/// must be *diagnosed* by the wait deadline — every member's expired
+/// wait names the same straggler with a `Stalled` origin — and the
+/// recovered world must land on the unfaulted curve bit for bit.
+#[test]
+fn pmm_stall_rank_is_detected_as_stalled_and_recovery_matches_bitwise() {
+    let dir = tmp_dir("pmm_stall");
+    let tuning = TransportTuning { wait_timeout_ms: Some(500), ..Default::default() };
+    let unfaulted = session::run_silent(&pmm_spec(8, true).tuning(tuning)).unwrap();
+    assert!(unfaulted.failures.is_empty());
+
+    // rank 1 goes silent for 2 s at step 5 — well past the 500 ms wait
+    // deadline, so rank 0's expired wait must name it as the origin
+    let faulted = session::run_silent(
+        &pmm_spec(8, true)
+            .tuning(tuning)
+            .checkpoint(dir.clone(), 2, 4)
+            .fault(FaultSpec::StallRank { rank: 1, step: 5, ms: 2_000 }),
+    )
+    .unwrap();
+    assert_bitwise_eq(&unfaulted.loss_curve, &faulted.loss_curve, "stall-rank recovery");
+    assert_eq!(faulted.restarts, 1, "exactly one world re-formation");
+    assert_eq!(faulted.failures.len(), 1);
+    let f = &faulted.failures[0];
+    assert_eq!(f.rank, 1, "the silent rank is the diagnosed origin, not the waiter");
+    assert!(
+        f.message.contains("silent on") && f.message.contains("within 500 ms"),
+        "a stall must be diagnosed by the deadline, not reported as a death: {}",
+        f.message
+    );
+    // snapshots exist for steps 2 and 4; the stall at step 5 means the
+    // newest world-consistent state is step 4
+    assert_eq!(f.resumed_from_step, Some(4));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn pmm_kill_without_checkpoint_section_is_rejected_up_front() {
     // a fault with nothing to recover from must fail validation, not hang
@@ -228,11 +265,12 @@ fn torn_newest_snapshot_falls_back_to_previous_valid_one() {
 // from the shared checkpoint dir onto the unfaulted curve — bitwise.
 // ---------------------------------------------------------------------------
 
-fn spawn_coord(sock: &Path) -> Child {
+fn spawn_coord(sock: &Path, extra: &[&str]) -> Child {
     Command::new(env!("CARGO_BIN_EXE_scalegnn-coord"))
         .args(["--grid", "1x2x1x1", "--unix"])
         .arg(sock)
         .arg("--quiet")
+        .args(extra)
         .stdout(Stdio::piped())
         .stderr(Stdio::null())
         .spawn()
@@ -288,7 +326,7 @@ fn socket_kill_rank_reports_origin_and_resumed_relaunch_matches_bitwise() {
     // for steps 2 and 4; the step-5 fault fires before any step-5
     // collective, so step 4 is the newest world-consistent state.
     let sock1 = dir.join("gen1.sock");
-    let coord = spawn_coord(&sock1);
+    let coord = spawn_coord(&sock1, &[]);
     let kill = ["--kill-rank", "1", "--kill-step", "5"];
     let mut r0 = spawn_pmm_rank(0, &sock1, &ckpt, &kill);
     let mut r1 = spawn_pmm_rank(1, &sock1, &ckpt, &kill);
@@ -308,7 +346,7 @@ fn socket_kill_rank_reports_origin_and_resumed_relaunch_matches_bitwise() {
     // on the unfaulted curve bit for bit.
     let sock2 = dir.join("gen2.sock");
     let stats = dir.join("stats-r0.json");
-    let coord = spawn_coord(&sock2);
+    let coord = spawn_coord(&sock2, &[]);
     let resume0 = ["--resume", "--stats-json", stats.to_str().unwrap()];
     let mut r0 = spawn_pmm_rank(0, &sock2, &ckpt, &resume0);
     let mut r1 = spawn_pmm_rank(1, &sock2, &ckpt, &["--resume"]);
@@ -328,6 +366,51 @@ fn socket_kill_rank_reports_origin_and_resumed_relaunch_matches_bitwise() {
         "resume must replay from the newest world-consistent snapshot"
     );
     assert_bitwise_eq(&clean.loss_curve[4..], &resumed, "socket kill-rank recovery");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn socket_rejoin_reregisters_into_the_same_coordinator_and_matches_bitwise() {
+    let dir = tmp_dir("socket_rejoin");
+    let ckpt = dir.join("ckpts");
+    let clean = session::run_silent(&pmm_spec(10, true)).unwrap();
+
+    // ONE coordinator, ONE generation of processes: rank 1's worker dies
+    // at step 5, but with a rejoin grace window the coordinator
+    // broadcasts a rollback instead of tearing the world down and holds
+    // both slots open.  Each rank's supervisor re-registers into the
+    // next world generation and replays from the newest common snapshot
+    // (step 4).  Nothing is relaunched, nothing exits nonzero — this is
+    // the in-place rejoin path, in contrast to the relaunch flow above.
+    let sock = dir.join("world.sock");
+    let stats = dir.join("stats-r0.json");
+    let coord = spawn_coord(&sock, &["--rejoin-grace-ms", "30000"]);
+    let fault = ["--kill-rank", "1", "--kill-step", "5", "--rejoin-grace-ms", "30000"];
+    let mut r0_extra: Vec<&str> = vec!["--stats-json", stats.to_str().unwrap()];
+    r0_extra.extend_from_slice(&fault);
+    let mut r0 = spawn_pmm_rank(0, &sock, &ckpt, &r0_extra);
+    let mut r1 = spawn_pmm_rank(1, &sock, &ckpt, &fault);
+    assert!(r0.wait().expect("rank 0").success(), "rank 0 must rejoin, not die");
+    assert!(r1.wait().expect("rank 1").success(), "the faulted rank must rejoin, not die");
+    let out = coord.wait_with_output().expect("coordinator");
+    assert!(
+        out.status.success(),
+        "one rollback then a clean generation must exit 0, coordinator stdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    // rank 0 kept its pre-fault prefix and replayed the tail from the
+    // newest world-consistent snapshot: the full curve is the clean one
+    let resumed = stats_loss_curve(&stats);
+    assert_bitwise_eq(&clean.loss_curve, &resumed, "same-coordinator rejoin");
+    let doc = Json::parse(&std::fs::read_to_string(&stats).unwrap()).unwrap();
+    let rep = doc.get("report").expect("stats report");
+    assert_eq!(rep.get("restarts").and_then(Json::as_usize), Some(1), "exactly one rejoin");
+    let fails = rep.get("failures").and_then(Json::as_arr).expect("failures recorded");
+    assert_eq!(fails.len(), 1);
+    assert_eq!(fails[0].get("rank").and_then(Json::as_usize), Some(1));
+    assert_eq!(fails[0].get("op").and_then(Json::as_str), Some("injected-fault"));
+    assert_eq!(fails[0].get("resumed_from_step").and_then(Json::as_usize), Some(4));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -7,7 +7,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use scalegnn::comm::{CommWorld, Precision};
+use scalegnn::comm::{ChaosMode, ChaosSpec, CommWorld, Precision, TransportTuning};
 use scalegnn::graph::datasets;
 use scalegnn::grid::Grid4D;
 use scalegnn::model::GcnDims;
@@ -71,6 +71,25 @@ fn runspec_json_roundtrip_is_lossless() {
             .steps(10)
             .checkpoint(PathBuf::from("ckpts"), 5, 1)
             .fault(FaultSpec::TruncateNewest),
+        // the fault-tolerance surface: stall fault, every tuning knob,
+        // and a chaos schedule (seed above 2^53, like the run seed)
+        RunSpec::new(BackendKind::Pmm, "tiny")
+            .grid(1, 2, 1, 1)
+            .model(16, 2, 0.0)
+            .steps(8)
+            .checkpoint(PathBuf::from("/tmp/ckpts"), 2, 3)
+            .fault(FaultSpec::StallRank { rank: 1, step: 5, ms: 750 })
+            .tuning(TransportTuning {
+                connect_timeout_ms: Some(2_000),
+                heartbeat_ms: Some(250),
+                wait_timeout_ms: Some(500),
+                rejoin_grace_ms: Some(3_000),
+            })
+            .chaos(ChaosSpec::with_modes(
+                0xFEED_FACE_FEED_FACE,
+                0.25,
+                vec![ChaosMode::Delay, ChaosMode::Drop, ChaosMode::Corrupt],
+            )),
     ];
     for spec in specs {
         let text = spec.to_json_string();
@@ -124,6 +143,22 @@ fn from_json_rejects_unknown_fields_and_bad_values() {
     )
     .unwrap_err();
     assert!(err.contains("sim.hide_fraction"), "{err}");
+
+    // an unknown chaos mode is named, with the accepted set
+    let err = RunSpec::from_json_str(
+        r#"{"backend": "pmm", "dataset": "tiny", "steps": 2,
+            "chaos": {"seed": 7, "rate": 0.1, "modes": ["delay", "gremlin"]}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("gremlin") && err.contains("accepted"), "{err}");
+
+    // non-numeric deadline values name the offending transport field
+    let err = RunSpec::from_json_str(
+        r#"{"backend": "pmm", "dataset": "tiny", "steps": 2,
+            "transport": {"endpoint": "inproc", "wait_timeout_ms": "soon"}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("wait_timeout_ms"), "{err}");
 }
 
 // ---------------------------------------------------------------------------
@@ -288,6 +323,35 @@ fn every_spec_error_variant_triggers() {
     assert!(errs_of(&s)
         .iter()
         .any(|e| matches!(e, SpecError::FieldUnsupported { field: "checkpoint", .. })));
+
+    // BadFault: a stall of zero milliseconds injects nothing
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .grid(1, 2, 1, 1)
+        .steps(4)
+        .checkpoint(PathBuf::from("c"), 2, 2)
+        .fault(FaultSpec::StallRank { rank: 0, step: 1, ms: 0 });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadFault(_))));
+
+    // BadTransport: a zero deadline would silently disable the no-hang
+    // guarantee, and anything above a day is a unit mistake
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .steps(1)
+        .tuning(TransportTuning { wait_timeout_ms: Some(0), ..Default::default() });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadTransport(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny")
+        .steps(1)
+        .tuning(TransportTuning { rejoin_grace_ms: Some(86_400_001), ..Default::default() });
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadTransport(_))));
+
+    // BadChaos: wrong backend, and a rate outside (0, 1]
+    let s = RunSpec::new(BackendKind::Ooc, "tiny")
+        .store(PathBuf::from("g.pallas"))
+        .batch(128)
+        .steps(4)
+        .chaos(ChaosSpec::new(7, 0.1));
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadChaos(_))));
+    let s = RunSpec::new(BackendKind::Pmm, "tiny").steps(1).chaos(ChaosSpec::new(7, 1.5));
+    assert!(errs_of(&s).iter().any(|e| matches!(e, SpecError::BadChaos(_))));
 }
 
 #[test]

@@ -28,7 +28,10 @@ use std::time::Duration;
 
 use scalegnn::checkpoint::crc32;
 use scalegnn::comm::wire::{self, Msg, WireError, MAX_FRAME_PAYLOAD, WIRE_MAGIC};
-use scalegnn::comm::{CommError, CommWorld, CoordConfig, Coordinator, Endpoint, Precision};
+use scalegnn::comm::{
+    ChaosMode, ChaosSpec, CommError, CommWorld, CoordConfig, Coordinator, Endpoint, Precision,
+    TransportTuning, DEFAULT_CHUNK_ELEMS,
+};
 use scalegnn::grid::{Axis, Grid4D};
 use scalegnn::session::{run_silent, BackendKind, RunSpec};
 use scalegnn::util::json::Json;
@@ -102,12 +105,35 @@ fn run_world<F>(b: BackendSel, tag: &str, grid: Grid4D, chunk: Option<usize>, f:
 where
     F: Fn(usize, &CommWorld) + Send + Sync + 'static,
 {
+    run_world_chaos(b, tag, grid, chunk, None, f)
+}
+
+/// As [`run_world`], optionally injecting a deterministic chaos
+/// schedule into every rank's transport (the `chaos_*` battery
+/// modules run the whole suite under it).
+fn run_world_chaos<F>(
+    b: BackendSel,
+    tag: &str,
+    grid: Grid4D,
+    chunk: Option<usize>,
+    chaos: Option<&ChaosSpec>,
+    f: F,
+) -> WorldRun
+where
+    F: Fn(usize, &CommWorld) + Send + Sync + 'static,
+{
     let n = grid.world_size();
     let f = Arc::new(f);
     if b == BackendSel::InProc {
-        let world = Arc::new(match chunk {
-            Some(c) => CommWorld::with_chunk_elems(grid, c),
-            None => CommWorld::new(grid),
+        let world = Arc::new(match (chunk, chaos) {
+            (Some(c), None) => CommWorld::with_chunk_elems(grid, c),
+            (None, None) => CommWorld::new(grid),
+            (c, Some(spec)) => CommWorld::with_tuning(
+                grid,
+                c.unwrap_or(DEFAULT_CHUNK_ELEMS),
+                &TransportTuning::default(),
+                Some(spec),
+            ),
         });
         let hs: Vec<_> = (0..n)
             .map(|r| {
@@ -127,11 +153,22 @@ where
     let coord = coord.spawn();
     let slots: Arc<Mutex<Vec<Option<Arc<CommWorld>>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let chaos = chaos.cloned();
     let hs: Vec<_> = (0..n)
         .map(|r| {
             let (ep, f, slots) = (ep.clone(), f.clone(), slots.clone());
+            let chaos = chaos.clone();
             std::thread::spawn(move || {
-                let w = Arc::new(CommWorld::connect(grid, r, &ep).expect("rank connect"));
+                let w = Arc::new(
+                    CommWorld::connect_with(
+                        grid,
+                        r,
+                        &ep,
+                        &TransportTuning::default(),
+                        chaos.as_ref(),
+                    )
+                    .expect("rank connect"),
+                );
                 slots.lock().unwrap()[r] = Some(w.clone());
                 f(r, &w);
             })
@@ -143,21 +180,79 @@ where
     WorldRun { shared: false, worlds, results, coord: Some(coord) }
 }
 
-/// Instantiate the battery for all three backends; each case becomes
-/// `inproc::<name>`, `uds::<name>`, `tcp::<name>`.
+/// The schedule the chaos battery modules run under: low-rate,
+/// delay-only.  `Delay` perturbs timing adversarially but never payload
+/// bytes, so every battery assertion — including the bitwise ones —
+/// must still hold; the destructive modes get their own deterministic
+/// coverage in `tests/chaos.rs` and the CI soak job.
+fn battery_chaos() -> ChaosSpec {
+    ChaosSpec::with_modes(0x5EED_CAFE, 0.2, vec![ChaosMode::Delay])
+}
+
+/// Hard no-hang guard for the chaos battery: the run must finish inside
+/// the budget or the test fails with a named timeout (never a CI hang).
+fn with_no_hang_deadline<F: FnOnce() + Send + 'static>(name: &'static str, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(()) => h.join().expect("battery thread"),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{name}: chaos battery exceeded the 120 s no-hang deadline")
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+            unreachable!("sender dropped without a panic");
+        }
+    }
+}
+
+/// Instantiate the battery for all three backends plus low-rate chaos
+/// variants; each case becomes `inproc::<name>`, `uds::<name>`,
+/// `tcp::<name>`, `chaos_inproc::<name>`, `chaos_uds::<name>`.
 macro_rules! conformance {
     ($($name:ident),* $(,)?) => {
         mod inproc {
             $(#[test]
-            fn $name() { super::$name(super::BackendSel::InProc, concat!("ip-", stringify!($name))); })*
+            fn $name() { super::$name(super::BackendSel::InProc, concat!("ip-", stringify!($name)), None); })*
         }
         mod uds {
             $(#[test]
-            fn $name() { super::$name(super::BackendSel::Uds, concat!("u-", stringify!($name))); })*
+            fn $name() { super::$name(super::BackendSel::Uds, concat!("u-", stringify!($name)), None); })*
         }
         mod tcp {
             $(#[test]
-            fn $name() { super::$name(super::BackendSel::Tcp, concat!("t-", stringify!($name))); })*
+            fn $name() { super::$name(super::BackendSel::Tcp, concat!("t-", stringify!($name)), None); })*
+        }
+        mod chaos_inproc {
+            $(#[test]
+            fn $name() {
+                super::with_no_hang_deadline(stringify!($name), || {
+                    let chaos = super::battery_chaos();
+                    super::$name(
+                        super::BackendSel::InProc,
+                        concat!("xi-", stringify!($name)),
+                        Some(&chaos),
+                    )
+                });
+            })*
+        }
+        mod chaos_uds {
+            $(#[test]
+            fn $name() {
+                super::with_no_hang_deadline(stringify!($name), || {
+                    let chaos = super::battery_chaos();
+                    super::$name(
+                        super::BackendSel::Uds,
+                        concat!("xu-", stringify!($name)),
+                        Some(&chaos),
+                    )
+                });
+            })*
         }
     };
 }
@@ -183,9 +278,9 @@ conformance!(
 /// Many in-flight ops per rank across all axes, tiny chunks (so every
 /// in-process op is multi-chunk), waits out of issue order within an
 /// axis.
-fn reduces_across_axes_with_out_of_order_waits(b: BackendSel, tag: &str) {
+fn reduces_across_axes_with_out_of_order_waits(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(2, 2, 2, 1);
-    let run = run_world(b, tag, grid, Some(16), |rank, w| {
+    let run = run_world_chaos(b, tag, grid, Some(16), chaos, |rank, w| {
         let g = w.grid;
         let sum_of = |axis: Axis, f: &dyn Fn(usize) -> f32| -> f32 {
             g.group_ranks(rank, axis).into_iter().map(f).sum()
@@ -235,9 +330,9 @@ fn reduces_across_axes_with_out_of_order_waits(b: BackendSel, tag: &str) {
 
 /// Gathered payloads arrive ordered by group index, never arrival order,
 /// with per-member lengths allowed to differ.
-fn gather_orders_by_group_index(b: BackendSel, tag: &str) {
+fn gather_orders_by_group_index(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 2, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         let payload = vec![rank as f32 + 0.25; rank + 1]; // distinct lengths
         let parts = w.all_gather(rank, Axis::Y, &payload, Precision::Fp32);
         let members = w.grid.group_ranks(rank, Axis::Y);
@@ -255,9 +350,9 @@ fn gather_orders_by_group_index(b: BackendSel, tag: &str) {
 
 /// bf16 payloads are rounded identically on every backend, and the
 /// accounting charges 2 bytes/elem regardless of chunking.
-fn bf16_accounting_is_exact(b: BackendSel, tag: &str) {
+fn bf16_accounting_is_exact(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 1, 1);
-    let run = run_world(b, tag, grid, Some(3), |rank, w| {
+    let run = run_world_chaos(b, tag, grid, Some(3), chaos, |rank, w| {
         let mut v: Vec<f32> = (0..10).map(|i| (rank * 10 + i) as f32).collect();
         w.all_reduce(rank, Axis::X, &mut v, Precision::Bf16);
         // bf16 rounding is exact for these small integers
@@ -277,9 +372,9 @@ fn bf16_accounting_is_exact(b: BackendSel, tag: &str) {
 /// bf16 gathers round every payload once at the source, so all three
 /// transports return bit-identical parts (including quieted NaNs and
 /// denormals), and the accounting charges 2 bytes/elem.
-fn bf16_gather_rounds_identically(b: BackendSel, tag: &str) {
+fn bf16_gather_rounds_identically(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 1, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         // values that actually round, plus a NaN and an f32 denormal
         let payload = [
             1.0009765625f32 + rank as f32, // needs mantissa rounding
@@ -316,9 +411,9 @@ fn bf16_gather_rounds_identically(b: BackendSel, tag: &str) {
 
 /// Barriers release all members, carry their own sequence space, and
 /// interleave freely with reduces on the same and other axes.
-fn barriers_interleave_with_reduces(b: BackendSel, tag: &str) {
+fn barriers_interleave_with_reduces(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 2, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         for round in 0..5u32 {
             let mut v = vec![rank as f32 + round as f32; 8];
             w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
@@ -341,9 +436,9 @@ fn barriers_interleave_with_reduces(b: BackendSel, tag: &str) {
 
 /// A world of one rank short-circuits every collective (identity
 /// reduce, no-op barrier) without a single transport frame.
-fn size1_world_short_circuits(b: BackendSel, tag: &str) {
+fn size1_world_short_circuits(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 1, 1, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         let mut v = vec![3.5f32; 4];
         w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
         assert_eq!(v, vec![3.5; 4]);
@@ -359,9 +454,9 @@ fn size1_world_short_circuits(b: BackendSel, tag: &str) {
 /// Mismatched reduce lengths poison the group: every member gets an
 /// error (not a hang), and the origin is an `all_reduce` failure whose
 /// message names the mismatch.
-fn length_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
+fn length_mismatch_errors_all_ranks(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 1, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         let mut v = vec![1.0f32; if rank == 0 { 4 } else { 8 }];
         w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
     });
@@ -379,9 +474,9 @@ fn length_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
 
 /// A reduce and a gather meeting at the same sequence slot is a kind
 /// mismatch: clean structured error on every member.
-fn kind_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
+fn kind_mismatch_errors_all_ranks(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 1, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         if rank == 0 {
             let mut v = vec![1.0f32; 4];
             w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
@@ -401,9 +496,9 @@ fn kind_mismatch_errors_all_ranks(b: BackendSel, tag: &str) {
 
 /// Ranks 0/1 mismatch on X; ranks 2/3 wait on Y collectives whose peers
 /// die — the poison must cascade so the bystanders fail fast too.
-fn mismatch_poison_cascades_to_bystanders(b: BackendSel, tag: &str) {
+fn mismatch_poison_cascades_to_bystanders(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 2, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| match rank {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| match rank {
         0 => {
             let mut v = vec![1.0f32; 4];
             w.all_reduce(rank, Axis::X, &mut v, Precision::Fp32);
@@ -429,9 +524,9 @@ fn mismatch_poison_cascades_to_bystanders(b: BackendSel, tag: &str) {
 /// An injected fault (`CommWorld::fail`) surfaces the SAME origin —
 /// rank, `"injected-fault"`, message — on every member of the world,
 /// including ranks sharing no group with the victim.
-fn injected_fault_reports_origin_everywhere(b: BackendSel, tag: &str) {
+fn injected_fault_reports_origin_everywhere(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 2, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         if rank == 3 {
             w.fail(rank, "scripted fault: conformance battery");
         }
@@ -458,9 +553,9 @@ fn injected_fault_reports_origin_everywhere(b: BackendSel, tag: &str) {
 /// hidden-fraction queries on a poisoned world must return the failure
 /// origin as an error — promptly — instead of blocking or answering
 /// with misleading half-recorded numbers.
-fn poisoned_stats_error_instead_of_blocking(b: BackendSel, tag: &str) {
+fn poisoned_stats_error_instead_of_blocking(b: BackendSel, tag: &str, chaos: Option<&ChaosSpec>) {
     let grid = Grid4D::new(1, 2, 1, 1);
-    let run = run_world(b, tag, grid, None, |rank, w| {
+    let run = run_world_chaos(b, tag, grid, None, chaos, |rank, w| {
         if rank == 1 {
             w.fail(rank, "scripted fault: stats regression");
         }
@@ -636,7 +731,8 @@ fn wire_rejects_payload_with_trailing_garbage() {
 
 #[test]
 fn wire_round_trips_every_error_op_name() {
-    for op in ["all_reduce", "all_gather", "injected-fault", "rank-death", "coordinator-lost"] {
+    for op in ["all_reduce", "all_gather", "barrier", "injected-fault", "rank-death", "coordinator-lost"]
+    {
         let msg = Msg::Poison { err: CommError::new(2, 9, op, Axis::Dp, "x".to_string()) };
         let bytes = encode(&msg);
         let mut r = &bytes[..];

@@ -1,0 +1,54 @@
+// Fixture near-miss: deadline-bounded waits must NOT fire — wait_timeout
+// and wait_timeout_while against a configured budget, a finite read
+// deadline, and a justified allow on the one intentionally unbounded
+// reader read.
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct Inbox {
+    queue: Mutex<Vec<u8>>,
+    cv: Condvar,
+}
+
+pub fn recv_one(ib: &Inbox, budget: Duration) -> Option<u8> {
+    let mut q = match ib.queue.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    while q.is_empty() {
+        let (g, res) = match ib.cv.wait_timeout(q, budget) {
+            Ok(r) => r,
+            Err(p) => p.into_inner(),
+        };
+        q = g;
+        if res.timed_out() {
+            return None;
+        }
+    }
+    Some(q.remove(0))
+}
+
+pub fn recv_all(ib: &Inbox, budget: Duration) -> usize {
+    let (q, _res) = match ib.cv.wait_timeout_while(
+        match ib.queue.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        },
+        budget,
+        |q| q.is_empty(),
+    ) {
+        Ok(r) => r,
+        Err(p) => p.into_inner(),
+    };
+    q.len()
+}
+
+pub fn arm_deadline(sock: &TcpStream, budget: Duration) -> std::io::Result<()> {
+    sock.set_read_timeout(Some(budget))
+}
+
+pub fn reader_read(sock: &TcpStream) -> std::io::Result<()> {
+    // lint: allow(unbounded-wait) — reader thread; shutdown() on poison unblocks this read
+    sock.set_read_timeout(None)
+}

@@ -1,0 +1,39 @@
+// Fixture: deadline-free blocking waits must fire — the Condvar method
+// form, the wait_while form, and clearing a socket read deadline.
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+
+pub struct Inbox {
+    queue: Mutex<Vec<u8>>,
+    cv: Condvar,
+}
+
+pub fn recv_one(ib: &Inbox) -> u8 {
+    let mut q = match ib.queue.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    while q.is_empty() {
+        q = match ib.cv.wait(q) {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+    }
+    q.remove(0)
+}
+
+pub fn recv_all(ib: &Inbox) -> usize {
+    let q = match ib.queue.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    let q = match ib.cv.wait_while(q, |q| q.is_empty()) {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    q.len()
+}
+
+pub fn clear_deadline(sock: &TcpStream) -> std::io::Result<()> {
+    sock.set_read_timeout(None)
+}

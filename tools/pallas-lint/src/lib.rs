@@ -19,6 +19,7 @@
 //! | `determinism-fma` | no `mul_add` / FMA intrinsics in kernel modules (bitwise discipline wants separate mul + add) |
 //! | `hot-path-alloc` | no allocating calls inside the checked-in hot-path function manifest |
 //! | `lock-order` | the per-crate mutex acquisition graph of the lock-scope modules is acyclic |
+//! | `unbounded-wait` | no deadline-free blocking wait (`Condvar::wait`/`wait_while`, `set_read_timeout(None)`) in the distributed-runtime modules |
 //!
 //! ## Escapes
 //!
@@ -45,13 +46,14 @@ use std::path::Path;
 
 /// Rule identifiers, in reporting order.  `bad-allow` is the engine's own
 /// rule for malformed escape comments and cannot be disabled or allowed.
-pub const RULE_IDS: [&str; 7] = [
+pub const RULE_IDS: [&str; 8] = [
     "safety-comment",
     "panic-free-boundary",
     "determinism-ordering",
     "determinism-fma",
     "hot-path-alloc",
     "lock-order",
+    "unbounded-wait",
     "bad-allow",
 ];
 
@@ -181,6 +183,9 @@ pub struct Config {
     pub fma_modules: Vec<String>,
     /// Modules participating in the mutex acquisition graph.
     pub lock_modules: Vec<String>,
+    /// Distributed-runtime modules where every blocking wait must carry a
+    /// deadline (the chaos/no-hang discipline of the fault-tolerance PR).
+    pub wait_modules: Vec<String>,
     /// Hot-path manifest: `(path prefix, fn name)`; an empty prefix
     /// matches any file.
     pub hot_fns: Vec<(String, String)>,
@@ -203,6 +208,7 @@ impl Config {
             ordered_modules: s(&["comm/", "checkpoint/", "graph/store.rs"]),
             fma_modules: s(&["tensor/", "pmm/", "model/"]),
             lock_modules: s(&["comm/inproc.rs", "comm/coord.rs"]),
+            wait_modules: s(&["comm/socket.rs", "comm/coord.rs"]),
             hot_fns: vec![
                 (String::new(), "train_step_ws".into()),
                 (String::new(), "induce_rescaled_into".into()),
@@ -999,6 +1005,50 @@ fn check_hot_alloc(ctx: &FileCtx, cfg: &Config, diags: &mut Vec<Diagnostic>) {
     }
 }
 
+fn check_unbounded_wait(ctx: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    let toks = &ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i) else { continue };
+        // Condvar::wait / wait_while method calls; the deadline-carrying
+        // wait_timeout / wait_timeout_while idents are distinct, so they
+        // never match.
+        if (name == "wait" || name == "wait_while")
+            && i > 0
+            && punct_at(toks, i - 1, '.')
+            && punct_at(toks, i + 1, '(')
+        {
+            diags.push(Diagnostic {
+                file: ctx.path.clone(),
+                line: toks[i].line,
+                rule: "unbounded-wait",
+                message: format!(
+                    "`.{name}()` blocks with no deadline — distributed-runtime waits \
+                     must use `wait_timeout` against the configured `wait_timeout_ms` \
+                     so a stalled peer becomes a `Stalled` failure origin, not a hang"
+                ),
+            });
+        }
+        // clearing a socket read deadline re-opens the hang window
+        if name == "set_read_timeout"
+            && punct_at(toks, i + 1, '(')
+            && ident_at(toks, i + 2) == Some("None")
+        {
+            diags.push(Diagnostic {
+                file: ctx.path.clone(),
+                line: toks[i].line,
+                rule: "unbounded-wait",
+                message: "`set_read_timeout(None)` makes reads block forever — keep a \
+                          finite deadline so a dead peer surfaces as a structured \
+                          failure origin instead of a hang"
+                    .to_string(),
+            });
+        }
+    }
+}
+
 /// One mutex acquisition: receiver/guard name plus its witness location.
 struct LockAcq {
     name: String,
@@ -1191,6 +1241,9 @@ pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Report {
         }
         if cfg.on("lock-order") && in_scope(path, &cfg.lock_modules) {
             collect_locks(&ctx, &mut lock_seqs);
+        }
+        if cfg.on("unbounded-wait") && in_scope(path, &cfg.wait_modules) {
+            check_unbounded_wait(&ctx, &mut diags);
         }
         ctxs.push(ctx);
     }

@@ -48,6 +48,12 @@ fn cases() -> Vec<(&'static str, &'static str, &'static str, &'static str)> {
             include_str!("../fixtures/lock_order_fire.rs"),
             include_str!("../fixtures/lock_order_clean.rs"),
         ),
+        (
+            "unbounded-wait",
+            "comm/socket.rs",
+            include_str!("../fixtures/unbounded_wait_fire.rs"),
+            include_str!("../fixtures/unbounded_wait_clean.rs"),
+        ),
     ]
 }
 
